@@ -1,0 +1,8 @@
+"""Repo-root pytest config: make `compile.*` importable when pytest runs
+from the repository root (`pytest python/tests/`), matching the Makefile's
+`cd python && pytest tests/` invocation."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

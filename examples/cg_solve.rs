@@ -1,0 +1,86 @@
+//! Conjugate-gradient solve over the distributed SpMV engine — the sparse
+//! iterative-solver workload the paper's introduction motivates (and the
+//! setting of the companion enlarged-CG paper [16]).
+//!
+//! Each CG iteration performs exactly one distributed SpMV (`w = A·p`)
+//! through the persistent engine's strategy-shaped halo exchange; vector
+//! updates and dot products run on the leader. The example solves a 2D
+//! Poisson problem to 1e-6 relative residual per strategy and reports
+//! iteration counts (identical — the exchange is exact) plus wall and
+//! simulated communication time.
+//!
+//! ```bash
+//! cargo run --release --example cg_solve
+//! ```
+
+use hetcomm::bench::{fmt_secs, Table};
+use hetcomm::comm::{Strategy, StrategyKind, Transport};
+use hetcomm::coordinator::{DistSpmv, Engine, EngineConfig, SpmvConfig};
+use hetcomm::sparse::gen;
+use hetcomm::topology::machines;
+
+fn dot(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum()
+}
+
+/// CG on SPD `A` with the matvec routed through the engine. Returns
+/// (iterations, final relative residual).
+fn cg(engine: &mut Engine, b: &[f32], tol: f64, max_iters: usize) -> anyhow::Result<(usize, f64)> {
+    let n = b.len();
+    let mut x = vec![0f32; n];
+    let mut r = b.to_vec(); // r = b - A*0
+    let mut p = r.clone();
+    let mut rr = dot(&r, &r);
+    let b_norm = dot(b, b).sqrt().max(1e-30);
+    for k in 0..max_iters {
+        if rr.sqrt() / b_norm < tol {
+            return Ok((k, rr.sqrt() / b_norm));
+        }
+        let ap = engine.iterate(Some(&p))?;
+        let alpha = rr / dot(&p, &ap).max(1e-300);
+        for i in 0..n {
+            x[i] += (alpha * p[i] as f64) as f32;
+            r[i] -= (alpha * ap[i] as f64) as f32;
+        }
+        let rr_new = dot(&r, &r);
+        let beta = rr_new / rr;
+        for i in 0..n {
+            p[i] = r[i] + (beta * p[i] as f64) as f32;
+        }
+        rr = rr_new;
+    }
+    Ok((max_iters, rr.sqrt() / b_norm))
+}
+
+fn main() -> anyhow::Result<()> {
+    // 2D Poisson (5-pt Laplacian) — SPD, the canonical CG target.
+    let a = gen::stencil_5pt(48, 48);
+    let machine = machines::lassen(2);
+    let gpus = 8;
+    let mut b = vec![0f32; a.nrows];
+    for (i, x) in b.iter_mut().enumerate() {
+        *x = ((i % 23) as f32 - 11.0) / 11.0;
+    }
+    println!("CG solve: 5-pt Poisson, {} unknowns, {gpus} GPUs / 2 nodes, tol 1e-6", a.nrows);
+
+    let mut t = Table::new(
+        "Distributed CG per communication strategy",
+        &["strategy", "iters", "rel resid", "wall [s]", "sim comm/iter [s]"],
+    );
+    for kind in StrategyKind::ALL {
+        let strategy = Strategy::new(kind, Transport::Staged)?;
+        // Simulated per-iteration comm time for the same pattern.
+        let sim = DistSpmv::new(&a, gpus, &machine, strategy, SpmvConfig { verify: false, ..Default::default() })?
+            .sim_report
+            .total;
+        let t0 = std::time::Instant::now();
+        let mut engine = Engine::new(&a, gpus, &machine, strategy, &b, EngineConfig::default())?;
+        let (iters, resid) = cg(&mut engine, &b, 1e-6, 500)?;
+        let wall = t0.elapsed().as_secs_f64();
+        anyhow::ensure!(resid < 1e-6, "{}: CG did not converge (resid {resid})", strategy.label());
+        t.row(vec![strategy.label(), iters.to_string(), format!("{resid:.2e}"), format!("{wall:.3}"), fmt_secs(sim)]);
+    }
+    t.print();
+    println!("\nAll strategies take the same iteration count: the halo exchange is exact,\nonly the (simulated) communication cost differs.");
+    Ok(())
+}

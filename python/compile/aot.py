@@ -1,0 +1,109 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts for the Rust runtime.
+
+Run once at build time (`make artifacts`); Python never runs on the request
+path. Interchange format is HLO *text*, not serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the `xla` crate) rejects; the text parser
+reassigns ids and round-trips cleanly.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Canonical artifact shapes: (rows, diag_width, offd_width, ghost).
+# Keep in sync with rust/src/runtime/artifact.rs::SPMV_SHAPES.
+SHAPES = [
+    (256, 32, 16, 256),
+    (512, 32, 16, 512),
+    (1024, 32, 16, 1024),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spmv_artifact_name(rows: int, dw: int, ow: int, ghost: int) -> str:
+    # Must match rust/src/runtime/artifact.rs::ArtifactSpec::new.
+    return f"spmv_local_r{rows}_d{dw}_o{ow}_g{ghost}"
+
+
+def lower_spmv(rows: int, dw: int, ow: int, ghost: int) -> str:
+    f32 = jnp.float32
+    i32 = jnp.int32
+    args = (
+        jax.ShapeDtypeStruct((rows, dw), f32),  # diag_vals
+        jax.ShapeDtypeStruct((rows, dw), i32),  # diag_cols
+        jax.ShapeDtypeStruct((rows, ow), f32),  # offd_vals
+        jax.ShapeDtypeStruct((rows, ow), i32),  # offd_cols
+        jax.ShapeDtypeStruct((rows,), f32),  # v_local
+        jax.ShapeDtypeStruct((ghost,), f32),  # v_ghost
+    )
+    lowered = jax.jit(model.local_spmv).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def lower_gather(n: int, m: int) -> str:
+    args = (
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((m,), jnp.int32),
+    )
+    lowered = jax.jit(model.halo_pack).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file marker path")
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    written = []
+    for rows, dw, ow, ghost in SHAPES:
+        name = spmv_artifact_name(rows, dw, ow, ghost)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        text = lower_spmv(rows, dw, ow, ghost)
+        with open(path, "w") as f:
+            f.write(text)
+        written.append((path, len(text)))
+
+    # Halo-pack artifacts matching the SpMV shapes.
+    for rows, _, _, ghost in SHAPES:
+        name = f"halo_pack_n{rows}_m{ghost}"
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        text = lower_gather(rows, ghost)
+        with open(path, "w") as f:
+            f.write(text)
+        written.append((path, len(text)))
+
+    # Marker file so `make artifacts` has a single dependency target.
+    marker = args.out or os.path.join(out_dir, "model.hlo.txt")
+    with open(marker, "w") as f:
+        f.write("\n".join(p for p, _ in written) + "\n")
+
+    for path, size in written:
+        print(f"wrote {size:>9} chars  {path}")
+    print(f"marker: {marker}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (interpret mode) + the pure-jnp oracle in ref.py."""
+
+from . import gather, ref, spmv_ell, spmv_ell_colsplit  # noqa: F401

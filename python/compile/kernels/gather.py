@@ -1,0 +1,45 @@
+"""L1 Pallas kernel: halo-pack gather.
+
+Packing the communication buffer (out[i] = v[idx[i]]) is the second
+per-iteration hot-spot of the distributed SpMV (Section 2.4: "packing and
+unpacking communication buffers"). On GPU this is a strided-gather CUDA
+kernel; on TPU it is a statically shaped vectorized gather in VMEM.
+
+interpret=True for CPU-PJRT executability (see spmv_ell.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gather_kernel(v_ref, idx_ref, o_ref):
+    v = v_ref[...]
+    idx = idx_ref[...]
+    o_ref[...] = v[idx]
+
+
+@jax.jit
+def gather(v, idx):
+    """Pallas halo pack; mirrors kernels.ref.gather.
+
+    Args:
+      v: (n,) f32 source vector (the owned partition slice).
+      idx: (m,) i32 indices to pack.
+
+    Returns:
+      (m,) f32 packed buffer.
+    """
+    (n,) = v.shape
+    (m,) = idx.shape
+    return pl.pallas_call(
+        _gather_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((m,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((m,), v.dtype),
+        interpret=True,
+    )(v, idx)

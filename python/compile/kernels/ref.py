@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the L1 kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jax.numpy ops only. pytest asserts allclose between the
+kernel (interpret mode) and these functions across shapes and dtypes.
+"""
+
+import jax.numpy as jnp
+
+
+def ell_spmv(vals, cols, v):
+    """ELL SpMV: w[r] = sum_k vals[r, k] * v[cols[r, k]].
+
+    Padding slots carry vals == 0 (their cols point at 0), so they
+    contribute nothing.
+
+    Args:
+      vals: (rows, width) float values.
+      cols: (rows, width) int32 column indices into v.
+      v: (n,) float vector.
+
+    Returns:
+      (rows,) float result.
+    """
+    gathered = v[cols]  # (rows, width)
+    return jnp.sum(vals * gathered, axis=1)
+
+
+def local_spmv(diag_vals, diag_cols, offd_vals, offd_cols, v_local, v_ghost):
+    """The distributed-SpMV local compute (Section 2.4.1):
+
+    w = A_diag . v_local + A_offd . v_ghost
+    """
+    return ell_spmv(diag_vals, diag_cols, v_local) + ell_spmv(
+        offd_vals, offd_cols, v_ghost
+    )
+
+
+def gather(v, idx):
+    """Halo pack: out[i] = v[idx[i]] — the communication-buffer gather."""
+    return v[idx]

@@ -1,0 +1,78 @@
+"""L1 Pallas kernel: row-tiled ELL SpMV.
+
+TPU adaptation of the paper's GPU SpMV (DESIGN.md §Hardware-Adaptation):
+the CUDA warp-per-row CSR loop becomes a dense (TILE_M, W) block over the
+padded ELL layout — fixed row width removes divergence and gives the VPU
+contiguous vector work. BlockSpec tiles rows for the HBM→VMEM schedule the
+CUDA code expressed with threadblocks; the source vector is broadcast into
+VMEM per tile (SpMV is bandwidth-bound — the MXU is not the target, the
+VPU is).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is exactly what the
+Rust runtime loads.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step. 8 sublanes x f32 is the natural VPU tile height; 128
+# rows amortizes grid overhead while keeping VMEM well under budget (see
+# vmem_bytes()).
+TILE_M = 128
+
+
+def _ell_kernel(vals_ref, cols_ref, v_ref, o_ref):
+    """One row tile: o[r] = sum_k vals[r, k] * v[cols[r, k]]."""
+    vals = vals_ref[...]  # (TILE_M, W)
+    cols = cols_ref[...]  # (TILE_M, W) int32
+    v = v_ref[...]  # (n,) broadcast into VMEM for the tile
+    gathered = v[cols]  # vectorized gather, (TILE_M, W)
+    o_ref[...] = jnp.sum(vals * gathered, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def ell_spmv(vals, cols, v):
+    """Pallas ELL SpMV; mirrors kernels.ref.ell_spmv.
+
+    Args:
+      vals: (rows, width) f32, zero-padded.
+      cols: (rows, width) i32 indices into v (padding points at 0).
+      v: (n,) f32.
+
+    Returns:
+      (rows,) f32.
+    """
+    rows, width = vals.shape
+    n = v.shape[0]
+    tile = min(TILE_M, rows)
+    if rows % tile != 0:
+        # Static shapes only — callers pad rows to a multiple of TILE_M (the
+        # AOT shapes do); fall back to one big tile otherwise.
+        tile = rows
+    grid = (rows // tile,)
+    return pl.pallas_call(
+        _ell_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, width), lambda i: (i, 0)),
+            pl.BlockSpec((tile, width), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),  # whole vector per tile
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), vals.dtype),
+        interpret=True,
+    )(vals, cols, v)
+
+
+def vmem_bytes(rows, width, n, tile=TILE_M):
+    """Estimated VMEM footprint of one grid step in bytes.
+
+    vals + cols tiles, the broadcast vector, and the output tile. Used by
+    DESIGN.md §Perf to check the schedule against the ~16 MiB VMEM budget.
+    """
+    t = min(tile, rows)
+    return t * width * 4 + t * width * 4 + n * 4 + t * 4

@@ -1,0 +1,126 @@
+"""L1 Pallas kernel: column-split ELL SpMV for vectors that exceed VMEM.
+
+The row-tiled kernel (spmv_ell.py) broadcasts the whole source vector into
+VMEM per tile — fine for the canonical artifact shapes (<= 4 KiB vectors)
+but not for large partitions. This variant additionally tiles the *columns*:
+the ELL width dimension is cut into column-chunks whose indices are
+guaranteed (by the packing convention below) to fall in a bounded vector
+window, so each grid step loads only a vector slice.
+
+Packing convention: callers sort each row's entries by column and split the
+vector into `n_chunks` equal windows; `chunk_width` slots per row are
+reserved per window (padded with (0, win_start) pointing at the window's
+first element with value 0). This is the TPU analog of the CUDA
+"sliced ELLPACK" format — the HBM->VMEM schedule is expressed with a 2D
+grid in BlockSpec instead of threadblock tiling.
+
+interpret=True as everywhere (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_M = 128
+
+
+def _colsplit_kernel(vals_ref, cols_ref, v_ref, o_ref):
+    """One (row-tile, column-window) step: accumulate the window's partial
+    products. `cols_ref` holds indices *relative to the window start*."""
+    j = pl.program_id(1)
+    vals = vals_ref[...]  # (tile, chunk_width)
+    cols = cols_ref[...]  # (tile, chunk_width), window-relative
+    v = v_ref[...]  # (win,) — only this window's slice of the vector
+    partial = jnp.sum(vals * v[cols], axis=1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(j > 0)
+    def _acc():
+        o_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("n_chunks",))
+def ell_spmv_colsplit(vals, cols, v, n_chunks: int):
+    """Column-split ELL SpMV.
+
+    Args:
+      vals: (rows, n_chunks * chunk_width) f32, zero-padded, entries for
+        window j in slots [j*chunk_width, (j+1)*chunk_width).
+      cols: same shape i32; entries are *window-relative* indices.
+      v: (n,) f32 with n divisible by n_chunks.
+      n_chunks: number of column windows.
+
+    Returns:
+      (rows,) f32.
+    """
+    rows, total_w = vals.shape
+    (n,) = v.shape
+    assert total_w % n_chunks == 0, "width must divide into chunks"
+    assert n % n_chunks == 0, "vector must divide into windows"
+    chunk_width = total_w // n_chunks
+    win = n // n_chunks
+    tile = min(TILE_M, rows)
+    if rows % tile != 0:
+        tile = rows
+    grid = (rows // tile, n_chunks)
+    return pl.pallas_call(
+        _colsplit_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, chunk_width), lambda i, j: (i, j)),
+            pl.BlockSpec((tile, chunk_width), lambda i, j: (i, j)),
+            pl.BlockSpec((win,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), vals.dtype),
+        interpret=True,
+    )(vals, cols, v)
+
+
+def pack_colsplit(vals_full, cols_full, n, n_chunks):
+    """Re-pack a plain ELL block (global column indices) into the
+    column-split layout. Pure numpy-style; build-time only.
+
+    Returns (vals, cols, chunk_width) in the kernel's convention.
+    """
+    import numpy as np
+
+    vals_full = np.asarray(vals_full)
+    cols_full = np.asarray(cols_full)
+    rows, width = vals_full.shape
+    assert n % n_chunks == 0
+    win = n // n_chunks
+    # count entries per (row, window) to size chunk_width
+    per = np.zeros((rows, n_chunks), dtype=np.int64)
+    for r in range(rows):
+        for k in range(width):
+            if vals_full[r, k] != 0.0:
+                per[r, cols_full[r, k] // win] += 1
+    chunk_width = max(1, int(per.max()))
+    vals = np.zeros((rows, n_chunks * chunk_width), dtype=np.float32)
+    cols = np.zeros((rows, n_chunks * chunk_width), dtype=np.int32)
+    fill = np.zeros((rows, n_chunks), dtype=np.int64)
+    for r in range(rows):
+        for k in range(width):
+            if vals_full[r, k] == 0.0:
+                continue
+            c = int(cols_full[r, k])
+            j = c // win
+            slot = j * chunk_width + int(fill[r, j])
+            vals[r, slot] = vals_full[r, k]
+            cols[r, slot] = c - j * win  # window-relative
+            fill[r, j] += 1
+    return vals, cols, chunk_width
+
+
+def vmem_bytes(rows, chunk_width, win, tile=TILE_M):
+    """VMEM per grid step: two (tile, chunk_width) blocks + one window +
+    the output tile. Compare with spmv_ell.vmem_bytes: the n-dependent term
+    shrinks by n_chunks."""
+    t = min(tile, rows)
+    return 2 * t * chunk_width * 4 + win * 4 + t * 4

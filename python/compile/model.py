@@ -1,0 +1,45 @@
+"""L2: the distributed-SpMV local compute graph, calling the L1 kernels.
+
+The local step of the distributed SpMV (Section 2.4.1) on each GPU is
+
+    w = A_diag . v_local + A_offd . v_ghost
+
+with both blocks in padded ELL layout. This module is the single source of
+truth for the artifact calling convention:
+
+    local_spmv(diag_vals f32[r,dw], diag_cols i32[r,dw],
+               offd_vals f32[r,ow], offd_cols i32[r,ow],
+               v_local f32[r], v_ghost f32[g]) -> (w f32[r],)
+
+which `rust/src/runtime/mod.rs::Executable::run_spmv` mirrors exactly.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import gather as gather_kernel
+from .kernels import spmv_ell
+
+
+def local_spmv(diag_vals, diag_cols, offd_vals, offd_cols, v_local, v_ghost):
+    """One GPU's local SpMV: diag and offd ELL products fused in one
+    lowered module. Returns a 1-tuple so the AOT path always emits a tuple
+    root (matching `to_tuple1` on the Rust side)."""
+    w = spmv_ell.ell_spmv(diag_vals, diag_cols, v_local) + spmv_ell.ell_spmv(
+        offd_vals, offd_cols, v_ghost
+    )
+    return (w,)
+
+
+def halo_pack(v_local, send_idx):
+    """Pack the halo send buffer: the L1 gather kernel."""
+    return (gather_kernel.gather(v_local, send_idx),)
+
+
+def spmv_step(diag_vals, diag_cols, offd_vals, offd_cols, v_local, v_ghost):
+    """Power-iteration step: local SpMV followed by infinity normalization
+    of the *local* block (the global normalization is the coordinator's
+    reduction; this fused variant is used when a single GPU owns the whole
+    problem)."""
+    (w,) = local_spmv(diag_vals, diag_cols, offd_vals, offd_cols, v_local, v_ghost)
+    scale = jnp.maximum(jnp.max(jnp.abs(w)), 1e-30)
+    return (w / scale, scale)

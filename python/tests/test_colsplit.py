@@ -1,0 +1,79 @@
+"""Column-split ELL kernel vs oracle: packing round trip + kernel numerics."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, spmv_ell_colsplit as cs
+
+
+def make_problem(rng, rows, width, n, pad_frac=0.3):
+    vals = rng.standard_normal((rows, width)).astype(np.float32)
+    cols = rng.integers(0, n, size=(rows, width)).astype(np.int32)
+    pad = rng.random((rows, width)) < pad_frac
+    vals[pad] = 0.0
+    cols[pad] = 0
+    v = rng.standard_normal(n).astype(np.float32)
+    return vals, cols, v
+
+
+class TestPacking:
+    def test_pack_preserves_product(self):
+        rng = np.random.default_rng(0)
+        vals, cols, v = make_problem(rng, 32, 8, 64)
+        want = np.asarray(ref.ell_spmv(vals, cols, v))
+        pv, pc, cw = cs.pack_colsplit(vals, cols, 64, 4)
+        assert pv.shape == (32, 4 * cw)
+        got = np.asarray(cs.ell_spmv_colsplit(pv, pc, v, 4))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_window_relative_indices_bounded(self):
+        rng = np.random.default_rng(1)
+        vals, cols, _ = make_problem(rng, 16, 4, 32)
+        _, pc, cw = cs.pack_colsplit(vals, cols, 32, 4)
+        win = 32 // 4
+        assert pc.max() < win
+        assert pc.min() >= 0
+
+    def test_single_chunk_equals_plain(self):
+        rng = np.random.default_rng(2)
+        vals, cols, v = make_problem(rng, 24, 6, 48)
+        pv, pc, _ = cs.pack_colsplit(vals, cols, 48, 1)
+        got = np.asarray(cs.ell_spmv_colsplit(pv, pc, v, 1))
+        want = np.asarray(ref.ell_spmv(vals, cols, v))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+class TestKernel:
+    @pytest.mark.parametrize("n_chunks", [1, 2, 4, 8])
+    def test_chunk_counts(self, n_chunks):
+        rng = np.random.default_rng(3)
+        n = 64
+        vals, cols, v = make_problem(rng, 32, 8, n)
+        pv, pc, _ = cs.pack_colsplit(vals, cols, n, n_chunks)
+        got = np.asarray(cs.ell_spmv_colsplit(pv, pc, v, n_chunks))
+        want = np.asarray(ref.ell_spmv(vals, cols, v))
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        rows=st.integers(1, 48),
+        width=st.integers(1, 8),
+        win=st.integers(1, 24),
+        n_chunks=st.sampled_from([1, 2, 4]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_hypothesis_sweep(self, rows, width, win, n_chunks, seed):
+        rng = np.random.default_rng(seed)
+        n = win * n_chunks
+        vals, cols, v = make_problem(rng, rows, width, n)
+        pv, pc, _ = cs.pack_colsplit(vals, cols, n, n_chunks)
+        got = np.asarray(cs.ell_spmv_colsplit(pv, pc, v, n_chunks))
+        want = np.asarray(ref.ell_spmv(vals, cols, v))
+        np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+    def test_vmem_shrinks_with_chunks(self):
+        # the point of the variant: the vector term scales down by n_chunks
+        full = cs.vmem_bytes(1024, 32, 65536)
+        split = cs.vmem_bytes(1024, 8, 65536 // 8)
+        assert split < full

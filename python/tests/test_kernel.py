@@ -1,0 +1,130 @@
+"""Pallas kernels vs the pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes and values; fixed cases pin the artifact shapes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import gather, ref, spmv_ell
+
+
+def make_ell(rng, rows, width, n, pad_frac=0.3):
+    """Random padded ELL block: (vals, cols) with ~pad_frac zero slots."""
+    vals = rng.standard_normal((rows, width)).astype(np.float32)
+    cols = rng.integers(0, n, size=(rows, width)).astype(np.int32)
+    pad = rng.random((rows, width)) < pad_frac
+    vals[pad] = 0.0
+    cols[pad] = 0
+    return vals, cols
+
+
+class TestEllSpmv:
+    @pytest.mark.parametrize("rows,width,n", [(8, 4, 8), (128, 32, 128), (256, 16, 512), (1, 1, 1)])
+    def test_matches_ref(self, rows, width, n):
+        rng = np.random.default_rng(42)
+        vals, cols = make_ell(rng, rows, width, n)
+        v = rng.standard_normal(n).astype(np.float32)
+        got = spmv_ell.ell_spmv(vals, cols, v)
+        want = ref.ell_spmv(vals, cols, v)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_zero_matrix_zero_result(self):
+        vals = np.zeros((16, 4), np.float32)
+        cols = np.zeros((16, 4), np.int32)
+        v = np.ones(16, np.float32)
+        np.testing.assert_array_equal(np.asarray(spmv_ell.ell_spmv(vals, cols, v)), 0.0)
+
+    def test_identity_matrix(self):
+        n = 64
+        vals = np.zeros((n, 4), np.float32)
+        cols = np.zeros((n, 4), np.int32)
+        vals[:, 0] = 1.0
+        cols[:, 0] = np.arange(n)
+        v = np.random.default_rng(0).standard_normal(n).astype(np.float32)
+        np.testing.assert_allclose(np.asarray(spmv_ell.ell_spmv(vals, cols, v)), v, rtol=1e-6)
+
+    def test_padding_does_not_contribute(self):
+        # Padding points at column 0 with value 0; poison v[0] and check
+        # the result is unchanged.
+        rng = np.random.default_rng(7)
+        vals, cols = make_ell(rng, 32, 8, 32, pad_frac=0.5)
+        v = rng.standard_normal(32).astype(np.float32)
+        base = np.asarray(spmv_ell.ell_spmv(vals, cols, v))
+        v2 = v.copy()
+        v2[0] = 1e6  # only padded slots and genuine col-0 entries see this
+        # recompute reference difference: the kernel and ref must still agree
+        got = np.asarray(spmv_ell.ell_spmv(vals, cols, v2))
+        want = np.asarray(ref.ell_spmv(vals, cols, v2))
+        np.testing.assert_allclose(got, want, rtol=1e-4)
+        del base
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        rows=st.integers(1, 96),
+        width=st.integers(1, 24),
+        n=st.integers(1, 200),
+        seed=st.integers(0, 2**32 - 1),
+    )
+    def test_hypothesis_sweep(self, rows, width, n, seed):
+        rng = np.random.default_rng(seed)
+        vals, cols = make_ell(rng, rows, width, n)
+        v = rng.standard_normal(n).astype(np.float32)
+        got = np.asarray(spmv_ell.ell_spmv(vals, cols, v))
+        want = np.asarray(ref.ell_spmv(vals, cols, v))
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_tile_boundary_rows(self):
+        # rows exactly at, below and above TILE_M exercise both grid paths.
+        rng = np.random.default_rng(3)
+        for rows in [spmv_ell.TILE_M - 1, spmv_ell.TILE_M, spmv_ell.TILE_M * 2, spmv_ell.TILE_M + 1]:
+            vals, cols = make_ell(rng, rows, 8, rows)
+            v = rng.standard_normal(rows).astype(np.float32)
+            got = np.asarray(spmv_ell.ell_spmv(vals, cols, v))
+            want = np.asarray(ref.ell_spmv(vals, cols, v))
+            np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+class TestGather:
+    @pytest.mark.parametrize("n,m", [(8, 4), (256, 256), (512, 100), (1, 1)])
+    def test_matches_ref(self, n, m):
+        rng = np.random.default_rng(1)
+        v = rng.standard_normal(n).astype(np.float32)
+        idx = rng.integers(0, n, size=m).astype(np.int32)
+        got = np.asarray(gather.gather(v, idx))
+        want = np.asarray(ref.gather(v, idx))
+        np.testing.assert_array_equal(got, want)
+
+    @settings(max_examples=30, deadline=None)
+    @given(n=st.integers(1, 300), m=st.integers(1, 300), seed=st.integers(0, 2**32 - 1))
+    def test_hypothesis_sweep(self, n, m, seed):
+        rng = np.random.default_rng(seed)
+        v = rng.standard_normal(n).astype(np.float32)
+        idx = rng.integers(0, n, size=m).astype(np.int32)
+        np.testing.assert_array_equal(
+            np.asarray(gather.gather(v, idx)), np.asarray(ref.gather(v, idx))
+        )
+
+    def test_duplicate_indices(self):
+        v = np.array([1.0, 2.0, 3.0], np.float32)
+        idx = np.array([2, 2, 0, 2], np.int32)
+        np.testing.assert_array_equal(np.asarray(gather.gather(v, idx)), [3.0, 3.0, 1.0, 3.0])
+
+
+class TestVmemEstimate:
+    def test_within_budget_for_artifact_shapes(self):
+        # All canonical shapes must fit the ~16 MiB VMEM budget.
+        from compile.aot import SHAPES
+
+        for rows, dw, ow, ghost in SHAPES:
+            diag = spmv_ell.vmem_bytes(rows, dw, rows)
+            offd = spmv_ell.vmem_bytes(rows, ow, ghost)
+            assert diag + offd < 16 * 2**20, f"shape {(rows, dw, ow, ghost)} exceeds VMEM"
+
+    def test_scales_with_tile(self):
+        assert spmv_ell.vmem_bytes(1024, 32, 1024, tile=64) < spmv_ell.vmem_bytes(
+            1024, 32, 1024, tile=128
+        )

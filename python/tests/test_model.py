@@ -1,0 +1,75 @@
+"""L2 model tests: local_spmv composition, shapes, and the halo-pack path."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def random_local_problem(rng, rows, dw, ow, ghost):
+    diag_vals = rng.standard_normal((rows, dw)).astype(np.float32)
+    diag_cols = rng.integers(0, rows, size=(rows, dw)).astype(np.int32)
+    offd_vals = rng.standard_normal((rows, ow)).astype(np.float32)
+    offd_cols = rng.integers(0, ghost, size=(rows, ow)).astype(np.int32)
+    v_local = rng.standard_normal(rows).astype(np.float32)
+    v_ghost = rng.standard_normal(ghost).astype(np.float32)
+    return diag_vals, diag_cols, offd_vals, offd_cols, v_local, v_ghost
+
+
+class TestLocalSpmv:
+    def test_matches_ref_composition(self):
+        rng = np.random.default_rng(5)
+        args = random_local_problem(rng, 64, 8, 4, 32)
+        (got,) = model.local_spmv(*args)
+        want = ref.local_spmv(*args)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+    def test_returns_tuple(self):
+        rng = np.random.default_rng(6)
+        out = model.local_spmv(*random_local_problem(rng, 16, 4, 2, 8))
+        assert isinstance(out, tuple) and len(out) == 1
+
+    def test_zero_ghost_contribution(self):
+        rng = np.random.default_rng(7)
+        diag_vals, diag_cols, offd_vals, offd_cols, v_local, v_ghost = random_local_problem(
+            rng, 32, 4, 4, 16
+        )
+        offd_vals[:] = 0.0
+        (w,) = model.local_spmv(diag_vals, diag_cols, offd_vals, offd_cols, v_local, v_ghost)
+        want = ref.ell_spmv(diag_vals, diag_cols, v_local)
+        np.testing.assert_allclose(np.asarray(w), np.asarray(want), rtol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        rows=st.integers(1, 64),
+        dw=st.integers(1, 8),
+        ow=st.integers(1, 8),
+        ghost=st.integers(1, 64),
+        seed=st.integers(0, 2**31),
+    )
+    def test_hypothesis_composition(self, rows, dw, ow, ghost, seed):
+        rng = np.random.default_rng(seed)
+        args = random_local_problem(rng, rows, dw, ow, ghost)
+        (got,) = model.local_spmv(*args)
+        want = ref.local_spmv(*args)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+class TestHaloPack:
+    def test_pack_matches_ref(self):
+        rng = np.random.default_rng(8)
+        v = rng.standard_normal(100).astype(np.float32)
+        idx = rng.integers(0, 100, size=40).astype(np.int32)
+        (got,) = model.halo_pack(v, idx)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.gather(v, idx)))
+
+
+class TestSpmvStep:
+    def test_normalized_output(self):
+        rng = np.random.default_rng(9)
+        args = random_local_problem(rng, 32, 4, 2, 16)
+        w, scale = model.spmv_step(*args)
+        assert float(np.max(np.abs(np.asarray(w)))) == pytest.approx(1.0, rel=1e-5)
+        assert float(scale) > 0

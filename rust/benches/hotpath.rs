@@ -1,0 +1,87 @@
+//! L3 hot-path wall-clock benches (§Perf): schedule compilation,
+//! discrete-event execution, exchange-plan compilation, and the real data
+//! plane — one-shot vs the persistent engine, with and without overlap.
+//!
+//! ```bash
+//! cargo bench --bench hotpath
+//! ```
+
+use hetcomm::bench::{bench, fmt_secs, Table};
+use hetcomm::comm::{build_schedule, Strategy, StrategyKind, Transport};
+use hetcomm::coordinator::{DistSpmv, Engine, EngineConfig, ExchangePlan, SpmvConfig};
+use hetcomm::params::lassen_params;
+use hetcomm::sim;
+use hetcomm::sparse::{suite, PartitionedMatrix};
+use hetcomm::topology::machines::lassen;
+
+fn main() {
+    let params = lassen_params();
+    let info = suite::info("audikw_1").unwrap();
+    let mat = suite::proxy(info, 64);
+    let machine = lassen(8);
+    let pm = PartitionedMatrix::build(&mat, 32);
+    let pattern = pm.comm_pattern(&machine, 8);
+    let split = Strategy::new(StrategyKind::SplitMd, Transport::Staged).unwrap();
+
+    let mut t = Table::new("L3 hot paths (real wall-clock, audikw_1 proxy, 32 GPUs)", &[
+        "path", "median[s]", "p95[s]", "n",
+    ]);
+
+    // pattern extraction
+    let s1 = bench(2, 10, || {
+        std::hint::black_box(pm.comm_pattern(&machine, 8));
+    });
+    t.row(vec!["comm_pattern extraction".into(), fmt_secs(s1.median), fmt_secs(s1.p95), s1.n.to_string()]);
+
+    // schedule build per strategy
+    for s in [Strategy::new(StrategyKind::Standard, Transport::Staged).unwrap(), split] {
+        let st = bench(2, 10, || {
+            std::hint::black_box(build_schedule(s, &machine, &pattern));
+        });
+        t.row(vec![format!("schedule build [{}]", s.label()), fmt_secs(st.median), fmt_secs(st.p95), st.n.to_string()]);
+    }
+
+    // simulator execution
+    let sched = build_schedule(split, &machine, &pattern);
+    let ss = bench(2, 10, || {
+        std::hint::black_box(sim::run(&machine, &params, &sched, machine.cores_per_node()));
+    });
+    t.row(vec!["sim::run (split schedule)".into(), fmt_secs(ss.median), fmt_secs(ss.p95), ss.n.to_string()]);
+
+    // exchange-plan compilation
+    let sp = bench(1, 5, || {
+        std::hint::black_box(ExchangePlan::build(&pm, &machine, split));
+    });
+    t.row(vec!["ExchangePlan::build".into(), fmt_secs(sp.median), fmt_secs(sp.p95), sp.n.to_string()]);
+
+    // data plane: one-shot vs persistent engine (8 workers, smaller matrix
+    // for thread-spawn fairness)
+    let small = suite::proxy(suite::info("thermal2").unwrap(), 256);
+    let machine2 = lassen(2);
+    let mut v = vec![0f32; small.nrows];
+    for (i, x) in v.iter_mut().enumerate() {
+        *x = (i as f32).sin();
+    }
+    let d = DistSpmv::new(&small, 8, &machine2, split, SpmvConfig { verify: false, ..Default::default() }).unwrap();
+    let so = bench(1, 8, || {
+        d.run(&v, 1).unwrap();
+    });
+    t.row(vec!["data plane: one-shot run()".into(), fmt_secs(so.median), fmt_secs(so.p95), so.n.to_string()]);
+
+    for overlap in [false, true] {
+        let mut eng = Engine::new(&small, 8, &machine2, split, &v, EngineConfig { overlap, ..Default::default() }).unwrap();
+        let se = bench(2, 20, || {
+            eng.iterate(None).unwrap();
+        });
+        t.row(vec![
+            format!("data plane: engine iterate (overlap={overlap})"),
+            fmt_secs(se.median),
+            fmt_secs(se.p95),
+            se.n.to_string(),
+        ]);
+        drop(eng);
+    }
+
+    t.print();
+    println!("\n(§Perf targets: engine iterate well below one-shot run; schedule build and\n sim::run linear in message count — see EXPERIMENTS.md §Perf)");
+}

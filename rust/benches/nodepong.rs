@@ -1,0 +1,54 @@
+//! Bench: node-pong — total volume split across ppn process pairs between
+//! two nodes. Regenerates **Figure 2.6** (with circled minima) and re-fits
+//! the **Table 4** injection-bandwidth limit.
+//!
+//! ```bash
+//! cargo bench --bench nodepong
+//! ```
+
+use hetcomm::bench::{fmt_bytes, fmt_secs, Table};
+use hetcomm::params::fit::{fit_inv_rn, Sample};
+use hetcomm::params::lassen_params;
+use hetcomm::sim::network::{best_ppn, nodepong};
+use hetcomm::topology::machines::lassen;
+
+fn main() {
+    let machine = lassen(2);
+    let params = lassen_params();
+    let ppns = [1usize, 2, 4, 8, 16, 32, 40];
+    let volumes: Vec<usize> = (10..=24).step_by(2).map(|e| 1usize << e).collect();
+
+    let mut header: Vec<String> = vec!["volume".into()];
+    header.extend(ppns.iter().map(|p| format!("ppn={p}")));
+    header.push("best".into());
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut fig = Table::new("Figure 2.6 — node-pong: volume split across ppn pairs (simulated)", &hdr);
+
+    for &vol in &volumes {
+        let mut row = vec![fmt_bytes(vol)];
+        for &ppn in &ppns {
+            row.push(fmt_secs(nodepong(&machine, &params, vol, ppn)));
+        }
+        let best = best_ppn(&machine, &params, vol, &ppns);
+        row.push(format!("ppn={best}")); // the circled minimum
+        fig.row(row);
+    }
+    fig.print();
+
+    // -------- Table 4 round-trip: fit 1/R_N at saturation ---------------
+    // At ppn=40 and large volumes the NIC injection limit dominates; the
+    // slope of time vs volume recovers 1/R_N.
+    let samples: Vec<Sample> = (20..=26)
+        .map(|e| {
+            let v = 1usize << e;
+            Sample { bytes: v, seconds: nodepong(&machine, &params, v, 40) }
+        })
+        .collect();
+    let inv_rn = fit_inv_rn(&samples);
+    println!(
+        "\nTable 4 round-trip: fitted 1/R_N = {:.3e} s/B vs measured {:.3e} s/B (x{:.3})",
+        inv_rn,
+        params.inv_rn,
+        inv_rn / params.inv_rn
+    );
+}

@@ -1,0 +1,79 @@
+//! Bench: ping-pong times per locality and protocol — regenerates
+//! **Figure 2.5** and re-fits the **Table 2** parameters from simulated
+//! measurements (the BenchPress pipeline of Section 3).
+//!
+//! ```bash
+//! cargo bench --bench pingpong
+//! ```
+
+use hetcomm::bench::{fmt_secs, Table};
+use hetcomm::params::fit::{fit_protocol_bands, Sample};
+use hetcomm::params::{lassen_params, Endpoint};
+use hetcomm::sim::network::pingpong;
+use hetcomm::topology::Locality;
+
+fn main() {
+    let params = lassen_params();
+    let sizes: Vec<usize> = (0..=24).map(|e| 1usize << e).collect();
+    let locs = [Locality::OnSocket, Locality::OnNode, Locality::OffNode];
+
+    // -------- Figure 2.5: time vs size per locality (CPU and GPU) --------
+    let mut fig = Table::new(
+        "Figure 2.5 — ping-pong time vs size (simulated, Lassen parameters)",
+        &["size[B]", "cpu on-socket", "cpu on-node", "cpu off-node", "gpu on-socket", "gpu on-node", "gpu off-node"],
+    );
+    for &s in &sizes {
+        let mut row = vec![s.to_string()];
+        for ep in [Endpoint::Cpu, Endpoint::Gpu] {
+            for loc in locs {
+                row.push(fmt_secs(pingpong(&params, ep, loc, s)));
+            }
+        }
+        fig.row(row);
+    }
+    fig.print();
+
+    // The paper's observation: the network beats on-node for large sizes.
+    let big = 1 << 20;
+    let on = pingpong(&params, Endpoint::Cpu, Locality::OnNode, big);
+    let off = pingpong(&params, Endpoint::Cpu, Locality::OffNode, big);
+    println!("\nlarge-message crossover (1 MiB): on-node {} vs off-node {} -> network {}", fmt_secs(on), fmt_secs(off), if off < on { "WINS (matches Fig 2.5)" } else { "loses (MISMATCH)" });
+
+    // -------- Table 2 round-trip: re-fit alpha/beta from the samples ------
+    let mut t2 = Table::new(
+        "Table 2 round-trip — least-squares fit of simulated ping-pong vs measured constants",
+        &["path", "protocol", "alpha fit", "alpha ref", "beta fit", "beta ref", "r2"],
+    );
+    for (ep, ep_name) in [(Endpoint::Cpu, "CPU"), (Endpoint::Gpu, "GPU")] {
+        for loc in locs {
+            let samples: Vec<Sample> =
+                sizes.iter().map(|&s| Sample { bytes: s, seconds: pingpong(&params, ep, loc, s) }).collect();
+            let (short_max, eager_max) = match ep {
+                Endpoint::Cpu => (params.short_max, params.eager_max + 1),
+                Endpoint::Gpu => (0, params.gpu_eager_max + 1),
+            };
+            let fits = fit_protocol_bands(&samples, short_max, eager_max);
+            for (fit, proto) in fits.iter().zip(["short", "eager", "rend"]) {
+                let Some(fit) = fit else { continue };
+                let reference = match (ep, proto) {
+                    (Endpoint::Cpu, "short") => params.cpu_ab(hetcomm::params::Protocol::Short, loc),
+                    (Endpoint::Cpu, "eager") => params.cpu_ab(hetcomm::params::Protocol::Eager, loc),
+                    (Endpoint::Cpu, _) => params.cpu_ab(hetcomm::params::Protocol::Rendezvous, loc),
+                    (Endpoint::Gpu, "eager") => params.gpu_ab(hetcomm::params::Protocol::Eager, loc),
+                    (Endpoint::Gpu, _) => params.gpu_ab(hetcomm::params::Protocol::Rendezvous, loc),
+                };
+                t2.row(vec![
+                    format!("{ep_name} {loc}"),
+                    proto.into(),
+                    format!("{:.3e}", fit.ab.alpha),
+                    format!("{:.3e}", reference.alpha),
+                    format!("{:.3e}", fit.ab.beta),
+                    format!("{:.3e}", reference.beta),
+                    format!("{:.4}", fit.r2),
+                ]);
+            }
+        }
+    }
+    t2.print();
+    println!("\n(fitted parameters should round-trip to the Table 2 constants: the simulator\n is calibrated from exactly these values)");
+}

@@ -1,0 +1,149 @@
+//! In-tree benchmark harness (no `criterion` in the offline image).
+//!
+//! Provides wall-clock timing with warmup, summary statistics and aligned
+//! table printing used by every `rust/benches/*` target. Benchmarks of
+//! *simulated* quantities (the paper's figures) print model/simulator
+//! seconds; benchmarks of the coordinator hot path print real wall time.
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Time `f` for `iters` iterations after `warmup` warmup calls; returns
+/// per-iteration seconds.
+pub fn time_fn<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Vec<f64> {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples
+}
+
+/// Measure and summarize.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, f: F) -> Summary {
+    Summary::of(&time_fn(warmup, iters, f))
+}
+
+/// A result table with aligned columns, printed in the style of the
+/// paper's figures (one row per size, one column per strategy/series).
+pub struct Table {
+    pub title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Table {
+        Table { title: title.into(), header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format seconds in engineering notation (the paper's figures are log-log
+/// in seconds).
+pub fn fmt_secs(t: f64) -> String {
+    if !t.is_finite() {
+        return "inf".into();
+    }
+    if t == 0.0 {
+        return "0".into();
+    }
+    format!("{t:9.3e}")
+}
+
+/// Format byte counts compactly.
+pub fn fmt_bytes(b: usize) -> String {
+    if b >= 1 << 30 {
+        format!("{:.1}GiB", b as f64 / (1u64 << 30) as f64)
+    } else if b >= 1 << 20 {
+        format!("{:.1}MiB", b as f64 / (1u64 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.1}KiB", b as f64 / 1024.0)
+    } else {
+        format!("{b}B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_returns_iters_samples() {
+        let samples = time_fn(1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(samples.len(), 5);
+        assert!(samples.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["size", "time"]);
+        t.row(vec!["1024".into(), "3.2e-6".into()]);
+        t.row(vec!["8".into(), "1.1e-7".into()]);
+        let r = t.render();
+        assert!(r.contains("demo"));
+        assert!(r.contains("1024"));
+        let lines: Vec<&str> = r.lines().filter(|l| !l.is_empty()).collect();
+        assert!(lines.len() >= 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(2048), "2.0KiB");
+        assert_eq!(fmt_bytes(3 << 20), "3.0MiB");
+        assert!(fmt_secs(1.234e-5).contains("e-5"));
+        assert_eq!(fmt_secs(0.0), "0");
+    }
+}

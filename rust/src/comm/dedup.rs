@@ -1,0 +1,118 @@
+//! Duplicate-data analysis (Section 2.3's data redundancy, Section 4.6's
+//! 25%-duplicate scenarios).
+//!
+//! The heavy lifting lives in [`super::plan::unique_bytes`]; this module
+//! provides pattern-level transforms used by benchmarks and tests.
+
+use crate::pattern::{CommPattern, Msg};
+use crate::topology::Machine;
+
+/// Rewrite a pattern so that a target `frac` of each GPU's inter-node bytes
+/// is duplicated: messages are grouped per (src, destination node) and
+/// assigned shared dup groups until the requested fraction of bytes is
+/// marked. Used by the Figure 4.3 bottom-row scenarios.
+pub fn with_duplicate_fraction(machine: &Machine, pattern: &CommPattern, frac: f64) -> CommPattern {
+    assert!((0.0..1.0).contains(&frac), "frac must be in [0,1)");
+    if frac == 0.0 {
+        return pattern.clone();
+    }
+    let mut msgs = pattern.msgs.clone();
+    let total: usize = pattern.internode(machine).map(|m| m.bytes).sum();
+    let want = (total as f64 * frac) as usize;
+    let mut marked = 0usize;
+    let mut group: u32 = 0;
+    // Group inter-node messages by (src GPU, destination node, size); pair
+    // messages within each family — the second of each pair becomes the
+    // redundant copy — until the requested byte fraction is marked.
+    let mut families: std::collections::BTreeMap<(usize, usize, usize), Vec<usize>> = std::collections::BTreeMap::new();
+    for (i, m) in msgs.iter().enumerate() {
+        if machine.gpu_node(m.src) != machine.gpu_node(m.dst) {
+            families.entry((m.src.0, machine.gpu_node(m.dst).0, m.bytes)).or_default().push(i);
+        }
+    }
+    'outer: for members in families.values() {
+        for pair in members.chunks(2) {
+            if marked >= want {
+                break 'outer;
+            }
+            if let [a, b] = *pair {
+                msgs[a].dup_group = group;
+                msgs[b].dup_group = group;
+                group += 1;
+                marked += msgs[b].bytes;
+            }
+        }
+    }
+    CommPattern::new(msgs)
+}
+
+/// The pattern with duplicate messages dropped entirely (keeps the first of
+/// each (src, group, dst-node) family) — the "ideal" post-dedup traffic used
+/// to sanity-check strategy schedules.
+pub fn stripped(machine: &Machine, pattern: &CommPattern) -> CommPattern {
+    let mut seen = std::collections::BTreeSet::new();
+    let msgs = pattern
+        .msgs
+        .iter()
+        .filter(|m| {
+            m.dup_group == Msg::NO_DUP || seen.insert((m.src, m.dup_group, machine.gpu_node(m.dst)))
+        })
+        .copied()
+        .collect();
+    CommPattern::new(msgs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::generators::Scenario;
+    use crate::topology::machines::lassen;
+    use crate::topology::GpuId;
+
+    #[test]
+    fn marks_roughly_requested_fraction() {
+        let m = lassen(17);
+        let sc = Scenario { n_msgs: 256, msg_size: 2048, n_dest: 4, dup_frac: 0.0 };
+        let p = sc.materialize(&m);
+        let p25 = with_duplicate_fraction(&m, &p, 0.25);
+        let f = p25.duplicate_fraction(&m);
+        // Each dup pair marks one redundant copy = half the pair's bytes;
+        // achievable granularity is one message.
+        assert!(f > 0.10 && f <= 0.26, "got {f}");
+    }
+
+    #[test]
+    fn zero_frac_is_identity() {
+        let m = lassen(5);
+        let sc = Scenario { n_msgs: 32, msg_size: 512, n_dest: 4, dup_frac: 0.0 };
+        let p = sc.materialize(&m);
+        assert_eq!(with_duplicate_fraction(&m, &p, 0.0), p);
+    }
+
+    #[test]
+    fn stripped_removes_redundant_copies() {
+        let m = lassen(2);
+        let mut a = crate::pattern::Msg::new(GpuId(0), GpuId(4), 100);
+        a.dup_group = 0;
+        let mut b = crate::pattern::Msg::new(GpuId(0), GpuId(5), 100);
+        b.dup_group = 0;
+        let c = crate::pattern::Msg::new(GpuId(1), GpuId(4), 70);
+        let p = CommPattern::new(vec![a, b, c]);
+        let s = stripped(&m, &p);
+        assert_eq!(s.msgs.len(), 2);
+        assert_eq!(s.total_bytes(), 170);
+    }
+
+    #[test]
+    fn stripped_keeps_cross_node_copies() {
+        // Same dup group to *different* destination nodes must survive —
+        // dedup happens per node, not globally.
+        let m = lassen(3);
+        let mut a = crate::pattern::Msg::new(GpuId(0), GpuId(4), 100);
+        a.dup_group = 0;
+        let mut b = crate::pattern::Msg::new(GpuId(0), GpuId(8), 100);
+        b.dup_group = 0;
+        let p = CommPattern::new(vec![a, b]);
+        assert_eq!(stripped(&m, &p).msgs.len(), 2);
+    }
+}

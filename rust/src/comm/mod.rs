@@ -1,0 +1,277 @@
+//! Communication strategies (Section 2.3, Table 5) as message-*schedule*
+//! generators.
+//!
+//! A strategy consumes a [`crate::pattern::CommPattern`] (who must deliver
+//! what to whom, GPU-to-GPU) and produces a [`Schedule`]: an ordered list of
+//! *phases*, each a set of point-to-point [`Xfer`]s (or host↔device
+//! [`CopyOp`]s) that may proceed concurrently. Phases are barriers — a
+//! transfer in phase `k+1` may depend on data landed in phase `k`.
+//!
+//! The same schedule drives both backends:
+//! - the **discrete-event simulator** ([`crate::sim`]) costs it with the
+//!   paper's measured Lassen parameters, and
+//! - the **coordinator** ([`crate::coordinator`]) really executes it between
+//!   worker threads, moving actual bytes.
+
+pub mod dedup;
+pub mod plan;
+pub mod split;
+pub mod standard;
+pub mod three_step;
+pub mod two_step;
+
+use crate::pattern::CommPattern;
+use crate::topology::{GpuId, Machine, ProcId};
+
+/// The five strategies of Table 5.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum StrategyKind {
+    Standard,
+    ThreeStep,
+    TwoStep,
+    SplitMd,
+    SplitDd,
+}
+
+impl StrategyKind {
+    pub const ALL: [StrategyKind; 5] =
+        [StrategyKind::Standard, StrategyKind::ThreeStep, StrategyKind::TwoStep, StrategyKind::SplitMd, StrategyKind::SplitDd];
+
+    /// Host processes per GPU the strategy assumes (Section 4: every
+    /// strategy uses one host process per GPU except Split+DD's four).
+    pub fn ppg(&self) -> usize {
+        match self {
+            StrategyKind::SplitDd => 4,
+            _ => 1,
+        }
+    }
+
+    /// Whether a device-aware variant exists (Table 5: Split strategies are
+    /// staged-through-host only).
+    pub fn supports_device_aware(&self) -> bool {
+        !matches!(self, StrategyKind::SplitMd | StrategyKind::SplitDd)
+    }
+}
+
+impl std::fmt::Display for StrategyKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StrategyKind::Standard => write!(f, "Standard"),
+            StrategyKind::ThreeStep => write!(f, "3-Step"),
+            StrategyKind::TwoStep => write!(f, "2-Step"),
+            StrategyKind::SplitMd => write!(f, "Split+MD"),
+            StrategyKind::SplitDd => write!(f, "Split+DD"),
+        }
+    }
+}
+
+/// How inter-node data leaves the GPU (Section 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Transport {
+    /// Copy to host, send CPU↔CPU, copy to device.
+    Staged,
+    /// CUDA-aware / GPUDirect: GPU buffers handed straight to MPI.
+    DeviceAware,
+}
+
+impl std::fmt::Display for Transport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Transport::Staged => write!(f, "staged"),
+            Transport::DeviceAware => write!(f, "device-aware"),
+        }
+    }
+}
+
+/// A strategy configuration: kind × transport (validated combination).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Strategy {
+    pub kind: StrategyKind,
+    pub transport: Transport,
+    /// Split message cap in bytes (Algorithm 1); ignored by non-Split kinds.
+    pub message_cap: usize,
+}
+
+impl Strategy {
+    /// Construct, validating the Table 5 matrix. Default message cap is the
+    /// Lassen rendezvous switch point (8 KiB), as in [16].
+    pub fn new(kind: StrategyKind, transport: Transport) -> anyhow::Result<Strategy> {
+        if transport == Transport::DeviceAware && !kind.supports_device_aware() {
+            anyhow::bail!("{kind} has no device-aware variant (Table 5)");
+        }
+        Ok(Strategy { kind, transport, message_cap: 8192 })
+    }
+
+    pub fn with_cap(mut self, cap: usize) -> Strategy {
+        assert!(cap > 0, "message cap must be positive");
+        self.message_cap = cap;
+        self
+    }
+
+    /// All valid (kind, transport) combinations of Table 5, in paper order.
+    pub fn all() -> Vec<Strategy> {
+        let mut out = Vec::new();
+        for kind in StrategyKind::ALL {
+            out.push(Strategy::new(kind, Transport::Staged).unwrap());
+            if kind.supports_device_aware() {
+                out.push(Strategy::new(kind, Transport::DeviceAware).unwrap());
+            }
+        }
+        out
+    }
+
+    pub fn label(&self) -> String {
+        format!("{} ({})", self.kind, self.transport)
+    }
+}
+
+/// Endpoint of a transfer: either a GPU buffer or a host process buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Loc {
+    Gpu(GpuId),
+    Host(ProcId),
+}
+
+/// One point-to-point transfer within a phase.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Xfer {
+    pub src: Loc,
+    pub dst: Loc,
+    pub bytes: usize,
+    /// Stable tag identifying the payload for the data-plane executor
+    /// (indexes into the pattern's message list; u32::MAX for synthetic
+    /// aggregation buffers).
+    pub tag: u32,
+}
+
+/// A host↔device copy within a phase (staging legs).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CopyOp {
+    pub gpu: GpuId,
+    pub proc: ProcId,
+    pub bytes: usize,
+    pub dir: CopyKind,
+    /// Number of processes concurrently copying from this GPU (1 or 4);
+    /// selects the Table 3 parameter class.
+    pub nprocs: usize,
+}
+
+/// Copy direction (device→host when staging sends, host→device on receipt).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CopyKind {
+    D2H,
+    H2D,
+}
+
+/// One phase: operations that may run concurrently; the phase completes when
+/// all of them do (matching the paper's step-wise strategy descriptions).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Phase {
+    pub label: &'static str,
+    pub xfers: Vec<Xfer>,
+    pub copies: Vec<CopyOp>,
+}
+
+impl Phase {
+    pub fn new(label: &'static str) -> Phase {
+        Phase { label, xfers: Vec::new(), copies: Vec::new() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xfers.is_empty() && self.copies.is_empty()
+    }
+}
+
+/// A complete communication schedule: ordered phases.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Schedule {
+    pub strategy_label: String,
+    pub phases: Vec<Phase>,
+}
+
+impl Schedule {
+    /// Total bytes moved across all point-to-point transfers (staging copies
+    /// excluded).
+    pub fn total_xfer_bytes(&self) -> usize {
+        self.phases.iter().flat_map(|p| &p.xfers).map(|x| x.bytes).sum()
+    }
+
+    /// Total inter-node bytes (requires the machine for locality).
+    pub fn internode_bytes(&self, machine: &Machine, ppn: usize) -> usize {
+        self.phases
+            .iter()
+            .flat_map(|p| &p.xfers)
+            .filter(|x| is_internode(machine, x, ppn))
+            .map(|x| x.bytes)
+            .sum()
+    }
+
+    /// Number of inter-node messages.
+    pub fn internode_msgs(&self, machine: &Machine, ppn: usize) -> usize {
+        self.phases.iter().flat_map(|p| &p.xfers).filter(|x| is_internode(machine, x, ppn)).count()
+    }
+}
+
+fn loc_node(machine: &Machine, loc: Loc, ppn: usize) -> crate::topology::NodeId {
+    match loc {
+        Loc::Gpu(g) => machine.gpu_node(g),
+        Loc::Host(p) => machine.proc_node(p, ppn),
+    }
+}
+
+/// True when a transfer crosses nodes.
+pub fn is_internode(machine: &Machine, x: &Xfer, ppn: usize) -> bool {
+    loc_node(machine, x.src, ppn) != loc_node(machine, x.dst, ppn)
+}
+
+/// Strategy = schedule generator. `ppn` is the number of host processes per
+/// node the run uses (fixed by `kind.ppg() * machine.gpus_per_node()` for
+/// GPU-attached processes, but Split may enlist up to all cores).
+pub trait ScheduleGen {
+    fn schedule(&self, machine: &Machine, pattern: &CommPattern) -> Schedule;
+}
+
+/// Build the schedule for any strategy configuration.
+pub fn build_schedule(strategy: Strategy, machine: &Machine, pattern: &CommPattern) -> Schedule {
+    match strategy.kind {
+        StrategyKind::Standard => standard::schedule(strategy, machine, pattern),
+        StrategyKind::ThreeStep => three_step::schedule(strategy, machine, pattern),
+        StrategyKind::TwoStep => two_step::schedule(strategy, machine, pattern),
+        StrategyKind::SplitMd | StrategyKind::SplitDd => split::schedule(strategy, machine, pattern),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table5_matrix() {
+        assert!(Strategy::new(StrategyKind::Standard, Transport::DeviceAware).is_ok());
+        assert!(Strategy::new(StrategyKind::ThreeStep, Transport::DeviceAware).is_ok());
+        assert!(Strategy::new(StrategyKind::TwoStep, Transport::DeviceAware).is_ok());
+        assert!(Strategy::new(StrategyKind::SplitMd, Transport::DeviceAware).is_err());
+        assert!(Strategy::new(StrategyKind::SplitDd, Transport::DeviceAware).is_err());
+        assert_eq!(Strategy::all().len(), 8); // 5 staged + 3 device-aware
+    }
+
+    #[test]
+    fn ppg_values() {
+        assert_eq!(StrategyKind::SplitDd.ppg(), 4);
+        assert_eq!(StrategyKind::SplitMd.ppg(), 1);
+        assert_eq!(StrategyKind::Standard.ppg(), 1);
+    }
+
+    #[test]
+    fn default_cap_is_rendezvous_switch() {
+        let s = Strategy::new(StrategyKind::SplitMd, Transport::Staged).unwrap();
+        assert_eq!(s.message_cap, 8192);
+        assert_eq!(s.with_cap(4096).message_cap, 4096);
+    }
+
+    #[test]
+    fn labels_readable() {
+        let s = Strategy::new(StrategyKind::ThreeStep, Transport::DeviceAware).unwrap();
+        assert_eq!(s.label(), "3-Step (device-aware)");
+    }
+}

@@ -1,0 +1,307 @@
+//! Shared planning helpers for the strategy schedule builders: message
+//! grouping, process pairing, host-process placement and message-cap
+//! chunking (the reusable pieces of Algorithms 1–2).
+
+use crate::pattern::{CommPattern, Msg};
+use crate::topology::{GpuId, Machine, NodeId, ProcId};
+use std::collections::BTreeMap;
+
+/// Messages grouped by (source node, destination node), inter-node only.
+pub type NodePairGroups = BTreeMap<(NodeId, NodeId), Vec<Msg>>;
+
+/// Group the inter-node messages of a pattern by ordered node pair.
+pub fn group_by_node_pair(machine: &Machine, pattern: &CommPattern) -> NodePairGroups {
+    let mut groups: NodePairGroups = BTreeMap::new();
+    for m in pattern.internode(machine) {
+        let key = (machine.gpu_node(m.src), machine.gpu_node(m.dst));
+        groups.entry(key).or_default().push(*m);
+    }
+    groups
+}
+
+/// Unique payload bytes of a message set after removing duplicate data:
+/// messages sharing `(src, dup_group)` (group != NO_DUP) carry identical
+/// bytes, counted once. This is the Section 2.3 "data redundancy" that
+/// node-aware strategies eliminate *per destination node*; callers group by
+/// destination node before calling.
+pub fn unique_bytes(msgs: &[Msg]) -> usize {
+    let mut seen: std::collections::BTreeSet<(GpuId, u32)> = std::collections::BTreeSet::new();
+    let mut total = 0usize;
+    for m in msgs {
+        if m.dup_group == Msg::NO_DUP || seen.insert((m.src, m.dup_group)) {
+            total += m.bytes;
+        }
+    }
+    total
+}
+
+/// Unique bytes per source GPU within a message set (for gather-phase
+/// sizing).
+pub fn unique_bytes_by_src(msgs: &[Msg]) -> BTreeMap<GpuId, usize> {
+    let mut seen: std::collections::BTreeSet<(GpuId, u32)> = std::collections::BTreeSet::new();
+    let mut by_src: BTreeMap<GpuId, usize> = BTreeMap::new();
+    for m in msgs {
+        if m.dup_group == Msg::NO_DUP || seen.insert((m.src, m.dup_group)) {
+            *by_src.entry(m.src).or_default() += m.bytes;
+        }
+    }
+    by_src
+}
+
+/// Total bytes each destination GPU must finally receive (redistribution
+/// sizing — duplicates are *delivered* to every requester even when shipped
+/// across the network once).
+pub fn bytes_by_dst(msgs: &[Msg]) -> BTreeMap<GpuId, usize> {
+    let mut by_dst: BTreeMap<GpuId, usize> = BTreeMap::new();
+    for m in msgs {
+        *by_dst.entry(m.dst).or_default() += m.bytes;
+    }
+    by_dst
+}
+
+/// Host process of a GPU when the node runs `ppn` processes and `ppg` of
+/// them serve each GPU, placed on the GPU's socket. Returns the first of
+/// the `ppg` block.
+///
+/// With `ppn = gpus_per_node * ppg` this coincides with
+/// [`Machine::gpu_host_proc`]; with larger `ppn` (Split enlisting all
+/// cores), GPU processes sit at the start of each socket's block.
+pub fn gpu_host_proc_in(machine: &Machine, g: GpuId, ppn: usize, ppg: usize) -> ProcId {
+    let node = machine.gpu_node(g).0;
+    let socket_local = machine.gpu_socket(g) % machine.sockets_per_node;
+    let within = machine.gpu_local(g) % machine.gpus_per_socket;
+    let pps = ppn / machine.sockets_per_node;
+    assert!(within * ppg < pps, "socket {socket_local} cannot host {ppg} procs/GPU with pps {pps}");
+    ProcId(node * ppn + socket_local * pps + within * ppg)
+}
+
+/// The `ppg` host processes of a GPU under the [`gpu_host_proc_in`] layout.
+pub fn gpu_host_procs_in(machine: &Machine, g: GpuId, ppn: usize, ppg: usize) -> Vec<ProcId> {
+    let first = gpu_host_proc_in(machine, g, ppn, ppg).0;
+    (first..first + ppg).map(ProcId).collect()
+}
+
+/// 3-Step pairing: on node `k`, the host process responsible for traffic
+/// with node `l` (the "paired process"). Distinct remote nodes map to
+/// distinct local ranks modulo `ppn`, keeping every process active
+/// (Section 2.3.1).
+pub fn paired_proc(_machine: &Machine, k: NodeId, l: NodeId, ppn: usize) -> ProcId {
+    debug_assert!(k != l, "pairing a node with itself");
+    // Skip `l == k` collisions by folding the remote node index into
+    // [0, num_nodes-1) relative to k, then take it modulo ppn.
+    let rel = if l.0 > k.0 { l.0 - 1 } else { l.0 };
+    ProcId(k.0 * ppn + rel % ppn)
+}
+
+/// 3-Step pairing on GPUs (device-aware): the GPU on node `k` paired with
+/// node `l`.
+pub fn paired_gpu(machine: &Machine, k: NodeId, l: NodeId) -> GpuId {
+    debug_assert!(k != l);
+    let gpn = machine.gpus_per_node();
+    let rel = if l.0 > k.0 { l.0 - 1 } else { l.0 };
+    GpuId(k.0 * gpn + rel % gpn)
+}
+
+/// 2-Step pairing: local rank `r` on node `k` is paired with local rank `r`
+/// on node `l` (P0→P4, P1→P5, … in Figure 2.4).
+pub fn rank_pair(_machine: &Machine, src: ProcId, l: NodeId, ppn: usize) -> ProcId {
+    let local = src.0 % ppn;
+    ProcId(l.0 * ppn + local)
+}
+
+/// 2-Step pairing on GPUs (device-aware).
+pub fn gpu_rank_pair(machine: &Machine, src: GpuId, l: NodeId) -> GpuId {
+    let gpn = machine.gpus_per_node();
+    GpuId(l.0 * gpn + machine.gpu_local(src))
+}
+
+/// A chunk of a node-pair's inter-node volume after message-cap splitting
+/// (Algorithm 1 lines 12–17).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Chunk {
+    pub src_node: NodeId,
+    pub dst_node: NodeId,
+    pub bytes: usize,
+}
+
+/// Apply the Algorithm 1 message-cap rule to one *sending* node `k`:
+///
+/// - `vol_per_dest[l]` = unique inter-node bytes node `k` must ship to `l`;
+/// - if the max single-destination volume is below `message_cap`, each
+///   destination's data is conglomerated into one message (line 13);
+/// - otherwise the cap is raised to `ceil(total / ppn)` when the split
+///   would exceed `ppn` messages (lines 15–16), and each destination's data
+///   is split into `<= cap`-byte chunks (line 17).
+pub fn split_chunks(k: NodeId, vol_per_dest: &BTreeMap<NodeId, usize>, message_cap: usize, ppn: usize) -> Vec<Chunk> {
+    let total: usize = vol_per_dest.values().sum();
+    let max_single = vol_per_dest.values().copied().max().unwrap_or(0);
+    let mut chunks = Vec::new();
+    if max_single < message_cap {
+        // Conglomerate: one message per destination node.
+        for (&l, &v) in vol_per_dest {
+            if v > 0 {
+                chunks.push(Chunk { src_node: k, dst_node: l, bytes: v });
+            }
+        }
+        return chunks;
+    }
+    let mut cap = message_cap;
+    if total.div_ceil(cap) > ppn {
+        cap = total.div_ceil(ppn);
+    }
+    for (&l, &v) in vol_per_dest {
+        let mut rem = v;
+        while rem > 0 {
+            let c = rem.min(cap);
+            chunks.push(Chunk { src_node: k, dst_node: l, bytes: c });
+            rem -= c;
+        }
+    }
+    chunks
+}
+
+/// Algorithm 1 line 18: assign chunk *receives* to local ranks 0,1,2,… in
+/// descending size order, and *sends* to ranks ppn-1, ppn-2, … (ascending
+/// from the back), so send and receive duties overlap minimally and every
+/// process stays active. Returns (chunk index → local rank).
+pub fn assign_ranks(sizes: &[usize], ppn: usize, from_front: bool) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..sizes.len()).collect();
+    // descending by size; stable tiebreak on index for determinism
+    order.sort_by(|&a, &b| sizes[b].cmp(&sizes[a]).then(a.cmp(&b)));
+    let mut assignment = vec![0usize; sizes.len()];
+    for (pos, &chunk_idx) in order.iter().enumerate() {
+        let rank = pos % ppn;
+        assignment[chunk_idx] = if from_front { rank } else { ppn - 1 - rank };
+    }
+    assignment
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::machines::lassen;
+
+    #[test]
+    fn group_by_pair_partitions_internode() {
+        let m = lassen(3);
+        let p = CommPattern::new(vec![
+            Msg::new(GpuId(0), GpuId(4), 10),
+            Msg::new(GpuId(1), GpuId(5), 20),
+            Msg::new(GpuId(0), GpuId(8), 30),
+            Msg::new(GpuId(0), GpuId(1), 99), // intra-node, excluded
+        ]);
+        let g = group_by_node_pair(&m, &p);
+        assert_eq!(g.len(), 2);
+        assert_eq!(g[&(NodeId(0), NodeId(1))].len(), 2);
+        assert_eq!(g[&(NodeId(0), NodeId(2))].len(), 1);
+    }
+
+    #[test]
+    fn unique_bytes_dedups_groups() {
+        let mut a = Msg::new(GpuId(0), GpuId(4), 100);
+        a.dup_group = 1;
+        let mut b = Msg::new(GpuId(0), GpuId(5), 100);
+        b.dup_group = 1;
+        let c = Msg::new(GpuId(1), GpuId(6), 50);
+        assert_eq!(unique_bytes(&[a, b, c]), 150);
+        assert_eq!(bytes_by_dst(&[a, b, c]).values().sum::<usize>(), 250);
+    }
+
+    #[test]
+    fn host_proc_layout_split_ppn() {
+        let m = lassen(2);
+        // ppn=40, ppg=1: gpu0,1 socket0 -> procs 0,1; gpu2,3 socket1 -> 20,21.
+        assert_eq!(gpu_host_proc_in(&m, GpuId(0), 40, 1), ProcId(0));
+        assert_eq!(gpu_host_proc_in(&m, GpuId(1), 40, 1), ProcId(1));
+        assert_eq!(gpu_host_proc_in(&m, GpuId(2), 40, 1), ProcId(20));
+        assert_eq!(gpu_host_proc_in(&m, GpuId(3), 40, 1), ProcId(21));
+        // node 1
+        assert_eq!(gpu_host_proc_in(&m, GpuId(4), 40, 1), ProcId(40));
+        // matches Machine::gpu_host_proc when ppn = gpn*ppg
+        for g in 0..8 {
+            assert_eq!(gpu_host_proc_in(&m, GpuId(g), 4, 1), m.gpu_host_proc(GpuId(g), 1));
+        }
+    }
+
+    #[test]
+    fn pairing_distinct_and_in_node() {
+        let m = lassen(5);
+        let ppn = 4;
+        let k = NodeId(2);
+        let mut seen = std::collections::BTreeSet::new();
+        for l in [0usize, 1, 3, 4] {
+            let p = paired_proc(&m, k, NodeId(l), ppn);
+            assert_eq!(p.0 / ppn, 2, "paired proc must live on node k");
+            seen.insert(p);
+        }
+        assert_eq!(seen.len(), 4, "4 remote nodes -> 4 distinct local procs at ppn=4");
+    }
+
+    #[test]
+    fn rank_pairing_preserves_local_rank() {
+        let m = lassen(3);
+        let p = rank_pair(&m, ProcId(5), NodeId(2), 4); // local rank 1 on node 1
+        assert_eq!(p, ProcId(9)); // local rank 1 on node 2
+        let g = gpu_rank_pair(&m, GpuId(5), NodeId(2));
+        assert_eq!(g, GpuId(9));
+    }
+
+    #[test]
+    fn chunks_conglomerate_small() {
+        let mut vols = BTreeMap::new();
+        vols.insert(NodeId(1), 100);
+        vols.insert(NodeId(2), 200);
+        let ch = split_chunks(NodeId(0), &vols, 8192, 40);
+        assert_eq!(ch.len(), 2);
+        assert_eq!(ch.iter().map(|c| c.bytes).sum::<usize>(), 300);
+    }
+
+    #[test]
+    fn chunks_split_large_at_cap() {
+        let mut vols = BTreeMap::new();
+        vols.insert(NodeId(1), 20_000);
+        let ch = split_chunks(NodeId(0), &vols, 8192, 40);
+        assert_eq!(ch.len(), 3); // 8192 + 8192 + 3616
+        assert_eq!(ch.iter().map(|c| c.bytes).sum::<usize>(), 20_000);
+        assert!(ch.iter().all(|c| c.bytes <= 8192));
+    }
+
+    #[test]
+    fn cap_raised_when_exceeding_ppn() {
+        // total = 100 * 8192, cap 8192 -> 100 chunks > ppn 40
+        // raised cap = ceil(819200/40) = 20480.
+        let mut vols = BTreeMap::new();
+        vols.insert(NodeId(1), 819_200);
+        let ch = split_chunks(NodeId(0), &vols, 8192, 40);
+        assert_eq!(ch.iter().map(|c| c.bytes).sum::<usize>(), 819_200);
+        assert!(ch.len() <= 40);
+        assert!(ch.iter().all(|c| c.bytes <= 20_480));
+    }
+
+    #[test]
+    fn zero_volume_no_chunks() {
+        let mut vols = BTreeMap::new();
+        vols.insert(NodeId(1), 0);
+        assert!(split_chunks(NodeId(0), &vols, 8192, 40).is_empty());
+    }
+
+    #[test]
+    fn assign_ranks_descending_front_and_back() {
+        let sizes = vec![10, 40, 20, 30];
+        // descending order: idx 1 (40), 3 (30), 2 (20), 0 (10)
+        let front = assign_ranks(&sizes, 8, true);
+        assert_eq!(front, vec![3, 0, 2, 1]);
+        let back = assign_ranks(&sizes, 8, false);
+        assert_eq!(back, vec![4, 7, 5, 6]);
+    }
+
+    #[test]
+    fn assign_ranks_wraps_modulo_ppn() {
+        let sizes = vec![5; 10];
+        let a = assign_ranks(&sizes, 4, true);
+        assert!(a.iter().all(|&r| r < 4));
+        // all ranks used
+        let used: std::collections::BTreeSet<_> = a.iter().collect();
+        assert_eq!(used.len(), 4);
+    }
+}

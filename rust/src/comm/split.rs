@@ -1,0 +1,318 @@
+//! Split node-aware communication (Section 2.3.3, Algorithms 1–2,
+//! Figure 2.7) — staged-through-host only (Table 5).
+//!
+//! Inter-node volumes are conglomerated per destination node, split into
+//! `message_cap`-byte chunks (with the cap raised to `⌈total/PPN⌉` when the
+//! split would exceed the on-node process count), distributed over *all*
+//! available on-node CPU cores, injected into the network, and redistributed
+//! on the receiving node. Send duties are assigned from the last local rank
+//! backwards and receive duties from rank 0 forwards, in descending size
+//! order (Algorithm 1, line 18), keeping every core active.
+//!
+//! - **Split+MD**: one host process per GPU stages data, then *multiple*
+//!   on-node messages distribute it (extra on-node hops, cheap copies).
+//! - **Split+DD**: four host processes per GPU copy concurrently via
+//!   duplicate device pointers (fewer distribution hops, pricier copies —
+//!   the 4-proc class of Table 3).
+
+use super::plan::{self, group_by_node_pair};
+use super::{CopyKind, CopyOp, Loc, Phase, Schedule, Strategy, StrategyKind, Transport, Xfer};
+use crate::pattern::CommPattern;
+use crate::topology::{GpuId, Machine, NodeId, ProcId};
+use std::collections::BTreeMap;
+
+const AGG: u32 = u32::MAX;
+
+pub fn schedule(strategy: Strategy, machine: &Machine, pattern: &CommPattern) -> Schedule {
+    assert_eq!(strategy.transport, Transport::Staged, "Split has no device-aware variant");
+    let ppg = match strategy.kind {
+        StrategyKind::SplitMd => 1,
+        StrategyKind::SplitDd => 4,
+        other => panic!("split::schedule called with {other}"),
+    };
+    // Split enlists every CPU core on the node (40 on Lassen).
+    let ppn = machine.cores_per_node();
+    let groups = group_by_node_pair(machine, pattern);
+    let host = |g: GpuId| plan::gpu_host_proc_in(machine, g, ppn, ppg);
+
+    let mut d2h = Phase::new("d2h");
+    let mut local_s = Phase::new("local-scatter");
+    let mut global = Phase::new("inter-node");
+    let mut local_r = Phase::new("local-redistribute");
+    let mut h2d = Phase::new("h2d");
+
+    // ---- Per sending node: chunking (Algorithm 1 lines 10-17). ----
+    // unique volume per (src node, dst node) and per (src gpu, dst node)
+    let mut vol_by_pair: BTreeMap<NodeId, BTreeMap<NodeId, usize>> = BTreeMap::new();
+    let mut vol_by_gpu_dest: BTreeMap<(NodeId, NodeId), Vec<(GpuId, usize)>> = BTreeMap::new();
+    for (&(k, l), msgs) in &groups {
+        let by_src = plan::unique_bytes_by_src(msgs);
+        let total: usize = by_src.values().sum();
+        *vol_by_pair.entry(k).or_default().entry(l).or_default() += total;
+        vol_by_gpu_dest.insert((k, l), by_src.into_iter().collect());
+    }
+
+    // chunks per sending node, with sender-rank assignment (from the back).
+    let mut chunks_by_src_node: BTreeMap<NodeId, Vec<(plan::Chunk, ProcId)>> = BTreeMap::new();
+    for (&k, vols) in &vol_by_pair {
+        let chunks = plan::split_chunks(k, vols, strategy.message_cap, ppn);
+        let sizes: Vec<usize> = chunks.iter().map(|c| c.bytes).collect();
+        let ranks = plan::assign_ranks(&sizes, ppn, false);
+        let assigned: Vec<(plan::Chunk, ProcId)> =
+            chunks.into_iter().zip(ranks).map(|(c, r)| (c, ProcId(k.0 * ppn + r))).collect();
+        chunks_by_src_node.insert(k, assigned);
+    }
+
+    // receive-rank assignment per destination node (from the front).
+    let mut inbound: BTreeMap<NodeId, Vec<(NodeId, usize)>> = BTreeMap::new(); // dst -> [(src node, chunk bytes)] indices align with chunk lists
+    let mut recv_proc: BTreeMap<(NodeId, usize), ProcId> = BTreeMap::new(); // (src node, chunk idx) -> recv proc
+    for (&k, chunks) in &chunks_by_src_node {
+        for (i, (c, _)) in chunks.iter().enumerate() {
+            inbound.entry(c.dst_node).or_default().push((k, i));
+            let _ = i;
+        }
+    }
+    for (&l, entries) in &inbound {
+        let sizes: Vec<usize> = entries.iter().map(|&(k, i)| chunks_by_src_node[&k][i].0.bytes).collect();
+        let ranks = plan::assign_ranks(&sizes, ppn, true);
+        for (&(k, i), r) in entries.iter().zip(ranks) {
+            recv_proc.insert((k, i), ProcId(l.0 * ppn + r));
+        }
+    }
+
+    // ---- Staging copies (D2H) + delivery copies (H2D). ----
+    let mut stage_out: BTreeMap<GpuId, usize> = BTreeMap::new();
+    let mut deliver_in: BTreeMap<GpuId, usize> = BTreeMap::new();
+    for (&(_k, _l), by_src) in &vol_by_gpu_dest {
+        for &(g, b) in by_src {
+            *stage_out.entry(g).or_default() += b;
+        }
+    }
+    for msgs in groups.values() {
+        for (dst, bytes) in plan::bytes_by_dst(msgs) {
+            *deliver_in.entry(dst).or_default() += bytes;
+        }
+    }
+    // Intra-node messages: host-level local exchange concurrent with the
+    // scatter phase.
+    for (i, m) in pattern.msgs.iter().enumerate() {
+        if machine.gpu_node(m.src) == machine.gpu_node(m.dst) {
+            *stage_out.entry(m.src).or_default() += m.bytes;
+            *deliver_in.entry(m.dst).or_default() += m.bytes;
+            local_s.xfers.push(Xfer { src: Loc::Host(host(m.src)), dst: Loc::Host(host(m.dst)), bytes: m.bytes, tag: i as u32 });
+        }
+    }
+    for (&g, &bytes) in &stage_out {
+        d2h.copies.push(CopyOp { gpu: g, proc: host(g), bytes, dir: CopyKind::D2H, nprocs: ppg });
+    }
+    for (&g, &bytes) in &deliver_in {
+        h2d.copies.push(CopyOp { gpu: g, proc: host(g), bytes, dir: CopyKind::H2D, nprocs: ppg });
+    }
+
+    // ---- local_Scomm: move chunk payloads from staging procs to their
+    // assigned sender procs (greedy proration of GPU contributions over
+    // chunks, per (k,l) pair). ----
+    for (&k, chunks) in &chunks_by_src_node {
+        // walk each destination's gpu contributions against its chunks
+        let mut by_dest: BTreeMap<NodeId, Vec<(usize, plan::Chunk, ProcId)>> = BTreeMap::new();
+        for (i, &(c, p)) in chunks.iter().enumerate() {
+            by_dest.entry(c.dst_node).or_default().push((i, c, p));
+        }
+        for (&l, dest_chunks) in &by_dest {
+            let contribs = &vol_by_gpu_dest[&(k, l)];
+            let mut ci = 0usize; // chunk cursor
+            let mut chunk_rem = dest_chunks[0].1.bytes;
+            for &(g, mut b) in contribs {
+                let staging = host(g);
+                while b > 0 {
+                    let take = b.min(chunk_rem);
+                    let sender = dest_chunks[ci].2;
+                    if sender != staging {
+                        local_s.xfers.push(Xfer { src: Loc::Host(staging), dst: Loc::Host(sender), bytes: take, tag: AGG });
+                    }
+                    b -= take;
+                    chunk_rem -= take;
+                    if chunk_rem == 0 && ci + 1 < dest_chunks.len() {
+                        ci += 1;
+                        chunk_rem = dest_chunks[ci].1.bytes;
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- global_comm: one inter-node transfer per chunk. ----
+    for (&k, chunks) in &chunks_by_src_node {
+        for (i, &(c, sender)) in chunks.iter().enumerate() {
+            let recv = recv_proc[&(k, i)];
+            global.xfers.push(Xfer { src: Loc::Host(sender), dst: Loc::Host(recv), bytes: c.bytes, tag: AGG });
+        }
+    }
+
+    // ---- local_Rcomm: deliver full per-dst-GPU volumes from the chunk
+    // receive procs (greedy proration; duplicate expansion folds into the
+    // final chunk of each (k,l)). ----
+    for (&(k, l), msgs) in &groups {
+        let deliveries: Vec<(GpuId, usize)> = plan::bytes_by_dst(msgs).into_iter().collect();
+        let pair_chunks: Vec<(usize, ProcId)> = chunks_by_src_node[&k]
+            .iter()
+            .enumerate()
+            .filter(|(_, (c, _))| c.dst_node == l)
+            .map(|(i, (c, _))| (c.bytes, recv_proc[&(k, i)]))
+            .collect();
+        debug_assert!(!pair_chunks.is_empty());
+        let mut ci = 0usize;
+        let mut chunk_rem = pair_chunks[0].0;
+        for &(g, mut need) in &deliveries {
+            let dst_host = host(g);
+            while need > 0 {
+                let last = ci + 1 == pair_chunks.len();
+                let take = if last { need } else { need.min(chunk_rem) };
+                let src_proc = pair_chunks[ci].1;
+                if src_proc != dst_host {
+                    local_r.xfers.push(Xfer { src: Loc::Host(src_proc), dst: Loc::Host(dst_host), bytes: take, tag: AGG });
+                }
+                need -= take;
+                if !last {
+                    chunk_rem -= take;
+                    if chunk_rem == 0 {
+                        ci += 1;
+                        chunk_rem = pair_chunks[ci].0;
+                    }
+                }
+            }
+        }
+    }
+
+    Schedule {
+        strategy_label: strategy.label(),
+        phases: [d2h, local_s, global, local_r, h2d].into_iter().filter(|p| !p.is_empty()).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::Msg;
+    use crate::topology::machines::lassen;
+
+    fn md() -> Strategy {
+        Strategy::new(StrategyKind::SplitMd, Transport::Staged).unwrap()
+    }
+
+    fn dd() -> Strategy {
+        Strategy::new(StrategyKind::SplitDd, Transport::Staged).unwrap()
+    }
+
+    #[test]
+    fn small_volumes_conglomerate_per_node() {
+        let m = lassen(3);
+        // 6 small messages node0 -> node1, 2 -> node2; all below cap.
+        let p = CommPattern::new(vec![
+            Msg::new(GpuId(0), GpuId(4), 100),
+            Msg::new(GpuId(0), GpuId(5), 100),
+            Msg::new(GpuId(1), GpuId(6), 100),
+            Msg::new(GpuId(2), GpuId(7), 100),
+            Msg::new(GpuId(3), GpuId(8), 100),
+            Msg::new(GpuId(3), GpuId(9), 100),
+        ]);
+        let sched = schedule(md(), &m, &p);
+        assert_eq!(sched.internode_msgs(&m, 40), 2, "one conglomerated msg per dest node");
+        assert_eq!(sched.internode_bytes(&m, 40), 600);
+    }
+
+    #[test]
+    fn large_volume_splits_at_cap() {
+        let m = lassen(2);
+        let p = CommPattern::new(vec![Msg::new(GpuId(0), GpuId(4), 40_000)]);
+        let sched = schedule(md(), &m, &p);
+        // 40000 / 8192 -> 5 chunks
+        assert_eq!(sched.internode_msgs(&m, 40), 5);
+        assert_eq!(sched.internode_bytes(&m, 40), 40_000);
+        // every inter-node xfer obeys the (possibly raised) cap
+        for ph in sched.phases.iter().filter(|p| p.label == "inter-node") {
+            for x in &ph.xfers {
+                assert!(x.bytes <= 8192, "chunk {} exceeds cap", x.bytes);
+            }
+        }
+    }
+
+    #[test]
+    fn cap_raised_when_chunks_exceed_ppn() {
+        let m = lassen(2);
+        let total = 8192 * 100; // would be 100 chunks at the default cap
+        let p = CommPattern::new(vec![Msg::new(GpuId(0), GpuId(4), total)]);
+        let sched = schedule(md(), &m, &p);
+        let n = sched.internode_msgs(&m, 40);
+        assert!(n <= 40, "chunk count {n} must be <= ppn after cap raise");
+        assert_eq!(sched.internode_bytes(&m, 40), total);
+    }
+
+    #[test]
+    fn senders_spread_across_ranks() {
+        let m = lassen(2);
+        let p = CommPattern::new(vec![Msg::new(GpuId(0), GpuId(4), 8192 * 10)]);
+        let sched = schedule(md(), &m, &p);
+        let senders: std::collections::BTreeSet<_> = sched
+            .phases
+            .iter()
+            .filter(|ph| ph.label == "inter-node")
+            .flat_map(|ph| &ph.xfers)
+            .map(|x| x.src)
+            .collect();
+        assert!(senders.len() >= 5, "expected distribution across ranks, got {}", senders.len());
+    }
+
+    #[test]
+    fn dd_uses_four_proc_copies() {
+        let m = lassen(2);
+        let p = CommPattern::new(vec![Msg::new(GpuId(0), GpuId(4), 10_000)]);
+        let s_md = schedule(md(), &m, &p);
+        let s_dd = schedule(dd(), &m, &p);
+        assert!(s_md.phases[0].copies.iter().all(|c| c.nprocs == 1));
+        assert!(s_dd.phases[0].copies.iter().all(|c| c.nprocs == 4));
+    }
+
+    #[test]
+    fn dd_fewer_scatter_messages() {
+        let m = lassen(2);
+        let p = CommPattern::new(vec![Msg::new(GpuId(0), GpuId(4), 8192 * 12)]);
+        let count = |s: &Schedule| {
+            s.phases.iter().filter(|p| p.label == "local-scatter").flat_map(|p| &p.xfers).count()
+        };
+        let md_n = count(&schedule(md(), &m, &p));
+        let dd_n = count(&schedule(dd(), &m, &p));
+        // DD stages through 4 procs whose blocks already cover 4 sender
+        // ranks; scatter count should not exceed MD's.
+        assert!(dd_n <= md_n, "dd {dd_n} > md {md_n}");
+    }
+
+    #[test]
+    fn delivery_conserves_full_bytes() {
+        let m = lassen(2);
+        let mut a = Msg::new(GpuId(0), GpuId(4), 9000);
+        a.dup_group = 1;
+        let mut b = Msg::new(GpuId(0), GpuId(5), 9000);
+        b.dup_group = 1;
+        let p = CommPattern::new(vec![a, b]);
+        let sched = schedule(md(), &m, &p);
+        // network carries unique 9000; h2d delivers full 18000
+        assert_eq!(sched.internode_bytes(&m, 40), 9000);
+        let h2d: usize = sched.phases.last().unwrap().copies.iter().map(|c| c.bytes).sum();
+        assert_eq!(h2d, 18_000);
+    }
+
+    #[test]
+    fn empty_pattern() {
+        let m = lassen(2);
+        assert!(schedule(md(), &m, &CommPattern::default()).phases.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "no device-aware")]
+    fn device_aware_rejected() {
+        let m = lassen(2);
+        let bogus = Strategy { kind: StrategyKind::SplitMd, transport: Transport::DeviceAware, message_cap: 8192 };
+        schedule(bogus, &m, &CommPattern::default());
+    }
+}

@@ -1,0 +1,130 @@
+//! Standard communication (Section 2.3, Figure 2.2): every logical message
+//! travels the network individually — both redundancies intact.
+//!
+//! - **Device-aware**: one GPU→GPU transfer per message, single phase.
+//! - **Staged-through-host**: D2H copies, one host→host transfer per
+//!   message, H2D copies.
+
+use super::{CopyKind, CopyOp, Loc, Phase, Schedule, Strategy, Transport, Xfer};
+use crate::pattern::CommPattern;
+use crate::topology::Machine;
+use std::collections::BTreeMap;
+
+pub fn schedule(strategy: Strategy, machine: &Machine, pattern: &CommPattern) -> Schedule {
+    match strategy.transport {
+        Transport::DeviceAware => device_aware(strategy, pattern),
+        Transport::Staged => staged(strategy, machine, pattern),
+    }
+}
+
+fn device_aware(strategy: Strategy, pattern: &CommPattern) -> Schedule {
+    let mut phase = Phase::new("p2p");
+    for (i, m) in pattern.msgs.iter().enumerate() {
+        phase.xfers.push(Xfer { src: Loc::Gpu(m.src), dst: Loc::Gpu(m.dst), bytes: m.bytes, tag: i as u32 });
+    }
+    Schedule { strategy_label: strategy.label(), phases: vec![phase] }
+}
+
+fn staged(strategy: Strategy, machine: &Machine, pattern: &CommPattern) -> Schedule {
+    let ppg = 1;
+    let ppn = machine.gpus_per_node() * ppg;
+
+    // Phase 1: each sending GPU copies its full outgoing payload to host.
+    let mut d2h = Phase::new("d2h");
+    let mut out_bytes: BTreeMap<crate::topology::GpuId, usize> = BTreeMap::new();
+    for m in &pattern.msgs {
+        *out_bytes.entry(m.src).or_default() += m.bytes;
+    }
+    for (&g, &bytes) in &out_bytes {
+        d2h.copies.push(CopyOp { gpu: g, proc: machine.gpu_host_proc(g, ppg), bytes, dir: CopyKind::D2H, nprocs: 1 });
+    }
+
+    // Phase 2: host→host transfer per logical message.
+    let mut p2p = Phase::new("p2p");
+    for (i, m) in pattern.msgs.iter().enumerate() {
+        p2p.xfers.push(Xfer {
+            src: Loc::Host(machine.gpu_host_proc(m.src, ppg)),
+            dst: Loc::Host(machine.gpu_host_proc(m.dst, ppg)),
+            bytes: m.bytes,
+            tag: i as u32,
+        });
+    }
+
+    // Phase 3: each receiving GPU copies its inbound payload from host.
+    let mut h2d = Phase::new("h2d");
+    let mut in_bytes: BTreeMap<crate::topology::GpuId, usize> = BTreeMap::new();
+    for m in &pattern.msgs {
+        *in_bytes.entry(m.dst).or_default() += m.bytes;
+    }
+    for (&g, &bytes) in &in_bytes {
+        h2d.copies.push(CopyOp { gpu: g, proc: machine.gpu_host_proc(g, ppg), bytes, dir: CopyKind::H2D, nprocs: 1 });
+    }
+
+    let _ = ppn;
+    Schedule {
+        strategy_label: strategy.label(),
+        phases: [d2h, p2p, h2d].into_iter().filter(|p| !p.is_empty()).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::StrategyKind;
+    use crate::pattern::Msg;
+    use crate::topology::{GpuId, machines::lassen};
+
+    fn pattern() -> CommPattern {
+        CommPattern::new(vec![
+            Msg::new(GpuId(0), GpuId(4), 100),
+            Msg::new(GpuId(0), GpuId(5), 200),
+            Msg::new(GpuId(1), GpuId(4), 300),
+            Msg::new(GpuId(2), GpuId(3), 50), // intra-node
+        ])
+    }
+
+    #[test]
+    fn device_aware_one_xfer_per_msg() {
+        let m = lassen(2);
+        let s = Strategy::new(StrategyKind::Standard, Transport::DeviceAware).unwrap();
+        let sched = schedule(s, &m, &pattern());
+        assert_eq!(sched.phases.len(), 1);
+        assert_eq!(sched.phases[0].xfers.len(), 4);
+        assert_eq!(sched.total_xfer_bytes(), 650);
+        assert!(sched.phases[0].copies.is_empty());
+    }
+
+    #[test]
+    fn staged_copies_and_p2p() {
+        let m = lassen(2);
+        let s = Strategy::new(StrategyKind::Standard, Transport::Staged).unwrap();
+        let sched = schedule(s, &m, &pattern());
+        assert_eq!(sched.phases.len(), 3);
+        // d2h: gpus 0 (300 B), 1 (300 B), 2 (50 B)
+        let d2h = &sched.phases[0];
+        assert_eq!(d2h.copies.len(), 3);
+        assert_eq!(d2h.copies.iter().map(|c| c.bytes).sum::<usize>(), 650);
+        // p2p: 4 host-level transfers
+        assert_eq!(sched.phases[1].xfers.len(), 4);
+        // h2d: gpus 3,4,5 receive
+        assert_eq!(sched.phases[2].copies.len(), 3);
+        assert_eq!(sched.phases[2].copies.iter().map(|c| c.bytes).sum::<usize>(), 650);
+    }
+
+    #[test]
+    fn staged_internode_msgs_counted() {
+        let m = lassen(2);
+        let s = Strategy::new(StrategyKind::Standard, Transport::Staged).unwrap();
+        let sched = schedule(s, &m, &pattern());
+        assert_eq!(sched.internode_msgs(&m, 4), 3);
+        assert_eq!(sched.internode_bytes(&m, 4), 600);
+    }
+
+    #[test]
+    fn empty_pattern_empty_schedule() {
+        let m = lassen(2);
+        let s = Strategy::new(StrategyKind::Standard, Transport::Staged).unwrap();
+        let sched = schedule(s, &m, &CommPattern::default());
+        assert!(sched.phases.iter().all(|p| p.is_empty()));
+    }
+}

@@ -1,0 +1,238 @@
+//! 2-Step node-aware communication (Section 2.3.2, Figure 2.4).
+//!
+//! Each process sends the data needed by a receiving node directly to its
+//! *paired* process on that node (equal local rank: P0→P4, P1→P5, …), then
+//! the receiving node redistributes on-node. Duplicate data is eliminated
+//! (each process ships a given payload to a node once); message redundancy
+//! remains — every (process, destination node) pair costs one message.
+
+use super::plan::{self, group_by_node_pair};
+use super::{CopyKind, CopyOp, Loc, Phase, Schedule, Strategy, Transport, Xfer};
+use crate::pattern::{CommPattern, Msg};
+use crate::topology::{GpuId, Machine, NodeId};
+use std::collections::BTreeMap;
+
+const AGG: u32 = u32::MAX;
+
+pub fn schedule(strategy: Strategy, machine: &Machine, pattern: &CommPattern) -> Schedule {
+    let groups = group_by_node_pair(machine, pattern);
+    match strategy.transport {
+        Transport::DeviceAware => device_aware(strategy, machine, pattern, &groups),
+        Transport::Staged => staged(strategy, machine, pattern, &groups),
+    }
+}
+
+/// Unique bytes per (source GPU → destination node), the Step-1 message
+/// payloads.
+fn per_src_payloads(groups: &plan::NodePairGroups) -> BTreeMap<(GpuId, NodeId), usize> {
+    let mut out: BTreeMap<(GpuId, NodeId), usize> = BTreeMap::new();
+    for (&(_k, l), msgs) in groups {
+        for (src, bytes) in plan::unique_bytes_by_src(msgs) {
+            if bytes > 0 {
+                *out.entry((src, l)).or_default() += bytes;
+            }
+        }
+    }
+    out
+}
+
+/// The Step-2 redistribution source: payloads from node `k` land on the
+/// GPUs (or their hosts) paired with the senders; we approximate the
+/// redistribution fan-out from the *receiving pair* of each sender. For
+/// timing purposes each delivery is emitted from the paired receiver of the
+/// sender that contributed the largest share.
+fn dominant_sender(msgs: &[Msg], dst: GpuId) -> GpuId {
+    let mut by_src: BTreeMap<GpuId, usize> = BTreeMap::new();
+    for m in msgs.iter().filter(|m| m.dst == dst) {
+        *by_src.entry(m.src).or_default() += m.bytes;
+    }
+    by_src.into_iter().max_by_key(|&(src, b)| (b, std::cmp::Reverse(src.0))).map(|(s, _)| s).expect("dst present")
+}
+
+fn device_aware(
+    strategy: Strategy,
+    machine: &Machine,
+    pattern: &CommPattern,
+    groups: &plan::NodePairGroups,
+) -> Schedule {
+    let mut send = Phase::new("pair-send");
+    let mut redist = Phase::new("redistribute");
+
+    for ((src, l), bytes) in per_src_payloads(groups) {
+        let pair = plan::gpu_rank_pair(machine, src, l);
+        send.xfers.push(Xfer { src: Loc::Gpu(src), dst: Loc::Gpu(pair), bytes, tag: AGG });
+    }
+    for (&(k, _l), msgs) in groups {
+        for (dst, bytes) in plan::bytes_by_dst(msgs) {
+            if bytes == 0 {
+                continue;
+            }
+            let via = plan::gpu_rank_pair(machine, dominant_sender(msgs, dst), machine.gpu_node(dst));
+            let _ = k;
+            if via != dst {
+                redist.xfers.push(Xfer { src: Loc::Gpu(via), dst: Loc::Gpu(dst), bytes, tag: AGG });
+            }
+        }
+    }
+    for (i, m) in pattern.msgs.iter().enumerate() {
+        if machine.gpu_node(m.src) == machine.gpu_node(m.dst) {
+            send.xfers.push(Xfer { src: Loc::Gpu(m.src), dst: Loc::Gpu(m.dst), bytes: m.bytes, tag: i as u32 });
+        }
+    }
+
+    Schedule {
+        strategy_label: strategy.label(),
+        phases: [send, redist].into_iter().filter(|p| !p.is_empty()).collect(),
+    }
+}
+
+fn staged(strategy: Strategy, machine: &Machine, pattern: &CommPattern, groups: &plan::NodePairGroups) -> Schedule {
+    let ppg = 1;
+    let host = |g: GpuId| machine.gpu_host_proc(g, ppg);
+    let ppn = machine.gpus_per_node() * ppg;
+
+    let mut d2h = Phase::new("d2h");
+    let mut send = Phase::new("pair-send");
+    let mut redist = Phase::new("redistribute");
+    let mut h2d = Phase::new("h2d");
+
+    let mut stage_out: BTreeMap<GpuId, usize> = BTreeMap::new();
+    let mut deliver_in: BTreeMap<GpuId, usize> = BTreeMap::new();
+
+    for ((src, l), bytes) in per_src_payloads(groups) {
+        let pair = plan::rank_pair(machine, host(src), l, ppn);
+        send.xfers.push(Xfer { src: Loc::Host(host(src)), dst: Loc::Host(pair), bytes, tag: AGG });
+        *stage_out.entry(src).or_default() += bytes;
+    }
+    for (&(_k, _l), msgs) in groups {
+        for (dst, bytes) in plan::bytes_by_dst(msgs) {
+            if bytes == 0 {
+                continue;
+            }
+            let via = plan::rank_pair(machine, host(dominant_sender(msgs, dst)), machine.gpu_node(dst), ppn);
+            if via != host(dst) {
+                redist.xfers.push(Xfer { src: Loc::Host(via), dst: Loc::Host(host(dst)), bytes, tag: AGG });
+            }
+            *deliver_in.entry(dst).or_default() += bytes;
+        }
+    }
+    for (i, m) in pattern.msgs.iter().enumerate() {
+        if machine.gpu_node(m.src) == machine.gpu_node(m.dst) {
+            send.xfers.push(Xfer { src: Loc::Host(host(m.src)), dst: Loc::Host(host(m.dst)), bytes: m.bytes, tag: i as u32 });
+            *stage_out.entry(m.src).or_default() += m.bytes;
+            *deliver_in.entry(m.dst).or_default() += m.bytes;
+        }
+    }
+
+    for (&g, &bytes) in &stage_out {
+        d2h.copies.push(CopyOp { gpu: g, proc: host(g), bytes, dir: CopyKind::D2H, nprocs: 1 });
+    }
+    for (&g, &bytes) in &deliver_in {
+        h2d.copies.push(CopyOp { gpu: g, proc: host(g), bytes, dir: CopyKind::H2D, nprocs: 1 });
+    }
+
+    Schedule {
+        strategy_label: strategy.label(),
+        phases: [d2h, send, redist, h2d].into_iter().filter(|p| !p.is_empty()).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::StrategyKind;
+    use crate::topology::machines::lassen;
+
+    fn strat(t: Transport) -> Strategy {
+        Strategy::new(StrategyKind::TwoStep, t).unwrap()
+    }
+
+    fn pattern() -> CommPattern {
+        CommPattern::new(vec![
+            Msg::new(GpuId(0), GpuId(4), 100),
+            Msg::new(GpuId(0), GpuId(5), 200),
+            Msg::new(GpuId(1), GpuId(4), 300),
+        ])
+    }
+
+    #[test]
+    fn one_message_per_src_per_dest_node() {
+        let m = lassen(2);
+        let sched = schedule(strat(Transport::DeviceAware), &m, &pattern());
+        // GPUs 0 and 1 each send once to node 1: 2 inter-node messages
+        // (vs 3 for standard, 1 for 3-step).
+        assert_eq!(sched.internode_msgs(&m, 4), 2);
+        assert_eq!(sched.internode_bytes(&m, 4), 600);
+    }
+
+    #[test]
+    fn pairing_preserves_local_rank() {
+        let m = lassen(2);
+        let sched = schedule(strat(Transport::DeviceAware), &m, &pattern());
+        for x in &sched.phases[0].xfers {
+            if let (Loc::Gpu(s), Loc::Gpu(d)) = (x.src, x.dst) {
+                assert_eq!(m.gpu_local(s), m.gpu_local(d), "2-step pairs equal local ranks");
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_payload_sent_once_per_node() {
+        let m = lassen(2);
+        let mut a = Msg::new(GpuId(0), GpuId(4), 400);
+        a.dup_group = 9;
+        let mut b = Msg::new(GpuId(0), GpuId(5), 400);
+        b.dup_group = 9;
+        let p = CommPattern::new(vec![a, b]);
+        let sched = schedule(strat(Transport::DeviceAware), &m, &p);
+        assert_eq!(sched.internode_bytes(&m, 4), 400);
+        // redistribution still delivers 800 total on-node (one dst is the
+        // pair itself).
+        let redist: usize =
+            sched.phases.iter().filter(|p| p.label == "redistribute").flat_map(|p| &p.xfers).map(|x| x.bytes).sum();
+        assert!(redist >= 400);
+    }
+
+    #[test]
+    fn staged_copies_balance() {
+        let m = lassen(2);
+        let sched = schedule(strat(Transport::Staged), &m, &pattern());
+        let d2h: usize = sched.phases[0].copies.iter().map(|c| c.bytes).sum();
+        let h2d: usize = sched.phases.last().unwrap().copies.iter().map(|c| c.bytes).sum();
+        assert_eq!(d2h, 600);
+        assert_eq!(h2d, 600);
+    }
+
+    #[test]
+    fn two_step_more_msgs_than_three_step_fewer_than_standard() {
+        let m = lassen(2);
+        let p = CommPattern::new(vec![
+            Msg::new(GpuId(0), GpuId(4), 10),
+            Msg::new(GpuId(0), GpuId(5), 10),
+            Msg::new(GpuId(1), GpuId(6), 10),
+            Msg::new(GpuId(2), GpuId(7), 10),
+            Msg::new(GpuId(2), GpuId(4), 10),
+        ]);
+        let std_s = crate::comm::standard::schedule(
+            Strategy::new(StrategyKind::Standard, Transport::DeviceAware).unwrap(),
+            &m,
+            &p,
+        );
+        let two_s = schedule(strat(Transport::DeviceAware), &m, &p);
+        let three_s = crate::comm::three_step::schedule(
+            Strategy::new(StrategyKind::ThreeStep, Transport::DeviceAware).unwrap(),
+            &m,
+            &p,
+        );
+        let ppn = 4;
+        assert_eq!(std_s.internode_msgs(&m, ppn), 5);
+        assert_eq!(two_s.internode_msgs(&m, ppn), 3); // gpus 0,1,2 once each
+        assert_eq!(three_s.internode_msgs(&m, ppn), 1);
+    }
+
+    #[test]
+    fn empty_pattern() {
+        let m = lassen(2);
+        assert!(schedule(strat(Transport::Staged), &m, &CommPattern::default()).phases.is_empty());
+    }
+}

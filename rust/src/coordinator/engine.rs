@@ -1,0 +1,555 @@
+//! Persistent worker engine — the optimized iterative path.
+//!
+//! [`super::worker::DistSpmv::run`] spawns worker threads (and, in PJRT
+//! mode, creates a PJRT client and compiles the artifact) *per call*. For
+//! iterative workloads (power iteration, Krylov solves) that setup cost
+//! dominates. The [`Engine`] keeps workers alive across iterations:
+//!
+//! - workers are spawned once; each builds its compute backend once;
+//! - the leader drives iterations over command channels;
+//! - each iteration performs the strategy-shaped halo exchange (same
+//!   [`ExchangePlan`] data plane as the one-shot path) followed by local
+//!   compute, optionally **overlapped**: the diag (local) SpMV runs while
+//!   halo values are still in flight, then the offd product is added — the
+//!   overlap the paper points to in Section 2.3 ("Lines 2 to 4 of
+//!   Algorithm 2 can be overlapped with various pieces of the
+//!   computation").
+//!
+//! §Perf (EXPERIMENTS.md) records the before/after against the one-shot
+//! path.
+
+use super::router::{ExchangePlan, Source};
+use crate::comm::Strategy;
+use crate::sparse::csr::{Csr, Ell};
+use crate::sparse::PartitionedMatrix;
+use crate::topology::Machine;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Commands from the leader to a worker.
+enum Cmd {
+    /// Run one iteration; `new_v` replaces the worker's owned slice first.
+    Iterate { new_v: Option<Vec<f32>> },
+    Shutdown,
+}
+
+/// Per-iteration result from one worker.
+struct IterOut {
+    part: usize,
+    w_local: Vec<f32>,
+    t_exchange: f64,
+    t_compute: f64,
+}
+
+struct Packet {
+    mid: u64,
+    data: Vec<f32>,
+}
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub use_pjrt: bool,
+    pub artifacts_dir: std::path::PathBuf,
+    /// Overlap the diag SpMV with the halo exchange.
+    pub overlap: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { use_pjrt: false, artifacts_dir: "artifacts".into(), overlap: true }
+    }
+}
+
+/// Aggregate timing over an engine's lifetime.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    pub iterations: usize,
+    /// Max-over-workers, summed over iterations.
+    pub wall_exchange: f64,
+    pub wall_compute: f64,
+    /// Wall time of the exchange+compute critical path (overlap folds the
+    /// diag product into the exchange window).
+    pub wall_total: f64,
+}
+
+/// The persistent distributed-SpMV engine.
+pub struct Engine {
+    n: usize,
+    nparts: usize,
+    offsets: Vec<usize>,
+    cmd_tx: Vec<Sender<Cmd>>,
+    out_rx: Receiver<Result<IterOut>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    pub stats: EngineStats,
+}
+
+impl Engine {
+    /// Build and launch: partitions are fixed for the engine's lifetime.
+    pub fn new(
+        a: &Csr,
+        nparts: usize,
+        machine: &Machine,
+        strategy: Strategy,
+        v0: &[f32],
+        config: EngineConfig,
+    ) -> Result<Engine> {
+        anyhow::ensure!(v0.len() == a.nrows, "v0 length mismatch");
+        let pm = PartitionedMatrix::build(a, nparts);
+        let plan = Arc::new(ExchangePlan::build(&pm, machine, strategy));
+        plan.validate(&pm).map_err(|e| anyhow::anyhow!("invalid exchange plan: {e}"))?;
+
+        let mut data_tx: Vec<Sender<Packet>> = Vec::with_capacity(nparts);
+        let mut data_rx: Vec<Option<Receiver<Packet>>> = Vec::with_capacity(nparts);
+        for _ in 0..nparts {
+            let (tx, rx) = channel();
+            data_tx.push(tx);
+            data_rx.push(Some(rx));
+        }
+        let data_tx = Arc::new(data_tx);
+        let barrier = Arc::new(std::sync::Barrier::new(nparts));
+        let (out_tx, out_rx) = channel::<Result<IterOut>>();
+
+        let mut cmd_tx = Vec::with_capacity(nparts);
+        let mut handles = Vec::with_capacity(nparts);
+        let offsets = pm.partition.offsets.clone();
+        for p in 0..nparts {
+            let (ctx, crx) = channel::<Cmd>();
+            cmd_tx.push(ctx);
+            let (r0, r1) = pm.partition.range(p);
+            let blocks = &pm.parts[p];
+            let state = WorkerState {
+                part: p,
+                diag: blocks.diag.to_ell(blocks.diag.max_row_nnz().max(1)),
+                offd: blocks.offd.to_ell(blocks.offd.max_row_nnz().max(1)),
+                v_local: v0[r0..r1].to_vec(),
+                n_ghost: blocks.halo.len(),
+            };
+            let plan = Arc::clone(&plan);
+            let data_tx = Arc::clone(&data_tx);
+            let rx = data_rx[p].take().expect("one data receiver per worker");
+            let barrier = Arc::clone(&barrier);
+            let out_tx = out_tx.clone();
+            let cfg = config.clone();
+            handles.push(std::thread::spawn(move || {
+                worker_loop(state, &plan, &data_tx, rx, &barrier, crx, out_tx, cfg)
+            }));
+        }
+
+        Ok(Engine { n: a.nrows, nparts, offsets, cmd_tx, out_rx, handles, stats: EngineStats::default() })
+    }
+
+    /// Run one iteration: optionally scatter a new global vector first;
+    /// returns the assembled `w = A·v`.
+    pub fn iterate(&mut self, new_v: Option<&[f32]>) -> Result<Vec<f32>> {
+        if let Some(v) = new_v {
+            anyhow::ensure!(v.len() == self.n, "v length mismatch");
+        }
+        let t0 = Instant::now();
+        for p in 0..self.nparts {
+            let slice = new_v.map(|v| v[self.offsets[p]..self.offsets[p + 1]].to_vec());
+            self.cmd_tx[p]
+                .send(Cmd::Iterate { new_v: slice })
+                .map_err(|_| anyhow::anyhow!("worker {p} command channel closed"))?;
+        }
+        let mut parts: Vec<Option<IterOut>> = (0..self.nparts).map(|_| None).collect();
+        let mut t_ex = 0f64;
+        let mut t_cp = 0f64;
+        for _ in 0..self.nparts {
+            let out = self
+                .out_rx
+                .recv_timeout(std::time::Duration::from_secs(60))
+                .map_err(|e| anyhow::anyhow!("engine starved: {e}"))??;
+            t_ex = t_ex.max(out.t_exchange);
+            t_cp = t_cp.max(out.t_compute);
+            let p = out.part;
+            parts[p] = Some(out);
+        }
+        let mut w = Vec::with_capacity(self.n);
+        for p in parts.into_iter() {
+            w.extend(p.expect("every worker reported").w_local);
+        }
+        self.stats.iterations += 1;
+        self.stats.wall_exchange += t_ex;
+        self.stats.wall_compute += t_cp;
+        self.stats.wall_total += t0.elapsed().as_secs_f64();
+        Ok(w)
+    }
+
+    /// Power iteration driven through the persistent engine.
+    pub fn power_iterate(&mut self, v0: &[f32], iters: usize) -> Result<(Vec<f32>, f32)> {
+        let mut v = v0.to_vec();
+        let mut lambda = 0f32;
+        let mut first = true;
+        for _ in 0..iters {
+            let w = if first { self.iterate(Some(&v))? } else { self.iterate(Some(&v))? };
+            first = false;
+            lambda = w.iter().fold(0f32, |m, x| m.max(x.abs()));
+            anyhow::ensure!(lambda > 0.0, "power iteration collapsed to zero");
+            v = w.iter().map(|x| x / lambda).collect();
+        }
+        Ok((v, lambda))
+    }
+
+    /// Shut workers down and join.
+    pub fn shutdown(mut self) -> EngineStats {
+        for tx in &self.cmd_tx {
+            let _ = tx.send(Cmd::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        self.stats
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        for tx in &self.cmd_tx {
+            let _ = tx.send(Cmd::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+struct WorkerState {
+    part: usize,
+    diag: Ell,
+    offd: Ell,
+    v_local: Vec<f32>,
+    n_ghost: usize,
+}
+
+enum Backend {
+    Rust,
+    Pjrt(Box<PjrtBackend>),
+}
+
+/// PJRT backend with buffers padded once at startup.
+struct PjrtBackend {
+    exe: crate::runtime::Executable,
+    diag_vals: Vec<f32>,
+    diag_cols: Vec<i32>,
+    offd_vals: Vec<f32>,
+    offd_cols: Vec<i32>,
+    v_local_pad: Vec<f32>,
+    v_ghost_pad: Vec<f32>,
+}
+
+impl PjrtBackend {
+    fn new(dir: &std::path::Path, st: &WorkerState) -> Result<PjrtBackend> {
+        let spec = crate::runtime::fitting_spec(
+            st.diag.nrows,
+            st.diag.width.max(1),
+            st.offd.width.max(1),
+            st.n_ghost.max(1),
+        )
+        .with_context(|| {
+            format!("no artifact fits rows={} dw={} ow={} ghost={}", st.diag.nrows, st.diag.width, st.offd.width, st.n_ghost)
+        })?;
+        let rt = crate::runtime::Runtime::new(dir)?;
+        let exe = rt.load(&spec)?;
+        let pad = |e: &Ell, rows: usize, width: usize| {
+            let mut vals = vec![0f32; rows * width];
+            let mut cols = vec![0i32; rows * width];
+            for r in 0..e.nrows {
+                for k in 0..e.width {
+                    vals[r * width + k] = e.vals[r * e.width + k];
+                    cols[r * width + k] = e.cols[r * e.width + k];
+                }
+            }
+            (vals, cols)
+        };
+        let (diag_vals, diag_cols) = pad(&st.diag, spec.rows, spec.diag_width);
+        let (offd_vals, offd_cols) = pad(&st.offd, spec.rows, spec.offd_width);
+        let v_local_pad = vec![0f32; spec.rows];
+        let v_ghost_pad = vec![0f32; spec.ghost];
+        Ok(PjrtBackend { exe, diag_vals, diag_cols, offd_vals, offd_cols, v_local_pad, v_ghost_pad })
+    }
+
+    fn spmv(&mut self, v_local: &[f32], ghost: &[f32], n_out: usize) -> Result<Vec<f32>> {
+        self.v_local_pad[..v_local.len()].copy_from_slice(v_local);
+        self.v_ghost_pad[..ghost.len()].copy_from_slice(ghost);
+        let mut w = self.exe.run_spmv(
+            &self.diag_vals,
+            &self.diag_cols,
+            &self.offd_vals,
+            &self.offd_cols,
+            &self.v_local_pad,
+            &self.v_ghost_pad,
+        )?;
+        w.truncate(n_out);
+        Ok(w)
+    }
+}
+
+fn assemble(source: &Source, v_local: &[f32], buffers: &HashMap<u64, Vec<f32>>) -> Vec<f32> {
+    match source {
+        Source::Owned(locals) => locals.iter().map(|&l| v_local[l]).collect(),
+        Source::Buffers(refs) => refs.iter().map(|&(mid, off)| buffers[&mid][off]).collect(),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    mut st: WorkerState,
+    plan: &ExchangePlan,
+    data_tx: &[Sender<Packet>],
+    data_rx: Receiver<Packet>,
+    barrier: &std::sync::Barrier,
+    cmd_rx: Receiver<Cmd>,
+    out_tx: Sender<Result<IterOut>>,
+    cfg: EngineConfig,
+) {
+    // Build the compute backend ONCE (the §Perf fix: the one-shot path paid
+    // this per iteration).
+    let mut backend = if cfg.use_pjrt {
+        match PjrtBackend::new(&cfg.artifacts_dir, &st) {
+            Ok(b) => Backend::Pjrt(Box::new(b)),
+            Err(e) => {
+                let _ = out_tx.send(Err(e.context(format!("worker {} backend setup", st.part))));
+                // Still participate in barriers? No: die; leader sees the error.
+                return;
+            }
+        }
+    } else {
+        Backend::Rust
+    };
+    let mut ghost = vec![0f32; st.n_ghost];
+    let mut buffers: HashMap<u64, Vec<f32>> = HashMap::new();
+
+    while let Ok(cmd) = cmd_rx.recv() {
+        let Cmd::Iterate { new_v } = cmd else { break };
+        if let Some(v) = new_v {
+            st.v_local = v;
+        }
+        buffers.clear();
+
+        let t0 = Instant::now();
+        let mut t_compute = 0f64;
+        let mut w_diag: Option<Vec<f32>> = None;
+
+        let run = (|| -> Result<()> {
+            for (pi, phase) in plan.phases.iter().enumerate() {
+                let me = &phase[st.part];
+                for send in &me.sends {
+                    let data = assemble(&send.source, &st.v_local, &buffers);
+                    data_tx[send.to]
+                        .send(Packet { mid: send.mid, data })
+                        .map_err(|_| anyhow::anyhow!("worker {} send to {} failed", st.part, send.to))?;
+                }
+                // Overlap: after the *first* phase's sends are posted, the
+                // diag product needs no remote data — compute it while the
+                // exchange progresses (Algorithm 2 overlap).
+                if cfg.overlap && pi == 0 && w_diag.is_none() {
+                    let tc = Instant::now();
+                    w_diag = Some(match &mut backend {
+                        Backend::Rust => st.diag.spmv(&st.v_local),
+                        // PJRT artifact fuses diag+offd; compute the diag
+                        // share via the Rust kernel during overlap and use
+                        // PJRT for the fused check-free path when not
+                        // overlapping.
+                        Backend::Pjrt(_) => st.diag.spmv(&st.v_local),
+                    });
+                    t_compute += tc.elapsed().as_secs_f64();
+                }
+                let mut missing: std::collections::BTreeSet<u64> =
+                    me.recv_mids.iter().copied().filter(|mid| !buffers.contains_key(mid)).collect();
+                while !missing.is_empty() {
+                    let pkt = data_rx
+                        .recv_timeout(std::time::Duration::from_secs(30))
+                        .map_err(|e| anyhow::anyhow!("worker {} starved waiting for {missing:?}: {e}", st.part))?;
+                    missing.remove(&pkt.mid);
+                    buffers.insert(pkt.mid, pkt.data);
+                }
+            }
+            for d in &plan.deliver[st.part] {
+                ghost[d.ghost_pos] = buffers[&d.mid][d.offset];
+            }
+            barrier.wait();
+            Ok(())
+        })();
+
+        if let Err(e) = run {
+            let _ = out_tx.send(Err(e));
+            return;
+        }
+        let t_exchange = t0.elapsed().as_secs_f64() - t_compute;
+
+        let tc = Instant::now();
+        let w_local: Result<Vec<f32>> = match (&mut backend, w_diag) {
+            (Backend::Rust, Some(mut wd)) => {
+                if st.n_ghost > 0 {
+                    let wo = st.offd.spmv(&ghost);
+                    for (a, b) in wd.iter_mut().zip(&wo) {
+                        *a += b;
+                    }
+                }
+                Ok(wd)
+            }
+            (Backend::Rust, None) => {
+                let mut w = st.diag.spmv(&st.v_local);
+                if st.n_ghost > 0 {
+                    let wo = st.offd.spmv(&ghost);
+                    for (a, b) in w.iter_mut().zip(&wo) {
+                        *a += b;
+                    }
+                }
+                Ok(w)
+            }
+            (Backend::Pjrt(p), Some(mut wd)) => {
+                // overlapped diag (Rust) + offd through PJRT-padded arrays:
+                // run the fused kernel with v_local zeroed to get offd only.
+                let zeros = vec![0f32; st.v_local.len()];
+                let vg = if ghost.is_empty() { vec![0.0] } else { ghost.clone() };
+                match p.spmv(&zeros, &vg, st.diag.nrows) {
+                    Ok(wo) => {
+                        for (a, b) in wd.iter_mut().zip(&wo) {
+                            *a += b;
+                        }
+                        Ok(wd)
+                    }
+                    Err(e) => Err(e),
+                }
+            }
+            (Backend::Pjrt(p), None) => {
+                let vg = if ghost.is_empty() { vec![0.0] } else { ghost.clone() };
+                p.spmv(&st.v_local, &vg, st.diag.nrows)
+            }
+        };
+        t_compute += tc.elapsed().as_secs_f64();
+
+        match w_local {
+            Ok(w) => {
+                let _ = out_tx.send(Ok(IterOut { part: st.part, w_local: w, t_exchange, t_compute }));
+            }
+            Err(e) => {
+                let _ = out_tx.send(Err(e.context(format!("worker {} compute", st.part))));
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{StrategyKind, Transport};
+    use crate::sparse::gen;
+    use crate::topology::machines::lassen;
+    use crate::util::rng::Rng;
+
+    fn strategy(kind: StrategyKind) -> Strategy {
+        Strategy::new(kind, Transport::Staged).unwrap()
+    }
+
+    #[test]
+    fn engine_matches_oracle() {
+        let a = gen::stencil_27pt(6, 6, 6);
+        let machine = lassen(2);
+        let mut rng = Rng::new(3);
+        let v: Vec<f32> = (0..a.nrows).map(|_| rng.f64_in(-1.0, 1.0) as f32).collect();
+        for kind in StrategyKind::ALL {
+            let mut eng =
+                Engine::new(&a, 8, &machine, strategy(kind), &v, EngineConfig::default()).unwrap();
+            let w = eng.iterate(None).unwrap();
+            let expect = a.spmv(&v);
+            for (i, (x, y)) in expect.iter().zip(&w).enumerate() {
+                assert!((x - y).abs() < 1e-3, "{kind:?} row {i}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn engine_overlap_equals_no_overlap() {
+        let a = gen::stencil_27pt(6, 6, 8);
+        let machine = lassen(2);
+        let v: Vec<f32> = (0..a.nrows).map(|i| (i as f32).cos()).collect();
+        let s = strategy(StrategyKind::ThreeStep);
+        let mut e1 = Engine::new(&a, 8, &machine, s, &v, EngineConfig { overlap: true, ..Default::default() }).unwrap();
+        let mut e2 = Engine::new(&a, 8, &machine, s, &v, EngineConfig { overlap: false, ..Default::default() }).unwrap();
+        assert_eq!(e1.iterate(None).unwrap(), e2.iterate(None).unwrap());
+    }
+
+    #[test]
+    fn engine_power_iteration() {
+        let a = gen::stencil_5pt(10, 10);
+        let machine = lassen(1);
+        let v0 = vec![1f32; a.nrows];
+        let mut eng = Engine::new(&a, 4, &machine, strategy(StrategyKind::SplitMd), &v0, EngineConfig::default()).unwrap();
+        let (v, lambda) = eng.power_iterate(&v0, 40).unwrap();
+        assert!(lambda > 4.0 && lambda < 8.0, "lambda {lambda}");
+        let av = a.spmv(&v);
+        let mut resid = 0f32;
+        for (x, y) in av.iter().zip(&v) {
+            resid = resid.max((x - lambda * y).abs());
+        }
+        assert!(resid < 0.3, "residual {resid}");
+        let stats = eng.shutdown();
+        assert_eq!(stats.iterations, 40);
+        assert!(stats.wall_total > 0.0);
+    }
+
+    #[test]
+    fn engine_new_vector_scatter() {
+        let a = gen::stencil_5pt(8, 8);
+        let machine = lassen(1);
+        let v1 = vec![1f32; a.nrows];
+        let v2: Vec<f32> = (0..a.nrows).map(|i| i as f32).collect();
+        let mut eng = Engine::new(&a, 4, &machine, strategy(StrategyKind::Standard), &v1, EngineConfig::default()).unwrap();
+        let w1 = eng.iterate(None).unwrap();
+        assert_eq!(w1, a.spmv(&v1));
+        let w2 = eng.iterate(Some(&v2)).unwrap();
+        assert_eq!(w2, a.spmv(&v2));
+        // switching back works too
+        let w3 = eng.iterate(Some(&v1)).unwrap();
+        assert_eq!(w3, w1);
+    }
+
+    #[test]
+    fn engine_reuse_is_faster_than_oneshot_loop() {
+        // The §Perf claim: N iterations through the persistent engine beat
+        // N one-shot DistSpmv::run calls (thread spawn per call).
+        use crate::coordinator::{DistSpmv, SpmvConfig};
+        let a = gen::stencil_27pt(6, 6, 8);
+        let machine = lassen(2);
+        let v: Vec<f32> = (0..a.nrows).map(|i| (i as f32).sin()).collect();
+        let s = strategy(StrategyKind::SplitMd);
+        let iters = 10;
+
+        let t0 = Instant::now();
+        let mut eng = Engine::new(&a, 8, &machine, s, &v, EngineConfig::default()).unwrap();
+        for _ in 0..iters {
+            eng.iterate(None).unwrap();
+        }
+        let t_engine = t0.elapsed().as_secs_f64();
+        drop(eng);
+
+        let cfg = SpmvConfig { verify: false, ..Default::default() };
+        let d = DistSpmv::new(&a, 8, &machine, s, cfg).unwrap();
+        let t1 = Instant::now();
+        for _ in 0..iters {
+            d.run(&v, 1).unwrap();
+        }
+        let t_oneshot = t1.elapsed().as_secs_f64();
+
+        assert!(
+            t_engine < t_oneshot,
+            "persistent engine {t_engine}s should beat one-shot loop {t_oneshot}s"
+        );
+    }
+
+    #[test]
+    fn engine_rejects_bad_vector() {
+        let a = gen::stencil_5pt(8, 8);
+        let machine = lassen(1);
+        let v = vec![1f32; a.nrows];
+        let mut eng = Engine::new(&a, 4, &machine, strategy(StrategyKind::Standard), &v, EngineConfig::default()).unwrap();
+        assert!(eng.iterate(Some(&vec![1.0; 5])).is_err());
+    }
+}

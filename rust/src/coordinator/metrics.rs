@@ -1,0 +1,145 @@
+//! Lightweight metrics: named wall-clock timers and counters with per-phase
+//! breakdowns, shared across coordinator threads.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Thread-safe metrics registry.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    timers: BTreeMap<String, Vec<f64>>,
+    counters: BTreeMap<String, u64>,
+}
+
+/// RAII timer guard: records elapsed seconds on drop.
+pub struct TimerGuard<'a> {
+    metrics: &'a Metrics,
+    name: String,
+    start: Instant,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Start a named timer; elapsed time is recorded when the guard drops.
+    pub fn timer(&self, name: impl Into<String>) -> TimerGuard<'_> {
+        TimerGuard { metrics: self, name: name.into(), start: Instant::now() }
+    }
+
+    /// Record an explicit timing sample.
+    pub fn record(&self, name: &str, seconds: f64) {
+        self.inner.lock().unwrap().timers.entry(name.to_string()).or_default().push(seconds);
+    }
+
+    /// Increment a counter.
+    pub fn count(&self, name: &str, by: u64) {
+        *self.inner.lock().unwrap().counters.entry(name.to_string()).or_default() += by;
+    }
+
+    /// Sum of samples for a timer (0.0 when absent).
+    pub fn total(&self, name: &str) -> f64 {
+        self.inner.lock().unwrap().timers.get(name).map(|v| v.iter().sum()).unwrap_or(0.0)
+    }
+
+    /// Number of samples for a timer.
+    pub fn samples(&self, name: &str) -> usize {
+        self.inner.lock().unwrap().timers.get(name).map(|v| v.len()).unwrap_or(0)
+    }
+
+    /// Counter value (0 when absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Snapshot: (timer name → (count, total seconds)), (counter → value).
+    pub fn snapshot(&self) -> (BTreeMap<String, (usize, f64)>, BTreeMap<String, u64>) {
+        let inner = self.inner.lock().unwrap();
+        let timers = inner.timers.iter().map(|(k, v)| (k.clone(), (v.len(), v.iter().sum()))).collect();
+        (timers, inner.counters.clone())
+    }
+
+    /// Human-readable report.
+    pub fn report(&self) -> String {
+        let (timers, counters) = self.snapshot();
+        let mut out = String::new();
+        for (name, (n, total)) in timers {
+            out.push_str(&format!("{name}: {n} samples, total {total:.6}s, mean {:.3e}s\n", total / n.max(1) as f64));
+        }
+        for (name, v) in counters {
+            out.push_str(&format!("{name}: {v}\n"));
+        }
+        out
+    }
+}
+
+impl Drop for TimerGuard<'_> {
+    fn drop(&mut self) {
+        self.metrics.record(&self.name, self.start.elapsed().as_secs_f64());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_records_on_drop() {
+        let m = Metrics::new();
+        {
+            let _g = m.timer("phase");
+            std::hint::black_box(0);
+        }
+        assert_eq!(m.samples("phase"), 1);
+        assert!(m.total("phase") >= 0.0);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.count("msgs", 3);
+        m.count("msgs", 4);
+        assert_eq!(m.counter("msgs"), 7);
+        assert_eq!(m.counter("absent"), 0);
+    }
+
+    #[test]
+    fn snapshot_and_report() {
+        let m = Metrics::new();
+        m.record("x", 0.5);
+        m.record("x", 1.5);
+        m.count("c", 2);
+        let (timers, counters) = m.snapshot();
+        assert_eq!(timers["x"], (2, 2.0));
+        assert_eq!(counters["c"], 2);
+        assert!(m.report().contains("x: 2 samples"));
+    }
+
+    #[test]
+    fn thread_safe() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        m.count("n", 1);
+                        m.record("t", 0.001);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.counter("n"), 400);
+        assert_eq!(m.samples("t"), 400);
+    }
+}

@@ -1,0 +1,16 @@
+//! L3 coordinator: the leader/worker distributed-SpMV engine.
+//!
+//! One worker thread per simulated GPU owns that part's matrix blocks and a
+//! PJRT executable (or the in-Rust compute fallback); the leader drives
+//! iterations. Every halo exchange *really moves bytes* between workers via
+//! the strategy-shaped routing in [`router`], while the discrete-event
+//! simulator provides the Lassen-calibrated clock for the same schedule.
+
+pub mod engine;
+pub mod metrics;
+pub mod router;
+pub mod worker;
+
+pub use engine::{Engine, EngineConfig, EngineStats};
+pub use router::ExchangePlan;
+pub use worker::{DistSpmv, SpmvConfig, SpmvRunReport};

@@ -1,0 +1,499 @@
+//! The distributed-SpMV engine: per-GPU worker threads driven by a leader.
+//!
+//! Workers hold their part's diag/offd blocks (ELL) and either a PJRT
+//! executable (the AOT JAX/Pallas kernel) or the in-Rust ELL fallback.
+//! Each iteration: (1) halo exchange following the strategy's
+//! [`ExchangePlan`] — real bytes through real channels; (2) local SpMV.
+//! Wall time is measured per phase; the Lassen-calibrated simulated time of
+//! the equivalent [`crate::comm::Schedule`] is attached for reporting.
+
+use super::metrics::Metrics;
+use super::router::{Deliver, ExchangePlan, Source};
+use crate::comm::{build_schedule, Strategy, StrategyKind};
+use crate::sim::{self, SimReport};
+use crate::sparse::csr::{Csr, Ell};
+use crate::sparse::PartitionedMatrix;
+use crate::topology::Machine;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Configuration of a distributed SpMV run.
+#[derive(Clone, Debug)]
+pub struct SpmvConfig {
+    /// Bytes per communicated vector value (8 = double precision, as in the
+    /// paper's benchmarks).
+    pub elem_size: usize,
+    /// Execute local compute through the PJRT-loaded AOT artifact instead
+    /// of the in-Rust ELL kernel.
+    pub use_pjrt: bool,
+    /// Artifact directory for PJRT mode.
+    pub artifacts_dir: std::path::PathBuf,
+    /// Verify each run against the serial CSR oracle.
+    pub verify: bool,
+}
+
+impl Default for SpmvConfig {
+    fn default() -> Self {
+        SpmvConfig { elem_size: 8, use_pjrt: false, artifacts_dir: "artifacts".into(), verify: true }
+    }
+}
+
+/// Report of one distributed run.
+#[derive(Clone, Debug)]
+pub struct SpmvRunReport {
+    /// Result vector `w = A·v`.
+    pub w: Vec<f32>,
+    /// Real seconds spent in halo exchange (max over workers, summed over
+    /// iterations).
+    pub wall_exchange: f64,
+    /// Real seconds in local compute (max over workers).
+    pub wall_compute: f64,
+    /// Simulated (Lassen-calibrated) exchange seconds for one iteration.
+    pub sim_exchange_per_iter: f64,
+    /// Messages per iteration in the exchange plan.
+    pub msgs_per_iter: usize,
+    /// Oracle verification outcome (None = not requested).
+    pub verified: Option<bool>,
+    /// Max |w − oracle| when verified.
+    pub max_abs_err: f32,
+}
+
+/// One worker's static data.
+struct WorkerData {
+    part: usize,
+    diag: Ell,
+    offd: Ell,
+    v_local: Vec<f32>,
+    n_ghost: usize,
+}
+
+/// Message packet on the data plane.
+struct Packet {
+    mid: u64,
+    data: Vec<f32>,
+}
+
+/// Local compute backend.
+enum ComputeBackend {
+    Rust,
+    Pjrt(Box<PjrtCompute>),
+}
+
+/// Padded buffers + executable for PJRT execution.
+struct PjrtCompute {
+    exe: crate::runtime::Executable,
+    diag_vals: Vec<f32>,
+    diag_cols: Vec<i32>,
+    offd_vals: Vec<f32>,
+    offd_cols: Vec<i32>,
+    rows: usize,
+    ghost: usize,
+}
+
+impl PjrtCompute {
+    /// Pad the worker's ELL blocks to the artifact's static shapes.
+    fn new(artifacts_dir: &std::path::Path, wd: &WorkerData) -> Result<PjrtCompute> {
+        let spec = crate::runtime::fitting_spec(
+            wd.diag.nrows,
+            wd.diag.width.max(1),
+            wd.offd.width.max(1),
+            wd.n_ghost.max(1),
+        )
+        .with_context(|| {
+            format!(
+                "no artifact fits rows={} dw={} ow={} ghost={}",
+                wd.diag.nrows, wd.diag.width, wd.offd.width, wd.n_ghost
+            )
+        })?;
+        let rt = crate::runtime::Runtime::new(artifacts_dir)?;
+        let exe = rt.load(&spec)?;
+        let pad_ell = |e: &Ell, rows: usize, width: usize| -> (Vec<f32>, Vec<i32>) {
+            let mut vals = vec![0f32; rows * width];
+            let mut cols = vec![0i32; rows * width];
+            for r in 0..e.nrows {
+                for k in 0..e.width {
+                    vals[r * width + k] = e.vals[r * e.width + k];
+                    cols[r * width + k] = e.cols[r * e.width + k];
+                }
+            }
+            (vals, cols)
+        };
+        let (diag_vals, diag_cols) = pad_ell(&wd.diag, spec.rows, spec.diag_width);
+        let (offd_vals, offd_cols) = pad_ell(&wd.offd, spec.rows, spec.offd_width);
+        let (rows, ghost) = (spec.rows, spec.ghost);
+        Ok(PjrtCompute { exe, diag_vals, diag_cols, offd_vals, offd_cols, rows, ghost })
+    }
+
+    fn spmv(&self, v_local: &[f32], ghost: &[f32], n_out: usize) -> Result<Vec<f32>> {
+        let mut vl = vec![0f32; self.rows];
+        vl[..v_local.len()].copy_from_slice(v_local);
+        let mut vg = vec![0f32; self.ghost];
+        vg[..ghost.len()].copy_from_slice(ghost);
+        let mut w = self.exe.run_spmv(&self.diag_vals, &self.diag_cols, &self.offd_vals, &self.offd_cols, &vl, &vg)?;
+        w.truncate(n_out);
+        Ok(w)
+    }
+}
+
+/// A distributed SpMV instance: matrix partitioned, plan compiled,
+/// simulated clock attached.
+pub struct DistSpmv {
+    pub machine: Machine,
+    pub strategy: Strategy,
+    pub pm: Arc<PartitionedMatrix>,
+    pub plan: Arc<ExchangePlan>,
+    pub sim_report: SimReport,
+    config: SpmvConfig,
+    oracle: Option<Csr>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl DistSpmv {
+    /// Partition `a` across `nparts` GPUs of `machine` and compile the
+    /// exchange plan for `strategy`.
+    pub fn new(a: &Csr, nparts: usize, machine: &Machine, strategy: Strategy, config: SpmvConfig) -> Result<DistSpmv> {
+        anyhow::ensure!(nparts <= machine.total_gpus(), "{nparts} parts exceed {} GPUs", machine.total_gpus());
+        let pm = PartitionedMatrix::build(a, nparts);
+        let plan = ExchangePlan::build(&pm, machine, strategy);
+        plan.validate(&pm).map_err(|e| anyhow::anyhow!("invalid exchange plan: {e}"))?;
+
+        let pattern = pm.comm_pattern(machine, config.elem_size);
+        let schedule = build_schedule(strategy, machine, &pattern);
+        let ppn = match strategy.kind {
+            StrategyKind::SplitMd | StrategyKind::SplitDd => machine.cores_per_node(),
+            _ => machine.gpus_per_node() * strategy.kind.ppg(),
+        };
+        let sim_report = sim::run(machine, &crate::params::lassen_params(), &schedule, ppn);
+
+        let oracle = if config.verify { Some(a.clone()) } else { None };
+        Ok(DistSpmv {
+            machine: machine.clone(),
+            strategy,
+            pm: Arc::new(pm),
+            plan: Arc::new(plan),
+            sim_report,
+            config,
+            oracle,
+            metrics: Arc::new(Metrics::new()),
+        })
+    }
+
+    /// Run `iters` iterations of `w = A·v` with fixed `v` (the Section 5
+    /// benchmark mode: the same communication pattern exercised
+    /// repeatedly). Returns the assembled result and timing report.
+    pub fn run(&self, v: &[f32], iters: usize) -> Result<SpmvRunReport> {
+        anyhow::ensure!(v.len() == self.pm.partition.n, "v length mismatch");
+        anyhow::ensure!(iters >= 1);
+        let nparts = self.pm.partition.nparts();
+
+        let mut worker_data = Vec::with_capacity(nparts);
+        for p in 0..nparts {
+            let (r0, r1) = self.pm.partition.range(p);
+            let blocks = &self.pm.parts[p];
+            worker_data.push(WorkerData {
+                part: p,
+                diag: blocks.diag.to_ell(blocks.diag.max_row_nnz().max(1)),
+                offd: blocks.offd.to_ell(blocks.offd.max_row_nnz().max(1)),
+                v_local: v[r0..r1].to_vec(),
+                n_ghost: blocks.halo.len(),
+            });
+        }
+
+        let mut senders: Vec<Sender<Packet>> = Vec::with_capacity(nparts);
+        let mut receivers: Vec<Option<Receiver<Packet>>> = Vec::with_capacity(nparts);
+        for _ in 0..nparts {
+            let (tx, rx) = channel::<Packet>();
+            senders.push(tx);
+            receivers.push(Some(rx));
+        }
+        let senders = Arc::new(senders);
+        // Iteration barrier: message ids repeat every iteration, so a fast
+        // worker must not launch iteration k+1 sends while a peer still
+        // waits on iteration k (it would consume the id early and starve).
+        let barrier = Arc::new(std::sync::Barrier::new(nparts));
+
+        let mut outcomes: Vec<Result<(Vec<f32>, f64, f64)>> = Vec::with_capacity(nparts);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(nparts);
+            for wd in worker_data {
+                let plan = Arc::clone(&self.plan);
+                let senders = Arc::clone(&senders);
+                let rx = receivers[wd.part].take().expect("one receiver per worker");
+                let barrier = Arc::clone(&barrier);
+                let use_pjrt = self.config.use_pjrt;
+                let dir = self.config.artifacts_dir.clone();
+                handles.push(scope.spawn(move || worker_main(wd, &plan, &senders, rx, &barrier, iters, use_pjrt, &dir)));
+            }
+            for h in handles {
+                outcomes.push(h.join().expect("worker panicked"));
+            }
+        });
+
+        // Surface root-cause errors first: a worker that fails setup (e.g.
+        // no artifact fits) makes its peers die with send/starvation
+        // errors; report the setup failure, not the symptom.
+        if outcomes.iter().any(|o| o.is_err()) {
+            let mut errs: Vec<String> = outcomes.iter().filter_map(|o| o.as_ref().err()).map(|e| format!("{e:#}")).collect();
+            errs.sort_by_key(|e| e.contains("send to") || e.contains("starved"));
+            anyhow::bail!("distributed run failed: {}", errs.join(" | "));
+        }
+        let mut w = Vec::with_capacity(self.pm.partition.n);
+        let mut wall_exchange = 0f64;
+        let mut wall_compute = 0f64;
+        for out in outcomes {
+            let (w_local, t_ex, t_cp) = out?;
+            w.extend(w_local);
+            wall_exchange = wall_exchange.max(t_ex);
+            wall_compute = wall_compute.max(t_cp);
+        }
+        self.metrics.record("run.exchange", wall_exchange);
+        self.metrics.record("run.compute", wall_compute);
+
+        let (verified, max_abs_err) = match &self.oracle {
+            Some(a) => {
+                let expect = a.spmv(v);
+                let mut max_err = 0f32;
+                for (x, y) in expect.iter().zip(&w) {
+                    max_err = max_err.max((x - y).abs());
+                }
+                let scale = expect.iter().fold(1f32, |m, x| m.max(x.abs()));
+                (Some(max_err <= 1e-4 * scale), max_err)
+            }
+            None => (None, 0.0),
+        };
+
+        Ok(SpmvRunReport {
+            w,
+            wall_exchange,
+            wall_compute,
+            sim_exchange_per_iter: self.sim_report.total,
+            msgs_per_iter: self.plan.total_msgs(),
+            verified,
+            max_abs_err,
+        })
+    }
+
+    /// Power iteration: `iters` steps of `v ← A·v / ‖A·v‖∞` — the e2e
+    /// workload. Returns (final vector, dominant-eigenvalue estimate,
+    /// per-iteration reports' aggregate wall times).
+    pub fn power_iterate(&self, v0: &[f32], iters: usize) -> Result<(Vec<f32>, f32, f64, f64)> {
+        let mut v = v0.to_vec();
+        let mut lambda = 0f32;
+        let mut t_ex = 0f64;
+        let mut t_cp = 0f64;
+        for _ in 0..iters {
+            let rep = self.run(&v, 1)?;
+            if let Some(false) = rep.verified {
+                anyhow::bail!("verification failed during power iteration (max err {})", rep.max_abs_err);
+            }
+            lambda = rep.w.iter().fold(0f32, |m, x| m.max(x.abs()));
+            anyhow::ensure!(lambda > 0.0, "power iteration collapsed to zero");
+            v = rep.w.iter().map(|x| x / lambda).collect();
+            t_ex += rep.wall_exchange;
+            t_cp += rep.wall_compute;
+        }
+        Ok((v, lambda, t_ex, t_cp))
+    }
+
+    /// Total halo values exchanged per iteration.
+    pub fn halo_values(&self) -> usize {
+        self.pm.total_halo()
+    }
+}
+
+fn assemble(source: &Source, v_local: &[f32], buffers: &HashMap<u64, Vec<f32>>) -> Vec<f32> {
+    match source {
+        Source::Owned(locals) => locals.iter().map(|&l| v_local[l]).collect(),
+        Source::Buffers(refs) => refs.iter().map(|&(mid, off)| buffers[&mid][off]).collect(),
+    }
+}
+
+fn deliver_ghost(deliveries: &[Deliver], buffers: &HashMap<u64, Vec<f32>>, ghost: &mut [f32]) {
+    for d in deliveries {
+        ghost[d.ghost_pos] = buffers[&d.mid][d.offset];
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_main(
+    wd: WorkerData,
+    plan: &ExchangePlan,
+    senders: &[Sender<Packet>],
+    rx: Receiver<Packet>,
+    barrier: &std::sync::Barrier,
+    iters: usize,
+    use_pjrt: bool,
+    artifacts_dir: &std::path::Path,
+) -> Result<(Vec<f32>, f64, f64)> {
+    let backend = if use_pjrt {
+        ComputeBackend::Pjrt(Box::new(PjrtCompute::new(artifacts_dir, &wd)?))
+    } else {
+        ComputeBackend::Rust
+    };
+    let mut ghost = vec![0f32; wd.n_ghost];
+    let mut buffers: HashMap<u64, Vec<f32>> = HashMap::new();
+    let mut t_exchange = 0f64;
+    let mut t_compute = 0f64;
+    let mut w_local: Vec<f32> = Vec::new();
+
+    for _iter in 0..iters {
+        buffers.clear();
+        let t0 = Instant::now();
+        for phase in &plan.phases {
+            let me = &phase[wd.part];
+            for send in &me.sends {
+                let data = assemble(&send.source, &wd.v_local, &buffers);
+                senders[send.to]
+                    .send(Packet { mid: send.mid, data })
+                    .map_err(|_| anyhow::anyhow!("worker {} send to {} failed", wd.part, send.to))?;
+            }
+            // Collect this phase's expected messages (packets from later
+            // phases cannot arrive before we send ours, but packets for
+            // *this* phase may interleave arbitrarily).
+            let mut missing: std::collections::BTreeSet<u64> =
+                me.recv_mids.iter().copied().filter(|mid| !buffers.contains_key(mid)).collect();
+            while !missing.is_empty() {
+                let pkt = rx
+                    .recv_timeout(std::time::Duration::from_secs(30))
+                    .map_err(|e| anyhow::anyhow!("worker {} starved waiting for {missing:?}: {e}", wd.part))?;
+                missing.remove(&pkt.mid);
+                buffers.insert(pkt.mid, pkt.data);
+            }
+        }
+        deliver_ghost(&plan.deliver[wd.part], &buffers, &mut ghost);
+        barrier.wait(); // see barrier comment in DistSpmv::run
+        t_exchange += t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        w_local = match &backend {
+            ComputeBackend::Rust => {
+                let mut w = wd.diag.spmv(&wd.v_local);
+                if wd.n_ghost > 0 {
+                    let wo = wd.offd.spmv(&ghost);
+                    for (a, b) in w.iter_mut().zip(&wo) {
+                        *a += b;
+                    }
+                }
+                w
+            }
+            ComputeBackend::Pjrt(p) => {
+                // The artifact computes diag·v_local + offd·v_ghost in one
+                // fused kernel; ghost padding slots are zero so they
+                // contribute nothing.
+                let mut vg = ghost.clone();
+                if vg.is_empty() {
+                    vg = vec![0.0];
+                }
+                p.spmv(&wd.v_local, &vg, wd.diag.nrows)?
+            }
+        };
+        t_compute += t1.elapsed().as_secs_f64();
+    }
+
+    Ok((w_local, t_exchange, t_compute))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Transport;
+    use crate::sparse::gen;
+    use crate::topology::machines::lassen;
+    use crate::util::rng::Rng;
+
+    fn random_v(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.f64_in(-1.0, 1.0) as f32).collect()
+    }
+
+    fn all_strategies() -> Vec<Strategy> {
+        vec![
+            Strategy::new(StrategyKind::Standard, Transport::Staged).unwrap(),
+            Strategy::new(StrategyKind::TwoStep, Transport::Staged).unwrap(),
+            Strategy::new(StrategyKind::ThreeStep, Transport::Staged).unwrap(),
+            Strategy::new(StrategyKind::SplitMd, Transport::Staged).unwrap(),
+            Strategy::new(StrategyKind::SplitDd, Transport::Staged).unwrap(),
+        ]
+    }
+
+    #[test]
+    fn distributed_matches_oracle_all_strategies() {
+        let a = gen::stencil_27pt(6, 6, 6);
+        let machine = lassen(2);
+        let v = random_v(a.nrows, 7);
+        for s in all_strategies() {
+            let d = DistSpmv::new(&a, 8, &machine, s, SpmvConfig::default()).unwrap();
+            let rep = d.run(&v, 1).unwrap();
+            assert_eq!(rep.verified, Some(true), "{}: max err {}", s.label(), rep.max_abs_err);
+        }
+    }
+
+    #[test]
+    fn arrow_matrix_heavy_duplicates_verified() {
+        let mut rng = Rng::new(3);
+        let a = gen::arrow(320, 16, 4, &mut rng);
+        let machine = lassen(2);
+        let v = random_v(a.nrows, 11);
+        for s in all_strategies() {
+            let d = DistSpmv::new(&a, 8, &machine, s, SpmvConfig::default()).unwrap();
+            let rep = d.run(&v, 1).unwrap();
+            assert_eq!(rep.verified, Some(true), "{}: max err {}", s.label(), rep.max_abs_err);
+        }
+    }
+
+    #[test]
+    fn multiple_iterations_accumulate_time() {
+        let a = gen::stencil_5pt(16, 16);
+        let machine = lassen(1);
+        let v = random_v(a.nrows, 5);
+        let d = DistSpmv::new(&a, 4, &machine, all_strategies()[0], SpmvConfig::default()).unwrap();
+        let r1 = d.run(&v, 1).unwrap();
+        let r3 = d.run(&v, 3).unwrap();
+        assert_eq!(r1.w, r3.w, "fixed-v iterations must be idempotent");
+        assert!(r3.wall_exchange >= r1.wall_exchange * 0.5);
+    }
+
+    #[test]
+    fn sim_report_attached() {
+        let a = gen::stencil_27pt(4, 4, 8);
+        let machine = lassen(2);
+        let d = DistSpmv::new(&a, 8, &machine, all_strategies()[2], SpmvConfig::default()).unwrap();
+        assert!(d.sim_report.total > 0.0);
+        assert!(d.sim_report.internode_msgs > 0);
+    }
+
+    #[test]
+    fn power_iteration_converges_on_spd() {
+        let a = gen::stencil_5pt(8, 8);
+        let machine = lassen(1);
+        let d = DistSpmv::new(&a, 4, &machine, all_strategies()[0], SpmvConfig::default()).unwrap();
+        let v0 = vec![1f32; a.nrows];
+        let (v, lambda, _, _) = d.power_iterate(&v0, 30).unwrap();
+        // 2D Laplacian dominant eigenvalue < 8, > 4; residual small-ish.
+        assert!(lambda > 4.0 && lambda < 8.0, "lambda {lambda}");
+        let av = a.spmv(&v);
+        let mut resid = 0f32;
+        for (x, y) in av.iter().zip(&v) {
+            resid = resid.max((x - lambda * y).abs());
+        }
+        assert!(resid < 0.5, "residual {resid}");
+    }
+
+    #[test]
+    fn mismatched_v_rejected() {
+        let a = gen::stencil_5pt(8, 8);
+        let machine = lassen(1);
+        let d = DistSpmv::new(&a, 4, &machine, all_strategies()[0], SpmvConfig::default()).unwrap();
+        assert!(d.run(&vec![0f32; 3], 1).is_err());
+    }
+
+    #[test]
+    fn too_many_parts_rejected() {
+        let a = gen::stencil_5pt(8, 8);
+        let machine = lassen(1); // 4 GPUs
+        assert!(DistSpmv::new(&a, 8, &machine, all_strategies()[0], SpmvConfig::default()).is_err());
+    }
+}

@@ -1,0 +1,53 @@
+//! # hetcomm
+//!
+//! Node-aware strategies for irregular point-to-point communication on
+//! heterogeneous architectures — a full reproduction of Lockhart, Bienz,
+//! Gropp & Olson (2022).
+//!
+//! The crate is organised in layers, bottom-up:
+//!
+//! - [`util`] — in-tree substrates (PRNG, CLI, config, stats, property
+//!   testing) for the offline build environment.
+//! - [`topology`] — machine descriptions (nodes, sockets, GPUs, NIC) for
+//!   Lassen-like and exascale-like systems.
+//! - [`params`] — the paper's measured modeling parameters (Tables 2–4):
+//!   latency/bandwidth per locality and MPI protocol, memcpy costs, and the
+//!   NIC injection-bandwidth limit, plus least-squares fitting.
+//! - [`model`] — the closed-form performance models: postal (Eq. 2.1),
+//!   max-rate (Eq. 2.2), on-node (4.1–4.2), off-node (4.3–4.4), copy (4.5)
+//!   and the composite strategy models of Table 6.
+//! - [`pattern`] — irregular communication patterns (who sends what to whom)
+//!   and the scenario generators behind Figure 4.3.
+//! - [`comm`] — the five communication strategies (Table 5) as message
+//!   *schedule* generators: Standard, 3-Step, 2-Step, Split+MD, Split+DD,
+//!   each staged-through-host and (where applicable) device-aware;
+//!   Algorithms 1–2 live in [`comm::split`].
+//! - [`sim`] — the discrete-event cluster simulator that stands in for the
+//!   Lassen testbed: it executes schedules against the measured parameters,
+//!   including max-rate NIC injection sharing.
+//! - [`sparse`] — CSR/ELL sparse matrices, Matrix Market I/O, structured
+//!   generators and SuiteSparse structural proxies, and the row-wise
+//!   partitioner that induces the SpMV communication patterns.
+//! - [`runtime`] — PJRT wrapper loading the AOT-compiled JAX/Pallas SpMV
+//!   artifacts (HLO text) produced by `python/compile/aot.py`.
+//! - [`coordinator`] — the leader/worker distributed SpMV engine: real data
+//!   plane (bytes actually move between per-GPU workers), simulated clock
+//!   (the paper's measured constants cost every transfer).
+//! - [`bench`] — the in-tree benchmark harness used by `rust/benches/*`.
+
+pub mod bench;
+pub mod comm;
+pub mod coordinator;
+pub mod model;
+pub mod params;
+pub mod pattern;
+pub mod runtime;
+pub mod sim;
+pub mod sparse;
+pub mod topology;
+pub mod util;
+
+pub use comm::{Schedule, Strategy, StrategyKind, Transport};
+pub use params::{MachineParams, Protocol};
+pub use pattern::CommPattern;
+pub use topology::{Locality, Machine};

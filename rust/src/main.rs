@@ -1,0 +1,383 @@
+//! `hetcomm` launcher — CLI front end over the library.
+//!
+//! Subcommands:
+//! - `params`   — print the measured Lassen parameter tables (Tables 2–4);
+//! - `model`    — evaluate the Table 6 models for a scenario (Figure 4.3);
+//! - `sweep`    — sweep message sizes × strategies, model + simulator;
+//! - `spmv`     — run the distributed SpMV benchmark on a matrix proxy;
+//! - `validate` — compare model predictions against simulated SpMV
+//!   communication (Figure 4.2);
+//! - `e2e`      — run the end-to-end power iteration through PJRT.
+
+use hetcomm::bench::{fmt_secs, Table};
+use hetcomm::comm::{Strategy, StrategyKind, Transport};
+use hetcomm::coordinator::{DistSpmv, SpmvConfig};
+use hetcomm::model::StrategyModel;
+use hetcomm::params::lassen_params;
+use hetcomm::pattern::generators::Scenario;
+use hetcomm::sparse::{suite, PartitionedMatrix};
+use hetcomm::topology::machines;
+use hetcomm::util::cli::Cli;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let sub = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if args.is_empty() { &[] } else { &args[1..] };
+    let code = match sub {
+        "params" => cmd_params(),
+        "model" => cmd_model(rest),
+        "sweep" => cmd_sweep(rest),
+        "spmv" => cmd_spmv(rest),
+        "validate" => cmd_validate(rest),
+        "study" => cmd_study(rest),
+        "e2e" => cmd_e2e(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            0
+        }
+        other => {
+            eprintln!("unknown subcommand {other:?}\n");
+            print_help();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "hetcomm — node-aware irregular P2P communication on heterogeneous architectures
+
+USAGE: hetcomm <SUBCOMMAND> [FLAGS]
+
+SUBCOMMANDS:
+  params     print the measured Lassen parameter tables (Tables 2-4)
+  model      evaluate the Table 6 strategy models for a scenario
+  sweep      sweep message sizes x strategies (model + simulator)
+  spmv       distributed SpMV communication benchmark (SuiteSparse proxies)
+  validate   model-vs-simulation comparison (Figure 4.2)
+  study      Section 6 outlook: strategy winners on future machines
+  e2e        end-to-end power iteration through the PJRT artifact
+  help       this text
+
+Run `hetcomm <SUBCOMMAND> --help` for flags."
+    );
+}
+
+fn cmd_params() -> i32 {
+    let p = lassen_params();
+    let mut t = Table::new("Table 2 — inter-CPU / inter-GPU messaging parameters (Lassen)", &[
+        "path", "protocol", "alpha[s]", "beta[s/B]",
+    ]);
+    use hetcomm::params::Protocol::*;
+    use hetcomm::topology::Locality::*;
+    for (proto, name) in [(Short, "short"), (Eager, "eager"), (Rendezvous, "rend")] {
+        for loc in [OnSocket, OnNode, OffNode] {
+            let ab = p.cpu_ab(proto, loc);
+            t.row(vec![format!("CPU {loc}"), name.into(), format!("{:.2e}", ab.alpha), format!("{:.2e}", ab.beta)]);
+        }
+    }
+    for (proto, name) in [(Eager, "eager"), (Rendezvous, "rend")] {
+        for loc in [OnSocket, OnNode, OffNode] {
+            let ab = p.gpu_ab(proto, loc);
+            t.row(vec![format!("GPU {loc}"), name.into(), format!("{:.2e}", ab.alpha), format!("{:.2e}", ab.beta)]);
+        }
+    }
+    t.print();
+
+    let mut t3 = Table::new("Table 3 — cudaMemcpyAsync parameters", &["procs", "dir", "alpha[s]", "beta[s/B]"]);
+    use hetcomm::params::CopyDir::*;
+    for (np, label) in [(1usize, "1"), (4, "4")] {
+        for (dir, dl) in [(H2D, "H2D"), (D2H, "D2H")] {
+            let ab = p.memcpy_ab(dir, np);
+            t3.row(vec![label.into(), dl.into(), format!("{:.2e}", ab.alpha), format!("{:.2e}", ab.beta)]);
+        }
+    }
+    t3.print();
+    println!("\nTable 4 — injection bandwidth: 1/R_N = {:.2e} s/B (R_N = {:.3e} B/s)", p.inv_rn, p.rn());
+    0
+}
+
+fn cmd_model(argv: &[String]) -> i32 {
+    let cli = Cli::new("hetcomm model", "evaluate the Table 6 models for one scenario")
+        .flag("msgs", "256", "inter-node messages from the sending node")
+        .flag("size", "2048", "bytes per message")
+        .flag("dest", "16", "destination node count")
+        .flag("dup", "0.0", "duplicate-data fraction removed by node-aware strategies")
+        .flag("nodes", "32", "cluster node count");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{}", e.0);
+            return 2;
+        }
+    };
+    let machine = machines::lassen(a.get_usize("nodes").unwrap());
+    let params = lassen_params();
+    let sc = Scenario {
+        n_msgs: a.get_usize("msgs").unwrap(),
+        msg_size: a.get_usize("size").unwrap(),
+        n_dest: a.get_usize("dest").unwrap(),
+        dup_frac: a.get_f64("dup").unwrap(),
+    };
+    let inputs = sc.inputs(&machine, machine.cores_per_node());
+    let sm = StrategyModel::new(&machine, &params);
+    let mut t = Table::new(
+        format!("Modeled time: {} msgs x {} B to {} nodes (dup {:.0}%)", sc.n_msgs, sc.msg_size, sc.n_dest, sc.dup_frac * 100.0),
+        &["strategy", "modeled[s]"],
+    );
+    let mut best: Option<(String, f64)> = None;
+    for (s, secs) in sm.all_times(&inputs) {
+        t.row(vec![s.label(), fmt_secs(secs)]);
+        if best.as_ref().map(|b| secs < b.1).unwrap_or(true) {
+            best = Some((s.label(), secs));
+        }
+    }
+    t.print();
+    let (label, secs) = best.unwrap();
+    println!("\nfastest: {label} ({})", fmt_secs(secs));
+    0
+}
+
+fn cmd_sweep(argv: &[String]) -> i32 {
+    let cli = Cli::new("hetcomm sweep", "message-size sweep across strategies (model)")
+        .flag("msgs", "256", "inter-node messages")
+        .flag("dest", "16", "destination nodes")
+        .flag("sizes", "2^4,2^6,2^8,2^10,2^12,2^14,2^16,2^18,2^20", "comma list of sizes (supports 2^k)")
+        .flag("nodes", "32", "cluster nodes");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{}", e.0);
+            return 2;
+        }
+    };
+    let machine = machines::lassen(a.get_usize("nodes").unwrap());
+    let params = lassen_params();
+    let sm = StrategyModel::new(&machine, &params);
+    let strategies = Strategy::all();
+    let mut header: Vec<String> = vec!["size[B]".into()];
+    header.extend(strategies.iter().map(|s| s.label()));
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new("Model sweep", &hdr);
+    for size in a.get_usize_list("sizes").unwrap() {
+        let sc = Scenario {
+            n_msgs: a.get_usize("msgs").unwrap(),
+            msg_size: size,
+            n_dest: a.get_usize("dest").unwrap(),
+            dup_frac: 0.0,
+        };
+        let inputs = sc.inputs(&machine, machine.cores_per_node());
+        let mut row = vec![size.to_string()];
+        row.extend(strategies.iter().map(|&s| fmt_secs(sm.time(s, &inputs))));
+        t.row(row);
+    }
+    t.print();
+    0
+}
+
+fn cmd_spmv(argv: &[String]) -> i32 {
+    let cli = Cli::new("hetcomm spmv", "distributed SpMV communication benchmark")
+        .flag("matrix", "audikw_1", "SuiteSparse matrix name (proxy)")
+        .flag("scale", "64", "row divisor for the proxy")
+        .flag("gpus", "8", "partition count")
+        .flag("nodes", "2", "cluster nodes")
+        .flag("iters", "3", "repetitions")
+        .switch("pjrt", "run local compute through the PJRT artifact");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{}", e.0);
+            return 2;
+        }
+    };
+    let Some(info) = suite::info(a.get("matrix")) else {
+        eprintln!("unknown matrix {:?}; known: {:?}", a.get("matrix"), suite::MATRICES.map(|m| m.name));
+        return 2;
+    };
+    let mat = suite::proxy(info, a.get_usize("scale").unwrap());
+    let machine = machines::lassen(a.get_usize("nodes").unwrap());
+    let gpus = a.get_usize("gpus").unwrap();
+    println!("matrix {} proxy: {} rows, {} nnz over {gpus} GPUs", info.name, mat.nrows, mat.nnz());
+
+    let mut v = vec![0f32; mat.nrows];
+    for (i, x) in v.iter_mut().enumerate() {
+        *x = ((i % 17) as f32 - 8.0) / 8.0;
+    }
+    let cfg = SpmvConfig { use_pjrt: a.get_bool("pjrt"), ..Default::default() };
+    let mut t = Table::new(
+        format!("SpMV comm: {} ({} GPUs)", info.name, gpus),
+        &["strategy", "sim[s]", "wall-ex[s]", "msgs", "verified"],
+    );
+    for s in Strategy::all().into_iter().filter(|s| s.transport == Transport::Staged || s.kind != StrategyKind::Standard) {
+        // Data-plane execution is transport-agnostic; run each kind once
+        // (staged) and report the simulated time for the exact transport.
+        if s.transport == Transport::DeviceAware {
+            continue;
+        }
+        match DistSpmv::new(&mat, gpus, &machine, s, cfg.clone()) {
+            Ok(d) => match d.run(&v, a.get_usize("iters").unwrap()) {
+                Ok(rep) => t.row(vec![
+                    s.label(),
+                    fmt_secs(rep.sim_exchange_per_iter),
+                    fmt_secs(rep.wall_exchange),
+                    rep.msgs_per_iter.to_string(),
+                    format!("{:?}", rep.verified),
+                ]),
+                Err(e) => t.row(vec![s.label(), format!("run error: {e}"), String::new(), String::new(), String::new()]),
+            },
+            Err(e) => t.row(vec![s.label(), format!("setup error: {e}"), String::new(), String::new(), String::new()]),
+        }
+    }
+    t.print();
+    0
+}
+
+fn cmd_validate(argv: &[String]) -> i32 {
+    let cli = Cli::new("hetcomm validate", "model vs simulated SpMV communication (Figure 4.2)")
+        .flag("scale", "64", "proxy scale")
+        .flag("gpus", "16", "partition count")
+        .flag("nodes", "4", "cluster nodes");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{}", e.0);
+            return 2;
+        }
+    };
+    let info = suite::info("audikw_1").unwrap();
+    let mat = suite::proxy(info, a.get_usize("scale").unwrap());
+    let machine = machines::lassen(a.get_usize("nodes").unwrap());
+    let params = lassen_params();
+    let gpus = a.get_usize("gpus").unwrap();
+    let pm = PartitionedMatrix::build(&mat, gpus);
+    let pattern = pm.comm_pattern(&machine, 8);
+    let dup = pattern.duplicate_fraction(&machine);
+    let sm = StrategyModel::new(&machine, &params);
+
+    let mut t = Table::new(
+        format!("Model validation: audikw_1 proxy on {gpus} GPUs (dup {:.1}%)", dup * 100.0),
+        &["strategy", "model[s]", "simulated[s]", "ratio"],
+    );
+    for s in Strategy::all() {
+        let ppn = match s.kind {
+            StrategyKind::SplitMd | StrategyKind::SplitDd => machine.cores_per_node(),
+            _ => machine.gpus_per_node(),
+        };
+        let inputs = pattern.model_inputs(&machine, ppn, dup);
+        let model = sm.time(s, &inputs);
+        let sched = hetcomm::comm::build_schedule(s, &machine, &pattern);
+        let simd = hetcomm::sim::run(&machine, &params, &sched, ppn).total;
+        t.row(vec![s.label(), fmt_secs(model), fmt_secs(simd), format!("{:.2}", model / simd)]);
+    }
+    t.print();
+    0
+}
+
+fn cmd_study(argv: &[String]) -> i32 {
+    let cli = Cli::new("hetcomm study", "Section 6 outlook: best strategy on current and future machines")
+        .flag("msgs", "256", "inter-node messages per node")
+        .flag("dest", "16", "destination nodes")
+        .flag("machine", "all", "lassen | frontier | delta | all")
+        .flag("bw-scale", "0", "interconnect bandwidth multiplier (0 = per-machine default)")
+        .flag("sizes", "2^8,2^10,2^12,2^14,2^16,2^18", "message sizes");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{}", e.0);
+            return 2;
+        }
+    };
+    let base = lassen_params();
+    let chosen = a.get("machine");
+    let bw_override = a.get_f64("bw-scale").unwrap();
+    let mut configs: Vec<(&str, hetcomm::Machine, hetcomm::MachineParams)> = Vec::new();
+    if chosen == "all" || chosen == "lassen" {
+        configs.push(("lassen", machines::lassen(32), base.clone()));
+    }
+    if chosen == "all" || chosen == "frontier" {
+        let bw = if bw_override > 0.0 { bw_override } else { 4.0 };
+        configs.push(("frontier-like", machines::frontier_like(32), base.scaled(0.8, bw)));
+    }
+    if chosen == "all" || chosen == "delta" {
+        let bw = if bw_override > 0.0 { bw_override } else { 2.0 };
+        configs.push(("delta-like", machines::delta_like(32), base.scaled(1.0, bw)));
+    }
+    if configs.is_empty() {
+        eprintln!("unknown machine {chosen:?}");
+        return 2;
+    }
+    let mut t = Table::new(
+        format!("Section 6 study — {} msgs to {} nodes", a.get("msgs"), a.get("dest")),
+        &["machine", "cores/node", "size[B]", "best strategy", "modeled[s]"],
+    );
+    for (name, machine, params) in &configs {
+        let sm = StrategyModel::new(machine, params);
+        for size in a.get_usize_list("sizes").unwrap() {
+            let sc = Scenario {
+                n_msgs: a.get_usize("msgs").unwrap(),
+                msg_size: size,
+                n_dest: a.get_usize("dest").unwrap(),
+                dup_frac: 0.0,
+            };
+            let inputs = sc.inputs(machine, machine.cores_per_node());
+            let (best, secs) = sm.best(&inputs);
+            t.row(vec![
+                name.to_string(),
+                machine.cores_per_node().to_string(),
+                size.to_string(),
+                best.label(),
+                fmt_secs(secs),
+            ]);
+        }
+    }
+    t.print();
+    0
+}
+
+fn cmd_e2e(argv: &[String]) -> i32 {
+    let cli = Cli::new("hetcomm e2e", "end-to-end power iteration through PJRT")
+        .flag("side", "8", "stencil cube side (rows = side^3)")
+        .flag("gpus", "8", "partition count")
+        .flag("nodes", "2", "cluster nodes")
+        .flag("iters", "20", "power iterations")
+        .flag("artifacts", "artifacts", "artifact directory")
+        .switch("no-pjrt", "use the in-Rust kernel instead of PJRT");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{}", e.0);
+            return 2;
+        }
+    };
+    let side = a.get_usize("side").unwrap();
+    // 2x depth keeps per-part slabs >= 2 layers thick so the offd block
+    // fits the artifact's static ELL width.
+    let mat = hetcomm::sparse::gen::stencil_27pt(side, side, 2 * side);
+    let machine = machines::lassen(a.get_usize("nodes").unwrap());
+    let cfg = SpmvConfig {
+        use_pjrt: !a.get_bool("no-pjrt"),
+        artifacts_dir: a.get("artifacts").into(),
+        ..Default::default()
+    };
+    let strategy = Strategy::new(StrategyKind::SplitMd, Transport::Staged).unwrap();
+    let d = match DistSpmv::new(&mat, a.get_usize("gpus").unwrap(), &machine, strategy, cfg) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("setup failed: {e:#}");
+            return 1;
+        }
+    };
+    let v0 = vec![1f32; mat.nrows];
+    match d.power_iterate(&v0, a.get_usize("iters").unwrap()) {
+        Ok((_, lambda, t_ex, t_cp)) => {
+            println!("power iteration converged: lambda={lambda:.4} exchange={t_ex:.4}s compute={t_cp:.4}s");
+            println!("sim exchange/iter: {}", fmt_secs(d.sim_report.total));
+            0
+        }
+        Err(e) => {
+            eprintln!("e2e failed: {e:#}");
+            1
+        }
+    }
+}

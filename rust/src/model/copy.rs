@@ -1,0 +1,54 @@
+//! Host↔device staging cost, Eq. (4.5):
+//!
+//! `T_copy(s_send, s_recv) = α_H2D + β_H2D·s_send + α_D2H + β_D2H·s_recv`
+//!
+//! Note the paper's (4.5) is written from the *host staging* perspective of
+//! one endpoint pair: the sender D2H-copies `s_send` off its GPU and the
+//! receiver H2D-copies `s_recv` onto its GPU; both legs appear in the
+//! end-to-end critical path. With duplicate device pointers (Split+DD),
+//! four host processes copy concurrently and the 4-proc parameter class of
+//! Table 3 applies.
+
+use crate::params::{CopyDir, MachineParams};
+
+/// Eq. (4.5) with `nprocs` host processes per GPU performing the copies
+/// (1 for every strategy except Split+DD, which uses 4).
+pub fn t_copy(params: &MachineParams, s_send: usize, s_recv: usize, nprocs: usize) -> f64 {
+    params.memcpy_time(CopyDir::D2H, s_send, nprocs) + params.memcpy_time(CopyDir::H2D, s_recv, nprocs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::lassen_params;
+
+    #[test]
+    fn matches_formula_single_proc() {
+        let p = lassen_params();
+        let (ss, sr) = (1 << 16, 1 << 14);
+        let expect = (1.27e-5 + 1.96e-11 * ss as f64) + (1.30e-5 + 1.85e-11 * sr as f64);
+        assert!((t_copy(&p, ss, sr, 1) - expect).abs() < 1e-15);
+    }
+
+    #[test]
+    fn four_proc_splits_bytes() {
+        let p = lassen_params();
+        let s = 1 << 20;
+        let expect = (1.47e-5 + 1.50e-10 * (s as f64 / 4.0)) + (1.52e-5 + 5.52e-10 * (s as f64 / 4.0));
+        assert!((t_copy(&p, s, s, 4) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dd_latency_penalty_small_messages() {
+        // The paper (Section 5.1): DD's duplicate-pointer latency
+        // (~1.5e-5) exceeds MD's path for small copies.
+        let p = lassen_params();
+        assert!(t_copy(&p, 64, 64, 4) > t_copy(&p, 64, 64, 1));
+    }
+
+    #[test]
+    fn zero_copy_pays_latency_only() {
+        let p = lassen_params();
+        assert!((t_copy(&p, 0, 0, 1) - (1.27e-5 + 1.30e-5)).abs() < 1e-15);
+    }
+}

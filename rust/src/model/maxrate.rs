@@ -1,0 +1,102 @@
+//! The max-rate model, Eq. (2.2):
+//!
+//! `T = α·m + max( ppn·s / R_N , s / R_b )`
+//!
+//! where `m` is the max messages sent by one process on the node, `s` the
+//! max bytes sent by one process, `ppn` the actively-communicating processes
+//! per node, `R_N` the NIC injection rate, and `R_b` the per-process
+//! transport rate. When `ppn·R_b < R_N` it reduces to the postal model.
+
+/// Max-rate model inputs.
+#[derive(Clone, Copy, Debug)]
+pub struct MaxRate {
+    /// Latency per message [s].
+    pub alpha: f64,
+    /// Per-process transport rate R_b [B/s] (i.e. `1/β`).
+    pub rb: f64,
+    /// NIC injection rate R_N [B/s].
+    pub rn: f64,
+}
+
+impl MaxRate {
+    /// Eq. (2.2) exactly as written: `m` messages, `s` max bytes per
+    /// process, `ppn` active processes per node.
+    pub fn time(&self, m: usize, s: usize, ppn: usize) -> f64 {
+        let s = s as f64;
+        self.alpha * m as f64 + ((ppn as f64 * s) / self.rn).max(s / self.rb)
+    }
+
+    /// The generalized form used in Eq. (4.3), where the node-injected bytes
+    /// `s_node` need not equal `ppn * s_proc` for irregular patterns:
+    /// `T = α·m + max(s_node / R_N, s_proc / R_b)`.
+    pub fn time_node(&self, m: usize, s_proc: usize, s_node: usize) -> f64 {
+        self.alpha * m as f64 + (s_node as f64 / self.rn).max(s_proc as f64 / self.rb)
+    }
+
+    /// True when this configuration is injection-bandwidth limited (the NIC
+    /// term dominates the per-process term).
+    pub fn nic_limited(&self, s_proc: usize, s_node: usize) -> bool {
+        s_node as f64 / self.rn > s_proc as f64 / self.rb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::{lassen_params, Protocol};
+    use crate::topology::Locality;
+
+    fn lassen_maxrate() -> MaxRate {
+        let p = lassen_params();
+        let ab = p.cpu_ab(Protocol::Rendezvous, Locality::OffNode);
+        MaxRate { alpha: ab.alpha, rb: 1.0 / ab.beta, rn: p.rn() }
+    }
+
+    #[test]
+    fn reduces_to_postal_for_one_process() {
+        let mr = lassen_maxrate();
+        let s = 1 << 16;
+        // One process on the node: ppn*Rb vs RN — on Lassen Rb ≈ 1.25e10,
+        // RN ≈ 2.39e10, so a single process cannot saturate the NIC.
+        let t = mr.time(1, s, 1);
+        let postal = mr.alpha + s as f64 / mr.rb;
+        assert!((t - postal).abs() < 1e-15);
+    }
+
+    #[test]
+    fn saturates_with_many_processes() {
+        let mr = lassen_maxrate();
+        let s = 1 << 20;
+        // 40 processes all sending s bytes: NIC term dominates.
+        let t40 = mr.time(1, s, 40);
+        let nic = mr.alpha + 40.0 * s as f64 / mr.rn;
+        assert!((t40 - nic).abs() < 1e-12);
+        assert!(mr.nic_limited(s, 40 * s));
+    }
+
+    #[test]
+    fn crossover_ppn() {
+        // ppn where ppn/RN > 1/Rb: ppn > RN/Rb = RN*beta.
+        let mr = lassen_maxrate();
+        let crossover = mr.rn / mr.rb; // ≈ 2.39e10 * 7.97e-11 ≈ 1.9
+        assert!(crossover > 1.0 && crossover < 3.0, "crossover {crossover}");
+        let s = 1 << 20;
+        assert!(!mr.nic_limited(s, s)); // ppn=1
+        assert!(mr.nic_limited(s, 3 * s)); // ppn=3
+    }
+
+    #[test]
+    fn latency_scales_with_messages() {
+        let mr = lassen_maxrate();
+        let t1 = mr.time(1, 1024, 1);
+        let t10 = mr.time(10, 1024, 1);
+        assert!((t10 - t1 - 9.0 * mr.alpha).abs() < 1e-15);
+    }
+
+    #[test]
+    fn time_node_generalizes_time() {
+        let mr = lassen_maxrate();
+        let (m, s, ppn) = (4, 1 << 18, 8);
+        assert!((mr.time(m, s, ppn) - mr.time_node(m, s, ppn * s)).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,21 @@
+//! Performance models (Sections 2.2, 4).
+//!
+//! - [`postal`] — the postal model, Eq. (2.1).
+//! - [`maxrate`] — the max-rate model with NIC injection limits, Eq. (2.2).
+//! - [`onnode`] — on-node phases: `T_on` (4.1) for 3-Step/2-Step gathers and
+//!   redistributions, `T_on_split` (4.2) for the Split strategies.
+//! - [`offnode`] — off-node phases: `T_off` (4.3, staged max-rate) and
+//!   `T_off_DA` (4.4, device-aware postal).
+//! - [`copy`] — host↔device staging cost `T_copy` (4.5).
+//! - [`strategy`] — the composite models of Table 6 plus duplicate-data
+//!   adjustment, evaluated either from explicit Table 7 parameters or from a
+//!   [`crate::pattern::CommPattern`].
+
+pub mod copy;
+pub mod maxrate;
+pub mod offnode;
+pub mod onnode;
+pub mod postal;
+pub mod strategy;
+
+pub use strategy::{ModelInputs, StrategyModel};

@@ -1,0 +1,98 @@
+//! Off-node phase models (Section 4.3).
+//!
+//! Staged-through-host traffic uses the max-rate form (Eq. 4.3):
+//!
+//! `T_off(m, s) = α_off·m + max( s_node / R_N , s_proc·β_off )`
+//!
+//! Device-aware traffic uses the postal form (Eq. 4.4):
+//!
+//! `T_off_DA(m, s) = α_off·m + s·β_off`
+//!
+//! Protocol selection follows the *per-message* size (total volume divided
+//! by message count), matching how an MPI library would treat each send.
+
+use crate::params::{Endpoint, MachineParams};
+use crate::topology::Locality;
+
+/// Eq. (4.3): staged-through-host off-node time. `m` = number of inter-node
+/// messages sent by the worst process, `s_proc` = max bytes sent by a single
+/// process, `s_node` = max bytes injected by any single node.
+pub fn t_off(params: &MachineParams, m: usize, s_proc: usize, s_node: usize) -> f64 {
+    let per_msg = if m > 0 { s_proc.div_ceil(m) } else { 0 };
+    let ab = params.ab_for(Endpoint::Cpu, Locality::OffNode, per_msg);
+    ab.alpha * m as f64 + (s_node as f64 * params.inv_rn).max(s_proc as f64 * ab.beta)
+}
+
+/// Eq. (4.4): device-aware off-node time (postal; GPUs per node are too few
+/// to reach the injection limit — Section 2.2).
+pub fn t_off_da(params: &MachineParams, m: usize, s: usize) -> f64 {
+    let per_msg = if m > 0 { s.div_ceil(m) } else { 0 };
+    let ab = params.ab_for(Endpoint::Gpu, Locality::OffNode, per_msg);
+    ab.alpha * m as f64 + s as f64 * ab.beta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::lassen_params;
+
+    #[test]
+    fn staged_matches_formula_bw_limited() {
+        let p = lassen_params();
+        let (m, s_proc) = (4, 1 << 18);
+        let s_node = 40 * s_proc; // heavy node injection -> NIC limited
+        let per_msg = s_proc / m;
+        let ab = p.ab_for(Endpoint::Cpu, Locality::OffNode, per_msg);
+        let expect = ab.alpha * 4.0 + s_node as f64 * p.inv_rn;
+        assert!((t_off(&p, m, s_proc, s_node) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn staged_proc_limited_when_node_light() {
+        let p = lassen_params();
+        let (m, s_proc) = (2, 1 << 20);
+        let s_node = s_proc; // only one sending process on the node
+        let per_msg = s_proc / m;
+        let ab = p.ab_for(Endpoint::Cpu, Locality::OffNode, per_msg);
+        let expect = ab.alpha * 2.0 + s_proc as f64 * ab.beta;
+        assert!((t_off(&p, m, s_proc, s_node) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn device_aware_is_postal() {
+        let p = lassen_params();
+        let (m, s) = (8, 1 << 16);
+        let ab = p.ab_for(Endpoint::Gpu, Locality::OffNode, s / m);
+        let expect = ab.alpha * 8.0 + s as f64 * ab.beta;
+        assert!((t_off_da(&p, m, s) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_messages_zero_latency() {
+        let p = lassen_params();
+        assert_eq!(t_off(&p, 0, 0, 0), 0.0);
+        assert_eq!(t_off_da(&p, 0, 0), 0.0);
+    }
+
+    #[test]
+    fn protocol_depends_on_per_message_size() {
+        let p = lassen_params();
+        // 64 KiB total in 16 messages -> 4 KiB each -> eager;
+        // in 2 messages -> 32 KiB each -> rendezvous.
+        let s = 1 << 16;
+        let t16 = t_off(&p, 16, s, s);
+        let t2 = t_off(&p, 2, s, s);
+        // eager beta (3.79e-10) > rend beta (7.97e-11): many small eager
+        // messages pay more bandwidth cost + more latency.
+        assert!(t16 > t2);
+    }
+
+    #[test]
+    fn more_messages_more_latency_same_bytes() {
+        let p = lassen_params();
+        let s = 1 << 22; // rendezvous in both splits below
+        let t4 = t_off_da(&p, 4, s);
+        let t16 = t_off_da(&p, 16, s);
+        assert!(t16 > t4);
+    }
+}

@@ -1,0 +1,162 @@
+//! On-node phase models (Sections 4.1–4.2).
+//!
+//! Eq. (4.1) — 3-Step/2-Step worst-case gather/redistribution:
+//!
+//! `T_on(s) = (gps − 1)(α_sock + β_sock·s) + gps·(α_node + β_node·s)`
+//!
+//! Eq. (4.2) — Split distribution across host processes:
+//!
+//! `T_on_split(s, ppg) = (pps/ppg − 1)(α_sock + β_sock·s) + (pps/ppg)(α_node + β_node·s)`
+//!
+//! Message sizes select the MPI protocol (and thus the Table 2 row), exactly
+//! as a real Spectrum MPI run would.
+
+use crate::params::{Endpoint, MachineParams};
+use crate::topology::{Locality, Machine};
+
+/// Eq. (4.1): worst-case on-node gather (or redistribution) time for
+/// 3-Step / 2-Step, where `s` is the max bytes sent by any single GPU
+/// (gather) or the max received inter-node message size (redistribution).
+///
+/// `ep` selects whether the hops are CPU messages (staged-through-host) or
+/// device-aware GPU messages — the paper applies (4.1) with GPU parameters
+/// for device-aware node-aware strategies.
+pub fn t_on(machine: &Machine, params: &MachineParams, ep: Endpoint, s: usize) -> f64 {
+    let gps = machine.gpus_per_socket as f64;
+    let sock = params.ab_for(ep, Locality::OnSocket, s);
+    let node = params.ab_for(ep, Locality::OnNode, s);
+    (gps - 1.0) * sock.time(s) + gps * node.time(s)
+}
+
+/// Eq. (4.2): worst-case Split on-node distribution (or redistribution)
+/// time. `s_total` is the inter-node volume held by the worst GPU (equal to
+/// the node's entire volume in the paper's worst case, where a single GPU
+/// contains all data to be sent off-node); `ppg` is host processes per GPU
+/// (1 for Split+MD; up to 4 for Split+DD); `message_cap` is the Algorithm 1
+/// chunk size.
+///
+/// The distribution message count follows Algorithm 1: `s_total` splits
+/// into `⌈s_total / cap⌉` chunks (conglomeration keeps small volumes in few
+/// messages; the cap rises when chunks would exceed the core count). Only
+/// when the chunk count reaches `2·pps/ppg − 1` does this saturate to the
+/// paper's stated worst case of `(pps/ppg − 1)` on-socket plus `pps/ppg`
+/// on-node messages.
+///
+/// The hops are CPU messages (Split is staged-through-host only).
+pub fn t_on_split(machine: &Machine, params: &MachineParams, s_total: usize, ppg: usize, message_cap: usize) -> f64 {
+    assert!(ppg >= 1, "ppg must be >= 1");
+    let cap = message_cap.max(1);
+    let pps_ppg = (machine.cores_per_socket / ppg).max(1);
+    let max_chunks = (machine.cores_per_node() / ppg).max(1);
+    let mut chunks = s_total.div_ceil(cap).max(1);
+    if chunks > max_chunks {
+        chunks = max_chunks; // Algorithm 1 lines 14-17: raise the cap
+    }
+    let s = s_total.div_ceil(chunks);
+    // One chunk stays with the staging process; the rest are distributed,
+    // on-socket first.
+    let outgoing = chunks - 1;
+    let sock_msgs = outgoing.min(pps_ppg.saturating_sub(1));
+    let node_msgs = (outgoing - sock_msgs).min(pps_ppg);
+    let sock = params.ab_for(Endpoint::Cpu, Locality::OnSocket, s);
+    let node = params.ab_for(Endpoint::Cpu, Locality::OnNode, s);
+    sock_msgs as f64 * sock.time(s) + node_msgs as f64 * node.time(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::lassen_params;
+    use crate::topology::machines::lassen;
+
+    #[test]
+    fn t_on_matches_formula() {
+        let m = lassen(2);
+        let p = lassen_params();
+        let s = 1 << 14; // rendezvous regime
+        let sock = p.ab_for(Endpoint::Cpu, Locality::OnSocket, s);
+        let node = p.ab_for(Endpoint::Cpu, Locality::OnNode, s);
+        let expect = 1.0 * sock.time(s) + 2.0 * node.time(s); // gps=2
+        assert!((t_on(&m, &p, Endpoint::Cpu, s) - expect).abs() < 1e-15);
+    }
+
+    #[test]
+    fn t_on_gpu_params_heavier() {
+        // Device-aware on-node hops cost more than CPU hops (Table 2 GPU
+        // alphas dominate) for moderate sizes.
+        let m = lassen(2);
+        let p = lassen_params();
+        let s = 1 << 12;
+        assert!(t_on(&m, &p, Endpoint::Gpu, s) > t_on(&m, &p, Endpoint::Cpu, s));
+    }
+
+    #[test]
+    fn t_on_split_saturates_to_lassen_counts() {
+        // Section 4.2: on Lassen with ppg=1, a fully-split volume requires
+        // 19 on-socket + 20 on-node/off-socket messages.
+        let m = lassen(2);
+        let p = lassen_params();
+        let cap: usize = 8192;
+        let s_total = 40 * cap; // exactly 40 chunks
+        let share = cap;
+        let sock = p.ab_for(Endpoint::Cpu, Locality::OnSocket, share);
+        let node = p.ab_for(Endpoint::Cpu, Locality::OnNode, share);
+        let expect = 19.0 * sock.time(share) + 20.0 * node.time(share);
+        assert!((t_on_split(&m, &p, s_total, 1, cap) - expect).abs() < 1e-15);
+    }
+
+    #[test]
+    fn t_on_split_conglomerates_small_volumes() {
+        // A volume under the cap stays with the staging proc: no
+        // distribution messages at all (Algorithm 1 lines 12-13).
+        let m = lassen(2);
+        let p = lassen_params();
+        assert_eq!(t_on_split(&m, &p, 4096, 1, 8192), 0.0);
+    }
+
+    #[test]
+    fn t_on_split_partial_chunking() {
+        // 3 chunks -> 2 outgoing messages, both on-socket.
+        let m = lassen(2);
+        let p = lassen_params();
+        let cap: usize = 8192;
+        let s_total = 3 * cap;
+        let sock = p.ab_for(Endpoint::Cpu, Locality::OnSocket, cap);
+        let expect = 2.0 * sock.time(cap);
+        assert!((t_on_split(&m, &p, s_total, 1, cap) - expect).abs() < 1e-15);
+    }
+
+    #[test]
+    fn t_on_split_cap_raised_beyond_cores() {
+        // 100 x cap volume would be 100 chunks > 40 cores: cap rises so the
+        // chunk count is bounded by the core count.
+        let m = lassen(2);
+        let p = lassen_params();
+        let cap: usize = 8192;
+        let s_total = 100 * cap;
+        let chunks = 40;
+        let s = s_total.div_ceil(chunks);
+        let sock = p.ab_for(Endpoint::Cpu, Locality::OnSocket, s);
+        let node = p.ab_for(Endpoint::Cpu, Locality::OnNode, s);
+        let expect = 19.0 * sock.time(s) + 20.0 * node.time(s);
+        assert!((t_on_split(&m, &p, s_total, 1, cap) - expect).abs() < 1e-15);
+    }
+
+    #[test]
+    fn t_on_split_dd_fewer_messages() {
+        // ppg=4 quarters the per-proc share count; for a fully split volume
+        // DD's distribution phase is cheaper.
+        let m = lassen(2);
+        let p = lassen_params();
+        let s_total = 80 * 8192;
+        assert!(t_on_split(&m, &p, s_total, 4, 8192) < t_on_split(&m, &p, s_total, 1, 8192));
+    }
+
+    #[test]
+    fn zero_bytes_free_split_but_not_gather() {
+        let m = lassen(2);
+        let p = lassen_params();
+        assert!(t_on(&m, &p, Endpoint::Cpu, 0) > 0.0);
+        assert_eq!(t_on_split(&m, &p, 0, 1, 8192), 0.0);
+    }
+}

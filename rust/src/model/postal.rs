@@ -1,0 +1,56 @@
+//! The postal model, Eq. (2.1): `T = α + β·s`.
+//!
+//! Used directly for device-aware transfers (the low GPU count per node
+//! never saturates the NIC — Section 2.2) and as the building block of every
+//! composite model.
+
+use crate::params::AlphaBeta;
+
+/// Time to send one `s`-byte message with parameters `ab` (Eq. 2.1).
+pub fn time(ab: AlphaBeta, s: usize) -> f64 {
+    ab.alpha + ab.beta * s as f64
+}
+
+/// Time to send `m` equally-sized messages of `s` bytes sequentially from
+/// one process: latency is paid per message, bandwidth per byte.
+pub fn time_m(ab: AlphaBeta, m: usize, s: usize) -> f64 {
+    ab.alpha * m as f64 + ab.beta * (m * s) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::lassen_params;
+    use crate::params::Protocol;
+    use crate::topology::Locality;
+
+    #[test]
+    fn zero_bytes_is_latency() {
+        let ab = AlphaBeta::new(2e-6, 4e-10);
+        assert_eq!(time(ab, 0), 2e-6);
+    }
+
+    #[test]
+    fn linear_in_bytes() {
+        let ab = AlphaBeta::new(1e-6, 1e-9);
+        assert!((time(ab, 1000) - (1e-6 + 1e-6)).abs() < 1e-18);
+    }
+
+    #[test]
+    fn m_messages_pay_m_latencies() {
+        let ab = AlphaBeta::new(1e-6, 1e-9);
+        let t = time_m(ab, 8, 1024);
+        assert!((t - (8e-6 + 8.0 * 1024.0 * 1e-9)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn paper_example_off_node_rendezvous() {
+        // Table 2 off-node rendezvous CPU: alpha 7.76e-6, beta 7.97e-11.
+        // A 1 MiB message: T = 7.76e-6 + 7.97e-11 * 2^20 ≈ 9.13e-5 s.
+        let p = lassen_params();
+        let ab = p.cpu_ab(Protocol::Rendezvous, Locality::OffNode);
+        let t = time(ab, 1 << 20);
+        assert!((t - (7.76e-6 + 7.97e-11 * (1u64 << 20) as f64)).abs() < 1e-15);
+        assert!(t > 8e-5 && t < 1e-4);
+    }
+}

@@ -1,0 +1,149 @@
+//! Parameter fitting — the BenchPress analog (Section 3).
+//!
+//! The paper derives each (α, β) pair by running ping-pong / node-pong
+//! benchmarks for 1000 iterations and applying a linear least-squares fit.
+//! We replicate that pipeline against the discrete-event simulator: run the
+//! same experiments, fit, and confirm the fitted values round-trip to the
+//! constants the simulator was built from. This is also how a user would
+//! calibrate `hetcomm` to a *real* machine: feed measured (size, time)
+//! samples to [`fit_alpha_beta`].
+
+use crate::params::AlphaBeta;
+use crate::util::stats::{linear_fit, r_squared};
+
+/// One measurement: message size in bytes and observed one-way time in
+/// seconds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Sample {
+    pub bytes: usize,
+    pub seconds: f64,
+}
+
+/// Result of a fit: the (α, β) pair and goodness-of-fit.
+#[derive(Clone, Copy, Debug)]
+pub struct Fit {
+    pub ab: AlphaBeta,
+    pub r2: f64,
+}
+
+/// Least-squares fit of the postal model `T = α + β·s` to samples.
+///
+/// α is clamped to be non-negative (a negative intercept is a fitting
+/// artifact at coarse size grids, never physical).
+pub fn fit_alpha_beta(samples: &[Sample]) -> Fit {
+    assert!(samples.len() >= 2, "need >= 2 samples to fit");
+    let x: Vec<f64> = samples.iter().map(|s| s.bytes as f64).collect();
+    let y: Vec<f64> = samples.iter().map(|s| s.seconds).collect();
+    let (a, b) = linear_fit(&x, &y);
+    let r2 = r_squared(&x, &y, a, b);
+    Fit { ab: AlphaBeta::new(a.max(0.0), b.max(0.0)), r2 }
+}
+
+/// Fit per-protocol parameters from a size sweep: samples are partitioned at
+/// the protocol switch points and fitted independently, exactly as the
+/// paper's Table 2 separates short/eager/rendezvous rows.
+pub fn fit_protocol_bands(samples: &[Sample], short_max: usize, eager_max: usize) -> [Option<Fit>; 3] {
+    let mut bands: [Vec<Sample>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+    for &s in samples {
+        let idx = if s.bytes < short_max {
+            0
+        } else if s.bytes < eager_max {
+            1
+        } else {
+            2
+        };
+        bands[idx].push(s);
+    }
+    let fit_band = |b: &Vec<Sample>| if b.len() >= 2 { Some(fit_alpha_beta(b)) } else { None };
+    [fit_band(&bands[0]), fit_band(&bands[1]), fit_band(&bands[2])]
+}
+
+/// Estimate the inverse injection rate `1/R_N` from node-pong measurements
+/// at high process counts: at saturation, `T ≈ s_node / R_N`, so the slope
+/// of time vs node-injected bytes is `1/R_N`.
+pub fn fit_inv_rn(samples: &[Sample]) -> f64 {
+    let fit = fit_alpha_beta(samples);
+    fit.ab.beta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth(ab: AlphaBeta, sizes: &[usize]) -> Vec<Sample> {
+        sizes.iter().map(|&s| Sample { bytes: s, seconds: ab.time(s) }).collect()
+    }
+
+    #[test]
+    fn exact_fit_roundtrips() {
+        let truth = AlphaBeta::new(2.44e-6, 3.79e-10);
+        let sizes: Vec<usize> = (9..20).map(|e| 1usize << e).collect();
+        let fit = fit_alpha_beta(&synth(truth, &sizes));
+        assert!((fit.ab.alpha - truth.alpha).abs() / truth.alpha < 1e-9);
+        assert!((fit.ab.beta - truth.beta).abs() / truth.beta < 1e-9);
+        assert!(fit.r2 > 0.999999);
+    }
+
+    #[test]
+    fn noisy_fit_close() {
+        let truth = AlphaBeta::new(1e-6, 4e-10);
+        let sizes: Vec<usize> = (8..22).map(|e| 1usize << e).collect();
+        let mut samples = synth(truth, &sizes);
+        // 2% deterministic ripple
+        for (i, s) in samples.iter_mut().enumerate() {
+            s.seconds *= 1.0 + 0.02 * if i % 2 == 0 { 1.0 } else { -1.0 };
+        }
+        let fit = fit_alpha_beta(&samples);
+        assert!((fit.ab.beta - truth.beta).abs() / truth.beta < 0.05);
+    }
+
+    #[test]
+    fn protocol_bands_split() {
+        let short = AlphaBeta::new(3.67e-7, 1.32e-10);
+        let eager = AlphaBeta::new(4.61e-7, 7.12e-11);
+        let rend = AlphaBeta::new(3.15e-6, 3.40e-11);
+        let mut samples = Vec::new();
+        for e in 0..24 {
+            let s = 1usize << e;
+            let ab = if s < 512 { short } else if s < 8192 { eager } else { rend };
+            samples.push(Sample { bytes: s, seconds: ab.time(s) });
+        }
+        let [f0, f1, f2] = fit_protocol_bands(&samples, 512, 8192);
+        assert!((f0.unwrap().ab.alpha - short.alpha).abs() / short.alpha < 1e-6);
+        assert!((f1.unwrap().ab.beta - eager.beta).abs() / eager.beta < 1e-6);
+        assert!((f2.unwrap().ab.beta - rend.beta).abs() / rend.beta < 1e-6);
+    }
+
+    #[test]
+    fn empty_band_is_none() {
+        let samples = vec![
+            Sample { bytes: 1 << 14, seconds: 1e-5 },
+            Sample { bytes: 1 << 15, seconds: 2e-5 },
+        ];
+        let [f0, f1, f2] = fit_protocol_bands(&samples, 512, 8192);
+        assert!(f0.is_none());
+        assert!(f1.is_none());
+        assert!(f2.is_some());
+    }
+
+    #[test]
+    fn negative_alpha_clamped() {
+        // Construct data whose LSQ intercept is negative.
+        let samples = vec![
+            Sample { bytes: 1000, seconds: 1e-7 },
+            Sample { bytes: 2000, seconds: 3e-7 },
+        ];
+        let fit = fit_alpha_beta(&samples);
+        assert!(fit.ab.alpha >= 0.0);
+    }
+
+    #[test]
+    fn inv_rn_recovery() {
+        let inv_rn = 4.19e-11;
+        let sizes: Vec<usize> = (16..26).map(|e| 1usize << e).collect();
+        let samples: Vec<Sample> =
+            sizes.iter().map(|&s| Sample { bytes: s, seconds: 5e-6 + inv_rn * s as f64 }).collect();
+        let est = fit_inv_rn(&samples);
+        assert!((est - inv_rn).abs() / inv_rn < 1e-6);
+    }
+}

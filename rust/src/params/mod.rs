@@ -1,0 +1,431 @@
+//! Measured modeling parameters (Section 3, Tables 2–4).
+//!
+//! Every data-flow path between two CPUs or two GPUs is characterised by a
+//! postal-model pair (α latency, β per-byte cost) keyed by *locality*
+//! (on-socket / on-node / off-node) and *MPI messaging protocol*
+//! (short / eager / rendezvous). CPU↔GPU copies (`cudaMemcpyAsync`) are
+//! characterised separately (Table 3), and the NIC injection-bandwidth limit
+//! `R_N` (Table 4) feeds the max-rate model.
+//!
+//! The constants below are the paper's measured Lassen values; alternative
+//! machines can load their own tables from config files
+//! ([`MachineParams::from_config`]) or be derived by scaling
+//! ([`MachineParams::scaled`]).
+
+pub mod fit;
+
+use crate::topology::Locality;
+use crate::util::config::{Config, ConfigError};
+
+/// MPI point-to-point messaging protocol (Section 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Protocol {
+    /// Fits in the envelope; sent immediately.
+    Short,
+    /// Receiver buffer assumed pre-allocated.
+    Eager,
+    /// Receiver must allocate before transfer (handshake).
+    Rendezvous,
+}
+
+impl std::fmt::Display for Protocol {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Protocol::Short => write!(f, "short"),
+            Protocol::Eager => write!(f, "eager"),
+            Protocol::Rendezvous => write!(f, "rend"),
+        }
+    }
+}
+
+/// A postal-model (α, β) pair: `T(s) = α + β s`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AlphaBeta {
+    /// Latency [s].
+    pub alpha: f64,
+    /// Per-byte transfer cost [s/B].
+    pub beta: f64,
+}
+
+impl AlphaBeta {
+    pub const fn new(alpha: f64, beta: f64) -> Self {
+        AlphaBeta { alpha, beta }
+    }
+
+    /// Postal-model time for an `s`-byte message (Eq. 2.1).
+    pub fn time(&self, s: usize) -> f64 {
+        self.alpha + self.beta * s as f64
+    }
+}
+
+/// Which endpoint memory a message moves between (selects the CPU vs GPU
+/// block of Table 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Endpoint {
+    Cpu,
+    Gpu,
+}
+
+/// Direction of a host↔device copy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CopyDir {
+    H2D,
+    D2H,
+}
+
+/// Complete measured parameter set for one machine.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MachineParams {
+    /// CPU↔CPU (α, β) per protocol × locality.
+    pub cpu: [[AlphaBeta; 3]; 3],
+    /// GPU↔GPU device-aware (α, β): eager & rendezvous only (short is not
+    /// used for device-aware transfers on Lassen).
+    pub gpu: [[AlphaBeta; 3]; 2],
+    /// cudaMemcpyAsync (α, β): rows = #processes class (0 → 1 proc,
+    /// 1 → 4 procs), cols = direction (H2D, D2H).
+    pub memcpy: [[AlphaBeta; 2]; 2],
+    /// Inverse NIC injection rate `1/R_N` [s/B] for staged (CPU) traffic.
+    pub inv_rn: f64,
+    /// Byte thresholds for protocol switching: messages `< short_max` are
+    /// short, `< eager_max` eager, otherwise rendezvous.
+    pub short_max: usize,
+    pub eager_max: usize,
+    /// GPU (device-aware) eager→rendezvous switch point.
+    pub gpu_eager_max: usize,
+}
+
+const IDX_SHORT: usize = 0;
+const IDX_EAGER: usize = 1;
+const IDX_REND: usize = 2;
+
+fn loc_idx(l: Locality) -> usize {
+    match l {
+        Locality::OnSocket => 0,
+        Locality::OnNode => 1,
+        Locality::OffNode => 2,
+    }
+}
+
+/// The paper's measured Lassen parameters (Tables 2–4, Spectrum MPI).
+pub fn lassen_params() -> MachineParams {
+    MachineParams {
+        cpu: [
+            // short:        on-socket                on-node                  off-node
+            [
+                AlphaBeta::new(3.67e-7, 1.32e-10),
+                AlphaBeta::new(9.25e-7, 1.19e-9),
+                AlphaBeta::new(1.89e-6, 6.88e-10),
+            ],
+            // eager
+            [
+                AlphaBeta::new(4.61e-7, 7.12e-11),
+                AlphaBeta::new(1.17e-6, 2.18e-10),
+                AlphaBeta::new(2.44e-6, 3.79e-10),
+            ],
+            // rendezvous
+            [
+                AlphaBeta::new(3.15e-6, 3.40e-11),
+                AlphaBeta::new(6.77e-6, 1.49e-10),
+                AlphaBeta::new(7.76e-6, 7.97e-11),
+            ],
+        ],
+        gpu: [
+            // eager
+            [
+                AlphaBeta::new(1.87e-6, 5.79e-11),
+                AlphaBeta::new(2.02e-5, 2.15e-10),
+                AlphaBeta::new(8.95e-6, 1.72e-10),
+            ],
+            // rendezvous
+            [
+                AlphaBeta::new(1.82e-5, 1.46e-11),
+                AlphaBeta::new(1.93e-5, 2.39e-11),
+                AlphaBeta::new(1.10e-5, 1.72e-10),
+            ],
+        ],
+        memcpy: [
+            // 1 proc:      H2D                       D2H
+            [AlphaBeta::new(1.30e-5, 1.85e-11), AlphaBeta::new(1.27e-5, 1.96e-11)],
+            // 4 procs (duplicate device pointers)
+            [AlphaBeta::new(1.52e-5, 5.52e-10), AlphaBeta::new(1.47e-5, 1.50e-10)],
+        ],
+        inv_rn: 4.19e-11,
+        // Spectrum MPI on Lassen: envelope-sized messages up to 512 B,
+        // eager up to the 8 KiB rendezvous switch the paper (and [16]) use
+        // as the Split message cap.
+        short_max: 512,
+        eager_max: 8192,
+        gpu_eager_max: 8192,
+    }
+}
+
+impl MachineParams {
+    /// Protocol selected for an `s`-byte CPU message. The eager bound is
+    /// inclusive: Spectrum MPI sends messages up to and including the eager
+    /// limit eagerly, which is why the Split message cap *equals* the
+    /// rendezvous switch point (8 KiB chunks still travel eagerly) [16].
+    pub fn cpu_protocol(&self, s: usize) -> Protocol {
+        if s < self.short_max {
+            Protocol::Short
+        } else if s <= self.eager_max {
+            Protocol::Eager
+        } else {
+            Protocol::Rendezvous
+        }
+    }
+
+    /// Protocol selected for an `s`-byte device-aware GPU message
+    /// (eager bound inclusive, as for CPUs).
+    pub fn gpu_protocol(&self, s: usize) -> Protocol {
+        if s <= self.gpu_eager_max {
+            Protocol::Eager
+        } else {
+            Protocol::Rendezvous
+        }
+    }
+
+    /// (α, β) for a CPU↔CPU message of explicit protocol and locality.
+    pub fn cpu_ab(&self, p: Protocol, l: Locality) -> AlphaBeta {
+        let pi = match p {
+            Protocol::Short => IDX_SHORT,
+            Protocol::Eager => IDX_EAGER,
+            Protocol::Rendezvous => IDX_REND,
+        };
+        self.cpu[pi][loc_idx(l)]
+    }
+
+    /// (α, β) for a GPU↔GPU device-aware message of explicit protocol.
+    /// `Short` is promoted to `Eager` (short is unused device-aware).
+    pub fn gpu_ab(&self, p: Protocol, l: Locality) -> AlphaBeta {
+        let pi = match p {
+            Protocol::Short | Protocol::Eager => 0,
+            Protocol::Rendezvous => 1,
+        };
+        self.gpu[pi][loc_idx(l)]
+    }
+
+    /// (α, β) for an `s`-byte message between endpoints of kind `ep` at
+    /// locality `l`, with protocol chosen by size.
+    pub fn ab_for(&self, ep: Endpoint, l: Locality, s: usize) -> AlphaBeta {
+        match ep {
+            Endpoint::Cpu => self.cpu_ab(self.cpu_protocol(s), l),
+            Endpoint::Gpu => self.gpu_ab(self.gpu_protocol(s), l),
+        }
+    }
+
+    /// Postal-model time for one message (Eq. 2.1 with Table 2 parameters).
+    pub fn msg_time(&self, ep: Endpoint, l: Locality, s: usize) -> f64 {
+        self.ab_for(ep, l, s).time(s)
+    }
+
+    /// (α, β) for a host↔device copy using `nprocs` simultaneous processes
+    /// (1 or 4 measured; 2–3 use the 4-proc class, >4 unsupported per the
+    /// paper's observation that more than four brings no benefit).
+    pub fn memcpy_ab(&self, dir: CopyDir, nprocs: usize) -> AlphaBeta {
+        assert!(nprocs >= 1 && nprocs <= 4, "memcpy procs {nprocs} outside measured range 1..=4");
+        let row = if nprocs == 1 { 0 } else { 1 };
+        let col = match dir {
+            CopyDir::H2D => 0,
+            CopyDir::D2H => 1,
+        };
+        self.memcpy[row][col]
+    }
+
+    /// Time to copy `s` bytes between host and device with `nprocs`
+    /// processes; when `nprocs > 1`, each process copies `s / nprocs` bytes
+    /// concurrently (the measured 4-proc β already reflects contention).
+    pub fn memcpy_time(&self, dir: CopyDir, s: usize, nprocs: usize) -> f64 {
+        let ab = self.memcpy_ab(dir, nprocs);
+        ab.time(s.div_ceil(nprocs.max(1)))
+    }
+
+    /// NIC injection rate `R_N` [B/s].
+    pub fn rn(&self) -> f64 {
+        1.0 / self.inv_rn
+    }
+
+    /// Uniformly scale all latencies (α) and bandwidths (1/β, R_N) — used to
+    /// derive forward-looking machines (Section 6: "higher bandwidth
+    /// interconnects") from the Lassen baseline.
+    pub fn scaled(&self, alpha_scale: f64, bw_scale: f64) -> MachineParams {
+        let s = |ab: AlphaBeta| AlphaBeta::new(ab.alpha * alpha_scale, ab.beta / bw_scale);
+        let mut out = self.clone();
+        for p in 0..3 {
+            for l in 0..3 {
+                out.cpu[p][l] = s(self.cpu[p][l]);
+            }
+        }
+        for p in 0..2 {
+            for l in 0..3 {
+                out.gpu[p][l] = s(self.gpu[p][l]);
+            }
+        }
+        for r in 0..2 {
+            for c in 0..2 {
+                out.memcpy[r][c] = s(self.memcpy[r][c]);
+            }
+        }
+        out.inv_rn = self.inv_rn / bw_scale;
+        out
+    }
+
+    /// Load a parameter table from a config file with `[cpu.short]`,
+    /// `[cpu.eager]`, `[cpu.rend]`, `[gpu.eager]`, `[gpu.rend]`,
+    /// `[memcpy.p1]`, `[memcpy.p4]` and `[network]` sections. Missing
+    /// sections fall back to Lassen values.
+    pub fn from_config(cfg: &Config) -> Result<MachineParams, ConfigError> {
+        let mut p = lassen_params();
+        let read_loc3 = |sec: &crate::util::config::Section, dst: &mut [AlphaBeta; 3]| -> Result<(), ConfigError> {
+            for (i, loc) in ["on_socket", "on_node", "off_node"].iter().enumerate() {
+                dst[i] = AlphaBeta::new(
+                    sec.f64_or(&format!("alpha_{loc}"), dst[i].alpha)?,
+                    sec.f64_or(&format!("beta_{loc}"), dst[i].beta)?,
+                );
+            }
+            Ok(())
+        };
+        for (name, pi) in [("cpu.short", 0usize), ("cpu.eager", 1), ("cpu.rend", 2)] {
+            if let Some(sec) = cfg.section_opt(name) {
+                let mut row = p.cpu[pi];
+                read_loc3(sec, &mut row)?;
+                p.cpu[pi] = row;
+            }
+        }
+        for (name, pi) in [("gpu.eager", 0usize), ("gpu.rend", 1)] {
+            if let Some(sec) = cfg.section_opt(name) {
+                let mut row = p.gpu[pi];
+                read_loc3(sec, &mut row)?;
+                p.gpu[pi] = row;
+            }
+        }
+        for (name, ri) in [("memcpy.p1", 0usize), ("memcpy.p4", 1)] {
+            if let Some(sec) = cfg.section_opt(name) {
+                p.memcpy[ri][0] = AlphaBeta::new(
+                    sec.f64_or("alpha_h2d", p.memcpy[ri][0].alpha)?,
+                    sec.f64_or("beta_h2d", p.memcpy[ri][0].beta)?,
+                );
+                p.memcpy[ri][1] = AlphaBeta::new(
+                    sec.f64_or("alpha_d2h", p.memcpy[ri][1].alpha)?,
+                    sec.f64_or("beta_d2h", p.memcpy[ri][1].beta)?,
+                );
+            }
+        }
+        if let Some(sec) = cfg.section_opt("network") {
+            p.inv_rn = sec.f64_or("inv_rn", p.inv_rn)?;
+            p.short_max = sec.usize_or("short_max", p.short_max)?;
+            p.eager_max = sec.usize_or("eager_max", p.eager_max)?;
+            p.gpu_eager_max = sec.usize_or("gpu_eager_max", p.gpu_eager_max)?;
+        }
+        Ok(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_spot_checks() {
+        let p = lassen_params();
+        // CPU short on-socket row of Table 2.
+        let ab = p.cpu_ab(Protocol::Short, Locality::OnSocket);
+        assert_eq!(ab.alpha, 3.67e-7);
+        assert_eq!(ab.beta, 1.32e-10);
+        // GPU rendezvous off-node row.
+        let ab = p.gpu_ab(Protocol::Rendezvous, Locality::OffNode);
+        assert_eq!(ab.alpha, 1.10e-5);
+        assert_eq!(ab.beta, 1.72e-10);
+    }
+
+    #[test]
+    fn protocol_switching() {
+        let p = lassen_params();
+        assert_eq!(p.cpu_protocol(0), Protocol::Short);
+        assert_eq!(p.cpu_protocol(511), Protocol::Short);
+        assert_eq!(p.cpu_protocol(512), Protocol::Eager);
+        assert_eq!(p.cpu_protocol(8192), Protocol::Eager); // inclusive bound
+        assert_eq!(p.cpu_protocol(8193), Protocol::Rendezvous);
+        assert_eq!(p.gpu_protocol(100), Protocol::Eager);
+        assert_eq!(p.gpu_protocol(1 << 20), Protocol::Rendezvous);
+    }
+
+    #[test]
+    fn msg_time_monotone_in_size() {
+        let p = lassen_params();
+        for l in [Locality::OnSocket, Locality::OnNode, Locality::OffNode] {
+            for ep in [Endpoint::Cpu, Endpoint::Gpu] {
+                // Within a protocol regime, strictly increasing.
+                let t1 = p.msg_time(ep, l, 1024);
+                let t2 = p.msg_time(ep, l, 4096);
+                assert!(t2 > t1, "{ep:?} {l} not monotone");
+            }
+        }
+    }
+
+    #[test]
+    fn gpu_latency_dominates_cpu() {
+        // Section 4.6: "high overhead for inter-GPU communication
+        // on-socket and on-node" — GPU alphas exceed CPU alphas.
+        let p = lassen_params();
+        for l in [Locality::OnSocket, Locality::OnNode] {
+            assert!(p.gpu_ab(Protocol::Rendezvous, l).alpha > p.cpu_ab(Protocol::Rendezvous, l).alpha);
+        }
+    }
+
+    #[test]
+    fn memcpy_classes() {
+        let p = lassen_params();
+        assert_eq!(p.memcpy_ab(CopyDir::H2D, 1).alpha, 1.30e-5);
+        assert_eq!(p.memcpy_ab(CopyDir::D2H, 4).alpha, 1.47e-5);
+        // 2-3 procs fall in the multi-proc class.
+        assert_eq!(p.memcpy_ab(CopyDir::H2D, 2), p.memcpy_ab(CopyDir::H2D, 4));
+    }
+
+    #[test]
+    #[should_panic(expected = "outside measured range")]
+    fn memcpy_too_many_procs() {
+        lassen_params().memcpy_ab(CopyDir::H2D, 5);
+    }
+
+    #[test]
+    fn memcpy_split_shares_bytes() {
+        let p = lassen_params();
+        let s = 1 << 22; // 4 MiB: large enough for the 4-proc path to win
+        let t1 = p.memcpy_time(CopyDir::D2H, s, 1);
+        let t4 = p.memcpy_time(CopyDir::D2H, s, 4);
+        // Each of the 4 procs copies s/4 bytes concurrently.
+        assert!((t4 - (1.47e-5 + 1.50e-10 * (s as f64 / 4.0))).abs() < 1e-12);
+        // For D2H large copies the 1-proc path is still cheaper on Lassen
+        // (Table 3: 1.96e-11*s < 1.47e-5 + 1.50e-10*s/4) until huge sizes.
+        assert!(t1 < t4 * 4.0);
+    }
+
+    #[test]
+    fn rn_value() {
+        let p = lassen_params();
+        assert!((p.rn() - 1.0 / 4.19e-11).abs() / p.rn() < 1e-12);
+    }
+
+    #[test]
+    fn scaling_preserves_structure() {
+        let p = lassen_params();
+        let q = p.scaled(0.5, 2.0);
+        assert!((q.cpu[0][0].alpha - p.cpu[0][0].alpha * 0.5).abs() < 1e-20);
+        assert!((q.cpu[0][0].beta - p.cpu[0][0].beta / 2.0).abs() < 1e-22);
+        assert!((q.rn() - p.rn() * 2.0).abs() / q.rn() < 1e-12);
+    }
+
+    #[test]
+    fn config_overrides() {
+        let cfg = crate::util::config::Config::parse(
+            "[network]\ninv_rn = 2.0e-11\neager_max = 4096\n[cpu.eager]\nalpha_off_node = 1.0e-6\n",
+        )
+        .unwrap();
+        let p = MachineParams::from_config(&cfg).unwrap();
+        assert_eq!(p.inv_rn, 2.0e-11);
+        assert_eq!(p.eager_max, 4096);
+        assert_eq!(p.cpu_ab(Protocol::Eager, Locality::OffNode).alpha, 1.0e-6);
+        // untouched values remain Lassen's
+        assert_eq!(p.cpu_ab(Protocol::Eager, Locality::OffNode).beta, 3.79e-10);
+    }
+}

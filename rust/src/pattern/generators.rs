@@ -1,0 +1,180 @@
+//! Scenario generators for the modeled-performance study (Figure 4.3) and
+//! random irregular patterns for property tests.
+
+use super::{CommPattern, Msg};
+use crate::model::ModelInputs;
+use crate::topology::{GpuId, Machine};
+use crate::util::rng::Rng;
+
+/// The 2-Step sub-scenarios of Section 4.6.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TwoStepCase {
+    /// "2-Step All": every GPU on the source node sends to every GPU on the
+    /// destination node.
+    All,
+    /// "2-Step 1": all messages to a destination node originate from a
+    /// single active GPU — the best case, where pairing is perfect.
+    One,
+}
+
+/// Figure 4.3 scenario: one node sends `n_msgs` messages of `msg_size`
+/// bytes, spread evenly across its GPUs, to `n_dest` destination nodes.
+#[derive(Clone, Copy, Debug)]
+pub struct Scenario {
+    pub n_msgs: usize,
+    pub msg_size: usize,
+    pub n_dest: usize,
+    /// Fraction of data that is duplicated (0.25 in the figure's bottom
+    /// rows).
+    pub dup_frac: f64,
+}
+
+impl Scenario {
+    /// Model inputs for the standard / 3-Step / Split models and the
+    /// "2-Step All" case.
+    pub fn inputs(&self, machine: &Machine, ppn: usize) -> ModelInputs {
+        let gpn = machine.gpus_per_node();
+        let per_gpu = self.n_msgs.div_ceil(gpn);
+        let per_pair = self.n_msgs.div_ceil(self.n_dest);
+        ModelInputs {
+            s_proc: per_gpu * self.msg_size,
+            s_node: self.n_msgs * self.msg_size,
+            s_n2n: per_pair * self.msg_size,
+            m_p2n: self.n_dest.min(per_gpu),
+            m_n2n: per_pair,
+            m_std: per_gpu,
+            ppn,
+            dup_frac: self.dup_frac,
+        }
+    }
+
+    /// Model inputs for the 2-Step sub-cases: `All` matches
+    /// [`Scenario::inputs`]; `One` concentrates each destination node's
+    /// traffic on a single source GPU, so the active GPU pairs with exactly
+    /// one destination (m_p2n = 1) and carries that node-pair's volume.
+    pub fn inputs_two_step(&self, machine: &Machine, ppn: usize, case: TwoStepCase) -> ModelInputs {
+        let mut mi = self.inputs(machine, ppn);
+        if case == TwoStepCase::One {
+            let per_pair = self.n_msgs.div_ceil(self.n_dest);
+            mi.s_proc = per_pair * self.msg_size;
+            mi.m_p2n = 1;
+            mi.m_std = per_pair;
+        }
+        mi
+    }
+
+    /// Materialize the scenario as an explicit [`CommPattern`] (used to
+    /// cross-check the closed-form inputs against `CommPattern::stats` and
+    /// to drive the simulator on the same workload).
+    ///
+    /// Node 0 is the sender; destinations rotate over nodes `1..=n_dest` and
+    /// their GPUs. Requires `machine.num_nodes > n_dest`.
+    pub fn materialize(&self, machine: &Machine) -> CommPattern {
+        assert!(machine.num_nodes > self.n_dest, "need {} nodes, machine has {}", self.n_dest + 1, machine.num_nodes);
+        let gpn = machine.gpus_per_node();
+        let mut msgs = Vec::with_capacity(self.n_msgs);
+        for i in 0..self.n_msgs {
+            let src = GpuId(i % gpn); // even spread over node-0 GPUs
+            let dest_node = 1 + (i % self.n_dest);
+            let dst = GpuId(dest_node * gpn + (i / self.n_dest) % gpn);
+            msgs.push(Msg::new(src, dst, self.msg_size));
+        }
+        CommPattern::new(msgs)
+    }
+}
+
+/// Random irregular pattern over a machine: `n_msgs` messages with sizes
+/// log-uniform in `[1, max_bytes]`, endpoints uniform over distinct GPUs.
+/// With probability `dup_p`, a message reuses the previous message's source
+/// and duplicate group (modeling the data redundancy of Section 2.3).
+pub fn random_pattern(machine: &Machine, rng: &mut Rng, n_msgs: usize, max_bytes: usize, dup_p: f64) -> CommPattern {
+    let total = machine.total_gpus();
+    assert!(total >= 2, "need at least 2 GPUs");
+    let mut msgs: Vec<Msg> = Vec::with_capacity(n_msgs);
+    let mut next_group: u32 = 0;
+    for _ in 0..n_msgs {
+        let reuse = !msgs.is_empty() && rng.bool(dup_p);
+        let (src, bytes, group) = if reuse {
+            let prev = *msgs.last().unwrap();
+            let g = if prev.dup_group == Msg::NO_DUP {
+                let g = next_group;
+                next_group += 1;
+                msgs.last_mut().unwrap().dup_group = g;
+                g
+            } else {
+                prev.dup_group
+            };
+            (prev.src, prev.bytes, g)
+        } else {
+            let src = GpuId(rng.usize_in(0, total));
+            let exp = rng.usize_in(0, (max_bytes.max(2) as f64).log2() as usize + 1);
+            let bytes = (1usize << exp).min(max_bytes).max(1);
+            (src, bytes, Msg::NO_DUP)
+        };
+        let mut dst = GpuId(rng.usize_in(0, total));
+        while dst == src {
+            dst = GpuId(rng.usize_in(0, total));
+        }
+        msgs.push(Msg { src, dst, bytes, dup_group: group });
+    }
+    CommPattern::new(msgs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::machines::lassen;
+
+    #[test]
+    fn scenario_inputs_match_materialized_stats() {
+        let machine = lassen(17);
+        for (n_msgs, n_dest) in [(32, 4), (256, 4), (32, 16), (256, 16)] {
+            let sc = Scenario { n_msgs, msg_size: 2048, n_dest, dup_frac: 0.0 };
+            let mi = sc.inputs(&machine, 40);
+            let st = sc.materialize(&machine).stats(&machine);
+            assert_eq!(mi.s_node, st.s_node, "{n_msgs}/{n_dest} s_node");
+            assert_eq!(mi.s_proc, st.s_proc, "{n_msgs}/{n_dest} s_proc");
+            assert_eq!(mi.s_n2n, st.s_n2n, "{n_msgs}/{n_dest} s_n2n");
+            assert_eq!(mi.m_n2n, st.m_n2n, "{n_msgs}/{n_dest} m_n2n");
+            assert_eq!(mi.m_std, st.m_std, "{n_msgs}/{n_dest} m_std");
+        }
+    }
+
+    #[test]
+    fn two_step_one_is_lighter_per_proc() {
+        let machine = lassen(17);
+        let sc = Scenario { n_msgs: 256, msg_size: 1024, n_dest: 16, dup_frac: 0.0 };
+        let all = sc.inputs_two_step(&machine, 40, TwoStepCase::All);
+        let one = sc.inputs_two_step(&machine, 40, TwoStepCase::One);
+        assert_eq!(one.m_p2n, 1);
+        assert!(one.s_proc <= all.s_proc * 16);
+        assert_eq!(one.s_node, all.s_node); // node volume unchanged
+    }
+
+    #[test]
+    fn materialize_counts() {
+        let machine = lassen(5);
+        let sc = Scenario { n_msgs: 32, msg_size: 64, n_dest: 4, dup_frac: 0.0 };
+        let p = sc.materialize(&machine);
+        assert_eq!(p.msgs.len(), 32);
+        // All messages leave node 0.
+        assert!(p.msgs.iter().all(|m| machine.gpu_node(m.src).0 == 0));
+        assert!(p.msgs.iter().all(|m| machine.gpu_node(m.dst).0 != 0));
+    }
+
+    #[test]
+    fn random_pattern_valid() {
+        let machine = lassen(4);
+        let mut rng = Rng::new(1);
+        let p = random_pattern(&machine, &mut rng, 500, 1 << 16, 0.3);
+        assert_eq!(p.msgs.len(), 500);
+        for m in &p.msgs {
+            assert_ne!(m.src, m.dst);
+            assert!(m.bytes >= 1 && m.bytes <= 1 << 16);
+            assert!(m.src.0 < machine.total_gpus());
+            assert!(m.dst.0 < machine.total_gpus());
+        }
+        // some duplicates should exist at dup_p = 0.3
+        assert!(p.duplicate_fraction(&machine) > 0.0);
+    }
+}

@@ -1,0 +1,262 @@
+//! Irregular point-to-point communication patterns.
+//!
+//! A [`CommPattern`] is the multiset of GPU→GPU payloads an operation must
+//! deliver — for a distributed SpMV, exactly the off-GPU vector values each
+//! owner must ship to each consumer. Strategies consume the pattern;
+//! [`CommPattern::stats`] derives the Table 7 parameters that feed the
+//! Table 6 models.
+
+pub mod generators;
+
+use crate::model::ModelInputs;
+use crate::topology::{GpuId, Machine, NodeId};
+use std::collections::BTreeMap;
+
+/// One logical message: `bytes` of payload owned by GPU `src` required by
+/// GPU `dst`. `dup_group` marks payloads that carry identical data: messages
+/// sharing a (src, dup_group) pair with dup_group != NONE duplicate the same
+/// source bytes (Section 2.3's "data redundancy"), which node-aware
+/// strategies may send across the network only once per destination node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Msg {
+    pub src: GpuId,
+    pub dst: GpuId,
+    pub bytes: usize,
+    pub dup_group: u32,
+}
+
+impl Msg {
+    pub const NO_DUP: u32 = u32::MAX;
+
+    pub fn new(src: GpuId, dst: GpuId, bytes: usize) -> Msg {
+        Msg { src, dst, bytes, dup_group: Msg::NO_DUP }
+    }
+}
+
+/// The communication pattern of one operation instance.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CommPattern {
+    pub msgs: Vec<Msg>,
+}
+
+/// Table 7 statistics plus derived counts, computed against a machine.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PatternStats {
+    /// Max bytes sent inter-node by a single GPU (`s_proc`).
+    pub s_proc: usize,
+    /// Max bytes injected into the network by a single node (`s_node`).
+    pub s_node: usize,
+    /// Max bytes between any ordered node pair (`s_node→node`).
+    pub s_n2n: usize,
+    /// Max number of distinct destination nodes for any single GPU
+    /// (`m_proc→node`).
+    pub m_p2n: usize,
+    /// Max number of messages between any ordered node pair
+    /// (`m_node→node`).
+    pub m_n2n: usize,
+    /// Max inter-node messages sent by a single GPU (standard `m`).
+    pub m_std: usize,
+    /// Max number of distinct source nodes any node receives from
+    /// (`num_IN_nodes` of Table 1).
+    pub num_in_nodes: usize,
+    /// Total inter-node bytes received by the heaviest node
+    /// (`total_IN_recv_vol` of Table 1).
+    pub total_in_recv_vol: usize,
+    /// Max bytes received by a node from one other node
+    /// (`max_IN_recv_size` of Table 1).
+    pub max_in_recv_size: usize,
+    /// Total inter-node message count across the whole pattern.
+    pub total_internode_msgs: usize,
+    /// Total inter-node bytes across the whole pattern.
+    pub total_internode_bytes: usize,
+}
+
+impl CommPattern {
+    pub fn new(msgs: Vec<Msg>) -> CommPattern {
+        CommPattern { msgs }
+    }
+
+    pub fn push(&mut self, msg: Msg) {
+        self.msgs.push(msg);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.msgs.is_empty()
+    }
+
+    /// Total payload bytes (all localities).
+    pub fn total_bytes(&self) -> usize {
+        self.msgs.iter().map(|m| m.bytes).sum()
+    }
+
+    /// Messages crossing node boundaries.
+    pub fn internode<'a>(&'a self, machine: &'a Machine) -> impl Iterator<Item = &'a Msg> + 'a {
+        self.msgs.iter().filter(move |m| machine.gpu_node(m.src) != machine.gpu_node(m.dst))
+    }
+
+    /// Messages staying within a node.
+    pub fn intranode<'a>(&'a self, machine: &'a Machine) -> impl Iterator<Item = &'a Msg> + 'a {
+        self.msgs.iter().filter(move |m| machine.gpu_node(m.src) == machine.gpu_node(m.dst))
+    }
+
+    /// Compute the Table 7 / Table 1 statistics.
+    pub fn stats(&self, machine: &Machine) -> PatternStats {
+        let mut per_gpu_bytes: BTreeMap<GpuId, usize> = BTreeMap::new();
+        let mut per_gpu_msgs: BTreeMap<GpuId, usize> = BTreeMap::new();
+        let mut per_gpu_dests: BTreeMap<GpuId, std::collections::BTreeSet<NodeId>> = BTreeMap::new();
+        let mut per_node_bytes: BTreeMap<NodeId, usize> = BTreeMap::new();
+        let mut per_pair_bytes: BTreeMap<(NodeId, NodeId), usize> = BTreeMap::new();
+        let mut per_pair_msgs: BTreeMap<(NodeId, NodeId), usize> = BTreeMap::new();
+        let mut recv_vol: BTreeMap<NodeId, usize> = BTreeMap::new();
+        let mut recv_srcs: BTreeMap<NodeId, std::collections::BTreeSet<NodeId>> = BTreeMap::new();
+        let mut total_msgs = 0usize;
+        let mut total_bytes = 0usize;
+
+        for m in self.internode(machine) {
+            let sn = machine.gpu_node(m.src);
+            let dn = machine.gpu_node(m.dst);
+            *per_gpu_bytes.entry(m.src).or_default() += m.bytes;
+            *per_gpu_msgs.entry(m.src).or_default() += 1;
+            per_gpu_dests.entry(m.src).or_default().insert(dn);
+            *per_node_bytes.entry(sn).or_default() += m.bytes;
+            *per_pair_bytes.entry((sn, dn)).or_default() += m.bytes;
+            *per_pair_msgs.entry((sn, dn)).or_default() += 1;
+            *recv_vol.entry(dn).or_default() += m.bytes;
+            recv_srcs.entry(dn).or_default().insert(sn);
+            total_msgs += 1;
+            total_bytes += m.bytes;
+        }
+
+        PatternStats {
+            s_proc: per_gpu_bytes.values().copied().max().unwrap_or(0),
+            s_node: per_node_bytes.values().copied().max().unwrap_or(0),
+            s_n2n: per_pair_bytes.values().copied().max().unwrap_or(0),
+            m_p2n: per_gpu_dests.values().map(|s| s.len()).max().unwrap_or(0),
+            m_n2n: per_pair_msgs.values().copied().max().unwrap_or(0),
+            m_std: per_gpu_msgs.values().copied().max().unwrap_or(0),
+            num_in_nodes: recv_srcs.values().map(|s| s.len()).max().unwrap_or(0),
+            total_in_recv_vol: recv_vol.values().copied().max().unwrap_or(0),
+            max_in_recv_size: per_pair_bytes.values().copied().max().unwrap_or(0),
+            total_internode_msgs: total_msgs,
+            total_internode_bytes: total_bytes,
+        }
+    }
+
+    /// Model inputs for the Table 6 evaluator. `ppn` is the active host
+    /// process count per node; `dup_frac` the duplicate-data fraction
+    /// (computed from `dup_group`s by [`CommPattern::duplicate_fraction`] or
+    /// supplied for synthetic scenarios).
+    pub fn model_inputs(&self, machine: &Machine, ppn: usize, dup_frac: f64) -> ModelInputs {
+        let st = self.stats(machine);
+        ModelInputs {
+            s_proc: st.s_proc,
+            s_node: st.s_node,
+            s_n2n: st.s_n2n,
+            m_p2n: st.m_p2n,
+            m_n2n: st.m_n2n,
+            m_std: st.m_std,
+            ppn,
+            dup_frac,
+        }
+    }
+
+    /// Fraction of inter-node bytes that are duplicates: for each
+    /// (src GPU, dup_group, destination node) the first copy is unique and
+    /// the rest are redundant.
+    pub fn duplicate_fraction(&self, machine: &Machine) -> f64 {
+        let mut total = 0usize;
+        let mut dup = 0usize;
+        let mut seen: std::collections::BTreeSet<(GpuId, u32, NodeId)> = std::collections::BTreeSet::new();
+        for m in self.internode(machine) {
+            total += m.bytes;
+            if m.dup_group != Msg::NO_DUP {
+                let key = (m.src, m.dup_group, machine.gpu_node(m.dst));
+                if !seen.insert(key) {
+                    dup += m.bytes;
+                }
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            dup as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::machines::lassen;
+
+    fn g(i: usize) -> GpuId {
+        GpuId(i)
+    }
+
+    #[test]
+    fn empty_pattern_zero_stats() {
+        let m = lassen(2);
+        let st = CommPattern::default().stats(&m);
+        assert_eq!(st, PatternStats::default());
+    }
+
+    #[test]
+    fn intranode_excluded_from_stats() {
+        let m = lassen(2);
+        let p = CommPattern::new(vec![
+            Msg::new(g(0), g(1), 100), // on-socket
+            Msg::new(g(0), g(2), 100), // on-node
+        ]);
+        let st = p.stats(&m);
+        assert_eq!(st.total_internode_msgs, 0);
+        assert_eq!(st.s_proc, 0);
+    }
+
+    #[test]
+    fn table7_stats_basic() {
+        let m = lassen(3); // nodes: gpus 0-3, 4-7, 8-11
+        let p = CommPattern::new(vec![
+            Msg::new(g(0), g(4), 100),
+            Msg::new(g(0), g(5), 200),
+            Msg::new(g(0), g(8), 50),
+            Msg::new(g(1), g(9), 400),
+        ]);
+        let st = p.stats(&m);
+        assert_eq!(st.s_proc, 400); // gpu1 sends 400 > gpu0's 350
+        assert_eq!(st.s_node, 750); // node0 injects everything
+        assert_eq!(st.s_n2n, 450); // node0->node2: 50+400
+        assert_eq!(st.m_p2n, 2); // gpu0 sends to nodes 1 and 2
+        assert_eq!(st.m_n2n, 2); // node0->node1 two msgs
+        assert_eq!(st.m_std, 3); // gpu0 sends 3 msgs
+        assert_eq!(st.num_in_nodes, 1);
+        assert_eq!(st.total_in_recv_vol, 450); // node2 receives 450
+        assert_eq!(st.max_in_recv_size, 450);
+        assert_eq!(st.total_internode_bytes, 750);
+    }
+
+    #[test]
+    fn duplicate_fraction_counts_repeats_per_node() {
+        let m = lassen(2);
+        let mut a = Msg::new(g(0), g(4), 100);
+        a.dup_group = 7;
+        let mut b = Msg::new(g(0), g(5), 100); // same data, same dest node -> dup
+        b.dup_group = 7;
+        let mut c = Msg::new(g(0), g(6), 100); // same data, same node -> dup
+        c.dup_group = 7;
+        let d = Msg::new(g(0), g(7), 100); // unique payload
+        let p = CommPattern::new(vec![a, b, c, d]);
+        let f = p.duplicate_fraction(&m);
+        assert!((f - 0.5).abs() < 1e-12, "got {f}"); // 200 of 400 bytes redundant
+    }
+
+    #[test]
+    fn model_inputs_carry_stats() {
+        let m = lassen(2);
+        let p = CommPattern::new(vec![Msg::new(g(0), g(4), 1024)]);
+        let mi = p.model_inputs(&m, 40, 0.1);
+        assert_eq!(mi.s_proc, 1024);
+        assert_eq!(mi.ppn, 40);
+        assert_eq!(mi.dup_frac, 0.1);
+        assert_eq!(mi.m_std, 1);
+    }
+}

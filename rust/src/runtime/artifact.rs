@@ -1,0 +1,92 @@
+//! Artifact registry: the static shapes shared between `python/compile/`
+//! (which lowers and serializes) and the Rust runtime (which loads and
+//! feeds buffers). Shapes must match exactly — XLA executables are
+//! shape-monomorphic.
+
+/// Specification of one AOT artifact.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    /// Logical name, e.g. `spmv_local_512x32`.
+    pub name: String,
+    /// Local rows per GPU partition (padded).
+    pub rows: usize,
+    /// ELL width of the diag block.
+    pub diag_width: usize,
+    /// ELL width of the offd block.
+    pub offd_width: usize,
+    /// Ghost (halo) vector length (padded).
+    pub ghost: usize,
+}
+
+impl ArtifactSpec {
+    pub fn new(rows: usize, diag_width: usize, offd_width: usize, ghost: usize) -> ArtifactSpec {
+        ArtifactSpec {
+            name: format!("spmv_local_r{rows}_d{diag_width}_o{offd_width}_g{ghost}"),
+            rows,
+            diag_width,
+            offd_width,
+            ghost,
+        }
+    }
+
+    pub fn file_name(&self) -> String {
+        format!("{}.hlo.txt", self.name)
+    }
+}
+
+/// The canonical local-SpMV artifact shapes built by `make artifacts`.
+/// Keep in sync with `python/compile/aot.py::SHAPES`.
+pub const SPMV_SHAPES: [(usize, usize, usize, usize); 3] = [
+    // (rows, diag_width, offd_width, ghost)
+    (256, 32, 16, 256),
+    (512, 32, 16, 512),
+    (1024, 32, 16, 1024),
+];
+
+/// Specs for the canonical shapes.
+pub fn spmv_specs() -> Vec<ArtifactSpec> {
+    SPMV_SHAPES.iter().map(|&(r, d, o, g)| ArtifactSpec::new(r, d, o, g)).collect()
+}
+
+/// The default local-SpMV artifact (mid shape).
+pub const SPMV_LOCAL: (usize, usize, usize, usize) = SPMV_SHAPES[1];
+
+/// Pick the smallest canonical spec that fits the given requirements, if
+/// any.
+pub fn fitting_spec(rows: usize, diag_width: usize, offd_width: usize, ghost: usize) -> Option<ArtifactSpec> {
+    SPMV_SHAPES
+        .iter()
+        .filter(|&&(r, d, o, g)| rows <= r && diag_width <= d && offd_width <= o && ghost <= g)
+        .min_by_key(|&&(r, _, _, _)| r)
+        .map(|&(r, d, o, g)| ArtifactSpec::new(r, d, o, g))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_stable() {
+        let s = ArtifactSpec::new(512, 32, 16, 512);
+        assert_eq!(s.file_name(), "spmv_local_r512_d32_o16_g512.hlo.txt");
+    }
+
+    #[test]
+    fn fitting_spec_picks_smallest() {
+        let s = fitting_spec(300, 20, 10, 100).unwrap();
+        assert_eq!(s.rows, 512);
+        let s = fitting_spec(100, 32, 16, 256).unwrap();
+        assert_eq!(s.rows, 256);
+    }
+
+    #[test]
+    fn fitting_spec_none_when_too_big() {
+        assert!(fitting_spec(4096, 32, 16, 512).is_none());
+        assert!(fitting_spec(512, 64, 16, 512).is_none());
+    }
+
+    #[test]
+    fn specs_cover_table() {
+        assert_eq!(spmv_specs().len(), SPMV_SHAPES.len());
+    }
+}

@@ -1,0 +1,23 @@
+//! Discrete-event cluster simulator — the testbed substitute.
+//!
+//! The simulator executes a communication [`Schedule`] against a
+//! [`Machine`] with the paper's measured [`MachineParams`]:
+//!
+//! - every endpoint (host process or GPU) is a serial resource — its
+//!   transfers and copies queue;
+//! - every node's NIC is a rate-limited resource — inter-node transfers
+//!   occupy it for `bytes / R_N`, which reproduces the max-rate injection
+//!   limit of Eq. (2.2) *emergently* when many processes inject at once;
+//! - each transfer's duration is the postal time (Eq. 2.1) with the
+//!   (α, β) row selected by endpoint kind, locality and per-message
+//!   protocol, exactly as in Section 3;
+//! - copies use the Table 3 `cudaMemcpyAsync` parameters, serialized per
+//!   GPU copy engine;
+//! - phases are barriers, matching the step structure of Section 2.3.
+//!
+//! [`exec::run`] returns per-phase and total simulated times.
+
+pub mod exec;
+pub mod network;
+
+pub use exec::{run, SimReport};

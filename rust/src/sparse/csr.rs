@@ -1,0 +1,315 @@
+//! Compressed sparse row (CSR) matrices, the serial SpMV oracle, and the
+//! padded ELL format consumed by the Pallas kernel (L1).
+
+/// CSR sparse matrix over f32 (the GPU-side value type).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Row pointers, `len == nrows + 1`.
+    pub rowptr: Vec<usize>,
+    /// Column indices, in-row order not required but generators sort them.
+    pub colidx: Vec<usize>,
+    pub values: Vec<f32>,
+}
+
+/// ELLPACK (padded) matrix: every row stores exactly `width` entries;
+/// padding uses column 0 with value 0.0. This is the TPU-friendly layout —
+/// fixed row width turns the irregular CSR loop into dense (rows × width)
+/// blocks (see DESIGN.md §Hardware-Adaptation).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Ell {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub width: usize,
+    /// Row-major `(nrows, width)` column indices (padded with 0).
+    pub cols: Vec<i32>,
+    /// Row-major `(nrows, width)` values (padded with 0.0).
+    pub vals: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from triplets; duplicates are summed, rows sorted by column.
+    pub fn from_triplets(nrows: usize, ncols: usize, triplets: &[(usize, usize, f32)]) -> Csr {
+        for &(r, c, _) in triplets {
+            assert!(r < nrows && c < ncols, "triplet ({r},{c}) out of bounds {nrows}x{ncols}");
+        }
+        let mut per_row: Vec<Vec<(usize, f32)>> = vec![Vec::new(); nrows];
+        for &(r, c, v) in triplets {
+            per_row[r].push((c, v));
+        }
+        let mut rowptr = Vec::with_capacity(nrows + 1);
+        let mut colidx = Vec::with_capacity(triplets.len());
+        let mut values = Vec::with_capacity(triplets.len());
+        rowptr.push(0);
+        for row in &mut per_row {
+            row.sort_by_key(|&(c, _)| c);
+            // merge duplicates
+            let mut merged: Vec<(usize, f32)> = Vec::with_capacity(row.len());
+            for &(c, v) in row.iter() {
+                match merged.last_mut() {
+                    Some(last) if last.0 == c => last.1 += v,
+                    _ => merged.push((c, v)),
+                }
+            }
+            for (c, v) in merged {
+                colidx.push(c);
+                values.push(v);
+            }
+            rowptr.push(colidx.len());
+        }
+        Csr { nrows, ncols, rowptr, colidx, values }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.colidx.len()
+    }
+
+    /// Non-zero density `nnz / (nrows * ncols)`.
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.nrows as f64 * self.ncols as f64)
+    }
+
+    /// Entries of one row as (col, value) slices.
+    pub fn row(&self, r: usize) -> (&[usize], &[f32]) {
+        let (a, b) = (self.rowptr[r], self.rowptr[r + 1]);
+        (&self.colidx[a..b], &self.values[a..b])
+    }
+
+    /// Maximum row population (the natural ELL width).
+    pub fn max_row_nnz(&self) -> usize {
+        (0..self.nrows).map(|r| self.rowptr[r + 1] - self.rowptr[r]).max().unwrap_or(0)
+    }
+
+    /// Serial SpMV oracle: `w = A · v` in f64 accumulation (the correctness
+    /// reference for every distributed run).
+    pub fn spmv(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(v.len(), self.ncols, "SpMV dimension mismatch");
+        let mut w = vec![0f32; self.nrows];
+        for r in 0..self.nrows {
+            let (cols, vals) = self.row(r);
+            let mut acc = 0f64;
+            for (&c, &a) in cols.iter().zip(vals) {
+                acc += a as f64 * v[c] as f64;
+            }
+            w[r] = acc as f32;
+        }
+        w
+    }
+
+    /// Convert to ELL with the given width (>= max_row_nnz). Rows with
+    /// fewer entries are padded with (col 0, 0.0).
+    pub fn to_ell(&self, width: usize) -> Ell {
+        assert!(width >= self.max_row_nnz(), "ELL width {width} < max row nnz {}", self.max_row_nnz());
+        let mut cols = vec![0i32; self.nrows * width];
+        let mut vals = vec![0f32; self.nrows * width];
+        for r in 0..self.nrows {
+            let (rc, rv) = self.row(r);
+            for (k, (&c, &v)) in rc.iter().zip(rv).enumerate() {
+                cols[r * width + k] = c as i32;
+                vals[r * width + k] = v;
+            }
+        }
+        Ell { nrows: self.nrows, ncols: self.ncols, width, cols, vals }
+    }
+
+    /// Extract the sub-matrix of rows `[r0, r1)` restricted to columns in
+    /// `[c0, c1)`, with column indices rebased to the slice (the "diag
+    /// block" extraction of Section 2.4.1).
+    pub fn slice(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Csr {
+        assert!(r0 <= r1 && r1 <= self.nrows && c0 <= c1 && c1 <= self.ncols);
+        let mut rowptr = Vec::with_capacity(r1 - r0 + 1);
+        let mut colidx = Vec::new();
+        let mut values = Vec::new();
+        rowptr.push(0);
+        for r in r0..r1 {
+            let (cols, vals) = self.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                if c >= c0 && c < c1 {
+                    colidx.push(c - c0);
+                    values.push(v);
+                }
+            }
+            rowptr.push(colidx.len());
+        }
+        Csr { nrows: r1 - r0, ncols: c1 - c0, rowptr, colidx, values }
+    }
+
+    /// Extract rows `[r0, r1)` keeping only columns *outside* `[c0, c1)`,
+    /// remapped through a gather list: returns (matrix over gathered
+    /// columns, sorted global column ids) — the "offd block + halo indices"
+    /// of Section 2.4.1.
+    pub fn offd_block(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> (Csr, Vec<usize>) {
+        let mut needed: Vec<usize> = Vec::new();
+        for r in r0..r1 {
+            let (cols, _) = self.row(r);
+            for &c in cols {
+                if c < c0 || c >= c1 {
+                    needed.push(c);
+                }
+            }
+        }
+        needed.sort_unstable();
+        needed.dedup();
+        let lookup: std::collections::BTreeMap<usize, usize> =
+            needed.iter().enumerate().map(|(i, &c)| (c, i)).collect();
+        let mut rowptr = Vec::with_capacity(r1 - r0 + 1);
+        let mut colidx = Vec::new();
+        let mut values = Vec::new();
+        rowptr.push(0);
+        for r in r0..r1 {
+            let (cols, vals) = self.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                if c < c0 || c >= c1 {
+                    colidx.push(lookup[&c]);
+                    values.push(v);
+                }
+            }
+            rowptr.push(colidx.len());
+        }
+        (Csr { nrows: r1 - r0, ncols: needed.len().max(1), rowptr, colidx, values }, needed)
+    }
+
+    /// Structural transpose pattern: for each column, which rows touch it.
+    pub fn column_rows(&self) -> Vec<Vec<usize>> {
+        let mut by_col: Vec<Vec<usize>> = vec![Vec::new(); self.ncols];
+        for r in 0..self.nrows {
+            let (cols, _) = self.row(r);
+            for &c in cols {
+                by_col[c].push(r);
+            }
+        }
+        by_col
+    }
+}
+
+impl Ell {
+    /// Dense-logic SpMV over the padded layout (mirrors the Pallas kernel's
+    /// arithmetic exactly, including reading v[0] for padded slots times
+    /// 0.0).
+    pub fn spmv(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(v.len(), self.ncols);
+        let mut w = vec![0f32; self.nrows];
+        for r in 0..self.nrows {
+            let mut acc = 0f32;
+            for k in 0..self.width {
+                let c = self.cols[r * self.width + k] as usize;
+                acc += self.vals[r * self.width + k] * v[c];
+            }
+            w[r] = acc;
+        }
+        w
+    }
+
+    /// Fraction of stored slots that are padding.
+    pub fn padding_fraction(&self) -> f64 {
+        let nnz: usize = self.vals.iter().filter(|&&v| v != 0.0).count();
+        1.0 - nnz as f64 / (self.nrows * self.width).max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Csr {
+        // [ 2 0 1 ]
+        // [ 0 3 0 ]
+        // [ 4 0 5 ]
+        Csr::from_triplets(3, 3, &[(0, 0, 2.0), (0, 2, 1.0), (1, 1, 3.0), (2, 0, 4.0), (2, 2, 5.0)])
+    }
+
+    #[test]
+    fn from_triplets_sorted_rows() {
+        let a = Csr::from_triplets(2, 3, &[(0, 2, 1.0), (0, 0, 2.0), (1, 1, 3.0)]);
+        assert_eq!(a.row(0).0, &[0, 2]);
+        assert_eq!(a.row(0).1, &[2.0, 1.0]);
+    }
+
+    #[test]
+    fn duplicates_summed() {
+        let a = Csr::from_triplets(1, 2, &[(0, 1, 1.5), (0, 1, 2.5)]);
+        assert_eq!(a.nnz(), 1);
+        assert_eq!(a.row(0).1, &[4.0]);
+    }
+
+    #[test]
+    fn spmv_oracle() {
+        let a = small();
+        let w = a.spmv(&[1.0, 2.0, 3.0]);
+        assert_eq!(w, vec![5.0, 6.0, 19.0]);
+    }
+
+    #[test]
+    fn ell_matches_csr() {
+        let a = small();
+        let e = a.to_ell(a.max_row_nnz());
+        let v = [1.0f32, 2.0, 3.0];
+        assert_eq!(a.spmv(&v), e.spmv(&v));
+        assert_eq!(e.width, 2);
+    }
+
+    #[test]
+    fn ell_padding_fraction() {
+        let a = small();
+        let e = a.to_ell(4);
+        // 5 nnz of 12 slots
+        assert!((e.padding_fraction() - (1.0 - 5.0 / 12.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slice_diag_block() {
+        let a = small();
+        let d = a.slice(1, 3, 1, 3);
+        assert_eq!(d.nrows, 2);
+        assert_eq!(d.ncols, 2);
+        // row 1 restricted to cols1-2: entry (1,1)=3 -> local (0,0)
+        assert_eq!(d.row(0).0, &[0]);
+        assert_eq!(d.row(0).1, &[3.0]);
+        // row 2: (2,2)=5 -> local (1,1)
+        assert_eq!(d.row(1).0, &[1]);
+    }
+
+    #[test]
+    fn offd_block_and_halo() {
+        let a = small();
+        // rows 1..3, owned cols 1..3: offd entries are col 0 (rows 2)
+        let (o, halo) = a.offd_block(1, 3, 1, 3);
+        assert_eq!(halo, vec![0]);
+        assert_eq!(o.nrows, 2);
+        assert_eq!(o.row(0).0.len(), 0);
+        assert_eq!(o.row(1).0, &[0]);
+        assert_eq!(o.row(1).1, &[4.0]);
+    }
+
+    #[test]
+    fn diag_offd_recompose_spmv() {
+        // diag·v_local + offd·v_halo == full SpMV on the row slice.
+        let a = small();
+        let v = [1.0f32, 2.0, 3.0];
+        let full = a.spmv(&v);
+        let d = a.slice(1, 3, 1, 3);
+        let (o, halo) = a.offd_block(1, 3, 1, 3);
+        let v_local = &v[1..3];
+        let v_halo: Vec<f32> = halo.iter().map(|&c| v[c]).collect();
+        let wd = d.spmv(v_local);
+        let wo = o.spmv(if v_halo.is_empty() { &[0.0] } else { &v_halo });
+        let combined: Vec<f32> = wd.iter().zip(&wo).map(|(a, b)| a + b).collect();
+        assert_eq!(combined, full[1..3]);
+    }
+
+    #[test]
+    fn column_rows_transpose() {
+        let a = small();
+        let cr = a.column_rows();
+        assert_eq!(cr[0], vec![0, 2]);
+        assert_eq!(cr[1], vec![1]);
+        assert_eq!(cr[2], vec![0, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn triplet_bounds_checked() {
+        Csr::from_triplets(2, 2, &[(2, 0, 1.0)]);
+    }
+}

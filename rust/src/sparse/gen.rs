@@ -1,0 +1,212 @@
+//! Structured sparse-matrix generators: stencils, banded, arrow and
+//! random-block matrices — the synthetic building blocks behind the
+//! SuiteSparse structural proxies in [`super::suite`].
+
+use super::csr::Csr;
+use crate::util::rng::Rng;
+
+/// 2D 5-point Laplacian stencil on an `nx × ny` grid.
+pub fn stencil_5pt(nx: usize, ny: usize) -> Csr {
+    let n = nx * ny;
+    let mut t = Vec::with_capacity(5 * n);
+    for j in 0..ny {
+        for i in 0..nx {
+            let r = j * nx + i;
+            t.push((r, r, 4.0f32));
+            if i > 0 {
+                t.push((r, r - 1, -1.0));
+            }
+            if i + 1 < nx {
+                t.push((r, r + 1, -1.0));
+            }
+            if j > 0 {
+                t.push((r, r - nx, -1.0));
+            }
+            if j + 1 < ny {
+                t.push((r, r + nx, -1.0));
+            }
+        }
+    }
+    Csr::from_triplets(n, n, &t)
+}
+
+/// 3D 27-point stencil on an `nx × ny × nz` grid (the paper's
+/// unstructured-mesh-like communication pattern; heavier halos than 7-pt).
+pub fn stencil_27pt(nx: usize, ny: usize, nz: usize) -> Csr {
+    let n = nx * ny * nz;
+    let idx = |i: usize, j: usize, k: usize| (k * ny + j) * nx + i;
+    let mut t = Vec::with_capacity(27 * n);
+    for k in 0..nz {
+        for j in 0..ny {
+            for i in 0..nx {
+                let r = idx(i, j, k);
+                for dk in -1i64..=1 {
+                    for dj in -1i64..=1 {
+                        for di in -1i64..=1 {
+                            let (ii, jj, kk) = (i as i64 + di, j as i64 + dj, k as i64 + dk);
+                            if ii < 0 || jj < 0 || kk < 0 || ii >= nx as i64 || jj >= ny as i64 || kk >= nz as i64 {
+                                continue;
+                            }
+                            let c = idx(ii as usize, jj as usize, kk as usize);
+                            let v = if c == r { 26.0 } else { -1.0 };
+                            t.push((r, c, v));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Csr::from_triplets(n, n, &t)
+}
+
+/// Banded matrix: `band` off-diagonals on each side with deterministic
+/// pseudo-random values (thermal2-like long thin band structure).
+pub fn banded(n: usize, band: usize, rng: &mut Rng) -> Csr {
+    let mut t = Vec::new();
+    for r in 0..n {
+        t.push((r, r, 2.0 + rng.f64() as f32));
+        let lo = r.saturating_sub(band);
+        let hi = (r + band + 1).min(n);
+        for c in lo..hi {
+            if c != r && rng.bool(0.6) {
+                t.push((r, c, -(rng.f64() as f32) - 0.1));
+            }
+        }
+    }
+    Csr::from_triplets(n, n, &t)
+}
+
+/// Arrow matrix: dense band plus heavy first `head` rows *and* columns —
+/// the audikw_1-like structure ("high number of nonzero entries in the top
+/// rows and first columns", Section 4.5) that generates worst-case on-node
+/// and inter-node communication.
+pub fn arrow(n: usize, head: usize, band: usize, rng: &mut Rng) -> Csr {
+    assert!(head < n);
+    let mut t = Vec::new();
+    for r in 0..n {
+        t.push((r, r, 4.0f32));
+        // local band
+        let lo = r.saturating_sub(band);
+        let hi = (r + band + 1).min(n);
+        for c in lo..hi {
+            if c != r && rng.bool(0.5) {
+                t.push((r, c, -0.5));
+            }
+        }
+        // arrow head: couplings to the first `head` rows/cols
+        if r >= head {
+            for h in 0..head {
+                if rng.bool(0.4) {
+                    t.push((r, h, -0.25));
+                    t.push((h, r, -0.25));
+                }
+            }
+        }
+    }
+    Csr::from_triplets(n, n, &t)
+}
+
+/// Block-random matrix: `nb × nb` blocks of size `bs`, each nonzero with
+/// probability `block_p`, filled at `fill` density (Serena/Geo-like blocky
+/// structure from 3D FEM meshes).
+pub fn random_block(nb: usize, bs: usize, block_p: f64, fill: f64, rng: &mut Rng) -> Csr {
+    let n = nb * bs;
+    let mut t = Vec::new();
+    for bi in 0..nb {
+        for bj in 0..nb {
+            let coupled = bi == bj || rng.bool(block_p * decay(bi, bj));
+            if !coupled {
+                continue;
+            }
+            for i in 0..bs {
+                let r = bi * bs + i;
+                for j in 0..bs {
+                    let c = bj * bs + j;
+                    if r == c {
+                        t.push((r, c, 4.0));
+                    } else if rng.bool(fill) {
+                        t.push((r, c, -0.1 - rng.f64() as f32));
+                    }
+                }
+            }
+        }
+    }
+    Csr::from_triplets(n, n, &t)
+}
+
+/// Coupling probability decays with block distance (meshes are local).
+fn decay(bi: usize, bj: usize) -> f64 {
+    let d = bi.abs_diff(bj) as f64;
+    1.0 / (1.0 + d * d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stencil5_shape_and_symmetry() {
+        let a = stencil_5pt(4, 3);
+        assert_eq!(a.nrows, 12);
+        // interior point has 5 entries
+        let (cols, _) = a.row(5); // (1,1)
+        assert_eq!(cols.len(), 5);
+        // corner has 3
+        assert_eq!(a.row(0).0.len(), 3);
+        // row sums: 4 - (#neighbors) >= 0
+        for r in 0..a.nrows {
+            let s: f32 = a.row(r).1.iter().sum();
+            assert!(s >= 0.0);
+        }
+    }
+
+    #[test]
+    fn stencil27_interior_degree() {
+        let a = stencil_27pt(4, 4, 4);
+        assert_eq!(a.nrows, 64);
+        // interior point (1,1,1) -> 27 entries
+        let r = (1 * 4 + 1) * 4 + 1;
+        assert_eq!(a.row(r).0.len(), 27);
+        // corner -> 8
+        assert_eq!(a.row(0).0.len(), 8);
+    }
+
+    #[test]
+    fn banded_within_band() {
+        let mut rng = Rng::new(3);
+        let a = banded(100, 5, &mut rng);
+        for r in 0..a.nrows {
+            for &c in a.row(r).0 {
+                assert!(c.abs_diff(r) <= 5);
+            }
+        }
+    }
+
+    #[test]
+    fn arrow_head_rows_heavy() {
+        let mut rng = Rng::new(5);
+        let a = arrow(500, 20, 3, &mut rng);
+        let head_avg: f64 = (0..20).map(|r| a.row(r).0.len()).sum::<usize>() as f64 / 20.0;
+        let tail_avg: f64 = (400..500).map(|r| a.row(r).0.len()).sum::<usize>() as f64 / 100.0;
+        assert!(head_avg > 3.0 * tail_avg, "head {head_avg} vs tail {tail_avg}");
+    }
+
+    #[test]
+    fn random_block_diagonal_present() {
+        let mut rng = Rng::new(7);
+        let a = random_block(8, 16, 0.3, 0.2, &mut rng);
+        assert_eq!(a.nrows, 128);
+        for r in 0..a.nrows {
+            let (cols, vals) = a.row(r);
+            let pos = cols.iter().position(|&c| c == r).expect("diagonal");
+            assert_eq!(vals[pos], 4.0);
+        }
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        let a1 = banded(50, 3, &mut Rng::new(11));
+        let a2 = banded(50, 3, &mut Rng::new(11));
+        assert_eq!(a1, a2);
+    }
+}

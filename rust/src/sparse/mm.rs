@@ -1,0 +1,174 @@
+//! Matrix Market I/O — reads the real SuiteSparse files when available
+//! (coordinate format, general/symmetric, real/integer/pattern) and writes
+//! matrices back out for inspection.
+
+use super::csr::Csr;
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+/// Matrix Market errors.
+#[derive(Debug, thiserror::Error)]
+pub enum MmError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+    #[error("unsupported format: {0}")]
+    Unsupported(String),
+}
+
+/// Read a Matrix Market coordinate file into CSR.
+pub fn read(path: impl AsRef<Path>) -> Result<Csr, MmError> {
+    let file = std::fs::File::open(path)?;
+    read_from(std::io::BufReader::new(file))
+}
+
+/// Read from any buffered reader (testable without files).
+pub fn read_from<R: BufRead>(reader: R) -> Result<Csr, MmError> {
+    let mut lines = reader.lines().enumerate();
+
+    // Header: %%MatrixMarket matrix coordinate <field> <symmetry>
+    let (_, header) = lines.next().ok_or(MmError::Parse { line: 1, msg: "empty file".into() })?;
+    let header = header?;
+    let h: Vec<String> = header.split_whitespace().map(|s| s.to_lowercase()).collect();
+    if h.len() < 5 || !h[0].starts_with("%%matrixmarket") || h[1] != "matrix" {
+        return Err(MmError::Parse { line: 1, msg: format!("bad header {header:?}") });
+    }
+    if h[2] != "coordinate" {
+        return Err(MmError::Unsupported(format!("format {} (only coordinate)", h[2])));
+    }
+    let field = h[3].clone();
+    if !matches!(field.as_str(), "real" | "integer" | "pattern") {
+        return Err(MmError::Unsupported(format!("field {field}")));
+    }
+    let symmetry = h[4].clone();
+    if !matches!(symmetry.as_str(), "general" | "symmetric") {
+        return Err(MmError::Unsupported(format!("symmetry {symmetry}")));
+    }
+
+    // Size line (skipping comments).
+    let mut size: Option<(usize, usize, usize)> = None;
+    let mut triplets: Vec<(usize, usize, f32)> = Vec::new();
+    for (i, line) in lines {
+        let line = line?;
+        let lineno = i + 1;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('%') {
+            continue;
+        }
+        let toks: Vec<&str> = trimmed.split_whitespace().collect();
+        match size {
+            None => {
+                if toks.len() != 3 {
+                    return Err(MmError::Parse { line: lineno, msg: format!("bad size line {trimmed:?}") });
+                }
+                let parse = |t: &str| -> Result<usize, MmError> {
+                    t.parse().map_err(|_| MmError::Parse { line: lineno, msg: format!("bad size {t:?}") })
+                };
+                size = Some((parse(toks[0])?, parse(toks[1])?, parse(toks[2])?));
+                triplets.reserve(size.unwrap().2);
+            }
+            Some((nrows, ncols, _)) => {
+                if toks.len() < 2 {
+                    return Err(MmError::Parse { line: lineno, msg: format!("bad entry {trimmed:?}") });
+                }
+                let r: usize = toks[0]
+                    .parse::<usize>()
+                    .map_err(|_| MmError::Parse { line: lineno, msg: format!("bad row {:?}", toks[0]) })?;
+                let c: usize = toks[1]
+                    .parse::<usize>()
+                    .map_err(|_| MmError::Parse { line: lineno, msg: format!("bad col {:?}", toks[1]) })?;
+                if r == 0 || c == 0 || r > nrows || c > ncols {
+                    return Err(MmError::Parse { line: lineno, msg: format!("entry ({r},{c}) out of bounds") });
+                }
+                let v: f32 = if field == "pattern" {
+                    1.0
+                } else {
+                    toks.get(2)
+                        .ok_or(MmError::Parse { line: lineno, msg: "missing value".into() })?
+                        .parse()
+                        .map_err(|_| MmError::Parse { line: lineno, msg: format!("bad value {:?}", toks[2]) })?
+                };
+                triplets.push((r - 1, c - 1, v));
+                if symmetry == "symmetric" && r != c {
+                    triplets.push((c - 1, r - 1, v));
+                }
+            }
+        }
+    }
+    let (nrows, ncols, _) = size.ok_or(MmError::Parse { line: 0, msg: "missing size line".into() })?;
+    Ok(Csr::from_triplets(nrows, ncols, &triplets))
+}
+
+/// Write a CSR matrix as Matrix Market coordinate/real/general.
+pub fn write(path: impl AsRef<Path>, a: &Csr) -> Result<(), MmError> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(f, "% written by hetcomm")?;
+    writeln!(f, "{} {} {}", a.nrows, a.ncols, a.nnz())?;
+    for r in 0..a.nrows {
+        let (cols, vals) = a.row(r);
+        for (&c, &v) in cols.iter().zip(vals) {
+            writeln!(f, "{} {} {}", r + 1, c + 1, v)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn read_general_real() {
+        let text = "%%MatrixMarket matrix coordinate real general\n% comment\n3 3 3\n1 1 2.0\n2 2 3.0\n3 1 4.5\n";
+        let a = read_from(Cursor::new(text)).unwrap();
+        assert_eq!(a.nrows, 3);
+        assert_eq!(a.nnz(), 3);
+        assert_eq!(a.row(2).1, &[4.5]);
+    }
+
+    #[test]
+    fn read_symmetric_expands() {
+        let text = "%%MatrixMarket matrix coordinate real symmetric\n2 2 2\n1 1 1.0\n2 1 5.0\n";
+        let a = read_from(Cursor::new(text)).unwrap();
+        assert_eq!(a.nnz(), 3); // (0,0), (1,0), (0,1)
+        assert_eq!(a.row(0).0, &[0, 1]);
+    }
+
+    #[test]
+    fn read_pattern_ones() {
+        let text = "%%MatrixMarket matrix coordinate pattern general\n2 2 2\n1 2\n2 1\n";
+        let a = read_from(Cursor::new(text)).unwrap();
+        assert_eq!(a.row(0).1, &[1.0]);
+    }
+
+    #[test]
+    fn rejects_array_format() {
+        let text = "%%MatrixMarket matrix array real general\n2 2\n1.0\n";
+        assert!(matches!(read_from(Cursor::new(text)), Err(MmError::Unsupported(_))));
+    }
+
+    #[test]
+    fn rejects_out_of_bounds() {
+        let text = "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n";
+        assert!(matches!(read_from(Cursor::new(text)), Err(MmError::Parse { .. })));
+    }
+
+    #[test]
+    fn one_based_indexing() {
+        let text = "%%MatrixMarket matrix coordinate real general\n2 2 1\n0 1 1.0\n";
+        assert!(read_from(Cursor::new(text)).is_err());
+    }
+
+    #[test]
+    fn roundtrip_via_tempfile() {
+        let a = crate::sparse::gen::stencil_5pt(5, 5);
+        let path = std::env::temp_dir().join("hetcomm_mm_roundtrip.mtx");
+        write(&path, &a).unwrap();
+        let b = read(&path).unwrap();
+        assert_eq!(a, b);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,12 @@
+//! Sparse-matrix substrate: CSR/ELL storage, Matrix Market I/O, structured
+//! generators, SuiteSparse structural proxies, and the row-wise partitioner
+//! that induces the distributed-SpMV communication patterns (Section 2.4).
+
+pub mod csr;
+pub mod gen;
+pub mod mm;
+pub mod partition;
+pub mod suite;
+
+pub use csr::{Csr, Ell};
+pub use partition::{PartitionedMatrix, Partition};

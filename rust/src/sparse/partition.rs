@@ -1,0 +1,344 @@
+//! Row-wise partitioning of a sparse matrix across GPUs and the induced
+//! halo-exchange communication pattern (Section 2.4.1, Figure 2.8).
+//!
+//! Rows (and the matching vector entries) are distributed in contiguous
+//! blocks. Each part's rows split into the **diag block** (columns owned by
+//! the part) and the **offd block** (columns owned elsewhere); the offd
+//! column set is the part's *halo* — the vector values that must be
+//! communicated before the local SpMV can complete.
+//!
+//! [`PartitionedMatrix::comm_pattern`] converts the halo requirements into a
+//! [`CommPattern`], with exact duplicate-data classes: source values needed
+//! by several GPUs on one node share a `dup_group`, so node-aware schedules
+//! ship them across the network once (Section 2.3).
+
+use super::csr::Csr;
+use crate::pattern::{CommPattern, Msg};
+use crate::topology::{GpuId, Machine};
+use std::collections::BTreeMap;
+
+/// Contiguous row partition over `nparts` parts.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Partition {
+    pub n: usize,
+    pub offsets: Vec<usize>,
+}
+
+impl Partition {
+    /// Balanced contiguous partition: first `n % nparts` parts get one
+    /// extra row.
+    pub fn balanced(n: usize, nparts: usize) -> Partition {
+        assert!(nparts > 0 && n >= nparts, "cannot split {n} rows into {nparts} parts");
+        let base = n / nparts;
+        let extra = n % nparts;
+        let mut offsets = Vec::with_capacity(nparts + 1);
+        let mut acc = 0;
+        offsets.push(0);
+        for p in 0..nparts {
+            acc += base + usize::from(p < extra);
+            offsets.push(acc);
+        }
+        Partition { n, offsets }
+    }
+
+    pub fn nparts(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Row range `[start, end)` of part `p`.
+    pub fn range(&self, p: usize) -> (usize, usize) {
+        (self.offsets[p], self.offsets[p + 1])
+    }
+
+    pub fn size(&self, p: usize) -> usize {
+        self.offsets[p + 1] - self.offsets[p]
+    }
+
+    /// Largest part size (the static shape the AOT kernel is padded to).
+    pub fn max_size(&self) -> usize {
+        (0..self.nparts()).map(|p| self.size(p)).max().unwrap_or(0)
+    }
+
+    /// Owning part of a row (binary search).
+    pub fn owner(&self, row: usize) -> usize {
+        assert!(row < self.n, "row {row} out of range {}", self.n);
+        match self.offsets.binary_search(&row) {
+            Ok(p) if p < self.nparts() => p,
+            Ok(p) => p - 1, // row == n boundary can't happen (asserted), p == nparts means last offset
+            Err(p) => p - 1,
+        }
+    }
+}
+
+/// One part's local view: diag/offd blocks plus halo metadata.
+#[derive(Clone, Debug)]
+pub struct PartBlocks {
+    /// Diagonal block over owned columns (local indices).
+    pub diag: Csr,
+    /// Off-diagonal block over gathered halo columns (ghost indices).
+    pub offd: Csr,
+    /// Sorted global column ids backing the ghost indices.
+    pub halo: Vec<usize>,
+    /// Receive lists: owner part → global indices (sorted; ghost position =
+    /// index into `halo`).
+    pub recv_from: BTreeMap<usize, Vec<usize>>,
+}
+
+/// A matrix partitioned row-wise across `nparts` GPUs.
+#[derive(Clone, Debug)]
+pub struct PartitionedMatrix {
+    pub partition: Partition,
+    pub parts: Vec<PartBlocks>,
+    /// Send lists: for each part, destination part → *local* row indices of
+    /// the owned vector entries to ship.
+    pub send_to: Vec<BTreeMap<usize, Vec<usize>>>,
+}
+
+impl PartitionedMatrix {
+    /// Partition `a` into `nparts` contiguous row blocks.
+    pub fn build(a: &Csr, nparts: usize) -> PartitionedMatrix {
+        assert_eq!(a.nrows, a.ncols, "SpMV partitioning expects a square matrix");
+        let partition = Partition::balanced(a.nrows, nparts);
+        let mut parts = Vec::with_capacity(nparts);
+        let mut send_to: Vec<BTreeMap<usize, Vec<usize>>> = vec![BTreeMap::new(); nparts];
+
+        for p in 0..nparts {
+            let (r0, r1) = partition.range(p);
+            let diag = a.slice(r0, r1, r0, r1);
+            let (offd, halo) = a.offd_block(r0, r1, r0, r1);
+            let mut recv_from: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+            for &col in &halo {
+                let owner = partition.owner(col);
+                recv_from.entry(owner).or_default().push(col);
+            }
+            for (&owner, cols) in &recv_from {
+                let (o0, _) = partition.range(owner);
+                send_to[owner].entry(p).or_default().extend(cols.iter().map(|&c| c - o0));
+            }
+            parts.push(PartBlocks { diag, offd, halo, recv_from });
+        }
+
+        PartitionedMatrix { partition, parts, send_to }
+    }
+
+    /// The induced halo-exchange communication pattern. `elem_size` is the
+    /// per-value payload in bytes (8 for double-precision vectors, as in the
+    /// paper's benchmarks). Duplicate classes are exact: for each
+    /// (source GPU, destination node), halo values requested by multiple
+    /// GPUs share a `dup_group`.
+    pub fn comm_pattern(&self, machine: &Machine, elem_size: usize) -> CommPattern {
+        assert!(self.partition.nparts() <= machine.total_gpus(), "partition has more parts than machine GPUs");
+        let nparts = self.partition.nparts();
+        let mut msgs = Vec::new();
+        let mut next_group: u32 = 0;
+
+        // For each source part: destination parts grouped by node, then
+        // indices grouped by requester set.
+        for src in 0..nparts {
+            let mut by_node: BTreeMap<usize, Vec<usize>> = BTreeMap::new(); // node -> dst parts
+            for &dst in self.send_to[src].keys() {
+                by_node.entry(machine.gpu_node(GpuId(dst)).0).or_default().push(dst);
+            }
+            for (_node, dsts) in by_node {
+                if dsts.len() == 1 {
+                    let dst = dsts[0];
+                    let count = self.send_to[src][&dst].len();
+                    if count > 0 {
+                        msgs.push(Msg::new(GpuId(src), GpuId(dst), count * elem_size));
+                    }
+                    continue;
+                }
+                // Requester-set classes over this node's destinations.
+                let mut class_of: BTreeMap<usize, u64> = BTreeMap::new(); // local idx -> bitmask over dsts
+                for (bit, &dst) in dsts.iter().enumerate() {
+                    for &li in &self.send_to[src][&dst] {
+                        *class_of.entry(li).or_default() |= 1 << bit;
+                    }
+                }
+                let mut class_counts: BTreeMap<u64, usize> = BTreeMap::new();
+                for &mask in class_of.values() {
+                    *class_counts.entry(mask).or_default() += 1;
+                }
+                for (mask, count) in class_counts {
+                    let bytes = count * elem_size;
+                    let requesters: Vec<usize> =
+                        dsts.iter().enumerate().filter(|(b, _)| mask & (1 << b) != 0).map(|(_, &d)| d).collect();
+                    let group = if requesters.len() > 1 {
+                        let g = next_group;
+                        next_group += 1;
+                        g
+                    } else {
+                        Msg::NO_DUP
+                    };
+                    for dst in requesters {
+                        msgs.push(Msg { src: GpuId(src), dst: GpuId(dst), bytes, dup_group: group });
+                    }
+                }
+            }
+        }
+        CommPattern::new(msgs)
+    }
+
+    /// Distributed SpMV against the serial oracle, executed part by part —
+    /// validates that diag/offd splitting plus halo exchange reproduces the
+    /// full product. (The runtime coordinator does the same thing across
+    /// worker threads with PJRT executables.)
+    pub fn spmv(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(v.len(), self.partition.n);
+        let mut w = Vec::with_capacity(self.partition.n);
+        for p in 0..self.partition.nparts() {
+            let (r0, r1) = self.partition.range(p);
+            let blocks = &self.parts[p];
+            let v_local = &v[r0..r1];
+            let v_halo: Vec<f32> = blocks.halo.iter().map(|&c| v[c]).collect();
+            let mut wp = blocks.diag.spmv(v_local);
+            if !blocks.halo.is_empty() {
+                let wo = blocks.offd.spmv(&v_halo);
+                for (a, b) in wp.iter_mut().zip(&wo) {
+                    *a += b;
+                }
+            }
+            w.extend(wp);
+        }
+        w
+    }
+
+    /// Total halo values communicated (sum over parts of halo sizes).
+    pub fn total_halo(&self) -> usize {
+        self.parts.iter().map(|p| p.halo.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use crate::topology::machines::lassen;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn balanced_partition_covers() {
+        let p = Partition::balanced(10, 3);
+        assert_eq!(p.offsets, vec![0, 4, 7, 10]);
+        assert_eq!(p.size(0), 4);
+        assert_eq!(p.max_size(), 4);
+        for row in 0..10 {
+            let o = p.owner(row);
+            let (a, b) = p.range(o);
+            assert!(row >= a && row < b, "row {row} owner {o}");
+        }
+    }
+
+    #[test]
+    fn owner_at_boundaries() {
+        let p = Partition::balanced(12, 4);
+        assert_eq!(p.owner(0), 0);
+        assert_eq!(p.owner(2), 0);
+        assert_eq!(p.owner(3), 1);
+        assert_eq!(p.owner(11), 3);
+    }
+
+    #[test]
+    fn partitioned_spmv_matches_oracle() {
+        let a = gen::stencil_5pt(8, 8);
+        let mut rng = Rng::new(1);
+        let v: Vec<f32> = (0..64).map(|_| rng.f64() as f32).collect();
+        let expect = a.spmv(&v);
+        for nparts in [1, 2, 4, 8] {
+            let pm = PartitionedMatrix::build(&a, nparts);
+            let got = pm.spmv(&v);
+            for (x, y) in expect.iter().zip(&got) {
+                assert!((x - y).abs() < 1e-4, "nparts {nparts}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn send_recv_lists_consistent() {
+        let a = gen::stencil_27pt(4, 4, 4);
+        let pm = PartitionedMatrix::build(&a, 4);
+        for p in 0..4 {
+            for (&owner, cols) in &pm.parts[p].recv_from {
+                let (o0, _) = pm.partition.range(owner);
+                let sends = &pm.send_to[owner][&p];
+                assert_eq!(sends.len(), cols.len());
+                for (&g, &l) in cols.iter().zip(sends) {
+                    assert_eq!(g, o0 + l, "global/local index mismatch");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn halo_sorted_dedup() {
+        let a = gen::stencil_5pt(6, 6);
+        let pm = PartitionedMatrix::build(&a, 3);
+        for part in &pm.parts {
+            assert!(part.halo.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn comm_pattern_bytes_match_halo() {
+        let a = gen::stencil_5pt(10, 10);
+        let machine = lassen(1);
+        let pm = PartitionedMatrix::build(&a, 4);
+        let pat = pm.comm_pattern(&machine, 8);
+        // Total *delivered* bytes must equal total halo values × 8.
+        assert_eq!(pat.total_bytes(), pm.total_halo() * 8);
+    }
+
+    #[test]
+    fn comm_pattern_dup_classes() {
+        // A column needed by two parts on the same node gets a dup group.
+        let machine = lassen(1); // all 4 GPUs on one node
+        // Matrix where column 0 is needed by every row (arrow-like).
+        let mut t = vec![(0usize, 0usize, 2.0f32)];
+        for r in 1..8 {
+            t.push((r, r, 2.0));
+            t.push((r, 0, 1.0));
+        }
+        let a = Csr::from_triplets(8, 8, &t);
+        let pm = PartitionedMatrix::build(&a, 4);
+        let pat = pm.comm_pattern(&machine, 8);
+        // parts 1,2,3 need col 0 from part 0; same node -> one dup class
+        let dup_msgs: Vec<_> = pat.msgs.iter().filter(|m| m.dup_group != Msg::NO_DUP).collect();
+        assert_eq!(dup_msgs.len(), 3);
+        assert!(dup_msgs.iter().all(|m| m.dup_group == dup_msgs[0].dup_group));
+        assert!(pat.duplicate_fraction(&machine) == 0.0, "intra-node messages carry no network duplicates");
+    }
+
+    #[test]
+    fn comm_pattern_dup_across_nodes_split() {
+        // Same requirement spread over 2 nodes: classes are per node.
+        let machine = lassen(2); // parts 0-3 node0, 4-7 node1
+        let mut t = vec![(0usize, 0usize, 2.0f32)];
+        for r in 1..16 {
+            t.push((r, r, 2.0));
+            t.push((r, 0, 1.0));
+        }
+        let a = Csr::from_triplets(16, 16, &t);
+        let pm = PartitionedMatrix::build(&a, 8);
+        let pat = pm.comm_pattern(&machine, 8);
+        let f = pat.duplicate_fraction(&machine);
+        // node1 has 4 requesters of col 0 from part 0: 3 of 4 inter-node
+        // messages are redundant.
+        assert!((f - 0.75).abs() < 1e-12, "got {f}");
+    }
+
+    #[test]
+    fn single_part_no_comm() {
+        let a = gen::stencil_5pt(4, 4);
+        let pm = PartitionedMatrix::build(&a, 1);
+        let machine = lassen(1);
+        assert!(pm.comm_pattern(&machine, 8).is_empty());
+        assert_eq!(pm.total_halo(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "square")]
+    fn non_square_rejected() {
+        let a = Csr::from_triplets(2, 3, &[(0, 0, 1.0)]);
+        PartitionedMatrix::build(&a, 2);
+    }
+}

@@ -1,0 +1,168 @@
+//! SuiteSparse structural proxies (Section 5's test matrices).
+//!
+//! The paper benchmarks the largest SuiteSparse matrices; this offline image
+//! has no network, so we generate *structural proxies*: synthetic matrices
+//! whose communication-relevant statistics (scaled row count, nnz density,
+//! bandwidth / arrowhead / blocky structure) follow the originals. A real
+//! `.mtx` file, when present, is loaded instead ([`load_or_proxy`]).
+//!
+//! Scaling: the originals are O(1M) rows; the proxies default to a
+//! `scale` divisor (rows / scale) preserving structure, since the induced
+//! *pattern shape* (who talks to whom) is partition-relative.
+
+use super::csr::Csr;
+use super::gen;
+use crate::util::rng::Rng;
+
+/// Paper-reported structural statistics of one test matrix.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MatrixInfo {
+    pub name: &'static str,
+    /// Rows in the original SuiteSparse matrix.
+    pub full_rows: usize,
+    /// Nonzeros in the original.
+    pub full_nnz: usize,
+    /// Structure family used for the proxy.
+    pub family: Family,
+}
+
+/// Structural family of a proxy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    /// Dense head rows/cols + band (audikw_1).
+    Arrow,
+    /// Long narrow band (thermal2).
+    Banded,
+    /// Blocky 3D FEM (Serena, Geo_1438).
+    Block3d,
+    /// Wide stencil-like mesh (ldoor, bone010).
+    Mesh3d,
+}
+
+/// The Section 5 matrix set.
+pub const MATRICES: [MatrixInfo; 6] = [
+    MatrixInfo { name: "audikw_1", full_rows: 943_695, full_nnz: 77_651_847, family: Family::Arrow },
+    MatrixInfo { name: "Serena", full_rows: 1_391_349, full_nnz: 64_131_971, family: Family::Block3d },
+    MatrixInfo { name: "ldoor", full_rows: 952_203, full_nnz: 42_493_817, family: Family::Mesh3d },
+    MatrixInfo { name: "thermal2", full_rows: 1_228_045, full_nnz: 8_580_313, family: Family::Banded },
+    MatrixInfo { name: "bone010", full_rows: 986_703, full_nnz: 47_851_783, family: Family::Mesh3d },
+    MatrixInfo { name: "Geo_1438", full_rows: 1_437_960, full_nnz: 60_236_322, family: Family::Block3d },
+];
+
+/// Look up a matrix by name.
+pub fn info(name: &str) -> Option<&'static MatrixInfo> {
+    MATRICES.iter().find(|m| m.name == name)
+}
+
+/// Generate the structural proxy at `rows ≈ full_rows / scale`.
+///
+/// Deterministic per (name, scale).
+pub fn proxy(m: &MatrixInfo, scale: usize) -> Csr {
+    assert!(scale >= 1);
+    let n = (m.full_rows / scale).max(256);
+    let avg_row = (m.full_nnz as f64 / m.full_rows as f64).round() as usize;
+    let mut rng = Rng::new(seed_of(m.name));
+    match m.family {
+        Family::Arrow => {
+            // heavy first ~1% rows/cols + band holding most of the nnz
+            let head = (n / 100).max(8);
+            let band = (avg_row / 2).max(2);
+            gen::arrow(n, head, band, &mut rng)
+        }
+        Family::Banded => {
+            let band = (avg_row).max(2);
+            gen::banded(n, band, &mut rng)
+        }
+        Family::Block3d => {
+            let bs = 32;
+            let nb = (n / bs).max(4);
+            // fill tuned to land near the original density
+            let fill = (avg_row as f64 / (3.0 * bs as f64)).min(0.9);
+            gen::random_block(nb, bs, 0.25, fill, &mut rng)
+        }
+        Family::Mesh3d => {
+            // 27-point stencil on a cube of matching size
+            let side = (n as f64).cbrt().round() as usize;
+            gen::stencil_27pt(side.max(4), side.max(4), side.max(4))
+        }
+    }
+}
+
+/// Load the real `.mtx` from `dir` when present, otherwise build the proxy.
+pub fn load_or_proxy(m: &MatrixInfo, dir: &std::path::Path, scale: usize) -> Csr {
+    let path = dir.join(format!("{}.mtx", m.name));
+    if path.exists() {
+        match super::mm::read(&path) {
+            Ok(a) => return a,
+            Err(e) => {
+                crate::log_warn!("failed to read {}: {e}; falling back to proxy", path.display());
+            }
+        }
+    }
+    proxy(m, scale)
+}
+
+fn seed_of(name: &str) -> u64 {
+    // FNV-1a for deterministic per-name seeds.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_matrices_proxy_build() {
+        for m in &MATRICES {
+            let a = proxy(m, 64);
+            assert!(a.nrows >= 256, "{}: rows {}", m.name, a.nrows);
+            assert_eq!(a.nrows, a.ncols);
+            assert!(a.nnz() > a.nrows, "{}: too sparse", m.name);
+        }
+    }
+
+    #[test]
+    fn audikw_proxy_has_heavy_head() {
+        let m = info("audikw_1").unwrap();
+        let a = proxy(m, 64);
+        let head = a.nrows / 100;
+        let head_nnz: usize = (0..head).map(|r| a.row(r).0.len()).sum();
+        let tail_nnz: usize = (a.nrows - head..a.nrows).map(|r| a.row(r).0.len()).sum();
+        assert!(head_nnz > 3 * tail_nnz, "head {head_nnz} vs tail {tail_nnz}");
+    }
+
+    #[test]
+    fn thermal2_proxy_low_density() {
+        // thermal2 is an order of magnitude sparser than audikw_1.
+        let t = proxy(info("thermal2").unwrap(), 64);
+        let a = proxy(info("audikw_1").unwrap(), 64);
+        let t_avg = t.nnz() as f64 / t.nrows as f64;
+        let a_avg = a.nnz() as f64 / a.nrows as f64;
+        assert!(t_avg < a_avg, "thermal2 avg row {t_avg} !< audikw {a_avg}");
+    }
+
+    #[test]
+    fn proxies_deterministic() {
+        let m = info("Serena").unwrap();
+        assert_eq!(proxy(m, 128), proxy(m, 128));
+    }
+
+    #[test]
+    fn info_lookup() {
+        assert!(info("audikw_1").is_some());
+        assert!(info("bogus").is_none());
+        assert_eq!(MATRICES.len(), 6);
+    }
+
+    #[test]
+    fn load_or_proxy_falls_back() {
+        let m = info("ldoor").unwrap();
+        let a = load_or_proxy(m, std::path::Path::new("/nonexistent"), 128);
+        assert!(a.nrows > 0);
+    }
+}

@@ -1,0 +1,90 @@
+//! Canonical machine descriptions (Section 2.1 and the Section 6 outlook).
+
+use super::Machine;
+
+/// Lassen (LLNL): 2 sockets/node, IBM Power9 (20 cores) + 2 V100s per
+/// socket, EDR InfiniBand. The paper's measurement testbed.
+pub fn lassen(num_nodes: usize) -> Machine {
+    Machine {
+        name: "lassen".into(),
+        num_nodes,
+        sockets_per_node: 2,
+        cores_per_socket: 20,
+        gpus_per_socket: 2,
+    }
+}
+
+/// Summit (ORNL): 2 sockets/node, Power9 (20 usable cores) + 3 V100s per
+/// socket. Same interconnect family as Lassen; the paper notes Spectrum MPI
+/// performs similarly on both.
+pub fn summit(num_nodes: usize) -> Machine {
+    Machine {
+        name: "summit".into(),
+        num_nodes,
+        sockets_per_node: 2,
+        cores_per_socket: 20,
+        gpus_per_socket: 3,
+    }
+}
+
+/// Frontier-like exascale node (Section 6): single socket, 64-core AMD EPYC,
+/// 4 MI250X GPUs (8 GCDs; we model the 4 physical packages), Slingshot.
+pub fn frontier_like(num_nodes: usize) -> Machine {
+    Machine {
+        name: "frontier-like".into(),
+        num_nodes,
+        sockets_per_node: 1,
+        cores_per_socket: 64,
+        gpus_per_socket: 4,
+    }
+}
+
+/// Delta-like node (Section 6): dual 64-core AMD Milan + 4 A100s per node.
+pub fn delta_like(num_nodes: usize) -> Machine {
+    Machine {
+        name: "delta-like".into(),
+        num_nodes,
+        sockets_per_node: 2,
+        cores_per_socket: 64,
+        gpus_per_socket: 2,
+    }
+}
+
+/// Look up a machine preset by name.
+pub fn by_name(name: &str, num_nodes: usize) -> Option<Machine> {
+    match name {
+        "lassen" => Some(lassen(num_nodes)),
+        "summit" => Some(summit(num_nodes)),
+        "frontier" | "frontier-like" => Some(frontier_like(num_nodes)),
+        "delta" | "delta-like" => Some(delta_like(num_nodes)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        for name in ["lassen", "summit", "frontier", "delta"] {
+            let m = by_name(name, 2).unwrap();
+            assert_eq!(m.num_nodes, 2);
+            assert!(m.total_gpus() >= 8);
+        }
+        assert!(by_name("bogus", 1).is_none());
+    }
+
+    #[test]
+    fn frontier_single_socket_high_cores() {
+        let m = frontier_like(1);
+        assert_eq!(m.sockets_per_node, 1);
+        assert_eq!(m.cores_per_node(), 64);
+        assert_eq!(m.gpus_per_node(), 4);
+    }
+
+    #[test]
+    fn summit_six_gpus() {
+        assert_eq!(summit(1).gpus_per_node(), 6);
+    }
+}

@@ -1,0 +1,264 @@
+//! Machine topology: nodes, sockets, cores, GPUs and NICs, plus the
+//! process/GPU naming scheme used throughout the crate.
+//!
+//! The paper's testbed (Section 2.1) is Lassen: 2 sockets per node, one
+//! IBM Power9 (20 cores) + 2 NVIDIA V100s per socket, EDR InfiniBand.
+//! [`machines`] provides that description plus Summit-, Frontier- and
+//! Delta-like systems for the Section 6 forward-looking discussion.
+
+pub mod machines;
+
+use crate::util::config::{Config, ConfigError};
+
+/// Static description of a (homogeneous) cluster.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Machine {
+    pub name: String,
+    pub num_nodes: usize,
+    pub sockets_per_node: usize,
+    /// CPU cores per socket — the upper bound on host processes per socket.
+    pub cores_per_socket: usize,
+    pub gpus_per_socket: usize,
+}
+
+/// Relative physical location of two processes or devices — the key that
+/// selects an (α, β) row in Table 2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Locality {
+    /// Same socket (fastest path).
+    OnSocket,
+    /// Same node, different sockets.
+    OnNode,
+    /// Different nodes — traverses the NIC and network.
+    OffNode,
+}
+
+impl std::fmt::Display for Locality {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Locality::OnSocket => write!(f, "on-socket"),
+            Locality::OnNode => write!(f, "on-node"),
+            Locality::OffNode => write!(f, "off-node"),
+        }
+    }
+}
+
+/// Identifier of one GPU in the cluster (globally dense numbering:
+/// node-major, then socket, then local GPU index).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GpuId(pub usize);
+
+/// Identifier of one host process (CPU rank). Globally dense: node-major,
+/// then socket, then core.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ProcId(pub usize);
+
+/// Identifier of one node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub usize);
+
+impl Machine {
+    /// GPUs per node.
+    pub fn gpus_per_node(&self) -> usize {
+        self.sockets_per_node * self.gpus_per_socket
+    }
+
+    /// Total GPUs in the cluster.
+    pub fn total_gpus(&self) -> usize {
+        self.num_nodes * self.gpus_per_node()
+    }
+
+    /// CPU cores per node — the maximum `ppn` usable by Split strategies
+    /// (40 on Lassen).
+    pub fn cores_per_node(&self) -> usize {
+        self.sockets_per_node * self.cores_per_socket
+    }
+
+    /// Total host processes when running `ppn` processes per node.
+    pub fn total_procs(&self, ppn: usize) -> usize {
+        assert!(ppn <= self.cores_per_node(), "ppn {ppn} exceeds cores/node {}", self.cores_per_node());
+        self.num_nodes * ppn
+    }
+
+    /// Node that hosts a GPU.
+    pub fn gpu_node(&self, g: GpuId) -> NodeId {
+        assert!(g.0 < self.total_gpus(), "gpu {} out of range", g.0);
+        NodeId(g.0 / self.gpus_per_node())
+    }
+
+    /// Socket (global index across the cluster) that hosts a GPU.
+    pub fn gpu_socket(&self, g: GpuId) -> usize {
+        assert!(g.0 < self.total_gpus(), "gpu {} out of range", g.0);
+        g.0 / self.gpus_per_socket
+    }
+
+    /// Local index of a GPU within its node.
+    pub fn gpu_local(&self, g: GpuId) -> usize {
+        g.0 % self.gpus_per_node()
+    }
+
+    /// Node of a host process under `ppn` processes per node.
+    pub fn proc_node(&self, p: ProcId, ppn: usize) -> NodeId {
+        NodeId(p.0 / ppn)
+    }
+
+    /// Global socket index of a host process under `ppn` processes per node
+    /// (processes are distributed round-robin blocks over sockets: the first
+    /// `ppn / sockets_per_node` on socket 0, etc. — matching MPI's default
+    /// block mapping on Lassen).
+    pub fn proc_socket(&self, p: ProcId, ppn: usize) -> usize {
+        let node = p.0 / ppn;
+        let local = p.0 % ppn;
+        let per_socket = ppn.div_ceil(self.sockets_per_node);
+        node * self.sockets_per_node + (local / per_socket).min(self.sockets_per_node - 1)
+    }
+
+    /// The canonical host process of a GPU when each GPU has `ppg` host
+    /// processes and the node runs `ppn = gpus_per_node * ppg` processes:
+    /// host processes of GPU g are the block `[local_gpu * ppg, ...)` on its
+    /// node, co-located on the GPU's socket.
+    pub fn gpu_host_proc(&self, g: GpuId, ppg: usize) -> ProcId {
+        let node = self.gpu_node(g).0;
+        let local = self.gpu_local(g);
+        let ppn = self.gpus_per_node() * ppg;
+        ProcId(node * ppn + local * ppg)
+    }
+
+    /// All `ppg` host processes of a GPU (see [`Machine::gpu_host_proc`]).
+    pub fn gpu_host_procs(&self, g: GpuId, ppg: usize) -> Vec<ProcId> {
+        let first = self.gpu_host_proc(g, ppg).0;
+        (first..first + ppg).map(ProcId).collect()
+    }
+
+    /// Locality of two host processes under `ppn` processes per node.
+    pub fn proc_locality(&self, a: ProcId, b: ProcId, ppn: usize) -> Locality {
+        if self.proc_node(a, ppn) != self.proc_node(b, ppn) {
+            Locality::OffNode
+        } else if self.proc_socket(a, ppn) != self.proc_socket(b, ppn) {
+            Locality::OnNode
+        } else {
+            Locality::OnSocket
+        }
+    }
+
+    /// Locality of two GPUs.
+    pub fn gpu_locality(&self, a: GpuId, b: GpuId) -> Locality {
+        if self.gpu_node(a) != self.gpu_node(b) {
+            Locality::OffNode
+        } else if self.gpu_socket(a) != self.gpu_socket(b) {
+            Locality::OnNode
+        } else {
+            Locality::OnSocket
+        }
+    }
+
+    /// All GPUs on a node.
+    pub fn node_gpus(&self, n: NodeId) -> Vec<GpuId> {
+        let first = n.0 * self.gpus_per_node();
+        (first..first + self.gpus_per_node()).map(GpuId).collect()
+    }
+
+    /// Parse a machine from a `[machine]` config section.
+    pub fn from_config(cfg: &Config) -> Result<Machine, ConfigError> {
+        let m = cfg.section("machine")?;
+        Ok(Machine {
+            name: m.str_or("name", "custom").to_string(),
+            num_nodes: m.usize("machine", "num_nodes")?,
+            sockets_per_node: m.usize("machine", "sockets_per_node")?,
+            cores_per_socket: m.usize("machine", "cores_per_socket")?,
+            gpus_per_socket: m.usize("machine", "gpus_per_socket")?,
+        })
+    }
+
+    /// Resize the cluster (same node architecture, different node count).
+    pub fn with_nodes(&self, num_nodes: usize) -> Machine {
+        Machine { num_nodes, ..self.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::machines::lassen;
+    use super::*;
+
+    #[test]
+    fn lassen_shape() {
+        let m = lassen(4);
+        assert_eq!(m.gpus_per_node(), 4);
+        assert_eq!(m.cores_per_node(), 40);
+        assert_eq!(m.total_gpus(), 16);
+    }
+
+    #[test]
+    fn gpu_placement() {
+        let m = lassen(2);
+        // Node 0: gpus 0..4 (sockets 0,0,1,1); node 1: gpus 4..8.
+        assert_eq!(m.gpu_node(GpuId(3)), NodeId(0));
+        assert_eq!(m.gpu_node(GpuId(4)), NodeId(1));
+        assert_eq!(m.gpu_socket(GpuId(0)), 0);
+        assert_eq!(m.gpu_socket(GpuId(1)), 0);
+        assert_eq!(m.gpu_socket(GpuId(2)), 1);
+        assert_eq!(m.gpu_socket(GpuId(5)), 2);
+    }
+
+    #[test]
+    fn gpu_locality_cases() {
+        let m = lassen(2);
+        assert_eq!(m.gpu_locality(GpuId(0), GpuId(1)), Locality::OnSocket);
+        assert_eq!(m.gpu_locality(GpuId(0), GpuId(2)), Locality::OnNode);
+        assert_eq!(m.gpu_locality(GpuId(0), GpuId(4)), Locality::OffNode);
+    }
+
+    #[test]
+    fn proc_locality_cases() {
+        let m = lassen(2);
+        let ppn = 40;
+        // procs 0..20 socket 0, 20..40 socket 1 of node 0
+        assert_eq!(m.proc_locality(ProcId(0), ProcId(19), ppn), Locality::OnSocket);
+        assert_eq!(m.proc_locality(ProcId(0), ProcId(20), ppn), Locality::OnNode);
+        assert_eq!(m.proc_locality(ProcId(0), ProcId(40), ppn), Locality::OffNode);
+    }
+
+    #[test]
+    fn host_proc_blocks() {
+        let m = lassen(2);
+        // ppg=1: gpu g -> proc g
+        for g in 0..m.total_gpus() {
+            assert_eq!(m.gpu_host_proc(GpuId(g), 1), ProcId(g));
+        }
+        // ppg=4: gpu 1 -> procs 4..8 on node 0
+        assert_eq!(m.gpu_host_procs(GpuId(1), 4), vec![ProcId(4), ProcId(5), ProcId(6), ProcId(7)]);
+        // gpu 4 (node 1, first gpu) -> procs 16..20
+        assert_eq!(m.gpu_host_proc(GpuId(4), 4), ProcId(16));
+    }
+
+    #[test]
+    fn host_procs_on_gpu_socket() {
+        let m = lassen(2);
+        let ppg = 4;
+        let ppn = m.gpus_per_node() * ppg; // 16
+        for g in 0..m.total_gpus() {
+            let g = GpuId(g);
+            for p in m.gpu_host_procs(g, ppg) {
+                assert_eq!(m.proc_node(p, ppn), m.gpu_node(g), "proc node mismatch for {g:?}");
+                assert_eq!(m.proc_socket(p, ppn), m.gpu_socket(g), "proc socket mismatch for {g:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn node_gpus_roundtrip() {
+        let m = lassen(3);
+        for n in 0..3 {
+            for g in m.node_gpus(NodeId(n)) {
+                assert_eq!(m.gpu_node(g), NodeId(n));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds cores/node")]
+    fn ppn_bound_enforced() {
+        lassen(1).total_procs(41);
+    }
+}

@@ -1,0 +1,300 @@
+//! Declarative command-line flag parser (no `clap` in the offline image).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, and auto-generated `--help` text. Used by the `hetcomm`
+//! launcher and every example binary.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Specification of one flag.
+#[derive(Clone, Debug)]
+struct FlagSpec {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_bool: bool,
+}
+
+/// A declarative CLI parser: register flags, then [`Cli::parse`].
+#[derive(Debug, Default)]
+pub struct Cli {
+    program: String,
+    about: &'static str,
+    flags: Vec<FlagSpec>,
+    positional_help: Vec<(&'static str, &'static str)>,
+}
+
+/// Parsed argument values.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+/// CLI parse error with a user-facing message.
+#[derive(Debug, thiserror::Error)]
+#[error("{0}")]
+pub struct CliError(pub String);
+
+impl Cli {
+    pub fn new(program: &str, about: &'static str) -> Self {
+        Cli { program: program.to_string(), about, ..Default::default() }
+    }
+
+    /// Register a string-valued flag with a default.
+    pub fn flag(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default: Some(default.to_string()), is_bool: false });
+        self
+    }
+
+    /// Register a required string-valued flag (no default).
+    pub fn required(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default: None, is_bool: false });
+        self
+    }
+
+    /// Register a boolean switch (defaults to false).
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default: None, is_bool: true });
+        self
+    }
+
+    /// Document a positional argument (for help text only).
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positional_help.push((name, help));
+        self
+    }
+
+    /// Render `--help` text.
+    pub fn help_text(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{} — {}\n", self.program, self.about);
+        let _ = write!(out, "USAGE: {} [FLAGS]", self.program);
+        for (name, _) in &self.positional_help {
+            let _ = write!(out, " <{name}>");
+        }
+        let _ = writeln!(out, "\n\nFLAGS:");
+        for f in &self.flags {
+            let meta = if f.is_bool {
+                String::new()
+            } else if let Some(d) = &f.default {
+                format!(" <val> [default: {d}]")
+            } else {
+                " <val> [required]".to_string()
+            };
+            let _ = writeln!(out, "  --{}{}\n        {}", f.name, meta, f.help);
+        }
+        let _ = writeln!(out, "  --help\n        Print this help text");
+        if !self.positional_help.is_empty() {
+            let _ = writeln!(out, "\nARGS:");
+            for (name, help) in &self.positional_help {
+                let _ = writeln!(out, "  <{name}>  {help}");
+            }
+        }
+        out
+    }
+
+    /// Parse an argv slice (without the program name). Returns an error whose
+    /// message is the help text when `--help` is present.
+    pub fn parse<S: AsRef<str>>(&self, argv: &[S]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for f in &self.flags {
+            if f.is_bool {
+                args.bools.insert(f.name.to_string(), false);
+            } else if let Some(d) = &f.default {
+                args.values.insert(f.name.to_string(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = argv[i].as_ref();
+            if tok == "--help" || tok == "-h" {
+                return Err(CliError(self.help_text()));
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| CliError(format!("unknown flag --{name}\n\n{}", self.help_text())))?;
+                if spec.is_bool {
+                    match inline_val.as_deref() {
+                        None | Some("true") => {
+                            args.bools.insert(name.to_string(), true);
+                        }
+                        Some("false") => {
+                            args.bools.insert(name.to_string(), false);
+                        }
+                        Some(v) => return Err(CliError(format!("--{name} takes no value, got {v:?}"))),
+                    }
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .map(|s| s.as_ref().to_string())
+                                .ok_or_else(|| CliError(format!("--{name} requires a value")))?
+                        }
+                    };
+                    args.values.insert(name.to_string(), val);
+                }
+            } else {
+                args.positional.push(tok.to_string());
+            }
+            i += 1;
+        }
+        for f in &self.flags {
+            if !f.is_bool && f.default.is_none() && !args.values.contains_key(f.name) {
+                return Err(CliError(format!("missing required flag --{}", f.name)));
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse `std::env::args()` and exit with help/error messages on failure.
+    pub fn parse_env(&self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse(&argv) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("{}", e.0);
+                std::process::exit(if e.0.contains("USAGE:") && !e.0.contains("unknown") { 0 } else { 2 });
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values.get(name).map(|s| s.as_str()).unwrap_or_else(|| panic!("flag --{name} not registered"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        *self.bools.get(name).unwrap_or_else(|| panic!("switch --{name} not registered"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| CliError(format!("--{name}: expected an integer, got {:?}", self.get(name))))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, CliError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| CliError(format!("--{name}: expected an integer, got {:?}", self.get(name))))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| CliError(format!("--{name}: expected a number, got {:?}", self.get(name))))
+    }
+
+    /// Parse a comma-separated list of integers, supporting `a:b:c` range
+    /// syntax (start:stop:step, stop exclusive) and `2^k` powers.
+    pub fn get_usize_list(&self, name: &str) -> Result<Vec<usize>, CliError> {
+        let raw = self.get(name);
+        let mut out = Vec::new();
+        for part in raw.split(',').filter(|p| !p.is_empty()) {
+            if let Some((lo, rest)) = part.split_once(':') {
+                let (hi, step) = rest.split_once(':').unwrap_or((rest, "1"));
+                let (lo, hi, step): (usize, usize, usize) = (
+                    lo.parse().map_err(|_| CliError(format!("bad range start {lo:?}")))?,
+                    hi.parse().map_err(|_| CliError(format!("bad range stop {hi:?}")))?,
+                    step.parse().map_err(|_| CliError(format!("bad range step {step:?}")))?,
+                );
+                if step == 0 {
+                    return Err(CliError("range step must be > 0".into()));
+                }
+                let mut v = lo;
+                while v < hi {
+                    out.push(v);
+                    v += step;
+                }
+            } else if let Some(exp) = part.strip_prefix("2^") {
+                let e: u32 = exp.parse().map_err(|_| CliError(format!("bad power {part:?}")))?;
+                out.push(1usize << e);
+            } else {
+                out.push(part.parse().map_err(|_| CliError(format!("bad integer {part:?}")))?);
+            }
+        }
+        if out.is_empty() {
+            return Err(CliError(format!("--{name}: empty list")));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .flag("size", "8", "message size")
+            .required("matrix", "matrix name")
+            .switch("verbose", "log more")
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = cli().parse(&["--matrix", "audikw_1"]).unwrap();
+        assert_eq!(a.get("size"), "8");
+        assert_eq!(a.get("matrix"), "audikw_1");
+        assert!(!a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_switch() {
+        let a = cli().parse(&["--matrix=x", "--size=1024", "--verbose"]).unwrap();
+        assert_eq!(a.get_usize("size").unwrap(), 1024);
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cli().parse(&["--size", "4"]).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        let e = cli().parse(&["--matrix", "m", "--bogus", "1"]).unwrap_err();
+        assert!(e.0.contains("unknown flag"));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = cli().parse(&["--matrix", "m", "pos1", "pos2"]).unwrap();
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let e = cli().parse(&["--help"]).unwrap_err();
+        assert!(e.0.contains("USAGE"));
+        assert!(e.0.contains("--matrix"));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let c = Cli::new("t", "x").flag("sizes", "1,2:8:2,2^10", "sizes");
+        let a = c.parse::<&str>(&[]).unwrap();
+        assert_eq!(a.get_usize_list("sizes").unwrap(), vec![1, 2, 4, 6, 1024]);
+    }
+
+    #[test]
+    fn bool_explicit_values() {
+        let c = Cli::new("t", "x").switch("on", "sw");
+        assert!(c.parse(&["--on=true"]).unwrap().get_bool("on"));
+        assert!(!c.parse(&["--on=false"]).unwrap().get_bool("on"));
+        assert!(c.parse(&["--on=maybe"]).is_err());
+    }
+}

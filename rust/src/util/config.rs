@@ -1,0 +1,257 @@
+//! INI-style configuration files (no `serde` in the offline image).
+//!
+//! Machine descriptions and run configurations live in `configs/*.cfg`:
+//!
+//! ```text
+//! # comment
+//! [machine]
+//! name = lassen
+//! sockets_per_node = 2
+//! gpus_per_socket = 2
+//! cores_per_socket = 20
+//! ```
+//!
+//! Sections map to [`Section`]s; values are typed on access.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A parsed configuration: ordered sections of key → value.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    sections: BTreeMap<String, Section>,
+}
+
+/// One `[section]` of key/value pairs.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Section {
+    values: BTreeMap<String, String>,
+}
+
+/// Configuration parse/access error.
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+    #[error("missing section [{0}]")]
+    MissingSection(String),
+    #[error("missing key {key} in section [{section}]")]
+    MissingKey { section: String, key: String },
+    #[error("key {key}: cannot parse {value:?} as {ty}")]
+    BadValue { key: String, value: String, ty: &'static str },
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl Config {
+    /// Parse configuration text.
+    pub fn parse(text: &str) -> Result<Config, ConfigError> {
+        let mut cfg = Config::default();
+        let mut current = String::from("default");
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            let lineno = i + 1;
+            if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+                continue;
+            }
+            if let Some(body) = line.strip_prefix('[') {
+                let name = body.strip_suffix(']').ok_or(ConfigError::Parse {
+                    line: lineno,
+                    msg: format!("unterminated section header {line:?}"),
+                })?;
+                if name.trim().is_empty() {
+                    return Err(ConfigError::Parse { line: lineno, msg: "empty section name".into() });
+                }
+                current = name.trim().to_string();
+                cfg.sections.entry(current.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or(ConfigError::Parse {
+                line: lineno,
+                msg: format!("expected key = value, got {line:?}"),
+            })?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(ConfigError::Parse { line: lineno, msg: "empty key".into() });
+            }
+            // Strip trailing inline comments.
+            let value = match value.find('#') {
+                Some(pos) => &value[..pos],
+                None => value,
+            };
+            cfg.sections
+                .entry(current.clone())
+                .or_default()
+                .values
+                .insert(key.to_string(), value.trim().to_string());
+        }
+        Ok(cfg)
+    }
+
+    /// Load and parse a config file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Config, ConfigError> {
+        Ok(Config::parse(&std::fs::read_to_string(path)?)?)
+    }
+
+    /// Fetch a section, erroring if absent.
+    pub fn section(&self, name: &str) -> Result<&Section, ConfigError> {
+        self.sections.get(name).ok_or_else(|| ConfigError::MissingSection(name.to_string()))
+    }
+
+    /// Fetch a section if present.
+    pub fn section_opt(&self, name: &str) -> Option<&Section> {
+        self.sections.get(name)
+    }
+
+    /// All section names, sorted.
+    pub fn section_names(&self) -> Vec<&str> {
+        self.sections.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Serialize back to text (round-trip capable modulo comments/order).
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for (name, sec) in &self.sections {
+            out.push_str(&format!("[{name}]\n"));
+            for (k, v) in &sec.values {
+                out.push_str(&format!("{k} = {v}\n"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+impl Section {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    fn require(&self, section: &str, key: &str) -> Result<&str, ConfigError> {
+        self.get(key).ok_or_else(|| ConfigError::MissingKey { section: section.to_string(), key: key.to_string() })
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize(&self, section: &str, key: &str) -> Result<usize, ConfigError> {
+        let v = self.require(section, key)?;
+        v.parse().map_err(|_| ConfigError::BadValue { key: key.into(), value: v.into(), ty: "usize" })
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, ConfigError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| ConfigError::BadValue { key: key.into(), value: v.into(), ty: "usize" }),
+        }
+    }
+
+    pub fn f64(&self, section: &str, key: &str) -> Result<f64, ConfigError> {
+        let v = self.require(section, key)?;
+        v.parse().map_err(|_| ConfigError::BadValue { key: key.into(), value: v.into(), ty: "f64" })
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, ConfigError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| ConfigError::BadValue { key: key.into(), value: v.into(), ty: "f64" }),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool, ConfigError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(ConfigError::BadValue { key: key.into(), value: v.into(), ty: "bool" }),
+        }
+    }
+
+    /// Insert a value (used by config writers/tests).
+    pub fn set(&mut self, key: &str, value: impl ToString) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# machine description
+[machine]
+name = lassen
+sockets_per_node = 2   # two Power9s
+gpus_per_socket = 2
+
+[run]
+iters = 1000
+warmup = true
+cap = 8192.5
+"#;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let m = c.section("machine").unwrap();
+        assert_eq!(m.get("name"), Some("lassen"));
+        assert_eq!(m.usize("machine", "sockets_per_node").unwrap(), 2);
+        let r = c.section("run").unwrap();
+        assert_eq!(r.usize("run", "iters").unwrap(), 1000);
+        assert!(r.bool_or("warmup", false).unwrap());
+        assert_eq!(r.f64("run", "cap").unwrap(), 8192.5);
+    }
+
+    #[test]
+    fn inline_comment_stripped() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.section("machine").unwrap().usize("machine", "sockets_per_node").unwrap(), 2);
+    }
+
+    #[test]
+    fn missing_section_and_key() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert!(matches!(c.section("nope"), Err(ConfigError::MissingSection(_))));
+        assert!(matches!(
+            c.section("machine").unwrap().usize("machine", "nope"),
+            Err(ConfigError::MissingKey { .. })
+        ));
+    }
+
+    #[test]
+    fn defaults() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let m = c.section("machine").unwrap();
+        assert_eq!(m.usize_or("missing", 7).unwrap(), 7);
+        assert_eq!(m.str_or("missing", "x"), "x");
+        assert_eq!(m.f64_or("missing", 1.5).unwrap(), 1.5);
+    }
+
+    #[test]
+    fn bad_syntax_reports_line() {
+        let err = Config::parse("[machine]\nnot_a_kv_line\n").unwrap_err();
+        match err {
+            ConfigError::Parse { line, .. } => assert_eq!(line, 2),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_value_type() {
+        let c = Config::parse("[a]\nx = hello\n").unwrap();
+        assert!(matches!(c.section("a").unwrap().usize("a", "x"), Err(ConfigError::BadValue { .. })));
+    }
+
+    #[test]
+    fn round_trip() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let c2 = Config::parse(&c.to_text()).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn unterminated_section_errors() {
+        assert!(Config::parse("[machine\n").is_err());
+    }
+}

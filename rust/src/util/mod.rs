@@ -1,0 +1,13 @@
+//! In-tree substrates for the offline build environment: deterministic PRNG,
+//! CLI flag parsing, INI-style config files, descriptive statistics, a
+//! property-testing mini-framework, and a tiny logger.
+
+pub mod cli;
+pub mod config;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+pub use stats::Summary;

@@ -1,0 +1,195 @@
+//! Property-testing mini-framework (no `proptest` in the offline image).
+//!
+//! A property is a function from a [`Gen`]-drawn case to `Result<(), String>`.
+//! [`check`] runs many random cases; on failure it attempts greedy shrinking
+//! via a user-supplied shrinker before reporting the minimal failing case.
+//!
+//! ```no_run
+//! use hetcomm::util::prop::{check, Gen};
+//! check("sort idempotent", 200, |g| {
+//!     let mut v = g.vec_usize(0..50, 0, 100);
+//!     v.sort_unstable();
+//!     let w = { let mut w = v.clone(); w.sort_unstable(); w };
+//!     if v == w { Ok(()) } else { Err(format!("{v:?} != {w:?}")) }
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Case generator handed to each property invocation. Wraps a deterministic
+/// PRNG whose seed is derived from the run seed and case index, so failures
+/// are reproducible from the printed seed.
+pub struct Gen {
+    rng: Rng,
+    /// Seed of this particular case (printed on failure).
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn new(case_seed: u64) -> Self {
+        Gen { rng: Rng::new(case_seed), case_seed }
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// usize uniform in `[lo, hi)`.
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.usize_in(lo, hi)
+    }
+
+    /// u64 uniform in `[0, n)`.
+    pub fn u64(&mut self, n: u64) -> u64 {
+        self.rng.gen_range(n)
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.f64_in(lo, hi)
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.bool(p)
+    }
+
+    /// Vector of usizes: length in `len` range, elements in `[lo, hi)`.
+    pub fn vec_usize(&mut self, len: std::ops::Range<usize>, lo: usize, hi: usize) -> Vec<usize> {
+        let n = self.usize(len.start, len.end.max(len.start + 1));
+        (0..n).map(|_| self.usize(lo, hi)).collect()
+    }
+
+    /// Choose one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        &xs[self.usize(0, xs.len())]
+    }
+
+    /// Byte-size magnitudes spanning the paper's sweep range
+    /// (1 B … 1 MiB), log-uniform so small and large messages are equally
+    /// likely — matches how the figures sample sizes.
+    pub fn msg_size(&mut self) -> usize {
+        let exp = self.usize(0, 21); // 2^0 .. 2^20
+        let base = 1usize << exp;
+        // jitter within the octave so we don't only test powers of two
+        base + self.usize(0, base.max(1))
+    }
+}
+
+/// Run `n` random cases of `prop`. Panics with diagnostics on failure.
+///
+/// The environment variable `HETCOMM_PROP_SEED` overrides the run seed for
+/// reproducing failures.
+pub fn check<F>(name: &str, n: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let run_seed = std::env::var("HETCOMM_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    for case in 0..n {
+        let case_seed = run_seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(case as u64);
+        let mut g = Gen::new(case_seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property {name:?} failed on case {case}/{n} (HETCOMM_PROP_SEED={run_seed}, case_seed={case_seed}):\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Run `n` cases of a property over values produced by `make` and checked by
+/// `test`, shrinking a failing value with `shrink` (returns simpler
+/// candidates) before panicking with the minimal case found.
+pub fn check_shrink<T, FM, FT, FS>(name: &str, n: usize, mut make: FM, mut test: FT, shrink: FS)
+where
+    T: Clone + std::fmt::Debug,
+    FM: FnMut(&mut Gen) -> T,
+    FT: FnMut(&T) -> Result<(), String>,
+    FS: Fn(&T) -> Vec<T>,
+{
+    let run_seed = std::env::var("HETCOMM_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    for case in 0..n {
+        let case_seed = run_seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(case as u64);
+        let mut g = Gen::new(case_seed);
+        let value = make(&mut g);
+        if let Err(first_msg) = test(&value) {
+            // Greedy shrink: repeatedly take the first simpler candidate that
+            // still fails, up to a bounded number of steps.
+            let mut cur = value;
+            let mut msg = first_msg;
+            'outer: for _ in 0..200 {
+                for cand in shrink(&cur) {
+                    if let Err(m) = test(&cand) {
+                        cur = cand;
+                        msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property {name:?} failed on case {case}/{n} (HETCOMM_PROP_SEED={run_seed}):\n  minimal case: {cur:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("reverse twice is identity", 100, |g| {
+            let v = g.vec_usize(0..20, 0, 1000);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            if v == w { Ok(()) } else { Err("mismatch".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics() {
+        check("always fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrink_finds_small_case() {
+        // Property "all values < 10" fails; shrinker should walk toward 10.
+        let result = std::panic::catch_unwind(|| {
+            check_shrink(
+                "lt ten",
+                100,
+                |g| g.usize(0, 1000),
+                |&v| if v < 10 { Ok(()) } else { Err(format!("{v} >= 10")) },
+                |&v| if v > 10 { vec![v / 2, v - 1] } else { vec![] },
+            );
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("minimal case: 10"), "got: {msg}");
+    }
+
+    #[test]
+    fn msg_size_spans_range() {
+        let mut g = Gen::new(1);
+        let sizes: Vec<usize> = (0..500).map(|_| g.msg_size()).collect();
+        assert!(sizes.iter().any(|&s| s < 16));
+        assert!(sizes.iter().any(|&s| s > 100_000));
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_seed() {
+        let mut a = Gen::new(99);
+        let mut b = Gen::new(99);
+        for _ in 0..50 {
+            assert_eq!(a.usize(0, 1 << 20), b.usize(0, 1 << 20));
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Descriptive statistics over timing samples, plus linear least squares —
+//! the fitting procedure the paper uses to turn ping-pong measurements into
+//! the α/β parameters of Tables 2–4.
+
+/// Summary statistics for a sample of (timing) values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub median: f64,
+    pub p95: f64,
+    pub stddev: f64,
+}
+
+impl Summary {
+    /// Compute summary statistics. Panics on an empty sample.
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "Summary::of(empty)");
+        let mut xs = samples.to_vec();
+        xs.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        Summary {
+            n,
+            min: xs[0],
+            max: xs[n - 1],
+            mean,
+            median: percentile_sorted(&xs, 50.0),
+            p95: percentile_sorted(&xs, 95.0),
+            stddev: var.sqrt(),
+        }
+    }
+}
+
+/// Percentile of an already-sorted slice using linear interpolation.
+pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=100.0).contains(&pct));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = pct / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Ordinary least-squares fit `y = a + b*x`, returning `(a, b)`.
+///
+/// This is the "linear least-squares fit to the collected data" that produces
+/// each α/β pair in Section 3: `x` is message size in bytes, `y` is measured
+/// time, `a` is latency α, `b` is per-byte cost β.
+pub fn linear_fit(x: &[f64], y: &[f64]) -> (f64, f64) {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() >= 2, "need >= 2 points to fit a line");
+    let n = x.len() as f64;
+    let sx: f64 = x.iter().sum();
+    let sy: f64 = y.iter().sum();
+    let sxx: f64 = x.iter().map(|v| v * v).sum();
+    let sxy: f64 = x.iter().zip(y).map(|(a, b)| a * b).sum();
+    let denom = n * sxx - sx * sx;
+    assert!(denom.abs() > f64::EPSILON, "degenerate x values");
+    let b = (n * sxy - sx * sy) / denom;
+    let a = (sy - b * sx) / n;
+    (a, b)
+}
+
+/// Coefficient of determination R² for a linear fit.
+pub fn r_squared(x: &[f64], y: &[f64], a: f64, b: f64) -> f64 {
+    let mean_y = y.iter().sum::<f64>() / y.len() as f64;
+    let ss_tot: f64 = y.iter().map(|v| (v - mean_y).powi(2)).sum();
+    let ss_res: f64 = x.iter().zip(y).map(|(xi, yi)| (yi - (a + b * xi)).powi(2)).sum();
+    if ss_tot == 0.0 {
+        1.0
+    } else {
+        1.0 - ss_res / ss_tot
+    }
+}
+
+/// Geometric mean (used for cross-matrix speedup aggregation in reports).
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let s: f64 = xs.iter().map(|x| x.max(1e-300).ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.median, 3.0);
+    }
+
+    #[test]
+    fn summary_single() {
+        let s = Summary::of(&[2.5]);
+        assert_eq!(s.median, 2.5);
+        assert_eq!(s.p95, 2.5);
+        assert_eq!(s.stddev, 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert_eq!(percentile_sorted(&xs, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&xs, 50.0), 5.0);
+        assert_eq!(percentile_sorted(&xs, 100.0), 10.0);
+    }
+
+    #[test]
+    fn linear_fit_exact() {
+        // y = 3 + 2x exactly.
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y: Vec<f64> = x.iter().map(|v| 3.0 + 2.0 * v).collect();
+        let (a, b) = linear_fit(&x, &y);
+        assert!((a - 3.0).abs() < 1e-12);
+        assert!((b - 2.0).abs() < 1e-12);
+        assert!((r_squared(&x, &y, a, b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_fit_recovers_alpha_beta_scale() {
+        // Postal-model-like data: alpha=2e-6 s, beta=4e-10 s/B over byte
+        // sizes spanning the paper's range.
+        let x: Vec<f64> = (0..20).map(|i| (1u64 << i) as f64).collect();
+        let y: Vec<f64> = x.iter().map(|s| 2e-6 + 4e-10 * s).collect();
+        let (a, b) = linear_fit(&x, &y);
+        assert!((a - 2e-6).abs() / 2e-6 < 1e-9);
+        assert!((b - 4e-10).abs() / 4e-10 < 1e-9);
+    }
+
+    #[test]
+    fn geomean_of_constant() {
+        assert!((geomean(&[3.0, 3.0, 3.0]) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn summary_empty_panics() {
+        Summary::of(&[]);
+    }
+}

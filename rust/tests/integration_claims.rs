@@ -1,0 +1,210 @@
+//! Integration: the paper's qualitative claims, checked end-to-end against
+//! the models and the simulator — the assertions behind Figures 2.5, 2.6,
+//! 4.2, 4.3 and 5.1.
+
+use hetcomm::comm::{build_schedule, Strategy, StrategyKind, Transport};
+use hetcomm::model::StrategyModel;
+use hetcomm::params::{lassen_params, Endpoint};
+use hetcomm::pattern::generators::Scenario;
+use hetcomm::sim;
+use hetcomm::sim::network::{nodepong, pingpong};
+use hetcomm::sparse::{suite, PartitionedMatrix};
+use hetcomm::topology::machines::lassen;
+use hetcomm::topology::Locality;
+
+fn ppn_for(machine: &hetcomm::topology::Machine, s: Strategy) -> usize {
+    match s.kind {
+        StrategyKind::SplitMd | StrategyKind::SplitDd => machine.cores_per_node(),
+        _ => machine.gpus_per_node() * s.kind.ppg(),
+    }
+}
+
+/// Figure 2.5: small messages order on-socket < on-node < off-node; at
+/// 1 MiB the network beats the cross-socket path.
+#[test]
+fn fig25_locality_orderings() {
+    let p = lassen_params();
+    for s in [64usize, 512, 4096] {
+        let a = pingpong(&p, Endpoint::Cpu, Locality::OnSocket, s);
+        let b = pingpong(&p, Endpoint::Cpu, Locality::OnNode, s);
+        let c = pingpong(&p, Endpoint::Cpu, Locality::OffNode, s);
+        assert!(a < b && b < c, "size {s}: {a} {b} {c}");
+    }
+    let big = 1 << 20;
+    assert!(
+        pingpong(&p, Endpoint::Cpu, Locality::OffNode, big) < pingpong(&p, Endpoint::Cpu, Locality::OnNode, big)
+    );
+}
+
+/// Figure 2.6: the optimal ppn grows with volume.
+#[test]
+fn fig26_optimal_ppn_grows() {
+    let m = lassen(2);
+    let p = lassen_params();
+    let choices = [1usize, 2, 4, 8, 16, 32, 40];
+    let mut last_best = 1;
+    for e in [10usize, 14, 18, 22] {
+        let best = sim::network::best_ppn(&m, &p, 1 << e, &choices);
+        assert!(best >= last_best, "best ppn shrank: {best} < {last_best} at 2^{e}");
+        last_best = best;
+    }
+    assert!(last_best > 1, "large volumes must favor splitting");
+    // sanity: nodepong at the winning ppn actually beats ppn=1
+    assert!(nodepong(&m, &p, 1 << 22, last_best) < nodepong(&m, &p, 1 << 22, 1));
+}
+
+/// Figure 4.3 (high message count): staged node-aware beats standard and
+/// all device-aware strategies for message sizes up to ~10^4 B, and 3-Step
+/// device-aware beats standard device-aware.
+#[test]
+fn fig43_staged_nodeaware_wins_high_message_count() {
+    let machine = lassen(32);
+    let params = lassen_params();
+    let sm = StrategyModel::new(&machine, &params);
+    for n_dest in [4usize, 16] {
+        for size in [256usize, 1024, 4096] {
+            let sc = Scenario { n_msgs: 256, msg_size: size, n_dest, dup_frac: 0.0 };
+            let inputs = sc.inputs(&machine, machine.cores_per_node());
+            let best_staged_na = [StrategyKind::ThreeStep, StrategyKind::TwoStep, StrategyKind::SplitMd]
+                .iter()
+                .map(|&k| sm.time(Strategy::new(k, Transport::Staged).unwrap(), &inputs))
+                .fold(f64::INFINITY, f64::min);
+            let std_da = sm.time(Strategy::new(StrategyKind::Standard, Transport::DeviceAware).unwrap(), &inputs);
+            let three_da = sm.time(Strategy::new(StrategyKind::ThreeStep, Transport::DeviceAware).unwrap(), &inputs);
+            assert!(
+                best_staged_na < std_da,
+                "dest {n_dest} size {size}: staged NA {best_staged_na} !< standard DA {std_da}"
+            );
+            assert!(three_da < std_da, "dest {n_dest} size {size}: 3-step DA {three_da} !< std DA {std_da}");
+        }
+    }
+}
+
+/// Figure 4.3b: Split+MD is the fastest staged strategy at 16 destination
+/// nodes and moderate sizes.
+#[test]
+fn fig43b_split_md_wins_16_nodes() {
+    let machine = lassen(32);
+    let params = lassen_params();
+    let sm = StrategyModel::new(&machine, &params);
+    let sc = Scenario { n_msgs: 256, msg_size: 1024, n_dest: 16, dup_frac: 0.0 };
+    let inputs = sc.inputs(&machine, machine.cores_per_node());
+    let split = sm.time(Strategy::new(StrategyKind::SplitMd, Transport::Staged).unwrap(), &inputs);
+    for k in [StrategyKind::Standard, StrategyKind::ThreeStep, StrategyKind::TwoStep] {
+        let other = sm.time(Strategy::new(k, Transport::Staged).unwrap(), &inputs);
+        assert!(split < other, "Split+MD {split} !< {k:?} {other}");
+    }
+}
+
+/// Figure 4.3: device-aware standard wins only at very large message
+/// sizes.
+#[test]
+fn fig43_device_aware_wins_extreme_sizes() {
+    let machine = lassen(32);
+    let params = lassen_params();
+    let sm = StrategyModel::new(&machine, &params);
+    // Small count, few nodes, 1 MiB messages: the DA path's single hop
+    // with no staging wins.
+    let sc = Scenario { n_msgs: 32, msg_size: 1 << 20, n_dest: 4, dup_frac: 0.0 };
+    let inputs = sc.inputs(&machine, machine.cores_per_node());
+    let (best, _) = sm.best(&inputs);
+    assert_eq!(best.transport, Transport::DeviceAware, "best at 1 MiB was {}", best.label());
+}
+
+/// Section 4.6 / Figure 4.3 bottom rows: removing 25% duplicates speeds
+/// node-aware strategies, leaves standard untouched.
+#[test]
+fn dedup_only_affects_node_aware() {
+    let machine = lassen(32);
+    let params = lassen_params();
+    let sm = StrategyModel::new(&machine, &params);
+    let base = Scenario { n_msgs: 256, msg_size: 4096, n_dest: 16, dup_frac: 0.0 };
+    let dedup = Scenario { dup_frac: 0.25, ..base };
+    let bi = base.inputs(&machine, machine.cores_per_node());
+    let di = dedup.inputs(&machine, machine.cores_per_node());
+    for s in Strategy::all() {
+        let t0 = sm.time(s, &bi);
+        let t1 = sm.time(s, &di);
+        if s.kind == StrategyKind::Standard {
+            assert_eq!(t0, t1, "{}", s.label());
+        } else {
+            assert!(t1 < t0, "{}: dedup didn't help ({t1} !< {t0})", s.label());
+        }
+    }
+}
+
+/// Figure 5.1: across the SuiteSparse set, a staged strategy is fastest in
+/// the (simulated) benchmark for the large-GPU-count cells, and Split+MD
+/// wins the majority.
+#[test]
+fn fig51_staged_split_dominates_suite() {
+    let params = lassen_params();
+    let mut split_wins = 0usize;
+    let mut staged_wins = 0usize;
+    let mut cells = 0usize;
+    for info in &suite::MATRICES {
+        let mat = suite::proxy(info, 128);
+        let gpus = 32;
+        if gpus * 8 > mat.nrows {
+            continue;
+        }
+        let machine = lassen(8);
+        let pm = PartitionedMatrix::build(&mat, gpus);
+        let pattern = pm.comm_pattern(&machine, 8);
+        let mut best: Option<(Strategy, f64)> = None;
+        for s in Strategy::all() {
+            let sched = build_schedule(s, &machine, &pattern);
+            let t = sim::run(&machine, &params, &sched, ppn_for(&machine, s)).total;
+            if best.map(|(_, bt)| t < bt).unwrap_or(true) {
+                best = Some((s, t));
+            }
+        }
+        let (winner, _) = best.unwrap();
+        cells += 1;
+        if winner.transport == Transport::Staged {
+            staged_wins += 1;
+        }
+        if winner.kind == StrategyKind::SplitMd {
+            split_wins += 1;
+        }
+    }
+    assert!(cells >= 4, "not enough cells ({cells})");
+    assert!(staged_wins * 10 >= cells * 8, "staged won only {staged_wins}/{cells}");
+    assert!(split_wins * 2 >= cells, "Split+MD won only {split_wins}/{cells}");
+}
+
+/// Section 5.1: Split+DD never beats Split+MD in the benchmark cells.
+#[test]
+fn split_dd_worse_than_md() {
+    let params = lassen_params();
+    for info in suite::MATRICES.iter().take(3) {
+        let mat = suite::proxy(info, 128);
+        let machine = lassen(8);
+        let pm = PartitionedMatrix::build(&mat, 32.min(mat.nrows / 8));
+        let pattern = pm.comm_pattern(&machine, 8);
+        let md = Strategy::new(StrategyKind::SplitMd, Transport::Staged).unwrap();
+        let dd = Strategy::new(StrategyKind::SplitDd, Transport::Staged).unwrap();
+        let t_md = sim::run(&machine, &params, &build_schedule(md, &machine, &pattern), machine.cores_per_node()).total;
+        let t_dd = sim::run(&machine, &params, &build_schedule(dd, &machine, &pattern), machine.cores_per_node()).total;
+        assert!(t_md <= t_dd * 1.05, "{}: MD {t_md} vs DD {t_dd}", info.name);
+    }
+}
+
+/// Device-aware node-aware (3-step/2-step) beats device-aware standard on
+/// the SpMV patterns (Section 5.1).
+#[test]
+fn da_nodeaware_beats_da_standard_on_spmv() {
+    let params = lassen_params();
+    let info = suite::info("audikw_1").unwrap();
+    let mat = suite::proxy(info, 128);
+    let machine = lassen(8);
+    let pm = PartitionedMatrix::build(&mat, 32);
+    let pattern = pm.comm_pattern(&machine, 8);
+    let t = |k| {
+        let s = Strategy::new(k, Transport::DeviceAware).unwrap();
+        sim::run(&machine, &params, &build_schedule(s, &machine, &pattern), 4).total
+    };
+    let std_da = t(StrategyKind::Standard);
+    let three_da = t(StrategyKind::ThreeStep);
+    assert!(three_da < std_da, "3-step DA {three_da} !< standard DA {std_da}");
+}

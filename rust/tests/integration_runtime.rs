@@ -1,0 +1,198 @@
+//! Integration: the PJRT runtime path — load the AOT JAX/Pallas artifacts
+//! (HLO text), execute through the CPU PJRT client and compare against the
+//! in-Rust ELL kernel and the CSR oracle.
+//!
+//! These tests require `make artifacts`; they are skipped (with a message)
+//! when the artifacts are absent so `cargo test` works on a fresh clone.
+
+use hetcomm::comm::{Strategy, StrategyKind, Transport};
+use hetcomm::coordinator::{DistSpmv, SpmvConfig};
+use hetcomm::runtime::{fitting_spec, spmv_specs, Runtime};
+use hetcomm::sparse::gen;
+use hetcomm::topology::machines::lassen;
+use hetcomm::util::rng::Rng;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    let rt = match Runtime::new(artifacts_dir()) {
+        Ok(rt) => rt,
+        Err(_) => return false,
+    };
+    rt.artifacts_present(&spmv_specs())
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("SKIP: artifacts missing — run `make artifacts`");
+            return;
+        }
+    };
+}
+
+#[test]
+fn pjrt_client_boots() {
+    let rt = Runtime::new(artifacts_dir()).expect("PJRT CPU client");
+    assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+}
+
+#[test]
+fn artifact_executes_and_matches_rust_kernel() {
+    require_artifacts!();
+    let rt = Runtime::new(artifacts_dir()).unwrap();
+    let spec = fitting_spec(256, 32, 16, 256).unwrap();
+    let exe = rt.load(&spec).unwrap();
+
+    // Random padded ELL problem at the artifact shape.
+    let mut rng = Rng::new(7);
+    let rows = spec.rows;
+    let (dw, ow, ghost) = (spec.diag_width, spec.offd_width, spec.ghost);
+    let mut diag_vals = vec![0f32; rows * dw];
+    let mut diag_cols = vec![0i32; rows * dw];
+    let mut offd_vals = vec![0f32; rows * ow];
+    let mut offd_cols = vec![0i32; rows * ow];
+    for i in 0..rows * dw {
+        if rng.bool(0.4) {
+            diag_vals[i] = rng.f64_in(-1.0, 1.0) as f32;
+            diag_cols[i] = rng.usize_in(0, rows) as i32;
+        }
+    }
+    for i in 0..rows * ow {
+        if rng.bool(0.3) {
+            offd_vals[i] = rng.f64_in(-1.0, 1.0) as f32;
+            offd_cols[i] = rng.usize_in(0, ghost) as i32;
+        }
+    }
+    let v_local: Vec<f32> = (0..rows).map(|_| rng.f64_in(-1.0, 1.0) as f32).collect();
+    let v_ghost: Vec<f32> = (0..ghost).map(|_| rng.f64_in(-1.0, 1.0) as f32).collect();
+
+    let got = exe.run_spmv(&diag_vals, &diag_cols, &offd_vals, &offd_cols, &v_local, &v_ghost).unwrap();
+
+    // Reference: in-Rust ELL arithmetic.
+    let mut want = vec![0f32; rows];
+    for r in 0..rows {
+        let mut acc = 0f32;
+        for k in 0..dw {
+            acc += diag_vals[r * dw + k] * v_local[diag_cols[r * dw + k] as usize];
+        }
+        for k in 0..ow {
+            acc += offd_vals[r * ow + k] * v_ghost[offd_cols[r * ow + k] as usize];
+        }
+        want[r] = acc;
+    }
+    assert_eq!(got.len(), rows);
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!((g - w).abs() <= 1e-4 * w.abs().max(1.0), "row {i}: {g} vs {w}");
+    }
+}
+
+#[test]
+fn distributed_spmv_through_pjrt_verifies() {
+    require_artifacts!();
+    // 8x8x16 -> 1024 rows over 8 GPUs = 128 rows (two z-layers) per part:
+    // slab thickness 2 keeps the offd ELL width <= 9 (single remote face),
+    // within the artifact's static width of 16.
+    let a = gen::stencil_27pt(8, 8, 16);
+    let machine = lassen(2);
+    let mut rng = Rng::new(11);
+    let v: Vec<f32> = (0..a.nrows).map(|_| rng.f64_in(-1.0, 1.0) as f32).collect();
+    let cfg = SpmvConfig { use_pjrt: true, artifacts_dir: artifacts_dir(), ..Default::default() };
+    for kind in [StrategyKind::Standard, StrategyKind::ThreeStep, StrategyKind::SplitMd] {
+        let s = Strategy::new(kind, Transport::Staged).unwrap();
+        let d = DistSpmv::new(&a, 8, &machine, s, cfg.clone()).unwrap();
+        let rep = d.run(&v, 1).unwrap();
+        assert_eq!(rep.verified, Some(true), "{}: max err {}", s.label(), rep.max_abs_err);
+    }
+}
+
+#[test]
+fn pjrt_power_iteration_e2e() {
+    require_artifacts!();
+    let a = gen::stencil_27pt(4, 4, 16); // 2-layer slabs per part (see above)
+    let machine = lassen(2);
+    let cfg = SpmvConfig { use_pjrt: true, artifacts_dir: artifacts_dir(), ..Default::default() };
+    let s = Strategy::new(StrategyKind::SplitMd, Transport::Staged).unwrap();
+    let d = DistSpmv::new(&a, 8, &machine, s, cfg).unwrap();
+    let (v, lambda, _, _) = d.power_iterate(&vec![1f32; a.nrows], 15).unwrap();
+    // 27-pt stencil dominant eigenvalue is < 52 and > 26 on a small cube.
+    assert!(lambda > 10.0 && lambda < 52.0, "lambda {lambda}");
+    let av = a.spmv(&v);
+    let mut resid = 0f32;
+    for (x, y) in av.iter().zip(&v) {
+        resid = resid.max((x - lambda * y).abs());
+    }
+    assert!(resid / lambda < 0.2, "relative residual {}", resid / lambda);
+}
+
+#[test]
+fn persistent_engine_through_pjrt() {
+    require_artifacts!();
+    use hetcomm::coordinator::{Engine, EngineConfig};
+    let a = gen::stencil_27pt(8, 8, 16);
+    let machine = lassen(2);
+    let mut rng = Rng::new(19);
+    let v: Vec<f32> = (0..a.nrows).map(|_| rng.f64_in(-1.0, 1.0) as f32).collect();
+    let s = Strategy::new(StrategyKind::SplitMd, Transport::Staged).unwrap();
+    let cfg = EngineConfig { use_pjrt: true, artifacts_dir: artifacts_dir(), overlap: true };
+    let mut eng = Engine::new(&a, 8, &machine, s, &v, cfg).unwrap();
+    let expect = a.spmv(&v);
+    for _ in 0..3 {
+        let w = eng.iterate(None).unwrap();
+        let scale = expect.iter().fold(1f32, |m, x| m.max(x.abs()));
+        for (i, (x, y)) in expect.iter().zip(&w).enumerate() {
+            assert!((x - y).abs() <= 1e-4 * scale, "row {i}: {x} vs {y}");
+        }
+    }
+    let stats = eng.shutdown();
+    assert_eq!(stats.iterations, 3);
+}
+
+#[test]
+fn engine_pjrt_overlap_matches_fused() {
+    require_artifacts!();
+    use hetcomm::coordinator::{Engine, EngineConfig};
+    let a = gen::stencil_27pt(4, 4, 16);
+    let machine = lassen(2);
+    let v: Vec<f32> = (0..a.nrows).map(|i| ((i * 7 % 13) as f32 - 6.0) / 6.0).collect();
+    let s = Strategy::new(StrategyKind::ThreeStep, Transport::Staged).unwrap();
+    let mk = |overlap| EngineConfig { use_pjrt: true, artifacts_dir: artifacts_dir(), overlap };
+    let mut e1 = Engine::new(&a, 8, &machine, s, &v, mk(true)).unwrap();
+    let mut e2 = Engine::new(&a, 8, &machine, s, &v, mk(false)).unwrap();
+    let w1 = e1.iterate(None).unwrap();
+    let w2 = e2.iterate(None).unwrap();
+    for (a, b) in w1.iter().zip(&w2) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn missing_artifact_is_clean_error() {
+    let rt = Runtime::new("/nonexistent-artifacts").unwrap();
+    let spec = fitting_spec(256, 32, 16, 256).unwrap();
+    let err = match rt.load(&spec) {
+        Ok(_) => panic!("load from /nonexistent-artifacts unexpectedly succeeded"),
+        Err(e) => e,
+    };
+    assert!(err.to_string().contains("parsing HLO text"), "{err:#}");
+}
+
+#[test]
+fn shape_mismatch_rejected() {
+    require_artifacts!();
+    let rt = Runtime::new(artifacts_dir()).unwrap();
+    let spec = fitting_spec(256, 32, 16, 256).unwrap();
+    let exe = rt.load(&spec).unwrap();
+    // wrong v_local length
+    let err = exe.run_spmv(
+        &vec![0f32; 256 * 32],
+        &vec![0i32; 256 * 32],
+        &vec![0f32; 256 * 16],
+        &vec![0i32; 256 * 16],
+        &vec![0f32; 100],
+        &vec![0f32; 256],
+    );
+    assert!(err.is_err());
+}

@@ -1,0 +1,174 @@
+//! Integration: the full distributed-SpMV data plane — every strategy, on
+//! several matrix structures and partition counts, verified bit-for-bit
+//! against the serial CSR oracle; plus failure injection.
+
+use hetcomm::comm::{Strategy, StrategyKind, Transport};
+use hetcomm::coordinator::{DistSpmv, SpmvConfig};
+use hetcomm::sparse::{gen, suite};
+use hetcomm::topology::machines::{delta_like, frontier_like, lassen};
+use hetcomm::util::prop::check;
+use hetcomm::util::rng::Rng;
+
+fn staged_strategies() -> Vec<Strategy> {
+    StrategyKind::ALL.iter().map(|&k| Strategy::new(k, Transport::Staged).unwrap()).collect()
+}
+
+fn random_v(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.f64_in(-1.0, 1.0) as f32).collect()
+}
+
+#[test]
+fn all_strategies_all_matrices_verify() {
+    let machine = lassen(2);
+    let mut rng = Rng::new(1);
+    let matrices = vec![
+        ("stencil5", gen::stencil_5pt(20, 20)),
+        ("stencil27", gen::stencil_27pt(8, 8, 8)),
+        ("banded", gen::banded(400, 6, &mut rng)),
+        ("arrow", gen::arrow(400, 12, 3, &mut rng)),
+    ];
+    for (name, a) in matrices {
+        let v = random_v(a.nrows, 17);
+        for s in staged_strategies() {
+            let d = DistSpmv::new(&a, 8, &machine, s, SpmvConfig::default()).unwrap();
+            let rep = d.run(&v, 1).unwrap();
+            assert_eq!(rep.verified, Some(true), "{name}/{}: max err {}", s.label(), rep.max_abs_err);
+        }
+    }
+}
+
+#[test]
+fn partition_counts_sweep() {
+    let a = gen::stencil_27pt(6, 6, 8);
+    let v = random_v(a.nrows, 23);
+    for nparts in [1usize, 2, 3, 4, 5, 8] {
+        let machine = lassen(2);
+        let s = Strategy::new(StrategyKind::ThreeStep, Transport::Staged).unwrap();
+        let d = DistSpmv::new(&a, nparts, &machine, s, SpmvConfig::default()).unwrap();
+        let rep = d.run(&v, 1).unwrap();
+        assert_eq!(rep.verified, Some(true), "nparts={nparts}: max err {}", rep.max_abs_err);
+    }
+}
+
+#[test]
+fn future_machines_also_verify() {
+    // Section 6: the strategies extend to single-socket high-core-count
+    // nodes (Frontier-like) and wide Delta-like nodes.
+    let a = gen::stencil_27pt(6, 6, 6);
+    let v = random_v(a.nrows, 29);
+    for machine in [frontier_like(2), delta_like(2)] {
+        for s in staged_strategies() {
+            let d = DistSpmv::new(&a, machine.gpus_per_node(), &machine, s, SpmvConfig::default()).unwrap();
+            let rep = d.run(&v, 1).unwrap();
+            assert_eq!(rep.verified, Some(true), "{}/{}", machine.name, s.label());
+        }
+    }
+}
+
+#[test]
+fn suite_proxies_verify_on_split_md() {
+    let machine = lassen(2);
+    for info in &suite::MATRICES {
+        let a = suite::proxy(info, 256); // small proxies for test speed
+        let v = random_v(a.nrows, 31);
+        let s = Strategy::new(StrategyKind::SplitMd, Transport::Staged).unwrap();
+        let d = DistSpmv::new(&a, 8, &machine, s, SpmvConfig::default()).unwrap();
+        let rep = d.run(&v, 1).unwrap();
+        assert_eq!(rep.verified, Some(true), "{}: max err {}", info.name, rep.max_abs_err);
+    }
+}
+
+#[test]
+fn small_caps_stress_split_routing() {
+    let a = gen::stencil_27pt(8, 8, 4);
+    let machine = lassen(2);
+    let v = random_v(a.nrows, 37);
+    for cap in [16usize, 64, 512, 8192] {
+        for kind in [StrategyKind::SplitMd, StrategyKind::SplitDd] {
+            let s = Strategy::new(kind, Transport::Staged).unwrap().with_cap(cap);
+            let d = DistSpmv::new(&a, 8, &machine, s, SpmvConfig::default()).unwrap();
+            let rep = d.run(&v, 1).unwrap();
+            assert_eq!(rep.verified, Some(true), "{kind:?} cap {cap}: err {}", rep.max_abs_err);
+        }
+    }
+}
+
+#[test]
+fn iterations_deterministic() {
+    let a = gen::stencil_5pt(12, 12);
+    let machine = lassen(1);
+    let v = random_v(a.nrows, 41);
+    let s = Strategy::new(StrategyKind::TwoStep, Transport::Staged).unwrap();
+    let d = DistSpmv::new(&a, 4, &machine, s, SpmvConfig::default()).unwrap();
+    let r1 = d.run(&v, 1).unwrap();
+    let r2 = d.run(&v, 4).unwrap();
+    assert_eq!(r1.w, r2.w);
+}
+
+#[test]
+fn random_patterns_property() {
+    check("random banded matrices verify under random strategies", 6, |g| {
+        let n = g.usize(64, 300);
+        let band = g.usize(1, 8);
+        let mut rng = Rng::new(g.case_seed);
+        let a = gen::banded(n, band, &mut rng);
+        let nparts = *g.choose(&[2usize, 4, 8]);
+        let machine = lassen(2);
+        let kind = *g.choose(&StrategyKind::ALL);
+        let s = Strategy::new(kind, Transport::Staged).unwrap();
+        let v = random_v(a.nrows, g.case_seed);
+        let d = DistSpmv::new(&a, nparts, &machine, s, SpmvConfig::default())
+            .map_err(|e| format!("setup: {e}"))?;
+        let rep = d.run(&v, 1).map_err(|e| format!("run: {e}"))?;
+        if rep.verified != Some(true) {
+            return Err(format!("{kind:?} nparts {nparts}: max err {}", rep.max_abs_err));
+        }
+        Ok(())
+    });
+}
+
+// ---- failure injection ------------------------------------------------
+
+#[test]
+fn wrong_vector_length_rejected() {
+    let a = gen::stencil_5pt(8, 8);
+    let machine = lassen(1);
+    let s = Strategy::new(StrategyKind::Standard, Transport::Staged).unwrap();
+    let d = DistSpmv::new(&a, 4, &machine, s, SpmvConfig::default()).unwrap();
+    assert!(d.run(&vec![1.0; 63], 1).is_err());
+    assert!(d.run(&vec![1.0; 65], 1).is_err());
+}
+
+#[test]
+fn zero_iterations_rejected() {
+    let a = gen::stencil_5pt(8, 8);
+    let machine = lassen(1);
+    let s = Strategy::new(StrategyKind::Standard, Transport::Staged).unwrap();
+    let d = DistSpmv::new(&a, 4, &machine, s, SpmvConfig::default()).unwrap();
+    assert!(d.run(&vec![1.0; 64], 0).is_err());
+}
+
+#[test]
+fn oversubscribed_machine_rejected() {
+    let a = gen::stencil_5pt(8, 8);
+    let machine = lassen(1); // 4 GPUs
+    let s = Strategy::new(StrategyKind::Standard, Transport::Staged).unwrap();
+    assert!(DistSpmv::new(&a, 5, &machine, s, SpmvConfig::default()).is_err());
+}
+
+#[test]
+fn device_aware_split_rejected_at_construction() {
+    assert!(Strategy::new(StrategyKind::SplitMd, Transport::DeviceAware).is_err());
+    assert!(Strategy::new(StrategyKind::SplitDd, Transport::DeviceAware).is_err());
+}
+
+#[test]
+fn power_iteration_on_zero_matrix_fails_cleanly() {
+    let a = hetcomm::sparse::csr::Csr::from_triplets(16, 16, &[(0, 0, 0.0)]);
+    let machine = lassen(1);
+    let s = Strategy::new(StrategyKind::Standard, Transport::Staged).unwrap();
+    let d = DistSpmv::new(&a, 4, &machine, s, SpmvConfig::default()).unwrap();
+    let err = d.power_iterate(&vec![1.0; 16], 3).unwrap_err();
+    assert!(err.to_string().contains("collapsed"), "{err}");
+}

@@ -1,0 +1,220 @@
+//! Property tests over the communication strategies: conservation,
+//! message-count orderings and duplicate-data invariants on random
+//! irregular patterns.
+
+use hetcomm::comm::{build_schedule, is_internode, Loc, Strategy, StrategyKind, Transport};
+use hetcomm::pattern::generators::random_pattern;
+use hetcomm::pattern::CommPattern;
+use hetcomm::topology::machines::lassen;
+use hetcomm::topology::Machine;
+use hetcomm::util::prop::{check, Gen};
+
+fn machine_for(g: &mut Gen) -> Machine {
+    lassen(g.usize(2, 6))
+}
+
+fn ppn_for(machine: &Machine, s: Strategy) -> usize {
+    match s.kind {
+        StrategyKind::SplitMd | StrategyKind::SplitDd => machine.cores_per_node(),
+        _ => machine.gpus_per_node() * s.kind.ppg(),
+    }
+}
+
+/// Unique inter-node bytes required by a pattern (per destination node).
+fn required_internode_unique(machine: &Machine, p: &CommPattern) -> usize {
+    let mut seen = std::collections::BTreeSet::new();
+    let mut total = 0;
+    for m in p.internode(machine) {
+        if m.dup_group == hetcomm::pattern::Msg::NO_DUP
+            || seen.insert((m.src, m.dup_group, machine.gpu_node(m.dst)))
+        {
+            total += m.bytes;
+        }
+    }
+    total
+}
+
+#[test]
+fn internode_bytes_conserved_per_strategy() {
+    check("internode bytes == unique requirement", 60, |g| {
+        let machine = machine_for(g);
+        let n_msgs = g.usize(1, 80);
+        let pattern = random_pattern(&machine, g.rng(), n_msgs, 1 << 14, 0.3);
+        let required = required_internode_unique(&machine, &pattern);
+        let raw: usize = pattern.internode(&machine).map(|m| m.bytes).sum();
+        for s in Strategy::all() {
+            let sched = build_schedule(s, &machine, &pattern);
+            let ppn = ppn_for(&machine, s);
+            let got = sched.internode_bytes(&machine, ppn);
+            let expect = if s.kind == StrategyKind::Standard { raw } else { required };
+            if got != expect {
+                return Err(format!("{}: internode bytes {got} != expected {expect}", s.label()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn message_count_ordering() {
+    check("standard >= 2-step >= 3-step inter-node msgs", 60, |g| {
+        let machine = machine_for(g);
+        let n_msgs = g.usize(2, 100);
+        let pattern = random_pattern(&machine, g.rng(), n_msgs, 1 << 12, 0.2);
+        let count = |kind| {
+            let s = Strategy::new(kind, Transport::DeviceAware).unwrap();
+            let sched = build_schedule(s, &machine, &pattern);
+            sched.internode_msgs(&machine, ppn_for(&machine, s))
+        };
+        let std_n = count(StrategyKind::Standard);
+        let two_n = count(StrategyKind::TwoStep);
+        let three_n = count(StrategyKind::ThreeStep);
+        if !(std_n >= two_n && two_n >= three_n) {
+            return Err(format!("ordering violated: std {std_n}, 2-step {two_n}, 3-step {three_n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn three_step_at_most_one_buffer_per_node_pair() {
+    check("3-step single buffer per pair", 40, |g| {
+        let machine = machine_for(g);
+        let n = g.usize(1, 120);
+        let pattern = random_pattern(&machine, g.rng(), n, 1 << 13, 0.2);
+        let s = Strategy::new(StrategyKind::ThreeStep, Transport::Staged).unwrap();
+        let sched = build_schedule(s, &machine, &pattern);
+        let ppn = ppn_for(&machine, s);
+        let mut pairs = std::collections::BTreeMap::new();
+        for ph in &sched.phases {
+            for x in &ph.xfers {
+                if is_internode(&machine, x, ppn) {
+                    let node = |l: Loc| match l {
+                        Loc::Gpu(gp) => machine.gpu_node(gp).0,
+                        Loc::Host(p) => machine.proc_node(p, ppn).0,
+                    };
+                    *pairs.entry((node(x.src), node(x.dst))).or_insert(0usize) += 1;
+                }
+            }
+        }
+        for ((a, b), n) in pairs {
+            if n > 1 {
+                return Err(format!("pair ({a},{b}) has {n} inter-node messages"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn split_respects_cap_modulo_raise() {
+    check("split chunks <= effective cap", 40, |g| {
+        let machine = machine_for(g);
+        let n = g.usize(1, 60);
+        let pattern = random_pattern(&machine, g.rng(), n, 1 << 16, 0.1);
+        let cap = *g.choose(&[1024usize, 4096, 8192, 16384]);
+        let s = Strategy::new(StrategyKind::SplitMd, Transport::Staged).unwrap().with_cap(cap);
+        let sched = build_schedule(s, &machine, &pattern);
+        let ppn = machine.cores_per_node();
+        // effective cap may be raised to ceil(total_node_vol / ppn)
+        let stats = pattern.stats(&machine);
+        let raised = stats.s_node.div_ceil(ppn);
+        let eff = cap.max(raised);
+        for ph in sched.phases.iter().filter(|p| p.label == "inter-node") {
+            for x in &ph.xfers {
+                if x.bytes > eff {
+                    return Err(format!("chunk {} > effective cap {eff}", x.bytes));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn device_aware_schedules_have_no_copies() {
+    check("DA schedules copy-free", 30, |g| {
+        let machine = machine_for(g);
+        let n = g.usize(1, 50);
+        let pattern = random_pattern(&machine, g.rng(), n, 1 << 12, 0.2);
+        for kind in [StrategyKind::Standard, StrategyKind::ThreeStep, StrategyKind::TwoStep] {
+            let s = Strategy::new(kind, Transport::DeviceAware).unwrap();
+            let sched = build_schedule(s, &machine, &pattern);
+            if sched.phases.iter().any(|p| !p.copies.is_empty()) {
+                return Err(format!("{} has copies", s.label()));
+            }
+            // all endpoints are GPUs
+            for ph in &sched.phases {
+                for x in &ph.xfers {
+                    if matches!(x.src, Loc::Host(_)) || matches!(x.dst, Loc::Host(_)) {
+                        return Err(format!("{} routes through host", s.label()));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn staged_copies_balance_delivery() {
+    check("staged d2h == h2d bytes", 40, |g| {
+        let machine = machine_for(g);
+        let n = g.usize(1, 60);
+        let pattern = random_pattern(&machine, g.rng(), n, 1 << 12, 0.0);
+        for kind in [StrategyKind::Standard, StrategyKind::ThreeStep, StrategyKind::TwoStep] {
+            let s = Strategy::new(kind, Transport::Staged).unwrap();
+            let sched = build_schedule(s, &machine, &pattern);
+            let d2h: usize = sched
+                .phases
+                .iter()
+                .flat_map(|p| &p.copies)
+                .filter(|c| c.dir == hetcomm::comm::CopyKind::D2H)
+                .map(|c| c.bytes)
+                .sum();
+            let h2d: usize = sched
+                .phases
+                .iter()
+                .flat_map(|p| &p.copies)
+                .filter(|c| c.dir == hetcomm::comm::CopyKind::H2D)
+                .map(|c| c.bytes)
+                .sum();
+            // without duplicates, staged-out == delivered-in
+            if d2h != h2d {
+                return Err(format!("{}: d2h {d2h} != h2d {h2d}", s.label()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn empty_and_intranode_patterns_cross_nothing() {
+    check("no internode traffic without internode msgs", 30, |g| {
+        let machine = lassen(g.usize(2, 4));
+        // all messages within node 0
+        let gpn = machine.gpus_per_node();
+        let mut msgs = Vec::new();
+        for _ in 0..g.usize(1, 20) {
+            let a = g.usize(0, gpn);
+            let mut b = g.usize(0, gpn);
+            while b == a {
+                b = g.usize(0, gpn);
+            }
+            msgs.push(hetcomm::pattern::Msg::new(
+                hetcomm::topology::GpuId(a),
+                hetcomm::topology::GpuId(b),
+                g.usize(1, 1 << 10),
+            ));
+        }
+        let pattern = CommPattern::new(msgs);
+        for s in Strategy::all() {
+            let sched = build_schedule(s, &machine, &pattern);
+            let n = sched.internode_msgs(&machine, ppn_for(&machine, s));
+            if n != 0 {
+                return Err(format!("{}: {n} inter-node msgs from intra-node pattern", s.label()));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,136 @@
+//! Property tests for the Algorithm 1 machinery (chunking, rank
+//! assignment) and the Split exchange plan.
+
+use hetcomm::comm::plan::{assign_ranks, split_chunks};
+use hetcomm::comm::{Strategy, StrategyKind, Transport};
+use hetcomm::coordinator::ExchangePlan;
+use hetcomm::sparse::{gen, PartitionedMatrix};
+use hetcomm::topology::machines::lassen;
+use hetcomm::topology::NodeId;
+use hetcomm::util::prop::{check, Gen};
+use std::collections::BTreeMap;
+
+fn random_vols(g: &mut Gen, max_dests: usize) -> BTreeMap<NodeId, usize> {
+    let n = g.usize(1, max_dests + 1);
+    let mut vols = BTreeMap::new();
+    for i in 0..n {
+        vols.insert(NodeId(i + 1), g.usize(0, 1 << 18));
+    }
+    vols
+}
+
+#[test]
+fn chunks_conserve_bytes() {
+    check("split_chunks conserves volume", 200, |g| {
+        let vols = random_vols(g, 8);
+        let cap = *g.choose(&[512usize, 4096, 8192, 65536]);
+        let ppn = *g.choose(&[4usize, 16, 40]);
+        let chunks = split_chunks(NodeId(0), &vols, cap, ppn);
+        let total: usize = vols.values().sum();
+        let got: usize = chunks.iter().map(|c| c.bytes).sum();
+        if got != total {
+            return Err(format!("chunks {got} != total {total}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn chunk_count_bounded_after_raise() {
+    check("chunk count <= max(ppn, dests)", 200, |g| {
+        let vols = random_vols(g, 8);
+        let cap = *g.choose(&[512usize, 8192]);
+        let ppn = *g.choose(&[4usize, 40]);
+        let chunks = split_chunks(NodeId(0), &vols, cap, ppn);
+        let total: usize = vols.values().sum();
+        let max_single = vols.values().copied().max().unwrap_or(0);
+        if max_single < cap {
+            // conglomeration: exactly one chunk per nonzero destination
+            let nonzero = vols.values().filter(|&&v| v > 0).count();
+            if chunks.len() != nonzero {
+                return Err(format!("conglomerated {} != {nonzero}", chunks.len()));
+            }
+        } else if total.div_ceil(cap) > ppn {
+            // raised cap: per-destination splitting adds at most one
+            // remainder chunk per destination
+            let bound = ppn + vols.len();
+            if chunks.len() > bound {
+                return Err(format!("{} chunks > bound {bound}", chunks.len()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn chunks_respect_effective_cap() {
+    check("each chunk <= effective cap", 200, |g| {
+        let vols = random_vols(g, 6);
+        let cap = *g.choose(&[1024usize, 8192]);
+        let ppn = 40;
+        let total: usize = vols.values().sum();
+        let max_single = vols.values().copied().max().unwrap_or(0);
+        let eff = if max_single < cap {
+            usize::MAX // conglomerated: one message per node, any size
+        } else if total.div_ceil(cap) > ppn {
+            total.div_ceil(ppn)
+        } else {
+            cap
+        };
+        for c in split_chunks(NodeId(0), &vols, cap, ppn) {
+            if c.bytes > eff {
+                return Err(format!("chunk {} > effective cap {eff}", c.bytes));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn rank_assignment_descending_and_bounded() {
+    check("assign_ranks: ranks < ppn, big chunks get extreme ranks", 200, |g| {
+        let n = g.usize(1, 50);
+        let sizes: Vec<usize> = (0..n).map(|_| g.usize(0, 1 << 16)).collect();
+        let ppn = *g.choose(&[1usize, 4, 16, 40]);
+        for from_front in [true, false] {
+            let ranks = assign_ranks(&sizes, ppn, from_front);
+            if ranks.len() != sizes.len() {
+                return Err("length mismatch".into());
+            }
+            if ranks.iter().any(|&r| r >= ppn) {
+                return Err(format!("rank out of range: {ranks:?}"));
+            }
+            // the largest chunk gets rank 0 (front) or ppn-1 (back)
+            if let Some(imax) = (0..n).max_by_key(|&i| (sizes[i], std::cmp::Reverse(i))) {
+                let expect = if from_front { 0 } else { ppn - 1 };
+                if ranks[imax] != expect {
+                    return Err(format!("largest chunk rank {} != {expect}", ranks[imax]));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn split_plan_validates_on_random_stencils() {
+    check("split exchange plan delivers every ghost", 12, |g| {
+        let nx = g.usize(3, 7);
+        let ny = g.usize(3, 7);
+        let nz = g.usize(3, 7);
+        let a = gen::stencil_27pt(nx, ny, nz);
+        let nparts = *g.choose(&[2usize, 4, 8]);
+        if a.nrows < nparts {
+            return Ok(());
+        }
+        let machine = lassen(2);
+        let pm = PartitionedMatrix::build(&a, nparts);
+        for kind in [StrategyKind::SplitMd, StrategyKind::SplitDd] {
+            let cap = *g.choose(&[64usize, 256, 8192]);
+            let s = Strategy::new(kind, Transport::Staged).unwrap().with_cap(cap);
+            let plan = ExchangePlan::build(&pm, &machine, s);
+            plan.validate(&pm).map_err(|e| format!("{kind:?} cap {cap}: {e}"))?;
+        }
+        Ok(())
+    });
+}
