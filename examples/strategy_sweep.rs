@@ -1,64 +1,36 @@
-//! Strategy sweep: reproduce the shape of Figure 4.3 from the command line —
-//! modeled time for every strategy across message sizes, for small/large
-//! message counts and destination-node counts, with and without duplicate
-//! data.
+//! Strategy sweep: reproduce the shape of Figure 4.3 from the command line
+//! through the parallel sweep engine — modeled time for every strategy
+//! across message sizes, for small/large message counts and
+//! destination-node counts, with and without duplicate data, plus the
+//! derived crossover and regime-winner report.
 //!
 //! ```bash
 //! cargo run --release --example strategy_sweep
 //! ```
 
-use hetcomm::bench::{fmt_secs, Table};
-use hetcomm::comm::Strategy;
-use hetcomm::model::StrategyModel;
-use hetcomm::params::lassen_params;
-use hetcomm::pattern::generators::{Scenario, TwoStepCase};
-use hetcomm::topology::machines;
+use hetcomm::sweep::{emit, run_sweep, GridSpec, PatternGen, SweepConfig};
 
 fn main() {
-    let machine = machines::lassen(32);
-    let params = lassen_params();
-    let sm = StrategyModel::new(&machine, &params);
     let sizes: Vec<usize> = (0..=20).step_by(2).map(|e| 1usize << e).collect();
-
     for &n_msgs in &[32usize, 256] {
-        for &n_dest in &[4usize, 16] {
-            for &dup in &[0.0f64, 0.25] {
-                let strategies = Strategy::all();
-                let mut header: Vec<String> = vec!["size[B]".into()];
-                header.extend(strategies.iter().map(|s| s.label()));
-                header.push("2-Step 1 (DA)".into());
-                header.push("best".into());
-                let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
-                let mut t = Table::new(
-                    format!("{n_msgs} inter-node msgs -> {n_dest} nodes, dup {:.0}%", dup * 100.0),
-                    &hdr,
-                );
-                for &size in &sizes {
-                    let sc = Scenario { n_msgs, msg_size: size, n_dest, dup_frac: dup };
-                    let inputs = sc.inputs(&machine, machine.cores_per_node());
-                    let mut row = vec![size.to_string()];
-                    let mut best = (String::new(), f64::INFINITY);
-                    for &s in &strategies {
-                        let time = sm.time(s, &inputs);
-                        row.push(fmt_secs(time));
-                        if time < best.1 {
-                            best = (s.label(), time);
-                        }
-                    }
-                    // The 2-Step best case ("2-Step 1") of Section 4.6.
-                    let one = sc.inputs_two_step(&machine, machine.cores_per_node(), TwoStepCase::One);
-                    let two_da = Strategy::new(
-                        hetcomm::comm::StrategyKind::TwoStep,
-                        hetcomm::comm::Transport::DeviceAware,
-                    )
-                    .unwrap();
-                    row.push(fmt_secs(sm.time(two_da, &one)));
-                    row.push(best.0);
-                    t.row(row);
-                }
-                t.print();
-            }
+        for &dup in &[0.0f64, 0.25] {
+            let config = SweepConfig {
+                grid: GridSpec {
+                    gens: vec![PatternGen::Uniform],
+                    dest_nodes: vec![4, 16],
+                    gpus_per_node: vec![4],
+                    sizes: sizes.clone(),
+                    n_msgs,
+                    dup_frac: dup,
+                },
+                // Figure 4.3 is a pure model study: skip the simulator so
+                // the example stays instant.
+                sim: false,
+                ..Default::default()
+            };
+            let result = run_sweep(&config).expect("valid sweep config");
+            print!("{}", emit::render_tables(&result));
         }
     }
-    println!("\n(compare the `best` column with the circled minima of Figure 4.3)");
+    println!("\n(compare the `model winner` column with the circled minima of Figure 4.3)");
 }

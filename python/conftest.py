@@ -1,0 +1,20 @@
+"""Pytest config for ``cd python && pytest tests/`` invocations.
+
+Mirrors the repo-root conftest's dependency guard: when the JAX/Pallas
+toolchain (jax, numpy) or hypothesis is unavailable, skip collection of
+the test tree gracefully instead of erroring at import time.
+"""
+
+import importlib.util
+import sys
+
+_REQUIRED = ("numpy", "jax", "hypothesis")
+_missing = [mod for mod in _REQUIRED if importlib.util.find_spec(mod) is None]
+
+collect_ignore_glob = []
+if _missing:
+    collect_ignore_glob.append("tests/*")
+    sys.stderr.write(
+        "conftest: skipping tests/ (missing: {}); the Rust tier-1 suite "
+        "does not need the Python stack\n".format(", ".join(_missing))
+    )

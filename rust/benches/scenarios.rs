@@ -1,70 +1,53 @@
 //! Bench: modeled performance for the common irregular scenarios —
-//! **Figure 4.3** (all four panels × dedup rows) and the **Table 6**
-//! composite models that generate them.
+//! **Figure 4.3** (both panels × dedup rows) and the **Table 6** composite
+//! models that generate them — driven through the parallel sweep engine,
+//! with the engine's wall-clock scaling (1 thread vs all cores) reported.
 //!
-//! A node sends 32 or 256 messages, spread evenly over its 4 GPUs, to 4 or
-//! 16 destination nodes; message size sweeps 2^0..2^20 B; the bottom rows
-//! remove 25% duplicate data from the node-aware strategies.
+//! A node sends 256 messages, spread evenly over its 4 GPUs, to 4 or 16
+//! destination nodes; message size sweeps 2^0..2^20 B; the dup rows remove
+//! 25% duplicate data from the node-aware strategies.
 //!
 //! ```bash
 //! cargo bench --bench scenarios
 //! ```
 
-use hetcomm::bench::{fmt_secs, Table};
-use hetcomm::comm::{Strategy, StrategyKind, Transport};
-use hetcomm::model::StrategyModel;
-use hetcomm::params::lassen_params;
-use hetcomm::pattern::generators::{Scenario, TwoStepCase};
-use hetcomm::topology::machines::lassen;
+use hetcomm::sweep::{emit, run_sweep, GridSpec, PatternGen, SweepConfig};
+
+fn grid(dup: f64) -> GridSpec {
+    GridSpec {
+        gens: vec![PatternGen::Uniform, PatternGen::Random],
+        dest_nodes: vec![4, 16],
+        gpus_per_node: vec![4],
+        sizes: (0..=20).step_by(2).map(|e| 1usize << e).collect(),
+        n_msgs: 256,
+        dup_frac: dup,
+    }
+}
 
 fn main() {
-    let machine = lassen(32);
-    let params = lassen_params();
-    let sm = StrategyModel::new(&machine, &params);
-    let sizes: Vec<usize> = (0..=20).step_by(2).map(|e| 1usize << e).collect();
-    let strategies = Strategy::all();
-
     let mut winners: Vec<(String, String)> = Vec::new();
 
-    for &n_msgs in &[32usize, 256] {
-        for &n_dest in &[4usize, 16] {
-            for &dup in &[0.0f64, 0.25] {
-                let mut header: Vec<String> = vec!["size[B]".into()];
-                header.extend(strategies.iter().map(|s| s.label()));
-                header.push("2-Step 1 (DA)".into());
-                header.push("min (excl 2-Step 1)".into());
-                let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
-                let mut t = Table::new(
-                    format!(
-                        "Figure 4.3 — {n_msgs} inter-node msgs -> {n_dest} nodes{}",
-                        if dup > 0.0 { ", 25% duplicate data removed" } else { "" }
-                    ),
-                    &hdr,
-                );
-                for &size in &sizes {
-                    let sc = Scenario { n_msgs, msg_size: size, n_dest, dup_frac: dup };
-                    let inputs = sc.inputs(&machine, machine.cores_per_node());
-                    let mut row = vec![size.to_string()];
-                    let mut best = (String::new(), f64::INFINITY);
-                    for &s in &strategies {
-                        let time = sm.time(s, &inputs);
-                        row.push(fmt_secs(time));
-                        if time < best.1 {
-                            best = (s.label(), time);
-                        }
-                    }
-                    let one = sc.inputs_two_step(&machine, machine.cores_per_node(), TwoStepCase::One);
-                    let two_da = Strategy::new(StrategyKind::TwoStep, Transport::DeviceAware).unwrap();
-                    row.push(fmt_secs(sm.time(two_da, &one)));
-                    row.push(best.0.clone());
-                    t.row(row);
-                    if size == 1024 {
-                        winners.push((format!("{n_msgs} msgs/{n_dest} nodes/dup {dup:.2} @1KiB"), best.0));
-                    }
-                }
-                t.print();
+    for &dup in &[0.0f64, 0.25] {
+        let config = SweepConfig { grid: grid(dup), sim: true, ..Default::default() };
+        let result = run_sweep(&config).expect("valid sweep config");
+        print!("{}", emit::render_tables(&result));
+        for w in &result.report.winners {
+            if w.size == 1024 && w.gen == PatternGen::Uniform {
+                winners.push((format!("256 msgs/{} nodes/dup {dup:.2} @1KiB", w.dest_nodes), w.winner.clone()));
             }
         }
+
+        // Engine scaling: the same grid with one worker thread.
+        let serial = SweepConfig { threads: 1, ..config.clone() };
+        let serial_result = run_sweep(&serial).expect("valid sweep config");
+        println!(
+            "\nsweep wall-clock (dup {:.0}%): {} threads {:.3}s vs 1 thread {:.3}s ({:.2}x)",
+            dup * 100.0,
+            result.threads_used,
+            result.elapsed_s,
+            serial_result.elapsed_s,
+            serial_result.elapsed_s / result.elapsed_s.max(1e-9)
+        );
     }
 
     println!("\nHeadline winners at 1 KiB messages (compare with the circled minima of Fig 4.3):");

@@ -51,6 +51,18 @@ impl StrategyKind {
     pub fn supports_device_aware(&self) -> bool {
         !matches!(self, StrategyKind::SplitMd | StrategyKind::SplitDd)
     }
+
+    /// Parse a user-facing kind name (CLI filters, config files).
+    pub fn parse(s: &str) -> Option<StrategyKind> {
+        match s.trim().to_ascii_lowercase().replace('_', "-").as_str() {
+            "standard" | "std" => Some(StrategyKind::Standard),
+            "3-step" | "three-step" | "3step" => Some(StrategyKind::ThreeStep),
+            "2-step" | "two-step" | "2step" => Some(StrategyKind::TwoStep),
+            "split-md" | "split+md" | "splitmd" => Some(StrategyKind::SplitMd),
+            "split-dd" | "split+dd" | "splitdd" => Some(StrategyKind::SplitDd),
+            _ => None,
+        }
+    }
 }
 
 impl std::fmt::Display for StrategyKind {
@@ -122,6 +134,17 @@ impl Strategy {
 
     pub fn label(&self) -> String {
         format!("{} ({})", self.kind, self.transport)
+    }
+
+    /// Host processes per node a simulated run of this strategy uses: Split
+    /// enlists every CPU core on the node (Section 2.3.3); everything else
+    /// runs `ppg` processes per GPU. This fixes the process→node/socket
+    /// mapping the simulator needs for locality decisions.
+    pub fn sim_ppn(&self, machine: &Machine) -> usize {
+        match self.kind {
+            StrategyKind::SplitMd | StrategyKind::SplitDd => machine.cores_per_node(),
+            _ => machine.gpus_per_node() * self.kind.ppg(),
+        }
     }
 }
 
@@ -273,5 +296,26 @@ mod tests {
     fn labels_readable() {
         let s = Strategy::new(StrategyKind::ThreeStep, Transport::DeviceAware).unwrap();
         assert_eq!(s.label(), "3-Step (device-aware)");
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for kind in StrategyKind::ALL {
+            assert_eq!(StrategyKind::parse(&kind.to_string()), Some(kind));
+        }
+        assert_eq!(StrategyKind::parse("three-step"), Some(StrategyKind::ThreeStep));
+        assert_eq!(StrategyKind::parse("SPLIT_MD"), Some(StrategyKind::SplitMd));
+        assert_eq!(StrategyKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn sim_ppn_per_strategy() {
+        let m = crate::topology::machines::lassen(2);
+        let split = Strategy::new(StrategyKind::SplitMd, Transport::Staged).unwrap();
+        assert_eq!(split.sim_ppn(&m), 40);
+        let dd = Strategy::new(StrategyKind::SplitDd, Transport::Staged).unwrap();
+        assert_eq!(dd.sim_ppn(&m), 40);
+        let std = Strategy::new(StrategyKind::Standard, Transport::Staged).unwrap();
+        assert_eq!(std.sim_ppn(&m), 4);
     }
 }

@@ -33,6 +33,9 @@
 //! - [`coordinator`] — the leader/worker distributed SpMV engine: real data
 //!   plane (bytes actually move between per-GPU workers), simulated clock
 //!   (the paper's measured constants cost every transfer).
+//! - [`sweep`] — the parallel strategy-sweep engine: the full
+//!   (strategy × generator × nodes × GPUs × size) grid through models and
+//!   simulator, with winner/crossover reporting (the `sweep` subcommand).
 //! - [`bench`] — the in-tree benchmark harness used by `rust/benches/*`.
 
 pub mod bench;
@@ -44,10 +47,12 @@ pub mod pattern;
 pub mod runtime;
 pub mod sim;
 pub mod sparse;
+pub mod sweep;
 pub mod topology;
 pub mod util;
 
 pub use comm::{Schedule, Strategy, StrategyKind, Transport};
 pub use params::{MachineParams, Protocol};
 pub use pattern::CommPattern;
+pub use sweep::{SweepConfig, SweepResult};
 pub use topology::{Locality, Machine};

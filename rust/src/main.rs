@@ -3,7 +3,9 @@
 //! Subcommands:
 //! - `params`   — print the measured Lassen parameter tables (Tables 2–4);
 //! - `model`    — evaluate the Table 6 models for a scenario (Figure 4.3);
-//! - `sweep`    — sweep message sizes × strategies, model + simulator;
+//! - `sweep`    — parallel strategy sweep: the full (strategy × generator ×
+//!   nodes × GPUs × size) grid through models + simulator, with winner,
+//!   crossover and regime reporting (JSON / CSV / table);
 //! - `spmv`     — run the distributed SpMV benchmark on a matrix proxy;
 //! - `validate` — compare model predictions against simulated SpMV
 //!   communication (Figure 4.2);
@@ -53,7 +55,7 @@ USAGE: hetcomm <SUBCOMMAND> [FLAGS]
 SUBCOMMANDS:
   params     print the measured Lassen parameter tables (Tables 2-4)
   model      evaluate the Table 6 strategy models for a scenario
-  sweep      sweep message sizes x strategies (model + simulator)
+  sweep      parallel strategy sweep over the full characterization grid
   spmv       distributed SpMV communication benchmark (SuiteSparse proxies)
   validate   model-vs-simulation comparison (Figure 4.2)
   study      Section 6 outlook: strategy winners on future machines
@@ -139,12 +141,42 @@ fn cmd_model(argv: &[String]) -> i32 {
     0
 }
 
+/// Parse `--strategies`: "all" or a comma list of kind names; each kind
+/// expands to its valid Table 5 transports.
+fn parse_strategies(spec: &str) -> Result<Vec<Strategy>, String> {
+    if spec.trim().eq_ignore_ascii_case("all") {
+        return Ok(Strategy::all());
+    }
+    let mut out = Vec::new();
+    for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+        let kind = StrategyKind::parse(part)
+            .ok_or_else(|| format!("unknown strategy kind {part:?} (standard, 3-step, 2-step, split-md, split-dd)"))?;
+        out.push(Strategy::new(kind, Transport::Staged).expect("staged always valid"));
+        if kind.supports_device_aware() {
+            out.push(Strategy::new(kind, Transport::DeviceAware).expect("checked"));
+        }
+    }
+    if out.is_empty() {
+        return Err("empty strategy list".into());
+    }
+    Ok(out)
+}
+
 fn cmd_sweep(argv: &[String]) -> i32 {
-    let cli = Cli::new("hetcomm sweep", "message-size sweep across strategies (model)")
-        .flag("msgs", "256", "inter-node messages")
-        .flag("dest", "16", "destination nodes")
-        .flag("sizes", "2^4,2^6,2^8,2^10,2^12,2^14,2^16,2^18,2^20", "comma list of sizes (supports 2^k)")
-        .flag("nodes", "32", "cluster nodes");
+    let cli = Cli::new("hetcomm sweep", "parallel strategy sweep: model + simulator over the full grid")
+        .flag("msgs", "256", "inter-node messages per scenario")
+        .flag("dest", "4,8,16", "destination-node counts (comma list)")
+        .flag("gpn", "4", "GPUs per node (comma list, even values)")
+        .flag("sizes", "2^4,2^6,2^8,2^10,2^12,2^14,2^16,2^18,2^20", "message sizes (supports 2^k)")
+        .flag("dup", "0.0", "duplicate-data fraction in [0,1)")
+        .flag("gens", "uniform,random", "pattern generators (uniform|random)")
+        .flag("strategies", "all", "strategy kinds (comma list) or 'all'")
+        .flag("seed", "42", "base seed for per-cell generators")
+        .flag("threads", "0", "worker threads (0 = all cores)")
+        .flag("format", "table", "output format: table | json | csv")
+        .flag("out", "-", "output path ('-' = stdout)")
+        .switch("tiny", "run the <10s smoke grid instead of the flag-defined grid")
+        .switch("model-only", "skip the discrete-event simulator");
     let a = match cli.parse(argv) {
         Ok(a) => a,
         Err(e) => {
@@ -152,27 +184,107 @@ fn cmd_sweep(argv: &[String]) -> i32 {
             return 2;
         }
     };
-    let machine = machines::lassen(a.get_usize("nodes").unwrap());
-    let params = lassen_params();
-    let sm = StrategyModel::new(&machine, &params);
-    let strategies = Strategy::all();
-    let mut header: Vec<String> = vec!["size[B]".into()];
-    header.extend(strategies.iter().map(|s| s.label()));
-    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
-    let mut t = Table::new("Model sweep", &hdr);
-    for size in a.get_usize_list("sizes").unwrap() {
-        let sc = Scenario {
-            n_msgs: a.get_usize("msgs").unwrap(),
-            msg_size: size,
-            n_dest: a.get_usize("dest").unwrap(),
-            dup_frac: 0.0,
-        };
-        let inputs = sc.inputs(&machine, machine.cores_per_node());
-        let mut row = vec![size.to_string()];
-        row.extend(strategies.iter().map(|&s| fmt_secs(sm.time(s, &inputs))));
-        t.row(row);
+
+    let grid = if a.get_bool("tiny") {
+        hetcomm::sweep::GridSpec::tiny()
+    } else {
+        let mut gens = Vec::new();
+        for part in a.get("gens").split(',').filter(|p| !p.trim().is_empty()) {
+            match hetcomm::sweep::PatternGen::parse(part) {
+                Some(g) => gens.push(g),
+                None => {
+                    eprintln!("unknown pattern generator {part:?} (uniform | random)");
+                    return 2;
+                }
+            }
+        }
+        hetcomm::sweep::GridSpec {
+            gens,
+            dest_nodes: match a.get_usize_list("dest") {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!("{}", e.0);
+                    return 2;
+                }
+            },
+            gpus_per_node: match a.get_usize_list("gpn") {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!("{}", e.0);
+                    return 2;
+                }
+            },
+            sizes: match a.get_usize_list("sizes") {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!("{}", e.0);
+                    return 2;
+                }
+            },
+            n_msgs: match a.get_usize("msgs") {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!("{}", e.0);
+                    return 2;
+                }
+            },
+            dup_frac: match a.get_f64("dup") {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!("{}", e.0);
+                    return 2;
+                }
+            },
+        }
+    };
+
+    let strategies = match parse_strategies(a.get("strategies")) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let (seed, threads) = match (a.get_u64("seed"), a.get_usize("threads")) {
+        (Ok(s), Ok(t)) => (s, t),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("{}", e.0);
+            return 2;
+        }
+    };
+    let config = hetcomm::sweep::SweepConfig { grid, strategies, seed, threads, sim: !a.get_bool("model-only") };
+
+    let result = match hetcomm::sweep::run_sweep(&config) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("sweep failed: {e}");
+            return 2;
+        }
+    };
+
+    let body = match a.get("format") {
+        "json" => hetcomm::sweep::emit::to_json(&result),
+        "csv" => hetcomm::sweep::emit::to_csv(&result),
+        "table" => hetcomm::sweep::emit::render_tables(&result),
+        other => {
+            eprintln!("unknown format {other:?} (table | json | csv)");
+            return 2;
+        }
+    };
+    let out_path = a.get("out");
+    if out_path == "-" {
+        print!("{body}");
+    } else if let Err(e) = std::fs::write(out_path, &body) {
+        eprintln!("cannot write {out_path}: {e}");
+        return 1;
     }
-    t.print();
+    eprintln!(
+        "swept {} grid cells x {} strategies on {} threads in {:.3}s",
+        result.cells.len() / config.strategies.len().max(1),
+        config.strategies.len(),
+        result.threads_used,
+        result.elapsed_s
+    );
     0
 }
 
@@ -260,10 +372,7 @@ fn cmd_validate(argv: &[String]) -> i32 {
         &["strategy", "model[s]", "simulated[s]", "ratio"],
     );
     for s in Strategy::all() {
-        let ppn = match s.kind {
-            StrategyKind::SplitMd | StrategyKind::SplitDd => machine.cores_per_node(),
-            _ => machine.gpus_per_node(),
-        };
+        let ppn = s.sim_ppn(&machine);
         let inputs = pattern.model_inputs(&machine, ppn, dup);
         let model = sm.time(s, &inputs);
         let sched = hetcomm::comm::build_schedule(s, &machine, &pattern);

@@ -1,0 +1,346 @@
+//! Deterministic emitters for sweep results: JSON (machine-readable,
+//! byte-identical across seeded runs), CSV (one row per cell × strategy)
+//! and aligned text tables (the Figure 4.3 view). No `serde` in the
+//! offline image — the JSON writer is hand-rolled with fixed float
+//! formatting so output is reproducible bit-for-bit.
+
+use super::engine::{CellResult, SweepResult};
+use crate::bench::{fmt_secs, Table};
+use std::fmt::Write as _;
+
+/// Fixed-width scientific float formatting: deterministic and valid JSON.
+fn num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.9e}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn opt_num(x: Option<f64>) -> String {
+    match x {
+        Some(v) => num(v),
+        None => "null".to_string(),
+    }
+}
+
+/// Minimal JSON string escaping (labels only contain ASCII, but stay safe).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Serialize the full sweep result (config echo, cells, report) as JSON.
+/// Wall-clock fields are deliberately excluded: two runs with the same
+/// seed must produce byte-identical output.
+pub fn to_json(result: &SweepResult) -> String {
+    let cfg = &result.config;
+    let mut out = String::new();
+    out.push_str("{\n");
+    let _ = writeln!(out, "  \"schema\": \"hetcomm.sweep.v1\",");
+    let _ = writeln!(out, "  \"seed\": {},", cfg.seed);
+    let _ = writeln!(out, "  \"n_msgs\": {},", cfg.grid.n_msgs);
+    let _ = writeln!(out, "  \"dup_frac\": {},", num(cfg.grid.dup_frac));
+    let _ = writeln!(out, "  \"sim\": {},", cfg.sim);
+
+    out.push_str("  \"cells\": [\n");
+    for (i, c) in result.cells.iter().enumerate() {
+        let comma = if i + 1 < result.cells.len() { "," } else { "" };
+        let _ = writeln!(
+            out,
+            "    {{\"gen\": \"{}\", \"dest_nodes\": {}, \"gpus_per_node\": {}, \"size\": {}, \
+             \"strategy\": \"{}\", \"model_s\": {}, \"sim_s\": {}, \"model_err\": {}}}{comma}",
+            c.gen.label(),
+            c.dest_nodes,
+            c.gpus_per_node,
+            c.size,
+            esc(&c.label),
+            num(c.model_s),
+            opt_num(c.sim_s),
+            opt_num(c.model_err),
+        );
+    }
+    out.push_str("  ],\n");
+
+    out.push_str("  \"winners\": [\n");
+    for (i, w) in result.report.winners.iter().enumerate() {
+        let comma = if i + 1 < result.report.winners.len() { "," } else { "" };
+        let sim_winner = match &w.sim_winner {
+            Some(s) => format!("\"{}\"", esc(s)),
+            None => "null".to_string(),
+        };
+        let _ = writeln!(
+            out,
+            "    {{\"gen\": \"{}\", \"dest_nodes\": {}, \"gpus_per_node\": {}, \"size\": {}, \
+             \"winner\": \"{}\", \"staged\": {}, \"model_s\": {}, \"sim_winner\": {}}}{comma}",
+            w.gen.label(),
+            w.dest_nodes,
+            w.gpus_per_node,
+            w.size,
+            esc(&w.winner),
+            w.winner_staged,
+            num(w.model_s),
+            sim_winner,
+        );
+    }
+    out.push_str("  ],\n");
+
+    out.push_str("  \"crossovers\": [\n");
+    for (i, x) in result.report.crossovers.iter().enumerate() {
+        let comma = if i + 1 < result.report.crossovers.len() { "," } else { "" };
+        let _ = writeln!(
+            out,
+            "    {{\"gen\": \"{}\", \"dest_nodes\": {}, \"gpus_per_node\": {}, \
+             \"size_before\": {}, \"size_after\": {}, \"from\": \"{}\", \"to\": \"{}\"}}{comma}",
+            x.gen.label(),
+            x.dest_nodes,
+            x.gpus_per_node,
+            x.size_before,
+            x.size_after,
+            esc(&x.from),
+            esc(&x.to),
+        );
+    }
+    out.push_str("  ],\n");
+
+    out.push_str("  \"regimes\": [\n");
+    for (i, g) in result.report.regimes.iter().enumerate() {
+        let comma = if i + 1 < result.report.regimes.len() { "," } else { "" };
+        let _ = writeln!(
+            out,
+            "    {{\"gen\": \"{}\", \"dest_nodes\": {}, \"gpus_per_node\": {}, \"band\": \"{}\", \
+             \"winner\": \"{}\", \"staged\": {}, \"total_model_s\": {}}}{comma}",
+            g.gen.label(),
+            g.dest_nodes,
+            g.gpus_per_node,
+            g.band,
+            esc(&g.winner),
+            g.winner_staged,
+            num(g.total_model_s),
+        );
+    }
+    out.push_str("  ],\n");
+
+    let e = &result.report.model_error;
+    let _ = writeln!(
+        out,
+        "  \"model_error\": {{\"cells_with_sim\": {}, \"mean\": {}, \"max\": {}}}",
+        e.cells_with_sim,
+        num(e.mean),
+        num(e.max)
+    );
+    out.push_str("}\n");
+    out
+}
+
+/// One CSV row per (cell × strategy).
+pub fn to_csv(result: &SweepResult) -> String {
+    let mut out = String::from("gen,dest_nodes,gpus_per_node,size,strategy,model_s,sim_s,model_err\n");
+    for c in &result.cells {
+        let _ = writeln!(
+            out,
+            "{},{},{},{},\"{}\",{},{},{}",
+            c.gen.label(),
+            c.dest_nodes,
+            c.gpus_per_node,
+            c.size,
+            c.label.replace('"', "\"\""),
+            num(c.model_s),
+            c.sim_s.map(num).unwrap_or_default(),
+            c.model_err.map(num).unwrap_or_default(),
+        );
+    }
+    out
+}
+
+/// Human-readable view: one table per regime line (sizes × strategies,
+/// modeled seconds, winner column), then the crossover and regime-winner
+/// report and the model-error summary.
+pub fn render_tables(result: &SweepResult) -> String {
+    let mut out = String::new();
+    let strategies = &result.config.strategies;
+    let cells = &result.cells;
+
+    let mut i = 0;
+    while i < cells.len() {
+        // one regime line: same (gen, dest, gpn)
+        let mut j = i + 1;
+        while j < cells.len()
+            && cells[j].gen == cells[i].gen
+            && cells[j].dest_nodes == cells[i].dest_nodes
+            && cells[j].gpus_per_node == cells[i].gpus_per_node
+        {
+            j += 1;
+        }
+        let line = &cells[i..j];
+        let mut header: Vec<String> = vec!["size[B]".into()];
+        header.extend(strategies.iter().map(|s| s.label()));
+        header.push("model winner".into());
+        let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(
+            format!(
+                "{} · {} msgs -> {} nodes · {} GPUs/node · dup {:.0}%",
+                line[0].gen,
+                result.config.grid.n_msgs,
+                line[0].dest_nodes,
+                line[0].gpus_per_node,
+                result.config.grid.dup_frac * 100.0
+            ),
+            &hdr,
+        );
+        let mut k = i;
+        while k < j {
+            let mut m = k + 1;
+            while m < j && cells[m].index == cells[k].index {
+                m += 1;
+            }
+            let group = &cells[k..m];
+            let mut row = vec![group[0].size.to_string()];
+            for s in strategies {
+                match group.iter().find(|c| c.strategy == *s) {
+                    Some(c) => row.push(fmt_secs(c.model_s)),
+                    None => row.push(String::new()),
+                }
+            }
+            let winner = result
+                .report
+                .winners
+                .iter()
+                .find(|w| {
+                    w.gen == group[0].gen
+                        && w.dest_nodes == group[0].dest_nodes
+                        && w.gpus_per_node == group[0].gpus_per_node
+                        && w.size == group[0].size
+                })
+                .map(|w| w.winner.clone())
+                .unwrap_or_default();
+            row.push(winner);
+            t.row(row);
+            k = m;
+        }
+        out.push_str(&t.render());
+        i = j;
+    }
+
+    out.push_str("\nCrossover report (model winner changes with message size):\n");
+    if result.report.crossovers.is_empty() {
+        out.push_str("  (none within the swept sizes)\n");
+    }
+    for x in &result.report.crossovers {
+        let _ = writeln!(
+            out,
+            "  {} · {} nodes · {} GPUs/node: {} -> {} between {} B and {} B",
+            x.gen, x.dest_nodes, x.gpus_per_node, x.from, x.to, x.size_before, x.size_after
+        );
+    }
+
+    out.push_str("\nRegime winners (min total modeled time per band):\n");
+    for g in &result.report.regimes {
+        let _ = writeln!(
+            out,
+            "  {} · {} nodes · {} GPUs/node · {:>5}: {} ({})",
+            g.gen,
+            g.dest_nodes,
+            g.gpus_per_node,
+            g.band,
+            g.winner,
+            fmt_secs(g.total_model_s).trim()
+        );
+    }
+
+    let e = &result.report.model_error;
+    if e.cells_with_sim > 0 {
+        let _ = writeln!(
+            out,
+            "\nModel vs simulation over {} cells: mean rel. error {:.2}, max {:.2}",
+            e.cells_with_sim, e.mean, e.max
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::engine::{run_sweep, SweepConfig};
+    use crate::sweep::grid::{GridSpec, PatternGen};
+
+    fn tiny_result() -> crate::sweep::engine::SweepResult {
+        let cfg = SweepConfig {
+            grid: GridSpec {
+                gens: vec![PatternGen::Uniform],
+                dest_nodes: vec![4],
+                gpus_per_node: vec![4],
+                sizes: vec![1 << 10, 1 << 18],
+                n_msgs: 32,
+                dup_frac: 0.0,
+            },
+            seed: 3,
+            threads: 1,
+            sim: true,
+            ..Default::default()
+        };
+        run_sweep(&cfg).unwrap()
+    }
+
+    #[test]
+    fn json_has_sections_and_no_wallclock() {
+        let r = tiny_result();
+        let j = to_json(&r);
+        for key in ["\"schema\"", "\"cells\"", "\"winners\"", "\"crossovers\"", "\"regimes\"", "\"model_error\""] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+        assert!(!j.contains("elapsed"), "wall-clock leaked into deterministic output");
+        // balanced braces/brackets as a cheap well-formedness check
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn json_floats_fixed_width() {
+        let r = tiny_result();
+        let j = to_json(&r);
+        assert!(j.contains("e-") || j.contains("e0"), "scientific notation expected: {j}");
+        assert_eq!(num(1.0), "1.000000000e0");
+        assert_eq!(num(f64::NAN), "null");
+    }
+
+    #[test]
+    fn csv_row_count() {
+        let r = tiny_result();
+        let csv = to_csv(&r);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 1 + r.cells.len());
+        assert!(lines[0].starts_with("gen,dest_nodes"));
+    }
+
+    #[test]
+    fn tables_mention_every_strategy_and_crossovers() {
+        let r = tiny_result();
+        let text = render_tables(&r);
+        for s in &r.config.strategies {
+            assert!(text.contains(&s.label()), "missing {}", s.label());
+        }
+        assert!(text.contains("Crossover report"));
+        assert!(text.contains("Regime winners"));
+    }
+
+    #[test]
+    fn escaping() {
+        assert_eq!(esc("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(esc("x\ny"), "x\\ny");
+    }
+}

@@ -1,0 +1,297 @@
+//! The parallel sweep engine: fan the grid cells out over an in-tree
+//! `std::thread` worker pool, evaluate every (cell × strategy) pair through
+//! both the Table 6 closed-form models and the discrete-event simulator,
+//! and collect results in a deterministic order.
+//!
+//! Determinism contract: given the same [`SweepConfig`] (including `seed`),
+//! two runs produce byte-identical emitter output regardless of thread
+//! count or scheduling — cells are seeded by index and results are sorted
+//! back into grid order after the pool drains.
+
+use super::grid::{CellSpec, GridSpec, PatternGen};
+use super::report::{analyze, SweepReport};
+use crate::comm::{build_schedule, dedup, Strategy};
+use crate::model::{ModelInputs, StrategyModel};
+use crate::params::lassen_params;
+use crate::pattern::generators::{random_pattern, Scenario};
+use crate::pattern::CommPattern;
+use crate::sim;
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Full sweep configuration: the grid plus run controls.
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    pub grid: GridSpec,
+    /// Strategies evaluated in every cell (default: all 8 of Table 5).
+    pub strategies: Vec<Strategy>,
+    /// Base seed; each cell derives its own deterministic sub-seed.
+    pub seed: u64,
+    /// Worker threads; 0 = one per available core.
+    pub threads: usize,
+    /// Run the discrete-event simulator next to the models.
+    pub sim: bool,
+}
+
+impl Default for SweepConfig {
+    fn default() -> SweepConfig {
+        SweepConfig { grid: GridSpec::default(), strategies: Strategy::all(), seed: 42, threads: 0, sim: true }
+    }
+}
+
+/// One evaluated (cell × strategy) pair.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    /// Index of the owning grid cell (groups the strategies of one cell).
+    pub index: usize,
+    pub gen: PatternGen,
+    pub dest_nodes: usize,
+    pub gpus_per_node: usize,
+    pub size: usize,
+    pub strategy: Strategy,
+    /// `strategy.label()`, precomputed for emitters.
+    pub label: String,
+    /// Table 6 model prediction [s].
+    pub model_s: f64,
+    /// Discrete-event simulated time [s] (None when `sim` is off).
+    pub sim_s: Option<f64>,
+    /// Relative model error `|model - sim| / sim` when both are present.
+    pub model_err: Option<f64>,
+}
+
+/// The sweep outcome: per-cell results plus the derived report.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub config: SweepConfig,
+    pub cells: Vec<CellResult>,
+    pub report: SweepReport,
+    /// Threads the pool actually used.
+    pub threads_used: usize,
+    /// Wall-clock seconds for the evaluation (excluded from emitter output
+    /// so seeded runs stay byte-identical).
+    pub elapsed_s: f64,
+}
+
+/// Resolve the worker count: 0 = available parallelism, always clamped to
+/// `[1, work_items]`.
+pub fn effective_threads(requested: usize, work_items: usize) -> usize {
+    let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let t = if requested == 0 { auto } else { requested };
+    t.clamp(1, work_items.max(1))
+}
+
+/// Deterministic per-cell sub-seed (splitmix-style index mixing).
+fn cell_seed(base: u64, index: usize) -> u64 {
+    let mut z = base ^ (index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z ^ (z >> 31)
+}
+
+/// Run the sweep: validate, fan out, aggregate, analyze.
+pub fn run_sweep(config: &SweepConfig) -> Result<SweepResult, String> {
+    config.grid.validate()?;
+    if config.strategies.is_empty() {
+        return Err("no strategies selected".into());
+    }
+    let cells = config.grid.cells();
+    let t0 = Instant::now();
+    let threads = effective_threads(config.threads, cells.len());
+
+    let next = AtomicUsize::new(0);
+    let collected: Mutex<Vec<(usize, Vec<CellResult>)>> = Mutex::new(Vec::with_capacity(cells.len()));
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let result = eval_cell(config, &cells[i]);
+                collected.lock().unwrap().push((i, result));
+            });
+        }
+    });
+
+    let mut collected = collected.into_inner().unwrap();
+    collected.sort_unstable_by_key(|&(i, _)| i);
+    let cells_out: Vec<CellResult> = collected.into_iter().flat_map(|(_, r)| r).collect();
+    let report = analyze(&cells_out);
+    Ok(SweepResult {
+        config: config.clone(),
+        cells: cells_out,
+        report,
+        threads_used: threads,
+        elapsed_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Evaluate one grid cell: build the pattern once, then model (and
+/// optionally simulate) every strategy against it.
+fn eval_cell(cfg: &SweepConfig, cell: &CellSpec) -> Vec<CellResult> {
+    let machine = cfg.grid.machine_for(cell.dest_nodes, cell.gpus_per_node);
+    let params = lassen_params();
+    let sm = StrategyModel::new(&machine, &params);
+    // Model inputs use the full core count: only the Split models read
+    // `ppn`, and Split enlists every core (matching `hetcomm model`).
+    let ppn = machine.cores_per_node();
+
+    let (inputs, pattern): (ModelInputs, Option<CommPattern>) = match cell.gen {
+        PatternGen::Uniform => {
+            let sc = Scenario {
+                n_msgs: cfg.grid.n_msgs,
+                msg_size: cell.size,
+                n_dest: cell.dest_nodes,
+                dup_frac: cfg.grid.dup_frac,
+            };
+            let pattern = cfg.sim.then(|| {
+                let base = sc.materialize(&machine);
+                if cfg.grid.dup_frac > 0.0 {
+                    dedup::with_duplicate_fraction(&machine, &base, cfg.grid.dup_frac)
+                } else {
+                    base
+                }
+            });
+            (sc.inputs(&machine, ppn), pattern)
+        }
+        PatternGen::Random => {
+            let mut rng = Rng::new(cell_seed(cfg.seed, cell.index));
+            let pattern = random_pattern(&machine, &mut rng, cfg.grid.n_msgs, cell.size, cfg.grid.dup_frac);
+            let dup = pattern.duplicate_fraction(&machine);
+            (pattern.model_inputs(&machine, ppn, dup), cfg.sim.then_some(pattern))
+        }
+    };
+
+    let mut out = Vec::with_capacity(cfg.strategies.len());
+    for &strategy in &cfg.strategies {
+        let model_s = sm.time(strategy, &inputs);
+        let sim_s = pattern.as_ref().map(|p| {
+            let schedule = build_schedule(strategy, &machine, p);
+            sim::run(&machine, &params, &schedule, strategy.sim_ppn(&machine)).total
+        });
+        let model_err = sim_s.and_then(|t| if t > 0.0 { Some((model_s - t).abs() / t) } else { None });
+        out.push(CellResult {
+            index: cell.index,
+            gen: cell.gen,
+            dest_nodes: cell.dest_nodes,
+            gpus_per_node: cell.gpus_per_node,
+            size: cell.size,
+            strategy,
+            label: strategy.label(),
+            model_s,
+            sim_s,
+            model_err,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{StrategyKind, Transport};
+
+    fn small_config(threads: usize) -> SweepConfig {
+        SweepConfig {
+            grid: GridSpec {
+                gens: vec![PatternGen::Uniform, PatternGen::Random],
+                dest_nodes: vec![4],
+                gpus_per_node: vec![4],
+                sizes: vec![256, 4096],
+                n_msgs: 32,
+                dup_frac: 0.0,
+            },
+            seed: 11,
+            threads,
+            sim: true,
+            ..Default::default()
+        }
+    }
+
+    fn cmp_cells(a: &[CellResult], b: &[CellResult]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.index, y.index);
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.model_s.to_bits(), y.model_s.to_bits(), "{} model", x.label);
+            assert_eq!(x.sim_s.map(f64::to_bits), y.sim_s.map(f64::to_bits), "{} sim", x.label);
+        }
+    }
+
+    #[test]
+    fn results_cover_grid_times_strategies() {
+        let cfg = small_config(2);
+        let r = run_sweep(&cfg).unwrap();
+        assert_eq!(r.cells.len(), cfg.grid.cells().len() * cfg.strategies.len());
+        assert!(r.cells.iter().all(|c| c.model_s.is_finite() && c.model_s > 0.0));
+        assert!(r.cells.iter().all(|c| c.sim_s.is_some()));
+        // cells come back in grid order, strategies in Table 5 order
+        for w in r.cells.windows(2) {
+            assert!(w[0].index <= w[1].index);
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_bits() {
+        let r1 = run_sweep(&small_config(1)).unwrap();
+        let r4 = run_sweep(&small_config(4)).unwrap();
+        cmp_cells(&r1.cells, &r4.cells);
+    }
+
+    #[test]
+    fn same_seed_same_bits_different_seed_differs() {
+        let r1 = run_sweep(&small_config(2)).unwrap();
+        let r2 = run_sweep(&small_config(2)).unwrap();
+        cmp_cells(&r1.cells, &r2.cells);
+        let mut cfg = small_config(2);
+        cfg.seed = 12;
+        let r3 = run_sweep(&cfg).unwrap();
+        // random-generator sim times must move with the seed
+        let sim_of = |r: &SweepResult| -> Vec<u64> {
+            r.cells.iter().filter(|c| c.gen == PatternGen::Random).filter_map(|c| c.sim_s.map(f64::to_bits)).collect()
+        };
+        assert_ne!(sim_of(&r1), sim_of(&r3), "seed must drive the random generator");
+    }
+
+    #[test]
+    fn model_only_skips_sim() {
+        let mut cfg = small_config(2);
+        cfg.sim = false;
+        let r = run_sweep(&cfg).unwrap();
+        assert!(r.cells.iter().all(|c| c.sim_s.is_none() && c.model_err.is_none()));
+    }
+
+    #[test]
+    fn strategy_filter_respected() {
+        let mut cfg = small_config(1);
+        cfg.strategies = vec![Strategy::new(StrategyKind::SplitMd, Transport::Staged).unwrap()];
+        let r = run_sweep(&cfg).unwrap();
+        assert_eq!(r.cells.len(), cfg.grid.cells().len());
+        assert!(r.cells.iter().all(|c| c.strategy.kind == StrategyKind::SplitMd));
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        let mut cfg = small_config(1);
+        cfg.strategies.clear();
+        assert!(run_sweep(&cfg).is_err());
+        let mut cfg = small_config(1);
+        cfg.grid.sizes.clear();
+        assert!(run_sweep(&cfg).is_err());
+    }
+
+    #[test]
+    fn effective_threads_clamps() {
+        assert_eq!(effective_threads(3, 100), 3);
+        assert_eq!(effective_threads(64, 2), 2);
+        assert!(effective_threads(0, 100) >= 1);
+        assert_eq!(effective_threads(0, 0), 1);
+    }
+
+    #[test]
+    fn cell_seed_spreads() {
+        let s: std::collections::BTreeSet<u64> = (0..100).map(|i| cell_seed(42, i)).collect();
+        assert_eq!(s.len(), 100);
+    }
+}

@@ -1,0 +1,237 @@
+//! Grid specification for the parallel strategy sweep: the axes of the
+//! paper's characterization (pattern generator × destination-node count ×
+//! GPUs per node × message size), flattened into deterministic work cells.
+
+use crate::topology::Machine;
+
+/// How a cell's communication pattern is generated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum PatternGen {
+    /// The Figure 4.3 scenario: one node sends `n_msgs` messages of `size`
+    /// bytes, spread evenly over its GPUs, to `dest_nodes` other nodes.
+    Uniform,
+    /// Random irregular pattern over the whole machine: `n_msgs` messages
+    /// with sizes log-uniform in `[1, size]`, seeded per cell; `dup_frac`
+    /// acts as the duplicate-reuse probability.
+    Random,
+}
+
+impl PatternGen {
+    pub const ALL: [PatternGen; 2] = [PatternGen::Uniform, PatternGen::Random];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PatternGen::Uniform => "uniform",
+            PatternGen::Random => "random",
+        }
+    }
+
+    /// Parse a user-facing generator name.
+    pub fn parse(s: &str) -> Option<PatternGen> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "uniform" | "scenario" => Some(PatternGen::Uniform),
+            "random" | "irregular" => Some(PatternGen::Random),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for PatternGen {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+/// The sweep grid: every combination of the axes below is one cell, and
+/// every cell is evaluated for every selected strategy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GridSpec {
+    /// Pattern generators to sweep.
+    pub gens: Vec<PatternGen>,
+    /// Destination-node counts (the machine is built with one extra node to
+    /// host the sender, so `dest` destinations need `dest + 1` nodes).
+    pub dest_nodes: Vec<usize>,
+    /// GPUs per node (even: the Lassen-like node keeps 2 sockets).
+    pub gpus_per_node: Vec<usize>,
+    /// Message sizes in bytes (uniform: exact size; random: max size).
+    pub sizes: Vec<usize>,
+    /// Inter-node messages per scenario.
+    pub n_msgs: usize,
+    /// Duplicate-data fraction (uniform: model + marked sim duplicates;
+    /// random: per-message duplicate-reuse probability).
+    pub dup_frac: f64,
+}
+
+impl Default for GridSpec {
+    fn default() -> GridSpec {
+        GridSpec {
+            gens: vec![PatternGen::Uniform, PatternGen::Random],
+            dest_nodes: vec![4, 8, 16],
+            gpus_per_node: vec![4],
+            sizes: (4..=20).step_by(2).map(|e| 1usize << e).collect(),
+            n_msgs: 256,
+            dup_frac: 0.0,
+        }
+    }
+}
+
+/// One unit of sweep work: a fully-specified grid point (all strategies are
+/// evaluated inside the cell so the pattern is built once).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CellSpec {
+    /// Position in [`GridSpec::cells`] — drives the per-cell seed and the
+    /// deterministic output order.
+    pub index: usize,
+    pub gen: PatternGen,
+    pub dest_nodes: usize,
+    pub gpus_per_node: usize,
+    pub size: usize,
+}
+
+impl GridSpec {
+    /// A <10 s grid for CI smoke tests: small axes that still cross a
+    /// model winner boundary (Split+MD at moderate sizes, device-aware
+    /// standard at 256 KiB).
+    pub fn tiny() -> GridSpec {
+        GridSpec {
+            gens: vec![PatternGen::Uniform],
+            dest_nodes: vec![4],
+            gpus_per_node: vec![4],
+            sizes: vec![1 << 10, 1 << 14, 1 << 18],
+            n_msgs: 64,
+            dup_frac: 0.0,
+        }
+    }
+
+    /// Check axis sanity; returns a user-facing message on failure.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.gens.is_empty() {
+            return Err("no pattern generators selected".into());
+        }
+        if self.dest_nodes.is_empty() || self.dest_nodes.iter().any(|&d| d == 0) {
+            return Err("destination-node counts must be non-empty and positive".into());
+        }
+        if self.gpus_per_node.is_empty() || self.gpus_per_node.iter().any(|&g| g < 2 || g % 2 != 0) {
+            return Err("GPUs-per-node values must be even and >= 2 (2-socket nodes)".into());
+        }
+        if self.sizes.is_empty() || self.sizes.iter().any(|&s| s == 0) {
+            return Err("message sizes must be non-empty and positive".into());
+        }
+        if self.n_msgs == 0 {
+            return Err("n_msgs must be positive".into());
+        }
+        if !(0.0..1.0).contains(&self.dup_frac) {
+            return Err("dup_frac must be in [0, 1)".into());
+        }
+        Ok(())
+    }
+
+    /// Flatten the axes into cells, in deterministic generator-major order.
+    /// Sizes are sorted (and deduplicated) so per-regime winner lines read
+    /// in ascending size order, which is what crossover detection assumes.
+    pub fn cells(&self) -> Vec<CellSpec> {
+        let mut sizes = self.sizes.clone();
+        sizes.sort_unstable();
+        sizes.dedup();
+        let mut out = Vec::with_capacity(self.gens.len() * self.dest_nodes.len() * self.gpus_per_node.len() * sizes.len());
+        for &gen in &self.gens {
+            for &dest in &self.dest_nodes {
+                for &gpn in &self.gpus_per_node {
+                    for &size in &sizes {
+                        out.push(CellSpec { index: out.len(), gen, dest_nodes: dest, gpus_per_node: gpn, size });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The Lassen-like machine for one (dest, gpn) grid point: 2 sockets,
+    /// 20 cores per socket, `gpn / 2` GPUs per socket, and one node more
+    /// than the destination count so the uniform scenario has a sender.
+    pub fn machine_for(&self, dest_nodes: usize, gpus_per_node: usize) -> Machine {
+        Machine {
+            name: format!("lassen-g{gpus_per_node}"),
+            num_nodes: dest_nodes + 1,
+            sockets_per_node: 2,
+            cores_per_socket: 20,
+            gpus_per_socket: gpus_per_node / 2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_grid_validates() {
+        let g = GridSpec::default();
+        g.validate().unwrap();
+        assert!(!g.cells().is_empty());
+    }
+
+    #[test]
+    fn cells_cover_product_in_order() {
+        let g = GridSpec {
+            gens: vec![PatternGen::Uniform, PatternGen::Random],
+            dest_nodes: vec![4, 16],
+            gpus_per_node: vec![4],
+            sizes: vec![1024, 64], // unsorted on purpose
+            n_msgs: 32,
+            dup_frac: 0.0,
+        };
+        let cells = g.cells();
+        assert_eq!(cells.len(), 2 * 2 * 1 * 2);
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+        }
+        // sizes sorted ascending within each line
+        assert_eq!(cells[0].size, 64);
+        assert_eq!(cells[1].size, 1024);
+        // generator-major order
+        assert!(cells[..4].iter().all(|c| c.gen == PatternGen::Uniform));
+        assert!(cells[4..].iter().all(|c| c.gen == PatternGen::Random));
+    }
+
+    #[test]
+    fn machine_shape_follows_axes() {
+        let g = GridSpec::default();
+        let m = g.machine_for(16, 4);
+        assert_eq!(m.num_nodes, 17);
+        assert_eq!(m.gpus_per_node(), 4);
+        assert_eq!(m.cores_per_node(), 40);
+        let m8 = g.machine_for(4, 8);
+        assert_eq!(m8.gpus_per_node(), 8);
+    }
+
+    #[test]
+    fn validation_rejects_bad_axes() {
+        let mut g = GridSpec::default();
+        g.gpus_per_node = vec![3];
+        assert!(g.validate().is_err());
+        let mut g = GridSpec::default();
+        g.sizes.clear();
+        assert!(g.validate().is_err());
+        let mut g = GridSpec::default();
+        g.dup_frac = 1.0;
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn tiny_grid_is_small() {
+        let g = GridSpec::tiny();
+        g.validate().unwrap();
+        assert!(g.cells().len() <= 4);
+    }
+
+    #[test]
+    fn pattern_gen_parse() {
+        assert_eq!(PatternGen::parse("uniform"), Some(PatternGen::Uniform));
+        assert_eq!(PatternGen::parse("Random"), Some(PatternGen::Random));
+        assert_eq!(PatternGen::parse("bogus"), None);
+        for g in PatternGen::ALL {
+            assert_eq!(PatternGen::parse(g.label()), Some(g));
+        }
+    }
+}

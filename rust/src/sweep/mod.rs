@@ -1,0 +1,31 @@
+//! The parallel strategy-sweep engine — the characterization tool that
+//! turns the crate's layers into the paper's headline result.
+//!
+//! A sweep evaluates the full grid of (strategy × pattern generator ×
+//! destination-node count × GPUs-per-node × message size) through both the
+//! closed-form Table 6 models ([`crate::model::StrategyModel`]) and the
+//! discrete-event simulator ([`crate::sim`]), fanning cells out over an
+//! in-tree `std::thread` worker pool:
+//!
+//! - [`grid`] — the axes and their flattening into deterministic cells;
+//! - [`engine`] — the worker pool, per-cell seeding, model + sim evaluation;
+//! - [`report`] — per-cell winners, per-regime winning strategies,
+//!   crossover points, model-vs-simulation error aggregation;
+//! - [`emit`] — byte-deterministic JSON, CSV and table output.
+//!
+//! The derived report reproduces the paper's claim that staged node-aware
+//! Split strategies win the high-node-count, moderate-size regime while
+//! device-aware communication takes over at large message sizes
+//! (Figure 4.3 / Table 6), and locates the crossover sizes in between.
+//!
+//! Exposed on the CLI as `hetcomm sweep`; `examples/strategy_sweep.rs` and
+//! `rust/benches/scenarios.rs` are thin drivers over this module.
+
+pub mod emit;
+pub mod engine;
+pub mod grid;
+pub mod report;
+
+pub use engine::{effective_threads, run_sweep, CellResult, SweepConfig, SweepResult};
+pub use grid::{CellSpec, GridSpec, PatternGen};
+pub use report::{analyze, CellWinner, Crossover, ErrorSummary, RegimeWinner, SweepReport, SMALL_BAND_MAX};

@@ -1,0 +1,282 @@
+//! Sweep analysis: per-cell winners, per-regime winning strategies, model
+//! crossover points, and model-vs-simulation error aggregation — the
+//! machinery behind the paper's Table 6 / Figure 4.3 narrative ("staged
+//! node-aware split strategies win the high-message-count, moderate-size
+//! regime; device-aware communication takes over at large sizes").
+
+use super::engine::CellResult;
+use super::grid::PatternGen;
+use crate::comm::{StrategyKind, Transport};
+use std::collections::BTreeMap;
+
+/// Band boundary between the "small" and "large" message regimes: the
+/// Lassen eager→rendezvous switch point (8 KiB), where the paper's staging
+/// trade-offs change character.
+pub const SMALL_BAND_MAX: usize = 8192;
+
+/// The model-fastest strategy of one grid cell.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellWinner {
+    pub gen: PatternGen,
+    pub dest_nodes: usize,
+    pub gpus_per_node: usize,
+    pub size: usize,
+    /// Label of the model-fastest strategy.
+    pub winner: String,
+    pub winner_kind: StrategyKind,
+    pub winner_staged: bool,
+    pub model_s: f64,
+    /// Label of the simulator-fastest strategy, when the sweep simulated.
+    pub sim_winner: Option<String>,
+}
+
+/// A model winner change between two adjacent sizes of one regime line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Crossover {
+    pub gen: PatternGen,
+    pub dest_nodes: usize,
+    pub gpus_per_node: usize,
+    /// Largest size still won by `from`.
+    pub size_before: usize,
+    /// Smallest size won by `to`.
+    pub size_after: usize,
+    pub from: String,
+    pub to: String,
+}
+
+/// The strategy minimizing total modeled time over one band of one regime
+/// line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RegimeWinner {
+    pub gen: PatternGen,
+    pub dest_nodes: usize,
+    pub gpus_per_node: usize,
+    /// `"small"` (size <= [`SMALL_BAND_MAX`]) or `"large"`.
+    pub band: &'static str,
+    pub winner: String,
+    pub winner_kind: StrategyKind,
+    pub winner_staged: bool,
+    pub total_model_s: f64,
+}
+
+/// Aggregate model-vs-simulation error over cells that ran both.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ErrorSummary {
+    pub cells_with_sim: usize,
+    pub mean: f64,
+    pub max: f64,
+}
+
+/// The derived sweep report.
+#[derive(Clone, Debug, Default)]
+pub struct SweepReport {
+    pub winners: Vec<CellWinner>,
+    pub crossovers: Vec<Crossover>,
+    pub regimes: Vec<RegimeWinner>,
+    pub model_error: ErrorSummary,
+}
+
+fn same_line(a: &CellResult, b: &CellResult) -> bool {
+    a.gen == b.gen && a.dest_nodes == b.dest_nodes && a.gpus_per_node == b.gpus_per_node
+}
+
+/// Analyze sweep cells (in engine output order: grid-cell major, strategies
+/// within) into winners, crossovers, regime winners and error stats.
+pub fn analyze(cells: &[CellResult]) -> SweepReport {
+    let mut report = SweepReport::default();
+
+    // --- Per-cell winners: min model time over each cell's strategies. ---
+    let mut i = 0;
+    while i < cells.len() {
+        let mut j = i + 1;
+        while j < cells.len() && cells[j].index == cells[i].index {
+            j += 1;
+        }
+        let group = &cells[i..j];
+        let best = group
+            .iter()
+            .min_by(|a, b| a.model_s.partial_cmp(&b.model_s).expect("finite model times"))
+            .expect("non-empty cell group");
+        let sim_winner = group
+            .iter()
+            .filter(|c| c.sim_s.is_some())
+            .min_by(|a, b| a.sim_s.partial_cmp(&b.sim_s).expect("finite sim times"))
+            .map(|c| c.label.clone());
+        report.winners.push(CellWinner {
+            gen: best.gen,
+            dest_nodes: best.dest_nodes,
+            gpus_per_node: best.gpus_per_node,
+            size: best.size,
+            winner: best.label.clone(),
+            winner_kind: best.strategy.kind,
+            winner_staged: best.strategy.transport == Transport::Staged,
+            model_s: best.model_s,
+            sim_winner,
+        });
+        i = j;
+    }
+
+    // --- Crossovers: winner changes along each regime line (ascending
+    // size; the grid emits sizes sorted). ---
+    let mut k = 0;
+    while k < report.winners.len() {
+        let mut j = k + 1;
+        while j < report.winners.len() && winners_same_line(&report.winners[j], &report.winners[k]) {
+            j += 1;
+        }
+        for w in report.winners[k..j].windows(2) {
+            if w[0].winner != w[1].winner {
+                report.crossovers.push(Crossover {
+                    gen: w[0].gen,
+                    dest_nodes: w[0].dest_nodes,
+                    gpus_per_node: w[0].gpus_per_node,
+                    size_before: w[0].size,
+                    size_after: w[1].size,
+                    from: w[0].winner.clone(),
+                    to: w[1].winner.clone(),
+                });
+            }
+        }
+        k = j;
+    }
+
+    // --- Regime winners: per line and band, min total modeled time. ---
+    let mut i = 0;
+    while i < cells.len() {
+        let mut j = i + 1;
+        while j < cells.len() && same_line(&cells[j], &cells[i]) {
+            j += 1;
+        }
+        let line = &cells[i..j];
+        for (band, want_small) in [("small", true), ("large", false)] {
+            // label -> (total model s, kind, staged)
+            let mut totals: BTreeMap<String, (f64, StrategyKind, bool)> = BTreeMap::new();
+            for c in line.iter().filter(|c| (c.size <= SMALL_BAND_MAX) == want_small) {
+                let e = totals
+                    .entry(c.label.clone())
+                    .or_insert((0.0, c.strategy.kind, c.strategy.transport == Transport::Staged));
+                e.0 += c.model_s;
+            }
+            if totals.is_empty() {
+                continue;
+            }
+            let (winner, &(total, kind, staged)) = totals
+                .iter()
+                .min_by(|a, b| a.1 .0.partial_cmp(&b.1 .0).expect("finite totals"))
+                .expect("non-empty band");
+            report.regimes.push(RegimeWinner {
+                gen: line[0].gen,
+                dest_nodes: line[0].dest_nodes,
+                gpus_per_node: line[0].gpus_per_node,
+                band,
+                winner: winner.clone(),
+                winner_kind: kind,
+                winner_staged: staged,
+                total_model_s: total,
+            });
+        }
+        i = j;
+    }
+
+    // --- Model-error aggregation. ---
+    let errs: Vec<f64> = cells.iter().filter_map(|c| c.model_err).collect();
+    if !errs.is_empty() {
+        report.model_error = ErrorSummary {
+            cells_with_sim: errs.len(),
+            mean: errs.iter().sum::<f64>() / errs.len() as f64,
+            max: errs.iter().fold(0.0f64, |m, &e| m.max(e)),
+        };
+    }
+
+    report
+}
+
+fn winners_same_line(a: &CellWinner, b: &CellWinner) -> bool {
+    a.gen == b.gen && a.dest_nodes == b.dest_nodes && a.gpus_per_node == b.gpus_per_node
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Strategy;
+
+    /// Build a synthetic cell: two strategies with fixed model times.
+    fn mk_cells(specs: &[(usize, usize, f64, f64)]) -> Vec<CellResult> {
+        // (index, size, t_split_staged, t_std_da)
+        let split = Strategy::new(StrategyKind::SplitMd, Transport::Staged).unwrap();
+        let std_da = Strategy::new(StrategyKind::Standard, Transport::DeviceAware).unwrap();
+        let mut out = Vec::new();
+        for &(index, size, t_split, t_std) in specs {
+            for (s, t) in [(split, t_split), (std_da, t_std)] {
+                out.push(CellResult {
+                    index,
+                    gen: PatternGen::Uniform,
+                    dest_nodes: 16,
+                    gpus_per_node: 4,
+                    size,
+                    strategy: s,
+                    label: s.label(),
+                    model_s: t,
+                    sim_s: Some(t * 1.1),
+                    model_err: Some(0.1),
+                });
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn winners_and_crossover_detected() {
+        // Split wins small sizes, standard DA wins the large one.
+        let cells = mk_cells(&[(0, 256, 1.0, 2.0), (1, 4096, 2.0, 3.0), (2, 1 << 20, 9.0, 4.0)]);
+        let r = analyze(&cells);
+        assert_eq!(r.winners.len(), 3);
+        assert_eq!(r.winners[0].winner_kind, StrategyKind::SplitMd);
+        assert!(r.winners[0].winner_staged);
+        assert_eq!(r.winners[2].winner_kind, StrategyKind::Standard);
+        assert_eq!(r.crossovers.len(), 1);
+        let x = &r.crossovers[0];
+        assert_eq!((x.size_before, x.size_after), (4096, 1 << 20));
+        assert!(x.from.starts_with("Split+MD"));
+        assert!(x.to.starts_with("Standard"));
+    }
+
+    #[test]
+    fn regime_winners_split_small_std_large() {
+        let cells = mk_cells(&[(0, 256, 1.0, 2.0), (1, 4096, 2.0, 3.0), (2, 1 << 20, 9.0, 4.0)]);
+        let r = analyze(&cells);
+        assert_eq!(r.regimes.len(), 2);
+        let small = r.regimes.iter().find(|g| g.band == "small").unwrap();
+        assert_eq!(small.winner_kind, StrategyKind::SplitMd);
+        assert!((small.total_model_s - 3.0).abs() < 1e-12);
+        let large = r.regimes.iter().find(|g| g.band == "large").unwrap();
+        assert_eq!(large.winner_kind, StrategyKind::Standard);
+    }
+
+    #[test]
+    fn sim_winner_tracked_separately() {
+        let mut cells = mk_cells(&[(0, 256, 1.0, 2.0)]);
+        // make the simulator prefer the other strategy
+        cells[0].sim_s = Some(5.0);
+        cells[1].sim_s = Some(0.5);
+        let r = analyze(&cells);
+        assert!(r.winners[0].winner.starts_with("Split+MD"));
+        assert!(r.winners[0].sim_winner.as_deref().unwrap().starts_with("Standard"));
+    }
+
+    #[test]
+    fn error_summary_aggregates() {
+        let cells = mk_cells(&[(0, 256, 1.0, 2.0), (1, 4096, 2.0, 3.0)]);
+        let r = analyze(&cells);
+        assert_eq!(r.model_error.cells_with_sim, 4);
+        assert!((r.model_error.mean - 0.1).abs() < 1e-12);
+        assert!((r.model_error.max - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_input_empty_report() {
+        let r = analyze(&[]);
+        assert!(r.winners.is_empty() && r.crossovers.is_empty() && r.regimes.is_empty());
+        assert_eq!(r.model_error.cells_with_sim, 0);
+    }
+}

@@ -1,0 +1,157 @@
+//! Integration: the parallel strategy-sweep engine end to end —
+//! (a) fixed seed → byte-identical JSON output, independent of thread
+//! count; (b) the high-node-count regime selects a staged node-aware Split
+//! strategy, matching the Table 6 model ordering (Figure 4.3b).
+
+use hetcomm::comm::{Strategy, StrategyKind, Transport};
+use hetcomm::sweep::{emit, run_sweep, GridSpec, PatternGen, SweepConfig};
+
+fn paper_grid() -> GridSpec {
+    GridSpec {
+        gens: vec![PatternGen::Uniform],
+        dest_nodes: vec![4, 16],
+        gpus_per_node: vec![4],
+        sizes: vec![16, 256, 1024, 4096, 1 << 18],
+        n_msgs: 256,
+        dup_frac: 0.0,
+    }
+}
+
+#[test]
+fn fixed_seed_json_byte_identical() {
+    let config = SweepConfig {
+        grid: GridSpec {
+            gens: vec![PatternGen::Uniform, PatternGen::Random],
+            dest_nodes: vec![4, 16],
+            gpus_per_node: vec![4],
+            sizes: vec![256, 4096],
+            n_msgs: 128,
+            dup_frac: 0.1,
+        },
+        seed: 7,
+        threads: 3,
+        sim: true,
+        ..Default::default()
+    };
+    let a = emit::to_json(&run_sweep(&config).unwrap());
+    let b = emit::to_json(&run_sweep(&config).unwrap());
+    assert_eq!(a, b, "same seed must reproduce byte-identical JSON");
+    assert!(a.contains("\"sim_s\": ") && !a.contains("\"sim_s\": null"), "sim must have run");
+}
+
+#[test]
+fn thread_count_does_not_change_json() {
+    let mk = |threads: usize| SweepConfig {
+        grid: paper_grid(),
+        seed: 9,
+        threads,
+        sim: true,
+        ..Default::default()
+    };
+    let serial = emit::to_json(&run_sweep(&mk(1)).unwrap());
+    let parallel = emit::to_json(&run_sweep(&mk(4)).unwrap());
+    assert_eq!(serial, parallel, "thread count must not leak into results");
+}
+
+#[test]
+fn high_node_count_regime_selects_node_aware_split() {
+    // Figure 4.3b / Table 6: with 256 inter-node messages to 16 destination
+    // nodes, the staged Split strategies win the small/moderate-size band.
+    let config = SweepConfig { grid: paper_grid(), sim: false, ..Default::default() };
+    let result = run_sweep(&config).unwrap();
+
+    let regime = result
+        .report
+        .regimes
+        .iter()
+        .find(|g| g.dest_nodes == 16 && g.band == "small")
+        .expect("high-node-count small-band regime present");
+    assert!(
+        matches!(regime.winner_kind, StrategyKind::SplitMd | StrategyKind::SplitDd),
+        "expected a Split strategy to win the high-node-count regime, got {}",
+        regime.winner
+    );
+    assert!(regime.winner_staged, "Split strategies are staged-through-host only");
+
+    // Table 6 ordering at (256 msgs, 16 nodes, 1 KiB): Split+MD (staged)
+    // beats every other strategy — staged node-aware, device-aware, and
+    // standard communication alike.
+    let cell_1k: Vec<_> =
+        result.cells.iter().filter(|c| c.dest_nodes == 16 && c.size == 1024).collect();
+    assert_eq!(cell_1k.len(), Strategy::all().len());
+    let split_md = cell_1k
+        .iter()
+        .find(|c| c.strategy.kind == StrategyKind::SplitMd)
+        .expect("Split+MD evaluated");
+    for c in &cell_1k {
+        if c.strategy.kind != StrategyKind::SplitMd {
+            assert!(
+                split_md.model_s < c.model_s,
+                "Split+MD {} must beat {} {} at 1 KiB x 16 nodes",
+                split_md.model_s,
+                c.label,
+                c.model_s
+            );
+        }
+    }
+    // ...and specifically beats the best device-aware option, the paper's
+    // staged-vs-device-aware headline.
+    let best_da = cell_1k
+        .iter()
+        .filter(|c| c.strategy.transport == Transport::DeviceAware)
+        .map(|c| c.model_s)
+        .fold(f64::INFINITY, f64::min);
+    assert!(split_md.model_s < best_da, "staged Split+MD {} !< best device-aware {}", split_md.model_s, best_da);
+}
+
+#[test]
+fn crossover_from_staged_split_to_device_aware() {
+    // Along the 16-destination line the model winner flips from a staged
+    // Split strategy (moderate sizes) to device-aware communication
+    // (large sizes) — the crossover the paper locates near 10^4 B.
+    let config = SweepConfig { grid: paper_grid(), sim: false, ..Default::default() };
+    let result = run_sweep(&config).unwrap();
+
+    let line: Vec<_> = result.report.crossovers.iter().filter(|x| x.dest_nodes == 16).collect();
+    assert!(!line.is_empty(), "expected at least one crossover on the 16-node line");
+    assert!(
+        line.iter().any(|x| x.from.starts_with("Split") && x.to.contains("device-aware")),
+        "expected a staged-Split -> device-aware crossover, got {line:?}"
+    );
+    // Winners at the extremes of the line agree with Figure 4.3b.
+    let winners: Vec<_> = result.report.winners.iter().filter(|w| w.dest_nodes == 16).collect();
+    assert!(winners.first().unwrap().winner.starts_with("Split+MD"));
+    assert!(winners.last().unwrap().winner.contains("device-aware"));
+}
+
+#[test]
+fn simulator_agrees_split_beats_standard_staged_moderate_sizes() {
+    // The schedule-level cross-check: at moderate sizes with many messages,
+    // the simulated Split+MD exchange beats simulated standard staged
+    // communication (message conglomeration wins on the wire, not just in
+    // the closed-form model).
+    let config = SweepConfig {
+        grid: GridSpec {
+            gens: vec![PatternGen::Uniform],
+            dest_nodes: vec![16],
+            gpus_per_node: vec![4],
+            sizes: vec![1024],
+            n_msgs: 256,
+            dup_frac: 0.0,
+        },
+        sim: true,
+        ..Default::default()
+    };
+    let result = run_sweep(&config).unwrap();
+    let sim_of = |kind: StrategyKind, transport: Transport| {
+        result
+            .cells
+            .iter()
+            .find(|c| c.strategy.kind == kind && c.strategy.transport == transport)
+            .and_then(|c| c.sim_s)
+            .expect("simulated")
+    };
+    let split = sim_of(StrategyKind::SplitMd, Transport::Staged);
+    let standard = sim_of(StrategyKind::Standard, Transport::Staged);
+    assert!(split < standard, "simulated Split+MD {split} !< simulated standard staged {standard}");
+}
