@@ -52,7 +52,8 @@ fn main() -> anyhow::Result<()> {
     // the one-shot path).
     let strategy = Strategy::new(StrategyKind::SplitMd, Transport::Staged)?;
     let cfg = SpmvConfig { use_pjrt: have_artifacts, artifacts_dir: artifacts.clone(), ..Default::default() };
-    let eng_cfg = hetcomm::coordinator::EngineConfig { use_pjrt: have_artifacts, artifacts_dir: artifacts, overlap: true };
+    let eng_cfg =
+        hetcomm::coordinator::EngineConfig { use_pjrt: have_artifacts, artifacts_dir: artifacts, ..Default::default() };
     let v0 = vec![1f32; a.nrows];
     let t0 = std::time::Instant::now();
     let mut engine = hetcomm::coordinator::Engine::new(&a, gpus, &machine, strategy, &v0, eng_cfg)?;

@@ -8,23 +8,23 @@
 //! 3. **Block-vector scaling** — sparse matrix-*block*-vector products
 //!    multiply every payload by the block size; the Split-vs-standard gap
 //!    grows with block size (the regime where [16] reports up to 60×).
-//! 4. **Exascale outlook (Section 6)** — evaluate the models on
-//!    Frontier-like (single socket, 64 cores) and Delta-like (128 cores)
-//!    nodes with scaled interconnect bandwidth: Split strategies should
-//!    remain the most efficient.
+//! 4. **Exascale outlook (Section 6)** — query the advisor's *compiled*
+//!    decision surfaces for Frontier-like (single socket, 64 cores) and
+//!    Delta-like (128 cores) nodes with scaled interconnect bandwidth,
+//!    instead of re-evaluating the Table 6 models inline: Split strategies
+//!    should remain the most efficient.
 //!
 //! ```bash
 //! cargo bench --bench ablation
 //! ```
 
+use hetcomm::advisor::{DecisionSurface, Pattern, SurfaceAxes};
 use hetcomm::bench::{fmt_bytes, fmt_secs, Table};
 use hetcomm::comm::{build_schedule, Strategy, StrategyKind, Transport};
-use hetcomm::model::StrategyModel;
 use hetcomm::params::lassen_params;
-use hetcomm::pattern::generators::Scenario;
 use hetcomm::sim;
 use hetcomm::sparse::{suite, PartitionedMatrix};
-use hetcomm::topology::machines::{delta_like, frontier_like, lassen};
+use hetcomm::topology::machines::{self, lassen};
 
 fn main() {
     cap_sweep();
@@ -126,29 +126,30 @@ fn block_vector_scaling() {
     println!("(the Split advantage grows with block size — the regime where [16] reports up to 60x)");
 }
 
-/// 4. Section 6 outlook: exascale-like nodes.
+/// 4. Section 6 outlook: exascale-like nodes, answered by the advisor's
+/// compiled surfaces (the registry scales the Lassen baseline per machine:
+/// frontier-like 0.8x latency / 4x bandwidth, delta-like 2x bandwidth).
 fn exascale_outlook() {
-    let base = lassen_params();
-    let configs = [
-        ("lassen (measured)", lassen(32), base.clone()),
-        // Frontier-like: single socket, 64 cores, ~4x Slingshot bandwidth.
-        ("frontier-like (scaled)", frontier_like(32), base.scaled(0.8, 4.0)),
-        // Delta-like: 128 cores/node, ~2x bandwidth.
-        ("delta-like (scaled)", delta_like(32), base.scaled(1.0, 2.0)),
-    ];
+    let sizes = [1024usize, 16384, 262144];
+    let axes = SurfaceAxes {
+        msgs: vec![64, 256],
+        sizes: sizes.to_vec(),
+        dest_nodes: vec![16],
+        gpus_per_node: vec![4],
+    };
     let mut t = Table::new(
-        "Ablation 4 — Section 6 outlook: best strategy on future nodes (256 msgs -> 16 nodes)",
+        "Ablation 4 — Section 6 outlook: advisor surface winners on future nodes (256 msgs -> 16 nodes)",
         &["machine", "cores/node", "size[B]", "best strategy", "modeled[s]"],
     );
-    for (name, machine, params) in &configs {
-        let sm = StrategyModel::new(machine, params);
-        for size in [1024usize, 16384, 262144] {
-            let sc = Scenario { n_msgs: 256, msg_size: size, n_dest: 16, dup_frac: 0.0 };
-            let inputs = sc.inputs(machine, machine.cores_per_node());
-            let (best, secs) = sm.best(&inputs);
+    for name in ["lassen", "frontier-like", "delta-like"] {
+        let surface = DecisionSurface::compile(name, axes.clone(), 0.0).expect("registry machine compiles");
+        let (arch, _) = machines::parse(name, 1).expect("registry machine resolves");
+        for size in sizes {
+            let query = Pattern { n_msgs: 256, msg_size: size, dest_nodes: 16, gpus_per_node: 4 };
+            let (best, secs) = surface.lookup(&query).best();
             t.row(vec![
                 name.to_string(),
-                machine.cores_per_node().to_string(),
+                arch.cores_per_node().to_string(),
                 size.to_string(),
                 best.label(),
                 fmt_secs(secs),

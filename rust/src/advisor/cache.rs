@@ -1,0 +1,261 @@
+//! Sharded LRU cache fronting surface lookups: queries hash to one of N
+//! independently-locked shards, so concurrent `advise` calls contend only
+//! per shard and a repeated query costs a probe instead of an interpolated
+//! lattice read. Answers are immutable [`RankedStrategies`] behind `Arc`s —
+//! eviction order can vary under concurrency, but cached *answers* never
+//! can (the surface is deterministic), so burst results stay reproducible.
+
+use super::surface::RankedStrategies;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Cache key: the quantized query plus the owning surface's index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub surface: usize,
+    pub n_msgs: usize,
+    pub msg_size: usize,
+    pub dest_nodes: usize,
+    pub gpus_per_node: usize,
+}
+
+/// Hit/miss counters (monotonic over the cache's lifetime).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    /// Fraction of probes served from the cache (0 when never probed).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Counter deltas since an earlier snapshot.
+    pub fn since(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats { hits: self.hits - earlier.hits, misses: self.misses - earlier.misses }
+    }
+}
+
+struct Entry {
+    value: Arc<RankedStrategies>,
+    last_used: u64,
+}
+
+struct Shard {
+    map: HashMap<CacheKey, Entry>,
+    /// Monotonic access clock; unique per access within the shard, so the
+    /// LRU victim is always unambiguous.
+    tick: u64,
+    /// Bumped by [`ShardedLru::clear`] under this shard's lock — the token
+    /// that makes compute-then-insert safe against concurrent invalidation
+    /// ([`ShardedLru::put_if_generation`]).
+    generation: u64,
+}
+
+/// The sharded LRU.
+pub struct ShardedLru {
+    shards: Vec<Mutex<Shard>>,
+    per_shard_cap: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ShardedLru {
+    /// `capacity` is the total entry budget, split evenly over `shards`.
+    pub fn new(shards: usize, capacity: usize) -> ShardedLru {
+        let shards = shards.max(1);
+        ShardedLru {
+            per_shard_cap: capacity.div_ceil(shards).max(1),
+            shards: (0..shards).map(|_| Mutex::new(Shard { map: HashMap::new(), tick: 0, generation: 0 })).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Deterministic shard placement (FNV-1a over the key fields) — shard
+    /// choice must not depend on the process-random `HashMap` hasher.
+    fn shard_of(&self, key: &CacheKey) -> usize {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for v in [key.surface, key.n_msgs, key.msg_size, key.dest_nodes, key.gpus_per_node] {
+            h ^= v as u64;
+            h = h.wrapping_mul(0x0100_0000_01b3);
+        }
+        (h % self.shards.len() as u64) as usize
+    }
+
+    /// Probe; refreshes recency on a hit.
+    pub fn get(&self, key: &CacheKey) -> Option<Arc<RankedStrategies>> {
+        let mut shard = self.shards[self.shard_of(key)].lock().expect("cache shard poisoned");
+        shard.tick += 1;
+        let tick = shard.tick;
+        match shard.map.get_mut(key) {
+            Some(e) => {
+                e.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(Arc::clone(&e.value))
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh), evicting the shard's least-recently-used entry
+    /// when the shard is at capacity.
+    pub fn put(&self, key: CacheKey, value: Arc<RankedStrategies>) {
+        let mut shard = self.shards[self.shard_of(&key)].lock().expect("cache shard poisoned");
+        put_locked(&mut shard, key, value, self.per_shard_cap);
+    }
+
+    /// Generation of the shard owning `key`; snapshot it before computing a
+    /// value, then insert with [`ShardedLru::put_if_generation`].
+    pub fn generation_of(&self, key: &CacheKey) -> u64 {
+        self.shards[self.shard_of(key)].lock().expect("cache shard poisoned").generation
+    }
+
+    /// Insert only if the owning shard has not been [`ShardedLru::clear`]ed
+    /// since `generation` was snapshotted. The check and the insert happen
+    /// under the shard lock, so a value computed from a since-invalidated
+    /// surface can never be re-inserted after the clear. Returns whether
+    /// the value was stored.
+    pub fn put_if_generation(&self, key: CacheKey, value: Arc<RankedStrategies>, generation: u64) -> bool {
+        let mut shard = self.shards[self.shard_of(&key)].lock().expect("cache shard poisoned");
+        if shard.generation != generation {
+            return false;
+        }
+        put_locked(&mut shard, key, value, self.per_shard_cap);
+        true
+    }
+
+    /// Drop every cached answer and advance each shard's generation
+    /// (recalibration invalidates in-flight computations too); counters are
+    /// preserved.
+    pub fn clear(&self) {
+        for shard in &self.shards {
+            let mut shard = shard.lock().expect("cache shard poisoned");
+            shard.generation += 1;
+            shard.map.clear();
+        }
+    }
+
+    /// Entries currently cached across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().expect("cache shard poisoned").map.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats { hits: self.hits.load(Ordering::Relaxed), misses: self.misses.load(Ordering::Relaxed) }
+    }
+}
+
+/// Shared insert path: refresh recency and evict the LRU entry at capacity.
+fn put_locked(shard: &mut Shard, key: CacheKey, value: Arc<RankedStrategies>, cap: usize) {
+    shard.tick += 1;
+    let tick = shard.tick;
+    if shard.map.len() >= cap && !shard.map.contains_key(&key) {
+        if let Some(victim) = shard.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| *k) {
+            shard.map.remove(&victim);
+        }
+    }
+    shard.map.insert(key, Entry { value, last_used: tick });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Strategy;
+
+    fn key(i: usize) -> CacheKey {
+        CacheKey { surface: 0, n_msgs: i, msg_size: 1024, dest_nodes: 16, gpus_per_node: 4 }
+    }
+
+    fn value(t: f64) -> Arc<RankedStrategies> {
+        Arc::new(RankedStrategies { ranked: vec![(Strategy::all()[0], t)] })
+    }
+
+    #[test]
+    fn hit_after_put_miss_before() {
+        let cache = ShardedLru::new(4, 64);
+        assert!(cache.get(&key(1)).is_none());
+        cache.put(key(1), value(1.0));
+        let got = cache.get(&key(1)).expect("hit");
+        assert_eq!(got.ranked[0].1, 1.0);
+        let stats = cache.stats();
+        assert_eq!((stats.hits, stats.misses), (1, 1));
+        assert!((stats.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lru_evicts_oldest_within_shard() {
+        // single shard, capacity 2: inserting a third key evicts the LRU
+        let cache = ShardedLru::new(1, 2);
+        cache.put(key(1), value(1.0));
+        cache.put(key(2), value(2.0));
+        assert!(cache.get(&key(1)).is_some()); // refresh key 1
+        cache.put(key(3), value(3.0)); // evicts key 2
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(&key(2)).is_none());
+        assert!(cache.get(&key(1)).is_some());
+        assert!(cache.get(&key(3)).is_some());
+    }
+
+    #[test]
+    fn clear_keeps_counters() {
+        let cache = ShardedLru::new(2, 8);
+        cache.put(key(1), value(1.0));
+        assert!(cache.get(&key(1)).is_some());
+        cache.clear();
+        assert!(cache.is_empty());
+        assert!(cache.get(&key(1)).is_none());
+        let stats = cache.stats();
+        assert_eq!((stats.hits, stats.misses), (1, 1));
+        assert_eq!(stats.since(&CacheStats { hits: 1, misses: 0 }), CacheStats { hits: 0, misses: 1 });
+    }
+
+    #[test]
+    fn generation_gates_stale_inserts() {
+        let cache = ShardedLru::new(2, 8);
+        let gen = cache.generation_of(&key(1));
+        // a clear between snapshot and insert must reject the stale value
+        cache.clear();
+        assert!(!cache.put_if_generation(key(1), value(1.0), gen));
+        assert!(cache.get(&key(1)).is_none());
+        // a fresh snapshot inserts normally
+        let gen = cache.generation_of(&key(1));
+        assert!(cache.put_if_generation(key(1), value(2.0), gen));
+        assert_eq!(cache.get(&key(1)).unwrap().ranked[0].1, 2.0);
+    }
+
+    #[test]
+    fn shard_placement_is_stable() {
+        let cache = ShardedLru::new(16, 256);
+        for i in 0..100 {
+            assert_eq!(cache.shard_of(&key(i)), cache.shard_of(&key(i)));
+        }
+        // keys spread over more than one shard
+        let shards: std::collections::BTreeSet<usize> = (0..100).map(|i| cache.shard_of(&key(i))).collect();
+        assert!(shards.len() > 1);
+    }
+
+    #[test]
+    fn capacity_bounds_total_size() {
+        let cache = ShardedLru::new(4, 16);
+        for i in 0..200 {
+            cache.put(key(i), value(i as f64));
+        }
+        assert!(cache.len() <= 16 + 3, "len {} exceeds budget (+ rounding slack)", cache.len());
+    }
+}

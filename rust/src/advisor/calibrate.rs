@@ -1,0 +1,177 @@
+//! Measurement-driven recalibration: ingest observed (size, seconds)
+//! samples for off-node transfers — from the discrete-event simulator, the
+//! coordinator's wall clock, or a real machine — refit the off-node CPU
+//! (α, β) rows via [`crate::params::fit`] (the paper's least-squares
+//! pipeline, Section 3), and report which size band of a compiled surface
+//! is now stale so only those cells are recompiled.
+
+use crate::comm::{Loc, Phase, Schedule, Xfer};
+use crate::params::fit::{fit_protocol_bands, Sample};
+use crate::params::MachineParams;
+use crate::sim;
+use crate::topology::{Machine, ProcId};
+
+/// Column of the off-node locality in `MachineParams::cpu`.
+const OFF_NODE: usize = 2;
+
+/// Outcome of a refit: the updated parameter set plus the size band whose
+/// surface cells must be recompiled.
+#[derive(Clone, Debug)]
+pub struct CalibrationReport {
+    /// The base parameters with every refit off-node row replaced.
+    pub params: MachineParams,
+    /// Samples the fit consumed.
+    pub samples: usize,
+    /// Protocol bands actually refit (a band needs >= 2 samples).
+    pub bands_refit: usize,
+    /// Inclusive size range `[stale_lo, stale_hi]` covered by the refit
+    /// bands — the cells a surface should mark stale.
+    pub stale_lo: usize,
+    pub stale_hi: usize,
+}
+
+/// Accumulates measured off-node samples and refits the postal model.
+#[derive(Clone, Debug)]
+pub struct Calibrator {
+    base: MachineParams,
+    samples: Vec<Sample>,
+}
+
+impl Calibrator {
+    pub fn new(base: MachineParams) -> Calibrator {
+        Calibrator { base, samples: Vec::new() }
+    }
+
+    /// Record one measured off-node transfer; silently drops non-finite or
+    /// non-positive observations (a stalled timer, not a measurement).
+    pub fn ingest(&mut self, bytes: usize, seconds: f64) {
+        if bytes > 0 && seconds.is_finite() && seconds > 0.0 {
+            self.samples.push(Sample { bytes, seconds });
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Run single-message off-node probes through the discrete-event
+    /// simulator (standing in for the testbed, as in `params::fit`) and
+    /// ingest the observed times: the ping-pong analog of Section 3, driven
+    /// by whatever `truth` parameters the "hardware" really has.
+    pub fn ingest_sim_probes(&mut self, machine: &Machine, truth: &MachineParams, sizes: &[usize]) {
+        assert!(machine.num_nodes >= 2, "off-node probes need >= 2 nodes");
+        let ppn = machine.gpus_per_node().max(1);
+        for &bytes in sizes {
+            let mut phase = Phase::new("probe");
+            phase.xfers.push(Xfer { src: Loc::Host(ProcId(0)), dst: Loc::Host(ProcId(ppn)), bytes, tag: 0 });
+            let schedule = Schedule { strategy_label: "calibration probe".into(), phases: vec![phase] };
+            let observed = sim::run(machine, truth, &schedule, ppn).total;
+            self.ingest(bytes, observed);
+        }
+    }
+
+    /// Refit: partition the samples at the base parameters' protocol switch
+    /// points, least-squares fit every band holding >= 2 samples, and
+    /// replace those off-node rows. Bands without enough samples keep the
+    /// base values. Errors when no band can be fit.
+    pub fn refit(&self) -> Result<CalibrationReport, String> {
+        if self.samples.len() < 2 {
+            return Err(format!("need >= 2 samples to refit, have {}", self.samples.len()));
+        }
+        // `fit_protocol_bands` partitions with an exclusive eager bound, but
+        // `cpu_protocol` sends sizes up to AND INCLUDING eager_max eagerly —
+        // shift the split point so a probe at exactly eager_max lands in the
+        // eager fit, not the rendezvous one.
+        let fits = fit_protocol_bands(&self.samples, self.base.short_max, self.base.eager_max + 1);
+        // Band size coverage: short < short_max <= eager <= eager_max < rend.
+        let bounds = [
+            (1usize, self.base.short_max.saturating_sub(1).max(1)),
+            (self.base.short_max, self.base.eager_max),
+            (self.base.eager_max + 1, usize::MAX / 2),
+        ];
+        let mut params = self.base.clone();
+        let mut bands_refit = 0;
+        let mut stale_lo = usize::MAX;
+        let mut stale_hi = 0;
+        for (pi, fit) in fits.iter().enumerate() {
+            if let Some(f) = fit {
+                params.cpu[pi][OFF_NODE] = f.ab;
+                bands_refit += 1;
+                stale_lo = stale_lo.min(bounds[pi].0);
+                stale_hi = stale_hi.max(bounds[pi].1);
+            }
+        }
+        if bands_refit == 0 {
+            return Err("no protocol band holds >= 2 samples".into());
+        }
+        Ok(CalibrationReport { params, samples: self.samples.len(), bands_refit, stale_lo, stale_hi })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::{lassen_params, Protocol};
+    use crate::topology::machines::lassen;
+    use crate::topology::Locality;
+
+    #[test]
+    fn synthetic_slowdown_refits_eager_band_only() {
+        let base = lassen_params();
+        let truth_ab = base.cpu_ab(Protocol::Eager, Locality::OffNode);
+        let mut cal = Calibrator::new(base.clone());
+        // "measured": the eager off-node path is exactly 2x slower
+        for exp in 9..13 {
+            let bytes = 1usize << exp; // 512 .. 4096: all eager
+            cal.ingest(bytes, 2.0 * truth_ab.time(bytes));
+        }
+        assert_eq!(cal.len(), 4);
+        let report = cal.refit().unwrap();
+        assert_eq!(report.bands_refit, 1);
+        assert_eq!((report.stale_lo, report.stale_hi), (base.short_max, base.eager_max));
+        let refit_ab = report.params.cpu_ab(Protocol::Eager, Locality::OffNode);
+        assert!((refit_ab.beta - 2.0 * truth_ab.beta).abs() / truth_ab.beta < 1e-6, "beta {}", refit_ab.beta);
+        // untouched rows keep the base values
+        assert_eq!(
+            report.params.cpu_ab(Protocol::Rendezvous, Locality::OffNode),
+            base.cpu_ab(Protocol::Rendezvous, Locality::OffNode)
+        );
+        assert_eq!(
+            report.params.cpu_ab(Protocol::Eager, Locality::OnNode),
+            base.cpu_ab(Protocol::Eager, Locality::OnNode)
+        );
+    }
+
+    #[test]
+    fn sim_probes_feed_a_full_refit() {
+        let base = lassen_params();
+        let machine = lassen(2);
+        let mut cal = Calibrator::new(base);
+        let sizes: Vec<usize> = (4..=20).map(|e| 1usize << e).collect();
+        cal.ingest_sim_probes(&machine, &lassen_params(), &sizes);
+        assert_eq!(cal.len(), sizes.len());
+        let report = cal.refit().unwrap();
+        assert_eq!(report.bands_refit, 3, "probe sizes span all three protocol bands");
+        assert_eq!(report.stale_lo, 1);
+        for proto in [Protocol::Short, Protocol::Eager, Protocol::Rendezvous] {
+            let ab = report.params.cpu_ab(proto, Locality::OffNode);
+            assert!(ab.alpha >= 0.0 && ab.beta >= 0.0 && ab.alpha.is_finite() && ab.beta.is_finite());
+        }
+    }
+
+    #[test]
+    fn bad_samples_dropped_and_underflow_errors() {
+        let mut cal = Calibrator::new(lassen_params());
+        cal.ingest(0, 1.0);
+        cal.ingest(1024, f64::NAN);
+        cal.ingest(1024, -1.0);
+        assert!(cal.is_empty());
+        assert!(cal.refit().is_err());
+        cal.ingest(1024, 1e-5);
+        assert!(cal.refit().is_err(), "one sample cannot fit a line");
+    }
+}

@@ -1,0 +1,35 @@
+//! The online strategy-advisor service — the paper's prescription
+//! ("given this communication pattern on this machine, use that strategy",
+//! Table 6 / Figure 4.3) packaged as a serving subsystem instead of an
+//! offline report:
+//!
+//! - [`surface`] — compile a sweep grid into a compact per-machine
+//!   *decision surface*: a regime lattice over messages × size ×
+//!   destination nodes × GPUs-per-node with log-space interpolation and
+//!   exact crossover boundaries;
+//! - [`persist`] — versioned JSON artifacts (`hetcomm.surface.v1`) that
+//!   round-trip surfaces bit for bit;
+//! - [`cache`] — a sharded LRU so repeated queries cost a probe instead of
+//!   a model evaluation;
+//! - [`service`] — thread-pooled batched `advise` queries and the seeded
+//!   deterministic burst benchmark;
+//! - [`calibrate`] — measurement-driven recalibration: ingest observed
+//!   timings, refit α/β via [`crate::params::fit`], mark stale surface
+//!   cells for lazy recompile.
+//!
+//! Exposed on the CLI as `hetcomm advise` (`--compile`, `--query`,
+//! `--bench-burst`, `--recalibrate`); `hetcomm sweep --emit-surface` writes
+//! an artifact from a sweep grid, and `coordinator::engine`'s auto mode
+//! asks the advisor to pick the exchange strategy for a partitioned
+//! matrix's actual halo pattern — closing the loop from model to execution.
+
+pub mod cache;
+pub mod calibrate;
+pub mod persist;
+pub mod service;
+pub mod surface;
+
+pub use cache::{CacheKey, CacheStats, ShardedLru};
+pub use calibrate::{CalibrationReport, Calibrator};
+pub use service::{AdvisorService, BurstReport, Query};
+pub use surface::{DecisionSurface, Pattern, RankedStrategies, SurfaceAxes, SurfaceCrossover};

@@ -1,0 +1,303 @@
+//! The serving layer: cached, thread-pooled `advise` queries over compiled
+//! decision surfaces, plus the deterministic synthetic burst benchmark the
+//! CI uses to hold the cache to a hit-rate floor.
+//!
+//! Answers are deterministic: a query resolves against an immutable surface
+//! and the cache only memoizes, so a seeded burst produces the same winner
+//! histogram at any thread count (only measured latencies vary).
+
+use super::cache::{CacheKey, CacheStats, ShardedLru};
+use super::surface::{DecisionSurface, Pattern, RankedStrategies};
+use crate::params::MachineParams;
+use crate::sweep::effective_threads;
+use crate::util::rng::Rng;
+use crate::util::stats::percentile_sorted;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+/// One advise query: a pattern plus the surface (machine) it targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Query {
+    pub pattern: Pattern,
+    /// Index into the service's surface list ([`AdvisorService::surface_index`]).
+    pub surface: usize,
+}
+
+/// Outcome of a synthetic burst.
+#[derive(Clone, Debug)]
+pub struct BurstReport {
+    pub queries: usize,
+    /// Distinct patterns in the seeded pool.
+    pub distinct: usize,
+    pub threads: usize,
+    /// Cache counter deltas over the burst.
+    pub cache: CacheStats,
+    /// Winner label → count over the whole burst (seed-deterministic).
+    pub winners: BTreeMap<String, usize>,
+    /// Measured per-query lookup latency percentiles [s].
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub elapsed_s: f64,
+}
+
+/// The advisor service: one surface per machine behind a shared cache.
+pub struct AdvisorService {
+    surfaces: Vec<RwLock<DecisionSurface>>,
+    names: Vec<String>,
+    cache: ShardedLru,
+}
+
+impl AdvisorService {
+    /// Default cache geometry: 16 shards, 4096 answers total.
+    pub fn new(surfaces: Vec<DecisionSurface>) -> AdvisorService {
+        AdvisorService::with_cache(surfaces, ShardedLru::new(16, 4096))
+    }
+
+    pub fn with_cache(surfaces: Vec<DecisionSurface>, cache: ShardedLru) -> AdvisorService {
+        let names = surfaces.iter().map(|s| s.machine.clone()).collect();
+        AdvisorService { surfaces: surfaces.into_iter().map(RwLock::new).collect(), names, cache }
+    }
+
+    /// Machines served, in surface order.
+    pub fn machines(&self) -> &[String] {
+        &self.names
+    }
+
+    /// Index of a machine's surface.
+    pub fn surface_index(&self, machine: &str) -> Option<usize> {
+        self.names.iter().position(|n| n == machine)
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Answer one query: a cache probe, falling back to an interpolated
+    /// surface lookup that is then memoized.
+    pub fn advise(&self, q: &Query) -> Result<Arc<RankedStrategies>, String> {
+        let key = CacheKey {
+            surface: q.surface,
+            n_msgs: q.pattern.n_msgs,
+            msg_size: q.pattern.msg_size,
+            dest_nodes: q.pattern.dest_nodes,
+            gpus_per_node: q.pattern.gpus_per_node,
+        };
+        if let Some(hit) = self.cache.get(&key) {
+            return Ok(hit);
+        }
+        let generation = self.cache.generation_of(&key);
+        let surface = self.surfaces.get(q.surface).ok_or_else(|| format!("no surface with index {}", q.surface))?;
+        let value = Arc::new(surface.read().expect("surface lock poisoned").lookup(&q.pattern));
+        // Memoize generation-guarded: a recalibration that cleared the cache
+        // while this ranking was being computed bumps the shard generation
+        // (under the same lock), so the stale answer is dropped instead of
+        // being re-inserted — at worst one extra future miss.
+        self.cache.put_if_generation(key, Arc::clone(&value), generation);
+        Ok(value)
+    }
+
+    /// Convenience: advise against a machine by registry name.
+    pub fn advise_for(&self, machine: &str, pattern: &Pattern) -> Result<Arc<RankedStrategies>, String> {
+        let surface =
+            self.surface_index(machine).ok_or_else(|| format!("no surface compiled for machine {machine:?}"))?;
+        self.advise(&Query { pattern: *pattern, surface })
+    }
+
+    /// Batched advise over a worker pool; results come back in query order
+    /// regardless of thread scheduling.
+    pub fn advise_batch(&self, queries: &[Query], threads: usize) -> Vec<Result<Arc<RankedStrategies>, String>> {
+        let threads = effective_threads(threads, queries.len());
+        let next = AtomicUsize::new(0);
+        let collected = Mutex::new(Vec::with_capacity(queries.len()));
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= queries.len() {
+                        break;
+                    }
+                    let r = self.advise(&queries[i]);
+                    collected.lock().expect("batch collector poisoned").push((i, r));
+                });
+            }
+        });
+        let mut collected = collected.into_inner().expect("batch collector poisoned");
+        collected.sort_unstable_by_key(|&(i, _)| i);
+        collected.into_iter().map(|(_, r)| r).collect()
+    }
+
+    /// Apply a recalibration to one machine's surface: mark the refit size
+    /// band stale, recompile those cells against the refit parameters, and
+    /// drop every cached answer. Returns the recompiled cell count.
+    pub fn recalibrate(&self, machine: &str, params: &MachineParams, lo: usize, hi: usize) -> Result<usize, String> {
+        let idx =
+            self.surface_index(machine).ok_or_else(|| format!("no surface compiled for machine {machine:?}"))?;
+        let mut surface = self.surfaces[idx].write().expect("surface lock poisoned");
+        surface.mark_stale_sizes(lo, hi);
+        let recompiled = surface.recompile_stale(params)?;
+        // clear() also advances the cache generations, which invalidates any
+        // advise still computing from the pre-recalibration surface.
+        self.cache.clear();
+        Ok(recompiled)
+    }
+
+    /// One seeded query over the service's surfaces: axis-interior values
+    /// (log-uniform) so interpolation paths are exercised too.
+    fn random_query(&self, rng: &mut Rng) -> Query {
+        let surface_idx = rng.usize_in(0, self.surfaces.len());
+        let s = self.surfaces[surface_idx].read().expect("surface lock poisoned");
+        let span = |rng: &mut Rng, axis: &[usize]| -> usize {
+            let lo = *axis.first().expect("validated axis");
+            let hi = *axis.last().expect("validated axis");
+            if lo == hi {
+                return lo;
+            }
+            let x = rng.f64_in((lo as f64).log2(), (hi as f64).log2());
+            (x.exp2().round() as usize).clamp(lo, hi)
+        };
+        let pattern = Pattern {
+            n_msgs: span(rng, &s.axes.msgs),
+            msg_size: span(rng, &s.axes.sizes),
+            dest_nodes: s.axes.dest_nodes[rng.usize_in(0, s.axes.dest_nodes.len())],
+            gpus_per_node: s.axes.gpus_per_node[rng.usize_in(0, s.axes.gpus_per_node.len())],
+        };
+        Query { pattern, surface: surface_idx }
+    }
+
+    /// Deterministic synthetic burst: `n` seeded queries drawn from a small
+    /// pool of distinct patterns (so steady-state traffic repeats, as real
+    /// callers do), answered through the cache over `threads` workers.
+    pub fn bench_burst(&self, n: usize, seed: u64, threads: usize) -> Result<BurstReport, String> {
+        if self.surfaces.is_empty() {
+            return Err("no surfaces loaded".into());
+        }
+        let n = n.max(1);
+        let distinct = (n / 16).clamp(1, 1024);
+        let mut rng = Rng::new(seed);
+        let pool: Vec<Query> = (0..distinct).map(|_| self.random_query(&mut rng)).collect();
+        let queries: Vec<Query> = (0..n).map(|_| pool[rng.usize_in(0, pool.len())]).collect();
+
+        let threads = effective_threads(threads, n);
+        let stats_before = self.cache.stats();
+        let histogram = Mutex::new(BTreeMap::<String, usize>::new());
+        let latencies = Mutex::new(Vec::with_capacity(n));
+        let histogram_ref = &histogram;
+        let latencies_ref = &latencies;
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for chunk in queries.chunks(n.div_ceil(threads)) {
+                scope.spawn(move || {
+                    let mut local_hist = BTreeMap::<String, usize>::new();
+                    let mut local_lat = Vec::with_capacity(chunk.len());
+                    for q in chunk {
+                        let t = Instant::now();
+                        let answer = self.advise(q).expect("burst queries target loaded surfaces");
+                        local_lat.push(t.elapsed().as_secs_f64());
+                        *local_hist.entry(answer.best().0.label()).or_insert(0) += 1;
+                    }
+                    let mut hist = histogram_ref.lock().expect("burst histogram poisoned");
+                    for (k, v) in local_hist {
+                        *hist.entry(k).or_insert(0) += v;
+                    }
+                    latencies_ref.lock().expect("burst latencies poisoned").extend(local_lat);
+                });
+            }
+        });
+        let elapsed_s = t0.elapsed().as_secs_f64();
+
+        let mut latencies = latencies.into_inner().expect("burst latencies poisoned");
+        latencies.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+        Ok(BurstReport {
+            queries: n,
+            distinct,
+            threads,
+            cache: self.cache.stats().since(&stats_before),
+            winners: histogram.into_inner().expect("burst histogram poisoned"),
+            p50_s: percentile_sorted(&latencies, 50.0),
+            p99_s: percentile_sorted(&latencies, 99.0),
+            elapsed_s,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::advisor::surface::SurfaceAxes;
+
+    fn tiny_service() -> AdvisorService {
+        let axes = SurfaceAxes {
+            msgs: vec![64, 256],
+            sizes: vec![256, 4096, 1 << 18],
+            dest_nodes: vec![4, 16],
+            gpus_per_node: vec![4],
+        };
+        AdvisorService::new(vec![DecisionSurface::compile("lassen", axes, 0.0).unwrap()])
+    }
+
+    fn q(n_msgs: usize, msg_size: usize) -> Query {
+        Query { pattern: Pattern { n_msgs, msg_size, dest_nodes: 16, gpus_per_node: 4 }, surface: 0 }
+    }
+
+    #[test]
+    fn advise_caches_repeat_queries() {
+        let svc = tiny_service();
+        let a = svc.advise(&q(256, 1024)).unwrap();
+        let b = svc.advise(&q(256, 1024)).unwrap();
+        assert_eq!(*a, *b);
+        let stats = svc.cache_stats();
+        assert_eq!((stats.hits, stats.misses), (1, 1));
+        assert!(svc.advise(&Query { surface: 9, ..q(256, 1024) }).is_err());
+    }
+
+    #[test]
+    fn advise_for_resolves_machine_names() {
+        let svc = tiny_service();
+        assert_eq!(svc.machines(), ["lassen".to_string()]);
+        let pattern = Pattern { n_msgs: 256, msg_size: 1024, dest_nodes: 16, gpus_per_node: 4 };
+        assert!(svc.advise_for("lassen", &pattern).is_ok());
+        assert!(svc.advise_for("frontier-like", &pattern).is_err());
+    }
+
+    #[test]
+    fn batch_preserves_query_order() {
+        let svc = tiny_service();
+        let queries: Vec<Query> = (0..64).map(|i| q(64 + (i % 8) * 16, 256 << (i % 4))).collect();
+        let serial = svc.advise_batch(&queries, 1);
+        let parallel = svc.advise_batch(&queries, 4);
+        assert_eq!(serial.len(), queries.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.as_ref().unwrap().ranked, b.as_ref().unwrap().ranked);
+        }
+    }
+
+    #[test]
+    fn burst_deterministic_and_cached() {
+        let r1 = tiny_service().bench_burst(4000, 11, 4).unwrap();
+        let r2 = tiny_service().bench_burst(4000, 11, 1).unwrap();
+        assert_eq!(r1.winners, r2.winners, "burst answers must not depend on thread count");
+        assert_eq!(r1.winners.values().sum::<usize>(), 4000);
+        // single-threaded: misses are first touches only, bounded by the
+        // pool size (concurrent first-touch misses can inflate r1's count)
+        assert!(r2.cache.misses as usize <= r2.distinct, "misses {} > pool {}", r2.cache.misses, r2.distinct);
+        assert!(r2.cache.hit_rate() > 0.9, "hit rate {}", r2.cache.hit_rate());
+        assert!(r1.p99_s >= r1.p50_s);
+        assert_eq!(r1.distinct, (4000 / 16).clamp(1, 1024));
+    }
+
+    #[test]
+    fn recalibrate_invalidates_cache() {
+        let svc = tiny_service();
+        svc.advise(&q(256, 4096)).unwrap();
+        let (_, params) = crate::topology::machines::parse("lassen", 1).unwrap();
+        let n = svc.recalibrate("lassen", &params.scaled(2.0, 0.5), 512, 8192).unwrap();
+        assert!(n > 0);
+        // the next probe misses (cache was cleared) and sees the refit times
+        let before = svc.cache_stats();
+        svc.advise(&q(256, 4096)).unwrap();
+        let after = svc.cache_stats();
+        assert_eq!(after.misses, before.misses + 1);
+    }
+}

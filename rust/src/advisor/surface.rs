@@ -1,0 +1,602 @@
+//! Compiled decision surfaces: the Table 6 models evaluated once over a
+//! regime lattice (messages × size × destination nodes × GPUs per node) so
+//! that answering "which strategy is fastest for this pattern?" costs an
+//! interpolated lattice read instead of a model evaluation.
+//!
+//! A [`DecisionSurface`] is compiled per machine preset
+//! ([`crate::topology::machines::parse`]): every lattice point stores the
+//! modeled seconds of all Table 5 strategies, queries interpolate in
+//! log₂-space along the message-count and message-size axes (and snap to
+//! the nearest lattice value on the destination-node and GPUs-per-node
+//! axes), and [`DecisionSurface::crossovers`] solves the interpolants for
+//! the exact sizes where the winning strategy changes — the boundaries the
+//! sweep report only brackets. Recalibration ([`crate::advisor::calibrate`])
+//! marks cells stale; [`DecisionSurface::recompile_stale`] lazily re-derives
+//! only those cells from a refit parameter set.
+
+use crate::comm::Strategy;
+use crate::model::StrategyModel;
+use crate::params::MachineParams;
+use crate::pattern::generators::Scenario;
+use crate::pattern::PatternStats;
+use crate::topology::{machines, Machine};
+
+/// A strategy query: the communication pattern one node is about to issue
+/// (the Figure 4.3 scenario shape).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Pattern {
+    /// Inter-node messages sent by the node.
+    pub n_msgs: usize,
+    /// Bytes per message.
+    pub msg_size: usize,
+    /// Destination-node count.
+    pub dest_nodes: usize,
+    /// GPUs per node.
+    pub gpus_per_node: usize,
+}
+
+impl Pattern {
+    /// Derive a lattice query from a concrete pattern's Table 7 statistics:
+    /// message size ≈ the heaviest node pair's mean message size, node
+    /// message count ≈ node volume / size, destinations ≈ node volume /
+    /// heaviest pair volume. This is how `coordinator`'s auto mode maps a
+    /// partitioned matrix's halo pattern onto the surface.
+    pub fn from_stats(stats: &PatternStats, machine: &Machine) -> Pattern {
+        let msg_size = if stats.m_n2n > 0 { (stats.s_n2n / stats.m_n2n).max(1) } else { 1 };
+        let dest_nodes = if stats.s_n2n > 0 { (stats.s_node / stats.s_n2n).max(1) } else { 1 };
+        Pattern {
+            n_msgs: (stats.s_node / msg_size).max(1),
+            msg_size,
+            dest_nodes,
+            gpus_per_node: machine.gpus_per_node(),
+        }
+    }
+}
+
+/// The axes of a decision surface's regime lattice (each sorted ascending).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SurfaceAxes {
+    /// Node message-count axis.
+    pub msgs: Vec<usize>,
+    /// Message-size axis [bytes].
+    pub sizes: Vec<usize>,
+    /// Destination-node axis.
+    pub dest_nodes: Vec<usize>,
+    /// GPUs-per-node axis.
+    pub gpus_per_node: Vec<usize>,
+}
+
+impl SurfaceAxes {
+    /// The default serving lattice: the paper's characterization ranges.
+    pub fn default_axes() -> SurfaceAxes {
+        SurfaceAxes {
+            msgs: vec![32, 64, 128, 256, 512],
+            sizes: (4..=20).step_by(2).map(|e| 1usize << e).collect(),
+            dest_nodes: vec![4, 8, 16],
+            gpus_per_node: vec![4],
+        }
+    }
+
+    /// Sort and deduplicate every axis (compile normalizes before use).
+    pub fn normalize(&mut self) {
+        for axis in [&mut self.msgs, &mut self.sizes, &mut self.dest_nodes, &mut self.gpus_per_node] {
+            axis.sort_unstable();
+            axis.dedup();
+        }
+    }
+
+    /// Check axis sanity; returns a user-facing message on failure.
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, axis) in [
+            ("msgs", &self.msgs),
+            ("sizes", &self.sizes),
+            ("dest_nodes", &self.dest_nodes),
+            ("gpus_per_node", &self.gpus_per_node),
+        ] {
+            if axis.is_empty() {
+                return Err(format!("surface axis {name:?} is empty"));
+            }
+            if axis.iter().any(|&v| v == 0) {
+                return Err(format!("surface axis {name:?} has a zero value"));
+            }
+            if axis.windows(2).any(|w| w[0] >= w[1]) {
+                return Err(format!("surface axis {name:?} must be strictly ascending"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of lattice cells.
+    pub fn len(&self) -> usize {
+        self.msgs.len() * self.sizes.len() * self.dest_nodes.len() * self.gpus_per_node.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Flat cell index; size is the fastest axis so crossover walks along a
+    /// regime line touch contiguous memory.
+    fn index(&self, mi: usize, di: usize, gi: usize, si: usize) -> usize {
+        ((mi * self.dest_nodes.len() + di) * self.gpus_per_node.len() + gi) * self.sizes.len() + si
+    }
+}
+
+/// Ranked strategies for one query, fastest first (ties keep Table 5 order).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RankedStrategies {
+    /// `(strategy, predicted seconds)`, ascending by time.
+    pub ranked: Vec<(Strategy, f64)>,
+}
+
+impl RankedStrategies {
+    /// The winning strategy and its predicted time.
+    pub fn best(&self) -> (Strategy, f64) {
+        self.ranked[0]
+    }
+
+    /// Predicted time of a specific strategy, if it was ranked.
+    pub fn time_of(&self, strategy: Strategy) -> Option<f64> {
+        self.ranked.iter().find(|(s, _)| *s == strategy).map(|&(_, t)| t)
+    }
+}
+
+/// A winner change along the size axis of one (msgs, dest, gpn) regime
+/// line, with the exact size where the two interpolated curves intersect.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SurfaceCrossover {
+    pub n_msgs: usize,
+    pub dest_nodes: usize,
+    pub gpus_per_node: usize,
+    /// Largest lattice size still won by `from`.
+    pub size_before: usize,
+    /// Smallest lattice size won by `to`.
+    pub size_after: usize,
+    /// Size [bytes] where the interpolated model curves cross.
+    pub size_exact: f64,
+    pub from: Strategy,
+    pub to: Strategy,
+}
+
+/// A compiled per-machine decision surface.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DecisionSurface {
+    /// Canonical registry name of the machine ([`machines::parse`]).
+    pub machine: String,
+    /// Duplicate-data fraction the lattice was evaluated at.
+    pub dup_frac: f64,
+    pub axes: SurfaceAxes,
+    /// Strategies evaluated per cell, in Table 5 order.
+    pub strategies: Vec<Strategy>,
+    /// Modeled seconds per lattice cell × strategy; cells are in row-major
+    /// (msgs, dest, gpn, size) order.
+    pub cells: Vec<Vec<f64>>,
+    /// Cells invalidated by recalibration, awaiting
+    /// [`DecisionSurface::recompile_stale`].
+    pub stale: Vec<bool>,
+}
+
+/// Modeled times of every strategy at one lattice point — exactly the path
+/// `hetcomm sweep` takes for a uniform-scenario cell, so surface lattice
+/// values and sweep model values agree bit for bit.
+fn cell_times(arch: &Machine, params: &MachineParams, strategies: &[Strategy], q: &Pattern, dup_frac: f64) -> Vec<f64> {
+    let node = machines::with_shape(arch, q.dest_nodes + 1, q.gpus_per_node);
+    let sc = Scenario { n_msgs: q.n_msgs, msg_size: q.msg_size, n_dest: q.dest_nodes, dup_frac };
+    let inputs = sc.inputs(&node, node.cores_per_node());
+    let sm = StrategyModel::new(&node, params);
+    strategies.iter().map(|&s| sm.time(s, &inputs)).collect()
+}
+
+/// Index of the minimum time, first-wins on ties (Table 5 order).
+fn best_index(times: &[f64]) -> usize {
+    let mut best = 0;
+    for (k, &t) in times.iter().enumerate() {
+        if t < times[best] {
+            best = k;
+        }
+    }
+    best
+}
+
+/// Log-space linear interpolation that returns the endpoints bit-exactly at
+/// the boundary weights (so lattice-point lookups reproduce stored values).
+fn lerp_log(a: f64, b: f64, w: f64) -> f64 {
+    if w <= 0.0 {
+        a
+    } else if w >= 1.0 {
+        b
+    } else {
+        (a.ln() * (1.0 - w) + b.ln() * w).exp()
+    }
+}
+
+/// Bracketing indices and log₂-space weight for `v` on a sorted axis;
+/// clamps outside the range and degenerates to a single index on exact hits.
+fn bracket(axis: &[usize], v: usize) -> (usize, usize, f64) {
+    if v <= axis[0] {
+        return (0, 0, 0.0);
+    }
+    if v >= *axis.last().expect("validated axis") {
+        let i = axis.len() - 1;
+        return (i, i, 0.0);
+    }
+    let hi = axis.partition_point(|&a| a < v);
+    if axis[hi] == v {
+        return (hi, hi, 0.0);
+    }
+    let lo = hi - 1;
+    let (x0, x1, x) = ((axis[lo] as f64).log2(), (axis[hi] as f64).log2(), (v as f64).log2());
+    (lo, hi, (x - x0) / (x1 - x0))
+}
+
+/// Index of the axis value nearest `v` in log₂ space (ties toward smaller).
+fn nearest(axis: &[usize], v: usize) -> usize {
+    let lv = (v.max(1) as f64).log2();
+    let mut best = 0;
+    let mut best_d = f64::INFINITY;
+    for (i, &a) in axis.iter().enumerate() {
+        let d = ((a as f64).log2() - lv).abs();
+        if d < best_d {
+            best_d = d;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Size [bytes] where the log-space interpolants of the outgoing and
+/// incoming winner cross between adjacent lattice sizes `s0 < s1`.
+fn cross_size(s0: usize, s1: usize, a0: f64, a1: f64, b0: f64, b1: f64) -> f64 {
+    let d0 = a0.ln() - b0.ln();
+    let d1 = a1.ln() - b1.ln();
+    let w = if (d0 - d1).abs() < f64::EPSILON { 0.5 } else { (d0 / (d0 - d1)).clamp(0.0, 1.0) };
+    let x0 = (s0 as f64).log2();
+    let x1 = (s1 as f64).log2();
+    (x0 + w * (x1 - x0)).exp2()
+}
+
+impl DecisionSurface {
+    /// Compile a surface: evaluate the Table 6 models of the registry
+    /// machine at every lattice point. Deterministic — two compiles of the
+    /// same spec produce bit-identical surfaces.
+    pub fn compile(machine: &str, mut axes: SurfaceAxes, dup_frac: f64) -> Result<DecisionSurface, String> {
+        let (arch, params) =
+            machines::parse(machine, 1).ok_or_else(|| format!("unknown machine preset {machine:?}"))?;
+        axes.normalize();
+        axes.validate()?;
+        if let Some(&g) = axes.gpus_per_node.iter().find(|&&g| g % arch.sockets_per_node != 0) {
+            // `with_shape` would silently round up to a socket multiple,
+            // mislabeling the lattice cell — reject instead.
+            let sockets = arch.sockets_per_node;
+            return Err(format!("{g} GPUs/node does not divide over the {sockets} sockets of {}", arch.name));
+        }
+        if !(0.0..1.0).contains(&dup_frac) {
+            return Err(format!("dup_frac {dup_frac} outside [0, 1)"));
+        }
+        let strategies = Strategy::all();
+        let mut cells = Vec::with_capacity(axes.len());
+        for &m in &axes.msgs {
+            for &d in &axes.dest_nodes {
+                for &g in &axes.gpus_per_node {
+                    for &s in &axes.sizes {
+                        let q = Pattern { n_msgs: m, msg_size: s, dest_nodes: d, gpus_per_node: g };
+                        cells.push(cell_times(&arch, &params, &strategies, &q, dup_frac));
+                    }
+                }
+            }
+        }
+        let stale = vec![false; cells.len()];
+        Ok(DecisionSurface { machine: arch.name.clone(), dup_frac, axes, strategies, cells, stale })
+    }
+
+    /// Structural sanity (used after artifact loads); returns a user-facing
+    /// message on failure.
+    pub fn validate(&self) -> Result<(), String> {
+        self.axes.validate()?;
+        if self.strategies.is_empty() {
+            return Err("surface has no strategies".into());
+        }
+        if self.cells.len() != self.axes.len() {
+            return Err(format!("surface has {} cells, axes imply {}", self.cells.len(), self.axes.len()));
+        }
+        if self.stale.len() != self.cells.len() {
+            return Err("stale flags out of sync with cells".into());
+        }
+        for (i, cell) in self.cells.iter().enumerate() {
+            if cell.len() != self.strategies.len() {
+                return Err(format!("cell {i} has {} times, expected {}", cell.len(), self.strategies.len()));
+            }
+            if cell.iter().any(|t| !t.is_finite() || *t <= 0.0) {
+                return Err(format!("cell {i} holds a non-positive or non-finite time"));
+            }
+        }
+        if machines::parse(&self.machine, 1).is_none() {
+            return Err(format!("unknown machine preset {:?}", self.machine));
+        }
+        Ok(())
+    }
+
+    /// Interpolated lookup: log₂-space bilinear over the message-count and
+    /// size axes, nearest lattice value on the destination-node and
+    /// GPUs-per-node axes; queries outside the lattice clamp to the
+    /// boundary. At lattice points the stored model times are returned
+    /// bit-for-bit.
+    pub fn lookup(&self, q: &Pattern) -> RankedStrategies {
+        let di = nearest(&self.axes.dest_nodes, q.dest_nodes);
+        let gi = nearest(&self.axes.gpus_per_node, q.gpus_per_node);
+        let (m0, m1, wm) = bracket(&self.axes.msgs, q.n_msgs);
+        let (s0, s1, ws) = bracket(&self.axes.sizes, q.msg_size);
+        let mut ranked = Vec::with_capacity(self.strategies.len());
+        for (k, &strategy) in self.strategies.iter().enumerate() {
+            let t00 = self.cells[self.axes.index(m0, di, gi, s0)][k];
+            let t01 = self.cells[self.axes.index(m0, di, gi, s1)][k];
+            let t10 = self.cells[self.axes.index(m1, di, gi, s0)][k];
+            let t11 = self.cells[self.axes.index(m1, di, gi, s1)][k];
+            let t = lerp_log(lerp_log(t00, t01, ws), lerp_log(t10, t11, ws), wm);
+            ranked.push((strategy, t));
+        }
+        // stable sort: equal times keep Table 5 order
+        ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("finite surface times"));
+        RankedStrategies { ranked }
+    }
+
+    /// Exact crossover boundaries: for every regime line, the sizes where
+    /// the winning strategy changes, with the interpolated crossing point.
+    pub fn crossovers(&self) -> Vec<SurfaceCrossover> {
+        let mut out = Vec::new();
+        for (mi, &m) in self.axes.msgs.iter().enumerate() {
+            for (di, &d) in self.axes.dest_nodes.iter().enumerate() {
+                for (gi, &g) in self.axes.gpus_per_node.iter().enumerate() {
+                    for si in 1..self.axes.sizes.len() {
+                        let prev = &self.cells[self.axes.index(mi, di, gi, si - 1)];
+                        let cur = &self.cells[self.axes.index(mi, di, gi, si)];
+                        let (pk, ck) = (best_index(prev), best_index(cur));
+                        if pk == ck {
+                            continue;
+                        }
+                        let (s0, s1) = (self.axes.sizes[si - 1], self.axes.sizes[si]);
+                        out.push(SurfaceCrossover {
+                            n_msgs: m,
+                            dest_nodes: d,
+                            gpus_per_node: g,
+                            size_before: s0,
+                            size_after: s1,
+                            size_exact: cross_size(s0, s1, prev[pk], cur[pk], prev[ck], cur[ck]),
+                            from: self.strategies[pk],
+                            to: self.strategies[ck],
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Mark every cell whose lattice size falls in `[lo, hi]` bytes stale
+    /// (a refit protocol band covers a size range). Returns newly marked.
+    pub fn mark_stale_sizes(&mut self, lo: usize, hi: usize) -> usize {
+        let mut marked = 0;
+        let sizes = self.axes.sizes.clone();
+        for mi in 0..self.axes.msgs.len() {
+            for di in 0..self.axes.dest_nodes.len() {
+                for gi in 0..self.axes.gpus_per_node.len() {
+                    for (si, &s) in sizes.iter().enumerate() {
+                        if s >= lo && s <= hi {
+                            let idx = self.axes.index(mi, di, gi, si);
+                            if !self.stale[idx] {
+                                self.stale[idx] = true;
+                                marked += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        marked
+    }
+
+    /// Number of cells awaiting recompile.
+    pub fn stale_count(&self) -> usize {
+        self.stale.iter().filter(|&&s| s).count()
+    }
+
+    /// Lazily recompile only the stale cells against `params` (a refit
+    /// parameter set); fresh cells keep their bits. Returns the recompiled
+    /// cell count.
+    pub fn recompile_stale(&mut self, params: &MachineParams) -> Result<usize, String> {
+        if self.stale_count() == 0 {
+            return Ok(0);
+        }
+        let (arch, _) =
+            machines::parse(&self.machine, 1).ok_or_else(|| format!("unknown machine preset {:?}", self.machine))?;
+        let mut recompiled = 0;
+        for (mi, &m) in self.axes.msgs.iter().enumerate() {
+            for (di, &d) in self.axes.dest_nodes.iter().enumerate() {
+                for (gi, &g) in self.axes.gpus_per_node.iter().enumerate() {
+                    for (si, &s) in self.axes.sizes.iter().enumerate() {
+                        let idx = self.axes.index(mi, di, gi, si);
+                        if !self.stale[idx] {
+                            continue;
+                        }
+                        let q = Pattern { n_msgs: m, msg_size: s, dest_nodes: d, gpus_per_node: g };
+                        self.cells[idx] = cell_times(&arch, params, &self.strategies, &q, self.dup_frac);
+                        self.stale[idx] = false;
+                        recompiled += 1;
+                    }
+                }
+            }
+        }
+        Ok(recompiled)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{StrategyKind, Transport};
+
+    fn tiny_axes() -> SurfaceAxes {
+        SurfaceAxes {
+            msgs: vec![64, 256],
+            sizes: vec![256, 1024, 4096, 1 << 18],
+            dest_nodes: vec![4, 16],
+            gpus_per_node: vec![4],
+        }
+    }
+
+    #[test]
+    fn compile_shape_and_determinism() {
+        let a = DecisionSurface::compile("lassen", tiny_axes(), 0.0).unwrap();
+        assert_eq!(a.cells.len(), 2 * 4 * 2);
+        assert_eq!(a.strategies.len(), Strategy::all().len());
+        a.validate().unwrap();
+        let b = DecisionSurface::compile("lassen", tiny_axes(), 0.0).unwrap();
+        assert_eq!(a, b, "compile must be deterministic");
+    }
+
+    #[test]
+    fn aliases_resolve_to_canonical_name() {
+        let s = DecisionSurface::compile("frontier", tiny_axes(), 0.0).unwrap();
+        assert_eq!(s.machine, "frontier-like");
+        assert!(DecisionSurface::compile("bogus", tiny_axes(), 0.0).is_err());
+    }
+
+    #[test]
+    fn default_axes_compile_and_sub_socket_gpn_rejected() {
+        let axes = SurfaceAxes::default_axes();
+        axes.validate().unwrap();
+        let s = DecisionSurface::compile("lassen", axes.clone(), 0.0).unwrap();
+        assert_eq!(s.cells.len(), axes.len());
+        // odd GPU counts cannot spread over Lassen's two sockets
+        let odd = SurfaceAxes { gpus_per_node: vec![1, 4], ..tiny_axes() };
+        let err = DecisionSurface::compile("lassen", odd.clone(), 0.0).unwrap_err();
+        assert!(err.contains("sockets"), "{err}");
+        // ...but a single-socket machine takes any count
+        assert!(DecisionSurface::compile("frontier-like", odd, 0.0).is_ok());
+    }
+
+    #[test]
+    fn axes_normalize_and_validate() {
+        let mut axes = SurfaceAxes { msgs: vec![256, 64, 64], ..tiny_axes() };
+        axes.normalize();
+        assert_eq!(axes.msgs, vec![64, 256]);
+        axes.validate().unwrap();
+        let bad = SurfaceAxes { sizes: vec![], ..tiny_axes() };
+        assert!(bad.validate().is_err());
+        let zero = SurfaceAxes { dest_nodes: vec![0, 4], ..tiny_axes() };
+        assert!(zero.validate().is_err());
+    }
+
+    #[test]
+    fn lattice_lookup_is_exact() {
+        let s = DecisionSurface::compile("lassen", tiny_axes(), 0.0).unwrap();
+        let q = Pattern { n_msgs: 256, msg_size: 1024, dest_nodes: 16, gpus_per_node: 4 };
+        let ranked = s.lookup(&q);
+        let idx = s.axes.index(1, 1, 0, 1); // msgs=256, dest=16, gpn=4, size=1024
+        for (strategy, t) in &ranked.ranked {
+            let k = s.strategies.iter().position(|x| x == strategy).unwrap();
+            assert_eq!(t.to_bits(), s.cells[idx][k].to_bits(), "{}", strategy.label());
+        }
+        // ranked ascending
+        assert!(ranked.ranked.windows(2).all(|w| w[0].1 <= w[1].1));
+        assert_eq!(ranked.best().1, ranked.ranked[0].1);
+    }
+
+    #[test]
+    fn off_lattice_lookup_between_brackets() {
+        let s = DecisionSurface::compile("lassen", tiny_axes(), 0.0).unwrap();
+        let q = Pattern { n_msgs: 128, msg_size: 2048, dest_nodes: 16, gpus_per_node: 4 };
+        let ranked = s.lookup(&q);
+        for (strategy, t) in &ranked.ranked {
+            assert!(t.is_finite() && *t > 0.0, "{} -> {t}", strategy.label());
+            // within the envelope of the four (msgs, size) corners
+            let k = s.strategies.iter().position(|x| x == strategy).unwrap();
+            let mut lo = f64::INFINITY;
+            let mut hi = 0f64;
+            for (mi, si) in [(0, 1), (0, 2), (1, 1), (1, 2)] {
+                let v = s.cells[s.axes.index(mi, 1, 0, si)][k];
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            let label = strategy.label();
+            assert!(*t >= lo * (1.0 - 1e-12) && *t <= hi * (1.0 + 1e-12), "{label} {t} outside [{lo}, {hi}]");
+        }
+    }
+
+    #[test]
+    fn queries_clamp_outside_lattice() {
+        let s = DecisionSurface::compile("lassen", tiny_axes(), 0.0).unwrap();
+        let lo = s.lookup(&Pattern { n_msgs: 1, msg_size: 1, dest_nodes: 1, gpus_per_node: 1 });
+        let corner = s.lookup(&Pattern { n_msgs: 64, msg_size: 256, dest_nodes: 4, gpus_per_node: 4 });
+        assert_eq!(lo, corner, "below-range queries clamp to the low corner");
+        let hi = s.lookup(&Pattern { n_msgs: 1 << 20, msg_size: 1 << 30, dest_nodes: 999, gpus_per_node: 64 });
+        let top = s.lookup(&Pattern { n_msgs: 256, msg_size: 1 << 18, dest_nodes: 16, gpus_per_node: 4 });
+        assert_eq!(hi, top, "above-range queries clamp to the high corner");
+    }
+
+    #[test]
+    fn crossover_staged_split_to_device_aware() {
+        // The Figure 4.3b line: 256 msgs to 16 nodes flips from staged Split
+        // to device-aware node-aware communication past the moderate sizes.
+        let s = DecisionSurface::compile("lassen", tiny_axes(), 0.0).unwrap();
+        let xs: Vec<_> = s.crossovers().into_iter().filter(|x| x.n_msgs == 256 && x.dest_nodes == 16).collect();
+        assert!(!xs.is_empty(), "expected a crossover on the 16-node line");
+        let last = xs.last().unwrap();
+        assert_eq!(last.to.transport, Transport::DeviceAware);
+        assert!(matches!(xs[0].from.kind, StrategyKind::SplitMd | StrategyKind::SplitDd));
+        for x in &xs {
+            assert!(
+                x.size_exact >= x.size_before as f64 && x.size_exact <= x.size_after as f64,
+                "exact crossing {} outside [{}, {}]",
+                x.size_exact,
+                x.size_before,
+                x.size_after
+            );
+        }
+    }
+
+    #[test]
+    fn stale_marking_and_lazy_recompile() {
+        let (_, params) = machines::parse("lassen", 1).unwrap();
+        let mut s = DecisionSurface::compile("lassen", tiny_axes(), 0.0).unwrap();
+        let baseline = s.clone();
+        let marked = s.mark_stale_sizes(512, 8192); // sizes 1024 and 4096
+        assert_eq!(marked, 2 * 2 * 2);
+        assert_eq!(s.stale_count(), marked);
+        // marking again is idempotent
+        assert_eq!(s.mark_stale_sizes(512, 8192), 0);
+        // recompiling against the unchanged params restores identical bits
+        let recompiled = s.recompile_stale(&params).unwrap();
+        assert_eq!(recompiled, marked);
+        assert_eq!(s.stale_count(), 0);
+        assert_eq!(s, baseline);
+        // recompiling against slower params moves only the stale sizes
+        let mut s2 = DecisionSurface::compile("lassen", tiny_axes(), 0.0).unwrap();
+        s2.mark_stale_sizes(512, 8192);
+        s2.recompile_stale(&params.scaled(2.0, 0.5)).unwrap();
+        for (idx, (a, b)) in baseline.cells.iter().zip(&s2.cells).enumerate() {
+            let si = idx % baseline.axes.sizes.len();
+            let size = baseline.axes.sizes[si];
+            if (512..=8192).contains(&size) {
+                assert_ne!(a, b, "stale cell {idx} (size {size}) must be recompiled");
+            } else {
+                assert_eq!(a, b, "fresh cell {idx} (size {size}) must keep its bits");
+            }
+        }
+    }
+
+    #[test]
+    fn pattern_from_stats_maps_scenario() {
+        let machine = machines::lassen(17);
+        let sc = Scenario { n_msgs: 256, msg_size: 2048, n_dest: 16, dup_frac: 0.0 };
+        let stats = sc.materialize(&machine).stats(&machine);
+        let q = Pattern::from_stats(&stats, &machine);
+        assert_eq!(q.msg_size, 2048);
+        assert_eq!(q.n_msgs, 256);
+        assert_eq!(q.dest_nodes, 16);
+        assert_eq!(q.gpus_per_node, 4);
+        // degenerate empty pattern stays in-range
+        let empty = Pattern::from_stats(&PatternStats::default(), &machine);
+        assert!(empty.n_msgs >= 1 && empty.msg_size >= 1 && empty.dest_nodes >= 1);
+    }
+}

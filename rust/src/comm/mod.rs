@@ -86,6 +86,17 @@ pub enum Transport {
     DeviceAware,
 }
 
+impl Transport {
+    /// Parse a user-facing transport name.
+    pub fn parse(s: &str) -> Option<Transport> {
+        match s.trim().to_ascii_lowercase().replace('_', "-").as_str() {
+            "staged" => Some(Transport::Staged),
+            "device-aware" | "deviceaware" | "da" => Some(Transport::DeviceAware),
+            _ => None,
+        }
+    }
+}
+
 impl std::fmt::Display for Transport {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
@@ -134,6 +145,17 @@ impl Strategy {
 
     pub fn label(&self) -> String {
         format!("{} ({})", self.kind, self.transport)
+    }
+
+    /// Parse a [`Strategy::label`] back into a strategy (the inverse used by
+    /// the advisor's surface artifacts): `"Split+MD (staged)"`,
+    /// `"3-Step (device-aware)"`, …
+    pub fn parse_label(s: &str) -> Option<Strategy> {
+        let (kind_s, rest) = s.trim().split_once('(')?;
+        let transport_s = rest.trim().strip_suffix(')')?;
+        let kind = StrategyKind::parse(kind_s)?;
+        let transport = Transport::parse(transport_s)?;
+        Strategy::new(kind, transport).ok()
     }
 
     /// Host processes per node a simulated run of this strategy uses: Split
@@ -306,6 +328,26 @@ mod tests {
         assert_eq!(StrategyKind::parse("three-step"), Some(StrategyKind::ThreeStep));
         assert_eq!(StrategyKind::parse("SPLIT_MD"), Some(StrategyKind::SplitMd));
         assert_eq!(StrategyKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn label_roundtrips_through_parse_label() {
+        for s in Strategy::all() {
+            assert_eq!(Strategy::parse_label(&s.label()), Some(s), "{}", s.label());
+        }
+        let split = Strategy::new(StrategyKind::SplitMd, Transport::Staged).ok();
+        assert_eq!(Strategy::parse_label("split_md (STAGED)"), split);
+        assert!(Strategy::parse_label("Split+MD (device-aware)").is_none(), "Table 5 rejects Split DA");
+        assert!(Strategy::parse_label("Split+MD").is_none());
+        assert!(Strategy::parse_label("bogus (staged)").is_none());
+    }
+
+    #[test]
+    fn transport_parse() {
+        assert_eq!(Transport::parse("staged"), Some(Transport::Staged));
+        assert_eq!(Transport::parse("Device-Aware"), Some(Transport::DeviceAware));
+        assert_eq!(Transport::parse("device_aware"), Some(Transport::DeviceAware));
+        assert_eq!(Transport::parse("wire"), None);
     }
 
     #[test]

@@ -56,11 +56,15 @@ pub struct EngineConfig {
     pub artifacts_dir: std::path::PathBuf,
     /// Overlap the diag SpMV with the halo exchange.
     pub overlap: bool,
+    /// Bytes per exchanged vector element when the auto mode models the
+    /// halo pattern (8 = the paper's double-precision payloads, matching
+    /// `SpmvConfig::elem_size`; the in-tree demo data plane ships f32).
+    pub elem_size: usize,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { use_pjrt: false, artifacts_dir: "artifacts".into(), overlap: true }
+        EngineConfig { use_pjrt: false, artifacts_dir: "artifacts".into(), overlap: true, elem_size: 8 }
     }
 }
 
@@ -97,8 +101,23 @@ impl Engine {
         v0: &[f32],
         config: EngineConfig,
     ) -> Result<Engine> {
-        anyhow::ensure!(v0.len() == a.nrows, "v0 length mismatch");
-        let pm = PartitionedMatrix::build(a, nparts);
+        Engine::from_partitioned(PartitionedMatrix::build(a, nparts), machine, strategy, v0, config)
+    }
+
+    /// Build from a prebuilt partitioning (shared with [`Engine::new_auto`],
+    /// which derives the halo pattern from the same partitioning before the
+    /// strategy is known — partitioning large matrices twice would dominate
+    /// setup).
+    fn from_partitioned(
+        pm: PartitionedMatrix,
+        machine: &Machine,
+        strategy: Strategy,
+        v0: &[f32],
+        config: EngineConfig,
+    ) -> Result<Engine> {
+        let n = pm.partition.n;
+        let nparts = pm.parts.len();
+        anyhow::ensure!(v0.len() == n, "v0 length mismatch");
         let plan = Arc::new(ExchangePlan::build(&pm, machine, strategy));
         plan.validate(&pm).map_err(|e| anyhow::anyhow!("invalid exchange plan: {e}"))?;
 
@@ -139,7 +158,32 @@ impl Engine {
             }));
         }
 
-        Ok(Engine { n: a.nrows, nparts, offsets, cmd_tx, out_rx, handles, stats: EngineStats::default() })
+        Ok(Engine { n, nparts, offsets, cmd_tx, out_rx, handles, stats: EngineStats::default() })
+    }
+
+    /// `auto` strategy mode: derive the partitioned matrix's actual halo
+    /// pattern, ask the advisor's compiled surface to rank the strategies
+    /// for it, and build the engine with the winner — closing the loop from
+    /// model to execution. Returns the engine and the chosen strategy.
+    pub fn new_auto(
+        a: &Csr,
+        nparts: usize,
+        machine: &Machine,
+        surface: &crate::advisor::DecisionSurface,
+        v0: &[f32],
+        config: EngineConfig,
+    ) -> Result<(Engine, Strategy)> {
+        anyhow::ensure!(
+            surface.machine == machine.name,
+            "advisor surface was compiled for {:?} but the engine machine is {:?}",
+            surface.machine,
+            machine.name
+        );
+        let pm = PartitionedMatrix::build(a, nparts);
+        let stats = pm.comm_pattern(machine, config.elem_size).stats(machine);
+        let query = crate::advisor::Pattern::from_stats(&stats, machine);
+        let (strategy, _) = surface.lookup(&query).best();
+        Ok((Engine::from_partitioned(pm, machine, strategy, v0, config)?, strategy))
     }
 
     /// Run one iteration: optionally scatter a new global vector first;
@@ -542,6 +586,37 @@ mod tests {
             t_engine < t_oneshot,
             "persistent engine {t_engine}s should beat one-shot loop {t_oneshot}s"
         );
+    }
+
+    #[test]
+    fn engine_auto_picks_surface_winner_and_matches_oracle() {
+        use crate::advisor::{DecisionSurface, Pattern, SurfaceAxes};
+        let a = gen::stencil_27pt(6, 6, 6);
+        let machine = lassen(2);
+        let v: Vec<f32> = (0..a.nrows).map(|i| (i as f32).sin()).collect();
+        let axes = SurfaceAxes {
+            msgs: vec![16, 64, 256],
+            sizes: vec![256, 4096, 65536],
+            dest_nodes: vec![1, 4],
+            gpus_per_node: vec![4],
+        };
+        let surface = DecisionSurface::compile("lassen", axes.clone(), 0.0).unwrap();
+        let (mut eng, strategy) =
+            Engine::new_auto(&a, 8, &machine, &surface, &v, EngineConfig::default()).unwrap();
+        // the choice is exactly the surface's best for the derived query
+        let pm = PartitionedMatrix::build(&a, 8);
+        let stats = pm.comm_pattern(&machine, EngineConfig::default().elem_size).stats(&machine);
+        let query = Pattern::from_stats(&stats, &machine);
+        assert_eq!(strategy, surface.lookup(&query).best().0);
+        // a surface compiled for another machine is rejected, not mis-served
+        let frontier = DecisionSurface::compile("frontier-like", axes, 0.0).unwrap();
+        assert!(Engine::new_auto(&a, 8, &machine, &frontier, &v, EngineConfig::default()).is_err());
+        // and the engine still computes the right product with it
+        let w = eng.iterate(None).unwrap();
+        let expect = a.spmv(&v);
+        for (i, (x, y)) in expect.iter().zip(&w).enumerate() {
+            assert!((x - y).abs() < 1e-3, "row {i}: {x} vs {y}");
+        }
     }
 
     #[test]

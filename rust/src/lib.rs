@@ -36,8 +36,13 @@
 //! - [`sweep`] — the parallel strategy-sweep engine: the full
 //!   (strategy × generator × nodes × GPUs × size) grid through models and
 //!   simulator, with winner/crossover reporting (the `sweep` subcommand).
+//! - [`advisor`] — the online strategy-advisor service: per-machine compiled
+//!   decision surfaces (versioned JSON artifacts), a sharded LRU cache and
+//!   batch serving layer, and measurement-driven recalibration (the
+//!   `advise` subcommand and the coordinator's auto strategy mode).
 //! - [`bench`] — the in-tree benchmark harness used by `rust/benches/*`.
 
+pub mod advisor;
 pub mod bench;
 pub mod comm;
 pub mod coordinator;
@@ -51,6 +56,7 @@ pub mod sweep;
 pub mod topology;
 pub mod util;
 
+pub use advisor::{AdvisorService, DecisionSurface};
 pub use comm::{Schedule, Strategy, StrategyKind, Transport};
 pub use params::{MachineParams, Protocol};
 pub use pattern::CommPattern;

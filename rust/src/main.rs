@@ -6,6 +6,8 @@
 //! - `sweep`    — parallel strategy sweep: the full (strategy × generator ×
 //!   nodes × GPUs × size) grid through models + simulator, with winner,
 //!   crossover and regime reporting (JSON / CSV / table);
+//! - `advise`   — the online strategy advisor: compile decision surfaces,
+//!   answer cached queries, run the seeded burst benchmark, recalibrate;
 //! - `spmv`     — run the distributed SpMV benchmark on a matrix proxy;
 //! - `validate` — compare model predictions against simulated SpMV
 //!   communication (Figure 4.2);
@@ -29,6 +31,7 @@ fn main() {
         "params" => cmd_params(),
         "model" => cmd_model(rest),
         "sweep" => cmd_sweep(rest),
+        "advise" => cmd_advise(rest),
         "spmv" => cmd_spmv(rest),
         "validate" => cmd_validate(rest),
         "study" => cmd_study(rest),
@@ -56,6 +59,7 @@ SUBCOMMANDS:
   params     print the measured Lassen parameter tables (Tables 2-4)
   model      evaluate the Table 6 strategy models for a scenario
   sweep      parallel strategy sweep over the full characterization grid
+  advise     online strategy advisor: compile / query / bench-burst / recalibrate
   spmv       distributed SpMV communication benchmark (SuiteSparse proxies)
   validate   model-vs-simulation comparison (Figure 4.2)
   study      Section 6 outlook: strategy winners on future machines
@@ -106,7 +110,8 @@ fn cmd_model(argv: &[String]) -> i32 {
         .flag("size", "2048", "bytes per message")
         .flag("dest", "16", "destination node count")
         .flag("dup", "0.0", "duplicate-data fraction removed by node-aware strategies")
-        .flag("nodes", "32", "cluster node count");
+        .flag("nodes", "32", "cluster node count")
+        .flag("machine", "lassen", "machine preset (lassen | summit | frontier-like | delta-like)");
     let a = match cli.parse(argv) {
         Ok(a) => a,
         Err(e) => {
@@ -114,8 +119,10 @@ fn cmd_model(argv: &[String]) -> i32 {
             return 2;
         }
     };
-    let machine = machines::lassen(a.get_usize("nodes").unwrap());
-    let params = lassen_params();
+    let Some((machine, params)) = machines::parse(a.get("machine"), a.get_usize("nodes").unwrap()) else {
+        eprintln!("unknown machine {:?}; known: {:?}", a.get("machine"), machines::NAMES);
+        return 2;
+    };
     let sc = Scenario {
         n_msgs: a.get_usize("msgs").unwrap(),
         msg_size: a.get_usize("size").unwrap(),
@@ -175,6 +182,8 @@ fn cmd_sweep(argv: &[String]) -> i32 {
         .flag("threads", "0", "worker threads (0 = all cores)")
         .flag("format", "table", "output format: table | json | csv")
         .flag("out", "-", "output path ('-' = stdout)")
+        .flag("machine", "lassen", "machine preset (lassen | summit | frontier-like | delta-like)")
+        .flag("emit-surface", "", "also compile the grid into an advisor surface artifact at this path")
         .switch("tiny", "run the <10s smoke grid instead of the flag-defined grid")
         .switch("model-only", "skip the discrete-event simulator");
     let a = match cli.parse(argv) {
@@ -252,7 +261,14 @@ fn cmd_sweep(argv: &[String]) -> i32 {
             return 2;
         }
     };
-    let config = hetcomm::sweep::SweepConfig { grid, strategies, seed, threads, sim: !a.get_bool("model-only") };
+    let config = hetcomm::sweep::SweepConfig {
+        grid,
+        strategies,
+        seed,
+        threads,
+        sim: !a.get_bool("model-only"),
+        machine: a.get("machine").to_string(),
+    };
 
     let result = match hetcomm::sweep::run_sweep(&config) {
         Ok(r) => r,
@@ -285,6 +301,240 @@ fn cmd_sweep(argv: &[String]) -> i32 {
         result.threads_used,
         result.elapsed_s
     );
+
+    // Emit the surface LAST: a bad artifact path must not discard the
+    // sweep results above.
+    let surface_path = a.get("emit-surface");
+    if !surface_path.is_empty() {
+        if config.strategies.len() != Strategy::all().len() {
+            eprintln!("note: surface artifacts always cover all Table 5 strategies (--strategies filter not baked in)");
+        }
+        let axes = hetcomm::advisor::SurfaceAxes {
+            msgs: vec![config.grid.n_msgs],
+            sizes: config.grid.sizes.clone(),
+            dest_nodes: config.grid.dest_nodes.clone(),
+            gpus_per_node: config.grid.gpus_per_node.clone(),
+        };
+        let compiled = hetcomm::advisor::DecisionSurface::compile(&config.machine, axes, config.grid.dup_frac)
+            .and_then(|s| hetcomm::advisor::persist::save(&s, surface_path));
+        if let Err(e) = compiled {
+            eprintln!("cannot emit surface: {e}");
+            return 1;
+        }
+        eprintln!("wrote advisor surface artifact to {surface_path}");
+    }
+    0
+}
+
+fn cmd_advise(argv: &[String]) -> i32 {
+    let cli = Cli::new("hetcomm advise", "online strategy advisor: compiled surfaces, cached queries, recalibration")
+        .switch("compile", "compile a decision surface and write it to --out")
+        .switch("query", "answer one strategy query (--q-msgs / --q-size / --q-dest / --q-gpn)")
+        .flag("bench-burst", "0", "answer a seeded synthetic burst of N cached queries")
+        .switch("recalibrate", "run the sim-probe recalibration loop (refit -> stale -> lazy recompile)")
+        .flag("machine", "lassen", "machine preset (lassen | summit | frontier-like | delta-like)")
+        .flag("surface", "", "surface artifact to load (empty = compile in memory from the axis flags)")
+        .flag("out", "-", "output path for --compile ('-' = stdout)")
+        .flag("msgs", "32,64,128,256,512", "lattice axis: node message counts")
+        .flag("sizes", "2^4,2^6,2^8,2^10,2^12,2^14,2^16,2^18,2^20", "lattice axis: message sizes (supports 2^k)")
+        .flag("dest", "4,8,16", "lattice axis: destination-node counts")
+        .flag("gpn", "4", "lattice axis: GPUs per node")
+        .flag("dup", "0.0", "duplicate-data fraction for the lattice")
+        .flag("q-msgs", "256", "query: inter-node messages from the node")
+        .flag("q-size", "2048", "query: bytes per message")
+        .flag("q-dest", "16", "query: destination nodes")
+        .flag("q-gpn", "4", "query: GPUs per node")
+        .flag("seed", "42", "burst: base seed (fixed seed => deterministic answers)")
+        .flag("threads", "0", "burst: worker threads (0 = all cores)")
+        .flag("min-hit-rate", "0.0", "burst: exit nonzero if the cache hit rate falls below this fraction");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{}", e.0);
+            return 2;
+        }
+    };
+
+    let mut surface = if a.get("surface").is_empty() {
+        let lists =
+            (a.get_usize_list("msgs"), a.get_usize_list("sizes"), a.get_usize_list("dest"), a.get_usize_list("gpn"));
+        let axes = match lists {
+            (Ok(msgs), Ok(sizes), Ok(dest_nodes), Ok(gpus_per_node)) => {
+                hetcomm::advisor::SurfaceAxes { msgs, sizes, dest_nodes, gpus_per_node }
+            }
+            (Err(e), ..) | (_, Err(e), ..) | (_, _, Err(e), _) | (.., Err(e)) => {
+                eprintln!("{}", e.0);
+                return 2;
+            }
+        };
+        let dup = match a.get_f64("dup") {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("{}", e.0);
+                return 2;
+            }
+        };
+        match hetcomm::advisor::DecisionSurface::compile(a.get("machine"), axes, dup) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("cannot compile surface: {e}");
+                return 2;
+            }
+        }
+    } else {
+        match hetcomm::advisor::persist::load(a.get("surface")) {
+            Ok(s) => {
+                // a loaded artifact defines its own machine; surface an
+                // EXPLICIT contradicting --machine instead of silently
+                // ignoring it (the flag's default must not trigger this)
+                let machine_given = argv.iter().any(|t| t == "--machine" || t.starts_with("--machine="));
+                let flag_arch = machines::parse(a.get("machine"), 1);
+                if machine_given && flag_arch.as_ref().map(|(m, _)| m.name.as_str()) != Some(s.machine.as_str()) {
+                    eprintln!(
+                        "note: serving the loaded {} surface (--machine {} ignored)",
+                        s.machine,
+                        a.get("machine")
+                    );
+                }
+                s
+            }
+            Err(e) => {
+                eprintln!("cannot load surface: {e}");
+                return 2;
+            }
+        }
+    };
+
+    let mut did_something = false;
+
+    // Recalibrate FIRST so a following --compile persists the refit
+    // surface (the compile -> query -> recalibrate -> recompile loop).
+    if a.get_bool("recalibrate") {
+        did_something = true;
+        let Some((probe_machine, base_params)) = machines::parse(&surface.machine, 2) else {
+            eprintln!("surface machine {:?} is not in the registry", surface.machine);
+            return 1;
+        };
+        let mut cal = hetcomm::advisor::Calibrator::new(base_params.clone());
+        let probe_sizes: Vec<usize> = (4..=20).map(|e| 1usize << e).collect();
+        cal.ingest_sim_probes(&probe_machine, &base_params, &probe_sizes);
+        let report = match cal.refit() {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("refit failed: {e}");
+                return 1;
+            }
+        };
+        let marked = surface.mark_stale_sizes(report.stale_lo, report.stale_hi);
+        match surface.recompile_stale(&report.params) {
+            Ok(recompiled) => println!(
+                "recalibrated {}: {} samples, {} bands refit, {marked} cells stale, {recompiled} recompiled",
+                surface.machine, report.samples, report.bands_refit
+            ),
+            Err(e) => {
+                eprintln!("recompile failed: {e}");
+                return 1;
+            }
+        }
+    }
+
+    if a.get_bool("compile") {
+        did_something = true;
+        let body = hetcomm::advisor::persist::to_json(&surface);
+        let out = a.get("out");
+        if out == "-" {
+            print!("{body}");
+        } else if let Err(e) = std::fs::write(out, &body) {
+            eprintln!("cannot write {out}: {e}");
+            return 1;
+        } else {
+            eprintln!(
+                "compiled surface for {}: {} lattice cells x {} strategies -> {out}",
+                surface.machine,
+                surface.cells.len(),
+                surface.strategies.len()
+            );
+        }
+    }
+
+    if a.get_bool("query") {
+        did_something = true;
+        let parts = (a.get_usize("q-msgs"), a.get_usize("q-size"), a.get_usize("q-dest"), a.get_usize("q-gpn"));
+        let pattern = match parts {
+            (Ok(n_msgs), Ok(msg_size), Ok(dest_nodes), Ok(gpus_per_node)) => {
+                hetcomm::advisor::Pattern { n_msgs, msg_size, dest_nodes, gpus_per_node }
+            }
+            (Err(e), ..) | (_, Err(e), ..) | (_, _, Err(e), _) | (.., Err(e)) => {
+                eprintln!("{}", e.0);
+                return 2;
+            }
+        };
+        let ranked = surface.lookup(&pattern);
+        let mut t = Table::new(
+            format!(
+                "Advisor ranking on {}: {} msgs x {} B to {} nodes ({} GPUs/node)",
+                surface.machine, pattern.n_msgs, pattern.msg_size, pattern.dest_nodes, pattern.gpus_per_node
+            ),
+            &["rank", "strategy", "predicted[s]"],
+        );
+        for (rank, (strategy, secs)) in ranked.ranked.iter().enumerate() {
+            t.row(vec![(rank + 1).to_string(), strategy.label(), fmt_secs(*secs)]);
+        }
+        t.print();
+        let (best, secs) = ranked.best();
+        println!("\nfastest: {} ({})", best.label(), fmt_secs(secs));
+    }
+
+    let burst = match a.get_usize("bench-burst") {
+        Ok(n) => n,
+        Err(e) => {
+            eprintln!("{}", e.0);
+            return 2;
+        }
+    };
+    if burst > 0 {
+        did_something = true;
+        let run_flags = (a.get_u64("seed"), a.get_usize("threads"), a.get_f64("min-hit-rate"));
+        let (seed, threads, min_hit_rate) = match run_flags {
+            (Ok(s), Ok(t), Ok(m)) => (s, t, m),
+            (Err(e), ..) | (_, Err(e), _) | (.., Err(e)) => {
+                eprintln!("{}", e.0);
+                return 2;
+            }
+        };
+        let service = hetcomm::advisor::AdvisorService::new(vec![surface.clone()]);
+        let report = match service.bench_burst(burst, seed, threads) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("burst failed: {e}");
+                return 1;
+            }
+        };
+        println!(
+            "burst: {} queries ({} distinct patterns) on {} threads in {:.3}s",
+            report.queries, report.distinct, report.threads, report.elapsed_s
+        );
+        println!(
+            "cache: {} hits / {} misses ({:.2}% hit rate)",
+            report.cache.hits,
+            report.cache.misses,
+            report.cache.hit_rate() * 100.0
+        );
+        println!("lookup latency: p50 {}, p99 {}", fmt_secs(report.p50_s).trim(), fmt_secs(report.p99_s).trim());
+        println!("winners:");
+        for (label, count) in &report.winners {
+            println!("  {label}: {count}");
+        }
+        if report.cache.hit_rate() < min_hit_rate {
+            eprintln!("cache hit rate {:.4} below required {min_hit_rate}", report.cache.hit_rate());
+            return 1;
+        }
+    }
+
+    if !did_something {
+        eprintln!("nothing to do: pass --compile, --query, --bench-burst N, or --recalibrate (see --help)");
+        return 2;
+    }
     0
 }
 
@@ -295,6 +545,7 @@ fn cmd_spmv(argv: &[String]) -> i32 {
         .flag("gpus", "8", "partition count")
         .flag("nodes", "2", "cluster nodes")
         .flag("iters", "3", "repetitions")
+        .flag("machine", "lassen", "machine preset (lassen | summit | frontier-like | delta-like)")
         .switch("pjrt", "run local compute through the PJRT artifact");
     let a = match cli.parse(argv) {
         Ok(a) => a,
@@ -308,7 +559,10 @@ fn cmd_spmv(argv: &[String]) -> i32 {
         return 2;
     };
     let mat = suite::proxy(info, a.get_usize("scale").unwrap());
-    let machine = machines::lassen(a.get_usize("nodes").unwrap());
+    let Some((machine, _params)) = machines::parse(a.get("machine"), a.get_usize("nodes").unwrap()) else {
+        eprintln!("unknown machine {:?}; known: {:?}", a.get("machine"), machines::NAMES);
+        return 2;
+    };
     let gpus = a.get_usize("gpus").unwrap();
     println!("matrix {} proxy: {} rows, {} nnz over {gpus} GPUs", info.name, mat.nrows, mat.nnz());
 

@@ -25,7 +25,8 @@ fn opt_num(x: Option<f64>) -> String {
 }
 
 /// Minimal JSON string escaping (labels only contain ASCII, but stay safe).
-fn esc(s: &str) -> String {
+/// Shared with the advisor's surface artifacts (`advisor::persist`).
+pub(crate) fn esc(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     for c in s.chars() {
         match c {
@@ -51,6 +52,7 @@ pub fn to_json(result: &SweepResult) -> String {
     let mut out = String::new();
     out.push_str("{\n");
     let _ = writeln!(out, "  \"schema\": \"hetcomm.sweep.v1\",");
+    let _ = writeln!(out, "  \"machine\": \"{}\",", esc(&cfg.machine));
     let _ = writeln!(out, "  \"seed\": {},", cfg.seed);
     let _ = writeln!(out, "  \"n_msgs\": {},", cfg.grid.n_msgs);
     let _ = writeln!(out, "  \"dup_frac\": {},", num(cfg.grid.dup_frac));

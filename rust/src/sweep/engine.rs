@@ -12,10 +12,11 @@ use super::grid::{CellSpec, GridSpec, PatternGen};
 use super::report::{analyze, SweepReport};
 use crate::comm::{build_schedule, dedup, Strategy};
 use crate::model::{ModelInputs, StrategyModel};
-use crate::params::lassen_params;
+use crate::params::MachineParams;
 use crate::pattern::generators::{random_pattern, Scenario};
 use crate::pattern::CommPattern;
 use crate::sim;
+use crate::topology::{machines, Machine};
 use crate::util::rng::Rng;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -33,11 +34,22 @@ pub struct SweepConfig {
     pub threads: usize,
     /// Run the discrete-event simulator next to the models.
     pub sim: bool,
+    /// Machine preset evaluated at every grid point (a
+    /// [`machines::parse`] registry name; the node's GPU count still comes
+    /// from the grid axis).
+    pub machine: String,
 }
 
 impl Default for SweepConfig {
     fn default() -> SweepConfig {
-        SweepConfig { grid: GridSpec::default(), strategies: Strategy::all(), seed: 42, threads: 0, sim: true }
+        SweepConfig {
+            grid: GridSpec::default(),
+            strategies: Strategy::all(),
+            seed: 42,
+            threads: 0,
+            sim: true,
+            machine: "lassen".into(),
+        }
     }
 }
 
@@ -95,6 +107,8 @@ pub fn run_sweep(config: &SweepConfig) -> Result<SweepResult, String> {
     if config.strategies.is_empty() {
         return Err("no strategies selected".into());
     }
+    let (arch, params) = machines::parse(&config.machine, 1)
+        .ok_or_else(|| format!("unknown machine preset {:?}", config.machine))?;
     let cells = config.grid.cells();
     let t0 = Instant::now();
     let threads = effective_threads(config.threads, cells.len());
@@ -108,7 +122,7 @@ pub fn run_sweep(config: &SweepConfig) -> Result<SweepResult, String> {
                 if i >= cells.len() {
                     break;
                 }
-                let result = eval_cell(config, &cells[i]);
+                let result = eval_cell(config, &arch, &params, &cells[i]);
                 collected.lock().unwrap().push((i, result));
             });
         }
@@ -129,10 +143,9 @@ pub fn run_sweep(config: &SweepConfig) -> Result<SweepResult, String> {
 
 /// Evaluate one grid cell: build the pattern once, then model (and
 /// optionally simulate) every strategy against it.
-fn eval_cell(cfg: &SweepConfig, cell: &CellSpec) -> Vec<CellResult> {
-    let machine = cfg.grid.machine_for(cell.dest_nodes, cell.gpus_per_node);
-    let params = lassen_params();
-    let sm = StrategyModel::new(&machine, &params);
+fn eval_cell(cfg: &SweepConfig, arch: &Machine, params: &MachineParams, cell: &CellSpec) -> Vec<CellResult> {
+    let machine = cfg.grid.machine_for_arch(arch, cell.dest_nodes, cell.gpus_per_node);
+    let sm = StrategyModel::new(&machine, params);
     // Model inputs use the full core count: only the Split models read
     // `ppn`, and Split enlists every core (matching `hetcomm model`).
     let ppn = machine.cores_per_node();
@@ -168,7 +181,7 @@ fn eval_cell(cfg: &SweepConfig, cell: &CellSpec) -> Vec<CellResult> {
         let model_s = sm.time(strategy, &inputs);
         let sim_s = pattern.as_ref().map(|p| {
             let schedule = build_schedule(strategy, &machine, p);
-            sim::run(&machine, &params, &schedule, strategy.sim_ppn(&machine)).total
+            sim::run(&machine, params, &schedule, strategy.sim_ppn(&machine)).total
         });
         let model_err = sim_s.and_then(|t| if t > 0.0 { Some((model_s - t).abs() / t) } else { None });
         out.push(CellResult {
@@ -279,6 +292,33 @@ mod tests {
         let mut cfg = small_config(1);
         cfg.grid.sizes.clear();
         assert!(run_sweep(&cfg).is_err());
+        let mut cfg = small_config(1);
+        cfg.machine = "bogus".into();
+        assert!(run_sweep(&cfg).is_err());
+    }
+
+    #[test]
+    fn machine_preset_changes_model_times() {
+        let mut base = small_config(1);
+        base.sim = false;
+        let lassen = run_sweep(&base).unwrap();
+        let mut frontier = small_config(1);
+        frontier.sim = false;
+        frontier.machine = "frontier-like".into();
+        let frontier = run_sweep(&frontier).unwrap();
+        assert_eq!(lassen.cells.len(), frontier.cells.len());
+        assert!(
+            lassen.cells.iter().zip(&frontier.cells).any(|(a, b)| a.model_s.to_bits() != b.model_s.to_bits()),
+            "the machine preset must reach the models"
+        );
+        // aliases resolve through the same registry
+        let mut alias = small_config(1);
+        alias.sim = false;
+        alias.machine = "Frontier".into();
+        let alias = run_sweep(&alias).unwrap();
+        for (a, b) in frontier.cells.iter().zip(&alias.cells) {
+            assert_eq!(a.model_s.to_bits(), b.model_s.to_bits());
+        }
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! paper's characterization (pattern generator × destination-node count ×
 //! GPUs per node × message size), flattened into deterministic work cells.
 
-use crate::topology::Machine;
+use crate::topology::{machines, Machine};
 
 /// How a cell's communication pattern is generated.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -150,13 +150,16 @@ impl GridSpec {
     /// 20 cores per socket, `gpn / 2` GPUs per socket, and one node more
     /// than the destination count so the uniform scenario has a sender.
     pub fn machine_for(&self, dest_nodes: usize, gpus_per_node: usize) -> Machine {
-        Machine {
-            name: format!("lassen-g{gpus_per_node}"),
-            num_nodes: dest_nodes + 1,
-            sockets_per_node: 2,
-            cores_per_socket: 20,
-            gpus_per_socket: gpus_per_node / 2,
-        }
+        self.machine_for_arch(&machines::lassen(1), dest_nodes, gpus_per_node)
+    }
+
+    /// Like [`GridSpec::machine_for`], but on an arbitrary preset node
+    /// architecture (sockets and cores from `arch`, GPUs from the grid
+    /// axis) — the hook behind the `sweep --machine` flag.
+    pub fn machine_for_arch(&self, arch: &Machine, dest_nodes: usize, gpus_per_node: usize) -> Machine {
+        let mut machine = machines::with_shape(arch, dest_nodes + 1, gpus_per_node);
+        machine.name = format!("{}-g{gpus_per_node}", arch.name);
+        machine
     }
 }
 
@@ -201,8 +204,19 @@ mod tests {
         assert_eq!(m.num_nodes, 17);
         assert_eq!(m.gpus_per_node(), 4);
         assert_eq!(m.cores_per_node(), 40);
+        assert_eq!(m.name, "lassen-g4");
         let m8 = g.machine_for(4, 8);
         assert_eq!(m8.gpus_per_node(), 8);
+    }
+
+    #[test]
+    fn machine_for_arch_keeps_preset_sockets() {
+        let g = GridSpec::default();
+        let f = g.machine_for_arch(&machines::frontier_like(1), 16, 4);
+        assert_eq!((f.num_nodes, f.sockets_per_node, f.cores_per_node(), f.gpus_per_node()), (17, 1, 64, 4));
+        assert_eq!(f.name, "frontier-like-g4");
+        let d = g.machine_for_arch(&machines::delta_like(1), 4, 8);
+        assert_eq!((d.sockets_per_node, d.cores_per_node(), d.gpus_per_node()), (2, 128, 8));
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Canonical machine descriptions (Section 2.1 and the Section 6 outlook).
 
 use super::Machine;
+use crate::params::{lassen_params, MachineParams};
 
 /// Lassen (LLNL): 2 sockets/node, IBM Power9 (20 cores) + 2 V100s per
 /// socket, EDR InfiniBand. The paper's measurement testbed.
@@ -61,6 +62,38 @@ pub fn by_name(name: &str, num_nodes: usize) -> Option<Machine> {
     }
 }
 
+/// Canonical registry names accepted by [`parse`] (CLI help text).
+pub const NAMES: [&str; 4] = ["lassen", "summit", "frontier-like", "delta-like"];
+
+/// The single registry helper behind every `--machine` CLI flag: resolve a
+/// preset name (case-insensitive, aliases allowed) to the machine
+/// description plus its modeling parameters. Lassen and Summit use the
+/// measured tables; the Section 6 forward-looking machines scale the Lassen
+/// baseline (frontier-like: 0.8× latency, 4× bandwidth; delta-like:
+/// 2× bandwidth), matching `hetcomm study` and the ablation bench.
+pub fn parse(name: &str, num_nodes: usize) -> Option<(Machine, MachineParams)> {
+    let machine = by_name(name.trim().to_ascii_lowercase().as_str(), num_nodes)?;
+    let base = lassen_params();
+    let params = match machine.name.as_str() {
+        "frontier-like" => base.scaled(0.8, 4.0),
+        "delta-like" => base.scaled(1.0, 2.0),
+        _ => base,
+    };
+    Some((machine, params))
+}
+
+/// Resize a preset's node architecture to a specific node count and GPU
+/// count per node (GPUs spread evenly over the preset's sockets).
+pub fn with_shape(arch: &Machine, num_nodes: usize, gpus_per_node: usize) -> Machine {
+    Machine {
+        name: arch.name.clone(),
+        num_nodes,
+        sockets_per_node: arch.sockets_per_node,
+        cores_per_socket: arch.cores_per_socket,
+        gpus_per_socket: gpus_per_node.div_ceil(arch.sockets_per_node.max(1)).max(1),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -86,5 +119,32 @@ mod tests {
     #[test]
     fn summit_six_gpus() {
         assert_eq!(summit(1).gpus_per_node(), 6);
+    }
+
+    #[test]
+    fn parse_registry_resolves_params() {
+        use crate::params::lassen_params;
+        let (m, p) = parse("lassen", 4).unwrap();
+        assert_eq!(m.name, "lassen");
+        assert_eq!(p, lassen_params());
+        let (m, p) = parse("Frontier", 4).unwrap();
+        assert_eq!(m.name, "frontier-like");
+        assert!((p.rn() - lassen_params().rn() * 4.0).abs() / p.rn() < 1e-12);
+        let (m, p) = parse("delta-like", 4).unwrap();
+        assert_eq!(m.name, "delta-like");
+        assert!((p.rn() - lassen_params().rn() * 2.0).abs() / p.rn() < 1e-12);
+        assert!(parse("bogus", 1).is_none());
+        for name in NAMES {
+            assert!(parse(name, 2).is_some(), "registry name {name} must resolve");
+        }
+    }
+
+    #[test]
+    fn with_shape_spreads_gpus_over_sockets() {
+        let two_socket = with_shape(&lassen(1), 5, 8);
+        assert_eq!((two_socket.num_nodes, two_socket.gpus_per_node(), two_socket.cores_per_node()), (5, 8, 40));
+        let one_socket = with_shape(&frontier_like(1), 3, 4);
+        assert_eq!((one_socket.num_nodes, one_socket.gpus_per_node()), (3, 4));
+        assert_eq!(one_socket.gpus_per_socket, 4);
     }
 }

@@ -1,0 +1,149 @@
+//! Integration: the online strategy advisor end to end — deterministic
+//! compile + artifact round-trip, agreement with `hetcomm sweep`'s winners
+//! and per-regime report on the Table 6 regimes for all three machines,
+//! cached burst behavior, and the measurement-driven recalibration loop.
+
+use hetcomm::advisor::{persist, AdvisorService, Calibrator, DecisionSurface, Pattern, SurfaceAxes};
+use hetcomm::sweep::{run_sweep, GridSpec, PatternGen, SweepConfig, SMALL_BAND_MAX};
+use hetcomm::topology::machines;
+
+const MACHINES: [&str; 3] = ["lassen", "frontier-like", "delta-like"];
+const SIZES: [usize; 5] = [16, 256, 1024, 4096, 1 << 18];
+
+fn table6_axes() -> SurfaceAxes {
+    SurfaceAxes { msgs: vec![256], sizes: SIZES.to_vec(), dest_nodes: vec![4, 16], gpus_per_node: vec![4] }
+}
+
+fn table6_sweep(machine: &str) -> SweepConfig {
+    SweepConfig {
+        grid: GridSpec {
+            gens: vec![PatternGen::Uniform],
+            dest_nodes: vec![4, 16],
+            gpus_per_node: vec![4],
+            sizes: SIZES.to_vec(),
+            n_msgs: 256,
+            dup_frac: 0.0,
+        },
+        sim: false,
+        machine: machine.into(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn compile_is_deterministic_and_artifacts_roundtrip() {
+    for machine in MACHINES {
+        let a = DecisionSurface::compile(machine, table6_axes(), 0.0).unwrap();
+        let b = DecisionSurface::compile(machine, table6_axes(), 0.0).unwrap();
+        assert_eq!(persist::to_json(&a), persist::to_json(&b), "{machine}: artifact must be byte-stable");
+        let parsed = persist::parse_json(&persist::to_json(&a)).unwrap();
+        assert_eq!(a, parsed, "{machine}: artifact must round-trip bit-for-bit");
+    }
+}
+
+#[test]
+fn advisor_queries_match_sweep_winners_on_all_machines() {
+    // Acceptance: `advise --query` answers the Table 6 regimes with the
+    // same winner the sweep reports, per cell, for all three machines.
+    for machine in MACHINES {
+        let sweep = run_sweep(&table6_sweep(machine)).unwrap();
+        let surface = DecisionSurface::compile(machine, table6_axes(), 0.0).unwrap();
+        assert!(sweep.report.winners.len() >= 3, "need >= 3 regime cells to compare");
+        for w in &sweep.report.winners {
+            let query =
+                Pattern { n_msgs: 256, msg_size: w.size, dest_nodes: w.dest_nodes, gpus_per_node: w.gpus_per_node };
+            let (best, secs) = surface.lookup(&query).best();
+            assert_eq!(
+                best.label(),
+                w.winner,
+                "{machine}: advisor disagrees with sweep at {} B x {} nodes",
+                w.size,
+                w.dest_nodes
+            );
+            assert_eq!(secs.to_bits(), w.model_s.to_bits(), "{machine}: winning time must match the sweep's");
+        }
+    }
+}
+
+#[test]
+fn advisor_totals_match_sweep_regime_report() {
+    // The per-regime (band) report: totalling the advisor's per-size answers
+    // over a band must select the same winner as the sweep's regime report.
+    for machine in MACHINES {
+        let sweep = run_sweep(&table6_sweep(machine)).unwrap();
+        let surface = DecisionSurface::compile(machine, table6_axes(), 0.0).unwrap();
+        let mut checked = 0;
+        for regime in &sweep.report.regimes {
+            let mut totals = vec![0.0f64; surface.strategies.len()];
+            for &size in SIZES.iter().filter(|&&s| (s <= SMALL_BAND_MAX) == (regime.band == "small")) {
+                let query =
+                    Pattern { n_msgs: 256, msg_size: size, dest_nodes: regime.dest_nodes, gpus_per_node: 4 };
+                let ranked = surface.lookup(&query);
+                for (k, &strategy) in surface.strategies.iter().enumerate() {
+                    totals[k] += ranked.time_of(strategy).expect("all strategies ranked");
+                }
+            }
+            let mut best = 0;
+            for (k, &t) in totals.iter().enumerate() {
+                if t < totals[best] {
+                    best = k;
+                }
+            }
+            assert_eq!(
+                surface.strategies[best].label(),
+                regime.winner,
+                "{machine}: {} nodes / {} band",
+                regime.dest_nodes,
+                regime.band
+            );
+            checked += 1;
+        }
+        assert!(checked >= 4, "expected >= 4 regimes, checked {checked}");
+    }
+}
+
+#[test]
+fn burst_is_deterministic_with_high_hit_rate() {
+    let surface = DecisionSurface::compile("lassen", table6_axes(), 0.0).unwrap();
+    let svc = AdvisorService::new(vec![surface.clone()]);
+    let r1 = svc.bench_burst(20_000, 7, 4).unwrap();
+    assert_eq!(r1.queries, 20_000);
+    assert_eq!(r1.winners.values().sum::<usize>(), 20_000);
+    assert!(r1.p99_s >= r1.p50_s && r1.p50_s >= 0.0);
+    // same seed, different thread count: answers must be identical, and the
+    // single-threaded run's miss count is exactly its distinct pool
+    let r2 = AdvisorService::new(vec![surface]).bench_burst(20_000, 7, 1).unwrap();
+    assert_eq!(r1.winners, r2.winners);
+    assert_eq!(r1.distinct, r2.distinct);
+    assert!(r2.cache.misses as usize <= r2.distinct, "misses {} > pool {}", r2.cache.misses, r2.distinct);
+    assert!(r2.cache.hit_rate() > 0.9, "hit rate {}", r2.cache.hit_rate());
+}
+
+#[test]
+fn recalibration_loop_updates_surface_and_cache() {
+    let (_, base_params) = machines::parse("lassen", 2).unwrap();
+    let surface = DecisionSurface::compile("lassen", table6_axes(), 0.0).unwrap();
+    let baseline = surface.clone();
+    let svc = AdvisorService::new(vec![surface]);
+    let q = Pattern { n_msgs: 256, msg_size: 1024, dest_nodes: 16, gpus_per_node: 4 };
+    let before = svc.advise_for("lassen", &q).unwrap();
+
+    // "measured" timings: the eager off-node path runs 3x slower than the
+    // table says; refit and apply
+    let mut cal = Calibrator::new(base_params.clone());
+    let truth = base_params.cpu_ab(hetcomm::Protocol::Eager, hetcomm::Locality::OffNode);
+    for exp in 9..13 {
+        let bytes = 1usize << exp;
+        cal.ingest(bytes, 3.0 * truth.time(bytes));
+    }
+    let report = cal.refit().unwrap();
+    let recompiled = svc.recalibrate("lassen", &report.params, report.stale_lo, report.stale_hi).unwrap();
+    assert!(recompiled > 0, "the refit band covers lattice sizes 1024 and 4096");
+
+    let after = svc.advise_for("lassen", &q).unwrap();
+    assert_ne!(before.ranked, after.ranked, "recalibration must reach served answers");
+    // sizes outside the refit band keep their original answers
+    let untouched = Pattern { msg_size: 1 << 18, ..q };
+    let got = svc.advise_for("lassen", &untouched).unwrap();
+    assert_eq!(got.ranked, baseline.lookup(&untouched).ranked);
+}

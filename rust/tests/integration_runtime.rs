@@ -136,7 +136,7 @@ fn persistent_engine_through_pjrt() {
     let mut rng = Rng::new(19);
     let v: Vec<f32> = (0..a.nrows).map(|_| rng.f64_in(-1.0, 1.0) as f32).collect();
     let s = Strategy::new(StrategyKind::SplitMd, Transport::Staged).unwrap();
-    let cfg = EngineConfig { use_pjrt: true, artifacts_dir: artifacts_dir(), overlap: true };
+    let cfg = EngineConfig { use_pjrt: true, artifacts_dir: artifacts_dir(), ..Default::default() };
     let mut eng = Engine::new(&a, 8, &machine, s, &v, cfg).unwrap();
     let expect = a.spmv(&v);
     for _ in 0..3 {
@@ -158,7 +158,7 @@ fn engine_pjrt_overlap_matches_fused() {
     let machine = lassen(2);
     let v: Vec<f32> = (0..a.nrows).map(|i| ((i * 7 % 13) as f32 - 6.0) / 6.0).collect();
     let s = Strategy::new(StrategyKind::ThreeStep, Transport::Staged).unwrap();
-    let mk = |overlap| EngineConfig { use_pjrt: true, artifacts_dir: artifacts_dir(), overlap };
+    let mk = |overlap| EngineConfig { use_pjrt: true, artifacts_dir: artifacts_dir(), overlap, ..Default::default() };
     let mut e1 = Engine::new(&a, 8, &machine, s, &v, mk(true)).unwrap();
     let mut e2 = Engine::new(&a, 8, &machine, s, &v, mk(false)).unwrap();
     let w1 = e1.iterate(None).unwrap();

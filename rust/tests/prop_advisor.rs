@@ -1,0 +1,120 @@
+//! Advisor properties: interpolated surface lookups reproduce the direct
+//! Table 6 model evaluation bit for bit on lattice points, and off-lattice
+//! queries stay inside their regime line's time envelope.
+
+use hetcomm::advisor::{DecisionSurface, Pattern, SurfaceAxes};
+use hetcomm::model::StrategyModel;
+use hetcomm::pattern::generators::Scenario;
+use hetcomm::topology::machines;
+use hetcomm::util::prop::{check, Gen};
+
+const MACHINES: [&str; 3] = ["lassen", "frontier-like", "delta-like"];
+
+/// Small random strictly-ascending axes within the characterization ranges.
+fn random_axes(g: &mut Gen) -> SurfaceAxes {
+    fn pick(g: &mut Gen, pool: &[usize], n: usize) -> Vec<usize> {
+        let mut vals: Vec<usize> = Vec::new();
+        while vals.len() < n {
+            let v = *g.choose(pool);
+            if !vals.contains(&v) {
+                vals.push(v);
+            }
+        }
+        vals.sort_unstable();
+        vals
+    }
+    let (nm, ns, nd, ng) = (g.usize(2, 4), g.usize(3, 5), g.usize(1, 3), g.usize(1, 3));
+    SurfaceAxes {
+        msgs: pick(g, &[16, 32, 64, 128, 256, 512], nm),
+        sizes: pick(g, &[1 << 4, 1 << 8, 1 << 10, 1 << 12, 1 << 14, 1 << 18, 1 << 20], ns),
+        dest_nodes: pick(g, &[2, 4, 8, 16], nd),
+        gpus_per_node: pick(g, &[2, 4, 8], ng),
+    }
+}
+
+#[test]
+fn lattice_lookups_never_disagree_with_direct_model() {
+    check("surface lattice == StrategyModel", 20, |g| {
+        let machine_name = *g.choose(&MACHINES);
+        let dup = *g.choose(&[0.0, 0.25]);
+        let surface = DecisionSurface::compile(machine_name, random_axes(g), dup)?;
+        let (arch, params) = machines::parse(machine_name, 1).expect("registry machine");
+        for &m in &surface.axes.msgs {
+            for &d in &surface.axes.dest_nodes {
+                for &gpn in &surface.axes.gpus_per_node {
+                    let node = machines::with_shape(&arch, d + 1, gpn);
+                    let sm = StrategyModel::new(&node, &params);
+                    for &s in &surface.axes.sizes {
+                        let ranked = surface.lookup(&Pattern {
+                            n_msgs: m,
+                            msg_size: s,
+                            dest_nodes: d,
+                            gpus_per_node: gpn,
+                        });
+                        let sc = Scenario { n_msgs: m, msg_size: s, n_dest: d, dup_frac: dup };
+                        let inputs = sc.inputs(&node, node.cores_per_node());
+                        let mut model_min = f64::INFINITY;
+                        for (strategy, t_surface) in &ranked.ranked {
+                            let t_model = sm.time(*strategy, &inputs);
+                            if t_surface.to_bits() != t_model.to_bits() {
+                                return Err(format!(
+                                    "{machine_name} ({m} msgs x {s} B -> {d} nodes, {gpn} gpn): \
+                                     surface {t_surface} != model {t_model} for {}",
+                                    strategy.label()
+                                ));
+                            }
+                            model_min = model_min.min(t_model);
+                        }
+                        if ranked.best().1.to_bits() != model_min.to_bits() {
+                            return Err(format!(
+                                "surface best {} != model minimum {model_min}",
+                                ranked.best().1
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn off_lattice_lookups_stay_in_line_envelope() {
+    check("interpolation bounded by its regime line", 30, |g| {
+        let machine_name = *g.choose(&MACHINES);
+        let surface = DecisionSurface::compile(machine_name, random_axes(g), 0.0)?;
+        let axes = &surface.axes;
+        // interior (possibly off-lattice) msgs/size; exact dest/gpn
+        let q = Pattern {
+            n_msgs: g.usize(axes.msgs[0], axes.msgs[axes.msgs.len() - 1] + 1),
+            msg_size: g.usize(axes.sizes[0], axes.sizes[axes.sizes.len() - 1] + 1),
+            dest_nodes: *g.choose(&axes.dest_nodes),
+            gpus_per_node: *g.choose(&axes.gpus_per_node),
+        };
+        let ranked = surface.lookup(&q);
+        for (strategy, t) in &ranked.ranked {
+            if !t.is_finite() || *t <= 0.0 {
+                return Err(format!("{}: non-positive time {t}", strategy.label()));
+            }
+            // envelope: lattice times of the same strategy on the same
+            // (dest, gpn) line, over all msgs x sizes
+            let mut lo = f64::INFINITY;
+            let mut hi = 0f64;
+            for &m in &axes.msgs {
+                for &s in &axes.sizes {
+                    let at = surface
+                        .lookup(&Pattern { n_msgs: m, msg_size: s, ..q })
+                        .time_of(*strategy)
+                        .expect("strategy present on lattice");
+                    lo = lo.min(at);
+                    hi = hi.max(at);
+                }
+            }
+            if *t < lo * (1.0 - 1e-9) || *t > hi * (1.0 + 1e-9) {
+                return Err(format!("{}: {t} outside line envelope [{lo}, {hi}]", strategy.label()));
+            }
+        }
+        Ok(())
+    });
+}

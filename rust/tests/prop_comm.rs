@@ -35,6 +35,31 @@ fn required_internode_unique(machine: &Machine, p: &CommPattern) -> usize {
 }
 
 #[test]
+fn strategy_kind_parse_roundtrips_display() {
+    check("StrategyKind::parse inverts Display", 200, |g| {
+        let kind = *g.choose(&StrategyKind::ALL);
+        let shown = kind.to_string();
+        // the exact display name and any case-jittered variant must parse back
+        let jittered: String = shown
+            .chars()
+            .map(|c| if g.bool(0.5) { c.to_ascii_uppercase() } else { c.to_ascii_lowercase() })
+            .collect();
+        for cand in [shown.as_str(), jittered.as_str()] {
+            match StrategyKind::parse(cand) {
+                Some(k) if k == kind => {}
+                other => return Err(format!("{cand:?} parsed to {other:?}, want {kind:?}")),
+            }
+        }
+        // and full labels round-trip through Strategy::parse_label
+        let strategy = *g.choose(&Strategy::all());
+        if Strategy::parse_label(&strategy.label()) != Some(strategy) {
+            return Err(format!("label {:?} does not round-trip", strategy.label()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn internode_bytes_conserved_per_strategy() {
     check("internode bytes == unique requirement", 60, |g| {
         let machine = machine_for(g);
