@@ -88,6 +88,11 @@ pub struct Engine {
     cmd_tx: Vec<Sender<Cmd>>,
     out_rx: Receiver<Result<IterOut>>,
     handles: Vec<std::thread::JoinHandle<()>>,
+    /// The halo pattern the exchange plan was built from (fixed for the
+    /// engine's lifetime — partitions don't move).
+    pattern: crate::pattern::CommPattern,
+    /// Optional workload-trace recorder fed one snapshot per iteration.
+    recorder: Option<crate::trace::TraceRecorder>,
     pub stats: EngineStats,
 }
 
@@ -114,6 +119,21 @@ impl Engine {
         strategy: Strategy,
         v0: &[f32],
         config: EngineConfig,
+    ) -> Result<Engine> {
+        let pattern = pm.comm_pattern(machine, config.elem_size);
+        Engine::from_parts(pm, machine, strategy, v0, config, pattern)
+    }
+
+    /// The shared construction core; `pattern` must be the partitioning's
+    /// own halo pattern (auto mode already derived it for the advisor
+    /// query, so it is passed in rather than derived twice).
+    fn from_parts(
+        pm: PartitionedMatrix,
+        machine: &Machine,
+        strategy: Strategy,
+        v0: &[f32],
+        config: EngineConfig,
+        pattern: crate::pattern::CommPattern,
     ) -> Result<Engine> {
         let n = pm.partition.n;
         let nparts = pm.parts.len();
@@ -158,7 +178,33 @@ impl Engine {
             }));
         }
 
-        Ok(Engine { n, nparts, offsets, cmd_tx, out_rx, handles, stats: EngineStats::default() })
+        Ok(Engine {
+            n,
+            nparts,
+            offsets,
+            cmd_tx,
+            out_rx,
+            handles,
+            pattern,
+            recorder: None,
+            stats: EngineStats::default(),
+        })
+    }
+
+    /// The halo communication pattern this engine exchanges every iteration.
+    pub fn comm_pattern(&self) -> &crate::pattern::CommPattern {
+        &self.pattern
+    }
+
+    /// Attach a workload-trace recorder: every [`Engine::iterate`] call
+    /// observes the halo pattern (replacing any previous recorder).
+    pub fn attach_recorder(&mut self, recorder: crate::trace::TraceRecorder) {
+        self.recorder = Some(recorder);
+    }
+
+    /// Detach and return the recorder (if one was attached).
+    pub fn take_recorder(&mut self) -> Option<crate::trace::TraceRecorder> {
+        self.recorder.take()
     }
 
     /// `auto` strategy mode: derive the partitioned matrix's actual halo
@@ -180,10 +226,11 @@ impl Engine {
             machine.name
         );
         let pm = PartitionedMatrix::build(a, nparts);
-        let stats = pm.comm_pattern(machine, config.elem_size).stats(machine);
+        let pattern = pm.comm_pattern(machine, config.elem_size);
+        let stats = pattern.stats(machine);
         let query = crate::advisor::Pattern::from_stats(&stats, machine);
         let (strategy, _) = surface.lookup(&query).best();
-        Ok((Engine::from_partitioned(pm, machine, strategy, v0, config)?, strategy))
+        Ok((Engine::from_parts(pm, machine, strategy, v0, config, pattern)?, strategy))
     }
 
     /// Run one iteration: optionally scatter a new global vector first;
@@ -220,6 +267,9 @@ impl Engine {
         self.stats.wall_exchange += t_ex;
         self.stats.wall_compute += t_cp;
         self.stats.wall_total += t0.elapsed().as_secs_f64();
+        if let Some(recorder) = self.recorder.as_mut() {
+            recorder.observe(&self.pattern);
+        }
         Ok(w)
     }
 
@@ -617,6 +667,32 @@ mod tests {
         for (i, (x, y)) in expect.iter().zip(&w).enumerate() {
             assert!((x - y).abs() < 1e-3, "row {i}: {x} vs {y}");
         }
+    }
+
+    #[test]
+    fn engine_feeds_attached_recorder() {
+        use crate::trace::TraceRecorder;
+        let a = gen::stencil_5pt(8, 8);
+        let machine = lassen(2);
+        let v = vec![1f32; a.nrows];
+        let mut eng =
+            Engine::new(&a, 8, &machine, strategy(StrategyKind::ThreeStep), &v, EngineConfig::default()).unwrap();
+        assert!(!eng.comm_pattern().is_empty(), "8 parts must exchange a halo");
+        assert!(eng.take_recorder().is_none());
+        eng.attach_recorder(TraceRecorder::new("unit", &machine, 5));
+        for _ in 0..3 {
+            eng.iterate(None).unwrap();
+        }
+        let expected = eng.comm_pattern().clone();
+        let rec = eng.take_recorder().unwrap();
+        assert_eq!(rec.iterations(), 3);
+        let t = rec.finish().unwrap();
+        assert_eq!(t.epochs.len(), 1, "a fixed partition coalesces to one epoch");
+        assert_eq!(t.epochs[0].repeat, 3);
+        assert_eq!(t.epochs[0].pattern, expected);
+        // a detached recorder stops observing
+        assert!(eng.take_recorder().is_none());
+        eng.iterate(None).unwrap();
     }
 
     #[test]

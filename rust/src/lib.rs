@@ -40,6 +40,11 @@
 //!   decision surfaces (versioned JSON artifacts), a sharded LRU cache and
 //!   batch serving layer, and measurement-driven recalibration (the
 //!   `advise` subcommand and the coordinator's auto strategy mode).
+//! - [`trace`] — trace-driven workload replay: versioned
+//!   `hetcomm.trace.v1` recordings of per-iteration communication patterns,
+//!   synthetic evolving scenarios (AMR drift, sparsification, rebalance,
+//!   halo bursts), and a replay engine whose adaptive mode re-advises on
+//!   pattern drift (the `replay` subcommand and `sweep --trace`).
 //! - [`bench`] — the in-tree benchmark harness used by `rust/benches/*`.
 
 pub mod advisor;
@@ -54,6 +59,7 @@ pub mod sim;
 pub mod sparse;
 pub mod sweep;
 pub mod topology;
+pub mod trace;
 pub mod util;
 
 pub use advisor::{AdvisorService, DecisionSurface};
@@ -62,3 +68,4 @@ pub use params::{MachineParams, Protocol};
 pub use pattern::CommPattern;
 pub use sweep::{SweepConfig, SweepResult};
 pub use topology::{Locality, Machine};
+pub use trace::{Trace, TraceRecorder};

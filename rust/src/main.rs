@@ -8,6 +8,9 @@
 //!   crossover and regime reporting (JSON / CSV / table);
 //! - `advise`   — the online strategy advisor: compile decision surfaces,
 //!   answer cached queries, run the seeded burst benchmark, recalibrate;
+//! - `replay`   — trace-driven workload replay: synthesize / record / load
+//!   evolving communication traces and replay them under static or
+//!   drift-adaptive strategy policies;
 //! - `spmv`     — run the distributed SpMV benchmark on a matrix proxy;
 //! - `validate` — compare model predictions against simulated SpMV
 //!   communication (Figure 4.2);
@@ -32,6 +35,7 @@ fn main() {
         "model" => cmd_model(rest),
         "sweep" => cmd_sweep(rest),
         "advise" => cmd_advise(rest),
+        "replay" => cmd_replay(rest),
         "spmv" => cmd_spmv(rest),
         "validate" => cmd_validate(rest),
         "study" => cmd_study(rest),
@@ -60,6 +64,7 @@ SUBCOMMANDS:
   model      evaluate the Table 6 strategy models for a scenario
   sweep      parallel strategy sweep over the full characterization grid
   advise     online strategy advisor: compile / query / bench-burst / recalibrate
+  replay     trace-driven workload replay: record / synthesize / adapt online
   spmv       distributed SpMV communication benchmark (SuiteSparse proxies)
   validate   model-vs-simulation comparison (Figure 4.2)
   study      Section 6 outlook: strategy winners on future machines
@@ -169,6 +174,28 @@ fn parse_strategies(spec: &str) -> Result<Vec<Strategy>, String> {
     Ok(out)
 }
 
+/// Render a sweep result in `format` and deliver it to `out_path`
+/// (`'-'` = stdout). Shared by the grid and trace sweep paths. Returns the
+/// process exit code (0 on success).
+fn emit_sweep_result(result: &hetcomm::sweep::SweepResult, format: &str, out_path: &str) -> i32 {
+    let body = match format {
+        "json" => hetcomm::sweep::emit::to_json(result),
+        "csv" => hetcomm::sweep::emit::to_csv(result),
+        "table" => hetcomm::sweep::emit::render_tables(result),
+        other => {
+            eprintln!("unknown format {other:?} (table | json | csv)");
+            return 2;
+        }
+    };
+    if out_path == "-" {
+        print!("{body}");
+    } else if let Err(e) = std::fs::write(out_path, &body) {
+        eprintln!("cannot write {out_path}: {e}");
+        return 1;
+    }
+    0
+}
+
 fn cmd_sweep(argv: &[String]) -> i32 {
     let cli = Cli::new("hetcomm sweep", "parallel strategy sweep: model + simulator over the full grid")
         .flag("msgs", "256", "inter-node messages per scenario")
@@ -184,6 +211,7 @@ fn cmd_sweep(argv: &[String]) -> i32 {
         .flag("out", "-", "output path ('-' = stdout)")
         .flag("machine", "lassen", "machine preset (lassen | summit | frontier-like | delta-like)")
         .flag("emit-surface", "", "also compile the grid into an advisor surface artifact at this path")
+        .flag("trace", "", "sweep a recorded hetcomm.trace.v1 workload instead of the grid (epoch = cell)")
         .switch("tiny", "run the <10s smoke grid instead of the flag-defined grid")
         .switch("model-only", "skip the discrete-event simulator");
     let a = match cli.parse(argv) {
@@ -193,6 +221,62 @@ fn cmd_sweep(argv: &[String]) -> i32 {
             return 2;
         }
     };
+
+    // Trace-sourced sweep: the recorded epochs replace the generated grid,
+    // and the trace's own recorded machine replaces --machine.
+    if !a.get("trace").is_empty() {
+        let trace = match hetcomm::trace::persist::load(a.get("trace")) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("cannot load trace: {e}");
+                return 2;
+            }
+        };
+        if argv.iter().any(|t| t == "--machine" || t.starts_with("--machine=")) {
+            eprintln!("note: sweeping the trace on its recorded machine {:?} (--machine ignored)", trace.machine.name);
+        }
+        for flag in ["--msgs", "--dest", "--gpn", "--sizes", "--dup", "--gens", "--seed", "--tiny"] {
+            if argv.iter().any(|t| t == flag || t.starts_with(&format!("{flag}="))) {
+                eprintln!("note: {flag} shapes the generated grid; trace epochs are replayed verbatim (ignored)");
+            }
+        }
+        let strategies = match parse_strategies(a.get("strategies")) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        let threads = match a.get_usize("threads") {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("{}", e.0);
+                return 2;
+            }
+        };
+        let result = match hetcomm::sweep::run_sweep_trace(&trace, &strategies, threads, !a.get_bool("model-only")) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("trace sweep failed: {e}");
+                return 2;
+            }
+        };
+        let code = emit_sweep_result(&result, a.get("format"), a.get("out"));
+        if code != 0 {
+            return code;
+        }
+        eprintln!(
+            "swept {} trace epochs x {} strategies on {} threads in {:.3}s",
+            trace.epochs.len(),
+            strategies.len(),
+            result.threads_used,
+            result.elapsed_s
+        );
+        if !a.get("emit-surface").is_empty() {
+            eprintln!("note: --emit-surface needs a grid sweep (trace epochs define no lattice axes); skipped");
+        }
+        return 0;
+    }
 
     let grid = if a.get_bool("tiny") {
         hetcomm::sweep::GridSpec::tiny()
@@ -278,21 +362,9 @@ fn cmd_sweep(argv: &[String]) -> i32 {
         }
     };
 
-    let body = match a.get("format") {
-        "json" => hetcomm::sweep::emit::to_json(&result),
-        "csv" => hetcomm::sweep::emit::to_csv(&result),
-        "table" => hetcomm::sweep::emit::render_tables(&result),
-        other => {
-            eprintln!("unknown format {other:?} (table | json | csv)");
-            return 2;
-        }
-    };
-    let out_path = a.get("out");
-    if out_path == "-" {
-        print!("{body}");
-    } else if let Err(e) = std::fs::write(out_path, &body) {
-        eprintln!("cannot write {out_path}: {e}");
-        return 1;
+    let code = emit_sweep_result(&result, a.get("format"), a.get("out"));
+    if code != 0 {
+        return code;
     }
     eprintln!(
         "swept {} grid cells x {} strategies on {} threads in {:.3}s",
@@ -534,6 +606,243 @@ fn cmd_advise(argv: &[String]) -> i32 {
     if !did_something {
         eprintln!("nothing to do: pass --compile, --query, --bench-burst N, or --recalibrate (see --help)");
         return 2;
+    }
+    0
+}
+
+/// Parse a `--strategy` spec: a full Table 5 label (`"3-Step (device-aware)"`)
+/// or `kind[:transport]` shorthand (`split-md`, `3-step:device-aware`).
+fn parse_strategy_spec(spec: &str) -> Result<Strategy, String> {
+    if let Some(s) = Strategy::parse_label(spec) {
+        return Ok(s);
+    }
+    let (kind_s, transport_s) = match spec.split_once(':') {
+        Some((k, t)) => (k, Some(t)),
+        None => (spec, None),
+    };
+    let kind = StrategyKind::parse(kind_s)
+        .ok_or_else(|| format!("unknown strategy kind {kind_s:?} (standard, 3-step, 2-step, split-md, split-dd)"))?;
+    let transport = match transport_s {
+        None => Transport::Staged,
+        Some(t) => Transport::parse(t).ok_or_else(|| format!("unknown transport {t:?} (staged | device-aware)"))?,
+    };
+    Strategy::new(kind, transport).map_err(|e| e.to_string())
+}
+
+fn cmd_replay(argv: &[String]) -> i32 {
+    let cli = Cli::new("hetcomm replay", "trace-driven workload replay with online strategy adaptation")
+        .flag("scenario", "amr-drift", "synthetic scenario (amr-drift | sparsify | rebalance | halo-burst | stationary)")
+        .flag("trace", "", "load a hetcomm.trace.v1 artifact instead of synthesizing")
+        .switch("record", "record a distributed-SpMV proxy run through the persistent engine instead of synthesizing")
+        .flag("matrix", "audikw_1", "record: SuiteSparse proxy matrix")
+        .flag("scale", "256", "record: proxy row divisor")
+        .flag("gpus", "8", "record: partition count")
+        .flag("nodes", "2", "record: cluster nodes")
+        .flag("iters", "4", "record: iterations to record")
+        .flag("machine", "lassen", "scenario/record: machine preset (lassen | summit | frontier-like | delta-like)")
+        .flag("epochs", "5", "scenario: epoch (plateau) count")
+        .flag("repeat", "0", "scenario: iterations per epoch (0 = scenario default)")
+        .flag("seed", "42", "scenario: message-order shuffle seed (recorded in the trace)")
+        .flag("out", "", "write the trace as a hetcomm.trace.v1 artifact at this path")
+        .switch("replay", "replay the trace (implied by --adaptive / --strategy; adaptive is the default policy)")
+        .switch("adaptive", "adaptive policy: re-advise whenever drift exceeds --threshold")
+        .flag("strategy", "", "static policy: kind[:transport], e.g. split-md or 3-step:device-aware")
+        .flag("surface", "", "adaptive: advise from this compiled surface artifact (default: exact Table 6 ranking)")
+        .flag("threshold", "0.25", "adaptive: drift threshold in |log2| units")
+        .switch("sim", "also run each epoch's chosen schedule through the discrete-event simulator")
+        .flag("format", "table", "report format: table | json")
+        .flag("report", "-", "report output path ('-' = stdout)")
+        .flag("min-win", "", "exit nonzero unless the win vs the best static strategy is >= this fraction");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{}", e.0);
+            return 2;
+        }
+    };
+
+    if !a.get("trace").is_empty() && a.get_bool("record") {
+        eprintln!("--trace and --record are mutually exclusive (load a trace or record one, not both)");
+        return 2;
+    }
+
+    // 1. Acquire the trace: load, record, or synthesize.
+    let trace = if !a.get("trace").is_empty() {
+        match hetcomm::trace::persist::load(a.get("trace")) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("cannot load trace: {e}");
+                return 2;
+            }
+        }
+    } else {
+        let seed = match a.get_u64("seed") {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("{}", e.0);
+                return 2;
+            }
+        };
+        if a.get_bool("record") {
+            let parts = (a.get_usize("scale"), a.get_usize("gpus"), a.get_usize("nodes"), a.get_usize("iters"));
+            let (scale, gpus, nodes, iters) = match parts {
+                (Ok(s), Ok(g), Ok(n), Ok(i)) => (s, g, n, i),
+                (Err(e), ..) | (_, Err(e), ..) | (_, _, Err(e), _) | (.., Err(e)) => {
+                    eprintln!("{}", e.0);
+                    return 2;
+                }
+            };
+            let Some((machine, _)) = machines::parse(a.get("machine"), nodes) else {
+                eprintln!("unknown machine {:?}; known: {:?}", a.get("machine"), machines::NAMES);
+                return 2;
+            };
+            match hetcomm::trace::record::record_spmv(a.get("matrix"), scale, gpus, &machine, iters, seed) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("recording failed: {e}");
+                    return 1;
+                }
+            }
+        } else {
+            let Some(scenario) = hetcomm::trace::TraceScenario::parse(a.get("scenario")) else {
+                eprintln!(
+                    "unknown scenario {:?}; known: {:?}",
+                    a.get("scenario"),
+                    hetcomm::trace::TraceScenario::ALL.map(|s| s.label())
+                );
+                return 2;
+            };
+            let (epochs, repeat) = match (a.get_usize("epochs"), a.get_usize("repeat")) {
+                (Ok(e), Ok(r)) => (e, r),
+                (Err(e), _) | (_, Err(e)) => {
+                    eprintln!("{}", e.0);
+                    return 2;
+                }
+            };
+            match hetcomm::trace::synthesize(scenario, a.get("machine"), epochs, repeat, seed) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("cannot synthesize {scenario}: {e}");
+                    return 2;
+                }
+            }
+        }
+    };
+
+    // 2. Persist the trace when asked.
+    if !a.get("out").is_empty() {
+        if let Err(e) = hetcomm::trace::persist::save(&trace, a.get("out")) {
+            eprintln!("{e}");
+            return 1;
+        }
+        eprintln!(
+            "wrote trace {}: {} epochs, {} iterations -> {}",
+            trace.scenario,
+            trace.epochs.len(),
+            trace.iterations(),
+            a.get("out")
+        );
+    }
+
+    // 3. Replay unless this was a record/synthesize-only invocation
+    //    (--min-win asserts on and --surface configures the replay, so
+    //    either forces it too).
+    let static_spec = a.get("strategy");
+    let wants_replay = a.get_bool("replay")
+        || a.get_bool("adaptive")
+        || !static_spec.is_empty()
+        || !a.get("min-win").is_empty()
+        || !a.get("surface").is_empty()
+        || a.get("out").is_empty();
+    if !wants_replay {
+        return 0;
+    }
+    if a.get_bool("adaptive") && !static_spec.is_empty() {
+        eprintln!("--adaptive and --strategy are mutually exclusive policies");
+        return 2;
+    }
+    let surface = if a.get("surface").is_empty() {
+        None
+    } else {
+        match hetcomm::advisor::persist::load(a.get("surface")) {
+            Ok(s) => Some(s),
+            Err(e) => {
+                eprintln!("cannot load surface: {e}");
+                return 2;
+            }
+        }
+    };
+    let static_strategy = if static_spec.is_empty() {
+        None
+    } else {
+        if surface.is_some() {
+            eprintln!("--surface only applies to the adaptive policy");
+            return 2;
+        }
+        match parse_strategy_spec(static_spec) {
+            Ok(s) => Some(s),
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    };
+    let mode = match &static_strategy {
+        Some(s) => hetcomm::trace::ReplayMode::Static(*s),
+        None => hetcomm::trace::ReplayMode::Adaptive { surface: surface.as_ref() },
+    };
+    let threshold = match a.get_f64("threshold") {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("{}", e.0);
+            return 2;
+        }
+    };
+    let config = hetcomm::trace::replay::ReplayConfig { drift_threshold: threshold, sim: a.get_bool("sim") };
+    let report = match hetcomm::trace::replay(&trace, &mode, &config) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("replay failed: {e}");
+            return 1;
+        }
+    };
+
+    let body = match a.get("format") {
+        "json" => hetcomm::trace::replay::report_to_json(&report),
+        "table" => hetcomm::trace::replay::render_report(&report),
+        other => {
+            eprintln!("unknown format {other:?} (table | json)");
+            return 2;
+        }
+    };
+    let report_path = a.get("report");
+    if report_path == "-" {
+        print!("{body}");
+    } else if let Err(e) = std::fs::write(report_path, &body) {
+        eprintln!("cannot write {report_path}: {e}");
+        return 1;
+    }
+    eprintln!(
+        "replayed {} ({}): {} iterations, {} switches, win vs best static {:+.2}%",
+        report.scenario,
+        report.mode,
+        report.iterations,
+        report.switches.len(),
+        report.win_vs_best_static * 100.0
+    );
+
+    if !a.get("min-win").is_empty() {
+        let min_win = match a.get_f64("min-win") {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("{}", e.0);
+                return 2;
+            }
+        };
+        if report.win_vs_best_static < min_win {
+            eprintln!("win {:.4} below required {min_win}", report.win_vs_best_static);
+            return 1;
+        }
     }
     0
 }

@@ -1,7 +1,8 @@
 //! Discrete-event cluster simulator — the testbed substitute.
 //!
-//! The simulator executes a communication [`Schedule`] against a
-//! [`Machine`] with the paper's measured [`MachineParams`]:
+//! The simulator executes a communication [`crate::comm::Schedule`] against
+//! a [`crate::topology::Machine`] with the paper's measured
+//! [`crate::params::MachineParams`]:
 //!
 //! - every endpoint (host process or GPU) is a serial resource — its
 //!   transfers and copies queue;

@@ -141,6 +141,130 @@ pub fn run_sweep(config: &SweepConfig) -> Result<SweepResult, String> {
     })
 }
 
+/// Sweep a recorded workload trace instead of a generated grid: every
+/// epoch becomes one cell (`index` = epoch index), evaluated for every
+/// strategy through the Table 6 models on the epoch's *measured* pattern
+/// statistics — and optionally the discrete-event simulator — on the
+/// trace's own machine. The cell's `size` / `dest_nodes` labels are the
+/// epoch's dominant regime coordinates (mean message size of the heaviest
+/// node pair, node volume over pair volume), so the winner/crossover
+/// report reads as a regime timeline of the recorded run.
+///
+/// Deterministic like [`run_sweep`]: epochs are fanned out over the pool
+/// and re-sorted into trace order, so thread count never changes bits.
+pub fn run_sweep_trace(
+    trace: &crate::trace::Trace,
+    strategies: &[Strategy],
+    threads: usize,
+    with_sim: bool,
+) -> Result<SweepResult, String> {
+    trace.validate()?;
+    if strategies.is_empty() {
+        return Err("no strategies selected".into());
+    }
+    let params = trace
+        .params()
+        .ok_or_else(|| format!("trace machine {:?} resolves to no registry parameters", trace.machine.name))?;
+    let machine = &trace.machine;
+    let t0 = Instant::now();
+    let threads = effective_threads(threads, trace.epochs.len());
+    // one stats pass serves the workers and the config echo below
+    let epoch_stats = trace.epoch_stats();
+
+    let next = AtomicUsize::new(0);
+    let collected: Mutex<Vec<(usize, Vec<CellResult>)>> = Mutex::new(Vec::with_capacity(trace.epochs.len()));
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= trace.epochs.len() {
+                    break;
+                }
+                let result = eval_epoch(machine, &params, strategies, &trace.epochs[i], &epoch_stats[i], with_sim);
+                collected.lock().unwrap().push((i, result));
+            });
+        }
+    });
+    let mut collected = collected.into_inner().unwrap();
+    collected.sort_unstable_by_key(|&(i, _)| i);
+    let cells_out: Vec<CellResult> = collected.into_iter().flat_map(|(_, r)| r).collect();
+    let report = analyze(&cells_out);
+
+    // Echo a synthetic config so the emitters can label the run; the grid
+    // axes summarize the epochs (never validated or re-swept).
+    let mut sizes: Vec<usize> = cells_out.iter().map(|c| c.size).collect();
+    sizes.sort_unstable();
+    sizes.dedup();
+    let mut dest_nodes: Vec<usize> = cells_out.iter().map(|c| c.dest_nodes).collect();
+    dest_nodes.sort_unstable();
+    dest_nodes.dedup();
+    let config = SweepConfig {
+        grid: GridSpec {
+            gens: vec![PatternGen::Trace],
+            dest_nodes,
+            gpus_per_node: vec![machine.gpus_per_node()],
+            sizes,
+            n_msgs: epoch_stats.iter().map(|s| s.total_internode_msgs).max().unwrap_or(0),
+            dup_frac: 0.0,
+        },
+        strategies: strategies.to_vec(),
+        seed: trace.seed,
+        threads,
+        sim: with_sim,
+        machine: trace.machine.name.clone(),
+    };
+    Ok(SweepResult { config, cells: cells_out, report, threads_used: threads, elapsed_s: t0.elapsed().as_secs_f64() })
+}
+
+/// Evaluate one trace epoch against every strategy (the trace analogue of
+/// [`eval_cell`], with measured stats instead of grid-derived inputs).
+/// `stats` must be the epoch's own precomputed pattern statistics.
+fn eval_epoch(
+    machine: &Machine,
+    params: &MachineParams,
+    strategies: &[Strategy],
+    epoch: &crate::trace::Epoch,
+    stats: &crate::pattern::PatternStats,
+    with_sim: bool,
+) -> Vec<CellResult> {
+    let sm = StrategyModel::new(machine, params);
+    let dup = epoch.pattern.duplicate_fraction(machine);
+    let inputs = ModelInputs {
+        s_proc: stats.s_proc,
+        s_node: stats.s_node,
+        s_n2n: stats.s_n2n,
+        m_p2n: stats.m_p2n,
+        m_n2n: stats.m_n2n,
+        m_std: stats.m_std,
+        ppn: machine.cores_per_node(),
+        dup_frac: dup,
+    };
+    let size = if stats.m_n2n > 0 { (stats.s_n2n / stats.m_n2n).max(1) } else { 1 };
+    let dest_nodes = if stats.s_n2n > 0 { (stats.s_node / stats.s_n2n).max(1) } else { 1 };
+    let mut out = Vec::with_capacity(strategies.len());
+    for &strategy in strategies {
+        let model_s = sm.time(strategy, &inputs);
+        let sim_s = with_sim.then(|| {
+            let schedule = build_schedule(strategy, machine, &epoch.pattern);
+            sim::run(machine, params, &schedule, strategy.sim_ppn(machine)).total
+        });
+        let model_err = sim_s.and_then(|t| if t > 0.0 { Some((model_s - t).abs() / t) } else { None });
+        out.push(CellResult {
+            index: epoch.index,
+            gen: PatternGen::Trace,
+            dest_nodes,
+            gpus_per_node: machine.gpus_per_node(),
+            size,
+            strategy,
+            label: strategy.label(),
+            model_s,
+            sim_s,
+            model_err,
+        });
+    }
+    out
+}
+
 /// Evaluate one grid cell: build the pattern once, then model (and
 /// optionally simulate) every strategy against it.
 fn eval_cell(cfg: &SweepConfig, arch: &Machine, params: &MachineParams, cell: &CellSpec) -> Vec<CellResult> {
@@ -174,6 +298,7 @@ fn eval_cell(cfg: &SweepConfig, arch: &Machine, params: &MachineParams, cell: &C
             let dup = pattern.duplicate_fraction(&machine);
             (pattern.model_inputs(&machine, ppn, dup), cfg.sim.then_some(pattern))
         }
+        PatternGen::Trace => unreachable!("GridSpec::validate rejects trace generators on grids"),
     };
 
     let mut out = Vec::with_capacity(cfg.strategies.len());
@@ -319,6 +444,32 @@ mod tests {
         for (a, b) in frontier.cells.iter().zip(&alias.cells) {
             assert_eq!(a.model_s.to_bits(), b.model_s.to_bits());
         }
+    }
+
+    #[test]
+    fn trace_sweep_covers_epochs_and_is_thread_invariant() {
+        use crate::trace::scenarios::{synthesize, TraceScenario};
+        let trace = synthesize(TraceScenario::HaloBurst, "lassen", 4, 1, 9).unwrap();
+        let r1 = run_sweep_trace(&trace, &Strategy::all(), 1, false).unwrap();
+        assert_eq!(r1.cells.len(), 4 * Strategy::all().len());
+        assert!(r1.cells.iter().all(|c| c.gen == PatternGen::Trace));
+        assert!(r1.cells.iter().all(|c| c.model_s.is_finite() && c.model_s > 0.0));
+        // epoch regime labels: calm epochs are 2 KiB, burst epochs 64 KiB
+        assert_eq!(r1.cells[0].size, 2048);
+        assert_eq!(r1.cells[Strategy::all().len()].size, 1 << 16);
+        // the winner timeline flips between calm and burst regimes
+        let w = &r1.report.winners;
+        assert_eq!(w.len(), 4);
+        assert_ne!(w[0].winner, w[1].winner, "calm and burst regimes have different winners");
+        assert_eq!(w[0].winner, w[2].winner);
+        assert!(!r1.report.crossovers.is_empty());
+        let r4 = run_sweep_trace(&trace, &Strategy::all(), 4, false).unwrap();
+        cmp_cells(&r1.cells, &r4.cells);
+        // config echo labels the run as a trace sweep
+        assert_eq!(r1.config.grid.gens, vec![PatternGen::Trace]);
+        assert_eq!(r1.config.machine, "lassen");
+        // empty strategy lists are rejected like grid sweeps
+        assert!(run_sweep_trace(&trace, &[], 1, false).is_err());
     }
 
     #[test]

@@ -14,15 +14,23 @@ pub enum PatternGen {
     /// with sizes log-uniform in `[1, size]`, seeded per cell; `dup_frac`
     /// acts as the duplicate-reuse probability.
     Random,
+    /// A recorded workload epoch ([`crate::trace::Trace`]): the pattern is
+    /// replayed verbatim, not generated from the grid axes — cells of this
+    /// kind come from [`super::engine::run_sweep_trace`], never from a
+    /// [`GridSpec`].
+    Trace,
 }
 
 impl PatternGen {
+    /// The generators constructible from grid axes ([`PatternGen::Trace`]
+    /// patterns come from recorded traces instead).
     pub const ALL: [PatternGen; 2] = [PatternGen::Uniform, PatternGen::Random];
 
     pub fn label(&self) -> &'static str {
         match self {
             PatternGen::Uniform => "uniform",
             PatternGen::Random => "random",
+            PatternGen::Trace => "trace",
         }
     }
 
@@ -31,6 +39,7 @@ impl PatternGen {
         match s.trim().to_ascii_lowercase().as_str() {
             "uniform" | "scenario" => Some(PatternGen::Uniform),
             "random" | "irregular" => Some(PatternGen::Random),
+            "trace" => Some(PatternGen::Trace),
             _ => None,
         }
     }
@@ -107,6 +116,9 @@ impl GridSpec {
     pub fn validate(&self) -> Result<(), String> {
         if self.gens.is_empty() {
             return Err("no pattern generators selected".into());
+        }
+        if self.gens.contains(&PatternGen::Trace) {
+            return Err("trace patterns replay recorded workloads (sweep --trace), they cannot be grid-generated".into());
         }
         if self.dest_nodes.is_empty() || self.dest_nodes.iter().any(|&d| d == 0) {
             return Err("destination-node counts must be non-empty and positive".into());
@@ -243,9 +255,17 @@ mod tests {
     fn pattern_gen_parse() {
         assert_eq!(PatternGen::parse("uniform"), Some(PatternGen::Uniform));
         assert_eq!(PatternGen::parse("Random"), Some(PatternGen::Random));
+        assert_eq!(PatternGen::parse("trace"), Some(PatternGen::Trace));
         assert_eq!(PatternGen::parse("bogus"), None);
         for g in PatternGen::ALL {
             assert_eq!(PatternGen::parse(g.label()), Some(g));
         }
+    }
+
+    #[test]
+    fn trace_gen_rejected_on_grids() {
+        let mut g = GridSpec::default();
+        g.gens.push(PatternGen::Trace);
+        assert!(g.validate().unwrap_err().contains("trace"));
     }
 }

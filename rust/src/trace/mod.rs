@@ -1,0 +1,270 @@
+//! Trace-driven workload replay — the time axis of the model study.
+//!
+//! The paper characterizes *static* communication patterns: one snapshot of
+//! who sends what to whom, one regime, one winning strategy. Real irregular
+//! workloads (AMR refinement fronts, progressively sparsifying operators,
+//! rebalancing after node failure, bursty halo growth) *drift* across
+//! regimes mid-run — which is exactly where re-selecting the strategy
+//! online pays off. This module records, synthesizes and replays such
+//! evolving workloads:
+//!
+//! - a [`Trace`] is a versioned sequence of [`Epoch`]s, each a
+//!   [`crate::pattern::CommPattern`] snapshot plus a repeat count (how many
+//!   iterations the pattern persisted) — the `hetcomm.trace.v1` artifact of
+//!   [`persist`];
+//! - [`record::TraceRecorder`] captures epochs from live runs: the
+//!   coordinator's persistent engine observes its halo pattern every
+//!   [`crate::coordinator::Engine::iterate`] call, and
+//!   [`record::record_spmv`] drives a SuiteSparse-proxy SpMV through it;
+//! - [`scenarios`] synthesizes evolving workloads (AMR-style refinement
+//!   fronts, progressive sparsification, node-failure rebalance, bursty
+//!   halo growth) on top of [`crate::pattern::generators`];
+//! - [`mod@replay`] drives each epoch through the Table 6 models (and
+//!   optionally the discrete-event simulator) under a static strategy or an
+//!   *adaptive* advisor that re-advises whenever the pattern drifts past a
+//!   threshold, reporting per-epoch strategy switches and the cumulative
+//!   win against the best and worst static strategies.
+//!
+//! Exposed on the CLI as `hetcomm replay` (`--scenario`, `--record`,
+//! `--trace`, `--adaptive`, `--strategy`, `--surface`); `hetcomm sweep
+//! --trace` accepts a recorded trace as the pattern source. Everything is
+//! deterministic under a fixed seed: two runs produce byte-identical trace
+//! artifacts and replay reports.
+
+pub mod persist;
+pub mod record;
+pub mod replay;
+pub mod scenarios;
+
+use crate::params::MachineParams;
+use crate::pattern::{CommPattern, PatternStats};
+use crate::topology::{machines, Machine};
+
+pub use record::TraceRecorder;
+pub use replay::{replay, ReplayMode, ReplayReport};
+pub use scenarios::{synthesize, TraceScenario};
+
+/// Default drift threshold for adaptive replay: re-advise when any tracked
+/// pattern statistic moves by more than a quarter of a binary order of
+/// magnitude (~19%) between epochs.
+pub const DEFAULT_DRIFT_THRESHOLD: f64 = 0.25;
+
+/// One plateau of a workload: a communication pattern that stayed fixed for
+/// `repeat` consecutive iterations.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Epoch {
+    /// Position in the trace (contiguous from 0).
+    pub index: usize,
+    /// Free-form provenance label (`"level2"`, `"burst"`, `"spmv"`, …).
+    pub tag: String,
+    /// Iterations this pattern persisted (>= 1).
+    pub repeat: usize,
+    /// The GPU→GPU payload multiset of one iteration.
+    pub pattern: CommPattern,
+}
+
+/// A recorded or synthesized workload: the machine it ran on plus the
+/// sequence of pattern plateaus, in time order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    /// Scenario or provenance name (`"amr-drift"`, `"spmv:audikw_1"`, …).
+    pub scenario: String,
+    /// Seed the trace was generated under (provenance; recorded traces keep
+    /// the seed of the run that produced them).
+    pub seed: u64,
+    /// The machine the pattern's GPU ids index into.
+    pub machine: Machine,
+    pub epochs: Vec<Epoch>,
+}
+
+impl Trace {
+    /// Structural sanity (used after artifact loads and before replay);
+    /// returns a user-facing message on failure.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.epochs.is_empty() {
+            return Err("trace has no epochs".into());
+        }
+        if self.machine.num_nodes == 0
+            || self.machine.sockets_per_node == 0
+            || self.machine.cores_per_socket == 0
+            || self.machine.gpus_per_socket == 0
+        {
+            return Err(format!("degenerate trace machine {:?}", self.machine.name));
+        }
+        let total_gpus = self.machine.total_gpus();
+        for (k, e) in self.epochs.iter().enumerate() {
+            if e.index != k {
+                return Err(format!("epoch {k} carries index {} (must be contiguous from 0)", e.index));
+            }
+            if e.repeat == 0 {
+                return Err(format!("epoch {k} has repeat 0"));
+            }
+            for (i, m) in e.pattern.msgs.iter().enumerate() {
+                if m.src.0 >= total_gpus || m.dst.0 >= total_gpus {
+                    return Err(format!(
+                        "epoch {k} msg {i}: endpoint outside the {total_gpus}-GPU machine ({} -> {})",
+                        m.src.0, m.dst.0
+                    ));
+                }
+                if m.src == m.dst {
+                    return Err(format!("epoch {k} msg {i}: self-message on GPU {}", m.src.0));
+                }
+                if m.bytes == 0 {
+                    return Err(format!("epoch {k} msg {i}: zero-byte message"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Total iterations across all epochs.
+    pub fn iterations(&self) -> usize {
+        self.epochs.iter().map(|e| e.repeat).sum()
+    }
+
+    /// Table 7 statistics of every epoch against the trace machine.
+    pub fn epoch_stats(&self) -> Vec<PatternStats> {
+        self.epochs.iter().map(|e| e.pattern.stats(&self.machine)).collect()
+    }
+
+    /// Per-epoch drift from the previous epoch ([`drift_between`]); epoch 0
+    /// is 0 by convention.
+    pub fn drifts(&self) -> Vec<f64> {
+        Trace::drifts_from(&self.epoch_stats())
+    }
+
+    /// [`Trace::drifts`] over precomputed per-epoch statistics — callers
+    /// that already hold [`Trace::epoch_stats`] (the artifact emitter and
+    /// parser) avoid a second full-pattern pass.
+    pub fn drifts_from(stats: &[PatternStats]) -> Vec<f64> {
+        let mut out = vec![0.0; stats.len()];
+        for k in 1..stats.len() {
+            out[k] = drift_between(&stats[k - 1], &stats[k]);
+        }
+        out
+    }
+
+    /// Modeling parameters for the trace machine: an exact registry match
+    /// ([`machines::parse`]), or the longest registry prefix of the name
+    /// (recorded sweep machines carry shape suffixes like `"lassen-g4"`).
+    pub fn params(&self) -> Option<MachineParams> {
+        if let Some((_, p)) = machines::parse(&self.machine.name, 1) {
+            return Some(p);
+        }
+        machines::NAMES
+            .iter()
+            .filter(|n| self.machine.name.starts_with(*n))
+            .max_by_key(|n| n.len())
+            .and_then(|n| machines::parse(n, 1))
+            .map(|(_, p)| p)
+    }
+}
+
+/// Drift between two pattern snapshots: the largest absolute log₂ change
+/// across the regime-defining statistics (inter-node message count and
+/// volume, node and node-pair injection, per-process message count,
+/// destination spread). `+1` smoothing keeps empty patterns finite; 1.0
+/// means "some statistic roughly doubled or halved".
+pub fn drift_between(prev: &PatternStats, cur: &PatternStats) -> f64 {
+    let pairs = [
+        (prev.total_internode_msgs, cur.total_internode_msgs),
+        (prev.total_internode_bytes, cur.total_internode_bytes),
+        (prev.s_node, cur.s_node),
+        (prev.s_n2n, cur.s_n2n),
+        (prev.m_std, cur.m_std),
+        (prev.m_p2n, cur.m_p2n),
+    ];
+    let mut worst = 0f64;
+    for (a, b) in pairs {
+        // larger-over-smaller keeps the measure exactly symmetric (an
+        // |log2(a/b)| of the raw ratio can differ from |log2(b/a)| by an
+        // ulp, which would break the bit-exact artifact self-check under
+        // trace reversal)
+        let (hi, lo) = if a >= b { (a + 1, b + 1) } else { (b + 1, a + 1) };
+        let d = ((hi as f64) / (lo as f64)).log2();
+        worst = worst.max(d);
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::generators::Scenario;
+    use crate::pattern::Msg;
+    use crate::topology::machines::lassen;
+    use crate::topology::GpuId;
+
+    fn scenario_trace() -> Trace {
+        let machine = lassen(17);
+        let epochs = [(64usize, 4096usize, 4usize), (128, 2048, 8)]
+            .iter()
+            .enumerate()
+            .map(|(k, &(n_msgs, msg_size, n_dest))| Epoch {
+                index: k,
+                tag: format!("e{k}"),
+                repeat: 2,
+                pattern: Scenario { n_msgs, msg_size, n_dest, dup_frac: 0.0 }.materialize(&machine),
+            })
+            .collect();
+        Trace { scenario: "test".into(), seed: 7, machine, epochs }
+    }
+
+    #[test]
+    fn valid_trace_passes_and_counts() {
+        let t = scenario_trace();
+        t.validate().unwrap();
+        assert_eq!(t.iterations(), 4);
+        assert_eq!(t.epoch_stats().len(), 2);
+    }
+
+    #[test]
+    fn validation_rejects_structural_faults() {
+        let mut t = scenario_trace();
+        t.epochs[1].index = 5;
+        assert!(t.validate().unwrap_err().contains("contiguous"));
+
+        let mut t = scenario_trace();
+        t.epochs[0].repeat = 0;
+        assert!(t.validate().unwrap_err().contains("repeat"));
+
+        let mut t = scenario_trace();
+        t.epochs.clear();
+        assert!(t.validate().is_err());
+
+        let mut t = scenario_trace();
+        let gpus = t.machine.total_gpus();
+        t.epochs[0].pattern.push(Msg::new(GpuId(0), GpuId(gpus), 8));
+        assert!(t.validate().unwrap_err().contains("outside"));
+
+        let mut t = scenario_trace();
+        t.epochs[0].pattern.push(Msg::new(GpuId(3), GpuId(3), 8));
+        assert!(t.validate().unwrap_err().contains("self-message"));
+    }
+
+    #[test]
+    fn drift_is_symmetric_zero_on_identity_and_scales() {
+        let t = scenario_trace();
+        let stats = t.epoch_stats();
+        assert_eq!(drift_between(&stats[0], &stats[0]), 0.0);
+        let fwd = drift_between(&stats[0], &stats[1]);
+        let back = drift_between(&stats[1], &stats[0]);
+        assert_eq!(fwd, back);
+        // 64 -> 128 msgs roughly doubles the message statistics
+        assert!(fwd > 0.9 && fwd < 1.1, "drift {fwd}");
+        assert_eq!(t.drifts()[0], 0.0);
+        assert_eq!(t.drifts()[1], fwd);
+    }
+
+    #[test]
+    fn params_resolve_registry_and_shape_suffixed_names() {
+        let mut t = scenario_trace();
+        assert!(t.params().is_some());
+        t.machine.name = "lassen-g4".into();
+        assert!(t.params().is_some());
+        t.machine.name = "frontier-like-g8".into();
+        assert!(t.params().is_some());
+        t.machine.name = "mystery".into();
+        assert!(t.params().is_none());
+    }
+}

@@ -1,0 +1,228 @@
+//! Versioned JSON artifacts for workload traces (`hetcomm.trace.v1`).
+//!
+//! An epoch's messages are stored verbatim as `[src, dst, bytes,
+//! dup_group]` quadruples; every artifact additionally carries *derived*
+//! drift metadata per epoch (the regime-defining Table 7 statistics and the
+//! drift from the previous epoch). The metadata is self-checking: the
+//! parser recomputes it from the message lists and rejects an artifact
+//! whose stored values disagree bit for bit, so hand-edited or truncated
+//! traces fail loudly instead of replaying under a mislabeled regime.
+//! Emit∘parse∘emit is the identity on bytes ([`crate::util::json`]).
+
+use super::{Epoch, Trace};
+use crate::pattern::{CommPattern, Msg};
+use crate::sweep::emit::esc;
+use crate::topology::{GpuId, Machine};
+use crate::util::json::{fmt_f64, Json};
+use std::fmt::Write as _;
+
+/// Artifact schema identifier; bump on layout changes.
+pub const SCHEMA: &str = "hetcomm.trace.v1";
+
+/// Serialize a trace as a versioned JSON artifact.
+pub fn to_json(trace: &Trace) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    let _ = writeln!(out, "  \"schema\": \"{SCHEMA}\",");
+    let _ = writeln!(out, "  \"scenario\": \"{}\",", esc(&trace.scenario));
+    // the seed is a string: u64 values above 2^53 would not survive a
+    // JSON-number round trip through f64
+    let _ = writeln!(out, "  \"seed\": \"{}\",", trace.seed);
+    let m = &trace.machine;
+    let _ = writeln!(
+        out,
+        "  \"machine\": {{\"name\": \"{}\", \"num_nodes\": {}, \"sockets_per_node\": {}, \
+         \"cores_per_socket\": {}, \"gpus_per_socket\": {}}},",
+        esc(&m.name),
+        m.num_nodes,
+        m.sockets_per_node,
+        m.cores_per_socket,
+        m.gpus_per_socket
+    );
+    out.push_str("  \"epochs\": [\n");
+    let stats = trace.epoch_stats();
+    let drifts = Trace::drifts_from(&stats);
+    for (k, e) in trace.epochs.iter().enumerate() {
+        let st = &stats[k];
+        out.push_str("    {");
+        let _ = write!(out, "\"index\": {}, \"tag\": \"{}\", \"repeat\": {},", e.index, esc(&e.tag), e.repeat);
+        let _ = write!(
+            out,
+            " \"drift\": {}, \"stats\": {{\"msgs\": {}, \"bytes\": {}, \"s_node\": {}, \"s_n2n\": {}, \
+             \"m_std\": {}, \"m_p2n\": {}}},",
+            fmt_f64(drifts[k]),
+            st.total_internode_msgs,
+            st.total_internode_bytes,
+            st.s_node,
+            st.s_n2n,
+            st.m_std,
+            st.m_p2n
+        );
+        out.push_str(" \"msgs\": [");
+        for (i, msg) in e.pattern.msgs.iter().enumerate() {
+            let comma = if i + 1 < e.pattern.msgs.len() { ", " } else { "" };
+            let _ = write!(out, "[{}, {}, {}, {}]{comma}", msg.src.0, msg.dst.0, msg.bytes, msg.dup_group);
+        }
+        let comma = if k + 1 < trace.epochs.len() { "," } else { "" };
+        let _ = writeln!(out, "]}}{comma}");
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write an artifact to disk.
+pub fn save(trace: &Trace, path: &str) -> Result<(), String> {
+    std::fs::write(path, to_json(trace)).map_err(|e| format!("cannot write {path}: {e}"))
+}
+
+/// Load and validate an artifact from disk.
+pub fn load(path: &str) -> Result<Trace, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+    parse_json(&text)
+}
+
+/// Parse and validate an artifact, including the drift-metadata self-check.
+pub fn parse_json(text: &str) -> Result<Trace, String> {
+    let value = Json::parse(text)?;
+    let schema = value.field("schema")?.as_str()?;
+    if schema != SCHEMA {
+        return Err(format!("unsupported trace schema {schema:?} (expected {SCHEMA:?})"));
+    }
+    let m = value.field("machine")?;
+    let machine = Machine {
+        name: m.field("name")?.as_str()?.to_string(),
+        num_nodes: m.field("num_nodes")?.as_usize()?,
+        sockets_per_node: m.field("sockets_per_node")?.as_usize()?,
+        cores_per_socket: m.field("cores_per_socket")?.as_usize()?,
+        gpus_per_socket: m.field("gpus_per_socket")?.as_usize()?,
+    };
+    let mut epochs = Vec::new();
+    let mut declared: Vec<(f64, [usize; 6])> = Vec::new();
+    for e in value.field("epochs")?.as_arr()? {
+        let mut msgs = Vec::new();
+        for q in e.field("msgs")?.as_arr()? {
+            let quad = q.as_usize_list()?;
+            if quad.len() != 4 {
+                return Err(format!("message quadruple has {} fields (expected 4)", quad.len()));
+            }
+            if quad[3] > u32::MAX as usize {
+                return Err(format!("dup_group {} exceeds u32", quad[3]));
+            }
+            msgs.push(Msg { src: GpuId(quad[0]), dst: GpuId(quad[1]), bytes: quad[2], dup_group: quad[3] as u32 });
+        }
+        let st = e.field("stats")?;
+        declared.push((
+            e.field("drift")?.as_f64()?,
+            [
+                st.field("msgs")?.as_usize()?,
+                st.field("bytes")?.as_usize()?,
+                st.field("s_node")?.as_usize()?,
+                st.field("s_n2n")?.as_usize()?,
+                st.field("m_std")?.as_usize()?,
+                st.field("m_p2n")?.as_usize()?,
+            ],
+        ));
+        epochs.push(Epoch {
+            index: e.field("index")?.as_usize()?,
+            tag: e.field("tag")?.as_str()?.to_string(),
+            repeat: e.field("repeat")?.as_usize()?,
+            pattern: CommPattern::new(msgs),
+        });
+    }
+    let seed_text = value.field("seed")?.as_str()?;
+    let trace = Trace {
+        scenario: value.field("scenario")?.as_str()?.to_string(),
+        seed: seed_text.parse::<u64>().map_err(|_| format!("invalid seed {seed_text:?}"))?,
+        machine,
+        epochs,
+    };
+    trace.validate()?;
+
+    // Self-check: the stored drift metadata must match what the message
+    // lists imply (bit for bit — the emitter derives it the same way).
+    let stats = trace.epoch_stats();
+    let drifts = Trace::drifts_from(&stats);
+    for (k, (drift, decl)) in declared.iter().enumerate() {
+        let st = &stats[k];
+        let actual = [st.total_internode_msgs, st.total_internode_bytes, st.s_node, st.s_n2n, st.m_std, st.m_p2n];
+        if actual != *decl {
+            return Err(format!("epoch {k}: stored stats {decl:?} disagree with the message list {actual:?}"));
+        }
+        if drift.to_bits() != drifts[k].to_bits() {
+            return Err(format!("epoch {k}: stored drift {drift} disagrees with recomputed {}", drifts[k]));
+        }
+    }
+    Ok(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::generators::Scenario;
+    use crate::topology::machines::lassen;
+
+    fn tiny_trace() -> Trace {
+        let machine = lassen(9);
+        let epochs = [(32usize, 1024usize, 4usize), (64, 4096, 8)]
+            .iter()
+            .enumerate()
+            .map(|(k, &(n_msgs, msg_size, n_dest))| Epoch {
+                index: k,
+                tag: format!("e\"{k}\""),
+                repeat: k + 1,
+                pattern: Scenario { n_msgs, msg_size, n_dest, dup_frac: 0.0 }.materialize(&machine),
+            })
+            .collect();
+        Trace { scenario: "tiny \\ test".into(), seed: 11, machine, epochs }
+    }
+
+    #[test]
+    fn artifact_roundtrips_bit_for_bit() {
+        let trace = tiny_trace();
+        let json = to_json(&trace);
+        assert!(json.contains(SCHEMA));
+        let parsed = parse_json(&json).unwrap();
+        assert_eq!(trace, parsed);
+        assert_eq!(json, to_json(&parsed));
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let trace = tiny_trace();
+        let path = std::env::temp_dir().join("hetcomm-trace-test.json");
+        let path = path.to_str().unwrap();
+        save(&trace, path).unwrap();
+        let loaded = load(path).unwrap();
+        assert_eq!(trace, loaded);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn wrong_schema_rejected() {
+        let json = to_json(&tiny_trace()).replace(SCHEMA, "hetcomm.trace.v999");
+        assert!(parse_json(&json).unwrap_err().contains("unsupported"));
+    }
+
+    #[test]
+    fn tampered_metadata_rejected() {
+        let json = to_json(&tiny_trace());
+        // corrupt a message size without touching the stored stats
+        let tampered = json.replacen("[0, 4, 1024,", "[0, 4, 999,", 1);
+        assert_ne!(json, tampered, "replacement must hit a message quadruple");
+        assert!(parse_json(&tampered).unwrap_err().contains("disagree"));
+        // corrupt the drift field
+        let t2 = json.replacen("\"drift\": 0,", "\"drift\": 0.5,", 1);
+        assert_ne!(json, t2);
+        assert!(parse_json(&t2).unwrap_err().contains("drift"));
+    }
+
+    #[test]
+    fn corrupt_artifacts_rejected() {
+        assert!(parse_json("").is_err());
+        assert!(parse_json("{}").is_err());
+        assert!(parse_json("{\"schema\": \"hetcomm.trace.v1\"}").is_err());
+        // structurally valid JSON, structurally invalid trace
+        let bad_epoch = to_json(&tiny_trace()).replacen("\"repeat\": 1,", "\"repeat\": 0,", 1);
+        assert!(parse_json(&bad_epoch).is_err());
+    }
+}

@@ -1,0 +1,154 @@
+//! Trace recording from live runs.
+//!
+//! A [`TraceRecorder`] observes one [`crate::pattern::CommPattern`] per
+//! iteration and coalesces consecutive identical patterns into a single
+//! [`Epoch`] with a bumped repeat count — a stationary workload records as
+//! one plateau however long it runs. The coordinator's persistent engine
+//! carries an optional recorder
+//! ([`crate::coordinator::Engine::attach_recorder`]) and feeds it from
+//! every `iterate` call; [`record_spmv`] packages the whole loop for the
+//! SuiteSparse-proxy suite ([`crate::sparse::suite`]), which is how
+//! `hetcomm replay --record` produces `hetcomm.trace.v1` artifacts from
+//! real halo exchanges.
+
+use super::{Epoch, Trace};
+use crate::comm::{Strategy, StrategyKind, Transport};
+use crate::coordinator::{Engine, EngineConfig};
+use crate::pattern::CommPattern;
+use crate::sparse::suite;
+use crate::topology::Machine;
+
+/// Accumulates per-iteration pattern snapshots into trace epochs.
+#[derive(Clone, Debug)]
+pub struct TraceRecorder {
+    scenario: String,
+    seed: u64,
+    machine: Machine,
+    epochs: Vec<Epoch>,
+}
+
+impl TraceRecorder {
+    /// Start a recorder for a run on `machine`. `scenario` is the
+    /// provenance label stored in the trace; `seed` records the run's seed.
+    pub fn new(scenario: &str, machine: &Machine, seed: u64) -> TraceRecorder {
+        TraceRecorder { scenario: scenario.to_string(), seed, machine: machine.clone(), epochs: Vec::new() }
+    }
+
+    /// Observe one iteration's pattern: extends the current epoch when the
+    /// pattern is unchanged, otherwise opens a new one.
+    pub fn observe(&mut self, pattern: &CommPattern) {
+        self.observe_tagged(pattern, "iter");
+    }
+
+    /// [`TraceRecorder::observe`] with an explicit tag for the epoch a new
+    /// pattern would open (coalescing ignores the tag: a repeat of the
+    /// current pattern never splits an epoch).
+    pub fn observe_tagged(&mut self, pattern: &CommPattern, tag: &str) {
+        if let Some(last) = self.epochs.last_mut() {
+            if last.pattern == *pattern {
+                last.repeat += 1;
+                return;
+            }
+        }
+        let index = self.epochs.len();
+        self.epochs.push(Epoch { index, tag: tag.to_string(), repeat: 1, pattern: pattern.clone() });
+    }
+
+    /// Epochs recorded so far.
+    pub fn len(&self) -> usize {
+        self.epochs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.epochs.is_empty()
+    }
+
+    /// Iterations observed so far.
+    pub fn iterations(&self) -> usize {
+        self.epochs.iter().map(|e| e.repeat).sum()
+    }
+
+    /// Finish recording; fails on an empty recorder (a valid trace holds at
+    /// least one epoch).
+    pub fn finish(self) -> Result<Trace, String> {
+        let trace = Trace { scenario: self.scenario, seed: self.seed, machine: self.machine, epochs: self.epochs };
+        trace.validate()?;
+        Ok(trace)
+    }
+}
+
+/// Record a distributed-SpMV run: build the SuiteSparse structural proxy,
+/// drive `iters` iterations through the persistent engine (real data plane)
+/// with a recorder attached, and return the captured trace. The partition
+/// is fixed for the run, so the trace coalesces to a single stationary
+/// epoch — the control case for adaptive replay.
+pub fn record_spmv(
+    matrix: &str,
+    scale: usize,
+    gpus: usize,
+    machine: &Machine,
+    iters: usize,
+    seed: u64,
+) -> Result<Trace, String> {
+    let info = suite::info(matrix)
+        .ok_or_else(|| format!("unknown matrix {matrix:?}; known: {:?}", suite::MATRICES.map(|m| m.name)))?;
+    if iters == 0 {
+        return Err("need at least one iteration to record".into());
+    }
+    let mat = suite::proxy(info, scale);
+    let v0: Vec<f32> = (0..mat.nrows).map(|i| ((i % 17) as f32 - 8.0) / 8.0).collect();
+    let strategy = Strategy::new(StrategyKind::SplitMd, Transport::Staged).expect("staged always valid");
+    let mut engine = Engine::new(&mat, gpus, machine, strategy, &v0, EngineConfig::default())
+        .map_err(|e| format!("engine setup: {e:#}"))?;
+    engine.attach_recorder(TraceRecorder::new(&format!("spmv:{}", info.name), machine, seed));
+    for _ in 0..iters {
+        engine.iterate(None).map_err(|e| format!("iteration failed: {e:#}"))?;
+    }
+    let recorder = engine.take_recorder().expect("recorder attached above");
+    recorder.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::generators::Scenario;
+    use crate::topology::machines::lassen;
+
+    #[test]
+    fn recorder_coalesces_identical_patterns() {
+        let machine = lassen(5);
+        let a = Scenario { n_msgs: 16, msg_size: 512, n_dest: 2, dup_frac: 0.0 }.materialize(&machine);
+        let b = Scenario { n_msgs: 32, msg_size: 256, n_dest: 4, dup_frac: 0.0 }.materialize(&machine);
+        let mut rec = TraceRecorder::new("test", &machine, 1);
+        assert!(rec.is_empty());
+        rec.observe(&a);
+        rec.observe(&a);
+        rec.observe_tagged(&b, "grew");
+        rec.observe(&b);
+        rec.observe(&a);
+        assert_eq!(rec.len(), 3);
+        assert_eq!(rec.iterations(), 5);
+        let t = rec.finish().unwrap();
+        assert_eq!(t.epochs[0].repeat, 2);
+        assert_eq!(t.epochs[1].tag, "grew");
+        assert_eq!(t.epochs[2].repeat, 1);
+        assert_eq!(t.epochs[2].pattern, a);
+    }
+
+    #[test]
+    fn empty_recorder_fails_to_finish() {
+        let machine = lassen(2);
+        assert!(TraceRecorder::new("empty", &machine, 0).finish().is_err());
+    }
+
+    #[test]
+    fn spmv_recording_is_one_stationary_epoch() {
+        let machine = lassen(2);
+        let t = record_spmv("thermal2", 2048, 8, &machine, 3, 9).unwrap();
+        assert_eq!(t.scenario, "spmv:thermal2");
+        assert_eq!(t.epochs.len(), 1, "fixed partition must coalesce");
+        assert_eq!(t.epochs[0].repeat, 3);
+        assert!(!t.epochs[0].pattern.is_empty(), "8 parts on 2 nodes must exchange a halo");
+        assert!(t.drifts().iter().all(|&d| d == 0.0));
+    }
+}

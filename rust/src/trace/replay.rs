@@ -1,0 +1,521 @@
+//! Replay a trace through the Table 6 models under a static or adaptive
+//! strategy policy, quantifying the win from online re-selection.
+//!
+//! Every epoch is costed for *all* Table 5 strategies (the static
+//! baselines come for free), then the policy picks the strategy actually
+//! "run" for that epoch:
+//!
+//! - **static** — one fixed strategy for the whole trace;
+//! - **adaptive (exact)** — at epoch 0 and whenever the drift *from the
+//!   last advice point* exceeds the threshold (slow per-epoch creep
+//!   accumulates against the anchor and still triggers), re-rank the
+//!   Table 6 models on the epoch's measured pattern statistics and take
+//!   the argmin (ties keep Table 5 order);
+//! - **adaptive (surface)** — same trigger, but the advice comes from a
+//!   compiled [`crate::advisor::DecisionSurface`] lookup (the serving-path
+//!   advisor; interpolation can be slightly suboptimal off-lattice, which
+//!   is why the report costs the pick with the exact model either way).
+//!
+//! Because each epoch is a plateau (the pattern inside is constant), an
+//! adaptive run that re-advises at every boundary accrues the pointwise
+//! minimum cost — provably ≤ every static strategy's total. The per-epoch
+//! report records drift, advice points, switches and cumulative time; the
+//! summary compares against the best and worst static totals. Reports are
+//! deterministic: byte-identical JSON for byte-identical traces.
+
+use super::{drift_between, DEFAULT_DRIFT_THRESHOLD, Trace};
+use crate::advisor::{DecisionSurface, Pattern};
+use crate::bench::{fmt_secs, Table};
+use crate::comm::{build_schedule, Strategy};
+use crate::model::StrategyModel;
+use crate::sim;
+use crate::sweep::emit::esc;
+use crate::util::json::fmt_f64;
+use std::fmt::Write as _;
+
+/// Strategy policy for a replay run.
+#[derive(Clone, Debug)]
+pub enum ReplayMode<'a> {
+    /// One fixed strategy for every epoch.
+    Static(Strategy),
+    /// Re-advise on drift; `surface` switches the advisor from the exact
+    /// Table 6 ranking (None) to a compiled decision surface.
+    Adaptive { surface: Option<&'a DecisionSurface> },
+}
+
+impl ReplayMode<'_> {
+    fn label(&self) -> String {
+        match self {
+            ReplayMode::Static(s) => format!("static:{}", s.label()),
+            ReplayMode::Adaptive { surface: None } => "adaptive:model".to_string(),
+            ReplayMode::Adaptive { surface: Some(_) } => "adaptive:surface".to_string(),
+        }
+    }
+}
+
+/// Replay configuration beyond the policy.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplayConfig {
+    /// Drift (|log₂| units, [`drift_between`]) above which adaptive mode
+    /// re-advises.
+    pub drift_threshold: f64,
+    /// Also run each epoch's chosen schedule through the discrete-event
+    /// simulator (slower; fills [`EpochRow::sim_s`]).
+    pub sim: bool,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> ReplayConfig {
+        ReplayConfig { drift_threshold: DEFAULT_DRIFT_THRESHOLD, sim: false }
+    }
+}
+
+/// One epoch of the replay report.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EpochRow {
+    pub index: usize,
+    pub tag: String,
+    pub repeat: usize,
+    /// Drift from the policy's current reference stats: the last advice
+    /// point under the adaptive policy, the trace start under a static
+    /// policy (0 for epoch 0). The *consecutive-epoch* drift lives in the
+    /// trace artifact ([`crate::trace::Trace::drifts`]), not here.
+    pub drift: f64,
+    /// Whether the advisor was consulted at this epoch.
+    pub advised: bool,
+    /// Strategy in effect.
+    pub strategy: Strategy,
+    /// The exact per-epoch argmin (reference, regardless of policy).
+    pub best: Strategy,
+    /// Modeled seconds per iteration under the strategy in effect.
+    pub per_iter_s: f64,
+    /// `per_iter_s × repeat`.
+    pub epoch_s: f64,
+    /// Running total after this epoch.
+    pub cum_s: f64,
+    /// Simulated seconds per iteration (when [`ReplayConfig::sim`]).
+    pub sim_s: Option<f64>,
+}
+
+/// A strategy change at an advice point.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SwitchEvent {
+    pub epoch: usize,
+    pub from: Strategy,
+    pub to: Strategy,
+}
+
+/// Total modeled seconds of one static strategy over the whole trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StaticTotal {
+    pub strategy: Strategy,
+    pub total_s: f64,
+}
+
+/// The replay outcome.
+#[derive(Clone, Debug)]
+pub struct ReplayReport {
+    pub scenario: String,
+    pub machine: String,
+    /// Policy label (`"static:…"`, `"adaptive:model"`, `"adaptive:surface"`).
+    pub mode: String,
+    pub drift_threshold: f64,
+    /// Total iterations replayed.
+    pub iterations: usize,
+    pub rows: Vec<EpochRow>,
+    /// Every Table 5 strategy's static total, in Table 5 order.
+    pub statics: Vec<StaticTotal>,
+    /// Cumulative modeled time of the replayed policy.
+    pub total_s: f64,
+    pub best_static: StaticTotal,
+    pub worst_static: StaticTotal,
+    pub switches: Vec<SwitchEvent>,
+    /// `(best_static − total) / best_static`; negative when the policy
+    /// loses to the best static strategy, 0 for an empty denominator.
+    pub win_vs_best_static: f64,
+    pub win_vs_worst_static: f64,
+}
+
+/// Replay `trace` under `mode`. Costs are the Table 6 models evaluated on
+/// each epoch's measured pattern statistics (`ppn` = all cores, matching
+/// `hetcomm model` / `sweep`); the trace machine's registry parameters are
+/// required ([`Trace::params`]).
+pub fn replay(trace: &Trace, mode: &ReplayMode, config: &ReplayConfig) -> Result<ReplayReport, String> {
+    trace.validate()?;
+    let params = trace
+        .params()
+        .ok_or_else(|| format!("trace machine {:?} resolves to no registry parameters", trace.machine.name))?;
+    if let ReplayMode::Adaptive { surface: Some(surface) } = mode {
+        surface.validate()?;
+        if surface.machine != trace.machine.name {
+            return Err(format!(
+                "surface was compiled for {:?} but the trace ran on {:?}",
+                surface.machine, trace.machine.name
+            ));
+        }
+    }
+    if !config.drift_threshold.is_finite() || config.drift_threshold < 0.0 {
+        return Err(format!("drift threshold {} must be finite and >= 0", config.drift_threshold));
+    }
+
+    let machine = &trace.machine;
+    let sm = StrategyModel::new(machine, &params);
+    let ppn = machine.cores_per_node();
+    let all = Strategy::all();
+
+    let mut statics: Vec<StaticTotal> = all.iter().map(|&s| StaticTotal { strategy: s, total_s: 0.0 }).collect();
+    let mut rows: Vec<EpochRow> = Vec::with_capacity(trace.epochs.len());
+    let mut switches = Vec::new();
+    let mut total_s = 0f64;
+    // drift reference: the stats at the last advice point (so sub-threshold
+    // creep accumulates); static mode keeps the trace-start reference
+    let mut anchor_stats = None;
+    let mut current: Option<Strategy> = None;
+
+    for epoch in &trace.epochs {
+        let stats = epoch.pattern.stats(machine);
+        let dup = epoch.pattern.duplicate_fraction(machine);
+        // assemble the inputs from the stats already in hand (the
+        // `model_inputs` convenience would recompute them)
+        let inputs = crate::model::ModelInputs {
+            s_proc: stats.s_proc,
+            s_node: stats.s_node,
+            s_n2n: stats.s_n2n,
+            m_p2n: stats.m_p2n,
+            m_n2n: stats.m_n2n,
+            m_std: stats.m_std,
+            ppn,
+            dup_frac: dup,
+        };
+        let times = sm.all_times(&inputs);
+        let rep = epoch.repeat as f64;
+        for (k, &(_, t)) in times.iter().enumerate() {
+            statics[k].total_s += t * rep;
+        }
+        // first-wins argmin: ties keep Table 5 order, matching the
+        // surface's `best_index`
+        let mut best = times[0].0;
+        let mut best_t = times[0].1;
+        for &(s, t) in &times[1..] {
+            if t < best_t {
+                best = s;
+                best_t = t;
+            }
+        }
+
+        let drift = anchor_stats.as_ref().map(|p| drift_between(p, &stats)).unwrap_or(0.0);
+        let (advised, strategy) = match mode {
+            ReplayMode::Static(s) => (false, *s),
+            ReplayMode::Adaptive { surface } => {
+                let trigger = current.is_none() || drift > config.drift_threshold;
+                if trigger {
+                    let pick = match surface {
+                        None => best,
+                        Some(surface) => surface.lookup(&Pattern::from_stats(&stats, machine)).best().0,
+                    };
+                    (true, pick)
+                } else {
+                    (false, current.expect("non-trigger implies a prior advice"))
+                }
+            }
+        };
+        if advised {
+            if let Some(prev) = current {
+                if prev != strategy {
+                    switches.push(SwitchEvent { epoch: epoch.index, from: prev, to: strategy });
+                }
+            }
+        }
+        let per_iter_s = times
+            .iter()
+            .find(|(s, _)| *s == strategy)
+            .map(|&(_, t)| t)
+            .ok_or_else(|| format!("strategy {} is not in the Table 5 set", strategy.label()))?;
+        let epoch_s = per_iter_s * rep;
+        total_s += epoch_s;
+        let sim_s = config.sim.then(|| {
+            let schedule = build_schedule(strategy, machine, &epoch.pattern);
+            sim::run(machine, &params, &schedule, strategy.sim_ppn(machine)).total
+        });
+        rows.push(EpochRow {
+            index: epoch.index,
+            tag: epoch.tag.clone(),
+            repeat: epoch.repeat,
+            drift,
+            advised,
+            strategy,
+            best,
+            per_iter_s,
+            epoch_s,
+            cum_s: total_s,
+            sim_s,
+        });
+        // the reference only moves when the advisor was (re-)consulted; the
+        // trace start anchors epoch 0 for every policy
+        if advised || anchor_stats.is_none() {
+            anchor_stats = Some(stats);
+        }
+        current = Some(strategy);
+    }
+
+    // first-wins extrema: ties keep Table 5 order
+    let mut best_static = statics[0].clone();
+    let mut worst_static = statics[0].clone();
+    for s in &statics[1..] {
+        if s.total_s < best_static.total_s {
+            best_static = s.clone();
+        }
+        if s.total_s > worst_static.total_s {
+            worst_static = s.clone();
+        }
+    }
+    let win = |baseline: f64| if baseline > 0.0 { (baseline - total_s) / baseline } else { 0.0 };
+    Ok(ReplayReport {
+        scenario: trace.scenario.clone(),
+        machine: trace.machine.name.clone(),
+        mode: mode.label(),
+        drift_threshold: config.drift_threshold,
+        iterations: trace.iterations(),
+        rows,
+        win_vs_best_static: win(best_static.total_s),
+        win_vs_worst_static: win(worst_static.total_s),
+        statics,
+        total_s,
+        best_static,
+        worst_static,
+        switches,
+    })
+}
+
+/// Serialize a replay report as deterministic JSON (shortest-round-trip
+/// floats; no wall-clock fields, so equal traces emit equal bytes).
+pub fn report_to_json(r: &ReplayReport) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    let _ = writeln!(out, "  \"schema\": \"hetcomm.replay.v1\",");
+    let _ = writeln!(out, "  \"scenario\": \"{}\",", esc(&r.scenario));
+    let _ = writeln!(out, "  \"machine\": \"{}\",", esc(&r.machine));
+    let _ = writeln!(out, "  \"mode\": \"{}\",", esc(&r.mode));
+    let _ = writeln!(out, "  \"drift_threshold\": {},", fmt_f64(r.drift_threshold));
+    let _ = writeln!(out, "  \"iterations\": {},", r.iterations);
+    out.push_str("  \"epochs\": [\n");
+    for (i, row) in r.rows.iter().enumerate() {
+        let comma = if i + 1 < r.rows.len() { "," } else { "" };
+        let sim = match row.sim_s {
+            Some(t) => fmt_f64(t),
+            None => "null".to_string(),
+        };
+        let _ = writeln!(
+            out,
+            "    {{\"index\": {}, \"tag\": \"{}\", \"repeat\": {}, \"drift\": {}, \"advised\": {}, \
+             \"strategy\": \"{}\", \"best\": \"{}\", \"per_iter_s\": {}, \"epoch_s\": {}, \"cum_s\": {}, \
+             \"sim_s\": {}}}{comma}",
+            row.index,
+            esc(&row.tag),
+            row.repeat,
+            fmt_f64(row.drift),
+            row.advised,
+            esc(&row.strategy.label()),
+            esc(&row.best.label()),
+            fmt_f64(row.per_iter_s),
+            fmt_f64(row.epoch_s),
+            fmt_f64(row.cum_s),
+            sim,
+        );
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"statics\": [\n");
+    for (i, s) in r.statics.iter().enumerate() {
+        let comma = if i + 1 < r.statics.len() { "," } else { "" };
+        let _ = writeln!(
+            out,
+            "    {{\"strategy\": \"{}\", \"total_s\": {}}}{comma}",
+            esc(&s.strategy.label()),
+            fmt_f64(s.total_s)
+        );
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"switches\": [\n");
+    for (i, sw) in r.switches.iter().enumerate() {
+        let comma = if i + 1 < r.switches.len() { "," } else { "" };
+        let _ = writeln!(
+            out,
+            "    {{\"epoch\": {}, \"from\": \"{}\", \"to\": \"{}\"}}{comma}",
+            sw.epoch,
+            esc(&sw.from.label()),
+            esc(&sw.to.label())
+        );
+    }
+    out.push_str("  ],\n");
+    let _ = writeln!(out, "  \"total_s\": {},", fmt_f64(r.total_s));
+    let _ = writeln!(
+        out,
+        "  \"best_static\": {{\"strategy\": \"{}\", \"total_s\": {}}},",
+        esc(&r.best_static.strategy.label()),
+        fmt_f64(r.best_static.total_s)
+    );
+    let _ = writeln!(
+        out,
+        "  \"worst_static\": {{\"strategy\": \"{}\", \"total_s\": {}}},",
+        esc(&r.worst_static.strategy.label()),
+        fmt_f64(r.worst_static.total_s)
+    );
+    let _ = writeln!(out, "  \"win_vs_best_static\": {},", fmt_f64(r.win_vs_best_static));
+    let _ = writeln!(out, "  \"win_vs_worst_static\": {}", fmt_f64(r.win_vs_worst_static));
+    out.push_str("}\n");
+    out
+}
+
+/// Render a replay report as aligned text tables.
+pub fn render_report(r: &ReplayReport) -> String {
+    let mut out = String::new();
+    let mut t = Table::new(
+        format!("Replay: {} on {} ({}, threshold {})", r.scenario, r.machine, r.mode, r.drift_threshold),
+        &["epoch", "tag", "iters", "drift", "advised", "strategy", "per-iter", "cum", "sim/iter"],
+    );
+    for row in &r.rows {
+        t.row(vec![
+            row.index.to_string(),
+            row.tag.clone(),
+            row.repeat.to_string(),
+            format!("{:.2}", row.drift),
+            if row.advised { "yes".into() } else { String::new() },
+            row.strategy.label(),
+            fmt_secs(row.per_iter_s),
+            fmt_secs(row.cum_s),
+            row.sim_s.map(fmt_secs).unwrap_or_default(),
+        ]);
+    }
+    out.push_str(&t.render());
+    let mut b = Table::new("Static baselines (whole trace)", &["strategy", "total"]);
+    for s in &r.statics {
+        b.row(vec![s.strategy.label(), fmt_secs(s.total_s)]);
+    }
+    out.push('\n');
+    out.push_str(&b.render());
+    let _ = writeln!(
+        out,
+        "\nreplayed {} iterations over {} epochs: total {}",
+        r.iterations,
+        r.rows.len(),
+        fmt_secs(r.total_s).trim()
+    );
+    let _ = writeln!(
+        out,
+        "best static  {} ({}) -> win {:+.2}%",
+        r.best_static.strategy.label(),
+        fmt_secs(r.best_static.total_s).trim(),
+        r.win_vs_best_static * 100.0
+    );
+    let _ = writeln!(
+        out,
+        "worst static {} ({}) -> win {:+.2}%",
+        r.worst_static.strategy.label(),
+        fmt_secs(r.worst_static.total_s).trim(),
+        r.win_vs_worst_static * 100.0
+    );
+    for sw in &r.switches {
+        let _ = writeln!(out, "switch at epoch {}: {} -> {}", sw.epoch, sw.from.label(), sw.to.label());
+    }
+    if r.switches.is_empty() {
+        let _ = writeln!(out, "no strategy switches");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{StrategyKind, Transport};
+    use crate::trace::scenarios::{synthesize, TraceScenario};
+
+    fn adaptive() -> ReplayMode<'static> {
+        ReplayMode::Adaptive { surface: None }
+    }
+
+    #[test]
+    fn adaptive_never_loses_to_any_static() {
+        for sc in TraceScenario::ALL {
+            let trace = synthesize(sc, "lassen", 5, 0, 42).unwrap();
+            let r = replay(&trace, &adaptive(), &ReplayConfig::default()).unwrap();
+            for s in &r.statics {
+                assert!(
+                    r.total_s <= s.total_s * (1.0 + 1e-12),
+                    "{sc}: adaptive {} loses to static {} {}",
+                    r.total_s,
+                    s.strategy.label(),
+                    s.total_s
+                );
+            }
+            assert!(r.win_vs_best_static >= -1e-12, "{sc}: win {}", r.win_vs_best_static);
+            // rows carry a consistent running total
+            let mut cum = 0.0;
+            for row in &r.rows {
+                cum += row.epoch_s;
+                assert_eq!(row.cum_s.to_bits(), cum.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn static_mode_reproduces_its_baseline_total() {
+        let trace = synthesize(TraceScenario::AmrDrift, "lassen", 5, 0, 42).unwrap();
+        for strategy in Strategy::all() {
+            let r = replay(&trace, &ReplayMode::Static(strategy), &ReplayConfig::default()).unwrap();
+            let baseline = r.statics.iter().find(|s| s.strategy == strategy).unwrap();
+            assert_eq!(r.total_s.to_bits(), baseline.total_s.to_bits(), "{}", strategy.label());
+            assert!(r.switches.is_empty());
+            assert!(r.rows.iter().all(|row| !row.advised));
+        }
+    }
+
+    #[test]
+    fn huge_threshold_freezes_the_first_choice() {
+        let trace = synthesize(TraceScenario::Rebalance, "lassen", 3, 0, 42).unwrap();
+        let frozen = replay(&trace, &adaptive(), &ReplayConfig { drift_threshold: 1e9, ..Default::default() }).unwrap();
+        assert!(frozen.switches.is_empty());
+        assert_eq!(frozen.rows.iter().filter(|r| r.advised).count(), 1, "only epoch 0 advises");
+        let first = frozen.rows[0].strategy;
+        let static_run = replay(&trace, &ReplayMode::Static(first), &ReplayConfig::default()).unwrap();
+        assert_eq!(frozen.total_s.to_bits(), static_run.total_s.to_bits());
+        // the default threshold re-advises at both rebalance boundaries
+        let live = replay(&trace, &adaptive(), &ReplayConfig::default()).unwrap();
+        assert_eq!(live.rows.iter().filter(|r| r.advised).count(), 3);
+    }
+
+    #[test]
+    fn sim_mode_fills_per_epoch_sim_times() {
+        let trace = synthesize(TraceScenario::HaloBurst, "lassen", 3, 1, 42).unwrap();
+        let r = replay(&trace, &adaptive(), &ReplayConfig { sim: true, ..Default::default() }).unwrap();
+        assert!(r.rows.iter().all(|row| row.sim_s.is_some_and(|t| t.is_finite() && t > 0.0)));
+        let dry = replay(&trace, &adaptive(), &ReplayConfig::default()).unwrap();
+        assert!(dry.rows.iter().all(|row| row.sim_s.is_none()));
+        // the sim leg never changes the modeled accounting
+        assert_eq!(r.total_s.to_bits(), dry.total_s.to_bits());
+    }
+
+    #[test]
+    fn report_emitters_are_deterministic_and_complete() {
+        let trace = synthesize(TraceScenario::AmrDrift, "lassen", 5, 0, 42).unwrap();
+        let r1 = replay(&trace, &adaptive(), &ReplayConfig::default()).unwrap();
+        let r2 = replay(&trace, &adaptive(), &ReplayConfig::default()).unwrap();
+        let (j1, j2) = (report_to_json(&r1), report_to_json(&r2));
+        assert_eq!(j1, j2);
+        assert!(j1.contains("hetcomm.replay.v1"));
+        assert!(j1.contains("\"switches\""));
+        let txt = render_report(&r1);
+        assert!(txt.contains("best static"));
+        assert!(txt.contains("switch at epoch"));
+    }
+
+    #[test]
+    fn mismatched_surface_and_bad_threshold_rejected() {
+        use crate::advisor::{DecisionSurface, SurfaceAxes};
+        let trace = synthesize(TraceScenario::Stationary, "lassen", 2, 1, 1).unwrap();
+        let foreign = DecisionSurface::compile("frontier-like", SurfaceAxes::default_axes(), 0.0).unwrap();
+        let err = replay(&trace, &ReplayMode::Adaptive { surface: Some(&foreign) }, &ReplayConfig::default());
+        assert!(err.unwrap_err().contains("compiled for"));
+        let bad = replay(&trace, &adaptive(), &ReplayConfig { drift_threshold: -1.0, ..Default::default() });
+        assert!(bad.is_err());
+    }
+}

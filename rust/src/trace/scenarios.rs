@@ -1,0 +1,246 @@
+//! Synthetic evolving-workload generators, layered on
+//! [`crate::pattern::generators::Scenario`].
+//!
+//! Each scenario is a schedule of regime plateaus `(messages, size,
+//! destination nodes)` materialized into explicit per-epoch
+//! [`crate::pattern::CommPattern`]s on a registry machine. The schedules
+//! are closed-form — the regime trajectory is the scenario's *identity* —
+//! while the seed deterministically shuffles the message order within each
+//! epoch (pattern statistics are order-invariant, so replay results depend
+//! only on the schedule; trace bytes depend on the seed).
+//!
+//! The trajectories are chosen to cross the paper's regime boundaries:
+//! `amr-drift` walks from the large-message regime (device-aware wins,
+//! Figure 4.3 right edge) into the many-small-messages regime (staged
+//! node-aware Split wins), so adaptive replay must switch strategies
+//! mid-trace to stay optimal.
+
+use super::{Epoch, Trace};
+use crate::pattern::generators::Scenario;
+use crate::topology::machines;
+use crate::util::rng::Rng;
+
+/// The built-in evolving scenarios.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceScenario {
+    /// AMR-style refinement front: each level doubles the message count,
+    /// quarters the message size and spreads the halo to more neighbor
+    /// nodes — large-size regime to many-small-messages regime.
+    AmrDrift,
+    /// Progressive sparsification: message count and size decay together.
+    Sparsify,
+    /// Node-failure rebalance: a healthy 16-destination halo loses four
+    /// nodes, then re-spreads the volume over the survivors.
+    Rebalance,
+    /// Bursty halo growth: calm epochs punctuated by 32× message-size
+    /// bursts — the strategy choice must flip back and forth.
+    HaloBurst,
+    /// Control: a single regime held for the whole trace.
+    Stationary,
+}
+
+impl TraceScenario {
+    pub const ALL: [TraceScenario; 5] = [
+        TraceScenario::AmrDrift,
+        TraceScenario::Sparsify,
+        TraceScenario::Rebalance,
+        TraceScenario::HaloBurst,
+        TraceScenario::Stationary,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            TraceScenario::AmrDrift => "amr-drift",
+            TraceScenario::Sparsify => "sparsify",
+            TraceScenario::Rebalance => "rebalance",
+            TraceScenario::HaloBurst => "halo-burst",
+            TraceScenario::Stationary => "stationary",
+        }
+    }
+
+    /// Parse a user-facing scenario name.
+    pub fn parse(s: &str) -> Option<TraceScenario> {
+        let canon = s.trim().to_ascii_lowercase().replace('_', "-");
+        TraceScenario::ALL.iter().copied().find(|sc| sc.label() == canon)
+    }
+
+    /// Iterations a plateau holds by default (CLI `--repeat 0`).
+    fn default_repeat(&self, tag: &str) -> usize {
+        match self {
+            TraceScenario::AmrDrift => 3,
+            TraceScenario::Sparsify => 2,
+            TraceScenario::Rebalance => 4,
+            // bursts are short-lived; calm periods linger
+            TraceScenario::HaloBurst => {
+                if tag == "burst" {
+                    1
+                } else {
+                    2
+                }
+            }
+            TraceScenario::Stationary => 3,
+        }
+    }
+
+    /// The plateau schedule: `(n_msgs, msg_size, dest_nodes, tag)` per
+    /// epoch. All values sit on the advisor's default lattice so
+    /// surface-driven and exact-model advice agree on these traces.
+    fn schedule(&self, epochs: usize) -> Vec<(usize, usize, usize, String)> {
+        let n = epochs.max(1);
+        (0..n)
+            .map(|k| match self {
+                TraceScenario::AmrDrift => {
+                    let msgs = (32usize << k.min(4)).min(512);
+                    let size = ((1usize << 18) >> (2 * k).min(8)).max(1 << 10);
+                    let dest = (4usize << k.min(2)).min(16);
+                    (msgs, size, dest, format!("level{k}"))
+                }
+                TraceScenario::Sparsify => {
+                    let msgs = (512usize >> k.min(5)).max(16);
+                    let size = (8192usize >> k.min(7)).max(64);
+                    (msgs, size, 16, format!("stage{k}"))
+                }
+                TraceScenario::Rebalance => {
+                    if 3 * k < n {
+                        (256, 8192, 16, "healthy".to_string())
+                    } else if 3 * k < 2 * n {
+                        (240, 8192, 12, "failover".to_string())
+                    } else {
+                        // survivors absorb the lost nodes' share: 16/12 of
+                        // the per-message volume
+                        (240, 8192 * 16 / 12, 12, "respread".to_string())
+                    }
+                }
+                TraceScenario::HaloBurst => {
+                    if k % 2 == 1 {
+                        (128, 1 << 16, 8, "burst".to_string())
+                    } else {
+                        (128, 2048, 8, "calm".to_string())
+                    }
+                }
+                TraceScenario::Stationary => (256, 8192, 16, "steady".to_string()),
+            })
+            .collect()
+    }
+}
+
+impl std::fmt::Display for TraceScenario {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+/// Deterministic per-epoch shuffle seed (splitmix-style index mixing).
+fn epoch_seed(base: u64, index: usize) -> u64 {
+    let mut z = base ^ (index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z ^ (z >> 31)
+}
+
+/// Synthesize a scenario trace on a registry machine preset.
+///
+/// `epochs` is the plateau count (the schedules saturate, so any count is
+/// valid); `repeat` overrides the per-plateau iteration count (0 keeps the
+/// scenario default). Deterministic: the same arguments produce the same
+/// trace, byte for byte.
+pub fn synthesize(
+    scenario: TraceScenario,
+    machine_name: &str,
+    epochs: usize,
+    repeat: usize,
+    seed: u64,
+) -> Result<Trace, String> {
+    let (arch, _) =
+        machines::parse(machine_name, 1).ok_or_else(|| format!("unknown machine preset {machine_name:?}"))?;
+    // 16 destinations max across all schedules; one extra node hosts the
+    // sender (the Figure 4.3 shape).
+    let machine = machines::with_shape(&arch, 17, arch.gpus_per_node());
+    let mut trace_epochs = Vec::with_capacity(epochs.max(1));
+    for (k, (n_msgs, msg_size, n_dest, tag)) in scenario.schedule(epochs).into_iter().enumerate() {
+        let mut pattern = Scenario { n_msgs, msg_size, n_dest, dup_frac: 0.0 }.materialize(&machine);
+        let mut rng = Rng::new(epoch_seed(seed, k));
+        rng.shuffle(&mut pattern.msgs);
+        let rep = if repeat > 0 { repeat } else { scenario.default_repeat(&tag) };
+        trace_epochs.push(Epoch { index: k, tag, repeat: rep, pattern });
+    }
+    let trace = Trace { scenario: scenario.label().to_string(), seed, machine, epochs: trace_epochs };
+    trace.validate()?;
+    Ok(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::persist;
+
+    #[test]
+    fn scenario_parse_roundtrip() {
+        for sc in TraceScenario::ALL {
+            assert_eq!(TraceScenario::parse(sc.label()), Some(sc), "{sc}");
+        }
+        assert_eq!(TraceScenario::parse("AMR_DRIFT"), Some(TraceScenario::AmrDrift));
+        assert_eq!(TraceScenario::parse("bogus"), None);
+    }
+
+    #[test]
+    fn synthesis_is_deterministic_and_seed_moves_bytes_not_stats() {
+        let a = synthesize(TraceScenario::AmrDrift, "lassen", 5, 0, 42).unwrap();
+        let b = synthesize(TraceScenario::AmrDrift, "lassen", 5, 0, 42).unwrap();
+        assert_eq!(persist::to_json(&a), persist::to_json(&b));
+        let c = synthesize(TraceScenario::AmrDrift, "lassen", 5, 0, 43).unwrap();
+        assert_ne!(persist::to_json(&a), persist::to_json(&c), "seed must shuffle message order");
+        // ...but the regime statistics are order-invariant
+        let (sa, sc) = (a.epoch_stats(), c.epoch_stats());
+        assert_eq!(sa, sc);
+    }
+
+    #[test]
+    fn amr_drift_crosses_regimes() {
+        let t = synthesize(TraceScenario::AmrDrift, "lassen", 5, 0, 7).unwrap();
+        assert_eq!(t.epochs.len(), 5);
+        let stats = t.epoch_stats();
+        // message count grows 16x while the per-message size shrinks 256x
+        assert_eq!(stats[0].total_internode_msgs, 32);
+        assert_eq!(stats[4].total_internode_msgs, 512);
+        assert_eq!(stats[0].s_n2n / stats[0].m_n2n, 1 << 18);
+        assert_eq!(stats[4].s_n2n / stats[4].m_n2n, 1 << 10);
+        // every boundary drifts well past the default threshold
+        for (k, d) in t.drifts().iter().enumerate().skip(1) {
+            assert!(*d > 0.9, "epoch {k} drift {d}");
+        }
+    }
+
+    #[test]
+    fn stationary_never_drifts() {
+        let t = synthesize(TraceScenario::Stationary, "lassen", 4, 2, 7).unwrap();
+        assert_eq!(t.iterations(), 8);
+        assert!(t.drifts().iter().all(|&d| d == 0.0));
+    }
+
+    #[test]
+    fn halo_burst_alternates() {
+        let t = synthesize(TraceScenario::HaloBurst, "lassen", 5, 0, 7).unwrap();
+        let tags: Vec<&str> = t.epochs.iter().map(|e| e.tag.as_str()).collect();
+        assert_eq!(tags, ["calm", "burst", "calm", "burst", "calm"]);
+        assert_eq!(t.epochs[0].repeat, 2);
+        assert_eq!(t.epochs[1].repeat, 1);
+        let d = t.drifts();
+        assert!(d[1] > 3.0 && d[2] > 3.0, "bursts must drift hard: {d:?}");
+    }
+
+    #[test]
+    fn rebalance_thirds_and_other_machines() {
+        let t = synthesize(TraceScenario::Rebalance, "lassen", 3, 0, 7).unwrap();
+        let tags: Vec<&str> = t.epochs.iter().map(|e| e.tag.as_str()).collect();
+        assert_eq!(tags, ["healthy", "failover", "respread"]);
+        // boundaries drift past the default threshold but stay gentle
+        let d = t.drifts();
+        assert!(d[1] > 0.25 && d[1] < 0.6, "failover drift {}", d[1]);
+        assert!(d[2] > 0.25 && d[2] < 0.6, "respread drift {}", d[2]);
+        // scenarios synthesize on every registry preset
+        for name in machines::NAMES {
+            let t = synthesize(TraceScenario::Sparsify, name, 4, 0, 1).unwrap();
+            t.validate().unwrap();
+        }
+    }
+}

@@ -1,0 +1,298 @@
+//! Minimal JSON substrate shared by the versioned artifact layers
+//! ([`crate::advisor::persist`], [`crate::trace::persist`]).
+//!
+//! The offline image vendors no `serde`, so artifacts are written by
+//! hand-rolled emitters and read back through this recursive-descent
+//! parser — enough for any well-formed JSON value — followed by
+//! schema-checked extraction at the call site. Floats are emitted through
+//! [`fmt_f64`] (Rust's shortest-round-trip `Display`), so a parsed
+//! artifact reproduces the original `f64` bits and emit∘parse∘emit is the
+//! identity on artifact bytes.
+
+/// Shortest-round-trip float formatting for artifact emitters. Deliberately
+/// NOT a fixed-width format: 10 significant digits cannot round-trip an
+/// f64, and artifacts must parse back bit for bit. Non-finite values
+/// serialize as `null` (JSON has no infinities).
+pub fn fmt_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// A parsed JSON value (object keys keep file order).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Parse one top-level value and require only whitespace after it.
+    pub fn parse(text: &str) -> Result<Json, String> {
+        Parser::new(text).parse()
+    }
+
+    /// Look a field up in an object value.
+    pub fn field(&self, key: &str) -> Result<&Json, String> {
+        match self {
+            Json::Obj(pairs) => pairs
+                .iter()
+                .find(|(k, _)| k == key)
+                .map(|(_, v)| v)
+                .ok_or_else(|| format!("missing field {key:?}")),
+            _ => Err(format!("expected an object holding {key:?}")),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str, String> {
+        match self {
+            Json::Str(s) => Ok(s),
+            other => Err(format!("expected a string, found {other:?}")),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64, String> {
+        match self {
+            Json::Num(x) => Ok(*x),
+            other => Err(format!("expected a number, found {other:?}")),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json], String> {
+        match self {
+            Json::Arr(items) => Ok(items),
+            other => Err(format!("expected an array, found {other:?}")),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize, String> {
+        let x = self.as_f64()?;
+        if x >= 0.0 && x.fract() == 0.0 && x <= usize::MAX as f64 {
+            Ok(x as usize)
+        } else {
+            Err(format!("expected a non-negative integer, found {x}"))
+        }
+    }
+
+    pub fn as_usize_list(&self) -> Result<Vec<usize>, String> {
+        self.as_arr()?.iter().map(Json::as_usize).collect()
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn new(text: &'a str) -> Parser<'a> {
+        Parser { bytes: text.as_bytes(), pos: 0 }
+    }
+
+    /// Parse one top-level value and require only whitespace after it.
+    fn parse(mut self) -> Result<Json, String> {
+        let value = self.value()?;
+        self.skip_ws();
+        if self.pos != self.bytes.len() {
+            return Err(format!("trailing content at byte {}", self.pos));
+        }
+        Ok(value)
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!("expected {:?} at byte {}", c as char, self.pos))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(_) => self.number(),
+            None => Err("unexpected end of input".into()),
+        }
+    }
+
+    fn literal(&mut self, word: &str, value: Json) -> Result<Json, String> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(value)
+        } else {
+            Err(format!("invalid literal at byte {}", self.pos))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).expect("ascii number bytes");
+        text.parse::<f64>().map(Json::Num).map_err(|_| format!("invalid number {text:?} at byte {start}"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut raw: Vec<u8> = Vec::new();
+        loop {
+            let c = self.peek().ok_or("unterminated string")?;
+            self.pos += 1;
+            match c {
+                b'"' => break,
+                b'\\' => {
+                    let esc = self.peek().ok_or("unterminated escape")?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => raw.push(b'"'),
+                        b'\\' => raw.push(b'\\'),
+                        b'/' => raw.push(b'/'),
+                        b'n' => raw.push(b'\n'),
+                        b'r' => raw.push(b'\r'),
+                        b't' => raw.push(b'\t'),
+                        b'b' => raw.push(0x08),
+                        b'f' => raw.push(0x0c),
+                        b'u' => {
+                            if self.pos + 4 > self.bytes.len() {
+                                return Err("truncated \\u escape".into());
+                            }
+                            let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+                                .map_err(|_| "invalid \\u escape".to_string())?;
+                            let code =
+                                u32::from_str_radix(hex, 16).map_err(|_| format!("invalid \\u escape {hex:?}"))?;
+                            self.pos += 4;
+                            let ch = char::from_u32(code).ok_or_else(|| format!("invalid codepoint {code:#x}"))?;
+                            let mut buf = [0u8; 4];
+                            raw.extend_from_slice(ch.encode_utf8(&mut buf).as_bytes());
+                        }
+                        other => return Err(format!("unknown escape \\{}", other as char)),
+                    }
+                }
+                other => raw.push(other),
+            }
+        }
+        String::from_utf8(raw).map_err(|_| "invalid UTF-8 in string".to_string())
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        self.skip_ws();
+        let mut items = Vec::new();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    break;
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.pos)),
+            }
+        }
+        Ok(Json::Arr(items))
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        self.skip_ws();
+        let mut pairs = Vec::new();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let value = self.value()?;
+            pairs.push((key, value));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    break;
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.pos)),
+            }
+        }
+        Ok(Json::Obj(pairs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parser_handles_general_values() {
+        let v = Json::parse(" { \"a\": [1, -2.5e3, true, false, null], \"b\\n\": \"x\\u0041\" } ").unwrap();
+        let a = v.field("a").unwrap().as_arr().unwrap();
+        assert_eq!(a[0].as_f64().unwrap(), 1.0);
+        assert_eq!(a[1].as_f64().unwrap(), -2500.0);
+        assert_eq!(a[2], Json::Bool(true));
+        assert_eq!(a[4], Json::Null);
+        assert_eq!(v.field("b\n").unwrap().as_str().unwrap(), "xA");
+        assert!(v.field("a").unwrap().as_usize_list().is_err(), "floats are not usizes");
+    }
+
+    #[test]
+    fn malformed_inputs_rejected() {
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1, 2").is_err());
+        assert!(Json::parse("{\"a\": 1} trailing").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+        assert!(Json::parse("nul").is_err());
+    }
+
+    #[test]
+    fn float_display_roundtrips() {
+        for x in [1.0, 2.44e-6, 3.79e-10, 0.25, 123456.789, 4.19e-11] {
+            let shown = fmt_f64(x);
+            assert_eq!(shown.parse::<f64>().unwrap().to_bits(), x.to_bits(), "{shown}");
+        }
+        assert_eq!(fmt_f64(f64::INFINITY), "null");
+    }
+
+    #[test]
+    fn usize_extraction_bounds() {
+        assert_eq!(Json::parse("4294967295").unwrap().as_usize().unwrap(), u32::MAX as usize);
+        assert!(Json::parse("-1").unwrap().as_usize().is_err());
+        assert!(Json::parse("1.5").unwrap().as_usize().is_err());
+    }
+}

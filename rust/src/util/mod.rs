@@ -1,9 +1,11 @@
 //! In-tree substrates for the offline build environment: deterministic PRNG,
-//! CLI flag parsing, INI-style config files, descriptive statistics, a
-//! property-testing mini-framework, and a tiny logger.
+//! CLI flag parsing, INI-style config files, a minimal JSON parser for the
+//! versioned artifact layers, descriptive statistics, a property-testing
+//! mini-framework, and a tiny logger.
 
 pub mod cli;
 pub mod config;
+pub mod json;
 pub mod logging;
 pub mod prop;
 pub mod rng;

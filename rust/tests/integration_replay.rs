@@ -1,0 +1,151 @@
+//! End-to-end claims for trace-driven replay (the time axis of the model
+//! study):
+//!
+//! - adaptive replay on the drifting AMR scenario crosses regimes — it
+//!   starts on a device-aware strategy, ends on staged Split, and beats
+//!   *every* static strategy;
+//! - on a stationary trace it exactly matches the best static strategy;
+//! - reports are byte-deterministic, and invariant to the message-order
+//!   shuffle seed (regime statistics are order-invariant);
+//! - surface-driven advice agrees with the exact Table 6 ranking on
+//!   on-lattice scenarios;
+//! - recorded SpMV traces round-trip through `hetcomm.trace.v1` and replay
+//!   as the stationary control;
+//! - `sweep --trace` evaluates recorded epochs as sweep cells.
+
+use hetcomm::advisor::{DecisionSurface, SurfaceAxes};
+use hetcomm::comm::{StrategyKind, Transport};
+use hetcomm::sweep::run_sweep_trace;
+use hetcomm::topology::machines;
+use hetcomm::trace::persist;
+use hetcomm::trace::record;
+use hetcomm::trace::replay::{render_report, replay, report_to_json, ReplayConfig, ReplayMode};
+use hetcomm::trace::scenarios::{synthesize, TraceScenario};
+use hetcomm::Strategy;
+
+fn adaptive() -> ReplayMode<'static> {
+    ReplayMode::Adaptive { surface: None }
+}
+
+#[test]
+fn amr_drift_adaptive_beats_every_static_and_crosses_regimes() {
+    let trace = synthesize(TraceScenario::AmrDrift, "lassen", 5, 0, 42).unwrap();
+    let r = replay(&trace, &adaptive(), &ReplayConfig::default()).unwrap();
+
+    // regime crossing: device-aware start, staged node-aware Split finish
+    assert_eq!(r.rows.first().unwrap().strategy.transport, Transport::DeviceAware);
+    let last = r.rows.last().unwrap().strategy;
+    assert_eq!((last.kind, last.transport), (StrategyKind::SplitMd, Transport::Staged));
+    assert!(r.switches.len() >= 2, "expected >= 2 switches, got {:?}", r.switches);
+    assert!(
+        r.switches.iter().any(|s| s.from.transport == Transport::DeviceAware && s.to.transport == Transport::Staged),
+        "a device-aware -> staged switch must occur: {:?}",
+        r.switches
+    );
+
+    // the headline: cumulative modeled time <= every static strategy
+    for s in &r.statics {
+        assert!(r.total_s <= s.total_s, "adaptive {} loses to {} ({})", r.total_s, s.strategy.label(), s.total_s);
+    }
+    // and the win over the best static is substantial (measured ~19.6%)
+    assert!(r.win_vs_best_static > 0.10, "win vs best static {:.4}", r.win_vs_best_static);
+    assert!(r.win_vs_worst_static > 0.40, "win vs worst static {:.4}", r.win_vs_worst_static);
+    // every epoch re-advises on this trace (all drifts are large)
+    assert!(r.rows.iter().all(|row| row.advised));
+    assert_eq!(r.iterations, 15);
+}
+
+#[test]
+fn stationary_trace_matches_best_static_exactly() {
+    let trace = synthesize(TraceScenario::Stationary, "lassen", 4, 0, 42).unwrap();
+    let r = replay(&trace, &adaptive(), &ReplayConfig::default()).unwrap();
+    assert!(r.switches.is_empty());
+    assert_eq!(r.total_s.to_bits(), r.best_static.total_s.to_bits(), "stationary adaptive == best static");
+    assert_eq!(r.win_vs_best_static, 0.0);
+    // only epoch 0 consults the advisor (zero drift afterwards)
+    assert_eq!(r.rows.iter().filter(|row| row.advised).count(), 1);
+}
+
+#[test]
+fn reports_are_deterministic_and_shuffle_invariant() {
+    let run = |seed: u64| {
+        let trace = synthesize(TraceScenario::Sparsify, "lassen", 5, 0, seed).unwrap();
+        (persist::to_json(&trace), report_to_json(&replay(&trace, &adaptive(), &ReplayConfig::default()).unwrap()))
+    };
+    let (t1, r1) = run(42);
+    let (t2, r2) = run(42);
+    assert_eq!(t1, t2, "same seed, same trace bytes");
+    assert_eq!(r1, r2, "same seed, same report bytes");
+    let (t3, r3) = run(1234);
+    assert_ne!(t1, t3, "the seed shuffles message order");
+    assert_eq!(r1, r3, "regime statistics are order-invariant, so reports agree across seeds");
+}
+
+#[test]
+fn surface_advice_matches_exact_ranking_on_lattice_scenarios() {
+    let surface = DecisionSurface::compile("lassen", SurfaceAxes::default_axes(), 0.0).unwrap();
+    let trace = synthesize(TraceScenario::AmrDrift, "lassen", 5, 0, 42).unwrap();
+    let exact = replay(&trace, &adaptive(), &ReplayConfig::default()).unwrap();
+    let surf = replay(&trace, &ReplayMode::Adaptive { surface: Some(&surface) }, &ReplayConfig::default()).unwrap();
+    assert_eq!(surf.mode, "adaptive:surface");
+    for (a, b) in exact.rows.iter().zip(&surf.rows) {
+        assert_eq!(a.strategy, b.strategy, "epoch {}: surface pick differs", a.index);
+    }
+    assert_eq!(exact.total_s.to_bits(), surf.total_s.to_bits());
+    // the guarantee carries over: surface-adaptive beats every static too
+    for s in &surf.statics {
+        assert!(surf.total_s <= s.total_s, "surface-adaptive loses to {}", s.strategy.label());
+    }
+}
+
+#[test]
+fn halo_burst_flips_back_and_forth() {
+    let trace = synthesize(TraceScenario::HaloBurst, "lassen", 5, 0, 42).unwrap();
+    let r = replay(&trace, &adaptive(), &ReplayConfig::default()).unwrap();
+    assert_eq!(r.switches.len(), 4, "each calm<->burst boundary must switch: {:?}", r.switches);
+    assert!(r.win_vs_best_static > 0.10, "win {:.4}", r.win_vs_best_static);
+    // static replay of the burst-regime winner does strictly worse
+    let burst_choice = r.rows[1].strategy;
+    let static_run = replay(&trace, &ReplayMode::Static(burst_choice), &ReplayConfig::default()).unwrap();
+    assert!(static_run.total_s > r.total_s);
+    // the text renderer narrates the switches
+    let txt = render_report(&r);
+    assert!(txt.matches("switch at epoch").count() == 4, "{txt}");
+}
+
+#[test]
+fn recorded_spmv_trace_roundtrips_and_replays_as_control() {
+    let machine = machines::parse("lassen", 2).unwrap().0;
+    let trace = record::record_spmv("thermal2", 2048, 8, &machine, 4, 7).unwrap();
+    assert_eq!(trace.epochs.len(), 1, "fixed partition coalesces to one epoch");
+    assert_eq!(trace.iterations(), 4);
+
+    // artifact round trip
+    let json = persist::to_json(&trace);
+    let parsed = persist::parse_json(&json).unwrap();
+    assert_eq!(parsed, trace);
+    assert_eq!(persist::to_json(&parsed), json);
+
+    // stationary control: adaptive == best static, no switches
+    let r = replay(&parsed, &adaptive(), &ReplayConfig::default()).unwrap();
+    assert!(r.switches.is_empty());
+    assert_eq!(r.total_s.to_bits(), r.best_static.total_s.to_bits());
+}
+
+#[test]
+fn sweep_consumes_recorded_traces_as_pattern_source() {
+    let trace = synthesize(TraceScenario::AmrDrift, "lassen", 5, 0, 42).unwrap();
+    let result = run_sweep_trace(&trace, &Strategy::all(), 2, false).unwrap();
+    assert_eq!(result.cells.len(), 5 * Strategy::all().len());
+    // the per-epoch sweep winners retell the replay story: the winner
+    // timeline moves from device-aware to staged Split
+    let winners = &result.report.winners;
+    assert_eq!(winners.len(), 5);
+    assert!(!winners.first().unwrap().winner_staged);
+    assert!(winners.last().unwrap().winner_staged);
+    assert_eq!(winners.last().unwrap().winner_kind, StrategyKind::SplitMd);
+    assert!(!result.report.crossovers.is_empty());
+    // cell sizes follow the shrinking AMR messages
+    assert_eq!(result.cells.first().unwrap().size, 1 << 18);
+    assert_eq!(result.cells.last().unwrap().size, 1 << 10);
+}

@@ -1,0 +1,87 @@
+//! Trace-format properties: arbitrary traces round-trip through the
+//! `hetcomm.trace.v1` artifact bit for bit, serialization is byte-stable,
+//! and the self-checking drift metadata rejects tampering.
+
+use hetcomm::pattern::generators::random_pattern;
+use hetcomm::topology::machines;
+use hetcomm::trace::{persist, Epoch, Trace};
+use hetcomm::util::prop::{check, Gen};
+
+/// A random trace: a random registry machine shape holding 1–6 epochs of
+/// random irregular patterns with adversarial tags.
+fn random_trace(g: &mut Gen) -> Trace {
+    let name = *g.choose(&machines::NAMES);
+    let (arch, _) = machines::parse(name, 1).expect("registry name");
+    let nodes = g.usize(2, 6);
+    let gpn = arch.sockets_per_node * g.usize(1, 4);
+    let machine = machines::with_shape(&arch, nodes, gpn);
+    let n_epochs = g.usize(1, 7);
+    let epochs = (0..n_epochs)
+        .map(|k| {
+            let n_msgs = g.usize(1, 40);
+            let max_bytes = g.msg_size().max(2);
+            let dup_p = *g.choose(&[0.0, 0.3]);
+            let pattern = random_pattern(&machine, g.rng(), n_msgs, max_bytes, dup_p);
+            // tags exercise the JSON string escaper
+            let tag = format!("e{k}\t\"quoted\\{}\"", g.usize(0, 100));
+            Epoch { index: k, tag, repeat: g.usize(1, 5), pattern }
+        })
+        .collect();
+    Trace { scenario: format!("prop \"{}\"", g.usize(0, 1000)), seed: g.u64(u64::MAX), machine, epochs }
+}
+
+#[test]
+fn traces_roundtrip_bit_for_bit() {
+    check("trace emit -> parse is the identity", 60, |g| {
+        let trace = random_trace(g);
+        trace.validate()?;
+        let json = persist::to_json(&trace);
+        let parsed = persist::parse_json(&json).map_err(|e| format!("parse failed: {e}\n{json}"))?;
+        if parsed != trace {
+            return Err("parsed trace differs from the original".into());
+        }
+        // emit is byte-stable across the round trip
+        let again = persist::to_json(&parsed);
+        if again != json {
+            return Err("re-emitted artifact bytes differ".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn epoch_stats_and_drift_survive_the_roundtrip() {
+    check("derived metadata is reconstruction-invariant", 30, |g| {
+        let trace = random_trace(g);
+        let parsed = persist::parse_json(&persist::to_json(&trace)).map_err(|e| e.to_string())?;
+        if parsed.epoch_stats() != trace.epoch_stats() {
+            return Err("epoch stats changed across the round trip".into());
+        }
+        let (a, b) = (trace.drifts(), parsed.drifts());
+        if a.len() != b.len() || a.iter().zip(&b).any(|(x, y)| x.to_bits() != y.to_bits()) {
+            return Err(format!("drifts changed: {a:?} vs {b:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tampered_stats_metadata_is_rejected() {
+    check("metadata self-check catches stats tampering", 20, |g| {
+        let trace = random_trace(g);
+        let json = persist::to_json(&trace);
+        // bump the declared inter-node message count of epoch 0 without
+        // touching the message list: the parser must refuse the artifact
+        let n = trace.epoch_stats()[0].total_internode_msgs;
+        let needle = format!("\"stats\": {{\"msgs\": {n},");
+        let tampered = json.replacen(&needle, &format!("\"stats\": {{\"msgs\": {},", n + 1), 1);
+        if tampered == json {
+            return Err(format!("needle {needle:?} not found in the artifact"));
+        }
+        match persist::parse_json(&tampered) {
+            Err(e) if e.contains("disagree") => Ok(()),
+            Err(e) => Err(format!("wrong rejection: {e}")),
+            Ok(_) => Err("tampered stats metadata must be rejected".into()),
+        }
+    });
+}
