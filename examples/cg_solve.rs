@@ -78,7 +78,7 @@ fn main() -> anyhow::Result<()> {
         let (iters, resid) = cg(&mut engine, &b, 1e-6, 500)?;
         let wall = t0.elapsed().as_secs_f64();
         anyhow::ensure!(resid < 1e-6, "{}: CG did not converge (resid {resid})", strategy.label());
-        t.row(vec![strategy.label(), iters.to_string(), format!("{resid:.2e}"), format!("{wall:.3}"), fmt_secs(sim)]);
+        t.row(vec![strategy.label().to_string(), iters.to_string(), format!("{resid:.2e}"), format!("{wall:.3}"), fmt_secs(sim)]);
     }
     t.print();
     println!("\nAll strategies take the same iteration count: the halo exchange is exact,\nonly the (simulated) communication cost differs.");

@@ -79,11 +79,11 @@ fn main() -> anyhow::Result<()> {
         "Simulated (Lassen-calibrated) halo-exchange time per iteration",
         &["strategy", "sim comm [s]", "inter-node msgs"],
     );
-    let mut best = (String::new(), f64::INFINITY);
+    let mut best = ("", f64::INFINITY);
     for s in Strategy::all() {
         let d = DistSpmv::new(&a, gpus, &machine, s, SpmvConfig { verify: false, ..cfg.clone() })?;
         let sim = d.sim_report.total;
-        t.row(vec![s.label(), fmt_secs(sim), d.sim_report.internode_msgs.to_string()]);
+        t.row(vec![s.label().to_string(), fmt_secs(sim), d.sim_report.internode_msgs.to_string()]);
         if sim < best.1 {
             best = (s.label(), sim);
         }

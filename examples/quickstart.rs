@@ -39,7 +39,7 @@ fn main() -> anyhow::Result<()> {
         let report = dist.run(&v, 1)?;
         anyhow::ensure!(report.verified == Some(true), "{} failed verification", strategy.label());
         table.row(vec![
-            strategy.label(),
+            strategy.label().to_string(),
             fmt_secs(report.sim_exchange_per_iter),
             fmt_secs(report.wall_exchange),
             report.msgs_per_iter.to_string(),

@@ -27,7 +27,7 @@ fn main() {
         let mat = suite::proxy(info, scale);
         let strategies = Strategy::all();
         let mut header: Vec<String> = vec!["gpus".into(), "recv-nodes".into(), "msg-vol".into()];
-        header.extend(strategies.iter().map(|s| s.label()));
+        header.extend(strategies.iter().map(|s| s.label().to_string()));
         header.push("best".into());
         let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
         let mut t = Table::new(
@@ -50,7 +50,7 @@ fn main() {
                 stats.num_in_nodes.to_string(),
                 fmt_bytes(stats.total_internode_bytes),
             ];
-            let mut best = (String::new(), f64::INFINITY);
+            let mut best = ("", f64::INFINITY);
             for &s in &strategies {
                 let ppn = match s.kind {
                     StrategyKind::SplitMd | StrategyKind::SplitDd => machine.cores_per_node(),
@@ -63,7 +63,7 @@ fn main() {
                     best = (s.label(), time);
                 }
             }
-            row.push(best.0);
+            row.push(best.0.to_string());
             t.row(row);
         }
         t.print();

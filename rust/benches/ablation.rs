@@ -151,7 +151,7 @@ fn exascale_outlook() {
                 name.to_string(),
                 arch.cores_per_node().to_string(),
                 size.to_string(),
-                best.label(),
+                best.label().to_string(),
                 fmt_secs(secs),
             ]);
         }

@@ -41,12 +41,22 @@ fn main() {
         t.row(vec![format!("schedule build [{}]", s.label()), fmt_secs(st.median), fmt_secs(st.p95), st.n.to_string()]);
     }
 
-    // simulator execution
+    // simulator execution: one-call wrapper vs the scratch-reusing hot path
     let sched = build_schedule(split, &machine, &pattern);
     let ss = bench(2, 10, || {
         std::hint::black_box(sim::run(&machine, &params, &sched, machine.cores_per_node()));
     });
     t.row(vec!["sim::run (split schedule)".into(), fmt_secs(ss.median), fmt_secs(ss.p95), ss.n.to_string()]);
+    let compiled_params = params.compile();
+    let mut scratch = sim::Scratch::new();
+    let sc = bench(2, 10, || {
+        std::hint::black_box(scratch.run_total(&machine, &compiled_params, &sched, machine.cores_per_node()));
+    });
+    t.row(vec!["sim scratch.run_total (reused buffers)".into(), fmt_secs(sc.median), fmt_secs(sc.p95), sc.n.to_string()]);
+    let sr = bench(2, 10, || {
+        std::hint::black_box(sim::run_reference(&machine, &params, &sched, machine.cores_per_node()));
+    });
+    t.row(vec!["sim::run_reference (hash-map executor)".into(), fmt_secs(sr.median), fmt_secs(sr.p95), sr.n.to_string()]);
 
     // exchange-plan compilation
     let sp = bench(1, 5, || {

@@ -33,7 +33,7 @@ fn main() {
         print!("{}", emit::render_tables(&result));
         for w in &result.report.winners {
             if w.size == 1024 && w.gen == PatternGen::Uniform {
-                winners.push((format!("256 msgs/{} nodes/dup {dup:.2} @1KiB", w.dest_nodes), w.winner.clone()));
+                winners.push((format!("256 msgs/{} nodes/dup {dup:.2} @1KiB", w.dest_nodes), w.winner.to_string()));
             }
         }
 

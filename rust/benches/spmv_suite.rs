@@ -28,7 +28,7 @@ fn main() {
         let mat = suite::proxy(info, scale);
         let strategies = Strategy::all();
         let mut header: Vec<String> = vec!["gpus".into(), "recv-nodes".into(), "IN vol".into()];
-        header.extend(strategies.iter().map(|s| s.label()));
+        header.extend(strategies.iter().map(|s| s.label().to_string()));
         header.push("min".into());
         let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
         let mut t = Table::new(format!("Figure 5.1 — {} proxy ({} rows, {} nnz)", info.name, mat.nrows, mat.nnz()), &hdr);
@@ -44,7 +44,7 @@ fn main() {
             let stats = pattern.stats(&machine);
             let mut row =
                 vec![gpus.to_string(), stats.num_in_nodes.to_string(), fmt_bytes(stats.total_internode_bytes)];
-            let mut best = (String::new(), f64::INFINITY, Transport::Staged, StrategyKind::Standard);
+            let mut best = ("", f64::INFINITY, Transport::Staged, StrategyKind::Standard);
             for &s in &strategies {
                 let ppn = match s.kind {
                     StrategyKind::SplitMd | StrategyKind::SplitDd => machine.cores_per_node(),
@@ -57,7 +57,7 @@ fn main() {
                     best = (s.label(), time, s.transport, s.kind);
                 }
             }
-            row.push(best.0.clone());
+            row.push(best.0.to_string());
             t.row(row);
             rows += 1;
             if best.3 == StrategyKind::SplitMd {

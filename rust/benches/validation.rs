@@ -47,7 +47,7 @@ fn main() {
             let sched = build_schedule(s, &machine, &pattern);
             let simd = sim::run(&machine, &params, &sched, ppn).total;
             let ratio = model / simd;
-            t.row(vec![gpus.to_string(), s.label(), fmt_secs(model), fmt_secs(simd), format!("{ratio:.2}")]);
+            t.row(vec![gpus.to_string(), s.label().to_string(), fmt_secs(model), fmt_secs(simd), format!("{ratio:.2}")]);
             total += 1;
             // "tight upper bound, generally same order of magnitude"
             if ratio >= 0.3 && ratio <= 12.0 {

@@ -9,11 +9,10 @@
 use super::cache::{CacheKey, CacheStats, ShardedLru};
 use super::surface::{DecisionSurface, Pattern, RankedStrategies};
 use crate::params::MachineParams;
-use crate::sweep::effective_threads;
+use crate::util::pool::{self, effective_threads};
 use crate::util::rng::Rng;
 use crate::util::stats::percentile_sorted;
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
@@ -35,7 +34,7 @@ pub struct BurstReport {
     /// Cache counter deltas over the burst.
     pub cache: CacheStats,
     /// Winner label → count over the whole burst (seed-deterministic).
-    pub winners: BTreeMap<String, usize>,
+    pub winners: BTreeMap<&'static str, usize>,
     /// Measured per-query lookup latency percentiles [s].
     pub p50_s: f64,
     pub p99_s: f64,
@@ -105,27 +104,12 @@ impl AdvisorService {
         self.advise(&Query { pattern: *pattern, surface })
     }
 
-    /// Batched advise over a worker pool; results come back in query order
+    /// Batched advise over the shared worker pool
+    /// ([`crate::util::pool::map`]); results come back in query order
     /// regardless of thread scheduling.
     pub fn advise_batch(&self, queries: &[Query], threads: usize) -> Vec<Result<Arc<RankedStrategies>, String>> {
         let threads = effective_threads(threads, queries.len());
-        let next = AtomicUsize::new(0);
-        let collected = Mutex::new(Vec::with_capacity(queries.len()));
-        std::thread::scope(|scope| {
-            for _ in 0..threads {
-                scope.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= queries.len() {
-                        break;
-                    }
-                    let r = self.advise(&queries[i]);
-                    collected.lock().expect("batch collector poisoned").push((i, r));
-                });
-            }
-        });
-        let mut collected = collected.into_inner().expect("batch collector poisoned");
-        collected.sort_unstable_by_key(|&(i, _)| i);
-        collected.into_iter().map(|(_, r)| r).collect()
+        pool::map(queries.len(), threads, |i| self.advise(&queries[i]))
     }
 
     /// Apply a recalibration to one machine's surface: mark the refit size
@@ -181,7 +165,7 @@ impl AdvisorService {
 
         let threads = effective_threads(threads, n);
         let stats_before = self.cache.stats();
-        let histogram = Mutex::new(BTreeMap::<String, usize>::new());
+        let histogram = Mutex::new(BTreeMap::<&'static str, usize>::new());
         let latencies = Mutex::new(Vec::with_capacity(n));
         let histogram_ref = &histogram;
         let latencies_ref = &latencies;
@@ -189,7 +173,7 @@ impl AdvisorService {
         std::thread::scope(|scope| {
             for chunk in queries.chunks(n.div_ceil(threads)) {
                 scope.spawn(move || {
-                    let mut local_hist = BTreeMap::<String, usize>::new();
+                    let mut local_hist = BTreeMap::<&'static str, usize>::new();
                     let mut local_lat = Vec::with_capacity(chunk.len());
                     for q in chunk {
                         let t = Instant::now();

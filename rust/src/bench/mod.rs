@@ -1,9 +1,13 @@
 //! In-tree benchmark harness (no `criterion` in the offline image).
 //!
 //! Provides wall-clock timing with warmup, summary statistics and aligned
-//! table printing used by every `rust/benches/*` target. Benchmarks of
-//! *simulated* quantities (the paper's figures) print model/simulator
+//! table printing used by every `rust/benches/*` target, plus the
+//! [`perf`] self-benchmark harness behind `hetcomm perf` (seeded hot-path
+//! throughput with a committed `BENCH_sweep.json` trajectory). Benchmarks
+//! of *simulated* quantities (the paper's figures) print model/simulator
 //! seconds; benchmarks of the coordinator hot path print real wall time.
+
+pub mod perf;
 
 use crate::util::stats::Summary;
 use std::time::Instant;

@@ -1,0 +1,582 @@
+//! The `hetcomm perf` self-benchmark harness.
+//!
+//! Measures the simulator/serving hot paths the ROADMAP treats as product
+//! metrics, on deterministic seeded workloads:
+//!
+//! - **sweep-compiled** — the production sweep cell loop (pattern lowered
+//!   once per cell, compiled schedules, zero-allocation executor) in
+//!   evaluated (cell × strategy) pairs per second;
+//! - **sweep-reference** — the same cells through the retained naive path
+//!   (per-strategy schedule rebuild + hash-map executor), the baseline the
+//!   compiled path must beat by `--min-speedup`;
+//! - **schedule-compile** — schedule build + SoA lowering throughput;
+//! - **advise-burst** — cached advisor queries per second
+//!   ([`AdvisorService::bench_burst`]).
+//!
+//! The emitted report is a versioned `hetcomm.bench.v1` JSON artifact. Its
+//! *deterministic projection* (everything except wall-clock fields, which
+//! `timing: false` emits as `null`) is byte-identical across runs and
+//! machines for a fixed seed: work counts and FNV-1a checksums over the
+//! simulated result bits pin the *answers*, while throughput fields track
+//! the *time to answer*. `BENCH_sweep.json` at the repo root seeds the
+//! committed performance trajectory (see docs/PERFORMANCE.md).
+//!
+//! The harness self-verifies: the compiled and reference sweeps must agree
+//! on every result bit or [`run_perf`] errors out.
+
+use crate::advisor::{AdvisorService, DecisionSurface, SurfaceAxes};
+use crate::comm::{build_schedule_from, Strategy};
+use crate::pattern::generators::Scenario;
+use crate::sim::{self, CompiledPattern};
+use crate::sweep::engine::eval_cell;
+use crate::sweep::{effective_threads, ExecMode, GridSpec, PatternGen, SweepConfig};
+use crate::topology::machines;
+use crate::util::json::{fmt_f64, Json};
+use crate::util::pool;
+use crate::util::stats::percentile_sorted;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// Versioned schema id of the emitted artifact.
+pub const SCHEMA: &str = "hetcomm.bench.v1";
+/// Schema version (bump on breaking report-shape changes).
+pub const VERSION: u64 = 1;
+
+/// Harness configuration.
+#[derive(Clone, Debug)]
+pub struct PerfConfig {
+    /// Small CI-sized workload instead of the full one.
+    pub quick: bool,
+    /// Base seed for every seeded workload in the run.
+    pub seed: u64,
+    /// Worker threads (0 = all cores).
+    pub threads: usize,
+}
+
+impl Default for PerfConfig {
+    fn default() -> PerfConfig {
+        PerfConfig { quick: true, seed: 42, threads: 0 }
+    }
+}
+
+/// One benchmark's outcome.
+#[derive(Clone, Debug)]
+pub struct BenchRow {
+    pub name: &'static str,
+    /// Work items evaluated (cell×strategy pairs, schedules, queries).
+    pub items: usize,
+    pub elapsed_s: f64,
+    pub items_per_sec: f64,
+    /// Per-item latency percentiles [s] (per *cell* for the sweeps).
+    pub p50_s: f64,
+    pub p99_s: f64,
+    /// Advisor cache hit rate (advise-burst only).
+    pub cache_hit_rate: Option<f64>,
+}
+
+/// The full harness outcome.
+#[derive(Clone, Debug)]
+pub struct PerfReport {
+    pub quick: bool,
+    pub seed: u64,
+    /// Worker threads actually used (a measured property, not part of the
+    /// deterministic projection).
+    pub threads: usize,
+    pub machine: String,
+    /// Workload shape echoed for the artifact.
+    pub cells: usize,
+    pub strategies: usize,
+    pub passes: usize,
+    pub schedule_iters: usize,
+    pub advise_queries: usize,
+    /// FNV-1a checksums over the deterministic result bits.
+    pub checksum_sweep: u64,
+    pub checksum_schedules: u64,
+    pub checksum_advise: u64,
+    pub results: Vec<BenchRow>,
+    /// sweep-compiled throughput over sweep-reference throughput.
+    pub speedup_vs_reference: f64,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv_word(mut h: u64, word: u64) -> u64 {
+    for b in word.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+fn fnv_str(mut h: u64, s: &str) -> u64 {
+    for &b in s.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+fn perf_grid(quick: bool) -> GridSpec {
+    if quick {
+        GridSpec {
+            gens: vec![PatternGen::Uniform, PatternGen::Random],
+            dest_nodes: vec![4],
+            gpus_per_node: vec![4],
+            sizes: vec![1 << 8, 1 << 12, 1 << 16],
+            n_msgs: 64,
+            dup_frac: 0.0,
+        }
+    } else {
+        GridSpec {
+            gens: vec![PatternGen::Uniform, PatternGen::Random],
+            dest_nodes: vec![4, 8],
+            gpus_per_node: vec![4],
+            sizes: vec![1 << 6, 1 << 10, 1 << 14, 1 << 18],
+            n_msgs: 256,
+            dup_frac: 0.0,
+        }
+    }
+}
+
+/// One timed sweep over the workload grid in the given executor mode.
+/// Returns (checksum over result bits, per-cell latencies, elapsed seconds).
+fn sweep_bench(config: &SweepConfig, mode: ExecMode, threads: usize, passes: usize) -> (u64, Vec<f64>, f64) {
+    let (arch, params) = machines::parse(&config.machine, 1).expect("perf machine is registered");
+    let compiled_params = params.compile();
+    let cells = config.grid.cells();
+    let mut checksum = FNV_OFFSET;
+    let mut latencies = Vec::with_capacity(cells.len() * passes);
+    let mut elapsed = 0.0f64;
+    for pass in 0..passes {
+        let t0 = Instant::now();
+        let out = pool::map_with(cells.len(), threads, sim::Scratch::new, |scratch, i| {
+            let t = Instant::now();
+            let rows = eval_cell(config, &arch, &params, &compiled_params, &cells[i], mode, scratch);
+            (rows, t.elapsed().as_secs_f64())
+        });
+        elapsed += t0.elapsed().as_secs_f64();
+        for (rows, latency) in out {
+            latencies.push(latency);
+            if pass == 0 {
+                // the checksum pins one pass; later passes must reproduce it
+                for row in rows {
+                    checksum = fnv_word(checksum, row.model_s.to_bits());
+                    checksum = fnv_word(checksum, row.sim_s.map(f64::to_bits).unwrap_or(0));
+                }
+            }
+        }
+    }
+    (checksum, latencies, elapsed)
+}
+
+fn row_from(name: &'static str, items: usize, elapsed_s: f64, latencies: &mut [f64]) -> BenchRow {
+    latencies.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    BenchRow {
+        name,
+        items,
+        elapsed_s,
+        items_per_sec: if elapsed_s > 0.0 { items as f64 / elapsed_s } else { f64::INFINITY },
+        p50_s: percentile_sorted(latencies, 50.0),
+        p99_s: percentile_sorted(latencies, 99.0),
+        cache_hit_rate: None,
+    }
+}
+
+/// Run the full harness. Fails if the compiled and reference sweeps ever
+/// disagree on a result bit — `hetcomm perf` doubles as an equivalence
+/// check of the hot-path refactor.
+pub fn run_perf(config: &PerfConfig) -> Result<PerfReport, String> {
+    let grid = perf_grid(config.quick);
+    let cells = grid.cells().len();
+    let strategies = Strategy::all().len();
+    // enough passes to amortize scheduler noise on small CI runners — the
+    // --min-speedup gate compares two wall-clock rates of this workload
+    let passes = if config.quick { 3 } else { 4 };
+    let schedule_iters = if config.quick { 50 } else { 200 };
+    let advise_queries = if config.quick { 2000 } else { 20_000 };
+    let threads = effective_threads(config.threads, cells);
+    let sweep_config = SweepConfig {
+        grid: grid.clone(),
+        strategies: Strategy::all(),
+        seed: config.seed,
+        threads,
+        sim: true,
+        machine: "lassen".into(),
+    };
+
+    // --- sweep: compiled vs naive per-strategy-rebuild reference ---
+    let (sum_fast, mut lat_fast, t_fast) = sweep_bench(&sweep_config, ExecMode::Compiled, threads, passes);
+    let (sum_ref, mut lat_ref, t_ref) = sweep_bench(&sweep_config, ExecMode::Reference, threads, passes);
+    if sum_fast != sum_ref {
+        return Err(format!(
+            "compiled and reference sweeps disagree: checksum {sum_fast:#018x} != {sum_ref:#018x} — the hot path changed an answer"
+        ));
+    }
+    let pair_items = cells * strategies * passes;
+    let fast_row = row_from("sweep-compiled", pair_items, t_fast, &mut lat_fast);
+    let ref_row = row_from("sweep-reference", pair_items, t_ref, &mut lat_ref);
+    let speedup = if fast_row.items_per_sec.is_finite() && ref_row.items_per_sec > 0.0 {
+        fast_row.items_per_sec / ref_row.items_per_sec
+    } else {
+        f64::INFINITY
+    };
+
+    // --- schedule build + lowering throughput ---
+    let (arch, params) = machines::parse("lassen", 1).expect("lassen is registered");
+    let compiled_params = params.compile();
+    let machine = grid.machine_for_arch(&arch, 4, 4);
+    let scenario = Scenario { n_msgs: grid.n_msgs, msg_size: 4096, n_dest: 4, dup_frac: 0.0 };
+    let pattern = scenario.materialize(&machine);
+    let lowered = CompiledPattern::lower(&machine, &pattern);
+    let mut scratch = sim::Scratch::new();
+    let mut checksum_schedules = FNV_OFFSET;
+    let mut sched_lat = Vec::with_capacity(schedule_iters);
+    let t0 = Instant::now();
+    for iter in 0..schedule_iters {
+        let t = Instant::now();
+        for s in Strategy::all() {
+            let schedule = build_schedule_from(s, &machine, &lowered);
+            scratch.schedule.lower_into(&machine, &compiled_params, &schedule, s.sim_ppn(&machine));
+            if iter == 0 {
+                for &d in &scratch.schedule.x_dur {
+                    checksum_schedules = fnv_word(checksum_schedules, d.to_bits());
+                }
+            }
+        }
+        sched_lat.push(t.elapsed().as_secs_f64() / strategies as f64);
+    }
+    let t_sched = t0.elapsed().as_secs_f64();
+    let sched_row = row_from("schedule-compile", schedule_iters * strategies, t_sched, &mut sched_lat);
+
+    // --- advisor burst ---
+    let axes = if config.quick {
+        SurfaceAxes {
+            msgs: vec![64, 256],
+            sizes: vec![1 << 8, 1 << 12, 1 << 16],
+            dest_nodes: vec![4, 16],
+            gpus_per_node: vec![4],
+        }
+    } else {
+        SurfaceAxes::default_axes()
+    };
+    let surface = DecisionSurface::compile("lassen", axes, 0.0)?;
+    let service = AdvisorService::new(vec![surface]);
+    let burst = service.bench_burst(advise_queries, config.seed, config.threads)?;
+    let mut checksum_advise = FNV_OFFSET;
+    for (label, count) in &burst.winners {
+        checksum_advise = fnv_str(checksum_advise, label);
+        checksum_advise = fnv_word(checksum_advise, *count as u64);
+    }
+    let advise_row = BenchRow {
+        name: "advise-burst",
+        items: burst.queries,
+        elapsed_s: burst.elapsed_s,
+        items_per_sec: if burst.elapsed_s > 0.0 { burst.queries as f64 / burst.elapsed_s } else { f64::INFINITY },
+        p50_s: burst.p50_s,
+        p99_s: burst.p99_s,
+        cache_hit_rate: Some(burst.cache.hit_rate()),
+    };
+
+    Ok(PerfReport {
+        quick: config.quick,
+        seed: config.seed,
+        threads,
+        machine: "lassen".into(),
+        cells,
+        strategies,
+        passes,
+        schedule_iters,
+        advise_queries,
+        checksum_sweep: sum_fast,
+        checksum_schedules,
+        checksum_advise,
+        results: vec![fast_row, ref_row, sched_row, advise_row],
+        speedup_vs_reference: speedup,
+    })
+}
+
+fn hex(x: u64) -> String {
+    format!("\"{x:#018x}\"")
+}
+
+fn opt_num(x: f64, timing: bool) -> String {
+    if timing {
+        fmt_f64(x)
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Serialize a report as `hetcomm.bench.v1` JSON. With `timing: false`
+/// every wall-clock-derived field (and the thread count) is emitted as
+/// `null`, yielding the byte-deterministic projection CI diffes.
+pub fn report_to_json(r: &PerfReport, timing: bool) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    let _ = writeln!(out, "  \"schema\": \"{SCHEMA}\",");
+    let _ = writeln!(out, "  \"version\": {VERSION},");
+    let _ = writeln!(out, "  \"mode\": \"{}\",", if r.quick { "quick" } else { "full" });
+    let _ = writeln!(out, "  \"machine\": \"{}\",", r.machine);
+    // string seed: u64 values above 2^53 do not survive a JSON f64
+    // round-trip (same convention as hetcomm.trace.v1)
+    let _ = writeln!(out, "  \"seed\": \"{}\",", r.seed);
+    let _ = writeln!(out, "  \"threads\": {},", if timing { r.threads.to_string() } else { "null".into() });
+    let _ = writeln!(
+        out,
+        "  \"workload\": {{\"cells\": {}, \"strategies\": {}, \"passes\": {}, \"schedule_iters\": {}, \"advise_queries\": {}}},",
+        r.cells, r.strategies, r.passes, r.schedule_iters, r.advise_queries
+    );
+    let _ = writeln!(
+        out,
+        "  \"checksums\": {{\"sweep\": {}, \"schedules\": {}, \"advise\": {}}},",
+        hex(r.checksum_sweep),
+        hex(r.checksum_schedules),
+        hex(r.checksum_advise)
+    );
+    out.push_str("  \"results\": [\n");
+    for (i, row) in r.results.iter().enumerate() {
+        let comma = if i + 1 < r.results.len() { "," } else { "" };
+        let hit = match row.cache_hit_rate {
+            Some(h) if timing => fmt_f64(h),
+            Some(_) => "null".to_string(),
+            None => "null".to_string(),
+        };
+        let _ = writeln!(
+            out,
+            "    {{\"name\": \"{}\", \"items\": {}, \"elapsed_s\": {}, \"items_per_sec\": {}, \
+             \"p50_s\": {}, \"p99_s\": {}, \"cache_hit_rate\": {}}}{comma}",
+            row.name,
+            row.items,
+            opt_num(row.elapsed_s, timing),
+            opt_num(row.items_per_sec, timing),
+            opt_num(row.p50_s, timing),
+            opt_num(row.p99_s, timing),
+            hit,
+        );
+    }
+    out.push_str("  ],\n");
+    let _ = writeln!(out, "  \"speedup_vs_reference\": {}", opt_num(r.speedup_vs_reference, timing));
+    out.push_str("}\n");
+    out
+}
+
+/// Validate a parsed artifact against the `hetcomm.bench.v1` schema.
+/// Returns the (mode, seed) pair so callers can decide checksum
+/// comparability.
+pub fn validate_artifact(doc: &Json) -> Result<(String, u64), String> {
+    let schema = doc.field("schema")?.as_str()?;
+    if schema != SCHEMA {
+        return Err(format!("schema {schema:?} is not {SCHEMA:?}"));
+    }
+    let version = doc.field("version")?.as_usize()?;
+    if version as u64 != VERSION {
+        return Err(format!("version {version} is not {VERSION}"));
+    }
+    let mode = doc.field("mode")?.as_str()?.to_string();
+    // string seed (u64 > 2^53 is unsafe through the f64 JSON number path)
+    let seed = doc
+        .field("seed")?
+        .as_str()?
+        .parse::<u64>()
+        .map_err(|e| format!("seed must be a u64 string: {e}"))?;
+    let workload = doc.field("workload")?;
+    for key in ["cells", "strategies", "passes", "schedule_iters", "advise_queries"] {
+        workload.field(key)?.as_usize()?;
+    }
+    let checksums = doc.field("checksums")?;
+    for key in ["sweep", "schedules", "advise"] {
+        let v = checksums.field(key)?;
+        if !matches!(v, Json::Null | Json::Str(_)) {
+            return Err(format!("checksum {key:?} must be a hex string or null"));
+        }
+    }
+    let results = doc.field("results")?.as_arr()?;
+    if results.is_empty() {
+        return Err("empty results".into());
+    }
+    for row in results {
+        row.field("name")?.as_str()?;
+        row.field("items")?.as_usize()?;
+        for key in ["elapsed_s", "items_per_sec", "p50_s", "p99_s"] {
+            if !matches!(row.field(key)?, Json::Null | Json::Num(_)) {
+                return Err(format!("result field {key:?} must be a number or null"));
+            }
+        }
+    }
+    doc.field("speedup_vs_reference")?;
+    Ok((mode, seed))
+}
+
+fn checksum_of(doc: &Json, key: &str) -> Result<Option<u64>, String> {
+    match doc.field("checksums")?.field(key)? {
+        Json::Null => Ok(None),
+        Json::Str(s) => {
+            let trimmed = s.trim_start_matches("0x");
+            u64::from_str_radix(trimmed, 16).map(Some).map_err(|e| format!("bad checksum {s:?}: {e}"))
+        }
+        other => Err(format!("checksum {key:?}: unexpected {other:?}")),
+    }
+}
+
+/// Compare a fresh report against a committed baseline artifact.
+///
+/// - Schema/version must validate.
+/// - Checksums and throughput are only compared when the baseline's
+///   (mode, seed) matches this run — different modes are different
+///   workloads, so cross-mode rates are meaningless.
+/// - When comparable and the baseline pins checksums, they must match bit
+///   for bit (behavioral regressions fail fast, on any machine).
+/// - When comparable and the baseline carries throughput numbers, the
+///   current run must stay above `(1 - max_regression) ×` the baseline per
+///   benchmark (machine-dependent; disable with `max_regression >= 1`).
+///
+/// Returns human-readable comparison notes on success.
+pub fn compare_baseline(
+    current: &PerfReport,
+    baseline_text: &str,
+    max_regression: f64,
+) -> Result<Vec<String>, String> {
+    let doc = Json::parse(baseline_text).map_err(|e| format!("baseline is not valid JSON: {e}"))?;
+    let (mode, seed) = validate_artifact(&doc)?;
+    let mut notes = Vec::new();
+    let comparable = mode == (if current.quick { "quick" } else { "full" }) && seed == current.seed;
+
+    if comparable {
+        for (key, ours) in [
+            ("sweep", current.checksum_sweep),
+            ("schedules", current.checksum_schedules),
+            ("advise", current.checksum_advise),
+        ] {
+            match checksum_of(&doc, key)? {
+                Some(pinned) if pinned != ours => {
+                    return Err(format!(
+                        "checksum {key:?} drifted: baseline {pinned:#018x}, current {ours:#018x} — the answers changed"
+                    ));
+                }
+                Some(_) => notes.push(format!("checksum {key}: matches baseline")),
+                None => notes
+                    .push(format!("checksum {key}: unpinned in baseline (refresh with `hetcomm perf --quick --out`)")),
+            }
+        }
+    } else {
+        // Different (mode, seed) means a different workload: neither the
+        // checksums nor per-item throughput are meaningfully comparable
+        // (quick and full differ ~4x in per-cell cost alone).
+        notes.push(format!(
+            "baseline (mode {mode}, seed {seed}) does not match this run; shape/schema validated only"
+        ));
+        return Ok(notes);
+    }
+
+    for row in doc.field("results")?.as_arr()? {
+        let name = row.field("name")?.as_str()?;
+        let base_rate = match row.field("items_per_sec")? {
+            Json::Num(x) => *x,
+            _ => {
+                notes.push(format!("{name}: baseline carries no throughput (seed artifact); skipped"));
+                continue;
+            }
+        };
+        let Some(cur) = current.results.iter().find(|r| r.name == name) else {
+            notes.push(format!("{name}: not in current run; skipped"));
+            continue;
+        };
+        let floor = base_rate * (1.0 - max_regression);
+        if cur.items_per_sec < floor {
+            return Err(format!(
+                "{name}: {:.1} items/s fell below {:.1} ({}% regression floor of baseline {:.1})",
+                cur.items_per_sec,
+                floor,
+                (max_regression * 100.0).round(),
+                base_rate
+            ));
+        }
+        notes.push(format!("{name}: {:.1} items/s vs baseline {:.1} — ok", cur.items_per_sec, base_rate));
+    }
+    Ok(notes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> PerfConfig {
+        PerfConfig { quick: true, seed: 7, threads: 2 }
+    }
+
+    #[test]
+    fn perf_runs_and_self_verifies() {
+        let r = run_perf(&tiny()).unwrap();
+        assert_eq!(r.results.len(), 4);
+        assert!(r.results.iter().all(|row| row.items > 0));
+        assert!(r.speedup_vs_reference.is_finite() && r.speedup_vs_reference > 0.0);
+        assert!(r.results[3].cache_hit_rate.unwrap() > 0.5);
+    }
+
+    #[test]
+    fn deterministic_projection_is_byte_stable() {
+        let a = run_perf(&tiny()).unwrap();
+        let b = run_perf(&tiny()).unwrap();
+        assert_eq!(report_to_json(&a, false), report_to_json(&b, false));
+        // and thread count must not change the answers either
+        let c = run_perf(&PerfConfig { threads: 1, ..tiny() }).unwrap();
+        assert_eq!(a.checksum_sweep, c.checksum_sweep);
+        assert_eq!(a.checksum_schedules, c.checksum_schedules);
+        assert_eq!(a.checksum_advise, c.checksum_advise);
+    }
+
+    #[test]
+    fn seed_moves_the_checksums() {
+        let a = run_perf(&tiny()).unwrap();
+        let b = run_perf(&PerfConfig { seed: 8, ..tiny() }).unwrap();
+        assert_ne!(a.checksum_sweep, b.checksum_sweep, "random-generator cells must follow the seed");
+    }
+
+    #[test]
+    fn emitted_artifact_validates_and_round_trips() {
+        let r = run_perf(&tiny()).unwrap();
+        for timing in [true, false] {
+            let text = report_to_json(&r, timing);
+            let doc = Json::parse(&text).unwrap();
+            let (mode, seed) = validate_artifact(&doc).unwrap();
+            assert_eq!((mode.as_str(), seed), ("quick", 7));
+        }
+        // string seeds survive the JSON round-trip even above 2^53
+        let mut big = r.clone();
+        big.seed = u64::MAX;
+        let doc = Json::parse(&report_to_json(&big, false)).unwrap();
+        assert_eq!(validate_artifact(&doc).unwrap().1, u64::MAX);
+    }
+
+    #[test]
+    fn mismatched_mode_or_seed_skips_rate_comparisons() {
+        let r = run_perf(&tiny()).unwrap();
+        // a baseline from a different seed must neither fail nor enforce
+        // cross-workload throughput floors — shape validation only
+        let mut other = r.clone();
+        other.seed = 8;
+        for row in &mut other.results {
+            row.items_per_sec *= 1000.0; // would trip the floor if compared
+        }
+        let notes = compare_baseline(&r, &report_to_json(&other, true), 0.5).unwrap();
+        assert_eq!(notes.len(), 1, "{notes:?}");
+        assert!(notes[0].contains("does not match"));
+    }
+
+    #[test]
+    fn baseline_comparison_checks_checksums_and_throughput() {
+        let r = run_perf(&tiny()).unwrap();
+        // self-comparison with timing pins both checksums and throughput
+        let notes = compare_baseline(&r, &report_to_json(&r, true), 0.5).unwrap();
+        assert!(notes.iter().any(|n| n.contains("matches baseline")));
+        // a tampered checksum must fail
+        let tampered = report_to_json(&r, true).replace(&format!("{:#018x}", r.checksum_sweep), "0xdeadbeefdeadbeef");
+        assert!(compare_baseline(&r, &tampered, 0.5).unwrap_err().contains("drifted"));
+        // timing-free baselines validate shape and skip regressions
+        let notes = compare_baseline(&r, &report_to_json(&r, false), 0.5).unwrap();
+        assert!(notes.iter().any(|n| n.contains("skipped")));
+        // garbage is rejected
+        assert!(compare_baseline(&r, "{}", 0.5).is_err());
+    }
+}

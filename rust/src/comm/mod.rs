@@ -143,8 +143,22 @@ impl Strategy {
         out
     }
 
-    pub fn label(&self) -> String {
-        format!("{} ({})", self.kind, self.transport)
+    /// The user-facing strategy label. `&'static str`: the Table 5 matrix
+    /// is closed (8 valid combinations), so hot structs and emitters can
+    /// carry labels without per-row allocation.
+    pub fn label(&self) -> &'static str {
+        match (self.kind, self.transport) {
+            (StrategyKind::Standard, Transport::Staged) => "Standard (staged)",
+            (StrategyKind::Standard, Transport::DeviceAware) => "Standard (device-aware)",
+            (StrategyKind::ThreeStep, Transport::Staged) => "3-Step (staged)",
+            (StrategyKind::ThreeStep, Transport::DeviceAware) => "3-Step (device-aware)",
+            (StrategyKind::TwoStep, Transport::Staged) => "2-Step (staged)",
+            (StrategyKind::TwoStep, Transport::DeviceAware) => "2-Step (device-aware)",
+            (StrategyKind::SplitMd, Transport::Staged) => "Split+MD (staged)",
+            (StrategyKind::SplitMd, Transport::DeviceAware) => "Split+MD (device-aware)",
+            (StrategyKind::SplitDd, Transport::Staged) => "Split+DD (staged)",
+            (StrategyKind::SplitDd, Transport::DeviceAware) => "Split+DD (device-aware)",
+        }
     }
 
     /// Parse a [`Strategy::label`] back into a strategy (the inverse used by
@@ -277,7 +291,20 @@ pub trait ScheduleGen {
 }
 
 /// Build the schedule for any strategy configuration.
+///
+/// Convenience wrapper: lowers the pattern
+/// ([`crate::sim::CompiledPattern`]) and builds from the lowered form.
+/// Sweep-scale callers evaluating several strategies on one pattern should
+/// lower once and call [`build_schedule_from`] per strategy instead — the
+/// grouping, duplicate-elimination and locality work is shared.
 pub fn build_schedule(strategy: Strategy, machine: &Machine, pattern: &CommPattern) -> Schedule {
+    let compiled = crate::sim::CompiledPattern::lower(machine, pattern);
+    build_schedule_from(strategy, machine, &compiled)
+}
+
+/// Build the schedule for any strategy configuration from a pattern lowered
+/// once per cell ([`crate::sim::CompiledPattern::lower`]).
+pub fn build_schedule_from(strategy: Strategy, machine: &Machine, pattern: &crate::sim::CompiledPattern) -> Schedule {
     match strategy.kind {
         StrategyKind::Standard => standard::schedule(strategy, machine, pattern),
         StrategyKind::ThreeStep => three_step::schedule(strategy, machine, pattern),

@@ -15,15 +15,15 @@
 //!   duplicate device pointers (fewer distribution hops, pricier copies —
 //!   the 4-proc class of Table 3).
 
-use super::plan::{self, group_by_node_pair};
+use super::plan;
 use super::{CopyKind, CopyOp, Loc, Phase, Schedule, Strategy, StrategyKind, Transport, Xfer};
-use crate::pattern::CommPattern;
+use crate::sim::CompiledPattern;
 use crate::topology::{GpuId, Machine, NodeId, ProcId};
 use std::collections::BTreeMap;
 
 const AGG: u32 = u32::MAX;
 
-pub fn schedule(strategy: Strategy, machine: &Machine, pattern: &CommPattern) -> Schedule {
+pub fn schedule(strategy: Strategy, machine: &Machine, pattern: &CompiledPattern) -> Schedule {
     assert_eq!(strategy.transport, Transport::Staged, "Split has no device-aware variant");
     let ppg = match strategy.kind {
         StrategyKind::SplitMd => 1,
@@ -32,7 +32,6 @@ pub fn schedule(strategy: Strategy, machine: &Machine, pattern: &CommPattern) ->
     };
     // Split enlists every CPU core on the node (40 on Lassen).
     let ppn = machine.cores_per_node();
-    let groups = group_by_node_pair(machine, pattern);
     let host = |g: GpuId| plan::gpu_host_proc_in(machine, g, ppn, ppg);
 
     let mut d2h = Phase::new("d2h");
@@ -42,14 +41,14 @@ pub fn schedule(strategy: Strategy, machine: &Machine, pattern: &CommPattern) ->
     let mut h2d = Phase::new("h2d");
 
     // ---- Per sending node: chunking (Algorithm 1 lines 10-17). ----
-    // unique volume per (src node, dst node) and per (src gpu, dst node)
+    // unique volume per (src node, dst node) and per (src gpu, dst node),
+    // straight from the per-cell pattern lowering
     let mut vol_by_pair: BTreeMap<NodeId, BTreeMap<NodeId, usize>> = BTreeMap::new();
-    let mut vol_by_gpu_dest: BTreeMap<(NodeId, NodeId), Vec<(GpuId, usize)>> = BTreeMap::new();
-    for (&(k, l), msgs) in &groups {
-        let by_src = plan::unique_bytes_by_src(msgs);
-        let total: usize = by_src.values().sum();
-        *vol_by_pair.entry(k).or_default().entry(l).or_default() += total;
-        vol_by_gpu_dest.insert((k, l), by_src.into_iter().collect());
+    let mut vol_by_gpu_dest: BTreeMap<(NodeId, NodeId), &[(GpuId, usize)]> = BTreeMap::new();
+    for group in &pattern.groups {
+        let (k, l) = (group.src_node, group.dst_node);
+        *vol_by_pair.entry(k).or_default().entry(l).or_default() += group.unique_total;
+        vol_by_gpu_dest.insert((k, l), &group.unique_by_src);
     }
 
     // chunks per sending node, with sender-rank assignment (from the back).
@@ -80,32 +79,17 @@ pub fn schedule(strategy: Strategy, machine: &Machine, pattern: &CommPattern) ->
         }
     }
 
-    // ---- Staging copies (D2H) + delivery copies (H2D). ----
-    let mut stage_out: BTreeMap<GpuId, usize> = BTreeMap::new();
-    let mut deliver_in: BTreeMap<GpuId, usize> = BTreeMap::new();
-    for (&(_k, _l), by_src) in &vol_by_gpu_dest {
-        for &(g, b) in by_src {
-            *stage_out.entry(g).or_default() += b;
-        }
-    }
-    for msgs in groups.values() {
-        for (dst, bytes) in plan::bytes_by_dst(msgs) {
-            *deliver_in.entry(dst).or_default() += bytes;
-        }
-    }
+    // ---- Staging copies (D2H) + delivery copies (H2D): the per-cell
+    // lowering already summed unique staging and full delivery volumes. ----
     // Intra-node messages: host-level local exchange concurrent with the
     // scatter phase.
-    for (i, m) in pattern.msgs.iter().enumerate() {
-        if machine.gpu_node(m.src) == machine.gpu_node(m.dst) {
-            *stage_out.entry(m.src).or_default() += m.bytes;
-            *deliver_in.entry(m.dst).or_default() += m.bytes;
-            local_s.xfers.push(Xfer { src: Loc::Host(host(m.src)), dst: Loc::Host(host(m.dst)), bytes: m.bytes, tag: i as u32 });
-        }
+    for &(i, m) in &pattern.intra {
+        local_s.xfers.push(Xfer { src: Loc::Host(host(m.src)), dst: Loc::Host(host(m.dst)), bytes: m.bytes, tag: i });
     }
-    for (&g, &bytes) in &stage_out {
+    for &(g, bytes) in &pattern.stage_out_unique {
         d2h.copies.push(CopyOp { gpu: g, proc: host(g), bytes, dir: CopyKind::D2H, nprocs: ppg });
     }
-    for (&g, &bytes) in &deliver_in {
+    for &(g, bytes) in &pattern.deliver_in_full {
         h2d.copies.push(CopyOp { gpu: g, proc: host(g), bytes, dir: CopyKind::H2D, nprocs: ppg });
     }
 
@@ -119,7 +103,7 @@ pub fn schedule(strategy: Strategy, machine: &Machine, pattern: &CommPattern) ->
             by_dest.entry(c.dst_node).or_default().push((i, c, p));
         }
         for (&l, dest_chunks) in &by_dest {
-            let contribs = &vol_by_gpu_dest[&(k, l)];
+            let contribs = vol_by_gpu_dest[&(k, l)];
             let mut ci = 0usize; // chunk cursor
             let mut chunk_rem = dest_chunks[0].1.bytes;
             for &(g, mut b) in contribs {
@@ -152,8 +136,9 @@ pub fn schedule(strategy: Strategy, machine: &Machine, pattern: &CommPattern) ->
     // ---- local_Rcomm: deliver full per-dst-GPU volumes from the chunk
     // receive procs (greedy proration; duplicate expansion folds into the
     // final chunk of each (k,l)). ----
-    for (&(k, l), msgs) in &groups {
-        let deliveries: Vec<(GpuId, usize)> = plan::bytes_by_dst(msgs).into_iter().collect();
+    for group in &pattern.groups {
+        let (k, l) = (group.src_node, group.dst_node);
+        let deliveries = &group.by_dst;
         let pair_chunks: Vec<(usize, ProcId)> = chunks_by_src_node[&k]
             .iter()
             .enumerate()
@@ -163,7 +148,7 @@ pub fn schedule(strategy: Strategy, machine: &Machine, pattern: &CommPattern) ->
         debug_assert!(!pair_chunks.is_empty());
         let mut ci = 0usize;
         let mut chunk_rem = pair_chunks[0].0;
-        for &(g, mut need) in &deliveries {
+        for &(g, mut need) in deliveries {
             let dst_host = host(g);
             while need > 0 {
                 let last = ci + 1 == pair_chunks.len();
@@ -185,7 +170,7 @@ pub fn schedule(strategy: Strategy, machine: &Machine, pattern: &CommPattern) ->
     }
 
     Schedule {
-        strategy_label: strategy.label(),
+        strategy_label: strategy.label().to_string(),
         phases: [d2h, local_s, global, local_r, h2d].into_iter().filter(|p| !p.is_empty()).collect(),
     }
 }
@@ -193,8 +178,13 @@ pub fn schedule(strategy: Strategy, machine: &Machine, pattern: &CommPattern) ->
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::pattern::Msg;
+    use crate::comm::build_schedule as schedule_of;
+    use crate::pattern::{CommPattern, Msg};
     use crate::topology::machines::lassen;
+
+    fn schedule(s: Strategy, m: &Machine, p: &CommPattern) -> Schedule {
+        schedule_of(s, m, p)
+    }
 
     fn md() -> Strategy {
         Strategy::new(StrategyKind::SplitMd, Transport::Staged).unwrap()

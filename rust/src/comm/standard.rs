@@ -6,42 +6,37 @@
 //!   message, H2D copies.
 
 use super::{CopyKind, CopyOp, Loc, Phase, Schedule, Strategy, Transport, Xfer};
-use crate::pattern::CommPattern;
+use crate::sim::CompiledPattern;
 use crate::topology::Machine;
-use std::collections::BTreeMap;
 
-pub fn schedule(strategy: Strategy, machine: &Machine, pattern: &CommPattern) -> Schedule {
+pub fn schedule(strategy: Strategy, machine: &Machine, pattern: &CompiledPattern) -> Schedule {
     match strategy.transport {
         Transport::DeviceAware => device_aware(strategy, pattern),
         Transport::Staged => staged(strategy, machine, pattern),
     }
 }
 
-fn device_aware(strategy: Strategy, pattern: &CommPattern) -> Schedule {
+fn device_aware(strategy: Strategy, pattern: &CompiledPattern) -> Schedule {
     let mut phase = Phase::new("p2p");
-    for (i, m) in pattern.msgs.iter().enumerate() {
+    for (i, m) in pattern.pattern.msgs.iter().enumerate() {
         phase.xfers.push(Xfer { src: Loc::Gpu(m.src), dst: Loc::Gpu(m.dst), bytes: m.bytes, tag: i as u32 });
     }
-    Schedule { strategy_label: strategy.label(), phases: vec![phase] }
+    Schedule { strategy_label: strategy.label().to_string(), phases: vec![phase] }
 }
 
-fn staged(strategy: Strategy, machine: &Machine, pattern: &CommPattern) -> Schedule {
+fn staged(strategy: Strategy, machine: &Machine, pattern: &CompiledPattern) -> Schedule {
     let ppg = 1;
-    let ppn = machine.gpus_per_node() * ppg;
 
-    // Phase 1: each sending GPU copies its full outgoing payload to host.
+    // Phase 1: each sending GPU copies its full outgoing payload to host
+    // (no duplicate elimination — standard ships everything).
     let mut d2h = Phase::new("d2h");
-    let mut out_bytes: BTreeMap<crate::topology::GpuId, usize> = BTreeMap::new();
-    for m in &pattern.msgs {
-        *out_bytes.entry(m.src).or_default() += m.bytes;
-    }
-    for (&g, &bytes) in &out_bytes {
+    for &(g, bytes) in &pattern.out_bytes_all {
         d2h.copies.push(CopyOp { gpu: g, proc: machine.gpu_host_proc(g, ppg), bytes, dir: CopyKind::D2H, nprocs: 1 });
     }
 
     // Phase 2: host→host transfer per logical message.
     let mut p2p = Phase::new("p2p");
-    for (i, m) in pattern.msgs.iter().enumerate() {
+    for (i, m) in pattern.pattern.msgs.iter().enumerate() {
         p2p.xfers.push(Xfer {
             src: Loc::Host(machine.gpu_host_proc(m.src, ppg)),
             dst: Loc::Host(machine.gpu_host_proc(m.dst, ppg)),
@@ -52,17 +47,12 @@ fn staged(strategy: Strategy, machine: &Machine, pattern: &CommPattern) -> Sched
 
     // Phase 3: each receiving GPU copies its inbound payload from host.
     let mut h2d = Phase::new("h2d");
-    let mut in_bytes: BTreeMap<crate::topology::GpuId, usize> = BTreeMap::new();
-    for m in &pattern.msgs {
-        *in_bytes.entry(m.dst).or_default() += m.bytes;
-    }
-    for (&g, &bytes) in &in_bytes {
+    for &(g, bytes) in &pattern.in_bytes_all {
         h2d.copies.push(CopyOp { gpu: g, proc: machine.gpu_host_proc(g, ppg), bytes, dir: CopyKind::H2D, nprocs: 1 });
     }
 
-    let _ = ppn;
     Schedule {
-        strategy_label: strategy.label(),
+        strategy_label: strategy.label().to_string(),
         phases: [d2h, p2p, h2d].into_iter().filter(|p| !p.is_empty()).collect(),
     }
 }
@@ -70,9 +60,13 @@ fn staged(strategy: Strategy, machine: &Machine, pattern: &CommPattern) -> Sched
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::comm::StrategyKind;
-    use crate::pattern::Msg;
-    use crate::topology::{GpuId, machines::lassen};
+    use crate::comm::{build_schedule as schedule_of, StrategyKind};
+    use crate::pattern::{CommPattern, Msg};
+    use crate::topology::{machines::lassen, GpuId};
+
+    fn schedule(s: Strategy, m: &Machine, p: &CommPattern) -> Schedule {
+        schedule_of(s, m, p)
+    }
 
     fn pattern() -> CommPattern {
         CommPattern::new(vec![

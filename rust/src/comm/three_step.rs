@@ -10,49 +10,47 @@
 //! Intra-node logical messages ride the local exchange concurrently with
 //! the gather phase.
 
-use super::plan::{self, group_by_node_pair};
+use super::plan;
 use super::{CopyKind, CopyOp, Loc, Phase, Schedule, Strategy, Transport, Xfer};
-use crate::pattern::CommPattern;
+use crate::sim::CompiledPattern;
 use crate::topology::{GpuId, Machine};
-use std::collections::BTreeMap;
 
 const AGG: u32 = u32::MAX;
 
-pub fn schedule(strategy: Strategy, machine: &Machine, pattern: &CommPattern) -> Schedule {
-    let groups = group_by_node_pair(machine, pattern);
+pub fn schedule(strategy: Strategy, machine: &Machine, pattern: &CompiledPattern) -> Schedule {
     match strategy.transport {
-        Transport::DeviceAware => device_aware(strategy, machine, pattern, &groups),
-        Transport::Staged => staged(strategy, machine, pattern, &groups),
+        Transport::DeviceAware => device_aware(strategy, machine, pattern),
+        Transport::Staged => staged(strategy, machine, pattern),
     }
 }
 
-fn device_aware(
-    strategy: Strategy,
-    machine: &Machine,
-    pattern: &CommPattern,
-    groups: &plan::NodePairGroups,
-) -> Schedule {
+fn device_aware(strategy: Strategy, machine: &Machine, pattern: &CompiledPattern) -> Schedule {
     let mut gather = Phase::new("gather");
     let mut internode = Phase::new("inter-node");
     let mut redist = Phase::new("redistribute");
 
-    for (&(k, l), msgs) in groups {
+    for group in &pattern.groups {
+        let (k, l) = (group.src_node, group.dst_node);
         let pg_src = plan::paired_gpu(machine, k, l);
         let pg_dst = plan::paired_gpu(machine, l, k);
         // Step 1: contributing GPUs forward their unique bytes to the
         // paired GPU.
-        for (src, bytes) in plan::unique_bytes_by_src(msgs) {
+        for &(src, bytes) in &group.unique_by_src {
             if src != pg_src && bytes > 0 {
                 gather.xfers.push(Xfer { src: Loc::Gpu(src), dst: Loc::Gpu(pg_src), bytes, tag: AGG });
             }
         }
         // Step 2: one buffer per node pair.
-        let buf = plan::unique_bytes(msgs);
-        if buf > 0 {
-            internode.xfers.push(Xfer { src: Loc::Gpu(pg_src), dst: Loc::Gpu(pg_dst), bytes: buf, tag: AGG });
+        if group.unique_total > 0 {
+            internode.xfers.push(Xfer {
+                src: Loc::Gpu(pg_src),
+                dst: Loc::Gpu(pg_dst),
+                bytes: group.unique_total,
+                tag: AGG,
+            });
         }
         // Step 3: full delivery to each destination GPU.
-        for (dst, bytes) in plan::bytes_by_dst(msgs) {
+        for &(dst, bytes) in &group.by_dst {
             if dst != pg_dst && bytes > 0 {
                 redist.xfers.push(Xfer { src: Loc::Gpu(pg_dst), dst: Loc::Gpu(dst), bytes, tag: AGG });
             }
@@ -61,19 +59,17 @@ fn device_aware(
 
     // Local exchange: intra-node logical messages go direct, concurrent
     // with the gather step.
-    for (i, m) in pattern.msgs.iter().enumerate() {
-        if machine.gpu_node(m.src) == machine.gpu_node(m.dst) {
-            gather.xfers.push(Xfer { src: Loc::Gpu(m.src), dst: Loc::Gpu(m.dst), bytes: m.bytes, tag: i as u32 });
-        }
+    for &(i, m) in &pattern.intra {
+        gather.xfers.push(Xfer { src: Loc::Gpu(m.src), dst: Loc::Gpu(m.dst), bytes: m.bytes, tag: i });
     }
 
     Schedule {
-        strategy_label: strategy.label(),
+        strategy_label: strategy.label().to_string(),
         phases: [gather, internode, redist].into_iter().filter(|p| !p.is_empty()).collect(),
     }
 }
 
-fn staged(strategy: Strategy, machine: &Machine, pattern: &CommPattern, groups: &plan::NodePairGroups) -> Schedule {
+fn staged(strategy: Strategy, machine: &Machine, pattern: &CompiledPattern) -> Schedule {
     let ppg = 1;
     let ppn = machine.gpus_per_node() * ppg;
     let host = |g: GpuId| machine.gpu_host_proc(g, ppg);
@@ -85,48 +81,37 @@ fn staged(strategy: Strategy, machine: &Machine, pattern: &CommPattern, groups: 
     let mut h2d = Phase::new("h2d");
 
     // D2H: each sending GPU stages its unique inter-node bytes plus its
-    // intra-node payloads.
-    let mut stage_out: BTreeMap<GpuId, usize> = BTreeMap::new();
-    for msgs in groups.values() {
-        for (src, bytes) in plan::unique_bytes_by_src(msgs) {
-            *stage_out.entry(src).or_default() += bytes;
-        }
+    // intra-node payloads (precomputed once per cell); local exchange at
+    // host level runs concurrent with gather.
+    for &(i, m) in &pattern.intra {
+        gather.xfers.push(Xfer { src: Loc::Host(host(m.src)), dst: Loc::Host(host(m.dst)), bytes: m.bytes, tag: i });
     }
-    let mut deliver_in: BTreeMap<GpuId, usize> = BTreeMap::new();
-    for msgs in groups.values() {
-        for (dst, bytes) in plan::bytes_by_dst(msgs) {
-            *deliver_in.entry(dst).or_default() += bytes;
-        }
-    }
-    for (i, m) in pattern.msgs.iter().enumerate() {
-        if machine.gpu_node(m.src) == machine.gpu_node(m.dst) {
-            *stage_out.entry(m.src).or_default() += m.bytes;
-            *deliver_in.entry(m.dst).or_default() += m.bytes;
-            // Local exchange at host level, concurrent with gather.
-            gather.xfers.push(Xfer { src: Loc::Host(host(m.src)), dst: Loc::Host(host(m.dst)), bytes: m.bytes, tag: i as u32 });
-        }
-    }
-    for (&g, &bytes) in &stage_out {
+    for &(g, bytes) in &pattern.stage_out_unique {
         d2h.copies.push(CopyOp { gpu: g, proc: host(g), bytes, dir: CopyKind::D2H, nprocs: 1 });
     }
 
-    for (&(k, l), msgs) in groups {
+    for group in &pattern.groups {
+        let (k, l) = (group.src_node, group.dst_node);
         let pp_src = plan::paired_proc(machine, k, l, ppn);
         let pp_dst = plan::paired_proc(machine, l, k, ppn);
         // Step 1: gather on the paired process.
-        for (src, bytes) in plan::unique_bytes_by_src(msgs) {
+        for &(src, bytes) in &group.unique_by_src {
             let hp = host(src);
             if hp != pp_src && bytes > 0 {
                 gather.xfers.push(Xfer { src: Loc::Host(hp), dst: Loc::Host(pp_src), bytes, tag: AGG });
             }
         }
         // Step 2: single inter-node buffer.
-        let buf = plan::unique_bytes(msgs);
-        if buf > 0 {
-            internode.xfers.push(Xfer { src: Loc::Host(pp_src), dst: Loc::Host(pp_dst), bytes: buf, tag: AGG });
+        if group.unique_total > 0 {
+            internode.xfers.push(Xfer {
+                src: Loc::Host(pp_src),
+                dst: Loc::Host(pp_dst),
+                bytes: group.unique_total,
+                tag: AGG,
+            });
         }
         // Step 3: on-node redistribution, full volumes.
-        for (dst, bytes) in plan::bytes_by_dst(msgs) {
+        for &(dst, bytes) in &group.by_dst {
             let hp = host(dst);
             if hp != pp_dst && bytes > 0 {
                 redist.xfers.push(Xfer { src: Loc::Host(pp_dst), dst: Loc::Host(hp), bytes, tag: AGG });
@@ -134,12 +119,12 @@ fn staged(strategy: Strategy, machine: &Machine, pattern: &CommPattern, groups: 
         }
     }
 
-    for (&g, &bytes) in &deliver_in {
+    for &(g, bytes) in &pattern.deliver_in_full {
         h2d.copies.push(CopyOp { gpu: g, proc: host(g), bytes, dir: CopyKind::H2D, nprocs: 1 });
     }
 
     Schedule {
-        strategy_label: strategy.label(),
+        strategy_label: strategy.label().to_string(),
         phases: [d2h, gather, internode, redist, h2d].into_iter().filter(|p| !p.is_empty()).collect(),
     }
 }
@@ -147,9 +132,13 @@ fn staged(strategy: Strategy, machine: &Machine, pattern: &CommPattern, groups: 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::comm::StrategyKind;
-    use crate::pattern::Msg;
+    use crate::comm::{build_schedule as schedule_of, StrategyKind};
+    use crate::pattern::{CommPattern, Msg};
     use crate::topology::machines::lassen;
+
+    fn schedule(s: Strategy, m: &Machine, p: &CommPattern) -> Schedule {
+        schedule_of(s, m, p)
+    }
 
     fn strat(t: Transport) -> Strategy {
         Strategy::new(StrategyKind::ThreeStep, t).unwrap()

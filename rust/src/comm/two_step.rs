@@ -6,87 +6,74 @@
 //! (each process ships a given payload to a node once); message redundancy
 //! remains — every (process, destination node) pair costs one message.
 
-use super::plan::{self, group_by_node_pair};
+use super::plan;
 use super::{CopyKind, CopyOp, Loc, Phase, Schedule, Strategy, Transport, Xfer};
-use crate::pattern::{CommPattern, Msg};
+use crate::sim::CompiledPattern;
 use crate::topology::{GpuId, Machine, NodeId};
 use std::collections::BTreeMap;
 
 const AGG: u32 = u32::MAX;
 
-pub fn schedule(strategy: Strategy, machine: &Machine, pattern: &CommPattern) -> Schedule {
-    let groups = group_by_node_pair(machine, pattern);
+pub fn schedule(strategy: Strategy, machine: &Machine, pattern: &CompiledPattern) -> Schedule {
     match strategy.transport {
-        Transport::DeviceAware => device_aware(strategy, machine, pattern, &groups),
-        Transport::Staged => staged(strategy, machine, pattern, &groups),
+        Transport::DeviceAware => device_aware(strategy, machine, pattern),
+        Transport::Staged => staged(strategy, machine, pattern),
     }
 }
 
 /// Unique bytes per (source GPU → destination node), the Step-1 message
-/// payloads.
-fn per_src_payloads(groups: &plan::NodePairGroups) -> BTreeMap<(GpuId, NodeId), usize> {
+/// payloads. A (src, dst-node) pair lives in exactly one pair group (the
+/// source's node is fixed), so this is a re-keyed view of the lowered
+/// groups' per-source aggregates.
+fn per_src_payloads(pattern: &CompiledPattern) -> BTreeMap<(GpuId, NodeId), usize> {
     let mut out: BTreeMap<(GpuId, NodeId), usize> = BTreeMap::new();
-    for (&(_k, l), msgs) in groups {
-        for (src, bytes) in plan::unique_bytes_by_src(msgs) {
+    for group in &pattern.groups {
+        for &(src, bytes) in &group.unique_by_src {
             if bytes > 0 {
-                *out.entry((src, l)).or_default() += bytes;
+                *out.entry((src, group.dst_node)).or_default() += bytes;
             }
         }
     }
     out
 }
 
-/// The Step-2 redistribution source: payloads from node `k` land on the
-/// GPUs (or their hosts) paired with the senders; we approximate the
-/// redistribution fan-out from the *receiving pair* of each sender. For
-/// timing purposes each delivery is emitted from the paired receiver of the
-/// sender that contributed the largest share.
-fn dominant_sender(msgs: &[Msg], dst: GpuId) -> GpuId {
-    let mut by_src: BTreeMap<GpuId, usize> = BTreeMap::new();
-    for m in msgs.iter().filter(|m| m.dst == dst) {
-        *by_src.entry(m.src).or_default() += m.bytes;
-    }
-    by_src.into_iter().max_by_key(|&(src, b)| (b, std::cmp::Reverse(src.0))).map(|(s, _)| s).expect("dst present")
-}
+// The Step-2 redistribution source: payloads from node `k` land on the
+// GPUs (or their hosts) paired with the senders; the redistribution fan-out
+// is approximated from the *receiving pair* of each sender. For timing
+// purposes each delivery is emitted from the paired receiver of the sender
+// that contributed the largest share — precomputed per group as
+// `dominant_src` during pattern lowering.
 
-fn device_aware(
-    strategy: Strategy,
-    machine: &Machine,
-    pattern: &CommPattern,
-    groups: &plan::NodePairGroups,
-) -> Schedule {
+fn device_aware(strategy: Strategy, machine: &Machine, pattern: &CompiledPattern) -> Schedule {
     let mut send = Phase::new("pair-send");
     let mut redist = Phase::new("redistribute");
 
-    for ((src, l), bytes) in per_src_payloads(groups) {
+    for ((src, l), bytes) in per_src_payloads(pattern) {
         let pair = plan::gpu_rank_pair(machine, src, l);
         send.xfers.push(Xfer { src: Loc::Gpu(src), dst: Loc::Gpu(pair), bytes, tag: AGG });
     }
-    for (&(k, _l), msgs) in groups {
-        for (dst, bytes) in plan::bytes_by_dst(msgs) {
+    for group in &pattern.groups {
+        for (&(dst, bytes), &dom) in group.by_dst.iter().zip(&group.dominant_src) {
             if bytes == 0 {
                 continue;
             }
-            let via = plan::gpu_rank_pair(machine, dominant_sender(msgs, dst), machine.gpu_node(dst));
-            let _ = k;
+            let via = plan::gpu_rank_pair(machine, dom, machine.gpu_node(dst));
             if via != dst {
                 redist.xfers.push(Xfer { src: Loc::Gpu(via), dst: Loc::Gpu(dst), bytes, tag: AGG });
             }
         }
     }
-    for (i, m) in pattern.msgs.iter().enumerate() {
-        if machine.gpu_node(m.src) == machine.gpu_node(m.dst) {
-            send.xfers.push(Xfer { src: Loc::Gpu(m.src), dst: Loc::Gpu(m.dst), bytes: m.bytes, tag: i as u32 });
-        }
+    for &(i, m) in &pattern.intra {
+        send.xfers.push(Xfer { src: Loc::Gpu(m.src), dst: Loc::Gpu(m.dst), bytes: m.bytes, tag: i });
     }
 
     Schedule {
-        strategy_label: strategy.label(),
+        strategy_label: strategy.label().to_string(),
         phases: [send, redist].into_iter().filter(|p| !p.is_empty()).collect(),
     }
 }
 
-fn staged(strategy: Strategy, machine: &Machine, pattern: &CommPattern, groups: &plan::NodePairGroups) -> Schedule {
+fn staged(strategy: Strategy, machine: &Machine, pattern: &CompiledPattern) -> Schedule {
     let ppg = 1;
     let host = |g: GpuId| machine.gpu_host_proc(g, ppg);
     let ppn = machine.gpus_per_node() * ppg;
@@ -96,32 +83,37 @@ fn staged(strategy: Strategy, machine: &Machine, pattern: &CommPattern, groups: 
     let mut redist = Phase::new("redistribute");
     let mut h2d = Phase::new("h2d");
 
+    // 2-Step historically derives its staging/delivery volumes from its own
+    // emission loops (so a GPU with only zero-byte inter-node payloads gets
+    // no copy at all), which differs from the shared
+    // `stage_out_unique`/`deliver_in_full` precompute exactly on zero-byte
+    // messages. Rebuild the maps from the lowered aggregates — the dedup
+    // and grouping work stays shared — to keep the emitted schedule
+    // bit-identical to the pre-refactor builder even on degenerate input.
     let mut stage_out: BTreeMap<GpuId, usize> = BTreeMap::new();
     let mut deliver_in: BTreeMap<GpuId, usize> = BTreeMap::new();
 
-    for ((src, l), bytes) in per_src_payloads(groups) {
+    for ((src, l), bytes) in per_src_payloads(pattern) {
         let pair = plan::rank_pair(machine, host(src), l, ppn);
         send.xfers.push(Xfer { src: Loc::Host(host(src)), dst: Loc::Host(pair), bytes, tag: AGG });
         *stage_out.entry(src).or_default() += bytes;
     }
-    for (&(_k, _l), msgs) in groups {
-        for (dst, bytes) in plan::bytes_by_dst(msgs) {
+    for group in &pattern.groups {
+        for (&(dst, bytes), &dom) in group.by_dst.iter().zip(&group.dominant_src) {
             if bytes == 0 {
                 continue;
             }
-            let via = plan::rank_pair(machine, host(dominant_sender(msgs, dst)), machine.gpu_node(dst), ppn);
+            let via = plan::rank_pair(machine, host(dom), machine.gpu_node(dst), ppn);
             if via != host(dst) {
                 redist.xfers.push(Xfer { src: Loc::Host(via), dst: Loc::Host(host(dst)), bytes, tag: AGG });
             }
             *deliver_in.entry(dst).or_default() += bytes;
         }
     }
-    for (i, m) in pattern.msgs.iter().enumerate() {
-        if machine.gpu_node(m.src) == machine.gpu_node(m.dst) {
-            send.xfers.push(Xfer { src: Loc::Host(host(m.src)), dst: Loc::Host(host(m.dst)), bytes: m.bytes, tag: i as u32 });
-            *stage_out.entry(m.src).or_default() += m.bytes;
-            *deliver_in.entry(m.dst).or_default() += m.bytes;
-        }
+    for &(i, m) in &pattern.intra {
+        send.xfers.push(Xfer { src: Loc::Host(host(m.src)), dst: Loc::Host(host(m.dst)), bytes: m.bytes, tag: i });
+        *stage_out.entry(m.src).or_default() += m.bytes;
+        *deliver_in.entry(m.dst).or_default() += m.bytes;
     }
 
     for (&g, &bytes) in &stage_out {
@@ -132,7 +124,7 @@ fn staged(strategy: Strategy, machine: &Machine, pattern: &CommPattern, groups: 
     }
 
     Schedule {
-        strategy_label: strategy.label(),
+        strategy_label: strategy.label().to_string(),
         phases: [d2h, send, redist, h2d].into_iter().filter(|p| !p.is_empty()).collect(),
     }
 }
@@ -140,8 +132,13 @@ fn staged(strategy: Strategy, machine: &Machine, pattern: &CommPattern, groups: 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::comm::StrategyKind;
+    use crate::comm::{build_schedule as schedule_of, StrategyKind};
+    use crate::pattern::{CommPattern, Msg};
     use crate::topology::machines::lassen;
+
+    fn schedule(s: Strategy, m: &Machine, p: &CommPattern) -> Schedule {
+        schedule_of(s, m, p)
+    }
 
     fn strat(t: Transport) -> Strategy {
         Strategy::new(StrategyKind::TwoStep, t).unwrap()
@@ -213,17 +210,9 @@ mod tests {
             Msg::new(GpuId(2), GpuId(7), 10),
             Msg::new(GpuId(2), GpuId(4), 10),
         ]);
-        let std_s = crate::comm::standard::schedule(
-            Strategy::new(StrategyKind::Standard, Transport::DeviceAware).unwrap(),
-            &m,
-            &p,
-        );
+        let std_s = schedule_of(Strategy::new(StrategyKind::Standard, Transport::DeviceAware).unwrap(), &m, &p);
         let two_s = schedule(strat(Transport::DeviceAware), &m, &p);
-        let three_s = crate::comm::three_step::schedule(
-            Strategy::new(StrategyKind::ThreeStep, Transport::DeviceAware).unwrap(),
-            &m,
-            &p,
-        );
+        let three_s = schedule_of(Strategy::new(StrategyKind::ThreeStep, Transport::DeviceAware).unwrap(), &m, &p);
         let ppn = 4;
         assert_eq!(std_s.internode_msgs(&m, ppn), 5);
         assert_eq!(two_s.internode_msgs(&m, ppn), 3); // gpus 0,1,2 once each

@@ -24,7 +24,10 @@
 //!   Algorithms 1–2 live in [`comm::split`].
 //! - [`sim`] — the discrete-event cluster simulator that stands in for the
 //!   Lassen testbed: it executes schedules against the measured parameters,
-//!   including max-rate NIC injection sharing.
+//!   including max-rate NIC injection sharing. The hot path is compiled
+//!   ([`sim::compiled`]): patterns are lowered once per cell, schedules into
+//!   flat SoA arrays, and executed allocation-free against reusable
+//!   scratch buffers (docs/PERFORMANCE.md).
 //! - [`sparse`] — CSR/ELL sparse matrices, Matrix Market I/O, structured
 //!   generators and SuiteSparse structural proxies, and the row-wise
 //!   partitioner that induces the SpMV communication patterns.
@@ -45,7 +48,9 @@
 //!   synthetic evolving scenarios (AMR drift, sparsification, rebalance,
 //!   halo bursts), and a replay engine whose adaptive mode re-advises on
 //!   pattern drift (the `replay` subcommand and `sweep --trace`).
-//! - [`bench`] — the in-tree benchmark harness used by `rust/benches/*`.
+//! - [`bench`] — the in-tree benchmark harness used by `rust/benches/*`,
+//!   plus [`bench::perf`], the `hetcomm perf` self-benchmark harness behind
+//!   the committed `BENCH_sweep.json` performance trajectory.
 
 pub mod advisor;
 pub mod bench;

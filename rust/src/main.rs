@@ -12,6 +12,10 @@
 //!   evolving communication traces and replay them under static or
 //!   drift-adaptive strategy policies;
 //! - `spmv`     — run the distributed SpMV benchmark on a matrix proxy;
+//! - `perf`     — the hot-path self-benchmark harness: seeded, deterministic
+//!   throughput measurements (cells/sec, schedules/sec, advise-queries/sec)
+//!   emitted as a versioned `hetcomm.bench.v1` artifact, with baseline
+//!   comparison against the committed `BENCH_sweep.json` trajectory;
 //! - `validate` — compare model predictions against simulated SpMV
 //!   communication (Figure 4.2);
 //! - `e2e`      — run the end-to-end power iteration through PJRT.
@@ -37,6 +41,7 @@ fn main() {
         "advise" => cmd_advise(rest),
         "replay" => cmd_replay(rest),
         "spmv" => cmd_spmv(rest),
+        "perf" => cmd_perf(rest),
         "validate" => cmd_validate(rest),
         "study" => cmd_study(rest),
         "e2e" => cmd_e2e(rest),
@@ -66,6 +71,7 @@ SUBCOMMANDS:
   advise     online strategy advisor: compile / query / bench-burst / recalibrate
   replay     trace-driven workload replay: record / synthesize / adapt online
   spmv       distributed SpMV communication benchmark (SuiteSparse proxies)
+  perf       hot-path self-benchmark: seeded throughput report + baseline compare
   validate   model-vs-simulation comparison (Figure 4.2)
   study      Section 6 outlook: strategy winners on future machines
   e2e        end-to-end power iteration through the PJRT artifact
@@ -140,9 +146,9 @@ fn cmd_model(argv: &[String]) -> i32 {
         format!("Modeled time: {} msgs x {} B to {} nodes (dup {:.0}%)", sc.n_msgs, sc.msg_size, sc.n_dest, sc.dup_frac * 100.0),
         &["strategy", "modeled[s]"],
     );
-    let mut best: Option<(String, f64)> = None;
+    let mut best: Option<(&'static str, f64)> = None;
     for (s, secs) in sm.all_times(&inputs) {
-        t.row(vec![s.label(), fmt_secs(secs)]);
+        t.row(vec![s.label().to_string(), fmt_secs(secs)]);
         if best.as_ref().map(|b| secs < b.1).unwrap_or(true) {
             best = Some((s.label(), secs));
         }
@@ -550,7 +556,7 @@ fn cmd_advise(argv: &[String]) -> i32 {
             &["rank", "strategy", "predicted[s]"],
         );
         for (rank, (strategy, secs)) in ranked.ranked.iter().enumerate() {
-            t.row(vec![(rank + 1).to_string(), strategy.label(), fmt_secs(*secs)]);
+            t.row(vec![(rank + 1).to_string(), strategy.label().to_string(), fmt_secs(*secs)]);
         }
         t.print();
         let (best, secs) = ranked.best();
@@ -893,18 +899,142 @@ fn cmd_spmv(argv: &[String]) -> i32 {
         match DistSpmv::new(&mat, gpus, &machine, s, cfg.clone()) {
             Ok(d) => match d.run(&v, a.get_usize("iters").unwrap()) {
                 Ok(rep) => t.row(vec![
-                    s.label(),
+                    s.label().to_string(),
                     fmt_secs(rep.sim_exchange_per_iter),
                     fmt_secs(rep.wall_exchange),
                     rep.msgs_per_iter.to_string(),
                     format!("{:?}", rep.verified),
                 ]),
-                Err(e) => t.row(vec![s.label(), format!("run error: {e}"), String::new(), String::new(), String::new()]),
+                Err(e) => {
+                    let msg = format!("run error: {e}");
+                    t.row(vec![s.label().to_string(), msg, String::new(), String::new(), String::new()])
+                }
             },
-            Err(e) => t.row(vec![s.label(), format!("setup error: {e}"), String::new(), String::new(), String::new()]),
+            Err(e) => {
+                let msg = format!("setup error: {e}");
+                t.row(vec![s.label().to_string(), msg, String::new(), String::new(), String::new()])
+            }
         }
     }
     t.print();
+    0
+}
+
+fn cmd_perf(argv: &[String]) -> i32 {
+    use hetcomm::bench::perf;
+    let cli = Cli::new("hetcomm perf", "hot-path self-benchmarks with a committed baseline trajectory")
+        .switch("quick", "run the CI-sized workload instead of the full one")
+        .flag("seed", "42", "base seed (fixed seed => byte-deterministic projection)")
+        .flag("threads", "0", "worker threads (0 = all cores; answers never depend on this)")
+        .flag("out", "-", "write the hetcomm.bench.v1 report to this path ('-' = stdout)")
+        .switch("no-timing", "emit the deterministic projection (wall-clock fields as null)")
+        .flag("baseline", "", "compare against a committed hetcomm.bench.v1 artifact (e.g. BENCH_sweep.json)")
+        .flag("min-speedup", "2.0", "fail unless compiled/reference sweep throughput ratio is >= this")
+        .flag("max-regression", "0.5", "fail if throughput falls below (1 - this) x baseline")
+        .switch("selfcheck", "run the workload twice and require a byte-identical deterministic projection");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{}", e.0);
+            return 2;
+        }
+    };
+    let parsed = (a.get_u64("seed"), a.get_usize("threads"), a.get_f64("min-speedup"), a.get_f64("max-regression"));
+    let (seed, threads, min_speedup, max_regression) = match parsed {
+        (Ok(s), Ok(t), Ok(m), Ok(r)) => (s, t, m, r),
+        (Err(e), ..) | (_, Err(e), ..) | (_, _, Err(e), _) | (.., Err(e)) => {
+            eprintln!("{}", e.0);
+            return 2;
+        }
+    };
+    let config = perf::PerfConfig { quick: a.get_bool("quick"), seed, threads };
+    let report = match perf::run_perf(&config) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("perf harness failed: {e}");
+            return 1;
+        }
+    };
+    let timing = !a.get_bool("no-timing");
+    let body = perf::report_to_json(&report, timing);
+
+    // the emitter must always produce a schema-valid artifact
+    let doc = match hetcomm::util::json::Json::parse(&body) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("internal error: emitted report is not valid JSON: {e}");
+            return 1;
+        }
+    };
+    if let Err(e) = perf::validate_artifact(&doc) {
+        eprintln!("internal error: emitted report fails schema validation: {e}");
+        return 1;
+    }
+
+    if a.get_bool("selfcheck") {
+        match perf::run_perf(&config) {
+            Ok(second) => {
+                let (p1, p2) = (perf::report_to_json(&report, false), perf::report_to_json(&second, false));
+                if p1 != p2 {
+                    eprintln!("selfcheck failed: two runs produced different deterministic projections");
+                    return 1;
+                }
+                eprintln!("selfcheck: deterministic projection byte-identical across two runs");
+            }
+            Err(e) => {
+                eprintln!("selfcheck rerun failed: {e}");
+                return 1;
+            }
+        }
+    }
+
+    let out_path = a.get("out");
+    if out_path == "-" {
+        print!("{body}");
+    } else if let Err(e) = std::fs::write(out_path, &body) {
+        eprintln!("cannot write {out_path}: {e}");
+        return 1;
+    } else {
+        eprintln!("wrote {} report to {out_path}", perf::SCHEMA);
+    }
+
+    for row in &report.results {
+        eprintln!(
+            "{:>16}: {:>10.1} items/s ({} items, p50 {}, p99 {})",
+            row.name,
+            row.items_per_sec,
+            row.items,
+            fmt_secs(row.p50_s).trim(),
+            fmt_secs(row.p99_s).trim()
+        );
+    }
+    eprintln!("compiled-vs-reference sweep speedup: {:.2}x (required {min_speedup:.2}x)", report.speedup_vs_reference);
+    if report.speedup_vs_reference < min_speedup {
+        eprintln!("speedup below the required margin");
+        return 1;
+    }
+
+    let baseline_path = a.get("baseline");
+    if !baseline_path.is_empty() {
+        let text = match std::fs::read_to_string(baseline_path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("cannot read baseline {baseline_path}: {e}");
+                return 1;
+            }
+        };
+        match perf::compare_baseline(&report, &text, max_regression) {
+            Ok(notes) => {
+                for note in notes {
+                    eprintln!("baseline: {note}");
+                }
+            }
+            Err(e) => {
+                eprintln!("baseline comparison failed: {e}");
+                return 1;
+            }
+        }
+    }
     0
 }
 
@@ -940,7 +1070,7 @@ fn cmd_validate(argv: &[String]) -> i32 {
         let model = sm.time(s, &inputs);
         let sched = hetcomm::comm::build_schedule(s, &machine, &pattern);
         let simd = hetcomm::sim::run(&machine, &params, &sched, ppn).total;
-        t.row(vec![s.label(), fmt_secs(model), fmt_secs(simd), format!("{:.2}", model / simd)]);
+        t.row(vec![s.label().to_string(), fmt_secs(model), fmt_secs(simd), format!("{:.2}", model / simd)]);
     }
     t.print();
     0
@@ -998,7 +1128,7 @@ fn cmd_study(argv: &[String]) -> i32 {
                 name.to_string(),
                 machine.cores_per_node().to_string(),
                 size.to_string(),
-                best.label(),
+                best.label().to_string(),
                 fmt_secs(secs),
             ]);
         }

@@ -269,6 +269,43 @@ impl MachineParams {
         out
     }
 
+    /// Memoize the protocol-band selection into per-(endpoint, locality)
+    /// piecewise tables for the simulator hot path. The compiled form
+    /// answers [`CompiledParams::msg_time`] with one bounded linear scan
+    /// over at most two size cuts instead of re-branching through
+    /// [`MachineParams::cpu_protocol`] / [`MachineParams::gpu_protocol`] and
+    /// the row-index matches on every call; results are bit-for-bit
+    /// identical to [`MachineParams::msg_time`].
+    pub fn compile(&self) -> CompiledParams {
+        let cpu_table = |l: Locality| MsgTimeTable {
+            // cpu_protocol: s < short_max -> short; s <= eager_max -> eager
+            // (inclusive bound); else rendezvous.
+            cuts: [self.short_max, self.eager_max.saturating_add(1)],
+            n_cuts: 2,
+            ab: [
+                self.cpu_ab(Protocol::Short, l),
+                self.cpu_ab(Protocol::Eager, l),
+                self.cpu_ab(Protocol::Rendezvous, l),
+            ],
+        };
+        let gpu_table = |l: Locality| MsgTimeTable {
+            // gpu_protocol: s <= gpu_eager_max -> eager (inclusive); else rend.
+            cuts: [self.gpu_eager_max.saturating_add(1), usize::MAX],
+            n_cuts: 1,
+            ab: [
+                self.gpu_ab(Protocol::Eager, l),
+                self.gpu_ab(Protocol::Rendezvous, l),
+                self.gpu_ab(Protocol::Rendezvous, l),
+            ],
+        };
+        let locs = [Locality::OnSocket, Locality::OnNode, Locality::OffNode];
+        CompiledParams {
+            tables: [locs.map(cpu_table), locs.map(gpu_table)],
+            memcpy: self.memcpy,
+            inv_rn: self.inv_rn,
+        }
+    }
+
     /// Load a parameter table from a config file with `[cpu.short]`,
     /// `[cpu.eager]`, `[cpu.rend]`, `[gpu.eager]`, `[gpu.rend]`,
     /// `[memcpy.p1]`, `[memcpy.p4]` and `[network]` sections. Missing
@@ -317,6 +354,81 @@ impl MachineParams {
             p.gpu_eager_max = sec.usize_or("gpu_eager_max", p.gpu_eager_max)?;
         }
         Ok(p)
+    }
+}
+
+/// Piecewise (α, β) bands over message size for one (endpoint, locality)
+/// pair: `cuts[i]` is the first size *beyond* band `i` (exclusive upper
+/// bound), mirroring the inclusive/exclusive protocol switch points of
+/// [`MachineParams::cpu_protocol`] and [`MachineParams::gpu_protocol`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MsgTimeTable {
+    cuts: [usize; 2],
+    n_cuts: usize,
+    ab: [AlphaBeta; 3],
+}
+
+impl MsgTimeTable {
+    /// (α, β) row selected for an `s`-byte message.
+    #[inline]
+    pub fn ab(&self, s: usize) -> AlphaBeta {
+        let mut i = 0;
+        while i < self.n_cuts && s >= self.cuts[i] {
+            i += 1;
+        }
+        self.ab[i]
+    }
+
+    /// Postal-model time for an `s`-byte message (identical bits to the
+    /// branching path).
+    #[inline]
+    pub fn time(&self, s: usize) -> f64 {
+        self.ab(s).time(s)
+    }
+}
+
+/// The memoized form of [`MachineParams`] used by the simulator hot path
+/// ([`crate::sim`]): protocol-band lookup tables per (endpoint, locality),
+/// the memcpy classes, and the NIC injection rate. Build one per machine
+/// with [`MachineParams::compile`] and share it across cells.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompiledParams {
+    /// `tables[endpoint][locality]` with endpoint 0 = CPU, 1 = GPU.
+    tables: [[MsgTimeTable; 3]; 2],
+    memcpy: [[AlphaBeta; 2]; 2],
+    /// Inverse NIC injection rate `1/R_N` [s/B].
+    pub inv_rn: f64,
+}
+
+impl CompiledParams {
+    /// The band table for an (endpoint, locality) pair.
+    #[inline]
+    pub fn table(&self, ep: Endpoint, l: Locality) -> &MsgTimeTable {
+        let ei = match ep {
+            Endpoint::Cpu => 0,
+            Endpoint::Gpu => 1,
+        };
+        &self.tables[ei][loc_idx(l)]
+    }
+
+    /// Postal-model time for one message — bit-identical to
+    /// [`MachineParams::msg_time`].
+    #[inline]
+    pub fn msg_time(&self, ep: Endpoint, l: Locality, s: usize) -> f64 {
+        self.table(ep, l).time(s)
+    }
+
+    /// Host↔device copy time — bit-identical to
+    /// [`MachineParams::memcpy_time`].
+    #[inline]
+    pub fn memcpy_time(&self, dir: CopyDir, s: usize, nprocs: usize) -> f64 {
+        assert!(nprocs >= 1 && nprocs <= 4, "memcpy procs {nprocs} outside measured range 1..=4");
+        let row = if nprocs == 1 { 0 } else { 1 };
+        let col = match dir {
+            CopyDir::H2D => 0,
+            CopyDir::D2H => 1,
+        };
+        self.memcpy[row][col].time(s.div_ceil(nprocs))
     }
 }
 
@@ -413,6 +525,52 @@ mod tests {
         assert!((q.cpu[0][0].alpha - p.cpu[0][0].alpha * 0.5).abs() < 1e-20);
         assert!((q.cpu[0][0].beta - p.cpu[0][0].beta / 2.0).abs() < 1e-22);
         assert!((q.rn() - p.rn() * 2.0).abs() / q.rn() < 1e-12);
+    }
+
+    #[test]
+    fn compiled_tables_match_branching_path_bit_for_bit() {
+        let p = lassen_params();
+        let c = p.compile();
+        // straddle every protocol boundary, both sides, both endpoints
+        let sizes = [
+            0usize, 1, 511, 512, 513, 8191, 8192, 8193, 1 << 14, 1 << 20, 1 << 24,
+        ];
+        for l in [Locality::OnSocket, Locality::OnNode, Locality::OffNode] {
+            for ep in [Endpoint::Cpu, Endpoint::Gpu] {
+                for &s in &sizes {
+                    assert_eq!(
+                        c.msg_time(ep, l, s).to_bits(),
+                        p.msg_time(ep, l, s).to_bits(),
+                        "{ep:?} {l} {s}"
+                    );
+                }
+            }
+        }
+        for dir in [CopyDir::H2D, CopyDir::D2H] {
+            for np in 1..=4usize {
+                for &s in &sizes {
+                    assert_eq!(c.memcpy_time(dir, s, np).to_bits(), p.memcpy_time(dir, s, np).to_bits());
+                }
+            }
+        }
+        assert_eq!(c.inv_rn, p.inv_rn);
+    }
+
+    #[test]
+    fn compiled_tables_follow_config_overrides() {
+        let cfg = crate::util::config::Config::parse("[network]\neager_max = 4096\n").unwrap();
+        let p = MachineParams::from_config(&cfg).unwrap();
+        let c = p.compile();
+        // the moved eager->rendezvous switch must be baked into the cuts
+        for s in [4096usize, 4097] {
+            let a = c.msg_time(Endpoint::Cpu, Locality::OffNode, s);
+            let b = p.msg_time(Endpoint::Cpu, Locality::OffNode, s);
+            assert_eq!(a.to_bits(), b.to_bits(), "{s}");
+        }
+        assert_ne!(
+            c.table(Endpoint::Cpu, Locality::OffNode).ab(4097),
+            c.table(Endpoint::Cpu, Locality::OffNode).ab(4096)
+        );
     }
 
     #[test]

@@ -1,0 +1,384 @@
+//! Compiled forms of the simulation hot path.
+//!
+//! Two lowerings live here, one per hot axis of the sweep loop:
+//!
+//! - [`CompiledPattern`] lowers a [`CommPattern`] against a machine **once
+//!   per cell**: every message's node pair is resolved, inter-node messages
+//!   are grouped by ordered node pair with their dedup aggregates
+//!   (unique-bytes-per-source, full-delivery-per-destination, dominant
+//!   senders) precomputed, and the staging/delivery volumes every staged
+//!   builder needs are summed up front. All 8 Table 5 strategies then build
+//!   their schedules from this one lowering
+//!   ([`crate::comm::build_schedule_from`]), so pattern grouping, duplicate
+//!   elimination and locality resolution stop being per-strategy work.
+//!
+//! - [`CompiledSchedule`] lowers a built [`Schedule`] against
+//!   (machine, [`CompiledParams`], ppn) into flat SoA arrays: dense `u32`
+//!   resource ids (process / GPU / NIC / copy engine), precomputed postal
+//!   durations and NIC occupancies, byte counts and phase offsets. The
+//!   executor ([`crate::sim::exec::run_compiled`]) then walks plain arrays —
+//!   no hash maps, no enum matching, no allocation. `lower_into` reuses the
+//!   arrays across calls so a worker thread compiles schedules all sweep
+//!   long without touching the allocator (after warm-up growth).
+//!
+//! Both lowerings are *pure reshapes*: the simulated times they produce are
+//! bit-for-bit identical to the retained reference executor
+//! ([`crate::sim::exec::run_reference`]), which `rust/tests/prop_sim.rs`
+//! asserts on randomized schedules.
+
+use crate::comm::{plan, CopyKind, Loc, Schedule};
+use crate::params::{CompiledParams, CopyDir, Endpoint};
+use crate::pattern::{CommPattern, Msg};
+use crate::topology::{GpuId, Locality, Machine, NodeId};
+use std::collections::BTreeMap;
+
+/// Sentinel resource index: "this transfer does not cross the NIC".
+pub const NO_NIC: u32 = u32::MAX;
+
+/// One inter-node message group of a lowered pattern: everything the
+/// strategy builders derive per (source node, destination node).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PairGroup {
+    pub src_node: NodeId,
+    pub dst_node: NodeId,
+    /// The group's messages, in pattern order (matches
+    /// [`plan::group_by_node_pair`]).
+    pub msgs: Vec<Msg>,
+    /// Unique bytes per source GPU after duplicate elimination, in GPU-id
+    /// order ([`plan::unique_bytes_by_src`]).
+    pub unique_by_src: Vec<(GpuId, usize)>,
+    /// Total unique bytes of the group ([`plan::unique_bytes`]).
+    pub unique_total: usize,
+    /// Full delivery bytes per destination GPU, in GPU-id order
+    /// ([`plan::bytes_by_dst`]).
+    pub by_dst: Vec<(GpuId, usize)>,
+    /// For each `by_dst` entry, the sender contributing the largest share
+    /// (2-Step redistribution routing; ties broken toward the lowest id).
+    pub dominant_src: Vec<GpuId>,
+}
+
+/// A [`CommPattern`] lowered against a machine once per cell and shared by
+/// every strategy's schedule builder.
+#[derive(Clone, Debug)]
+pub struct CompiledPattern<'p> {
+    pub pattern: &'p CommPattern,
+    /// Inter-node groups in ordered-(src, dst)-node order.
+    pub groups: Vec<PairGroup>,
+    /// Intra-node messages with their original pattern indices (data-plane
+    /// tags), in pattern order.
+    pub intra: Vec<(u32, Msg)>,
+    /// Per-GPU outgoing bytes over *all* messages (Standard's staging
+    /// volumes — no dedup), in GPU-id order.
+    pub out_bytes_all: Vec<(GpuId, usize)>,
+    /// Per-GPU incoming bytes over *all* messages, in GPU-id order.
+    pub in_bytes_all: Vec<(GpuId, usize)>,
+    /// Per-GPU staged volume after duplicate elimination plus intra-node
+    /// payloads (the 3-Step / Split D2H staging volumes), in GPU-id order.
+    /// (2-Step rebuilds its own map from the group aggregates instead: its
+    /// historical builder skips GPUs whose only payloads are zero-byte,
+    /// while this precompute keeps them — identical on any real pattern.)
+    pub stage_out_unique: Vec<(GpuId, usize)>,
+    /// Per-GPU full delivery volume (duplicates expanded) plus intra-node
+    /// payloads (the 3-Step / Split H2D volumes), in GPU-id order.
+    pub deliver_in_full: Vec<(GpuId, usize)>,
+}
+
+impl<'p> CompiledPattern<'p> {
+    /// Lower a pattern: group, dedup and classify once for all strategies.
+    pub fn lower(machine: &Machine, pattern: &'p CommPattern) -> CompiledPattern<'p> {
+        let raw_groups = plan::group_by_node_pair(machine, pattern);
+        let mut groups = Vec::with_capacity(raw_groups.len());
+        let mut stage_out: BTreeMap<GpuId, usize> = BTreeMap::new();
+        let mut deliver_in: BTreeMap<GpuId, usize> = BTreeMap::new();
+        for ((src_node, dst_node), msgs) in raw_groups {
+            let unique_by_src: Vec<(GpuId, usize)> = plan::unique_bytes_by_src(&msgs).into_iter().collect();
+            let unique_total = plan::unique_bytes(&msgs);
+            let by_dst: Vec<(GpuId, usize)> = plan::bytes_by_dst(&msgs).into_iter().collect();
+            let dominant_src = by_dst.iter().map(|&(dst, _)| dominant_sender(&msgs, dst)).collect();
+            for &(g, b) in &unique_by_src {
+                *stage_out.entry(g).or_default() += b;
+            }
+            for &(g, b) in &by_dst {
+                *deliver_in.entry(g).or_default() += b;
+            }
+            groups.push(PairGroup { src_node, dst_node, msgs, unique_by_src, unique_total, by_dst, dominant_src });
+        }
+
+        let mut intra = Vec::new();
+        let mut out_all: BTreeMap<GpuId, usize> = BTreeMap::new();
+        let mut in_all: BTreeMap<GpuId, usize> = BTreeMap::new();
+        for (i, m) in pattern.msgs.iter().enumerate() {
+            *out_all.entry(m.src).or_default() += m.bytes;
+            *in_all.entry(m.dst).or_default() += m.bytes;
+            if machine.gpu_node(m.src) == machine.gpu_node(m.dst) {
+                *stage_out.entry(m.src).or_default() += m.bytes;
+                *deliver_in.entry(m.dst).or_default() += m.bytes;
+                intra.push((i as u32, *m));
+            }
+        }
+
+        CompiledPattern {
+            pattern,
+            groups,
+            intra,
+            out_bytes_all: out_all.into_iter().collect(),
+            in_bytes_all: in_all.into_iter().collect(),
+            stage_out_unique: stage_out.into_iter().collect(),
+            deliver_in_full: deliver_in.into_iter().collect(),
+        }
+    }
+}
+
+/// The sender contributing the largest share of a destination's bytes
+/// (ties toward the lowest GPU id — matches the 2-Step builder's historical
+/// `max_by_key((bytes, Reverse(src)))` rule).
+fn dominant_sender(msgs: &[Msg], dst: GpuId) -> GpuId {
+    let mut by_src: BTreeMap<GpuId, usize> = BTreeMap::new();
+    for m in msgs.iter().filter(|m| m.dst == dst) {
+        *by_src.entry(m.src).or_default() += m.bytes;
+    }
+    by_src
+        .into_iter()
+        .max_by_key(|&(src, b)| (b, std::cmp::Reverse(src.0)))
+        .map(|(s, _)| s)
+        .expect("dst present in group")
+}
+
+/// A [`Schedule`] lowered into flat SoA arrays the zero-allocation executor
+/// walks directly. Reused across cells via [`CompiledSchedule::lower_into`].
+#[derive(Clone, Debug, Default)]
+pub struct CompiledSchedule {
+    /// Phase labels, in execution order.
+    pub phase_labels: Vec<&'static str>,
+    /// Exclusive end offset of each phase's transfers in the `x_*` arrays.
+    pub phase_xfer_end: Vec<u32>,
+    /// Exclusive end offset of each phase's copies in the `c_*` arrays.
+    pub phase_copy_end: Vec<u32>,
+
+    /// Transfer source resource index.
+    pub x_src: Vec<u32>,
+    /// Transfer destination resource index.
+    pub x_dst: Vec<u32>,
+    /// NIC resource index ([`NO_NIC`] when the transfer stays on-node).
+    pub x_nic: Vec<u32>,
+    /// Source node index (injected-bytes accounting; valid when crossing).
+    pub x_node: Vec<u32>,
+    /// Payload bytes.
+    pub x_bytes: Vec<usize>,
+    /// Precomputed postal duration [s].
+    pub x_dur: Vec<f64>,
+    /// Precomputed NIC occupancy `bytes / R_N` [s] (0 when on-node).
+    pub x_nic_busy: Vec<f64>,
+
+    /// Copy-engine resource index per copy.
+    pub c_engine: Vec<u32>,
+    /// Initiating-process resource index per copy.
+    pub c_proc: Vec<u32>,
+    /// Precomputed copy duration [s].
+    pub c_dur: Vec<f64>,
+
+    /// Total dense resource slots (procs ++ GPUs ++ NICs ++ copy engines).
+    pub n_resources: u32,
+    /// Dense node slots for injected-bytes accounting.
+    pub n_nodes: u32,
+}
+
+impl CompiledSchedule {
+    /// Lower a schedule, allocating fresh arrays.
+    pub fn lower(machine: &Machine, params: &CompiledParams, schedule: &Schedule, ppn: usize) -> CompiledSchedule {
+        let mut cs = CompiledSchedule::default();
+        cs.lower_into(machine, params, schedule, ppn);
+        cs
+    }
+
+    /// Lower a schedule into `self`, reusing the existing arrays (clears
+    /// them, keeps capacity) — the allocation-free compile step of the
+    /// sweep hot loop.
+    pub fn lower_into(&mut self, machine: &Machine, params: &CompiledParams, schedule: &Schedule, ppn: usize) {
+        self.phase_labels.clear();
+        self.phase_xfer_end.clear();
+        self.phase_copy_end.clear();
+        self.x_src.clear();
+        self.x_dst.clear();
+        self.x_nic.clear();
+        self.x_node.clear();
+        self.x_bytes.clear();
+        self.x_dur.clear();
+        self.x_nic_busy.clear();
+        self.c_engine.clear();
+        self.c_proc.clear();
+        self.c_dur.clear();
+
+        // Pass 1: the dense resource layout. Process ids normally fall in
+        // [0, num_nodes * ppn) and copy GPU ids in [0, total_gpus), but the
+        // reference executor tolerates any id on those paths (it keyed a
+        // hash map, and the copy path never resolves the GPU's node), so
+        // size from what the schedule actually touches. Transfer GPU ids
+        // are bounds-checked by `Machine::gpu_node` on both executors.
+        let mut max_proc = machine.num_nodes * ppn;
+        let mut max_node = machine.num_nodes;
+        let mut max_copy_gpu = machine.total_gpus();
+        for phase in &schedule.phases {
+            for x in &phase.xfers {
+                for loc in [x.src, x.dst] {
+                    if let Loc::Host(p) = loc {
+                        max_proc = max_proc.max(p.0 + 1);
+                        max_node = max_node.max(p.0 / ppn + 1);
+                    }
+                }
+            }
+            for c in &phase.copies {
+                max_proc = max_proc.max(c.proc.0 + 1);
+                max_copy_gpu = max_copy_gpu.max(c.gpu.0 + 1);
+            }
+        }
+        let gpus = machine.total_gpus();
+        let proc_base = 0usize;
+        let gpu_base = proc_base + max_proc;
+        let nic_base = gpu_base + gpus;
+        let copy_base = nic_base + max_node;
+        self.n_resources = (copy_base + max_copy_gpu) as u32;
+        self.n_nodes = max_node as u32;
+
+        let res = |loc: Loc| -> u32 {
+            match loc {
+                Loc::Host(p) => (proc_base + p.0) as u32,
+                Loc::Gpu(g) => (gpu_base + g.0) as u32,
+            }
+        };
+        let src_node_of = |loc: Loc| -> usize {
+            match loc {
+                Loc::Gpu(g) => machine.gpu_node(g).0,
+                Loc::Host(p) => machine.proc_node(p, ppn).0,
+            }
+        };
+
+        // Pass 2: classify and cost every operation. The locality rule
+        // itself lives in one place ([`crate::sim::exec`]'s `locality`),
+        // shared with the reference executor.
+        for phase in &schedule.phases {
+            self.phase_labels.push(phase.label);
+            for x in &phase.xfers {
+                if x.bytes == 0 {
+                    continue; // zero-byte transfers are free in the reference too
+                }
+                let loc = crate::sim::exec::locality(machine, x.src, x.dst, ppn);
+                let ep = match (x.src, x.dst) {
+                    (Loc::Gpu(_), _) | (_, Loc::Gpu(_)) => Endpoint::Gpu,
+                    _ => Endpoint::Cpu,
+                };
+                let (nic, node, nic_busy) = if loc == Locality::OffNode {
+                    let sn = src_node_of(x.src);
+                    ((nic_base + sn) as u32, sn as u32, x.bytes as f64 * params.inv_rn)
+                } else {
+                    (NO_NIC, 0, 0.0)
+                };
+                self.x_src.push(res(x.src));
+                self.x_dst.push(res(x.dst));
+                self.x_nic.push(nic);
+                self.x_node.push(node);
+                self.x_bytes.push(x.bytes);
+                self.x_dur.push(params.msg_time(ep, loc, x.bytes));
+                self.x_nic_busy.push(nic_busy);
+            }
+            for c in &phase.copies {
+                let dir = match c.dir {
+                    CopyKind::D2H => CopyDir::D2H,
+                    CopyKind::H2D => CopyDir::H2D,
+                };
+                self.c_engine.push((copy_base + c.gpu.0) as u32);
+                self.c_proc.push((proc_base + c.proc.0) as u32);
+                self.c_dur.push(params.memcpy_time(dir, c.bytes, c.nprocs));
+            }
+            self.phase_xfer_end.push(self.x_src.len() as u32);
+            self.phase_copy_end.push(self.c_engine.len() as u32);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{build_schedule, Strategy, Transport};
+    use crate::params::lassen_params;
+    use crate::pattern::generators::random_pattern;
+    use crate::topology::machines::lassen;
+    use crate::util::rng::Rng;
+
+    fn pattern_on(machine: &Machine, seed: u64, n: usize) -> CommPattern {
+        let mut rng = Rng::new(seed);
+        random_pattern(machine, &mut rng, n, 1 << 14, 0.25)
+    }
+
+    #[test]
+    fn lowered_pattern_matches_plan_helpers() {
+        let m = lassen(3);
+        let p = pattern_on(&m, 7, 64);
+        let cp = CompiledPattern::lower(&m, &p);
+        let raw = plan::group_by_node_pair(&m, &p);
+        assert_eq!(cp.groups.len(), raw.len());
+        for (g, (&(k, l), msgs)) in cp.groups.iter().zip(raw.iter()) {
+            assert_eq!((g.src_node, g.dst_node), (k, l));
+            assert_eq!(&g.msgs, msgs);
+            assert_eq!(g.unique_by_src, plan::unique_bytes_by_src(msgs).into_iter().collect::<Vec<_>>());
+            assert_eq!(g.unique_total, plan::unique_bytes(msgs));
+            assert_eq!(g.by_dst, plan::bytes_by_dst(msgs).into_iter().collect::<Vec<_>>());
+            assert_eq!(g.by_dst.len(), g.dominant_src.len());
+        }
+        // intra list covers exactly the non-crossing messages with their tags
+        let intra_count = p.msgs.iter().filter(|x| m.gpu_node(x.src) == m.gpu_node(x.dst)).count();
+        assert_eq!(cp.intra.len(), intra_count);
+        for &(i, msg) in &cp.intra {
+            assert_eq!(p.msgs[i as usize], msg);
+        }
+        // staging identities: unique inter-node + intra == stage_out_unique
+        let total_unique: usize = cp.groups.iter().map(|g| g.unique_total).sum();
+        let total_intra: usize = cp.intra.iter().map(|&(_, m)| m.bytes).sum();
+        let staged: usize = cp.stage_out_unique.iter().map(|&(_, b)| b).sum();
+        assert_eq!(staged, total_unique + total_intra);
+    }
+
+    #[test]
+    fn lowered_schedule_shapes_and_offsets() {
+        let m = lassen(2);
+        let p = pattern_on(&m, 11, 48);
+        let params = lassen_params().compile();
+        for s in Strategy::all() {
+            let sched = build_schedule(s, &m, &p);
+            let ppn = s.sim_ppn(&m);
+            let cs = CompiledSchedule::lower(&m, &params, &sched, ppn);
+            assert_eq!(cs.phase_labels.len(), sched.phases.len());
+            assert_eq!(cs.phase_xfer_end.len(), sched.phases.len());
+            let nonzero: usize = sched.phases.iter().flat_map(|ph| &ph.xfers).filter(|x| x.bytes > 0).count();
+            assert_eq!(cs.x_src.len(), nonzero);
+            let copies: usize = sched.phases.iter().map(|ph| ph.copies.len()).sum();
+            assert_eq!(cs.c_engine.len(), copies);
+            // offsets are monotone and end at the array lengths
+            assert!(cs.phase_xfer_end.windows(2).all(|w| w[0] <= w[1]));
+            assert_eq!(*cs.phase_xfer_end.last().unwrap_or(&0) as usize, cs.x_src.len());
+            assert_eq!(*cs.phase_copy_end.last().unwrap_or(&0) as usize, cs.c_engine.len());
+            // every resource index is in range
+            for &r in cs.x_src.iter().chain(&cs.x_dst).chain(&cs.c_engine).chain(&cs.c_proc) {
+                assert!(r < cs.n_resources);
+            }
+            for &nic in &cs.x_nic {
+                assert!(nic == NO_NIC || nic < cs.n_resources);
+            }
+        }
+    }
+
+    #[test]
+    fn lower_into_reuses_capacity() {
+        let m = lassen(2);
+        let p = pattern_on(&m, 3, 64);
+        let params = lassen_params().compile();
+        let s = Strategy::new(crate::comm::StrategyKind::Standard, Transport::Staged).unwrap();
+        let sched = build_schedule(s, &m, &p);
+        let mut cs = CompiledSchedule::lower(&m, &params, &sched, s.sim_ppn(&m));
+        let cap = cs.x_src.capacity();
+        let first = cs.x_dur.clone();
+        cs.lower_into(&m, &params, &sched, s.sim_ppn(&m));
+        assert_eq!(cs.x_src.capacity(), cap, "relowering the same schedule must not grow");
+        assert_eq!(cs.x_dur, first, "relowering must be deterministic");
+    }
+}

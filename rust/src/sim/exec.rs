@@ -1,8 +1,25 @@
 //! Greedy list-scheduling discrete-event executor for communication
 //! schedules.
+//!
+//! Two executors share one semantics:
+//!
+//! - [`run_compiled`] — the production hot path: walks a
+//!   [`CompiledSchedule`]'s flat SoA arrays against dense `Vec<f64>`
+//!   resource timelines held in a reusable [`ExecScratch`]. The inner loop
+//!   performs no hash-map operations and no heap allocation (after the
+//!   scratch warms up to the largest machine seen).
+//! - [`run_reference`] — the retained reference implementation (hash-map
+//!   availability, per-call locality/protocol resolution). It is the
+//!   pre-compilation executor kept verbatim as the equivalence oracle for
+//!   `rust/tests/prop_sim.rs`, the golden-output tests, and the
+//!   `hetcomm perf` reference mode.
+//!
+//! [`run`] keeps the historical convenience signature (compile + execute in
+//! one call) and is bit-for-bit identical to [`run_reference`].
 
 use crate::comm::{CopyKind, Loc, Phase, Schedule};
 use crate::params::{CopyDir, Endpoint, MachineParams};
+use crate::sim::compiled::{CompiledSchedule, NO_NIC};
 use crate::topology::{Locality, Machine};
 use std::collections::HashMap;
 
@@ -11,7 +28,7 @@ use std::collections::HashMap;
 pub struct SimReport {
     pub strategy_label: String,
     /// (phase label, seconds) in execution order.
-    pub phase_times: Vec<(String, f64)>,
+    pub phase_times: Vec<(&'static str, f64)>,
     /// End-to-end simulated seconds (sum of phases — phases are barriers).
     pub total: f64,
     /// Peak bytes injected into the network by any single node.
@@ -19,6 +36,139 @@ pub struct SimReport {
     /// Total inter-node messages.
     pub internode_msgs: usize,
 }
+
+/// The scalar outcome of one compiled execution (phase times stay in the
+/// scratch; everything here is `Copy` so the hot loop returns no heap data).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SimTotals {
+    pub total: f64,
+    pub max_node_injected: usize,
+    pub internode_msgs: usize,
+}
+
+/// Reusable executor state: dense per-resource availability timelines,
+/// per-node injected-byte counters and the per-phase time buffer. One per
+/// worker thread, reused across every (cell × strategy) evaluation.
+#[derive(Clone, Debug, Default)]
+pub struct ExecScratch {
+    avail: Vec<f64>,
+    injected: Vec<usize>,
+    /// (phase label, seconds) of the most recent [`run_compiled`] call.
+    pub phase_times: Vec<(&'static str, f64)>,
+}
+
+impl ExecScratch {
+    pub fn new() -> ExecScratch {
+        ExecScratch::default()
+    }
+}
+
+/// Execute a compiled schedule. Zero-allocation: only resizes the scratch
+/// when this machine is larger than any seen before.
+pub fn run_compiled(cs: &CompiledSchedule, scratch: &mut ExecScratch) -> SimTotals {
+    scratch.avail.clear();
+    scratch.avail.resize(cs.n_resources as usize, 0.0);
+    scratch.injected.clear();
+    scratch.injected.resize(cs.n_nodes as usize, 0);
+    scratch.phase_times.clear();
+
+    let avail = &mut scratch.avail;
+    let injected = &mut scratch.injected;
+    let mut clock = 0.0f64;
+    let mut internode_msgs = 0usize;
+    let mut x0 = 0usize;
+    let mut c0 = 0usize;
+
+    for pi in 0..cs.phase_labels.len() {
+        let start = clock;
+        let mut phase_end = start;
+        let x1 = cs.phase_xfer_end[pi] as usize;
+        let c1 = cs.phase_copy_end[pi] as usize;
+
+        // Point-to-point transfers, in listed order (builders list them in
+        // the paper's step order; distinct-resource ops overlap).
+        for i in x0..x1 {
+            let sk = cs.x_src[i] as usize;
+            let dk = cs.x_dst[i] as usize;
+            let mut ready = start.max(avail[sk]).max(avail[dk]);
+            let nic = cs.x_nic[i];
+            if nic != NO_NIC {
+                // NIC injection: the source node's NIC serializes at R_N.
+                let nk = nic as usize;
+                ready = ready.max(avail[nk]);
+                avail[nk] = ready + cs.x_nic_busy[i];
+                injected[cs.x_node[i] as usize] += cs.x_bytes[i];
+                internode_msgs += 1;
+            }
+            let done = ready + cs.x_dur[i];
+            avail[sk] = done;
+            avail[dk] = done;
+            phase_end = phase_end.max(done);
+        }
+
+        // Host↔device copies: serialized per GPU copy engine and per proc.
+        // The GPU compute queue is not blocked by async copies; only the
+        // copy engine and the initiating process are.
+        for i in c0..c1 {
+            let gk = cs.c_engine[i] as usize;
+            let pk = cs.c_proc[i] as usize;
+            let ready = start.max(avail[gk]).max(avail[pk]);
+            let done = ready + cs.c_dur[i];
+            avail[gk] = done;
+            avail[pk] = done;
+            phase_end = phase_end.max(done);
+        }
+
+        scratch.phase_times.push((cs.phase_labels[pi], phase_end - start));
+        clock = phase_end;
+        x0 = x1;
+        c0 = c1;
+    }
+
+    SimTotals {
+        total: clock,
+        max_node_injected: injected.iter().copied().max().unwrap_or(0),
+        internode_msgs,
+    }
+}
+
+/// Execute a schedule, returning simulated times.
+///
+/// `ppn` is the number of host processes per node in this run — it fixes
+/// process→node/socket mapping for locality decisions. Convenience wrapper:
+/// compiles the parameters and schedule, executes the compiled form, and
+/// assembles a full [`SimReport`]. Hot loops should hold a
+/// [`crate::sim::Scratch`] and a precompiled [`CompiledParams`] instead.
+pub fn run(machine: &Machine, params: &MachineParams, schedule: &Schedule, ppn: usize) -> SimReport {
+    let compiled = params.compile();
+    let mut scratch = crate::sim::Scratch::new();
+    scratch.run_report(machine, &compiled, schedule, ppn)
+}
+
+/// Locality of two endpoints under `ppn` processes per node — the single
+/// home of the locality rule, called by both the reference executor and
+/// the schedule lowering ([`crate::sim::compiled`]).
+pub(crate) fn locality(machine: &Machine, a: Loc, b: Loc, ppn: usize) -> Locality {
+    let node = |l: Loc| match l {
+        Loc::Gpu(g) => machine.gpu_node(g).0,
+        Loc::Host(p) => machine.proc_node(p, ppn).0,
+    };
+    let socket = |l: Loc| match l {
+        Loc::Gpu(g) => machine.gpu_socket(g),
+        Loc::Host(p) => machine.proc_socket(p, ppn),
+    };
+    if node(a) != node(b) {
+        Locality::OffNode
+    } else if socket(a) != socket(b) {
+        Locality::OnNode
+    } else {
+        Locality::OnSocket
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Retained reference implementation (pre-compilation executor, verbatim).
+// ---------------------------------------------------------------------------
 
 /// Resource availability keyed by an opaque id.
 #[derive(Default)]
@@ -49,11 +199,11 @@ fn loc_key(loc: Loc) -> u64 {
     }
 }
 
-/// Execute a schedule, returning simulated times.
-///
-/// `ppn` is the number of host processes per node in this run — it fixes
-/// process→node/socket mapping for locality decisions.
-pub fn run(machine: &Machine, params: &MachineParams, schedule: &Schedule, ppn: usize) -> SimReport {
+/// The reference executor: hash-map availability, per-transfer locality and
+/// protocol resolution. Semantically (and bit-for-bit) equal to
+/// [`run`] / [`run_compiled`]; kept as the equivalence oracle and the
+/// `hetcomm perf` naive reference mode.
+pub fn run_reference(machine: &Machine, params: &MachineParams, schedule: &Schedule, ppn: usize) -> SimReport {
     let mut avail = Avail::default();
     let mut phase_times = Vec::with_capacity(schedule.phases.len());
     let mut clock = 0.0f64;
@@ -62,7 +212,7 @@ pub fn run(machine: &Machine, params: &MachineParams, schedule: &Schedule, ppn: 
 
     for phase in &schedule.phases {
         let end = run_phase(machine, params, phase, ppn, clock, &mut avail, &mut injected, &mut internode_msgs);
-        phase_times.push((phase.label.to_string(), end - clock));
+        phase_times.push((phase.label, end - clock));
         clock = end;
     }
 
@@ -72,24 +222,6 @@ pub fn run(machine: &Machine, params: &MachineParams, schedule: &Schedule, ppn: 
         total: clock,
         max_node_injected: injected.values().copied().max().unwrap_or(0),
         internode_msgs,
-    }
-}
-
-fn locality(machine: &Machine, a: Loc, b: Loc, ppn: usize) -> Locality {
-    let node = |l: Loc| match l {
-        Loc::Gpu(g) => machine.gpu_node(g).0,
-        Loc::Host(p) => machine.proc_node(p, ppn).0,
-    };
-    let socket = |l: Loc| match l {
-        Loc::Gpu(g) => machine.gpu_socket(g),
-        Loc::Host(p) => machine.proc_socket(p, ppn),
-    };
-    if node(a) != node(b) {
-        Locality::OffNode
-    } else if socket(a) != socket(b) {
-        Locality::OnNode
-    } else {
-        Locality::OnSocket
     }
 }
 
@@ -338,5 +470,67 @@ mod tests {
         let t_std = run(&m, &p, &std, 4).total;
         let t_three = run(&m, &p, &three, 4).total;
         assert!(t_three < t_std, "3-step {t_three} !< standard {t_std}");
+    }
+
+    #[test]
+    fn compiled_matches_reference_on_strategy_schedules() {
+        use crate::pattern::generators::random_pattern;
+        use crate::util::rng::Rng;
+        let m = lassen(3);
+        let p = lassen_params();
+        let mut rng = Rng::new(77);
+        let pattern = random_pattern(&m, &mut rng, 96, 1 << 16, 0.25);
+        for s in Strategy::all() {
+            let sched = build_schedule(s, &m, &pattern);
+            let ppn = s.sim_ppn(&m);
+            let fast = run(&m, &p, &sched, ppn);
+            let slow = run_reference(&m, &p, &sched, ppn);
+            assert_eq!(fast.total.to_bits(), slow.total.to_bits(), "{}", sched.strategy_label);
+            assert_eq!(fast.max_node_injected, slow.max_node_injected);
+            assert_eq!(fast.internode_msgs, slow.internode_msgs);
+            assert_eq!(fast.phase_times.len(), slow.phase_times.len());
+            for (a, b) in fast.phase_times.iter().zip(&slow.phase_times) {
+                assert_eq!(a.0, b.0);
+                assert_eq!(a.1.to_bits(), b.1.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_range_copy_gpu_matches_reference() {
+        // The reference copy path never resolves the GPU's node, so copy
+        // ids beyond the machine are tolerated there; the dense executor
+        // must size its copy-engine block accordingly and agree.
+        let m = lassen(1); // 4 GPUs total
+        let p = lassen_params();
+        let mut phase = Phase::new("c");
+        phase.copies.push(crate::comm::CopyOp {
+            gpu: GpuId(7),
+            proc: ProcId(0),
+            bytes: 1 << 16,
+            dir: CopyKind::D2H,
+            nprocs: 1,
+        });
+        let sched = Schedule { strategy_label: "t".into(), phases: vec![phase] };
+        let fast = run(&m, &p, &sched, 4);
+        let slow = run_reference(&m, &p, &sched, 4);
+        assert_eq!(fast.total.to_bits(), slow.total.to_bits());
+        assert_eq!(fast.max_node_injected, slow.max_node_injected);
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_stable() {
+        let m = lassen(2);
+        let cp = lassen_params().compile();
+        let s1 = single_xfer_schedule(Loc::Host(ProcId(0)), Loc::Host(ProcId(4)), 1 << 12);
+        let s2 = single_xfer_schedule(Loc::Gpu(GpuId(0)), Loc::Gpu(GpuId(4)), 1 << 18);
+        let mut scratch = crate::sim::Scratch::new();
+        let a1 = scratch.run_total(&m, &cp, &s1, 4);
+        let b1 = scratch.run_total(&m, &cp, &s2, 4);
+        // interleave again: prior state must not leak through the scratch
+        let a2 = scratch.run_total(&m, &cp, &s1, 4);
+        let b2 = scratch.run_total(&m, &cp, &s2, 4);
+        assert_eq!(a1.to_bits(), a2.to_bits());
+        assert_eq!(b1.to_bits(), b2.to_bits());
     }
 }

@@ -16,9 +16,73 @@
 //!   GPU copy engine;
 //! - phases are barriers, matching the step structure of Section 2.3.
 //!
-//! [`exec::run`] returns per-phase and total simulated times.
+//! The hot path is split into *compile* and *execute* stages
+//! (see [`compiled`] and docs/PERFORMANCE.md): schedules are lowered once
+//! into flat SoA arrays with precomputed durations and dense resource ids,
+//! then executed allocation-free against a reusable [`Scratch`].
+//! [`exec::run`] keeps the one-call convenience API; sweep-scale callers
+//! hold a [`Scratch`] per worker thread instead.
 
+pub mod compiled;
 pub mod exec;
 pub mod network;
 
-pub use exec::{run, SimReport};
+pub use compiled::{CompiledPattern, CompiledSchedule};
+pub use exec::{run, run_reference, ExecScratch, SimReport, SimTotals};
+
+use crate::comm::Schedule;
+use crate::params::CompiledParams;
+use crate::topology::Machine;
+
+/// Per-worker simulation buffers: a reusable [`CompiledSchedule`] (the
+/// compile stage's output arrays) plus the executor's [`ExecScratch`].
+/// Create one per thread and reuse it across cells — after warm-up the hot
+/// loop performs no heap allocation.
+#[derive(Clone, Debug, Default)]
+pub struct Scratch {
+    pub schedule: CompiledSchedule,
+    pub exec: ExecScratch,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// Lower `schedule` into the reused buffers and execute it, returning
+    /// the end-to-end simulated seconds (the sweep hot path).
+    pub fn run_total(&mut self, machine: &Machine, params: &CompiledParams, schedule: &Schedule, ppn: usize) -> f64 {
+        self.run_totals(machine, params, schedule, ppn).total
+    }
+
+    /// Like [`Scratch::run_total`] but returns all scalar outcomes.
+    pub fn run_totals(
+        &mut self,
+        machine: &Machine,
+        params: &CompiledParams,
+        schedule: &Schedule,
+        ppn: usize,
+    ) -> SimTotals {
+        self.schedule.lower_into(machine, params, schedule, ppn);
+        exec::run_compiled(&self.schedule, &mut self.exec)
+    }
+
+    /// Full report (allocates the report itself; the execution is still the
+    /// compiled path). Bit-for-bit equal to [`exec::run_reference`].
+    pub fn run_report(
+        &mut self,
+        machine: &Machine,
+        params: &CompiledParams,
+        schedule: &Schedule,
+        ppn: usize,
+    ) -> SimReport {
+        let totals = self.run_totals(machine, params, schedule, ppn);
+        SimReport {
+            strategy_label: schedule.strategy_label.clone(),
+            phase_times: self.exec.phase_times.clone(),
+            total: totals.total,
+            max_node_injected: totals.max_node_injected,
+            internode_msgs: totals.internode_msgs,
+        }
+    }
+}

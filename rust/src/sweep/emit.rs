@@ -189,7 +189,7 @@ pub fn render_tables(result: &SweepResult) -> String {
         }
         let line = &cells[i..j];
         let mut header: Vec<String> = vec!["size[B]".into()];
-        header.extend(strategies.iter().map(|s| s.label()));
+        header.extend(strategies.iter().map(|s| s.label().to_string()));
         header.push("model winner".into());
         let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
         let mut t = Table::new(
@@ -227,7 +227,7 @@ pub fn render_tables(result: &SweepResult) -> String {
                         && w.gpus_per_node == group[0].gpus_per_node
                         && w.size == group[0].size
                 })
-                .map(|w| w.winner.clone())
+                .map(|w| w.winner.to_string())
                 .unwrap_or_default();
             row.push(winner);
             t.row(row);
@@ -334,7 +334,7 @@ mod tests {
         let r = tiny_result();
         let text = render_tables(&r);
         for s in &r.config.strategies {
-            assert!(text.contains(&s.label()), "missing {}", s.label());
+            assert!(text.contains(s.label()), "missing {}", s.label());
         }
         assert!(text.contains("Crossover report"));
         assert!(text.contains("Regime winners"));

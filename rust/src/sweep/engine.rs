@@ -1,26 +1,51 @@
 //! The parallel sweep engine: fan the grid cells out over an in-tree
-//! `std::thread` worker pool, evaluate every (cell × strategy) pair through
-//! both the Table 6 closed-form models and the discrete-event simulator,
-//! and collect results in a deterministic order.
+//! `std::thread` worker pool ([`crate::util::pool`]), evaluate every
+//! (cell × strategy) pair through both the Table 6 closed-form models and
+//! the discrete-event simulator, and collect results in a deterministic
+//! order.
 //!
 //! Determinism contract: given the same [`SweepConfig`] (including `seed`),
 //! two runs produce byte-identical emitter output regardless of thread
-//! count or scheduling — cells are seeded by index and results are sorted
-//! back into grid order after the pool drains.
+//! count or scheduling — cells are seeded by index and results land in a
+//! pre-sized per-cell slot vector in grid order.
+//!
+//! Hot-path shape (see docs/PERFORMANCE.md): per cell the pattern is
+//! materialized and lowered **once** ([`crate::sim::CompiledPattern`]);
+//! each strategy builds its schedule from the lowered pattern, compiles it
+//! into the worker's reused [`sim::Scratch`] arrays, and executes it
+//! allocation-free. [`ExecMode::Reference`] retains the pre-compilation
+//! per-strategy path (rebuild + hash-map executor) as the equivalence
+//! oracle and the perf harness's naive baseline.
 
 use super::grid::{CellSpec, GridSpec, PatternGen};
 use super::report::{analyze, SweepReport};
-use crate::comm::{build_schedule, dedup, Strategy};
+use crate::comm::{build_schedule, build_schedule_from, dedup, Strategy};
 use crate::model::{ModelInputs, StrategyModel};
-use crate::params::MachineParams;
+use crate::params::{CompiledParams, MachineParams};
 use crate::pattern::generators::{random_pattern, Scenario};
 use crate::pattern::CommPattern;
-use crate::sim;
+use crate::sim::{self, CompiledPattern};
 use crate::topology::{machines, Machine};
+use crate::util::pool;
 use crate::util::rng::Rng;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 use std::time::Instant;
+
+pub use crate::util::pool::effective_threads;
+pub use crate::util::rng::index_seed as cell_seed;
+
+/// Which executor evaluates the simulator leg of a sweep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Production path: one pattern lowering per cell, compiled schedules,
+    /// zero-allocation executor with per-worker scratch reuse.
+    Compiled,
+    /// Retained naive path: full per-strategy schedule rebuild from the
+    /// raw pattern plus the verbatim hash-map reference executor.
+    /// Bit-identical results; used by golden-output tests and
+    /// `hetcomm perf`'s baseline mode (a rebuild baseline, not a
+    /// cycle-exact replica of the historical builders' cost).
+    Reference,
+}
 
 /// Full sweep configuration: the grid plus run controls.
 #[derive(Clone, Debug)]
@@ -64,7 +89,7 @@ pub struct CellResult {
     pub size: usize,
     pub strategy: Strategy,
     /// `strategy.label()`, precomputed for emitters.
-    pub label: String,
+    pub label: &'static str,
     /// Table 6 model prediction [s].
     pub model_s: f64,
     /// Discrete-event simulated time [s] (None when `sim` is off).
@@ -86,51 +111,29 @@ pub struct SweepResult {
     pub elapsed_s: f64,
 }
 
-/// Resolve the worker count: 0 = available parallelism, always clamped to
-/// `[1, work_items]`.
-pub fn effective_threads(requested: usize, work_items: usize) -> usize {
-    let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let t = if requested == 0 { auto } else { requested };
-    t.clamp(1, work_items.max(1))
-}
-
-/// Deterministic per-cell sub-seed (splitmix-style index mixing).
-fn cell_seed(base: u64, index: usize) -> u64 {
-    let mut z = base ^ (index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-    z ^ (z >> 31)
-}
-
 /// Run the sweep: validate, fan out, aggregate, analyze.
 pub fn run_sweep(config: &SweepConfig) -> Result<SweepResult, String> {
+    run_sweep_mode(config, ExecMode::Compiled)
+}
+
+/// [`run_sweep`] with an explicit executor mode (golden-output tests and
+/// the perf harness pass [`ExecMode::Reference`]).
+pub fn run_sweep_mode(config: &SweepConfig, mode: ExecMode) -> Result<SweepResult, String> {
     config.grid.validate()?;
     if config.strategies.is_empty() {
         return Err("no strategies selected".into());
     }
     let (arch, params) = machines::parse(&config.machine, 1)
         .ok_or_else(|| format!("unknown machine preset {:?}", config.machine))?;
+    let compiled_params = params.compile();
     let cells = config.grid.cells();
     let t0 = Instant::now();
     let threads = effective_threads(config.threads, cells.len());
 
-    let next = AtomicUsize::new(0);
-    let collected: Mutex<Vec<(usize, Vec<CellResult>)>> = Mutex::new(Vec::with_capacity(cells.len()));
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= cells.len() {
-                    break;
-                }
-                let result = eval_cell(config, &arch, &params, &cells[i]);
-                collected.lock().unwrap().push((i, result));
-            });
-        }
+    let results = pool::map_with(cells.len(), threads, sim::Scratch::new, |scratch, i| {
+        eval_cell(config, &arch, &params, &compiled_params, &cells[i], mode, scratch)
     });
-
-    let mut collected = collected.into_inner().unwrap();
-    collected.sort_unstable_by_key(|&(i, _)| i);
-    let cells_out: Vec<CellResult> = collected.into_iter().flat_map(|(_, r)| r).collect();
+    let cells_out: Vec<CellResult> = results.into_iter().flatten().collect();
     let report = analyze(&cells_out);
     Ok(SweepResult {
         config: config.clone(),
@@ -151,12 +154,23 @@ pub fn run_sweep(config: &SweepConfig) -> Result<SweepResult, String> {
 /// report reads as a regime timeline of the recorded run.
 ///
 /// Deterministic like [`run_sweep`]: epochs are fanned out over the pool
-/// and re-sorted into trace order, so thread count never changes bits.
+/// into pre-sized trace-order slots, so thread count never changes bits.
 pub fn run_sweep_trace(
     trace: &crate::trace::Trace,
     strategies: &[Strategy],
     threads: usize,
     with_sim: bool,
+) -> Result<SweepResult, String> {
+    run_sweep_trace_mode(trace, strategies, threads, with_sim, ExecMode::Compiled)
+}
+
+/// [`run_sweep_trace`] with an explicit executor mode.
+pub fn run_sweep_trace_mode(
+    trace: &crate::trace::Trace,
+    strategies: &[Strategy],
+    threads: usize,
+    with_sim: bool,
+    mode: ExecMode,
 ) -> Result<SweepResult, String> {
     trace.validate()?;
     if strategies.is_empty() {
@@ -165,29 +179,18 @@ pub fn run_sweep_trace(
     let params = trace
         .params()
         .ok_or_else(|| format!("trace machine {:?} resolves to no registry parameters", trace.machine.name))?;
+    let compiled_params = params.compile();
     let machine = &trace.machine;
     let t0 = Instant::now();
     let threads = effective_threads(threads, trace.epochs.len());
     // one stats pass serves the workers and the config echo below
     let epoch_stats = trace.epoch_stats();
 
-    let next = AtomicUsize::new(0);
-    let collected: Mutex<Vec<(usize, Vec<CellResult>)>> = Mutex::new(Vec::with_capacity(trace.epochs.len()));
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= trace.epochs.len() {
-                    break;
-                }
-                let result = eval_epoch(machine, &params, strategies, &trace.epochs[i], &epoch_stats[i], with_sim);
-                collected.lock().unwrap().push((i, result));
-            });
-        }
+    let results = pool::map_with(trace.epochs.len(), threads, sim::Scratch::new, |scratch, i| {
+        let (epoch, stats) = (&trace.epochs[i], &epoch_stats[i]);
+        eval_epoch(machine, &params, &compiled_params, strategies, epoch, stats, with_sim, mode, scratch)
     });
-    let mut collected = collected.into_inner().unwrap();
-    collected.sort_unstable_by_key(|&(i, _)| i);
-    let cells_out: Vec<CellResult> = collected.into_iter().flat_map(|(_, r)| r).collect();
+    let cells_out: Vec<CellResult> = results.into_iter().flatten().collect();
     let report = analyze(&cells_out);
 
     // Echo a synthetic config so the emitters can label the run; the grid
@@ -216,16 +219,52 @@ pub fn run_sweep_trace(
     Ok(SweepResult { config, cells: cells_out, report, threads_used: threads, elapsed_s: t0.elapsed().as_secs_f64() })
 }
 
+/// Simulate one (schedule-source, strategy) pair under the selected
+/// executor mode. `Compiled` builds from the once-per-cell lowered pattern
+/// and runs the flat executor against the worker scratch; `Reference`
+/// rebuilds from the raw pattern (a full per-strategy re-lowering — a
+/// strict naive-rebuild baseline, not a cycle-exact replica of the
+/// historical builders' cost) and runs the retained hash-map executor.
+/// Outputs are bit-identical either way.
+#[allow(clippy::too_many_arguments)]
+fn sim_strategy(
+    mode: ExecMode,
+    machine: &Machine,
+    params: &MachineParams,
+    compiled_params: &CompiledParams,
+    strategy: Strategy,
+    pattern: &CommPattern,
+    lowered: Option<&CompiledPattern>,
+    scratch: &mut sim::Scratch,
+) -> f64 {
+    let ppn = strategy.sim_ppn(machine);
+    match mode {
+        ExecMode::Compiled => {
+            let lowered = lowered.expect("compiled mode lowers once per cell");
+            let schedule = build_schedule_from(strategy, machine, lowered);
+            scratch.run_total(machine, compiled_params, &schedule, ppn)
+        }
+        ExecMode::Reference => {
+            let schedule = build_schedule(strategy, machine, pattern);
+            sim::run_reference(machine, params, &schedule, ppn).total
+        }
+    }
+}
+
 /// Evaluate one trace epoch against every strategy (the trace analogue of
 /// [`eval_cell`], with measured stats instead of grid-derived inputs).
 /// `stats` must be the epoch's own precomputed pattern statistics.
+#[allow(clippy::too_many_arguments)]
 fn eval_epoch(
     machine: &Machine,
     params: &MachineParams,
+    compiled_params: &CompiledParams,
     strategies: &[Strategy],
     epoch: &crate::trace::Epoch,
     stats: &crate::pattern::PatternStats,
     with_sim: bool,
+    mode: ExecMode,
+    scratch: &mut sim::Scratch,
 ) -> Vec<CellResult> {
     let sm = StrategyModel::new(machine, params);
     let dup = epoch.pattern.duplicate_fraction(machine);
@@ -241,12 +280,13 @@ fn eval_epoch(
     };
     let size = if stats.m_n2n > 0 { (stats.s_n2n / stats.m_n2n).max(1) } else { 1 };
     let dest_nodes = if stats.s_n2n > 0 { (stats.s_node / stats.s_n2n).max(1) } else { 1 };
+    // lower once per epoch; reference mode pays its own per-strategy lowering
+    let lowered = (with_sim && mode == ExecMode::Compiled).then(|| CompiledPattern::lower(machine, &epoch.pattern));
     let mut out = Vec::with_capacity(strategies.len());
     for &strategy in strategies {
         let model_s = sm.time(strategy, &inputs);
         let sim_s = with_sim.then(|| {
-            let schedule = build_schedule(strategy, machine, &epoch.pattern);
-            sim::run(machine, params, &schedule, strategy.sim_ppn(machine)).total
+            sim_strategy(mode, machine, params, compiled_params, strategy, &epoch.pattern, lowered.as_ref(), scratch)
         });
         let model_err = sim_s.and_then(|t| if t > 0.0 { Some((model_s - t).abs() / t) } else { None });
         out.push(CellResult {
@@ -265,9 +305,19 @@ fn eval_epoch(
     out
 }
 
-/// Evaluate one grid cell: build the pattern once, then model (and
-/// optionally simulate) every strategy against it.
-fn eval_cell(cfg: &SweepConfig, arch: &Machine, params: &MachineParams, cell: &CellSpec) -> Vec<CellResult> {
+/// Evaluate one grid cell: build and lower the pattern once, then model
+/// (and optionally simulate) every strategy against it. `pub(crate)` so the
+/// perf harness ([`crate::bench::perf`]) measures exactly the production
+/// cell evaluation.
+pub(crate) fn eval_cell(
+    cfg: &SweepConfig,
+    arch: &Machine,
+    params: &MachineParams,
+    compiled_params: &CompiledParams,
+    cell: &CellSpec,
+    mode: ExecMode,
+    scratch: &mut sim::Scratch,
+) -> Vec<CellResult> {
     let machine = cfg.grid.machine_for_arch(arch, cell.dest_nodes, cell.gpus_per_node);
     let sm = StrategyModel::new(&machine, params);
     // Model inputs use the full core count: only the Split models read
@@ -301,13 +351,20 @@ fn eval_cell(cfg: &SweepConfig, arch: &Machine, params: &MachineParams, cell: &C
         PatternGen::Trace => unreachable!("GridSpec::validate rejects trace generators on grids"),
     };
 
+    // Lower once per cell: grouping, dedup and locality resolution are
+    // shared by every strategy's schedule build. Reference mode skips this
+    // and pays a full re-lowering per strategy instead.
+    let lowered = match mode {
+        ExecMode::Compiled => pattern.as_ref().map(|p| CompiledPattern::lower(&machine, p)),
+        ExecMode::Reference => None,
+    };
+
     let mut out = Vec::with_capacity(cfg.strategies.len());
     for &strategy in &cfg.strategies {
         let model_s = sm.time(strategy, &inputs);
-        let sim_s = pattern.as_ref().map(|p| {
-            let schedule = build_schedule(strategy, &machine, p);
-            sim::run(&machine, params, &schedule, strategy.sim_ppn(&machine)).total
-        });
+        let sim_s = pattern
+            .as_ref()
+            .map(|p| sim_strategy(mode, &machine, params, compiled_params, strategy, p, lowered.as_ref(), scratch));
         let model_err = sim_s.and_then(|t| if t > 0.0 { Some((model_s - t).abs() / t) } else { None });
         out.push(CellResult {
             index: cell.index,
@@ -393,6 +450,17 @@ mod tests {
     }
 
     #[test]
+    fn reference_mode_matches_compiled_bit_for_bit() {
+        // The refactor's safety rail in miniature: the naive per-strategy
+        // rebuild + hash-map executor and the compiled flat path must agree
+        // on every bit (the full golden test lives in tests/golden_sweep.rs).
+        let cfg = small_config(2);
+        let fast = run_sweep_mode(&cfg, ExecMode::Compiled).unwrap();
+        let slow = run_sweep_mode(&cfg, ExecMode::Reference).unwrap();
+        cmp_cells(&fast.cells, &slow.cells);
+    }
+
+    #[test]
     fn model_only_skips_sim() {
         let mut cfg = small_config(2);
         cfg.sim = false;
@@ -470,6 +538,16 @@ mod tests {
         assert_eq!(r1.config.machine, "lassen");
         // empty strategy lists are rejected like grid sweeps
         assert!(run_sweep_trace(&trace, &[], 1, false).is_err());
+    }
+
+    #[test]
+    fn trace_sweep_reference_mode_matches() {
+        use crate::trace::scenarios::{synthesize, TraceScenario};
+        let trace = synthesize(TraceScenario::AmrDrift, "lassen", 3, 1, 5).unwrap();
+        let fast = run_sweep_trace_mode(&trace, &Strategy::all(), 2, true, ExecMode::Compiled).unwrap();
+        let slow = run_sweep_trace_mode(&trace, &Strategy::all(), 2, true, ExecMode::Reference).unwrap();
+        cmp_cells(&fast.cells, &slow.cells);
+        assert!(fast.cells.iter().all(|c| c.sim_s.is_some()));
     }
 
     #[test]

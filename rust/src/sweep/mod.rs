@@ -26,6 +26,9 @@ pub mod engine;
 pub mod grid;
 pub mod report;
 
-pub use engine::{effective_threads, run_sweep, run_sweep_trace, CellResult, SweepConfig, SweepResult};
+pub use engine::{
+    effective_threads, run_sweep, run_sweep_mode, run_sweep_trace, run_sweep_trace_mode, CellResult, ExecMode,
+    SweepConfig, SweepResult,
+};
 pub use grid::{CellSpec, GridSpec, PatternGen};
 pub use report::{analyze, CellWinner, Crossover, ErrorSummary, RegimeWinner, SweepReport, SMALL_BAND_MAX};

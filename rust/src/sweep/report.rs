@@ -22,12 +22,12 @@ pub struct CellWinner {
     pub gpus_per_node: usize,
     pub size: usize,
     /// Label of the model-fastest strategy.
-    pub winner: String,
+    pub winner: &'static str,
     pub winner_kind: StrategyKind,
     pub winner_staged: bool,
     pub model_s: f64,
     /// Label of the simulator-fastest strategy, when the sweep simulated.
-    pub sim_winner: Option<String>,
+    pub sim_winner: Option<&'static str>,
 }
 
 /// A model winner change between two adjacent sizes of one regime line.
@@ -40,8 +40,8 @@ pub struct Crossover {
     pub size_before: usize,
     /// Smallest size won by `to`.
     pub size_after: usize,
-    pub from: String,
-    pub to: String,
+    pub from: &'static str,
+    pub to: &'static str,
 }
 
 /// The strategy minimizing total modeled time over one band of one regime
@@ -53,7 +53,7 @@ pub struct RegimeWinner {
     pub gpus_per_node: usize,
     /// `"small"` (size <= [`SMALL_BAND_MAX`]) or `"large"`.
     pub band: &'static str,
-    pub winner: String,
+    pub winner: &'static str,
     pub winner_kind: StrategyKind,
     pub winner_staged: bool,
     pub total_model_s: f64,
@@ -101,13 +101,13 @@ pub fn analyze(cells: &[CellResult]) -> SweepReport {
             .iter()
             .filter(|c| c.sim_s.is_some())
             .min_by(|a, b| a.sim_s.partial_cmp(&b.sim_s).expect("finite sim times"))
-            .map(|c| c.label.clone());
+            .map(|c| c.label);
         report.winners.push(CellWinner {
             gen: best.gen,
             dest_nodes: best.dest_nodes,
             gpus_per_node: best.gpus_per_node,
             size: best.size,
-            winner: best.label.clone(),
+            winner: best.label,
             winner_kind: best.strategy.kind,
             winner_staged: best.strategy.transport == Transport::Staged,
             model_s: best.model_s,
@@ -132,8 +132,8 @@ pub fn analyze(cells: &[CellResult]) -> SweepReport {
                     gpus_per_node: w[0].gpus_per_node,
                     size_before: w[0].size,
                     size_after: w[1].size,
-                    from: w[0].winner.clone(),
-                    to: w[1].winner.clone(),
+                    from: w[0].winner,
+                    to: w[1].winner,
                 });
             }
         }
@@ -150,17 +150,17 @@ pub fn analyze(cells: &[CellResult]) -> SweepReport {
         let line = &cells[i..j];
         for (band, want_small) in [("small", true), ("large", false)] {
             // label -> (total model s, kind, staged)
-            let mut totals: BTreeMap<String, (f64, StrategyKind, bool)> = BTreeMap::new();
+            let mut totals: BTreeMap<&'static str, (f64, StrategyKind, bool)> = BTreeMap::new();
             for c in line.iter().filter(|c| (c.size <= SMALL_BAND_MAX) == want_small) {
                 let e = totals
-                    .entry(c.label.clone())
+                    .entry(c.label)
                     .or_insert((0.0, c.strategy.kind, c.strategy.transport == Transport::Staged));
                 e.0 += c.model_s;
             }
             if totals.is_empty() {
                 continue;
             }
-            let (winner, &(total, kind, staged)) = totals
+            let (&winner, &(total, kind, staged)) = totals
                 .iter()
                 .min_by(|a, b| a.1 .0.partial_cmp(&b.1 .0).expect("finite totals"))
                 .expect("non-empty band");
@@ -169,7 +169,7 @@ pub fn analyze(cells: &[CellResult]) -> SweepReport {
                 dest_nodes: line[0].dest_nodes,
                 gpus_per_node: line[0].gpus_per_node,
                 band,
-                winner: winner.clone(),
+                winner,
                 winner_kind: kind,
                 winner_staged: staged,
                 total_model_s: total,

@@ -26,9 +26,9 @@
 use super::{drift_between, DEFAULT_DRIFT_THRESHOLD, Trace};
 use crate::advisor::{DecisionSurface, Pattern};
 use crate::bench::{fmt_secs, Table};
-use crate::comm::{build_schedule, Strategy};
+use crate::comm::{build_schedule_from, Strategy};
 use crate::model::StrategyModel;
-use crate::sim;
+use crate::sim::{self, CompiledPattern};
 use crate::sweep::emit::esc;
 use crate::util::json::fmt_f64;
 use std::fmt::Write as _;
@@ -162,6 +162,10 @@ pub fn replay(trace: &Trace, mode: &ReplayMode, config: &ReplayConfig) -> Result
     let sm = StrategyModel::new(machine, &params);
     let ppn = machine.cores_per_node();
     let all = Strategy::all();
+    // simulator leg: compile the band tables once and reuse one scratch
+    // across every epoch (allocation-free inner loop)
+    let compiled_params = config.sim.then(|| params.compile());
+    let mut scratch = sim::Scratch::new();
 
     let mut statics: Vec<StaticTotal> = all.iter().map(|&s| StaticTotal { strategy: s, total_s: 0.0 }).collect();
     let mut rows: Vec<EpochRow> = Vec::with_capacity(trace.epochs.len());
@@ -233,9 +237,10 @@ pub fn replay(trace: &Trace, mode: &ReplayMode, config: &ReplayConfig) -> Result
             .ok_or_else(|| format!("strategy {} is not in the Table 5 set", strategy.label()))?;
         let epoch_s = per_iter_s * rep;
         total_s += epoch_s;
-        let sim_s = config.sim.then(|| {
-            let schedule = build_schedule(strategy, machine, &epoch.pattern);
-            sim::run(machine, &params, &schedule, strategy.sim_ppn(machine)).total
+        let sim_s = compiled_params.as_ref().map(|cp| {
+            let lowered = CompiledPattern::lower(machine, &epoch.pattern);
+            let schedule = build_schedule_from(strategy, machine, &lowered);
+            scratch.run_total(machine, cp, &schedule, strategy.sim_ppn(machine))
         });
         rows.push(EpochRow {
             index: epoch.index,
@@ -380,7 +385,7 @@ pub fn render_report(r: &ReplayReport) -> String {
             row.repeat.to_string(),
             format!("{:.2}", row.drift),
             if row.advised { "yes".into() } else { String::new() },
-            row.strategy.label(),
+            row.strategy.label().to_string(),
             fmt_secs(row.per_iter_s),
             fmt_secs(row.cum_s),
             row.sim_s.map(fmt_secs).unwrap_or_default(),
@@ -389,7 +394,7 @@ pub fn render_report(r: &ReplayReport) -> String {
     out.push_str(&t.render());
     let mut b = Table::new("Static baselines (whole trace)", &["strategy", "total"]);
     for s in &r.statics {
-        b.row(vec![s.strategy.label(), fmt_secs(s.total_s)]);
+        b.row(vec![s.strategy.label().to_string(), fmt_secs(s.total_s)]);
     }
     out.push('\n');
     out.push_str(&b.render());

@@ -1,0 +1,115 @@
+//! Deterministic fan-out/collect worker pool.
+//!
+//! One generic helper serves every parallel evaluation loop in the crate
+//! ([`crate::sweep::run_sweep`], [`crate::sweep::run_sweep_trace`], the
+//! advisor's batched queries, the `hetcomm perf` harness): work items
+//! `0..n` are claimed dynamically off a shared atomic counter, each worker
+//! owns a reusable per-thread state (simulation scratch buffers, …), and
+//! results land in a **pre-sized per-item slot vector** — aggregation is
+//! O(n) with no lock contention on the hot loop and no post-hoc sort.
+//!
+//! Determinism contract: `f(state, i)` must depend only on `i` (plus
+//! deterministic seeds derived from it); then the returned vector is
+//! identical for any thread count or scheduling order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Resolve the worker count: 0 = available parallelism, always clamped to
+/// `[1, work_items]`.
+pub fn effective_threads(requested: usize, work_items: usize) -> usize {
+    let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let t = if requested == 0 { auto } else { requested };
+    t.clamp(1, work_items.max(1))
+}
+
+/// Evaluate `f(state, i)` for every `i in 0..n` over `threads` workers
+/// (callers usually pass an [`effective_threads`] result), giving each
+/// worker one `init()`-created state reused across its items. Results come
+/// back in index order regardless of scheduling.
+pub fn map_with<S, T, FS, F>(n: usize, threads: usize, init: FS, f: F) -> Vec<T>
+where
+    T: Send,
+    FS: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    let next = AtomicUsize::new(0);
+    // Pre-sized slot per work item: each index is written exactly once, by
+    // whichever worker claimed it, via the owning thread's local batch.
+    let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut state = init();
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(&mut state, i)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for handle in handles {
+            for (i, value) in handle.join().expect("pool worker panicked") {
+                slots[i] = Some(value);
+            }
+        }
+    });
+    slots.into_iter().map(|s| s.expect("every index evaluated exactly once")).collect()
+}
+
+/// Stateless convenience over [`map_with`].
+pub fn map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    map_with(n, threads, || (), |_, i| f(i))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_index_order_any_thread_count() {
+        for threads in [1, 2, 7, 64] {
+            let out = map(100, threads, |i| i * i);
+            assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn per_worker_state_reused() {
+        // each worker counts its own items; the counts must partition n
+        let counts = map_with(50, 4, || 0usize, |state, _i| {
+            *state += 1;
+            *state
+        });
+        assert_eq!(counts.len(), 50);
+        assert!(counts.iter().all(|&c| c >= 1));
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<usize> = map(0, 8, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn effective_threads_clamps() {
+        assert_eq!(effective_threads(3, 100), 3);
+        assert_eq!(effective_threads(64, 2), 2);
+        assert!(effective_threads(0, 100) >= 1);
+        assert_eq!(effective_threads(0, 0), 1);
+    }
+}

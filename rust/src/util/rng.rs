@@ -4,6 +4,16 @@
 //! anyway: matrix generators, pattern generators and property tests must be
 //! reproducible run-to-run so EXPERIMENTS.md numbers are stable.
 
+/// Deterministic per-item sub-seed (splitmix-style index mixing): derives a
+/// well-spread seed for work item `index` from a base seed. Shared by the
+/// sweep engine's per-cell generators and the perf harness so both draw the
+/// same pattern for the same (seed, cell).
+pub fn index_seed(base: u64, index: usize) -> u64 {
+    let mut z = base ^ (index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z ^ (z >> 31)
+}
+
 /// xoshiro256** state. Not cryptographic; excellent statistical quality for
 /// simulation workloads.
 #[derive(Clone, Debug)]

@@ -1,0 +1,82 @@
+//! Allocation-free smoke test for the simulator's inner loop.
+//!
+//! Installs a counting global allocator and asserts that, once the
+//! per-worker scratch has warmed up, re-lowering and re-executing a
+//! schedule performs **zero** heap allocations — the acceptance criterion
+//! of the compiled hot path. This lives in its own integration-test binary
+//! (single `#[test]`) so no concurrently-running test can touch the
+//! allocation counter.
+
+use hetcomm::comm::{build_schedule, Strategy};
+use hetcomm::params::lassen_params;
+use hetcomm::pattern::generators::random_pattern;
+use hetcomm::sim;
+use hetcomm::topology::machines::lassen;
+use hetcomm::util::rng::Rng;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static ALLOCATIONS: AtomicUsize = AtomicUsize::new(0);
+
+struct CountingAllocator;
+
+// SAFETY: delegates every operation to `System`; only adds a relaxed
+// counter bump on allocation paths.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAllocator = CountingAllocator;
+
+#[test]
+fn inner_sim_loop_is_allocation_free_after_warmup() {
+    let machine = lassen(4);
+    let params = lassen_params();
+    let compiled_params = params.compile();
+    let mut rng = Rng::new(99);
+    let pattern = random_pattern(&machine, &mut rng, 128, 1 << 16, 0.25);
+    let schedules: Vec<_> = Strategy::all()
+        .into_iter()
+        .map(|s| (build_schedule(s, &machine, &pattern), s.sim_ppn(&machine)))
+        .collect();
+
+    let mut scratch = sim::Scratch::new();
+    // Warm-up: grows the scratch arrays to this machine's resource count
+    // and the largest schedule's op counts.
+    let warm: Vec<f64> =
+        schedules.iter().map(|(sched, ppn)| scratch.run_total(&machine, &compiled_params, sched, *ppn)).collect();
+
+    let before = ALLOCATIONS.load(Ordering::Relaxed);
+    let mut totals = Vec::with_capacity(schedules.len()); // allocated before the measured region
+    for _ in 0..10 {
+        totals.clear();
+        for (sched, ppn) in &schedules {
+            totals.push(scratch.run_total(&machine, &compiled_params, sched, *ppn));
+        }
+    }
+    let after = ALLOCATIONS.load(Ordering::Relaxed);
+
+    assert_eq!(
+        after - before,
+        0,
+        "lower_into + run_compiled allocated {} times after warm-up",
+        after - before
+    );
+    // and the warm runs reproduced the warm-up answers bit for bit
+    for (w, t) in warm.iter().zip(&totals) {
+        assert_eq!(w.to_bits(), t.to_bits());
+    }
+}

@@ -1,0 +1,97 @@
+//! Golden-output equivalence tests for the hot-path refactor: every emitter
+//! byte must be independent of the execution path. The retained reference
+//! pipeline ([`ExecMode::Reference`]: per-strategy schedule rebuild plus
+//! the verbatim pre-refactor hash-map executor) and the compiled pipeline
+//! must produce **byte-identical** sweep JSON/CSV, trace sweeps, replay
+//! reports, and advisor surface artifacts under the same seeds — the
+//! refactor changes time-to-answer, never the answer.
+
+use hetcomm::advisor::{persist as surface_persist, DecisionSurface, SurfaceAxes};
+use hetcomm::comm::{build_schedule, Strategy};
+use hetcomm::sweep::emit::{to_csv, to_json};
+use hetcomm::sweep::{run_sweep_mode, run_sweep_trace_mode, ExecMode, GridSpec, PatternGen, SweepConfig};
+use hetcomm::trace::replay::{replay, report_to_json, ReplayConfig, ReplayMode};
+use hetcomm::trace::scenarios::{synthesize, TraceScenario};
+
+fn golden_config(machine: &str, dup: f64) -> SweepConfig {
+    SweepConfig {
+        grid: GridSpec {
+            gens: vec![PatternGen::Uniform, PatternGen::Random],
+            dest_nodes: vec![4, 8],
+            gpus_per_node: vec![4],
+            sizes: vec![1 << 8, 1 << 12, 1 << 16, 1 << 20],
+            n_msgs: 48,
+            dup_frac: dup,
+        },
+        seed: 2024,
+        threads: 2,
+        sim: true,
+        machine: machine.into(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn sweep_emitters_identical_across_executors() {
+    for (machine, dup) in [("lassen", 0.0), ("lassen", 0.25), ("frontier-like", 0.0)] {
+        let cfg = golden_config(machine, dup);
+        let fast = run_sweep_mode(&cfg, ExecMode::Compiled).unwrap();
+        let slow = run_sweep_mode(&cfg, ExecMode::Reference).unwrap();
+        assert_eq!(to_json(&fast), to_json(&slow), "{machine} dup {dup}: JSON diverged");
+        assert_eq!(to_csv(&fast), to_csv(&slow), "{machine} dup {dup}: CSV diverged");
+        // and the compiled path is self-deterministic
+        let again = run_sweep_mode(&cfg, ExecMode::Compiled).unwrap();
+        assert_eq!(to_json(&fast), to_json(&again));
+    }
+}
+
+#[test]
+fn trace_sweep_emitters_identical_across_executors() {
+    let trace = synthesize(TraceScenario::Sparsify, "lassen", 4, 1, 31).unwrap();
+    let all = Strategy::all();
+    let fast = run_sweep_trace_mode(&trace, &all, 2, true, ExecMode::Compiled).unwrap();
+    let slow = run_sweep_trace_mode(&trace, &all, 2, true, ExecMode::Reference).unwrap();
+    assert_eq!(to_json(&fast), to_json(&slow));
+    assert_eq!(to_csv(&fast), to_csv(&slow));
+}
+
+#[test]
+fn replay_sim_legs_match_reference_executor() {
+    let trace = synthesize(TraceScenario::AmrDrift, "lassen", 4, 1, 7).unwrap();
+    let mode = ReplayMode::Adaptive { surface: None };
+    let report = replay(&trace, &mode, &ReplayConfig { sim: true, ..Default::default() }).unwrap();
+    let params = trace.params().unwrap();
+    for (row, epoch) in report.rows.iter().zip(&trace.epochs) {
+        let schedule = build_schedule(row.strategy, &trace.machine, &epoch.pattern);
+        let reference =
+            hetcomm::sim::run_reference(&trace.machine, &params, &schedule, row.strategy.sim_ppn(&trace.machine));
+        assert_eq!(
+            row.sim_s.unwrap().to_bits(),
+            reference.total.to_bits(),
+            "epoch {}: replay sim leg diverged from the reference executor",
+            row.index
+        );
+    }
+    // report bytes stay deterministic
+    let again = replay(&trace, &mode, &ReplayConfig { sim: true, ..Default::default() }).unwrap();
+    assert_eq!(report_to_json(&report), report_to_json(&again));
+}
+
+#[test]
+fn surface_artifacts_unchanged_by_the_refactor_machinery() {
+    // surfaces are model-driven (no simulator leg) — two compiles must stay
+    // byte-identical, and labels survive the &'static str migration
+    let axes = SurfaceAxes {
+        msgs: vec![64, 256],
+        sizes: vec![1 << 8, 1 << 12, 1 << 16],
+        dest_nodes: vec![4, 16],
+        gpus_per_node: vec![4],
+    };
+    let a = DecisionSurface::compile("lassen", axes.clone(), 0.0).unwrap();
+    let b = DecisionSurface::compile("lassen", axes, 0.0).unwrap();
+    let (ja, jb) = (surface_persist::to_json(&a), surface_persist::to_json(&b));
+    assert_eq!(ja, jb);
+    for s in Strategy::all() {
+        assert!(ja.contains(&format!("\"{}\"", s.label())), "missing {}", s.label());
+    }
+}
