@@ -19,6 +19,7 @@ fn main() {
                     gens: vec![PatternGen::Uniform],
                     dest_nodes: vec![4, 16],
                     gpus_per_node: vec![4],
+                    nics: vec![1],
                     sizes: sizes.clone(),
                     n_msgs,
                     dup_frac: dup,

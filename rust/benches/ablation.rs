@@ -141,7 +141,7 @@ fn exascale_outlook() {
         "Ablation 4 — Section 6 outlook: advisor surface winners on future nodes (256 msgs -> 16 nodes)",
         &["machine", "cores/node", "size[B]", "best strategy", "modeled[s]"],
     );
-    for name in ["lassen", "frontier-like", "delta-like"] {
+    for name in ["lassen", "frontier-like", "frontier-4nic", "delta-like"] {
         let surface = DecisionSurface::compile(name, axes.clone(), 0.0).expect("registry machine compiles");
         let (arch, _) = machines::parse(name, 1).expect("registry machine resolves");
         for size in sizes {

@@ -18,6 +18,7 @@ fn grid(dup: f64) -> GridSpec {
         gens: vec![PatternGen::Uniform, PatternGen::Random],
         dest_nodes: vec![4, 16],
         gpus_per_node: vec![4],
+        nics: vec![1],
         sizes: (0..=20).step_by(2).map(|e| 1usize << e).collect(),
         n_msgs: 256,
         dup_frac: dup,

@@ -7,8 +7,9 @@
 //!   *decision surface*: a regime lattice over messages × size ×
 //!   destination nodes × GPUs-per-node with log-space interpolation and
 //!   exact crossover boundaries;
-//! - [`persist`] — versioned JSON artifacts (`hetcomm.surface.v1`) that
-//!   round-trip surfaces bit for bit;
+//! - [`persist`] — versioned JSON artifacts (`hetcomm.surface.v1` for
+//!   single-rail shapes, `hetcomm.surface.v2` with the `nics` shape key for
+//!   multi-rail machines) that round-trip surfaces bit for bit;
 //! - [`cache`] — a sharded LRU so repeated queries cost a probe instead of
 //!   a model evaluation;
 //! - [`service`] — thread-pooled batched `advise` queries and the seeded

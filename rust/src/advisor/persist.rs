@@ -7,28 +7,43 @@
 //! byte-identically. The reader is the shared minimal JSON parser
 //! ([`crate::util::json`]) followed by schema-checked extraction (unknown
 //! schema versions are rejected, not guessed at).
+//!
+//! Two schema versions coexist (docs/FORMATS.md):
+//!
+//! - `hetcomm.surface.v1` — the shape-less layout. *Written* for
+//!   single-rail surfaces (`nics == 1`), keeping their bytes identical to
+//!   the pre-shape-layer writer; *read* as `nics = 1`.
+//! - `hetcomm.surface.v2` — v1 plus the `nics` shape key. Written for
+//!   multi-rail surfaces; read verbatim.
 
 use super::surface::{DecisionSurface, SurfaceAxes};
 use crate::comm::Strategy;
 use crate::sweep::emit::esc;
-use crate::util::json::{fmt_f64 as num, Json};
+use crate::util::json::{fmt_f64 as num, fmt_usize_list as usize_list, Json};
 use std::fmt::Write as _;
 
-/// Artifact schema identifier; bump on layout changes.
+/// Artifact schema identifier of shape-less (single-rail) surfaces.
 pub const SCHEMA: &str = "hetcomm.surface.v1";
 
-fn usize_list(xs: &[usize]) -> String {
-    let items: Vec<String> = xs.iter().map(|v| v.to_string()).collect();
-    format!("[{}]", items.join(", "))
-}
+/// Artifact schema identifier of shape-keyed (multi-rail) surfaces.
+pub const SCHEMA_V2: &str = "hetcomm.surface.v2";
 
 /// Serialize a surface as a versioned JSON artifact. Stale flags are not
 /// persisted: an artifact is always written fresh (recompile before save).
+/// Single-rail surfaces emit [`SCHEMA`] bytes (identical to the
+/// pre-shape-layer writer); multi-rail surfaces emit [`SCHEMA_V2`] with
+/// the `nics` shape key.
 pub fn to_json(surface: &DecisionSurface) -> String {
     let mut out = String::new();
     out.push_str("{\n");
-    let _ = writeln!(out, "  \"schema\": \"{SCHEMA}\",");
-    let _ = writeln!(out, "  \"machine\": \"{}\",", esc(&surface.machine));
+    if surface.nics == 1 {
+        let _ = writeln!(out, "  \"schema\": \"{SCHEMA}\",");
+        let _ = writeln!(out, "  \"machine\": \"{}\",", esc(&surface.machine));
+    } else {
+        let _ = writeln!(out, "  \"schema\": \"{SCHEMA_V2}\",");
+        let _ = writeln!(out, "  \"machine\": \"{}\",", esc(&surface.machine));
+        let _ = writeln!(out, "  \"nics\": {},", surface.nics);
+    }
     let _ = writeln!(out, "  \"dup_frac\": {},", num(surface.dup_frac));
     out.push_str("  \"axes\": {\n");
     let _ = writeln!(out, "    \"msgs\": {},", usize_list(&surface.axes.msgs));
@@ -59,13 +74,18 @@ pub fn load(path: &str) -> Result<DecisionSurface, String> {
     parse_json(&text)
 }
 
-/// Parse and validate an artifact.
+/// Parse and validate an artifact (either schema version; see the module
+/// docs for the v1 read-compat rule).
 pub fn parse_json(text: &str) -> Result<DecisionSurface, String> {
     let value = Json::parse(text)?;
     let schema = value.field("schema")?.as_str()?;
-    if schema != SCHEMA {
-        return Err(format!("unsupported surface schema {schema:?} (expected {SCHEMA:?})"));
-    }
+    let nics = match schema {
+        s if s == SCHEMA => 1, // v1 read-compat: shape-less means single-rail
+        s if s == SCHEMA_V2 => value.field("nics")?.as_usize()?,
+        other => {
+            return Err(format!("unsupported surface schema {other:?} (expected {SCHEMA:?} or {SCHEMA_V2:?})"))
+        }
+    };
     let axes = value.field("axes")?;
     let axes = SurfaceAxes {
         msgs: axes.field("msgs")?.as_usize_list()?,
@@ -91,6 +111,7 @@ pub fn parse_json(text: &str) -> Result<DecisionSurface, String> {
     let stale = vec![false; cells.len()];
     let surface = DecisionSurface {
         machine: value.field("machine")?.as_str()?.to_string(),
+        nics,
         dup_frac: value.field("dup_frac")?.as_f64()?,
         axes,
         strategies,
@@ -105,14 +126,17 @@ pub fn parse_json(text: &str) -> Result<DecisionSurface, String> {
 mod tests {
     use super::*;
 
-    fn tiny_surface() -> DecisionSurface {
-        let axes = SurfaceAxes {
+    fn tiny_axes() -> SurfaceAxes {
+        SurfaceAxes {
             msgs: vec![64, 256],
             sizes: vec![256, 4096, 1 << 18],
             dest_nodes: vec![4, 16],
             gpus_per_node: vec![4],
-        };
-        DecisionSurface::compile("lassen", axes, 0.25).unwrap()
+        }
+    }
+
+    fn tiny_surface() -> DecisionSurface {
+        DecisionSurface::compile("lassen", tiny_axes(), 0.25).unwrap()
     }
 
     #[test]
@@ -124,6 +148,35 @@ mod tests {
         assert_eq!(surface, parsed);
         // serialization is stable: emit(parse(emit(s))) == emit(s)
         assert_eq!(json, to_json(&parsed));
+    }
+
+    #[test]
+    fn single_rail_surfaces_stay_on_v1_bytes() {
+        // the v1 writer never learns about shapes: no `nics` key at all
+        let json = to_json(&tiny_surface());
+        assert!(json.contains("\"schema\": \"hetcomm.surface.v1\""));
+        assert!(!json.contains("nics"), "v1 artifacts must not carry the shape key");
+    }
+
+    #[test]
+    fn multi_rail_surfaces_roundtrip_as_v2() {
+        for (machine, nics) in [("frontier-4nic", 0usize), ("lassen", 4)] {
+            let surface = DecisionSurface::compile_shaped(machine, nics, tiny_axes(), 0.0).unwrap();
+            let json = to_json(&surface);
+            assert!(json.contains("\"schema\": \"hetcomm.surface.v2\""), "{machine}");
+            assert!(json.contains(&format!("\"nics\": {}", surface.nics)));
+            let parsed = parse_json(&json).unwrap();
+            assert_eq!(surface, parsed);
+            assert_eq!(json, to_json(&parsed));
+        }
+    }
+
+    #[test]
+    fn v1_artifacts_read_as_single_rail() {
+        // a pre-shape-layer artifact (no nics key) loads with nics = 1
+        let json = to_json(&tiny_surface());
+        let parsed = parse_json(&json).unwrap();
+        assert_eq!(parsed.nics, 1);
     }
 
     #[test]
@@ -142,6 +195,10 @@ mod tests {
         let json = to_json(&tiny_surface()).replace(SCHEMA, "hetcomm.surface.v999");
         let err = parse_json(&json).unwrap_err();
         assert!(err.contains("unsupported"), "{err}");
+        // a v2 artifact missing its shape key is rejected too
+        let surface = DecisionSurface::compile_shaped("lassen", 2, tiny_axes(), 0.0).unwrap();
+        let json = to_json(&surface).replace("  \"nics\": 2,\n", "");
+        assert!(parse_json(&json).is_err());
     }
 
     #[test]
@@ -155,5 +212,4 @@ mod tests {
         let truncated = to_json(&tiny_surface()).replace("\"msgs\": [64, 256]", "\"msgs\": [64, 256, 512]");
         assert!(parse_json(&truncated).is_err());
     }
-
 }

@@ -163,6 +163,11 @@ pub struct SurfaceCrossover {
 pub struct DecisionSurface {
     /// Canonical registry name of the machine ([`machines::parse`]).
     pub machine: String,
+    /// NIC rails per node the lattice was evaluated at — the shape key of
+    /// the surface (§6): 1 is the legacy single-rail node (persisted as
+    /// `hetcomm.surface.v1` for byte compatibility), anything else is a
+    /// multi-rail shape (persisted as `hetcomm.surface.v2`).
+    pub nics: usize,
     /// Duplicate-data fraction the lattice was evaluated at.
     pub dup_frac: f64,
     pub axes: SurfaceAxes,
@@ -177,10 +182,18 @@ pub struct DecisionSurface {
 }
 
 /// Modeled times of every strategy at one lattice point — exactly the path
-/// `hetcomm sweep` takes for a uniform-scenario cell, so surface lattice
-/// values and sweep model values agree bit for bit.
-fn cell_times(arch: &Machine, params: &MachineParams, strategies: &[Strategy], q: &Pattern, dup_frac: f64) -> Vec<f64> {
-    let node = machines::with_shape(arch, q.dest_nodes + 1, q.gpus_per_node);
+/// `hetcomm sweep` takes for a uniform-scenario cell (including the NIC
+/// rail count), so surface lattice values and sweep model values agree bit
+/// for bit.
+fn cell_times(
+    arch: &Machine,
+    params: &MachineParams,
+    nics: usize,
+    strategies: &[Strategy],
+    q: &Pattern,
+    dup_frac: f64,
+) -> Vec<f64> {
+    let node = machines::with_shape_nics(arch, q.dest_nodes + 1, q.gpus_per_node, nics);
     let sc = Scenario { n_msgs: q.n_msgs, msg_size: q.msg_size, n_dest: q.dest_nodes, dup_frac };
     let inputs = sc.inputs(&node, node.cores_per_node());
     let sm = StrategyModel::new(&node, params);
@@ -256,12 +269,36 @@ fn cross_size(s0: usize, s1: usize, a0: f64, a1: f64, b0: f64, b1: f64) -> f64 {
 }
 
 impl DecisionSurface {
-    /// Compile a surface: evaluate the Table 6 models of the registry
-    /// machine at every lattice point. Deterministic — two compiles of the
-    /// same spec produce bit-identical surfaces.
-    pub fn compile(machine: &str, mut axes: SurfaceAxes, dup_frac: f64) -> Result<DecisionSurface, String> {
-        let (arch, params) =
-            machines::parse(machine, 1).ok_or_else(|| format!("unknown machine preset {machine:?}"))?;
+    /// Compile a surface at the machine preset's own NIC rail count:
+    /// evaluate the Table 6 models of the registry machine at every lattice
+    /// point. Deterministic — two compiles of the same spec produce
+    /// bit-identical surfaces.
+    pub fn compile(machine: &str, axes: SurfaceAxes, dup_frac: f64) -> Result<DecisionSurface, String> {
+        DecisionSurface::compile_shaped(machine, 0, axes, dup_frac)
+    }
+
+    /// [`DecisionSurface::compile`] with an explicit NIC rail count — the
+    /// shape key of the surface. `nics = 0` means "the preset's own count";
+    /// presets whose shape pins the count ([`machines::shape_pinned`])
+    /// reject any other value.
+    pub fn compile_shaped(
+        machine: &str,
+        nics: usize,
+        mut axes: SurfaceAxes,
+        dup_frac: f64,
+    ) -> Result<DecisionSurface, String> {
+        let (arch, params) = machines::parse(machine, 1)?;
+        // A pinned preset's shape IS its NIC count: any explicit override —
+        // even the matching value — is rejected, the same policy as the
+        // `--nics` CLI flag on `sweep` and `model`.
+        if nics != 0 && machines::shape_pinned(&arch.name) {
+            return Err(format!(
+                "--nics conflicts with machine {:?}, whose shape pins {} NICs/node",
+                arch.name,
+                arch.nics_per_node()
+            ));
+        }
+        let nics = if nics == 0 { arch.nics_per_node() } else { nics };
         axes.normalize();
         axes.validate()?;
         if let Some(&g) = axes.gpus_per_node.iter().find(|&&g| g % arch.sockets_per_node != 0) {
@@ -280,13 +317,13 @@ impl DecisionSurface {
                 for &g in &axes.gpus_per_node {
                     for &s in &axes.sizes {
                         let q = Pattern { n_msgs: m, msg_size: s, dest_nodes: d, gpus_per_node: g };
-                        cells.push(cell_times(&arch, &params, &strategies, &q, dup_frac));
+                        cells.push(cell_times(&arch, &params, nics, &strategies, &q, dup_frac));
                     }
                 }
             }
         }
         let stale = vec![false; cells.len()];
-        Ok(DecisionSurface { machine: arch.name.clone(), dup_frac, axes, strategies, cells, stale })
+        Ok(DecisionSurface { machine: arch.name.clone(), nics, dup_frac, axes, strategies, cells, stale })
     }
 
     /// Structural sanity (used after artifact loads); returns a user-facing
@@ -310,8 +347,17 @@ impl DecisionSurface {
                 return Err(format!("cell {i} holds a non-positive or non-finite time"));
             }
         }
-        if machines::parse(&self.machine, 1).is_none() {
-            return Err(format!("unknown machine preset {:?}", self.machine));
+        let (arch, _) = machines::parse(&self.machine, 1)?;
+        if self.nics == 0 {
+            return Err("surface has a zero NIC rail count".into());
+        }
+        if machines::shape_pinned(&arch.name) && self.nics != arch.nics_per_node() {
+            return Err(format!(
+                "surface claims {} NICs/node but machine {:?} pins {}",
+                self.nics,
+                arch.name,
+                arch.nics_per_node()
+            ));
         }
         Ok(())
     }
@@ -407,8 +453,7 @@ impl DecisionSurface {
         if self.stale_count() == 0 {
             return Ok(0);
         }
-        let (arch, _) =
-            machines::parse(&self.machine, 1).ok_or_else(|| format!("unknown machine preset {:?}", self.machine))?;
+        let (arch, _) = machines::parse(&self.machine, 1)?;
         let mut recompiled = 0;
         for (mi, &m) in self.axes.msgs.iter().enumerate() {
             for (di, &d) in self.axes.dest_nodes.iter().enumerate() {
@@ -419,7 +464,7 @@ impl DecisionSurface {
                             continue;
                         }
                         let q = Pattern { n_msgs: m, msg_size: s, dest_nodes: d, gpus_per_node: g };
-                        self.cells[idx] = cell_times(&arch, params, &self.strategies, &q, self.dup_frac);
+                        self.cells[idx] = cell_times(&arch, params, self.nics, &self.strategies, &q, self.dup_frac);
                         self.stale[idx] = false;
                         recompiled += 1;
                     }
@@ -459,6 +504,36 @@ mod tests {
         let s = DecisionSurface::compile("frontier", tiny_axes(), 0.0).unwrap();
         assert_eq!(s.machine, "frontier-like");
         assert!(DecisionSurface::compile("bogus", tiny_axes(), 0.0).is_err());
+    }
+
+    #[test]
+    fn shape_keyed_compiles() {
+        // default key: the preset's own rail count
+        let legacy = DecisionSurface::compile("lassen", tiny_axes(), 0.0).unwrap();
+        assert_eq!(legacy.nics, 1);
+        let pinned = DecisionSurface::compile("frontier-4nic", tiny_axes(), 0.0).unwrap();
+        assert_eq!(pinned.nics, 4);
+        pinned.validate().unwrap();
+        // explicit key on an unpinned machine
+        let railed = DecisionSurface::compile_shaped("lassen", 4, tiny_axes(), 0.0).unwrap();
+        assert_eq!(railed.nics, 4);
+        railed.validate().unwrap();
+        // rails relieve injection-limited staged cells and never hurt
+        let mut moved = false;
+        for (a, b) in legacy.cells.iter().zip(&railed.cells) {
+            for (x, y) in a.iter().zip(b) {
+                assert!(y <= &(x * (1.0 + 1e-12)));
+                moved |= y < x;
+            }
+        }
+        assert!(moved, "4 rails must move at least one lattice cell");
+        // pinned presets reject contradicting keys
+        let err = DecisionSurface::compile_shaped("frontier-4nic", 1, tiny_axes(), 0.0).unwrap_err();
+        assert!(err.contains("pins"), "{err}");
+        // validation rejects a tampered pinned surface
+        let mut bad = pinned.clone();
+        bad.nics = 2;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -123,6 +123,7 @@ fn perf_grid(quick: bool) -> GridSpec {
             gens: vec![PatternGen::Uniform, PatternGen::Random],
             dest_nodes: vec![4],
             gpus_per_node: vec![4],
+            nics: vec![1],
             sizes: vec![1 << 8, 1 << 12, 1 << 16],
             n_msgs: 64,
             dup_frac: 0.0,
@@ -132,6 +133,7 @@ fn perf_grid(quick: bool) -> GridSpec {
             gens: vec![PatternGen::Uniform, PatternGen::Random],
             dest_nodes: vec![4, 8],
             gpus_per_node: vec![4],
+            nics: vec![1],
             sizes: vec![1 << 6, 1 << 10, 1 << 14, 1 << 18],
             n_msgs: 256,
             dup_frac: 0.0,
@@ -225,7 +227,7 @@ pub fn run_perf(config: &PerfConfig) -> Result<PerfReport, String> {
     // --- schedule build + lowering throughput ---
     let (arch, params) = machines::parse("lassen", 1).expect("lassen is registered");
     let compiled_params = params.compile();
-    let machine = grid.machine_for_arch(&arch, 4, 4);
+    let machine = grid.machine_for_arch(&arch, 4, 4, 1);
     let scenario = Scenario { n_msgs: grid.n_msgs, msg_size: 4096, n_dest: 4, dup_frac: 0.0 };
     let pattern = scenario.materialize(&machine);
     let lowered = CompiledPattern::lower(&machine, &pattern);

@@ -225,6 +225,14 @@ impl Engine {
             surface.machine,
             machine.name
         );
+        // surfaces are shape-keyed: a 4-rail lassen surface must not pick
+        // strategies for a single-rail lassen node
+        anyhow::ensure!(
+            surface.nics == machine.nics_per_node(),
+            "advisor surface was compiled for {} NICs/node but the engine machine has {}",
+            surface.nics,
+            machine.nics_per_node()
+        );
         let pm = PartitionedMatrix::build(a, nparts);
         let pattern = pm.comm_pattern(machine, config.elem_size);
         let stats = pattern.stats(machine);

@@ -122,7 +122,8 @@ fn cmd_model(argv: &[String]) -> i32 {
         .flag("dest", "16", "destination node count")
         .flag("dup", "0.0", "duplicate-data fraction removed by node-aware strategies")
         .flag("nodes", "32", "cluster node count")
-        .flag("machine", "lassen", "machine preset (lassen | summit | frontier-like | delta-like)");
+        .flag("nics", "0", "NIC rails per node (0 = machine preset default)")
+        .flag("machine", "lassen", "machine preset (lassen | summit | frontier-like | frontier-4nic | delta-like)");
     let a = match cli.parse(argv) {
         Ok(a) => a,
         Err(e) => {
@@ -130,9 +131,28 @@ fn cmd_model(argv: &[String]) -> i32 {
             return 2;
         }
     };
-    let Some((machine, params)) = machines::parse(a.get("machine"), a.get_usize("nodes").unwrap()) else {
-        eprintln!("unknown machine {:?}; known: {:?}", a.get("machine"), machines::NAMES);
-        return 2;
+    let (machine, params) = match machines::parse(a.get("machine"), a.get_usize("nodes").unwrap()) {
+        Ok(mp) => mp,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let nics = a.get_usize("nics").unwrap();
+    let machine = if nics > 0 {
+        // same policy as `sweep` / `advise`: a pinned shape rejects any
+        // explicit override, even the matching value
+        if machines::shape_pinned(&machine.name) {
+            eprintln!(
+                "--nics conflicts with machine {:?}, whose shape pins {} NICs/node",
+                machine.name,
+                machine.nics_per_node()
+            );
+            return 2;
+        }
+        machines::with_shape_nics(&machine, machine.num_nodes, machine.gpus_per_node(), nics)
+    } else {
+        machine
     };
     let sc = Scenario {
         n_msgs: a.get_usize("msgs").unwrap(),
@@ -142,8 +162,19 @@ fn cmd_model(argv: &[String]) -> i32 {
     };
     let inputs = sc.inputs(&machine, machine.cores_per_node());
     let sm = StrategyModel::new(&machine, &params);
+    let rails = if machine.nics_per_node() > 1 {
+        format!(", {} NICs/node", machine.nics_per_node())
+    } else {
+        String::new()
+    };
     let mut t = Table::new(
-        format!("Modeled time: {} msgs x {} B to {} nodes (dup {:.0}%)", sc.n_msgs, sc.msg_size, sc.n_dest, sc.dup_frac * 100.0),
+        format!(
+            "Modeled time: {} msgs x {} B to {} nodes (dup {:.0}%{rails})",
+            sc.n_msgs,
+            sc.msg_size,
+            sc.n_dest,
+            sc.dup_frac * 100.0
+        ),
         &["strategy", "modeled[s]"],
     );
     let mut best: Option<(&'static str, f64)> = None;
@@ -207,6 +238,7 @@ fn cmd_sweep(argv: &[String]) -> i32 {
         .flag("msgs", "256", "inter-node messages per scenario")
         .flag("dest", "4,8,16", "destination-node counts (comma list)")
         .flag("gpn", "4", "GPUs per node (comma list, even values)")
+        .flag("nics", "1", "NIC rails per node (comma list; the §6 shape axis)")
         .flag("sizes", "2^4,2^6,2^8,2^10,2^12,2^14,2^16,2^18,2^20", "message sizes (supports 2^k)")
         .flag("dup", "0.0", "duplicate-data fraction in [0,1)")
         .flag("gens", "uniform,random", "pattern generators (uniform|random)")
@@ -215,7 +247,7 @@ fn cmd_sweep(argv: &[String]) -> i32 {
         .flag("threads", "0", "worker threads (0 = all cores)")
         .flag("format", "table", "output format: table | json | csv")
         .flag("out", "-", "output path ('-' = stdout)")
-        .flag("machine", "lassen", "machine preset (lassen | summit | frontier-like | delta-like)")
+        .flag("machine", "lassen", "machine preset (lassen | summit | frontier-like | frontier-4nic | delta-like)")
         .flag("emit-surface", "", "also compile the grid into an advisor surface artifact at this path")
         .flag("trace", "", "sweep a recorded hetcomm.trace.v1 workload instead of the grid (epoch = cell)")
         .switch("tiny", "run the <10s smoke grid instead of the flag-defined grid")
@@ -241,7 +273,7 @@ fn cmd_sweep(argv: &[String]) -> i32 {
         if argv.iter().any(|t| t == "--machine" || t.starts_with("--machine=")) {
             eprintln!("note: sweeping the trace on its recorded machine {:?} (--machine ignored)", trace.machine.name);
         }
-        for flag in ["--msgs", "--dest", "--gpn", "--sizes", "--dup", "--gens", "--seed", "--tiny"] {
+        for flag in ["--msgs", "--dest", "--gpn", "--nics", "--sizes", "--dup", "--gens", "--seed", "--tiny"] {
             if argv.iter().any(|t| t == flag || t.starts_with(&format!("{flag}="))) {
                 eprintln!("note: {flag} shapes the generated grid; trace epochs are replayed verbatim (ignored)");
             }
@@ -285,6 +317,13 @@ fn cmd_sweep(argv: &[String]) -> i32 {
     }
 
     let grid = if a.get_bool("tiny") {
+        // the smoke grid is fixed; surface explicitly-given grid flags
+        // instead of silently dropping them (mirrors the --trace branch)
+        for flag in ["--msgs", "--dest", "--gpn", "--nics", "--sizes", "--dup", "--gens"] {
+            if argv.iter().any(|t| t == flag || t.starts_with(&format!("{flag}="))) {
+                eprintln!("note: --tiny runs the fixed smoke grid; {flag} is ignored");
+            }
+        }
         hetcomm::sweep::GridSpec::tiny()
     } else {
         let mut gens = Vec::new();
@@ -307,6 +346,13 @@ fn cmd_sweep(argv: &[String]) -> i32 {
                 }
             },
             gpus_per_node: match a.get_usize_list("gpn") {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!("{}", e.0);
+                    return 2;
+                }
+            },
+            nics: match a.get_usize_list("nics") {
                 Ok(v) => v,
                 Err(e) => {
                     eprintln!("{}", e.0);
@@ -336,6 +382,15 @@ fn cmd_sweep(argv: &[String]) -> i32 {
             },
         }
     };
+
+    // A preset whose shape pins the NIC count *is* the node description:
+    // an explicit --nics (even the matching value) is a contradiction the
+    // engine cannot see, so reject it here where "explicit" is knowable.
+    let nics_given = argv.iter().any(|t| t == "--nics" || t.starts_with("--nics="));
+    if nics_given && machines::shape_pinned(a.get("machine")) {
+        eprintln!("--nics cannot override machine {:?}: its shape pins the NIC count", a.get("machine"));
+        return 2;
+    }
 
     let strategies = match parse_strategies(a.get("strategies")) {
         Ok(s) => s,
@@ -387,14 +442,22 @@ fn cmd_sweep(argv: &[String]) -> i32 {
         if config.strategies.len() != Strategy::all().len() {
             eprintln!("note: surface artifacts always cover all Table 5 strategies (--strategies filter not baked in)");
         }
+        if result.config.grid.nics.len() != 1 {
+            eprintln!("note: surfaces are keyed by one node shape; --emit-surface needs one --nics value (skipped)");
+            return 0;
+        }
         let axes = hetcomm::advisor::SurfaceAxes {
             msgs: vec![config.grid.n_msgs],
             sizes: config.grid.sizes.clone(),
             dest_nodes: config.grid.dest_nodes.clone(),
             gpus_per_node: config.grid.gpus_per_node.clone(),
         };
-        let compiled = hetcomm::advisor::DecisionSurface::compile(&config.machine, axes, config.grid.dup_frac)
-            .and_then(|s| hetcomm::advisor::persist::save(&s, surface_path));
+        // pinned machines carry their own rail count (0 = preset default);
+        // everything else keys the surface by the resolved grid axis
+        let nics = if machines::shape_pinned(&config.machine) { 0 } else { result.config.grid.nics[0] };
+        let compiled =
+            hetcomm::advisor::DecisionSurface::compile_shaped(&config.machine, nics, axes, config.grid.dup_frac)
+                .and_then(|s| hetcomm::advisor::persist::save(&s, surface_path));
         if let Err(e) = compiled {
             eprintln!("cannot emit surface: {e}");
             return 1;
@@ -410,7 +473,8 @@ fn cmd_advise(argv: &[String]) -> i32 {
         .switch("query", "answer one strategy query (--q-msgs / --q-size / --q-dest / --q-gpn)")
         .flag("bench-burst", "0", "answer a seeded synthetic burst of N cached queries")
         .switch("recalibrate", "run the sim-probe recalibration loop (refit -> stale -> lazy recompile)")
-        .flag("machine", "lassen", "machine preset (lassen | summit | frontier-like | delta-like)")
+        .flag("machine", "lassen", "machine preset (lassen | summit | frontier-like | frontier-4nic | delta-like)")
+        .flag("nics", "0", "NIC rails per node to key the surface by (0 = machine preset default)")
         .flag("surface", "", "surface artifact to load (empty = compile in memory from the axis flags)")
         .flag("out", "-", "output path for --compile ('-' = stdout)")
         .flag("msgs", "32,64,128,256,512", "lattice axis: node message counts")
@@ -445,14 +509,14 @@ fn cmd_advise(argv: &[String]) -> i32 {
                 return 2;
             }
         };
-        let dup = match a.get_f64("dup") {
-            Ok(d) => d,
-            Err(e) => {
+        let (dup, nics) = match (a.get_f64("dup"), a.get_usize("nics")) {
+            (Ok(d), Ok(n)) => (d, n),
+            (Err(e), _) | (_, Err(e)) => {
                 eprintln!("{}", e.0);
                 return 2;
             }
         };
-        match hetcomm::advisor::DecisionSurface::compile(a.get("machine"), axes, dup) {
+        match hetcomm::advisor::DecisionSurface::compile_shaped(a.get("machine"), nics, axes, dup) {
             Ok(s) => s,
             Err(e) => {
                 eprintln!("cannot compile surface: {e}");
@@ -466,13 +530,18 @@ fn cmd_advise(argv: &[String]) -> i32 {
                 // EXPLICIT contradicting --machine instead of silently
                 // ignoring it (the flag's default must not trigger this)
                 let machine_given = argv.iter().any(|t| t == "--machine" || t.starts_with("--machine="));
-                let flag_arch = machines::parse(a.get("machine"), 1);
+                let flag_arch = machines::parse(a.get("machine"), 1).ok();
                 if machine_given && flag_arch.as_ref().map(|(m, _)| m.name.as_str()) != Some(s.machine.as_str()) {
                     eprintln!(
                         "note: serving the loaded {} surface (--machine {} ignored)",
                         s.machine,
                         a.get("machine")
                     );
+                }
+                // same courtesy for the shape key: a loaded artifact fixes it
+                let nics_given = argv.iter().any(|t| t == "--nics" || t.starts_with("--nics="));
+                if nics_given {
+                    eprintln!("note: serving the loaded surface's {} NICs/node (--nics ignored)", s.nics);
                 }
                 s
             }
@@ -489,9 +558,12 @@ fn cmd_advise(argv: &[String]) -> i32 {
     // surface (the compile -> query -> recalibrate -> recompile loop).
     if a.get_bool("recalibrate") {
         did_something = true;
-        let Some((probe_machine, base_params)) = machines::parse(&surface.machine, 2) else {
-            eprintln!("surface machine {:?} is not in the registry", surface.machine);
-            return 1;
+        let (probe_machine, base_params) = match machines::parse(&surface.machine, 2) {
+            Ok(mp) => mp,
+            Err(e) => {
+                eprintln!("surface machine is not in the registry: {e}");
+                return 1;
+            }
         };
         let mut cal = hetcomm::advisor::Calibrator::new(base_params.clone());
         let probe_sizes: Vec<usize> = (4..=20).map(|e| 1usize << e).collect();
@@ -645,7 +717,11 @@ fn cmd_replay(argv: &[String]) -> i32 {
         .flag("gpus", "8", "record: partition count")
         .flag("nodes", "2", "record: cluster nodes")
         .flag("iters", "4", "record: iterations to record")
-        .flag("machine", "lassen", "scenario/record: machine preset (lassen | summit | frontier-like | delta-like)")
+        .flag(
+            "machine",
+            "lassen",
+            "scenario/record: machine preset (lassen | summit | frontier-like | frontier-4nic | delta-like)",
+        )
         .flag("epochs", "5", "scenario: epoch (plateau) count")
         .flag("repeat", "0", "scenario: iterations per epoch (0 = scenario default)")
         .flag("seed", "42", "scenario: message-order shuffle seed (recorded in the trace)")
@@ -698,9 +774,12 @@ fn cmd_replay(argv: &[String]) -> i32 {
                     return 2;
                 }
             };
-            let Some((machine, _)) = machines::parse(a.get("machine"), nodes) else {
-                eprintln!("unknown machine {:?}; known: {:?}", a.get("machine"), machines::NAMES);
-                return 2;
+            let machine = match machines::parse(a.get("machine"), nodes) {
+                Ok((m, _)) => m,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
             };
             match hetcomm::trace::record::record_spmv(a.get("matrix"), scale, gpus, &machine, iters, seed) {
                 Ok(t) => t,
@@ -860,7 +939,7 @@ fn cmd_spmv(argv: &[String]) -> i32 {
         .flag("gpus", "8", "partition count")
         .flag("nodes", "2", "cluster nodes")
         .flag("iters", "3", "repetitions")
-        .flag("machine", "lassen", "machine preset (lassen | summit | frontier-like | delta-like)")
+        .flag("machine", "lassen", "machine preset (lassen | summit | frontier-like | frontier-4nic | delta-like)")
         .switch("pjrt", "run local compute through the PJRT artifact");
     let a = match cli.parse(argv) {
         Ok(a) => a,
@@ -874,9 +953,12 @@ fn cmd_spmv(argv: &[String]) -> i32 {
         return 2;
     };
     let mat = suite::proxy(info, a.get_usize("scale").unwrap());
-    let Some((machine, _params)) = machines::parse(a.get("machine"), a.get_usize("nodes").unwrap()) else {
-        eprintln!("unknown machine {:?}; known: {:?}", a.get("machine"), machines::NAMES);
-        return 2;
+    let (machine, _params) = match machines::parse(a.get("machine"), a.get_usize("nodes").unwrap()) {
+        Ok(mp) => mp,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
     };
     let gpus = a.get_usize("gpus").unwrap();
     println!("matrix {} proxy: {} rows, {} nnz over {gpus} GPUs", info.name, mat.nrows, mat.nnz());
@@ -1080,7 +1162,7 @@ fn cmd_study(argv: &[String]) -> i32 {
     let cli = Cli::new("hetcomm study", "Section 6 outlook: best strategy on current and future machines")
         .flag("msgs", "256", "inter-node messages per node")
         .flag("dest", "16", "destination nodes")
-        .flag("machine", "all", "lassen | frontier | delta | all")
+        .flag("machine", "all", "lassen | frontier | frontier-4nic | delta | all")
         .flag("bw-scale", "0", "interconnect bandwidth multiplier (0 = per-machine default)")
         .flag("sizes", "2^8,2^10,2^12,2^14,2^16,2^18", "message sizes");
     let a = match cli.parse(argv) {
@@ -1100,6 +1182,12 @@ fn cmd_study(argv: &[String]) -> i32 {
     if chosen == "all" || chosen == "frontier" {
         let bw = if bw_override > 0.0 { bw_override } else { 4.0 };
         configs.push(("frontier-like", machines::frontier_like(32), base.scaled(0.8, bw)));
+    }
+    if chosen == "all" || chosen == "frontier-4nic" {
+        // resource-graph view: 4 explicit rails at the (possibly overridden)
+        // per-rail bandwidth instead of one aggregate-scaled rail
+        let bw = if bw_override > 0.0 { bw_override } else { 1.0 };
+        configs.push(("frontier-4nic", machines::frontier_4nic(32), base.scaled(0.8, bw)));
     }
     if chosen == "all" || chosen == "delta" {
         let bw = if bw_override > 0.0 { bw_override } else { 2.0 };

@@ -33,6 +33,17 @@ impl MaxRate {
         self.alpha * m as f64 + (s_node as f64 / self.rn).max(s_proc as f64 / self.rb)
     }
 
+    /// [`MaxRate::time_node`] generalized to `nics` injecting NICs — the
+    /// paper's §6 multi-rail form, where the node's injection limit is
+    /// `min(ppn·R_b, nic_count·R_N)` expressed as
+    /// `T = α·m + max(s_node / (nics·R_N), s_proc / R_b)`.
+    /// At `nics = 1` this is bit-identical to [`MaxRate::time_node`]
+    /// (`R_N · 1.0 == R_N`).
+    pub fn time_node_rails(&self, m: usize, s_proc: usize, s_node: usize, nics: usize) -> f64 {
+        let rn_node = self.rn * nics.max(1) as f64;
+        self.alpha * m as f64 + (s_node as f64 / rn_node).max(s_proc as f64 / self.rb)
+    }
+
     /// True when this configuration is injection-bandwidth limited (the NIC
     /// term dominates the per-process term).
     pub fn nic_limited(&self, s_proc: usize, s_node: usize) -> bool {
@@ -98,5 +109,30 @@ mod tests {
         let mr = lassen_maxrate();
         let (m, s, ppn) = (4, 1 << 18, 8);
         assert!((mr.time(m, s, ppn) - mr.time_node(m, s, ppn * s)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn one_rail_is_bit_identical_to_time_node() {
+        let mr = lassen_maxrate();
+        for (m, s_proc, s_node) in [(1usize, 1usize << 10, 1usize << 12), (7, 1 << 18, 40 << 18), (16, 1, 1)] {
+            assert_eq!(
+                mr.time_node_rails(m, s_proc, s_node, 1).to_bits(),
+                mr.time_node(m, s_proc, s_node).to_bits(),
+                "{m} {s_proc} {s_node}"
+            );
+        }
+    }
+
+    #[test]
+    fn rails_relieve_only_the_nic_term() {
+        let mr = lassen_maxrate();
+        let (m, s_proc) = (4, 1 << 18);
+        let s_node = 40 * s_proc; // heavily NIC-limited at 1 rail
+        let t1 = mr.time_node_rails(m, s_proc, s_node, 1);
+        let t4 = mr.time_node_rails(m, s_proc, s_node, 4);
+        assert!(t4 < t1, "4 rails must relieve an injection-limited node: {t4} !< {t1}");
+        // once the per-process term dominates, more rails stop helping
+        let light = mr.time_node_rails(m, s_proc, s_proc, 1);
+        assert_eq!(light.to_bits(), mr.time_node_rails(m, s_proc, s_proc, 16).to_bits());
     }
 }

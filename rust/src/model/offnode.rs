@@ -1,8 +1,9 @@
 //! Off-node phase models (Section 4.3).
 //!
-//! Staged-through-host traffic uses the max-rate form (Eq. 4.3):
+//! Staged-through-host traffic uses the max-rate form (Eq. 4.3),
+//! generalized to the node shape's NIC rail count (§6):
 //!
-//! `T_off(m, s) = α_off·m + max( s_node / R_N , s_proc·β_off )`
+//! `T_off(m, s, n) = α_off·m + max( s_node / (n·R_N) , s_proc·β_off )`
 //!
 //! Device-aware traffic uses the postal form (Eq. 4.4):
 //!
@@ -14,13 +15,17 @@
 use crate::params::{Endpoint, MachineParams};
 use crate::topology::Locality;
 
-/// Eq. (4.3): staged-through-host off-node time. `m` = number of inter-node
-/// messages sent by the worst process, `s_proc` = max bytes sent by a single
-/// process, `s_node` = max bytes injected by any single node.
-pub fn t_off(params: &MachineParams, m: usize, s_proc: usize, s_node: usize) -> f64 {
+/// Eq. (4.3) over `nics` injecting NIC rails: staged-through-host off-node
+/// time. `m` = number of inter-node messages sent by the worst process,
+/// `s_proc` = max bytes sent by a single process, `s_node` = max bytes
+/// injected by any single node; the node's injection limit is
+/// `nics · R_N`. At `nics = 1` this is bit-identical to the single-NIC
+/// Eq. (4.3) (`x / 1.0 == x`).
+pub fn t_off(params: &MachineParams, m: usize, s_proc: usize, s_node: usize, nics: usize) -> f64 {
     let per_msg = if m > 0 { s_proc.div_ceil(m) } else { 0 };
     let ab = params.ab_for(Endpoint::Cpu, Locality::OffNode, per_msg);
-    ab.alpha * m as f64 + (s_node as f64 * params.inv_rn).max(s_proc as f64 * ab.beta)
+    let nic_term = s_node as f64 * params.inv_rn / nics.max(1) as f64;
+    ab.alpha * m as f64 + nic_term.max(s_proc as f64 * ab.beta)
 }
 
 /// Eq. (4.4): device-aware off-node time (postal; GPUs per node are too few
@@ -44,7 +49,10 @@ mod tests {
         let per_msg = s_proc / m;
         let ab = p.ab_for(Endpoint::Cpu, Locality::OffNode, per_msg);
         let expect = ab.alpha * 4.0 + s_node as f64 * p.inv_rn;
-        assert!((t_off(&p, m, s_proc, s_node) - expect).abs() < 1e-12);
+        assert!((t_off(&p, m, s_proc, s_node, 1) - expect).abs() < 1e-12);
+        // 4 rails quarter the NIC term (still injection-limited here)
+        let expect4 = ab.alpha * 4.0 + s_node as f64 * p.inv_rn / 4.0;
+        assert!((t_off(&p, m, s_proc, s_node, 4) - expect4).abs() < 1e-12);
     }
 
     #[test]
@@ -55,7 +63,23 @@ mod tests {
         let per_msg = s_proc / m;
         let ab = p.ab_for(Endpoint::Cpu, Locality::OffNode, per_msg);
         let expect = ab.alpha * 2.0 + s_proc as f64 * ab.beta;
-        assert!((t_off(&p, m, s_proc, s_node) - expect).abs() < 1e-12);
+        assert!((t_off(&p, m, s_proc, s_node, 1) - expect).abs() < 1e-12);
+        // a proc-limited node gains nothing from extra rails
+        assert_eq!(t_off(&p, m, s_proc, s_node, 4).to_bits(), t_off(&p, m, s_proc, s_node, 1).to_bits());
+    }
+
+    #[test]
+    fn one_rail_division_is_exact_identity() {
+        // the refactor's safety rail: /1.0 must never move a bit
+        let p = lassen_params();
+        for (m, s_proc, s_node) in [(1usize, 3usize, 7usize), (5, 1 << 13, 40 << 13), (16, 1 << 20, 1 << 26)] {
+            let legacy = {
+                let per_msg = s_proc.div_ceil(m);
+                let ab = p.ab_for(Endpoint::Cpu, Locality::OffNode, per_msg);
+                ab.alpha * m as f64 + (s_node as f64 * p.inv_rn).max(s_proc as f64 * ab.beta)
+            };
+            assert_eq!(t_off(&p, m, s_proc, s_node, 1).to_bits(), legacy.to_bits());
+        }
     }
 
     #[test]
@@ -70,7 +94,7 @@ mod tests {
     #[test]
     fn zero_messages_zero_latency() {
         let p = lassen_params();
-        assert_eq!(t_off(&p, 0, 0, 0), 0.0);
+        assert_eq!(t_off(&p, 0, 0, 0, 1), 0.0);
         assert_eq!(t_off_da(&p, 0, 0), 0.0);
     }
 
@@ -80,8 +104,8 @@ mod tests {
         // 64 KiB total in 16 messages -> 4 KiB each -> eager;
         // in 2 messages -> 32 KiB each -> rendezvous.
         let s = 1 << 16;
-        let t16 = t_off(&p, 16, s, s);
-        let t2 = t_off(&p, 2, s, s);
+        let t16 = t_off(&p, 16, s, s, 1);
+        let t2 = t_off(&p, 2, s, s, 1);
         // eager beta (3.79e-10) > rend beta (7.97e-11): many small eager
         // messages pay more bandwidth cost + more latency.
         assert!(t16 > t2);

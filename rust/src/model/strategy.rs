@@ -40,6 +40,11 @@ pub struct ModelInputs {
     /// Actively-communicating processes per node (`ppn` of Eq. 2.2 for
     /// standard staged; the Split off-node divisor).
     pub ppn: usize,
+    /// NIC rails per node (the machine shape's
+    /// [`crate::topology::NodeShape::nics_per_node`]): the staged off-node
+    /// models divide the injection term over the rails (§6). 1 reproduces
+    /// the paper's single-NIC Lassen models bit for bit.
+    pub nics: usize,
     /// Fraction of inter-node data that is duplicated across destination
     /// processes on a node (removed by node-aware strategies).
     pub dup_frac: f64,
@@ -79,7 +84,7 @@ impl<'a> StrategyModel<'a> {
                 let per_msg = if inputs.m_std > 0 { inputs.s_proc.div_ceil(inputs.m_std) } else { 0 };
                 let ab = p.ab_for(Endpoint::Cpu, Locality::OffNode, per_msg);
                 let mr = MaxRate { alpha: ab.alpha, rb: 1.0 / ab.beta, rn: p.rn() };
-                mr.time_node(inputs.m_std, inputs.s_proc, inputs.s_node)
+                mr.time_node_rails(inputs.m_std, inputs.s_proc, inputs.s_node, inputs.nics)
                     + copy::t_copy(p, inputs.s_proc, inputs.s_proc, 1)
             }
             (StrategyKind::Standard, Transport::DeviceAware) => {
@@ -93,7 +98,7 @@ impl<'a> StrategyModel<'a> {
                 // m_n2n of the standard pattern only drives the standard
                 // model.
                 let i = inputs.deduped();
-                offnode::t_off(p, 1, i.s_n2n, i.s_node)
+                offnode::t_off(p, 1, i.s_n2n, i.s_node, i.nics)
                     + 2.0 * onnode::t_on(m, p, Endpoint::Cpu, i.s_n2n)
                     + copy::t_copy(p, i.s_proc, i.s_n2n, 1)
             }
@@ -103,7 +108,7 @@ impl<'a> StrategyModel<'a> {
             }
             (StrategyKind::TwoStep, Transport::Staged) => {
                 let i = inputs.deduped();
-                offnode::t_off(p, i.m_p2n, i.s_proc, i.s_node)
+                offnode::t_off(p, i.m_p2n, i.s_proc, i.s_node, i.nics)
                     + onnode::t_on(m, p, Endpoint::Cpu, i.s_proc)
                     + copy::t_copy(p, i.s_proc, i.s_n2n, 1)
             }
@@ -125,7 +130,7 @@ impl<'a> StrategyModel<'a> {
                 }
                 let chunk = i.s_node.div_ceil(chunks);
                 let m_split = chunks.div_ceil(i.ppn.max(1)).max(1);
-                offnode::t_off(p, m_split, m_split * chunk, i.s_node)
+                offnode::t_off(p, m_split, m_split * chunk, i.s_node, i.nics)
                     + 2.0 * onnode::t_on_split(m, p, i.s_proc, ppg, cap)
                     + copy::t_copy(p, i.s_proc, i.s_n2n, ppg.min(4))
             }
@@ -168,6 +173,7 @@ mod tests {
             m_n2n: n_msgs / n_dest,
             m_std: n_msgs / gpn,
             ppn: 40,
+            nics: 1,
             dup_frac: 0.0,
         }
     }
@@ -256,6 +262,32 @@ mod tests {
         for (s, ts) in sm.all_times(&inputs) {
             assert!(t <= ts, "best {} {t} > {} {ts}", best.label(), s.label());
         }
+    }
+
+    #[test]
+    fn extra_rails_relieve_staged_models_only() {
+        // §6: NIC rails divide the staged injection term; the device-aware
+        // postal models never touch the NIC term, so their times hold still.
+        let machine = lassen(16);
+        let params = lassen_params();
+        let sm = StrategyModel::new(&machine, &params);
+        let mut inputs = scenario(256, 1 << 14, 16); // injection-heavy
+        let base = sm.all_times(&inputs);
+        inputs.nics = 4;
+        let railed = sm.all_times(&inputs);
+        for ((s, t1), (_, t4)) in base.iter().zip(&railed) {
+            match s.transport {
+                Transport::DeviceAware => {
+                    assert_eq!(t1.to_bits(), t4.to_bits(), "{} must ignore rails", s.label())
+                }
+                Transport::Staged => assert!(t4 <= t1, "{} must not slow down with rails", s.label()),
+            }
+        }
+        // at least one staged strategy is genuinely injection-limited here
+        assert!(
+            base.iter().zip(&railed).any(|((s, t1), (_, t4))| s.transport == Transport::Staged && t4 < t1),
+            "expected an injection-limited staged strategy at 16 KiB x 256 msgs"
+        );
     }
 
     #[test]

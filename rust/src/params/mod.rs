@@ -86,6 +86,12 @@ pub struct MachineParams {
     pub memcpy: [[AlphaBeta; 2]; 2],
     /// Inverse NIC injection rate `1/R_N` [s/B] for staged (CPU) traffic.
     pub inv_rn: f64,
+    /// Per-NIC injection bands, one per rail of the node shape: `alpha` is
+    /// the per-transfer injection setup charged to the rail, `beta` the
+    /// inverse injection rate [s/B]. Empty (the default) means homogeneous
+    /// rails at `(0, inv_rn)` — exactly the pre-shape-layer NIC; rails
+    /// beyond the table's length also fall back to `(0, inv_rn)`.
+    pub nic_bands: Vec<AlphaBeta>,
     /// Byte thresholds for protocol switching: messages `< short_max` are
     /// short, `< eager_max` eager, otherwise rendezvous.
     pub short_max: usize,
@@ -150,6 +156,7 @@ pub fn lassen_params() -> MachineParams {
             [AlphaBeta::new(1.52e-5, 5.52e-10), AlphaBeta::new(1.47e-5, 1.50e-10)],
         ],
         inv_rn: 4.19e-11,
+        nic_bands: Vec::new(),
         // Spectrum MPI on Lassen: envelope-sized messages up to 512 B,
         // eager up to the 8 KiB rendezvous switch the paper (and [16]) use
         // as the Split message cap.
@@ -244,6 +251,20 @@ impl MachineParams {
         1.0 / self.inv_rn
     }
 
+    /// Injection band of one NIC rail: the explicit per-rail entry when the
+    /// table has one, otherwise the homogeneous `(0, inv_rn)` default.
+    pub fn nic_band(&self, rail: usize) -> AlphaBeta {
+        self.nic_bands.get(rail).copied().unwrap_or(AlphaBeta::new(0.0, self.inv_rn))
+    }
+
+    /// Occupancy one transfer places on a NIC rail: `α + bytes·β` of the
+    /// rail's band. With the default homogeneous bands this is bit-identical
+    /// to the historical `bytes / R_N` (`0.0 + x == x`).
+    pub fn nic_busy(&self, rail: usize, bytes: usize) -> f64 {
+        let band = self.nic_band(rail);
+        band.alpha + bytes as f64 * band.beta
+    }
+
     /// Uniformly scale all latencies (α) and bandwidths (1/β, R_N) — used to
     /// derive forward-looking machines (Section 6: "higher bandwidth
     /// interconnects") from the Lassen baseline.
@@ -266,6 +287,7 @@ impl MachineParams {
             }
         }
         out.inv_rn = self.inv_rn / bw_scale;
+        out.nic_bands = self.nic_bands.iter().map(|&b| s(b)).collect();
         out
     }
 
@@ -303,6 +325,7 @@ impl MachineParams {
             tables: [locs.map(cpu_table), locs.map(gpu_table)],
             memcpy: self.memcpy,
             inv_rn: self.inv_rn,
+            nic_bands: self.nic_bands.clone(),
         }
     }
 
@@ -352,6 +375,13 @@ impl MachineParams {
             p.short_max = sec.usize_or("short_max", p.short_max)?;
             p.eager_max = sec.usize_or("eager_max", p.eager_max)?;
             p.gpu_eager_max = sec.usize_or("gpu_eager_max", p.gpu_eager_max)?;
+            // optional explicit per-rail bands: `nic_rails` homogeneous
+            // rails with `nic_alpha` injection setup each
+            let rails = sec.usize_or("nic_rails", 0)?;
+            let nic_alpha = sec.f64_or("nic_alpha", 0.0)?;
+            if rails > 0 {
+                p.nic_bands = vec![AlphaBeta::new(nic_alpha, p.inv_rn); rails];
+            }
         }
         Ok(p)
     }
@@ -398,6 +428,8 @@ pub struct CompiledParams {
     memcpy: [[AlphaBeta; 2]; 2],
     /// Inverse NIC injection rate `1/R_N` [s/B].
     pub inv_rn: f64,
+    /// Per-rail injection bands (see [`MachineParams::nic_bands`]).
+    nic_bands: Vec<AlphaBeta>,
 }
 
 impl CompiledParams {
@@ -416,6 +448,14 @@ impl CompiledParams {
     #[inline]
     pub fn msg_time(&self, ep: Endpoint, l: Locality, s: usize) -> f64 {
         self.table(ep, l).time(s)
+    }
+
+    /// Occupancy one transfer places on a NIC rail — bit-identical to
+    /// [`MachineParams::nic_busy`].
+    #[inline]
+    pub fn nic_busy(&self, rail: usize, bytes: usize) -> f64 {
+        let band = self.nic_bands.get(rail).copied().unwrap_or(AlphaBeta::new(0.0, self.inv_rn));
+        band.alpha + bytes as f64 * band.beta
     }
 
     /// Host↔device copy time — bit-identical to
@@ -554,6 +594,45 @@ mod tests {
             }
         }
         assert_eq!(c.inv_rn, p.inv_rn);
+    }
+
+    #[test]
+    fn nic_bands_default_to_legacy_injection_bit_for_bit() {
+        let p = lassen_params();
+        let c = p.compile();
+        for bytes in [0usize, 1, 512, 8192, 1 << 20] {
+            let legacy = bytes as f64 * p.inv_rn;
+            for rail in 0..4 {
+                assert_eq!(p.nic_busy(rail, bytes).to_bits(), legacy.to_bits(), "rail {rail} {bytes}B");
+                assert_eq!(c.nic_busy(rail, bytes).to_bits(), legacy.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_nic_bands_override_and_scale() {
+        let mut p = lassen_params();
+        p.nic_bands = vec![AlphaBeta::new(1.0e-6, 2.0e-11), AlphaBeta::new(0.0, 4.0e-11)];
+        assert!((p.nic_busy(0, 1000) - (1.0e-6 + 2.0e-8)).abs() < 1e-18);
+        assert_eq!(p.nic_busy(1, 1000).to_bits(), (1000.0 * 4.0e-11f64).to_bits());
+        // rails beyond the table fall back to inv_rn
+        assert_eq!(p.nic_busy(7, 1000).to_bits(), (1000.0 * p.inv_rn).to_bits());
+        // compile carries the bands
+        let c = p.compile();
+        assert_eq!(c.nic_busy(0, 1000).to_bits(), p.nic_busy(0, 1000).to_bits());
+        // scaled() scales band alphas and rates like every other table
+        let q = p.scaled(0.5, 2.0);
+        assert!((q.nic_band(0).alpha - 0.5e-6).abs() < 1e-20);
+        assert!((q.nic_band(0).beta - 1.0e-11).abs() < 1e-22);
+    }
+
+    #[test]
+    fn config_reads_nic_bands() {
+        let cfg = crate::util::config::Config::parse("[network]\nnic_rails = 4\nnic_alpha = 2.0e-7\n").unwrap();
+        let p = MachineParams::from_config(&cfg).unwrap();
+        assert_eq!(p.nic_bands.len(), 4);
+        assert_eq!(p.nic_band(3).alpha, 2.0e-7);
+        assert_eq!(p.nic_band(3).beta, p.inv_rn);
     }
 
     #[test]

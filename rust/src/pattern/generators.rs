@@ -44,6 +44,7 @@ impl Scenario {
             m_n2n: per_pair,
             m_std: per_gpu,
             ppn,
+            nics: machine.nics_per_node(),
             dup_frac: self.dup_frac,
         }
     }

@@ -156,6 +156,7 @@ impl CommPattern {
             m_n2n: st.m_n2n,
             m_std: st.m_std,
             ppn,
+            nics: machine.nics_per_node(),
             dup_frac,
         }
     }

@@ -14,8 +14,10 @@
 //!
 //! - [`CompiledSchedule`] lowers a built [`Schedule`] against
 //!   (machine, [`CompiledParams`], ppn) into flat SoA arrays: dense `u32`
-//!   resource ids (process / GPU / NIC / copy engine), precomputed postal
-//!   durations and NIC occupancies, byte counts and phase offsets. The
+//!   resource ids (process / GPU / NIC rail / copy engine — the NIC block
+//!   holds one timeline per (node, rail) of the machine's
+//!   [`crate::topology::NodeShape`]), precomputed postal durations and
+//!   per-rail NIC occupancies, byte counts and phase offsets. The
 //!   executor ([`crate::sim::exec::run_compiled`]) then walks plain arrays —
 //!   no hash maps, no enum matching, no allocation. `lower_into` reuses the
 //!   arrays across calls so a worker thread compiles schedules all sweep
@@ -233,10 +235,13 @@ impl CompiledSchedule {
             }
         }
         let gpus = machine.total_gpus();
+        let rails = machine.nics_per_node();
         let proc_base = 0usize;
         let gpu_base = proc_base + max_proc;
         let nic_base = gpu_base + gpus;
-        let copy_base = nic_base + max_node;
+        // one occupancy timeline per (node, rail) — the shape sizes the NIC
+        // block; single-rail shapes collapse to the historical one-per-node
+        let copy_base = nic_base + max_node * rails;
         self.n_resources = (copy_base + max_copy_gpu) as u32;
         self.n_nodes = max_node as u32;
 
@@ -269,7 +274,12 @@ impl CompiledSchedule {
                 };
                 let (nic, node, nic_busy) = if loc == Locality::OffNode {
                     let sn = src_node_of(x.src);
-                    ((nic_base + sn) as u32, sn as u32, x.bytes as f64 * params.inv_rn)
+                    // rail assignment shares one home with the reference
+                    // executor ([`crate::sim::exec`]'s `rail`): GPU sources
+                    // follow the shape's affinity map, host sources
+                    // round-robin their socket's rails by node pair
+                    let r = crate::sim::exec::rail(machine, x.src, x.dst, ppn);
+                    ((nic_base + sn * rails + r) as u32, sn as u32, params.nic_busy(r, x.bytes))
                 } else {
                     (NO_NIC, 0, 0.0)
                 };

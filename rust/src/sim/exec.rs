@@ -145,6 +145,29 @@ pub fn run(machine: &Machine, params: &MachineParams, schedule: &Schedule, ppn: 
     scratch.run_report(machine, &compiled, schedule, ppn)
 }
 
+/// Node-local NIC rail an inter-node transfer injects through — the single
+/// home of the rail-assignment policy, called by both the reference
+/// executor and the schedule lowering ([`crate::sim::compiled`]):
+///
+/// - device-aware traffic (GPU source) follows the shape's GPU↔NIC
+///   affinity map ([`Machine::gpu_rail`]);
+/// - staged traffic (host source) round-robins the sending socket's rails
+///   by destination node pair ([`Machine::proc_rail`]).
+///
+/// A pure function of `(machine, src, dst, ppn)`: deterministic, invariant
+/// under message reordering, and identically 0 on single-rail shapes (the
+/// pre-shape-layer NIC).
+pub(crate) fn rail(machine: &Machine, src: Loc, dst: Loc, ppn: usize) -> usize {
+    let dst_node = match dst {
+        Loc::Gpu(g) => machine.gpu_node(g),
+        Loc::Host(p) => machine.proc_node(p, ppn),
+    };
+    match src {
+        Loc::Gpu(g) => machine.gpu_rail(g),
+        Loc::Host(p) => machine.proc_rail(p, ppn, dst_node),
+    }
+}
+
 /// Locality of two endpoints under `ppn` processes per node — the single
 /// home of the locality rule, called by both the reference executor and
 /// the schedule lowering ([`crate::sim::compiled`]).
@@ -199,10 +222,13 @@ fn loc_key(loc: Loc) -> u64 {
     }
 }
 
-/// The reference executor: hash-map availability, per-transfer locality and
-/// protocol resolution. Semantically (and bit-for-bit) equal to
-/// [`run`] / [`run_compiled`]; kept as the equivalence oracle and the
-/// `hetcomm perf` naive reference mode.
+/// The reference executor: hash-map availability, per-transfer locality,
+/// protocol and rail resolution. Semantically (and bit-for-bit) equal to
+/// [`run`] / [`run_compiled`] — the two executors evolve in lockstep (the
+/// shape layer taught both about NIC rails) and `rust/tests/prop_sim.rs` /
+/// `prop_topology.rs` hold them together. On single-rail shapes the NIC
+/// keys and occupancies reduce to the historical one-NIC-per-node values
+/// exactly.
 pub fn run_reference(machine: &Machine, params: &MachineParams, schedule: &Schedule, ppn: usize) -> SimReport {
     let mut avail = Avail::default();
     let mut phase_times = Vec::with_capacity(schedule.phases.len());
@@ -255,14 +281,17 @@ fn run_phase(
         let dk = loc_key(x.dst);
         let mut ready = start.max(avail.get(sk)).max(avail.get(dk));
         if loc == Locality::OffNode {
-            // NIC injection: the source node's NIC serializes at R_N.
+            // NIC injection: the assigned rail of the source node's shape
+            // serializes at its band rate (single-rail shapes: rail 0 at
+            // R_N — the historical per-node NIC key and occupancy exactly).
             let node = match x.src {
                 Loc::Gpu(g) => machine.gpu_node(g).0,
                 Loc::Host(p) => machine.proc_node(p, ppn).0,
             };
-            let nk = KIND_NIC | node as u64;
+            let r = rail(machine, x.src, x.dst, ppn);
+            let nk = KIND_NIC | (node * machine.nics_per_node() + r) as u64;
             ready = ready.max(avail.get(nk));
-            let nic_busy = x.bytes as f64 * params.inv_rn;
+            let nic_busy = params.nic_busy(r, x.bytes);
             avail.set(nk, ready + nic_busy);
             *injected.entry(node).or_default() += x.bytes;
             *internode_msgs += 1;

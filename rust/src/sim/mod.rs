@@ -6,9 +6,13 @@
 //!
 //! - every endpoint (host process or GPU) is a serial resource — its
 //!   transfers and copies queue;
-//! - every node's NIC is a rate-limited resource — inter-node transfers
-//!   occupy it for `bytes / R_N`, which reproduces the max-rate injection
-//!   limit of Eq. (2.2) *emergently* when many processes inject at once;
+//! - every NIC *rail* of the node shape
+//!   ([`crate::topology::NodeShape`]) is a rate-limited resource —
+//!   inter-node transfers occupy their assigned rail for its band time
+//!   (`bytes / R_N` on the default homogeneous bands), which reproduces
+//!   the max-rate injection limit of Eq. (2.2) — generalized to
+//!   `nic_count · R_N` on multi-rail nodes — *emergently* when many
+//!   processes inject at once;
 //! - each transfer's duration is the postal time (Eq. 2.1) with the
 //!   (α, β) row selected by endpoint kind, locality and per-message
 //!   protocol, exactly as in Section 3;

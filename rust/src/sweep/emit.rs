@@ -44,26 +44,39 @@ pub(crate) fn esc(s: &str) -> String {
     out
 }
 
+/// True when the sweep left the legacy single-rail shape: the emitters
+/// then carry the NIC axis through every row. Default `[1]` grids emit the
+/// historical `hetcomm.sweep.v1` bytes unchanged (the golden-diff gate).
+fn shaped(result: &SweepResult) -> bool {
+    result.config.grid.nics != [1]
+}
+
 /// Serialize the full sweep result (config echo, cells, report) as JSON.
 /// Wall-clock fields are deliberately excluded: two runs with the same
 /// seed must produce byte-identical output.
 pub fn to_json(result: &SweepResult) -> String {
     let cfg = &result.config;
+    let shaped = shaped(result);
     let mut out = String::new();
     out.push_str("{\n");
     let _ = writeln!(out, "  \"schema\": \"hetcomm.sweep.v1\",");
     let _ = writeln!(out, "  \"machine\": \"{}\",", esc(&cfg.machine));
     let _ = writeln!(out, "  \"seed\": {},", cfg.seed);
     let _ = writeln!(out, "  \"n_msgs\": {},", cfg.grid.n_msgs);
+    if shaped {
+        let rails: Vec<String> = cfg.grid.nics.iter().map(|n| n.to_string()).collect();
+        let _ = writeln!(out, "  \"nics\": [{}],", rails.join(", "));
+    }
     let _ = writeln!(out, "  \"dup_frac\": {},", num(cfg.grid.dup_frac));
     let _ = writeln!(out, "  \"sim\": {},", cfg.sim);
 
     out.push_str("  \"cells\": [\n");
     for (i, c) in result.cells.iter().enumerate() {
         let comma = if i + 1 < result.cells.len() { "," } else { "" };
+        let rails = if shaped { format!("\"nics\": {}, ", c.nics) } else { String::new() };
         let _ = writeln!(
             out,
-            "    {{\"gen\": \"{}\", \"dest_nodes\": {}, \"gpus_per_node\": {}, \"size\": {}, \
+            "    {{\"gen\": \"{}\", \"dest_nodes\": {}, \"gpus_per_node\": {}, {rails}\"size\": {}, \
              \"strategy\": \"{}\", \"model_s\": {}, \"sim_s\": {}, \"model_err\": {}}}{comma}",
             c.gen.label(),
             c.dest_nodes,
@@ -84,9 +97,10 @@ pub fn to_json(result: &SweepResult) -> String {
             Some(s) => format!("\"{}\"", esc(s)),
             None => "null".to_string(),
         };
+        let rails = if shaped { format!("\"nics\": {}, ", w.nics) } else { String::new() };
         let _ = writeln!(
             out,
-            "    {{\"gen\": \"{}\", \"dest_nodes\": {}, \"gpus_per_node\": {}, \"size\": {}, \
+            "    {{\"gen\": \"{}\", \"dest_nodes\": {}, \"gpus_per_node\": {}, {rails}\"size\": {}, \
              \"winner\": \"{}\", \"staged\": {}, \"model_s\": {}, \"sim_winner\": {}}}{comma}",
             w.gen.label(),
             w.dest_nodes,
@@ -103,9 +117,10 @@ pub fn to_json(result: &SweepResult) -> String {
     out.push_str("  \"crossovers\": [\n");
     for (i, x) in result.report.crossovers.iter().enumerate() {
         let comma = if i + 1 < result.report.crossovers.len() { "," } else { "" };
+        let rails = if shaped { format!("\"nics\": {}, ", x.nics) } else { String::new() };
         let _ = writeln!(
             out,
-            "    {{\"gen\": \"{}\", \"dest_nodes\": {}, \"gpus_per_node\": {}, \
+            "    {{\"gen\": \"{}\", \"dest_nodes\": {}, \"gpus_per_node\": {}, {rails}\
              \"size_before\": {}, \"size_after\": {}, \"from\": \"{}\", \"to\": \"{}\"}}{comma}",
             x.gen.label(),
             x.dest_nodes,
@@ -121,9 +136,10 @@ pub fn to_json(result: &SweepResult) -> String {
     out.push_str("  \"regimes\": [\n");
     for (i, g) in result.report.regimes.iter().enumerate() {
         let comma = if i + 1 < result.report.regimes.len() { "," } else { "" };
+        let rails = if shaped { format!("\"nics\": {}, ", g.nics) } else { String::new() };
         let _ = writeln!(
             out,
-            "    {{\"gen\": \"{}\", \"dest_nodes\": {}, \"gpus_per_node\": {}, \"band\": \"{}\", \
+            "    {{\"gen\": \"{}\", \"dest_nodes\": {}, \"gpus_per_node\": {}, {rails}\"band\": \"{}\", \
              \"winner\": \"{}\", \"staged\": {}, \"total_model_s\": {}}}{comma}",
             g.gen.label(),
             g.dest_nodes,
@@ -148,13 +164,20 @@ pub fn to_json(result: &SweepResult) -> String {
     out
 }
 
-/// One CSV row per (cell × strategy).
+/// One CSV row per (cell × strategy). Shaped sweeps (a non-default NIC
+/// axis) gain a `nics` column; default grids keep the historical header.
 pub fn to_csv(result: &SweepResult) -> String {
-    let mut out = String::from("gen,dest_nodes,gpus_per_node,size,strategy,model_s,sim_s,model_err\n");
+    let shaped = shaped(result);
+    let mut out = if shaped {
+        String::from("gen,dest_nodes,gpus_per_node,nics,size,strategy,model_s,sim_s,model_err\n")
+    } else {
+        String::from("gen,dest_nodes,gpus_per_node,size,strategy,model_s,sim_s,model_err\n")
+    };
     for c in &result.cells {
+        let rails = if shaped { format!("{},", c.nics) } else { String::new() };
         let _ = writeln!(
             out,
-            "{},{},{},{},\"{}\",{},{},{}",
+            "{},{},{},{rails}{},\"{}\",{},{},{}",
             c.gen.label(),
             c.dest_nodes,
             c.gpus_per_node,
@@ -175,6 +198,7 @@ pub fn render_tables(result: &SweepResult) -> String {
     let mut out = String::new();
     let strategies = &result.config.strategies;
     let cells = &result.cells;
+    let shaped = shaped(result);
 
     let mut i = 0;
     while i < cells.len() {
@@ -184,6 +208,7 @@ pub fn render_tables(result: &SweepResult) -> String {
             && cells[j].gen == cells[i].gen
             && cells[j].dest_nodes == cells[i].dest_nodes
             && cells[j].gpus_per_node == cells[i].gpus_per_node
+            && cells[j].nics == cells[i].nics
         {
             j += 1;
         }
@@ -192,9 +217,10 @@ pub fn render_tables(result: &SweepResult) -> String {
         header.extend(strategies.iter().map(|s| s.label().to_string()));
         header.push("model winner".into());
         let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let rails = if shaped { format!(" · {} NICs/node", line[0].nics) } else { String::new() };
         let mut t = Table::new(
             format!(
-                "{} · {} msgs -> {} nodes · {} GPUs/node · dup {:.0}%",
+                "{} · {} msgs -> {} nodes · {} GPUs/node{rails} · dup {:.0}%",
                 line[0].gen,
                 result.config.grid.n_msgs,
                 line[0].dest_nodes,
@@ -225,6 +251,7 @@ pub fn render_tables(result: &SweepResult) -> String {
                     w.gen == group[0].gen
                         && w.dest_nodes == group[0].dest_nodes
                         && w.gpus_per_node == group[0].gpus_per_node
+                        && w.nics == group[0].nics
                         && w.size == group[0].size
                 })
                 .map(|w| w.winner.to_string())
@@ -242,18 +269,20 @@ pub fn render_tables(result: &SweepResult) -> String {
         out.push_str("  (none within the swept sizes)\n");
     }
     for x in &result.report.crossovers {
+        let rails = if shaped { format!(" · {} NICs", x.nics) } else { String::new() };
         let _ = writeln!(
             out,
-            "  {} · {} nodes · {} GPUs/node: {} -> {} between {} B and {} B",
+            "  {} · {} nodes · {} GPUs/node{rails}: {} -> {} between {} B and {} B",
             x.gen, x.dest_nodes, x.gpus_per_node, x.from, x.to, x.size_before, x.size_after
         );
     }
 
     out.push_str("\nRegime winners (min total modeled time per band):\n");
     for g in &result.report.regimes {
+        let rails = if shaped { format!(" · {} NICs", g.nics) } else { String::new() };
         let _ = writeln!(
             out,
-            "  {} · {} nodes · {} GPUs/node · {:>5}: {} ({})",
+            "  {} · {} nodes · {} GPUs/node{rails} · {:>5}: {} ({})",
             g.gen,
             g.dest_nodes,
             g.gpus_per_node,
@@ -286,6 +315,7 @@ mod tests {
                 gens: vec![PatternGen::Uniform],
                 dest_nodes: vec![4],
                 gpus_per_node: vec![4],
+                nics: vec![1],
                 sizes: vec![1 << 10, 1 << 18],
                 n_msgs: 32,
                 dup_frac: 0.0,
@@ -344,5 +374,45 @@ mod tests {
     fn escaping() {
         assert_eq!(esc("a\"b\\c"), "a\\\"b\\\\c");
         assert_eq!(esc("x\ny"), "x\\ny");
+    }
+
+    #[test]
+    fn default_shape_emits_no_nics_fields() {
+        // the golden byte contract: legacy single-rail sweeps serialize
+        // exactly as before the shape layer existed
+        let r = tiny_result();
+        assert!(!to_json(&r).contains("nics"), "default grids must not leak the NIC axis");
+        assert!(to_csv(&r).starts_with("gen,dest_nodes,gpus_per_node,size,"));
+        assert!(!render_tables(&r).contains("NICs"));
+    }
+
+    #[test]
+    fn shaped_sweeps_carry_the_nic_axis_everywhere() {
+        let mut cfg = SweepConfig {
+            grid: GridSpec {
+                gens: vec![PatternGen::Uniform],
+                dest_nodes: vec![4],
+                gpus_per_node: vec![4],
+                nics: vec![1, 4],
+                sizes: vec![1 << 10, 1 << 18],
+                n_msgs: 32,
+                dup_frac: 0.0,
+            },
+            seed: 3,
+            threads: 1,
+            sim: false,
+            ..Default::default()
+        };
+        cfg.grid.n_msgs = 64;
+        let r = run_sweep(&cfg).unwrap();
+        let j = to_json(&r);
+        assert!(j.contains("\"nics\": [1, 4]"), "{j}");
+        assert!(j.contains("\"nics\": 1,") && j.contains("\"nics\": 4,"));
+        let csv = to_csv(&r);
+        assert!(csv.starts_with("gen,dest_nodes,gpus_per_node,nics,size,"));
+        assert!(render_tables(&r).contains("NICs/node"));
+        // still well-formed and deterministic
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j, to_json(&run_sweep(&cfg).unwrap()));
     }
 }

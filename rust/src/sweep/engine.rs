@@ -86,6 +86,8 @@ pub struct CellResult {
     pub gen: PatternGen,
     pub dest_nodes: usize,
     pub gpus_per_node: usize,
+    /// NIC rails per node at this grid point (1 on legacy shapes).
+    pub nics: usize,
     pub size: usize,
     pub strategy: Strategy,
     /// `strategy.label()`, precomputed for emitters.
@@ -123,8 +125,22 @@ pub fn run_sweep_mode(config: &SweepConfig, mode: ExecMode) -> Result<SweepResul
     if config.strategies.is_empty() {
         return Err("no strategies selected".into());
     }
-    let (arch, params) = machines::parse(&config.machine, 1)
-        .ok_or_else(|| format!("unknown machine preset {:?}", config.machine))?;
+    let (arch, params) = machines::parse(&config.machine, 1)?;
+    // Shape-pinned presets (frontier-4nic) carry their own NIC count: the
+    // untouched default axis resolves to it, anything else conflicts.
+    let mut config = config.clone();
+    if machines::shape_pinned(&config.machine) {
+        let pinned = arch.nics_per_node();
+        if config.grid.nics == [1] {
+            config.grid.nics = vec![pinned];
+        } else if config.grid.nics != [pinned] {
+            return Err(format!(
+                "--nics conflicts with machine {:?}, whose shape pins {pinned} NICs/node",
+                config.machine
+            ));
+        }
+    }
+    let config = &config;
     let compiled_params = params.compile();
     let cells = config.grid.cells();
     let t0 = Instant::now();
@@ -180,6 +196,7 @@ pub fn run_sweep_trace_mode(
         .params()
         .ok_or_else(|| format!("trace machine {:?} resolves to no registry parameters", trace.machine.name))?;
     let compiled_params = params.compile();
+    let trace_nics = trace.machine.nics_per_node();
     let machine = &trace.machine;
     let t0 = Instant::now();
     let threads = effective_threads(threads, trace.epochs.len());
@@ -206,6 +223,7 @@ pub fn run_sweep_trace_mode(
             gens: vec![PatternGen::Trace],
             dest_nodes,
             gpus_per_node: vec![machine.gpus_per_node()],
+            nics: vec![trace_nics],
             sizes,
             n_msgs: epoch_stats.iter().map(|s| s.total_internode_msgs).max().unwrap_or(0),
             dup_frac: 0.0,
@@ -276,6 +294,7 @@ fn eval_epoch(
         m_n2n: stats.m_n2n,
         m_std: stats.m_std,
         ppn: machine.cores_per_node(),
+        nics: machine.nics_per_node(),
         dup_frac: dup,
     };
     let size = if stats.m_n2n > 0 { (stats.s_n2n / stats.m_n2n).max(1) } else { 1 };
@@ -294,6 +313,7 @@ fn eval_epoch(
             gen: PatternGen::Trace,
             dest_nodes,
             gpus_per_node: machine.gpus_per_node(),
+            nics: machine.nics_per_node(),
             size,
             strategy,
             label: strategy.label(),
@@ -318,7 +338,7 @@ pub(crate) fn eval_cell(
     mode: ExecMode,
     scratch: &mut sim::Scratch,
 ) -> Vec<CellResult> {
-    let machine = cfg.grid.machine_for_arch(arch, cell.dest_nodes, cell.gpus_per_node);
+    let machine = cfg.grid.machine_for_arch(arch, cell.dest_nodes, cell.gpus_per_node, cell.nics);
     let sm = StrategyModel::new(&machine, params);
     // Model inputs use the full core count: only the Split models read
     // `ppn`, and Split enlists every core (matching `hetcomm model`).
@@ -371,6 +391,7 @@ pub(crate) fn eval_cell(
             gen: cell.gen,
             dest_nodes: cell.dest_nodes,
             gpus_per_node: cell.gpus_per_node,
+            nics: cell.nics,
             size: cell.size,
             strategy,
             label: strategy.label(),
@@ -393,6 +414,7 @@ mod tests {
                 gens: vec![PatternGen::Uniform, PatternGen::Random],
                 dest_nodes: vec![4],
                 gpus_per_node: vec![4],
+                nics: vec![1],
                 sizes: vec![256, 4096],
                 n_msgs: 32,
                 dup_frac: 0.0,
@@ -512,6 +534,46 @@ mod tests {
         for (a, b) in frontier.cells.iter().zip(&alias.cells) {
             assert_eq!(a.model_s.to_bits(), b.model_s.to_bits());
         }
+    }
+
+    #[test]
+    fn nics_axis_reaches_models_and_sim() {
+        // 4 rails must speed up injection-limited staged cells in both the
+        // model and the simulator, and never slow anything down.
+        let mut cfg = small_config(2);
+        cfg.grid.sizes = vec![1 << 14];
+        cfg.grid.gens = vec![PatternGen::Uniform];
+        cfg.grid.n_msgs = 256;
+        let one = run_sweep(&cfg).unwrap();
+        cfg.grid.nics = vec![4];
+        let four = run_sweep(&cfg).unwrap();
+        assert_eq!(one.cells.len(), four.cells.len());
+        assert!(four.cells.iter().all(|c| c.nics == 4));
+        let mut model_moved = false;
+        for (a, b) in one.cells.iter().zip(&four.cells) {
+            assert!(b.model_s <= a.model_s * (1.0 + 1e-12), "{} model slowed down", a.label);
+            model_moved |= b.model_s < a.model_s;
+        }
+        assert!(model_moved, "4 rails must relieve at least one staged model cell");
+        let sim_moved = one
+            .cells
+            .iter()
+            .zip(&four.cells)
+            .any(|(a, b)| a.sim_s.zip(b.sim_s).is_some_and(|(x, y)| y < x));
+        assert!(sim_moved, "4 rails must relieve at least one simulated cell");
+    }
+
+    #[test]
+    fn pinned_machine_resolves_and_rejects_conflicts() {
+        let mut cfg = small_config(1);
+        cfg.sim = false;
+        cfg.machine = "frontier-4nic".into();
+        let r = run_sweep(&cfg).unwrap();
+        assert_eq!(r.config.grid.nics, vec![4], "pinned preset must resolve the default axis");
+        assert!(r.cells.iter().all(|c| c.nics == 4));
+        cfg.grid.nics = vec![1, 4];
+        let err = run_sweep(&cfg).unwrap_err();
+        assert!(err.contains("pins"), "{err}");
     }
 
     #[test]

@@ -62,6 +62,11 @@ pub struct GridSpec {
     pub dest_nodes: Vec<usize>,
     /// GPUs per node (even: the Lassen-like node keeps 2 sockets).
     pub gpus_per_node: Vec<usize>,
+    /// NIC rails per node (the §6 shape axis). The default `[1]` is the
+    /// legacy single-rail node and leaves every output byte-identical to
+    /// the pre-shape-layer sweep; machines whose preset pins the NIC count
+    /// ([`machines::shape_pinned`]) reject any other value.
+    pub nics: Vec<usize>,
     /// Message sizes in bytes (uniform: exact size; random: max size).
     pub sizes: Vec<usize>,
     /// Inter-node messages per scenario.
@@ -77,6 +82,7 @@ impl Default for GridSpec {
             gens: vec![PatternGen::Uniform, PatternGen::Random],
             dest_nodes: vec![4, 8, 16],
             gpus_per_node: vec![4],
+            nics: vec![1],
             sizes: (4..=20).step_by(2).map(|e| 1usize << e).collect(),
             n_msgs: 256,
             dup_frac: 0.0,
@@ -94,6 +100,8 @@ pub struct CellSpec {
     pub gen: PatternGen,
     pub dest_nodes: usize,
     pub gpus_per_node: usize,
+    /// NIC rails per node at this grid point.
+    pub nics: usize,
     pub size: usize,
 }
 
@@ -106,6 +114,7 @@ impl GridSpec {
             gens: vec![PatternGen::Uniform],
             dest_nodes: vec![4],
             gpus_per_node: vec![4],
+            nics: vec![1],
             sizes: vec![1 << 10, 1 << 14, 1 << 18],
             n_msgs: 64,
             dup_frac: 0.0,
@@ -126,6 +135,9 @@ impl GridSpec {
         if self.gpus_per_node.is_empty() || self.gpus_per_node.iter().any(|&g| g < 2 || g % 2 != 0) {
             return Err("GPUs-per-node values must be even and >= 2 (2-socket nodes)".into());
         }
+        if self.nics.is_empty() || self.nics.iter().any(|&n| n == 0) {
+            return Err("NIC-rail counts must be non-empty and positive".into());
+        }
         if self.sizes.is_empty() || self.sizes.iter().any(|&s| s == 0) {
             return Err("message sizes must be non-empty and positive".into());
         }
@@ -145,12 +157,23 @@ impl GridSpec {
         let mut sizes = self.sizes.clone();
         sizes.sort_unstable();
         sizes.dedup();
-        let mut out = Vec::with_capacity(self.gens.len() * self.dest_nodes.len() * self.gpus_per_node.len() * sizes.len());
+        let mut out = Vec::with_capacity(
+            self.gens.len() * self.dest_nodes.len() * self.gpus_per_node.len() * self.nics.len() * sizes.len(),
+        );
         for &gen in &self.gens {
             for &dest in &self.dest_nodes {
                 for &gpn in &self.gpus_per_node {
-                    for &size in &sizes {
-                        out.push(CellSpec { index: out.len(), gen, dest_nodes: dest, gpus_per_node: gpn, size });
+                    for &nics in &self.nics {
+                        for &size in &sizes {
+                            out.push(CellSpec {
+                                index: out.len(),
+                                gen,
+                                dest_nodes: dest,
+                                gpus_per_node: gpn,
+                                nics,
+                                size,
+                            });
+                        }
                     }
                 }
             }
@@ -158,19 +181,26 @@ impl GridSpec {
         out
     }
 
-    /// The Lassen-like machine for one (dest, gpn) grid point: 2 sockets,
-    /// 20 cores per socket, `gpn / 2` GPUs per socket, and one node more
-    /// than the destination count so the uniform scenario has a sender.
-    pub fn machine_for(&self, dest_nodes: usize, gpus_per_node: usize) -> Machine {
-        self.machine_for_arch(&machines::lassen(1), dest_nodes, gpus_per_node)
+    /// The Lassen-like machine for one (dest, gpn, nics) grid point: 2
+    /// sockets, 20 cores per socket, `gpn / 2` GPUs per socket, `nics` NIC
+    /// rails spread over the sockets, and one node more than the
+    /// destination count so the uniform scenario has a sender.
+    pub fn machine_for(&self, dest_nodes: usize, gpus_per_node: usize, nics: usize) -> Machine {
+        self.machine_for_arch(&machines::lassen(1), dest_nodes, gpus_per_node, nics)
     }
 
     /// Like [`GridSpec::machine_for`], but on an arbitrary preset node
-    /// architecture (sockets and cores from `arch`, GPUs from the grid
-    /// axis) — the hook behind the `sweep --machine` flag.
-    pub fn machine_for_arch(&self, arch: &Machine, dest_nodes: usize, gpus_per_node: usize) -> Machine {
-        let mut machine = machines::with_shape(arch, dest_nodes + 1, gpus_per_node);
-        machine.name = format!("{}-g{gpus_per_node}", arch.name);
+    /// architecture (sockets and cores from `arch`, GPUs and NIC rails from
+    /// the grid axes) — the hook behind the `sweep --machine` / `--nics`
+    /// flags. Single-rail points keep the historical `{name}-g{gpn}` label;
+    /// multi-rail points append `-n{nics}`.
+    pub fn machine_for_arch(&self, arch: &Machine, dest_nodes: usize, gpus_per_node: usize, nics: usize) -> Machine {
+        let mut machine = machines::with_shape_nics(arch, dest_nodes + 1, gpus_per_node, nics);
+        machine.name = if nics == 1 {
+            format!("{}-g{gpus_per_node}", arch.name)
+        } else {
+            format!("{}-g{gpus_per_node}-n{nics}", arch.name)
+        };
         machine
     }
 }
@@ -192,6 +222,7 @@ mod tests {
             gens: vec![PatternGen::Uniform, PatternGen::Random],
             dest_nodes: vec![4, 16],
             gpus_per_node: vec![4],
+            nics: vec![1],
             sizes: vec![1024, 64], // unsorted on purpose
             n_msgs: 32,
             dup_frac: 0.0,
@@ -212,23 +243,31 @@ mod tests {
     #[test]
     fn machine_shape_follows_axes() {
         let g = GridSpec::default();
-        let m = g.machine_for(16, 4);
+        let m = g.machine_for(16, 4, 1);
         assert_eq!(m.num_nodes, 17);
         assert_eq!(m.gpus_per_node(), 4);
         assert_eq!(m.cores_per_node(), 40);
         assert_eq!(m.name, "lassen-g4");
-        let m8 = g.machine_for(4, 8);
+        assert!(m.shape.is_single_rail());
+        let m8 = g.machine_for(4, 8, 1);
         assert_eq!(m8.gpus_per_node(), 8);
+        // the nics axis reaches the shape and the label
+        let m2 = g.machine_for(4, 4, 2);
+        assert_eq!(m2.nics_per_node(), 2);
+        assert_eq!(m2.name, "lassen-g4-n2");
+        m2.shape.validate(2, 4).unwrap();
     }
 
     #[test]
     fn machine_for_arch_keeps_preset_sockets() {
         let g = GridSpec::default();
-        let f = g.machine_for_arch(&machines::frontier_like(1), 16, 4);
+        let f = g.machine_for_arch(&machines::frontier_like(1), 16, 4, 1);
         assert_eq!((f.num_nodes, f.sockets_per_node, f.cores_per_node(), f.gpus_per_node()), (17, 1, 64, 4));
         assert_eq!(f.name, "frontier-like-g4");
-        let d = g.machine_for_arch(&machines::delta_like(1), 4, 8);
+        let d = g.machine_for_arch(&machines::delta_like(1), 4, 8, 1);
         assert_eq!((d.sockets_per_node, d.cores_per_node(), d.gpus_per_node()), (2, 128, 8));
+        let f4 = g.machine_for_arch(&machines::frontier_4nic(1), 4, 4, 4);
+        assert_eq!((f4.nics_per_node(), f4.name.as_str()), (4, "frontier-4nic-g4-n4"));
     }
 
     #[test]
@@ -242,6 +281,27 @@ mod tests {
         let mut g = GridSpec::default();
         g.dup_frac = 1.0;
         assert!(g.validate().is_err());
+        let mut g = GridSpec::default();
+        g.nics = vec![];
+        assert!(g.validate().is_err());
+        let mut g = GridSpec::default();
+        g.nics = vec![0];
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn nics_axis_multiplies_cells() {
+        let mut g = GridSpec::tiny();
+        assert_eq!(g.cells().len(), 3);
+        g.nics = vec![1, 4];
+        let cells = g.cells();
+        assert_eq!(cells.len(), 6);
+        // nics-major over sizes, indexes contiguous
+        assert!(cells[..3].iter().all(|c| c.nics == 1));
+        assert!(cells[3..].iter().all(|c| c.nics == 4));
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+        }
     }
 
     #[test]

@@ -2,10 +2,11 @@
 //! turns the crate's layers into the paper's headline result.
 //!
 //! A sweep evaluates the full grid of (strategy × pattern generator ×
-//! destination-node count × GPUs-per-node × message size) through both the
-//! closed-form Table 6 models ([`crate::model::StrategyModel`]) and the
-//! discrete-event simulator ([`crate::sim`]), fanning cells out over an
-//! in-tree `std::thread` worker pool:
+//! destination-node count × GPUs-per-node × NIC-rails-per-node × message
+//! size) through both the closed-form Table 6 models
+//! ([`crate::model::StrategyModel`]) and the discrete-event simulator
+//! ([`crate::sim`]), fanning cells out over an in-tree `std::thread`
+//! worker pool:
 //!
 //! - [`grid`] — the axes and their flattening into deterministic cells;
 //! - [`engine`] — the worker pool, per-cell seeding, model + sim evaluation;

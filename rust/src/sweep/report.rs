@@ -20,6 +20,8 @@ pub struct CellWinner {
     pub gen: PatternGen,
     pub dest_nodes: usize,
     pub gpus_per_node: usize,
+    /// NIC rails per node of the cell's shape.
+    pub nics: usize,
     pub size: usize,
     /// Label of the model-fastest strategy.
     pub winner: &'static str,
@@ -36,6 +38,8 @@ pub struct Crossover {
     pub gen: PatternGen,
     pub dest_nodes: usize,
     pub gpus_per_node: usize,
+    /// NIC rails per node of the regime line.
+    pub nics: usize,
     /// Largest size still won by `from`.
     pub size_before: usize,
     /// Smallest size won by `to`.
@@ -51,6 +55,8 @@ pub struct RegimeWinner {
     pub gen: PatternGen,
     pub dest_nodes: usize,
     pub gpus_per_node: usize,
+    /// NIC rails per node of the regime line.
+    pub nics: usize,
     /// `"small"` (size <= [`SMALL_BAND_MAX`]) or `"large"`.
     pub band: &'static str,
     pub winner: &'static str,
@@ -77,7 +83,7 @@ pub struct SweepReport {
 }
 
 fn same_line(a: &CellResult, b: &CellResult) -> bool {
-    a.gen == b.gen && a.dest_nodes == b.dest_nodes && a.gpus_per_node == b.gpus_per_node
+    a.gen == b.gen && a.dest_nodes == b.dest_nodes && a.gpus_per_node == b.gpus_per_node && a.nics == b.nics
 }
 
 /// Analyze sweep cells (in engine output order: grid-cell major, strategies
@@ -106,6 +112,7 @@ pub fn analyze(cells: &[CellResult]) -> SweepReport {
             gen: best.gen,
             dest_nodes: best.dest_nodes,
             gpus_per_node: best.gpus_per_node,
+            nics: best.nics,
             size: best.size,
             winner: best.label,
             winner_kind: best.strategy.kind,
@@ -130,6 +137,7 @@ pub fn analyze(cells: &[CellResult]) -> SweepReport {
                     gen: w[0].gen,
                     dest_nodes: w[0].dest_nodes,
                     gpus_per_node: w[0].gpus_per_node,
+                    nics: w[0].nics,
                     size_before: w[0].size,
                     size_after: w[1].size,
                     from: w[0].winner,
@@ -168,6 +176,7 @@ pub fn analyze(cells: &[CellResult]) -> SweepReport {
                 gen: line[0].gen,
                 dest_nodes: line[0].dest_nodes,
                 gpus_per_node: line[0].gpus_per_node,
+                nics: line[0].nics,
                 band,
                 winner,
                 winner_kind: kind,
@@ -192,7 +201,7 @@ pub fn analyze(cells: &[CellResult]) -> SweepReport {
 }
 
 fn winners_same_line(a: &CellWinner, b: &CellWinner) -> bool {
-    a.gen == b.gen && a.dest_nodes == b.dest_nodes && a.gpus_per_node == b.gpus_per_node
+    a.gen == b.gen && a.dest_nodes == b.dest_nodes && a.gpus_per_node == b.gpus_per_node && a.nics == b.nics
 }
 
 #[cfg(test)]
@@ -213,6 +222,7 @@ mod tests {
                     gen: PatternGen::Uniform,
                     dest_nodes: 16,
                     gpus_per_node: 4,
+                    nics: 1,
                     size,
                     strategy: s,
                     label: s.label(),

@@ -1,10 +1,17 @@
 //! Canonical machine descriptions (Section 2.1 and the Section 6 outlook).
+//!
+//! Every preset carries a [`NodeShape`]: the measured machines and the
+//! legacy forward-looking presets expose the single-rail node the paper's
+//! models assume, while [`frontier_4nic`] describes the Frontier-like node
+//! as a resource graph — four Slingshot rails, one per GPU package — whose
+//! NIC count is *pinned* (it cannot be overridden by `--nics`).
 
-use super::Machine;
+use super::{Machine, NodeShape};
 use crate::params::{lassen_params, MachineParams};
 
 /// Lassen (LLNL): 2 sockets/node, IBM Power9 (20 cores) + 2 V100s per
-/// socket, EDR InfiniBand. The paper's measurement testbed.
+/// socket, EDR InfiniBand (one HCA per node — the single-rail shape). The
+/// paper's measurement testbed.
 pub fn lassen(num_nodes: usize) -> Machine {
     Machine {
         name: "lassen".into(),
@@ -12,6 +19,7 @@ pub fn lassen(num_nodes: usize) -> Machine {
         sockets_per_node: 2,
         cores_per_socket: 20,
         gpus_per_socket: 2,
+        shape: NodeShape::single_rail(2, 4),
     }
 }
 
@@ -25,11 +33,15 @@ pub fn summit(num_nodes: usize) -> Machine {
         sockets_per_node: 2,
         cores_per_socket: 20,
         gpus_per_socket: 3,
+        shape: NodeShape::single_rail(2, 6),
     }
 }
 
 /// Frontier-like exascale node (Section 6): single socket, 64-core AMD EPYC,
 /// 4 MI250X GPUs (8 GCDs; we model the 4 physical packages), Slingshot.
+/// This legacy preset keeps the aggregate-bandwidth view: a single rail
+/// whose parameters are scaled 4× ([`parse`]); [`frontier_4nic`] is the
+/// resource-graph view of the same node.
 pub fn frontier_like(num_nodes: usize) -> Machine {
     Machine {
         name: "frontier-like".into(),
@@ -37,6 +49,24 @@ pub fn frontier_like(num_nodes: usize) -> Machine {
         sockets_per_node: 1,
         cores_per_socket: 64,
         gpus_per_socket: 4,
+        shape: NodeShape::single_rail(1, 4),
+    }
+}
+
+/// Frontier-like node as a resource graph: the same socket/core/GPU layout
+/// as [`frontier_like`], but with its 4 Slingshot NICs modeled as explicit
+/// rails, one affine to each GPU package. Each rail injects at the Lassen
+/// `R_N` (EDR ≈ Slingshot-per-NIC), so the node's aggregate injection
+/// bandwidth is 4× — reached only when traffic actually spreads over the
+/// rails. The NIC count is pinned ([`shape_pinned`]).
+pub fn frontier_4nic(num_nodes: usize) -> Machine {
+    Machine {
+        name: "frontier-4nic".into(),
+        num_nodes,
+        sockets_per_node: 1,
+        cores_per_socket: 64,
+        gpus_per_socket: 4,
+        shape: NodeShape::spread(1, 4, 4),
     }
 }
 
@@ -48,6 +78,7 @@ pub fn delta_like(num_nodes: usize) -> Machine {
         sockets_per_node: 2,
         cores_per_socket: 64,
         gpus_per_socket: 2,
+        shape: NodeShape::single_rail(2, 4),
     }
 }
 
@@ -57,40 +88,62 @@ pub fn by_name(name: &str, num_nodes: usize) -> Option<Machine> {
         "lassen" => Some(lassen(num_nodes)),
         "summit" => Some(summit(num_nodes)),
         "frontier" | "frontier-like" => Some(frontier_like(num_nodes)),
+        "frontier-4nic" | "frontier4nic" => Some(frontier_4nic(num_nodes)),
         "delta" | "delta-like" => Some(delta_like(num_nodes)),
         _ => None,
     }
 }
 
 /// Canonical registry names accepted by [`parse`] (CLI help text).
-pub const NAMES: [&str; 4] = ["lassen", "summit", "frontier-like", "delta-like"];
+pub const NAMES: [&str; 5] = ["lassen", "summit", "frontier-like", "frontier-4nic", "delta-like"];
+
+/// Whether a preset's shape pins its NIC count: `--nics` overrides are
+/// rejected for such machines (the shape *is* the machine description).
+pub fn shape_pinned(name: &str) -> bool {
+    matches!(name.trim().to_ascii_lowercase().as_str(), "frontier-4nic" | "frontier4nic")
+}
 
 /// The single registry helper behind every `--machine` CLI flag: resolve a
 /// preset name (case-insensitive, aliases allowed) to the machine
-/// description plus its modeling parameters. Lassen and Summit use the
-/// measured tables; the Section 6 forward-looking machines scale the Lassen
-/// baseline (frontier-like: 0.8× latency, 4× bandwidth; delta-like:
-/// 2× bandwidth), matching `hetcomm study` and the ablation bench.
-pub fn parse(name: &str, num_nodes: usize) -> Option<(Machine, MachineParams)> {
-    let machine = by_name(name.trim().to_ascii_lowercase().as_str(), num_nodes)?;
+/// description plus its modeling parameters; unknown names error with the
+/// valid [`NAMES`] list. Lassen and Summit use the measured tables; the
+/// Section 6 forward-looking machines scale the Lassen baseline
+/// (frontier-like: 0.8× latency, 4× aggregate bandwidth; frontier-4nic:
+/// 0.8× latency with 4 explicit rails at 1× each; delta-like: 2×
+/// bandwidth), matching `hetcomm study` and the ablation bench.
+pub fn parse(name: &str, num_nodes: usize) -> Result<(Machine, MachineParams), String> {
+    let machine = by_name(name.trim().to_ascii_lowercase().as_str(), num_nodes)
+        .ok_or_else(|| format!("unknown machine preset {name:?}; known: {}", NAMES.join(", ")))?;
     let base = lassen_params();
     let params = match machine.name.as_str() {
         "frontier-like" => base.scaled(0.8, 4.0),
+        // rails carry the 4x: each of the 4 NICs injects at the base R_N
+        "frontier-4nic" => base.scaled(0.8, 1.0),
         "delta-like" => base.scaled(1.0, 2.0),
         _ => base,
     };
-    Some((machine, params))
+    Ok((machine, params))
 }
 
 /// Resize a preset's node architecture to a specific node count and GPU
-/// count per node (GPUs spread evenly over the preset's sockets).
+/// count per node (GPUs spread evenly over the preset's sockets). The
+/// shape is rebuilt for the new GPU count, keeping the preset's per-node
+/// NIC rail count ([`with_shape_nics`] overrides it).
 pub fn with_shape(arch: &Machine, num_nodes: usize, gpus_per_node: usize) -> Machine {
+    with_shape_nics(arch, num_nodes, gpus_per_node, arch.shape.nics_per_node())
+}
+
+/// [`with_shape`] with an explicit per-node NIC rail count — the hook
+/// behind the `--nics` grid axis.
+pub fn with_shape_nics(arch: &Machine, num_nodes: usize, gpus_per_node: usize, nics: usize) -> Machine {
+    let gpus_per_socket = gpus_per_node.div_ceil(arch.sockets_per_node.max(1)).max(1);
     Machine {
         name: arch.name.clone(),
         num_nodes,
         sockets_per_node: arch.sockets_per_node,
         cores_per_socket: arch.cores_per_socket,
-        gpus_per_socket: gpus_per_node.div_ceil(arch.sockets_per_node.max(1)).max(1),
+        gpus_per_socket,
+        shape: NodeShape::spread(arch.sockets_per_node.max(1), nics.max(1), arch.sockets_per_node * gpus_per_socket),
     }
 }
 
@@ -100,7 +153,7 @@ mod tests {
 
     #[test]
     fn presets_resolve() {
-        for name in ["lassen", "summit", "frontier", "delta"] {
+        for name in ["lassen", "summit", "frontier", "delta", "frontier-4nic"] {
             let m = by_name(name, 2).unwrap();
             assert_eq!(m.num_nodes, 2);
             assert!(m.total_gpus() >= 8);
@@ -114,6 +167,18 @@ mod tests {
         assert_eq!(m.sockets_per_node, 1);
         assert_eq!(m.cores_per_node(), 64);
         assert_eq!(m.gpus_per_node(), 4);
+        assert!(m.shape.is_single_rail());
+    }
+
+    #[test]
+    fn frontier_4nic_rails_and_affinity() {
+        let m = frontier_4nic(2);
+        assert_eq!(m.nics_per_node(), 4);
+        assert_eq!(m.shape.gpu_nic, vec![0, 1, 2, 3]);
+        assert!(shape_pinned("frontier-4nic"));
+        assert!(shape_pinned("Frontier-4NIC"));
+        assert!(!shape_pinned("lassen"));
+        assert!(!shape_pinned("frontier-like"));
     }
 
     #[test]
@@ -133,9 +198,14 @@ mod tests {
         let (m, p) = parse("delta-like", 4).unwrap();
         assert_eq!(m.name, "delta-like");
         assert!((p.rn() - lassen_params().rn() * 2.0).abs() / p.rn() < 1e-12);
-        assert!(parse("bogus", 1).is_none());
+        // frontier-4nic: per-rail rate stays 1x; the 4x lives in the rails
+        let (m, p) = parse("frontier-4nic", 4).unwrap();
+        assert_eq!((m.name.as_str(), m.nics_per_node()), ("frontier-4nic", 4));
+        assert!((p.rn() - lassen_params().rn()).abs() / p.rn() < 1e-12);
+        let err = parse("bogus", 1).unwrap_err();
         for name in NAMES {
-            assert!(parse(name, 2).is_some(), "registry name {name} must resolve");
+            assert!(err.contains(name), "error must list {name}: {err}");
+            assert!(parse(name, 2).is_ok(), "registry name {name} must resolve");
         }
     }
 
@@ -143,8 +213,18 @@ mod tests {
     fn with_shape_spreads_gpus_over_sockets() {
         let two_socket = with_shape(&lassen(1), 5, 8);
         assert_eq!((two_socket.num_nodes, two_socket.gpus_per_node(), two_socket.cores_per_node()), (5, 8, 40));
+        assert!(two_socket.shape.is_single_rail());
+        two_socket.shape.validate(2, 8).unwrap();
         let one_socket = with_shape(&frontier_like(1), 3, 4);
         assert_eq!((one_socket.num_nodes, one_socket.gpus_per_node()), (3, 4));
         assert_eq!(one_socket.gpus_per_socket, 4);
+        // pinned preset keeps its rail count through reshaping
+        let four = with_shape(&frontier_4nic(1), 3, 8);
+        assert_eq!(four.nics_per_node(), 4);
+        four.shape.validate(1, 8).unwrap();
+        // explicit rail override
+        let two = with_shape_nics(&lassen(1), 3, 4, 2);
+        assert_eq!(two.nics_per_node(), 2);
+        two.shape.validate(2, 4).unwrap();
     }
 }

@@ -5,8 +5,13 @@
 //! IBM Power9 (20 cores) + 2 NVIDIA V100s per socket, EDR InfiniBand.
 //! [`machines`] provides that description plus Summit-, Frontier- and
 //! Delta-like systems for the Section 6 forward-looking discussion.
+//! Every machine carries a [`NodeShape`] — the resource graph of its NIC
+//! rails ([`shape`]) — defaulting to the legacy single-rail node.
 
 pub mod machines;
+pub mod shape;
+
+pub use shape::NodeShape;
 
 use crate::util::config::{Config, ConfigError};
 
@@ -19,6 +24,10 @@ pub struct Machine {
     /// CPU cores per socket — the upper bound on host processes per socket.
     pub cores_per_socket: usize,
     pub gpus_per_socket: usize,
+    /// The node's injection resource graph: NIC rails per socket and the
+    /// GPU↔NIC affinity map. [`NodeShape::single_rail`] (the default built
+    /// by every preset) reproduces the pre-shape-layer single-NIC node.
+    pub shape: NodeShape,
 }
 
 /// Relative physical location of two processes or devices — the key that
@@ -158,15 +167,47 @@ impl Machine {
         (first..first + self.gpus_per_node()).map(GpuId).collect()
     }
 
-    /// Parse a machine from a `[machine]` config section.
+    /// NIC rails per node (the shape's total).
+    pub fn nics_per_node(&self) -> usize {
+        self.shape.nics_per_node()
+    }
+
+    /// Node-local rail a GPU injects through on device-aware transfers
+    /// (the shape's affinity map).
+    pub fn gpu_rail(&self, g: GpuId) -> usize {
+        self.shape.gpu_rail(self.gpu_local(g))
+    }
+
+    /// Node-local rail a host process uses for staged traffic to `dst`:
+    /// round-robin by node pair over the process's own socket's rails. The
+    /// remote node index is folded into `[0, num_nodes - 1)` relative to the
+    /// source node (the same folding as `comm::plan::paired_proc`), so a
+    /// node spreading over many destinations cycles its rails evenly. A pure
+    /// function of `(machine, proc, dst)` — deterministic and independent of
+    /// message order.
+    pub fn proc_rail(&self, p: ProcId, ppn: usize, dst: NodeId) -> usize {
+        let k = self.proc_node(p, ppn).0;
+        let rel = if dst.0 > k { dst.0 - 1 } else { dst.0 };
+        let socket_local = self.proc_socket(p, ppn) % self.sockets_per_node;
+        self.shape.host_rail(socket_local, rel)
+    }
+
+    /// Parse a machine from a `[machine]` config section. The optional
+    /// `nics` key gives the per-node NIC rail count (default 1, the legacy
+    /// single-rail shape), distributed over the sockets as in
+    /// [`NodeShape::spread`].
     pub fn from_config(cfg: &Config) -> Result<Machine, ConfigError> {
         let m = cfg.section("machine")?;
+        let sockets_per_node = m.usize("machine", "sockets_per_node")?;
+        let gpus_per_socket = m.usize("machine", "gpus_per_socket")?;
+        let nics = m.usize_or("nics", 1)?;
         Ok(Machine {
             name: m.str_or("name", "custom").to_string(),
             num_nodes: m.usize("machine", "num_nodes")?,
-            sockets_per_node: m.usize("machine", "sockets_per_node")?,
+            sockets_per_node,
             cores_per_socket: m.usize("machine", "cores_per_socket")?,
-            gpus_per_socket: m.usize("machine", "gpus_per_socket")?,
+            gpus_per_socket,
+            shape: NodeShape::spread(sockets_per_node, nics.max(1), sockets_per_node * gpus_per_socket),
         })
     }
 
@@ -260,5 +301,51 @@ mod tests {
     #[should_panic(expected = "exceeds cores/node")]
     fn ppn_bound_enforced() {
         lassen(1).total_procs(41);
+    }
+
+    #[test]
+    fn default_shape_is_single_rail() {
+        let m = lassen(2);
+        assert!(m.shape.is_single_rail());
+        assert_eq!(m.nics_per_node(), 1);
+        // every endpoint and every destination lands on rail 0
+        for g in 0..m.total_gpus() {
+            assert_eq!(m.gpu_rail(GpuId(g)), 0);
+        }
+        for p in 0..8 {
+            assert_eq!(m.proc_rail(ProcId(p), 4, NodeId(1 - p / 4)), 0);
+        }
+    }
+
+    #[test]
+    fn multi_rail_proc_rail_round_robins_socket_rails() {
+        let mut m = lassen(5);
+        m.shape = NodeShape::spread(2, 4, 4); // 2 rails per socket
+        // proc 0 (node 0, socket 0) cycles rails {0, 1} over destinations
+        let rails: Vec<usize> = (1..5).map(|l| m.proc_rail(ProcId(0), 4, NodeId(l))).collect();
+        assert!(rails.iter().all(|&r| r < 2));
+        assert_eq!(rails.iter().collect::<std::collections::BTreeSet<_>>().len(), 2);
+        // proc 2 (socket 1) stays on socket 1's rails {2, 3}
+        let rails: Vec<usize> = (1..5).map(|l| m.proc_rail(ProcId(2), 4, NodeId(l))).collect();
+        assert!(rails.iter().all(|&r| (2..4).contains(&r)));
+        // GPU affinity follows the shape map
+        assert_eq!(m.gpu_rail(GpuId(0)), 0);
+        assert_eq!(m.gpu_rail(GpuId(3)), 3);
+        assert_eq!(m.gpu_rail(GpuId(7)), 3); // node 1, local 3
+    }
+
+    #[test]
+    fn config_machine_reads_nics() {
+        let cfg = crate::util::config::Config::parse(
+            "[machine]\nnum_nodes = 2\nsockets_per_node = 2\ncores_per_socket = 20\ngpus_per_socket = 2\nnics = 4\n",
+        )
+        .unwrap();
+        let m = Machine::from_config(&cfg).unwrap();
+        assert_eq!(m.nics_per_node(), 4);
+        let cfg = crate::util::config::Config::parse(
+            "[machine]\nnum_nodes = 2\nsockets_per_node = 2\ncores_per_socket = 20\ngpus_per_socket = 2\n",
+        )
+        .unwrap();
+        assert!(Machine::from_config(&cfg).unwrap().shape.is_single_rail());
     }
 }

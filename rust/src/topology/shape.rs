@@ -1,0 +1,202 @@
+//! Node resource-graph shapes: NIC rails per socket and GPU↔NIC affinity.
+//!
+//! The paper's §6 outlook argues that strategy crossover points move with
+//! *node shape* — NIC count, injection bandwidth and GPU↔NIC affinity decide
+//! when node-aware staging with all CPU cores keeps winning. [`NodeShape`]
+//! makes that an explicit, sweepable dimension: every [`super::Machine`]
+//! carries one, the models divide the injection term over the rails
+//! ([`crate::model::maxrate`]), and the simulator runs one occupancy
+//! timeline per rail ([`crate::sim`]).
+//!
+//! The default is the *legacy single-rail* shape — one NIC serving the whole
+//! node, as on the paper's Lassen testbed (a single EDR HCA per node) —
+//! which reproduces the pre-shape-layer outputs bit for bit. Multi-rail
+//! shapes (e.g. the Frontier-like 4-NIC node) are built with
+//! [`NodeShape::spread`] or loaded from presets
+//! ([`super::machines::frontier_4nic`]).
+
+/// Resource-graph description of one node's injection fabric.
+///
+/// Rails carry node-local ids in socket-major order: socket 0's rails come
+/// first, then socket 1's, and so on. A socket may own zero rails (the
+/// legacy shape places the node's single NIC on socket 0).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NodeShape {
+    /// NIC rails attached to each socket; `nics_per_socket[s]` rails belong
+    /// to socket `s`. The node total is the sum.
+    pub nics_per_socket: Vec<usize>,
+    /// Node-local rail each local GPU injects through on device-aware
+    /// transfers (the GPU↔NIC affinity map); `gpu_nic[g]` for local GPU `g`.
+    pub gpu_nic: Vec<usize>,
+}
+
+impl NodeShape {
+    /// The legacy shape: one NIC on socket 0 serving the whole node (the
+    /// paper's Lassen testbed). Reproduces pre-shape-layer behavior bit for
+    /// bit: every inter-node transfer occupies the same single rail.
+    pub fn single_rail(sockets_per_node: usize, gpus_per_node: usize) -> NodeShape {
+        assert!(sockets_per_node >= 1, "node needs at least one socket");
+        let mut nics_per_socket = vec![0usize; sockets_per_node];
+        nics_per_socket[0] = 1;
+        NodeShape { nics_per_socket, gpu_nic: vec![0; gpus_per_node] }
+    }
+
+    /// Distribute `nics` rails over the sockets (the first
+    /// `nics % sockets` sockets take one extra) and affine each GPU to its
+    /// own socket's rails round-robin; GPUs on a rail-less socket fall back
+    /// to the node's rails round-robin by local index.
+    pub fn spread(sockets_per_node: usize, nics: usize, gpus_per_node: usize) -> NodeShape {
+        assert!(sockets_per_node >= 1, "node needs at least one socket");
+        assert!(nics >= 1, "node needs at least one NIC rail");
+        if nics == 1 {
+            return NodeShape::single_rail(sockets_per_node, gpus_per_node);
+        }
+        let base = nics / sockets_per_node;
+        let extra = nics % sockets_per_node;
+        let nics_per_socket: Vec<usize> = (0..sockets_per_node).map(|s| base + usize::from(s < extra)).collect();
+        let gps = gpus_per_node.div_ceil(sockets_per_node).max(1);
+        let mut gpu_nic = Vec::with_capacity(gpus_per_node);
+        for g in 0..gpus_per_node {
+            let socket = (g / gps).min(sockets_per_node - 1);
+            let rail_base: usize = nics_per_socket[..socket].iter().sum();
+            let count = nics_per_socket[socket];
+            let within = g % gps;
+            gpu_nic.push(if count > 0 { rail_base + within % count } else { g % nics });
+        }
+        NodeShape { nics_per_socket, gpu_nic }
+    }
+
+    /// Total NIC rails on the node.
+    pub fn nics_per_node(&self) -> usize {
+        self.nics_per_socket.iter().sum()
+    }
+
+    /// Whether this is the legacy single-rail shape.
+    pub fn is_single_rail(&self) -> bool {
+        self.nics_per_node() == 1
+    }
+
+    /// `(first node-local rail id, rail count)` of one socket.
+    pub fn socket_rails(&self, socket: usize) -> (usize, usize) {
+        let s = socket.min(self.nics_per_socket.len().saturating_sub(1));
+        let base: usize = self.nics_per_socket[..s].iter().sum();
+        (base, self.nics_per_socket[s])
+    }
+
+    /// Rail used by a host process on local socket `socket` for traffic to
+    /// the remote node with folded relative index `rel` (see
+    /// [`super::Machine::proc_rail`]): round-robin by node pair over the
+    /// socket's own rails, falling back to the node's rails when the socket
+    /// has none. Deterministic and independent of message order.
+    pub fn host_rail(&self, socket: usize, rel: usize) -> usize {
+        let (base, count) = self.socket_rails(socket);
+        if count > 0 {
+            base + rel % count
+        } else {
+            rel % self.nics_per_node().max(1)
+        }
+    }
+
+    /// Rail a local GPU injects through (device-aware affinity).
+    pub fn gpu_rail(&self, gpu_local: usize) -> usize {
+        self.gpu_nic[gpu_local]
+    }
+
+    /// Structural sanity against the owning node's socket and GPU counts;
+    /// returns a user-facing message on failure.
+    pub fn validate(&self, sockets_per_node: usize, gpus_per_node: usize) -> Result<(), String> {
+        if self.nics_per_socket.len() != sockets_per_node {
+            return Err(format!(
+                "shape lists {} sockets, node has {sockets_per_node}",
+                self.nics_per_socket.len()
+            ));
+        }
+        let total = self.nics_per_node();
+        if total == 0 {
+            return Err("node shape has no NIC rails".into());
+        }
+        if self.gpu_nic.len() != gpus_per_node {
+            return Err(format!("shape maps {} GPUs, node has {gpus_per_node}", self.gpu_nic.len()));
+        }
+        if let Some(&r) = self.gpu_nic.iter().find(|&&r| r >= total) {
+            return Err(format!("GPU affinity names rail {r}, node has {total}"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_rail_is_legacy() {
+        let s = NodeShape::single_rail(2, 4);
+        assert_eq!(s.nics_per_socket, vec![1, 0]);
+        assert_eq!(s.gpu_nic, vec![0, 0, 0, 0]);
+        assert!(s.is_single_rail());
+        assert_eq!(s.nics_per_node(), 1);
+        s.validate(2, 4).unwrap();
+        // every socket and every pair index lands on the one rail
+        for socket in 0..2 {
+            for rel in 0..7 {
+                assert_eq!(s.host_rail(socket, rel), 0);
+            }
+        }
+        for g in 0..4 {
+            assert_eq!(s.gpu_rail(g), 0);
+        }
+    }
+
+    #[test]
+    fn spread_one_is_single_rail() {
+        assert_eq!(NodeShape::spread(2, 1, 4), NodeShape::single_rail(2, 4));
+    }
+
+    #[test]
+    fn frontier_like_four_rails() {
+        // single socket, 4 NICs, 4 GPUs: one rail per GPU
+        let s = NodeShape::spread(1, 4, 4);
+        assert_eq!(s.nics_per_socket, vec![4]);
+        assert_eq!(s.gpu_nic, vec![0, 1, 2, 3]);
+        s.validate(1, 4).unwrap();
+        // host round-robin covers all four rails
+        let rails: std::collections::BTreeSet<usize> = (0..8).map(|rel| s.host_rail(0, rel)).collect();
+        assert_eq!(rails.len(), 4);
+    }
+
+    #[test]
+    fn two_socket_spread_keeps_affinity_on_socket() {
+        // 2 sockets x 2 rails, 4 GPUs: GPUs 0,1 on socket 0 rails {0,1},
+        // GPUs 2,3 on socket 1 rails {2,3}
+        let s = NodeShape::spread(2, 4, 4);
+        assert_eq!(s.nics_per_socket, vec![2, 2]);
+        assert_eq!(s.gpu_nic, vec![0, 1, 2, 3]);
+        assert_eq!(s.socket_rails(0), (0, 2));
+        assert_eq!(s.socket_rails(1), (2, 2));
+        // socket-local round robin stays within the socket's rails
+        for rel in 0..5 {
+            assert!(s.host_rail(0, rel) < 2);
+            assert!((2..4).contains(&s.host_rail(1, rel)));
+        }
+    }
+
+    #[test]
+    fn odd_spread_front_loads() {
+        let s = NodeShape::spread(2, 3, 4);
+        assert_eq!(s.nics_per_socket, vec![2, 1]);
+        assert_eq!(s.nics_per_node(), 3);
+        s.validate(2, 4).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_mismatches() {
+        let s = NodeShape::single_rail(2, 4);
+        assert!(s.validate(1, 4).is_err());
+        assert!(s.validate(2, 6).is_err());
+        let bad = NodeShape { nics_per_socket: vec![0, 0], gpu_nic: vec![0; 4] };
+        assert!(bad.validate(2, 4).unwrap_err().contains("no NIC"));
+        let bad = NodeShape { nics_per_socket: vec![1, 0], gpu_nic: vec![0, 0, 0, 5] };
+        assert!(bad.validate(2, 4).unwrap_err().contains("rail 5"));
+    }
+}

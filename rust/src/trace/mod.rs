@@ -148,14 +148,14 @@ impl Trace {
     /// ([`machines::parse`]), or the longest registry prefix of the name
     /// (recorded sweep machines carry shape suffixes like `"lassen-g4"`).
     pub fn params(&self) -> Option<MachineParams> {
-        if let Some((_, p)) = machines::parse(&self.machine.name, 1) {
+        if let Ok((_, p)) = machines::parse(&self.machine.name, 1) {
             return Some(p);
         }
         machines::NAMES
             .iter()
             .filter(|n| self.machine.name.starts_with(*n))
             .max_by_key(|n| n.len())
-            .and_then(|n| machines::parse(n, 1))
+            .and_then(|n| machines::parse(n, 1).ok())
             .map(|(_, p)| p)
     }
 }

@@ -13,7 +13,7 @@ use super::{Epoch, Trace};
 use crate::pattern::{CommPattern, Msg};
 use crate::sweep::emit::esc;
 use crate::topology::{GpuId, Machine};
-use crate::util::json::{fmt_f64, Json};
+use crate::util::json::{fmt_f64, fmt_usize_list as usize_list, Json};
 use std::fmt::Write as _;
 
 /// Artifact schema identifier; bump on layout changes.
@@ -29,10 +29,28 @@ pub fn to_json(trace: &Trace) -> String {
     // JSON-number round trip through f64
     let _ = writeln!(out, "  \"seed\": \"{}\",", trace.seed);
     let m = &trace.machine;
+    // Shape key, three spellings: single-rail machines keep the historical
+    // five-field object (byte-identical artifacts); machines on the
+    // canonical spread layout append just `nics`; anything else (custom
+    // GPU↔NIC affinity) persists the full resource graph so the reloaded
+    // trace replays on exactly the recorded shape.
+    let canonical =
+        m.shape == crate::topology::NodeShape::spread(m.sockets_per_node.max(1), m.nics_per_node(), m.gpus_per_node());
+    let rails = if canonical && m.nics_per_node() == 1 {
+        String::new()
+    } else if canonical {
+        format!(", \"nics\": {}", m.nics_per_node())
+    } else {
+        format!(
+            ", \"nics_per_socket\": {}, \"gpu_nic\": {}",
+            usize_list(&m.shape.nics_per_socket),
+            usize_list(&m.shape.gpu_nic)
+        )
+    };
     let _ = writeln!(
         out,
         "  \"machine\": {{\"name\": \"{}\", \"num_nodes\": {}, \"sockets_per_node\": {}, \
-         \"cores_per_socket\": {}, \"gpus_per_socket\": {}}},",
+         \"cores_per_socket\": {}, \"gpus_per_socket\": {}{rails}}},",
         esc(&m.name),
         m.num_nodes,
         m.sockets_per_node,
@@ -89,12 +107,33 @@ pub fn parse_json(text: &str) -> Result<Trace, String> {
         return Err(format!("unsupported trace schema {schema:?} (expected {SCHEMA:?})"));
     }
     let m = value.field("machine")?;
+    let sockets_per_node = m.field("sockets_per_node")?.as_usize()?;
+    let gpus_per_socket = m.field("gpus_per_socket")?.as_usize()?;
+    // optional shape keys (see `to_json`): the full resource graph when
+    // present, a spread rail count otherwise, single-rail when absent
+    let shape = if let Ok(per_socket) = m.field("nics_per_socket") {
+        let shape = crate::topology::NodeShape {
+            nics_per_socket: per_socket.as_usize_list()?,
+            gpu_nic: m.field("gpu_nic")?.as_usize_list()?,
+        };
+        shape
+            .validate(sockets_per_node.max(1), sockets_per_node * gpus_per_socket)
+            .map_err(|e| format!("trace machine shape invalid: {e}"))?;
+        shape
+    } else {
+        let nics = match m.field("nics") {
+            Ok(v) => v.as_usize()?.max(1),
+            Err(_) => 1,
+        };
+        crate::topology::NodeShape::spread(sockets_per_node.max(1), nics, sockets_per_node * gpus_per_socket)
+    };
     let machine = Machine {
         name: m.field("name")?.as_str()?.to_string(),
         num_nodes: m.field("num_nodes")?.as_usize()?,
-        sockets_per_node: m.field("sockets_per_node")?.as_usize()?,
+        sockets_per_node,
         cores_per_socket: m.field("cores_per_socket")?.as_usize()?,
-        gpus_per_socket: m.field("gpus_per_socket")?.as_usize()?,
+        gpus_per_socket,
+        shape,
     };
     let mut epochs = Vec::new();
     let mut declared: Vec<(f64, [usize; 6])> = Vec::new();

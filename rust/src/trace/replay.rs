@@ -153,6 +153,15 @@ pub fn replay(trace: &Trace, mode: &ReplayMode, config: &ReplayConfig) -> Result
                 surface.machine, trace.machine.name
             ));
         }
+        // surfaces are shape-keyed: the rail counts must agree or every
+        // re-advise would rank strategies under the wrong injection limit
+        if surface.nics != trace.machine.nics_per_node() {
+            return Err(format!(
+                "surface was compiled for {} NICs/node but the trace machine has {}",
+                surface.nics,
+                trace.machine.nics_per_node()
+            ));
+        }
     }
     if !config.drift_threshold.is_finite() || config.drift_threshold < 0.0 {
         return Err(format!("drift threshold {} must be finite and >= 0", config.drift_threshold));
@@ -189,6 +198,7 @@ pub fn replay(trace: &Trace, mode: &ReplayMode, config: &ReplayConfig) -> Result
             m_n2n: stats.m_n2n,
             m_std: stats.m_std,
             ppn,
+            nics: machine.nics_per_node(),
             dup_frac: dup,
         };
         let times = sm.all_times(&inputs);

@@ -150,8 +150,7 @@ pub fn synthesize(
     repeat: usize,
     seed: u64,
 ) -> Result<Trace, String> {
-    let (arch, _) =
-        machines::parse(machine_name, 1).ok_or_else(|| format!("unknown machine preset {machine_name:?}"))?;
+    let (arch, _) = machines::parse(machine_name, 1)?;
     // 16 destinations max across all schedules; one extra node hosts the
     // sender (the Figure 4.3 shape).
     let machine = machines::with_shape(&arch, 17, arch.gpus_per_node());

@@ -21,6 +21,13 @@ pub fn fmt_f64(x: f64) -> String {
     }
 }
 
+/// Integer-list formatting for artifact emitters (`[a, b, c]`), shared by
+/// the surface and trace writers so both formats stay in lockstep.
+pub fn fmt_usize_list(xs: &[usize]) -> String {
+    let items: Vec<String> = xs.iter().map(|v| v.to_string()).collect();
+    format!("[{}]", items.join(", "))
+}
+
 /// A parsed JSON value (object keys keep file order).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {

@@ -19,6 +19,7 @@ fn golden_config(machine: &str, dup: f64) -> SweepConfig {
             gens: vec![PatternGen::Uniform, PatternGen::Random],
             dest_nodes: vec![4, 8],
             gpus_per_node: vec![4],
+            nics: vec![1],
             sizes: vec![1 << 8, 1 << 12, 1 << 16, 1 << 20],
             n_msgs: 48,
             dup_frac: dup,
@@ -42,6 +43,22 @@ fn sweep_emitters_identical_across_executors() {
         // and the compiled path is self-deterministic
         let again = run_sweep_mode(&cfg, ExecMode::Compiled).unwrap();
         assert_eq!(to_json(&fast), to_json(&again));
+    }
+}
+
+#[test]
+fn shaped_sweep_emitters_identical_across_executors() {
+    // the NIC-rail axis must not open a gap between the two executors:
+    // rail assignment and per-rail occupancy share one home
+    for machine in ["lassen", "frontier-4nic"] {
+        let mut cfg = golden_config(machine, 0.0);
+        if machine == "lassen" {
+            cfg.grid.nics = vec![1, 2, 4];
+        }
+        let fast = run_sweep_mode(&cfg, ExecMode::Compiled).unwrap();
+        let slow = run_sweep_mode(&cfg, ExecMode::Reference).unwrap();
+        assert_eq!(to_json(&fast), to_json(&slow), "{machine}: shaped JSON diverged");
+        assert_eq!(to_csv(&fast), to_csv(&slow), "{machine}: shaped CSV diverged");
     }
 }
 

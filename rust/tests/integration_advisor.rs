@@ -20,6 +20,7 @@ fn table6_sweep(machine: &str) -> SweepConfig {
             gens: vec![PatternGen::Uniform],
             dest_nodes: vec![4, 16],
             gpus_per_node: vec![4],
+            nics: vec![1],
             sizes: SIZES.to_vec(),
             n_msgs: 256,
             dup_frac: 0.0,

@@ -11,6 +11,7 @@ fn paper_grid() -> GridSpec {
         gens: vec![PatternGen::Uniform],
         dest_nodes: vec![4, 16],
         gpus_per_node: vec![4],
+        nics: vec![1],
         sizes: vec![16, 256, 1024, 4096, 1 << 18],
         n_msgs: 256,
         dup_frac: 0.0,
@@ -24,6 +25,7 @@ fn fixed_seed_json_byte_identical() {
             gens: vec![PatternGen::Uniform, PatternGen::Random],
             dest_nodes: vec![4, 16],
             gpus_per_node: vec![4],
+            nics: vec![1],
             sizes: vec![256, 4096],
             n_msgs: 128,
             dup_frac: 0.1,
@@ -135,6 +137,7 @@ fn simulator_agrees_split_beats_standard_staged_moderate_sizes() {
             gens: vec![PatternGen::Uniform],
             dest_nodes: vec![16],
             gpus_per_node: vec![4],
+            nics: vec![1],
             sizes: vec![1024],
             n_msgs: 256,
             dup_frac: 0.0,

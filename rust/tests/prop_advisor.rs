@@ -8,7 +8,9 @@ use hetcomm::pattern::generators::Scenario;
 use hetcomm::topology::machines;
 use hetcomm::util::prop::{check, Gen};
 
-const MACHINES: [&str; 3] = ["lassen", "frontier-like", "delta-like"];
+// frontier-4nic exercises the shape-keyed path: its surfaces compile at 4
+// rails and the direct model gets the same shape through `with_shape`
+const MACHINES: [&str; 4] = ["lassen", "frontier-like", "frontier-4nic", "delta-like"];
 
 /// Small random strictly-ascending axes within the characterization ranges.
 fn random_axes(g: &mut Gen) -> SurfaceAxes {

@@ -1,0 +1,228 @@
+//! Property tests for the resource-graph shape layer: NIC-rail assignment
+//! is a deterministic, order-invariant function of the machine and the
+//! message endpoints, and the legacy single-rail shape reproduces the
+//! pre-shape-layer pipeline bit for bit (the golden oracle retained
+//! through the refactor: identical builder output, the historical dense
+//! NIC layout, and compiled == reference executor bits on every shape).
+
+use hetcomm::comm::{build_schedule, Loc, Strategy};
+use hetcomm::params::lassen_params;
+use hetcomm::pattern::generators::random_pattern;
+use hetcomm::pattern::CommPattern;
+use hetcomm::sim::compiled::NO_NIC;
+use hetcomm::sim::{run_reference, CompiledSchedule, Scratch};
+use hetcomm::topology::machines::{frontier_4nic, frontier_like, lassen};
+use hetcomm::topology::{Machine, NodeShape};
+use hetcomm::util::prop::{check, Gen};
+use hetcomm::util::rng::Rng;
+
+/// A random machine with a random (possibly multi-rail) shape.
+fn shaped_machine(g: &mut Gen) -> Machine {
+    let mut m = match g.usize(0, 3) {
+        0 => lassen(g.usize(2, 6)),
+        1 => frontier_like(g.usize(2, 5)),
+        _ => frontier_4nic(g.usize(2, 5)),
+    };
+    if g.bool(0.6) {
+        let nics = g.usize(1, 5);
+        m.shape = NodeShape::spread(m.sockets_per_node, nics, m.gpus_per_node());
+    }
+    m.shape.validate(m.sockets_per_node, m.gpus_per_node()).expect("generated shape is valid");
+    m
+}
+
+/// The (src, dst, bytes, rail id, occupancy bits) of every lowered transfer
+/// of a schedule — the observable rail assignment.
+fn rail_tags(machine: &Machine, strategy: Strategy, pattern: &CommPattern) -> Vec<(Loc, Loc, usize, u32, u64)> {
+    let params = lassen_params().compile();
+    let schedule = build_schedule(strategy, machine, pattern);
+    let cs = CompiledSchedule::lower(machine, &params, &schedule, strategy.sim_ppn(machine));
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    for phase in &schedule.phases {
+        for x in &phase.xfers {
+            if x.bytes == 0 {
+                continue;
+            }
+            out.push((x.src, x.dst, x.bytes, cs.x_nic[i], cs.x_nic_busy[i].to_bits()));
+            i += 1;
+        }
+    }
+    assert_eq!(i, cs.x_nic.len(), "lowered transfer count mismatch");
+    out
+}
+
+#[test]
+fn rail_assignment_is_deterministic_and_order_invariant() {
+    check("rails are a pure function of (machine, src, dst)", 40, |g| {
+        let machine = shaped_machine(g);
+        let mut rng = Rng::new(g.u64(1 << 40));
+        let pattern = random_pattern(&machine, &mut rng, g.usize(16, 96), 1 << g.usize(6, 16), 0.2);
+        for strategy in Strategy::all() {
+            // same pattern twice: identical bits
+            let a = rail_tags(&machine, strategy, &pattern);
+            let b = rail_tags(&machine, strategy, &pattern);
+            if a != b {
+                return Err(format!("{}: lowering is not deterministic", strategy.label()));
+            }
+            // shuffled pattern: every (src, dst, bytes) keeps its rail.
+            // (Multisets: the builders may reorder transfers, but no
+            // message's rail may depend on its position in the pattern.)
+            let mut shuffled = pattern.clone();
+            let mut srng = Rng::new(g.u64(1 << 40) | 1);
+            srng.shuffle(&mut shuffled.msgs);
+            let mut a_sorted = a.clone();
+            let mut c = rail_tags(&machine, strategy, &shuffled);
+            a_sorted.sort();
+            c.sort();
+            if a_sorted != c {
+                return Err(format!("{}: rail assignment moved under a pattern shuffle", strategy.label()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn rails_stay_in_range_of_the_nic_block() {
+    check("rail ids live inside the shape's NIC block", 40, |g| {
+        let machine = shaped_machine(g);
+        let rails = machine.nics_per_node();
+        let params = lassen_params().compile();
+        let mut rng = Rng::new(g.u64(1 << 40));
+        let pattern = random_pattern(&machine, &mut rng, 64, 1 << 12, 0.1);
+        for strategy in Strategy::all() {
+            let ppn = strategy.sim_ppn(&machine);
+            let schedule = build_schedule(strategy, &machine, &pattern);
+            let cs = CompiledSchedule::lower(&machine, &params, &schedule, ppn);
+            // the NIC block sits between the GPU block and the copy block
+            let nic_base = machine.num_nodes * ppn + machine.total_gpus();
+            for (&nic, &busy) in cs.x_nic.iter().zip(&cs.x_nic_busy) {
+                if nic == NO_NIC {
+                    if busy != 0.0 {
+                        return Err("on-node transfer charged a NIC".into());
+                    }
+                    continue;
+                }
+                let slot = nic as usize - nic_base;
+                if slot >= machine.num_nodes * rails {
+                    return Err(format!(
+                        "{}: rail slot {slot} outside the {}x{rails} NIC block",
+                        strategy.label(),
+                        machine.num_nodes
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn single_rail_shapes_reproduce_the_legacy_pipeline_bit_for_bit() {
+    // The golden oracle: a machine whose shape is explicitly the legacy
+    // single-rail node must build the same schedules, lower to the same
+    // dense ids (one NIC timeline per node, occupancy = bytes / R_N), and
+    // therefore simulate to the same bits as the preset default.
+    check("1-NIC shape == pre-refactor builders and layout", 30, |g| {
+        let default_machine = lassen(g.usize(2, 6));
+        let mut legacy = default_machine.clone();
+        legacy.shape = NodeShape::single_rail(legacy.sockets_per_node, legacy.gpus_per_node());
+        if default_machine != legacy {
+            return Err("presets must default to the single-rail shape".into());
+        }
+
+        let params = lassen_params();
+        let compiled = params.compile();
+        let mut rng = Rng::new(g.u64(1 << 40));
+        let pattern = random_pattern(&default_machine, &mut rng, g.usize(16, 96), 1 << g.usize(6, 18), 0.25);
+        for strategy in Strategy::all() {
+            let ppn = strategy.sim_ppn(&default_machine);
+            let a = build_schedule(strategy, &default_machine, &pattern);
+            let b = build_schedule(strategy, &legacy, &pattern);
+            if a != b {
+                return Err(format!("{}: builder output moved under the shape layer", strategy.label()));
+            }
+            let cs = CompiledSchedule::lower(&legacy, &compiled, &a, ppn);
+            let nic_base = legacy.num_nodes * ppn + legacy.total_gpus();
+            let mut i = 0usize;
+            for phase in &a.phases {
+                for x in &phase.xfers {
+                    if x.bytes == 0 {
+                        continue;
+                    }
+                    if cs.x_nic[i] != NO_NIC {
+                        // the historical dense layout: nic id == base + node
+                        if cs.x_nic[i] as usize != nic_base + cs.x_node[i] as usize {
+                            return Err(format!("{}: NIC id left the per-node layout", strategy.label()));
+                        }
+                        // and the historical occupancy: bytes / R_N exactly
+                        let legacy_busy = (x.bytes as f64 * params.inv_rn).to_bits();
+                        if cs.x_nic_busy[i].to_bits() != legacy_busy {
+                            return Err(format!("{}: NIC occupancy moved a bit", strategy.label()));
+                        }
+                    }
+                    i += 1;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn compiled_matches_reference_on_multi_rail_shapes() {
+    // the equivalence oracle extended over the shape axis: both executors
+    // learned about rails and must agree on every bit
+    check("compiled == reference with rails", 30, |g| {
+        let machine = shaped_machine(g);
+        let params = lassen_params();
+        let compiled = params.compile();
+        let mut rng = Rng::new(g.u64(1 << 40));
+        let pattern = random_pattern(&machine, &mut rng, g.usize(16, 80), 1 << g.usize(6, 18), 0.2);
+        let mut scratch = Scratch::new();
+        for strategy in Strategy::all() {
+            let ppn = strategy.sim_ppn(&machine);
+            let schedule = build_schedule(strategy, &machine, &pattern);
+            let fast = scratch.run_totals(&machine, &compiled, &schedule, ppn);
+            let slow = run_reference(&machine, &params, &schedule, ppn);
+            if fast.total.to_bits() != slow.total.to_bits()
+                || fast.max_node_injected != slow.max_node_injected
+                || fast.internode_msgs != slow.internode_msgs
+            {
+                return Err(format!("{}: executors diverged on a shaped machine", strategy.label()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn more_rails_never_slow_the_simulator() {
+    // Monotonicity of the resource graph along the refinement chain
+    // 1 -> 2 -> 4 rails on a Lassen-like node: each step splits every
+    // rail's traffic, so NIC contention only relaxes (endpoint
+    // serialization is untouched).
+    check("rails monotone under refinement", 20, |g| {
+        let base = lassen(g.usize(2, 5));
+        let params = lassen_params().compile();
+        let mut rng = Rng::new(g.u64(1 << 40));
+        let pattern = random_pattern(&base, &mut rng, 64, 1 << 16, 0.2);
+        let mut scratch = Scratch::new();
+        for strategy in Strategy::all() {
+            let ppn = strategy.sim_ppn(&base);
+            let mut last = f64::INFINITY;
+            for nics in [1usize, 2, 4] {
+                let mut m = base.clone();
+                m.shape = NodeShape::spread(m.sockets_per_node, nics, m.gpus_per_node());
+                let schedule = build_schedule(strategy, &m, &pattern);
+                let t = scratch.run_total(&m, &params, &schedule, ppn);
+                if t > last * (1.0 + 1e-12) {
+                    return Err(format!("{}: {nics} rails slower ({t} > {last})", strategy.label()));
+                }
+                last = t;
+            }
+        }
+        Ok(())
+    });
+}

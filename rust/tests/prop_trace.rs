@@ -66,6 +66,33 @@ fn epoch_stats_and_drift_survive_the_roundtrip() {
 }
 
 #[test]
+fn custom_shapes_roundtrip_faithfully() {
+    // a machine whose GPU↔NIC affinity departs from the canonical spread
+    // layout must persist its full resource graph, not just a rail count
+    check("non-canonical NodeShape survives the artifact", 20, |g| {
+        let mut trace = random_trace(g);
+        let gpn = trace.machine.gpus_per_node();
+        let sockets = trace.machine.sockets_per_node;
+        // 2 rails per socket with every GPU pinned to rail 1 — spread would
+        // start the affinity map at rail 0, so this is never canonical
+        trace.machine.shape =
+            hetcomm::topology::NodeShape { nics_per_socket: vec![2; sockets], gpu_nic: vec![1; gpn] };
+        let json = persist::to_json(&trace);
+        if !json.contains("nics_per_socket") {
+            return Err("custom shape must serialize its full resource graph".into());
+        }
+        let parsed = persist::parse_json(&json).map_err(|e| format!("parse failed: {e}"))?;
+        if parsed.machine.shape != trace.machine.shape {
+            return Err("custom shape changed across the round trip".into());
+        }
+        if persist::to_json(&parsed) != json {
+            return Err("re-emitted custom-shape artifact bytes differ".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn tampered_stats_metadata_is_rejected() {
     check("metadata self-check catches stats tampering", 20, |g| {
         let trace = random_trace(g);
