@@ -1,26 +1,52 @@
-//! Sharded LRU cache fronting surface lookups: queries hash to one of N
-//! independently-locked shards, so concurrent `advise` calls contend only
-//! per shard and a repeated query costs a probe instead of an interpolated
-//! lattice read. Answers are immutable [`RankedStrategies`] behind `Arc`s —
-//! eviction order can vary under concurrency, but cached *answers* never
-//! can (the surface is deterministic), so burst results stay reproducible.
+//! Per-snapshot fixed memo table fronting surface lookups.
+//!
+//! [`FixedMemo`] is an open-addressed table of write-once slots: a probe
+//! is a handful of atomic loads, an insert is a single `OnceLock::set`,
+//! and there is **no eviction, no clearing, and no locking** — the memo is
+//! owned by one immutable [`super::SurfaceSnapshot`] and simply dies with
+//! it. Recalibration never invalidates entries; it publishes a fresh
+//! snapshot with a fresh (pre-warmed) memo, which is what structurally
+//! rules out the torn-answer and stale-insert races the old sharded LRU
+//! needed generation counters for.
+//!
+//! Because slots are write-once and inserts never skip an empty slot, a
+//! probe may stop at the first empty slot it sees: if the key had been
+//! inserted further along its probe sequence, every earlier position was
+//! occupied at insert time — and occupied slots never empty out. A full
+//! probe window simply means "don't memoize this one"; the surface lookup
+//! is deterministic, so recomputing a crowded-out answer is always safe.
 
-use super::surface::RankedStrategies;
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use super::surface::{Pattern, RankedStrategies};
+use std::sync::Arc;
+use std::sync::OnceLock;
 
-/// Cache key: the quantized query plus the owning surface's index.
+/// Probe window: how many consecutive slots a key may land in before the
+/// table declines to memoize it.
+const PROBE: usize = 32;
+
+/// Memo key: the quantized query. Snapshot-owned tables need no surface
+/// or generation discriminator — one memo serves exactly one compiled
+/// surface, forever.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct CacheKey {
-    pub surface: usize,
     pub n_msgs: usize,
     pub msg_size: usize,
     pub dest_nodes: usize,
     pub gpus_per_node: usize,
 }
 
-/// Hit/miss counters (monotonic over the cache's lifetime).
+impl CacheKey {
+    pub fn from_pattern(q: &Pattern) -> CacheKey {
+        CacheKey {
+            n_msgs: q.n_msgs,
+            msg_size: q.msg_size,
+            dest_nodes: q.dest_nodes,
+            gpus_per_node: q.gpus_per_node,
+        }
+    }
+}
+
+/// Hit/miss counters (monotonic over the owning service's lifetime).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: u64,
@@ -28,7 +54,7 @@ pub struct CacheStats {
 }
 
 impl CacheStats {
-    /// Fraction of probes served from the cache (0 when never probed).
+    /// Fraction of probes served from the memo (0 when never probed).
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {
@@ -44,133 +70,83 @@ impl CacheStats {
     }
 }
 
-struct Entry {
-    value: Arc<RankedStrategies>,
-    last_used: u64,
+/// The write-once open-addressed memo table (see the module docs).
+pub struct FixedMemo {
+    slots: Vec<OnceLock<(CacheKey, Arc<RankedStrategies>)>>,
+    mask: usize,
 }
 
-struct Shard {
-    map: HashMap<CacheKey, Entry>,
-    /// Monotonic access clock; unique per access within the shard, so the
-    /// LRU victim is always unambiguous.
-    tick: u64,
-    /// Bumped by [`ShardedLru::clear`] under this shard's lock — the token
-    /// that makes compute-then-insert safe against concurrent invalidation
-    /// ([`ShardedLru::put_if_generation`]).
-    generation: u64,
-}
-
-/// The sharded LRU.
-pub struct ShardedLru {
-    shards: Vec<Mutex<Shard>>,
-    per_shard_cap: usize,
-    hits: AtomicU64,
-    misses: AtomicU64,
-}
-
-impl ShardedLru {
-    /// `capacity` is the total entry budget, split evenly over `shards`.
-    pub fn new(shards: usize, capacity: usize) -> ShardedLru {
-        let shards = shards.max(1);
-        ShardedLru {
-            per_shard_cap: capacity.div_ceil(shards).max(1),
-            shards: (0..shards).map(|_| Mutex::new(Shard { map: HashMap::new(), tick: 0, generation: 0 })).collect(),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-        }
+impl FixedMemo {
+    /// A memo with at least `capacity` slots, rounded up to a power of two
+    /// (minimum 64) so probing can mask instead of divide.
+    pub fn new(capacity: usize) -> FixedMemo {
+        let cap = capacity.max(64).next_power_of_two();
+        let mut slots = Vec::with_capacity(cap);
+        slots.resize_with(cap, OnceLock::new);
+        FixedMemo { slots, mask: cap - 1 }
     }
 
-    /// Deterministic shard placement (FNV-1a over the key fields) — shard
-    /// choice must not depend on the process-random `HashMap` hasher.
-    fn shard_of(&self, key: &CacheKey) -> usize {
+    /// Total slots in the table.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Deterministic home slot (FNV-1a over the key fields) — placement
+    /// must not depend on the process-random `HashMap` hasher.
+    fn home(&self, key: &CacheKey) -> usize {
         let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for v in [key.surface, key.n_msgs, key.msg_size, key.dest_nodes, key.gpus_per_node] {
+        for v in [key.n_msgs, key.msg_size, key.dest_nodes, key.gpus_per_node] {
             h ^= v as u64;
             h = h.wrapping_mul(0x0100_0000_01b3);
         }
-        (h % self.shards.len() as u64) as usize
+        (h & self.mask as u64) as usize
     }
 
-    /// Probe; refreshes recency on a hit.
+    /// Probe for `key`. Stops at the first empty slot (sound because
+    /// occupied slots never empty out) or after [`PROBE`] collisions.
     pub fn get(&self, key: &CacheKey) -> Option<Arc<RankedStrategies>> {
-        let mut shard = self.shards[self.shard_of(key)].lock().expect("cache shard poisoned");
-        shard.tick += 1;
-        let tick = shard.tick;
-        match shard.map.get_mut(key) {
-            Some(e) => {
-                e.last_used = tick;
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                Some(Arc::clone(&e.value))
-            }
-            None => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
-                None
+        let home = self.home(key);
+        for d in 0..PROBE {
+            match self.slots[(home + d) & self.mask].get() {
+                None => return None,
+                Some((k, v)) if k == key => return Some(Arc::clone(v)),
+                Some(_) => {}
             }
         }
+        None
     }
 
-    /// Insert (or refresh), evicting the shard's least-recently-used entry
-    /// when the shard is at capacity.
-    pub fn put(&self, key: CacheKey, value: Arc<RankedStrategies>) {
-        let mut shard = self.shards[self.shard_of(&key)].lock().expect("cache shard poisoned");
-        put_locked(&mut shard, key, value, self.per_shard_cap);
-    }
-
-    /// Generation of the shard owning `key`; snapshot it before computing a
-    /// value, then insert with [`ShardedLru::put_if_generation`].
-    pub fn generation_of(&self, key: &CacheKey) -> u64 {
-        self.shards[self.shard_of(key)].lock().expect("cache shard poisoned").generation
-    }
-
-    /// Insert only if the owning shard has not been [`ShardedLru::clear`]ed
-    /// since `generation` was snapshotted. The check and the insert happen
-    /// under the shard lock, so a value computed from a since-invalidated
-    /// surface can never be re-inserted after the clear. Returns whether
-    /// the value was stored.
-    pub fn put_if_generation(&self, key: CacheKey, value: Arc<RankedStrategies>, generation: u64) -> bool {
-        let mut shard = self.shards[self.shard_of(&key)].lock().expect("cache shard poisoned");
-        if shard.generation != generation {
-            return false;
+    /// Insert `key -> value` at the first free slot in its probe window.
+    /// Returns whether the answer is now memoized (either by this call or
+    /// by a racing insert of the same key); `false` means the window was
+    /// full of other keys and this answer will simply be recomputed.
+    pub fn insert(&self, key: CacheKey, value: Arc<RankedStrategies>) -> bool {
+        let home = self.home(&key);
+        let mut pending = Some((key, value));
+        for d in 0..PROBE {
+            let slot = &self.slots[(home + d) & self.mask];
+            match slot.set(pending.take().expect("pending value present until placed")) {
+                Ok(()) => return true,
+                Err(returned) => {
+                    // lost the slot (to this key or another); re-read it
+                    if slot.get().map(|(k, _)| *k == key).unwrap_or(false) {
+                        return true;
+                    }
+                    pending = Some(returned);
+                }
+            }
         }
-        put_locked(&mut shard, key, value, self.per_shard_cap);
-        true
+        false
     }
 
-    /// Drop every cached answer and advance each shard's generation
-    /// (recalibration invalidates in-flight computations too); counters are
-    /// preserved.
-    pub fn clear(&self) {
-        for shard in &self.shards {
-            let mut shard = shard.lock().expect("cache shard poisoned");
-            shard.generation += 1;
-            shard.map.clear();
-        }
-    }
-
-    /// Entries currently cached across all shards.
+    /// Entries currently memoized (O(capacity); diagnostics and tests).
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().expect("cache shard poisoned").map.len()).sum()
+        self.slots.iter().filter(|s| s.get().is_some()).count()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
-
-    pub fn stats(&self) -> CacheStats {
-        CacheStats { hits: self.hits.load(Ordering::Relaxed), misses: self.misses.load(Ordering::Relaxed) }
-    }
-}
-
-/// Shared insert path: refresh recency and evict the LRU entry at capacity.
-fn put_locked(shard: &mut Shard, key: CacheKey, value: Arc<RankedStrategies>, cap: usize) {
-    shard.tick += 1;
-    let tick = shard.tick;
-    if shard.map.len() >= cap && !shard.map.contains_key(&key) {
-        if let Some(victim) = shard.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| *k) {
-            shard.map.remove(&victim);
-        }
-    }
-    shard.map.insert(key, Entry { value, last_used: tick });
 }
 
 #[cfg(test)]
@@ -179,7 +155,7 @@ mod tests {
     use crate::comm::Strategy;
 
     fn key(i: usize) -> CacheKey {
-        CacheKey { surface: 0, n_msgs: i, msg_size: 1024, dest_nodes: 16, gpus_per_node: 4 }
+        CacheKey { n_msgs: i, msg_size: 1024, dest_nodes: 16, gpus_per_node: 4 }
     }
 
     fn value(t: f64) -> Arc<RankedStrategies> {
@@ -187,75 +163,97 @@ mod tests {
     }
 
     #[test]
-    fn hit_after_put_miss_before() {
-        let cache = ShardedLru::new(4, 64);
-        assert!(cache.get(&key(1)).is_none());
-        cache.put(key(1), value(1.0));
-        let got = cache.get(&key(1)).expect("hit");
-        assert_eq!(got.ranked[0].1, 1.0);
-        let stats = cache.stats();
-        assert_eq!((stats.hits, stats.misses), (1, 1));
-        assert!((stats.hit_rate() - 0.5).abs() < 1e-12);
+    fn hit_after_insert_miss_before() {
+        let memo = FixedMemo::new(64);
+        assert!(memo.get(&key(1)).is_none());
+        assert!(memo.insert(key(1), value(1.0)));
+        assert_eq!(memo.get(&key(1)).expect("hit").ranked[0].1, 1.0);
+        assert_eq!(memo.len(), 1);
     }
 
     #[test]
-    fn lru_evicts_oldest_within_shard() {
-        // single shard, capacity 2: inserting a third key evicts the LRU
-        let cache = ShardedLru::new(1, 2);
-        cache.put(key(1), value(1.0));
-        cache.put(key(2), value(2.0));
-        assert!(cache.get(&key(1)).is_some()); // refresh key 1
-        cache.put(key(3), value(3.0)); // evicts key 2
-        assert_eq!(cache.len(), 2);
-        assert!(cache.get(&key(2)).is_none());
-        assert!(cache.get(&key(1)).is_some());
-        assert!(cache.get(&key(3)).is_some());
+    fn capacity_rounds_up_to_power_of_two() {
+        assert_eq!(FixedMemo::new(0).capacity(), 64);
+        assert_eq!(FixedMemo::new(65).capacity(), 128);
+        assert_eq!(FixedMemo::new(8192).capacity(), 8192);
     }
 
     #[test]
-    fn clear_keeps_counters() {
-        let cache = ShardedLru::new(2, 8);
-        cache.put(key(1), value(1.0));
-        assert!(cache.get(&key(1)).is_some());
-        cache.clear();
-        assert!(cache.is_empty());
-        assert!(cache.get(&key(1)).is_none());
-        let stats = cache.stats();
-        assert_eq!((stats.hits, stats.misses), (1, 1));
-        assert_eq!(stats.since(&CacheStats { hits: 1, misses: 0 }), CacheStats { hits: 0, misses: 1 });
+    fn first_insert_wins_and_repeat_inserts_report_memoized() {
+        let memo = FixedMemo::new(64);
+        assert!(memo.insert(key(1), value(1.0)));
+        // write-once: a second insert of the same key keeps the original
+        assert!(memo.insert(key(1), value(2.0)));
+        assert_eq!(memo.get(&key(1)).unwrap().ranked[0].1, 1.0);
+        assert_eq!(memo.len(), 1);
     }
 
     #[test]
-    fn generation_gates_stale_inserts() {
-        let cache = ShardedLru::new(2, 8);
-        let gen = cache.generation_of(&key(1));
-        // a clear between snapshot and insert must reject the stale value
-        cache.clear();
-        assert!(!cache.put_if_generation(key(1), value(1.0), gen));
-        assert!(cache.get(&key(1)).is_none());
-        // a fresh snapshot inserts normally
-        let gen = cache.generation_of(&key(1));
-        assert!(cache.put_if_generation(key(1), value(2.0), gen));
-        assert_eq!(cache.get(&key(1)).unwrap().ranked[0].1, 2.0);
+    fn colliding_keys_probe_past_each_other() {
+        // minimum-size table + enough keys guarantees home collisions
+        let memo = FixedMemo::new(64);
+        for i in 0..48 {
+            memo.insert(key(i), value(i as f64));
+        }
+        for i in 0..48 {
+            if let Some(v) = memo.get(&key(i)) {
+                assert_eq!(v.ranked[0].1, i as f64, "memo returned a different key's answer");
+            }
+        }
+        assert!(memo.len() >= 40, "most of 48 inserts into 64 slots should land");
     }
 
     #[test]
-    fn shard_placement_is_stable() {
-        let cache = ShardedLru::new(16, 256);
+    fn full_probe_window_declines_gracefully() {
+        let memo = FixedMemo::new(64);
+        let mut declined = 0;
+        for i in 0..600 {
+            if !memo.insert(key(i), value(i as f64)) {
+                declined += 1;
+            }
+        }
+        // 600 inserts into 64 slots: most decline, none panic, and every
+        // memoized answer is still keyed correctly
+        assert!(declined >= 600 - 64);
+        assert!(memo.len() <= 64);
+        for i in 0..600 {
+            if let Some(v) = memo.get(&key(i)) {
+                assert_eq!(v.ranked[0].1, i as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn placement_is_stable() {
+        let memo = FixedMemo::new(256);
         for i in 0..100 {
-            assert_eq!(cache.shard_of(&key(i)), cache.shard_of(&key(i)));
+            assert_eq!(memo.home(&key(i)), memo.home(&key(i)));
         }
-        // keys spread over more than one shard
-        let shards: std::collections::BTreeSet<usize> = (0..100).map(|i| cache.shard_of(&key(i))).collect();
-        assert!(shards.len() > 1);
+        let homes: std::collections::BTreeSet<usize> = (0..100).map(|i| memo.home(&key(i))).collect();
+        assert!(homes.len() > 1, "keys spread over more than one home slot");
     }
 
     #[test]
-    fn capacity_bounds_total_size() {
-        let cache = ShardedLru::new(4, 16);
-        for i in 0..200 {
-            cache.put(key(i), value(i as f64));
-        }
-        assert!(cache.len() <= 16 + 3, "len {} exceeds budget (+ rounding slack)", cache.len());
+    fn concurrent_same_key_inserts_agree() {
+        let memo = FixedMemo::new(256);
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    for i in 0..64 {
+                        assert!(memo.insert(key(i), value(i as f64)));
+                        assert_eq!(memo.get(&key(i)).unwrap().ranked[0].1, i as f64);
+                    }
+                });
+            }
+        });
+        assert_eq!(memo.len(), 64);
+    }
+
+    #[test]
+    fn stats_arithmetic() {
+        let stats = CacheStats { hits: 3, misses: 1 };
+        assert!((stats.hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(CacheStats::default().hit_rate(), 0.0);
+        assert_eq!(stats.since(&CacheStats { hits: 1, misses: 0 }), CacheStats { hits: 2, misses: 1 });
     }
 }

@@ -5,6 +5,7 @@
 //! pipeline, Section 3), and report which size band of a compiled surface
 //! is now stale so only those cells are recompiled.
 
+use super::surface::DecisionSurface;
 use crate::comm::{Loc, Phase, Schedule, Xfer};
 use crate::params::fit::{fit_protocol_bands, Sample};
 use crate::params::MachineParams;
@@ -28,6 +29,18 @@ pub struct CalibrationReport {
     /// bands — the cells a surface should mark stale.
     pub stale_lo: usize,
     pub stale_hi: usize,
+}
+
+impl CalibrationReport {
+    /// Apply this refit to a compiled surface, out of place: returns a
+    /// fresh surface with the stale size band recompiled against the refit
+    /// parameters, plus the recompiled cell count. The serving layer
+    /// compiles the result into the tenant's next published snapshot
+    /// ([`crate::advisor::AdvisorService::recalibrate`]); `surface` itself
+    /// keeps its bits for in-flight readers.
+    pub fn rebuild(&self, surface: &DecisionSurface) -> Result<(DecisionSurface, usize), String> {
+        surface.recalibrated(&self.params, self.stale_lo, self.stale_hi)
+    }
 }
 
 /// Accumulates measured off-node samples and refits the postal model.
@@ -161,6 +174,32 @@ mod tests {
             let ab = report.params.cpu_ab(proto, Locality::OffNode);
             assert!(ab.alpha >= 0.0 && ab.beta >= 0.0 && ab.alpha.is_finite() && ab.beta.is_finite());
         }
+    }
+
+    #[test]
+    fn rebuild_applies_refit_to_a_surface_out_of_place() {
+        use crate::advisor::SurfaceAxes;
+        let base = lassen_params();
+        let truth_ab = base.cpu_ab(Protocol::Eager, Locality::OffNode);
+        let mut cal = Calibrator::new(base);
+        for exp in 9..13 {
+            let bytes = 1usize << exp;
+            cal.ingest(bytes, 2.0 * truth_ab.time(bytes));
+        }
+        let report = cal.refit().unwrap();
+        let axes = SurfaceAxes {
+            msgs: vec![64, 256],
+            sizes: vec![256, 1024, 4096, 1 << 18],
+            dest_nodes: vec![4, 16],
+            gpus_per_node: vec![4],
+        };
+        let surface = DecisionSurface::compile("lassen", axes, 0.0).unwrap();
+        let before = surface.clone();
+        let (next, recompiled) = report.rebuild(&surface).unwrap();
+        assert!(recompiled > 0, "the eager band covers lattice sizes 1024 and 4096");
+        assert_eq!(surface, before, "rebuild must not touch the base surface");
+        assert_ne!(next, surface, "refit parameters must move the stale band");
+        assert_eq!(next.stale_count(), 0, "the rebuilt surface ships fully compiled");
     }
 
     #[test]

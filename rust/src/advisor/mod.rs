@@ -9,14 +9,18 @@
 //!   exact crossover boundaries;
 //! - [`persist`] — versioned JSON artifacts (`hetcomm.surface.v1` for
 //!   single-rail shapes, `hetcomm.surface.v2` with the `nics` shape key for
-//!   multi-rail machines) that round-trip surfaces bit for bit;
-//! - [`cache`] — a sharded LRU so repeated queries cost a probe instead of
-//!   a model evaluation;
-//! - [`service`] — thread-pooled batched `advise` queries and the seeded
-//!   deterministic burst benchmark;
+//!   multi-rail machines, compact quantized `hetcomm.surface.v3`) that
+//!   round-trip surfaces bit for bit;
+//! - [`snapshot`] — the immutable compiled-surface snapshot the read path
+//!   serves from: precomputed lattice answers plus a pre-warmed memo;
+//! - [`cache`] — the per-snapshot write-once memo table, so repeated
+//!   queries cost a lock-free probe instead of a model evaluation;
+//! - [`service`] — the multi-tenant snapshot front end: lock-free
+//!   `advise` reads, batched grouped interpolation, per-tenant
+//!   recalibration publishes, and the seeded deterministic burst benchmark;
 //! - [`calibrate`] — measurement-driven recalibration: ingest observed
-//!   timings, refit α/β via [`crate::params::fit`], mark stale surface
-//!   cells for lazy recompile.
+//!   timings, refit α/β via [`crate::params::fit`], rebuild the refit size
+//!   band of a surface for the next published snapshot.
 //!
 //! Exposed on the CLI as `hetcomm advise` (`--compile`, `--query`,
 //! `--bench-burst`, `--recalibrate`); `hetcomm sweep --emit-surface` writes
@@ -28,9 +32,11 @@ pub mod cache;
 pub mod calibrate;
 pub mod persist;
 pub mod service;
+pub mod snapshot;
 pub mod surface;
 
-pub use cache::{CacheKey, CacheStats, ShardedLru};
+pub use cache::{CacheKey, CacheStats, FixedMemo};
 pub use calibrate::{CalibrationReport, Calibrator};
 pub use service::{AdvisorService, BurstReport, Query};
+pub use snapshot::SurfaceSnapshot;
 pub use surface::{DecisionSurface, Pattern, RankedStrategies, SurfaceAxes, SurfaceCrossover};

@@ -8,15 +8,23 @@
 //! ([`crate::util::json`]) followed by schema-checked extraction (unknown
 //! schema versions are rejected, not guessed at).
 //!
-//! Two schema versions coexist (docs/FORMATS.md):
+//! Three schema versions coexist (docs/FORMATS.md):
 //!
 //! - `hetcomm.surface.v1` — the shape-less layout. *Written* for
 //!   single-rail surfaces (`nics == 1`), keeping their bytes identical to
 //!   the pre-shape-layer writer; *read* as `nics = 1`.
 //! - `hetcomm.surface.v2` — v1 plus the `nics` shape key. Written for
 //!   multi-rail surfaces; read verbatim.
+//! - `hetcomm.surface.v3` — the compact quantized layout (`hetcomm advise
+//!   --compile --quant`): per-cell fastest-first strategy ids packed as hex
+//!   nibbles, per-cell times as one full bit pattern plus ascending hex
+//!   bit-pattern deltas, and the crossover boundary table. Lossless — a v3
+//!   artifact decodes to the bit-identical surface its v1/v2 sibling
+//!   round-trips — and self-checking on load: the rank nibbles must be the
+//!   stable argsort of the decoded times, and the boundary table must match
+//!   the crossovers recomputed from the decoded cells.
 
-use super::surface::{DecisionSurface, SurfaceAxes};
+use super::surface::{cell_ranking, DecisionSurface, SurfaceAxes};
 use crate::comm::Strategy;
 use crate::sweep::emit::esc;
 use crate::util::json::{fmt_f64 as num, fmt_usize_list as usize_list, Json};
@@ -27,6 +35,9 @@ pub const SCHEMA: &str = "hetcomm.surface.v1";
 
 /// Artifact schema identifier of shape-keyed (multi-rail) surfaces.
 pub const SCHEMA_V2: &str = "hetcomm.surface.v2";
+
+/// Artifact schema identifier of compact quantized surfaces.
+pub const SCHEMA_V3: &str = "hetcomm.surface.v3";
 
 /// Serialize a surface as a versioned JSON artifact. Stale flags are not
 /// persisted: an artifact is always written fresh (recompile before save).
@@ -68,40 +79,118 @@ pub fn save(surface: &DecisionSurface, path: &str) -> Result<(), String> {
     std::fs::write(path, to_json(surface)).map_err(|e| format!("cannot write {path}: {e}"))
 }
 
+/// Index of a strategy inside the artifact's `strategies` table.
+fn strategy_id(surface: &DecisionSurface, s: crate::comm::Strategy) -> usize {
+    surface.strategies.iter().position(|&x| x == s).expect("crossover strategies come from the surface")
+}
+
+/// Serialize a surface as the compact quantized [`SCHEMA_V3`] artifact:
+/// axes and strategy labels as in v2 (the `nics` shape key is always
+/// explicit), then per cell a hex-nibble rank string (strategy ids,
+/// fastest first) and a time string — the fastest time's full 16-hex f64
+/// bit pattern followed by `.`-joined hex bit-pattern deltas up the
+/// ranking (positive finite doubles order identically to their bit
+/// patterns, so the deltas are non-negative and shorter than decimal
+/// re-prints) — plus the crossover boundary table with integer strategy
+/// ids. Lossless: parsing reproduces the surface bit for bit.
+pub fn to_json_quant(surface: &DecisionSurface) -> Result<String, String> {
+    if surface.strategies.len() > 16 {
+        return Err(format!(
+            "v3 packs strategy ids as hex nibbles; {} strategies exceed 16",
+            surface.strategies.len()
+        ));
+    }
+    let rankings: Vec<Vec<u8>> = surface.cells.iter().map(|cell| cell_ranking(cell)).collect();
+    let mut out = String::new();
+    out.push_str("{\n");
+    let _ = writeln!(out, "  \"schema\": \"{SCHEMA_V3}\",");
+    let _ = writeln!(out, "  \"machine\": \"{}\",", esc(&surface.machine));
+    let _ = writeln!(out, "  \"nics\": {},", surface.nics);
+    let _ = writeln!(out, "  \"dup_frac\": {},", num(surface.dup_frac));
+    out.push_str("  \"axes\": {\n");
+    let _ = writeln!(out, "    \"msgs\": {},", usize_list(&surface.axes.msgs));
+    let _ = writeln!(out, "    \"sizes\": {},", usize_list(&surface.axes.sizes));
+    let _ = writeln!(out, "    \"dest_nodes\": {},", usize_list(&surface.axes.dest_nodes));
+    let _ = writeln!(out, "    \"gpus_per_node\": {}", usize_list(&surface.axes.gpus_per_node));
+    out.push_str("  },\n");
+    let strategies: Vec<String> = surface.strategies.iter().map(|s| format!("\"{}\"", esc(&s.label()))).collect();
+    let _ = writeln!(out, "  \"strategies\": [{}],", strategies.join(", "));
+    out.push_str("  \"ranks\": [\n");
+    for (i, order) in rankings.iter().enumerate() {
+        let nibbles: String =
+            order.iter().map(|&k| char::from_digit(k as u32, 16).expect("ids fit a nibble")).collect();
+        let comma = if i + 1 < rankings.len() { "," } else { "" };
+        let _ = writeln!(out, "    \"{nibbles}\"{comma}");
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"cells\": [\n");
+    for (i, (cell, order)) in surface.cells.iter().zip(&rankings).enumerate() {
+        let bits: Vec<u64> = order.iter().map(|&k| cell[k as usize].to_bits()).collect();
+        let mut packed = format!("{:016x}", bits[0]);
+        for w in bits.windows(2) {
+            let delta = w[1]
+                .checked_sub(w[0])
+                .ok_or_else(|| format!("cell {i}: times are not positive-ascending under their ranking"))?;
+            let _ = write!(packed, ".{delta:x}");
+        }
+        let comma = if i + 1 < surface.cells.len() { "," } else { "" };
+        let _ = writeln!(out, "    \"{packed}\"{comma}");
+    }
+    out.push_str("  ],\n");
+    let crossings = surface.crossovers();
+    if crossings.is_empty() {
+        out.push_str("  \"boundaries\": []\n");
+    } else {
+        out.push_str("  \"boundaries\": [\n");
+        for (i, x) in crossings.iter().enumerate() {
+            let comma = if i + 1 < crossings.len() { "," } else { "" };
+            let _ = writeln!(
+                out,
+                "    [{}, {}, {}, {}, {}, {}, {}, {}]{comma}",
+                x.n_msgs,
+                x.dest_nodes,
+                x.gpus_per_node,
+                x.size_before,
+                x.size_after,
+                strategy_id(surface, x.from),
+                strategy_id(surface, x.to),
+                num(x.size_exact)
+            );
+        }
+        out.push_str("  ]\n");
+    }
+    out.push_str("}\n");
+    Ok(out)
+}
+
+/// Write a quantized v3 artifact to disk.
+pub fn save_quant(surface: &DecisionSurface, path: &str) -> Result<(), String> {
+    std::fs::write(path, to_json_quant(surface)?).map_err(|e| format!("cannot write {path}: {e}"))
+}
+
 /// Load and validate an artifact from disk.
 pub fn load(path: &str) -> Result<DecisionSurface, String> {
     let text = std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
     parse_json(&text)
 }
 
-/// Parse and validate an artifact (either schema version; see the module
-/// docs for the v1 read-compat rule).
+/// Parse and validate an artifact (any schema version; see the module
+/// docs for the v1 read-compat rule and the v3 self-checks).
 pub fn parse_json(text: &str) -> Result<DecisionSurface, String> {
     let value = Json::parse(text)?;
     let schema = value.field("schema")?.as_str()?;
     let nics = match schema {
         s if s == SCHEMA => 1, // v1 read-compat: shape-less means single-rail
         s if s == SCHEMA_V2 => value.field("nics")?.as_usize()?,
+        s if s == SCHEMA_V3 => return parse_v3(&value),
         other => {
-            return Err(format!("unsupported surface schema {other:?} (expected {SCHEMA:?} or {SCHEMA_V2:?})"))
+            return Err(format!(
+                "unsupported surface schema {other:?} (expected {SCHEMA:?}, {SCHEMA_V2:?}, or {SCHEMA_V3:?})"
+            ))
         }
     };
-    let axes = value.field("axes")?;
-    let axes = SurfaceAxes {
-        msgs: axes.field("msgs")?.as_usize_list()?,
-        sizes: axes.field("sizes")?.as_usize_list()?,
-        dest_nodes: axes.field("dest_nodes")?.as_usize_list()?,
-        gpus_per_node: axes.field("gpus_per_node")?.as_usize_list()?,
-    };
-    let strategies = value
-        .field("strategies")?
-        .as_arr()?
-        .iter()
-        .map(|s| {
-            let label = s.as_str()?;
-            Strategy::parse_label(label).ok_or_else(|| format!("unknown strategy label {label:?}"))
-        })
-        .collect::<Result<Vec<Strategy>, String>>()?;
+    let axes = parse_axes(&value)?;
+    let strategies = parse_strategies(&value)?;
     let cells = value
         .field("cells")?
         .as_arr()?
@@ -120,6 +209,159 @@ pub fn parse_json(text: &str) -> Result<DecisionSurface, String> {
     };
     surface.validate()?;
     Ok(surface)
+}
+
+fn parse_axes(value: &Json) -> Result<SurfaceAxes, String> {
+    let axes = value.field("axes")?;
+    Ok(SurfaceAxes {
+        msgs: axes.field("msgs")?.as_usize_list()?,
+        sizes: axes.field("sizes")?.as_usize_list()?,
+        dest_nodes: axes.field("dest_nodes")?.as_usize_list()?,
+        gpus_per_node: axes.field("gpus_per_node")?.as_usize_list()?,
+    })
+}
+
+fn parse_strategies(value: &Json) -> Result<Vec<Strategy>, String> {
+    value
+        .field("strategies")?
+        .as_arr()?
+        .iter()
+        .map(|s| {
+            let label = s.as_str()?;
+            Strategy::parse_label(label).ok_or_else(|| format!("unknown strategy label {label:?}"))
+        })
+        .collect()
+}
+
+/// Decode one v3 rank string: `n` hex nibbles forming a permutation of the
+/// strategy ids `0..n`.
+fn decode_ranks(s: &str, n: usize) -> Result<Vec<u8>, String> {
+    if s.len() != n {
+        return Err(format!("rank string {s:?} must hold {n} nibbles"));
+    }
+    let mut seen = [false; 16];
+    let mut order = Vec::with_capacity(n);
+    for ch in s.chars() {
+        let k = ch.to_digit(16).ok_or_else(|| format!("invalid rank nibble {ch:?}"))? as usize;
+        if k >= n {
+            return Err(format!("rank id {k} out of range (artifact has {n} strategies)"));
+        }
+        if seen[k] {
+            return Err(format!("duplicate rank id {k}"));
+        }
+        seen[k] = true;
+        order.push(k as u8);
+    }
+    Ok(order)
+}
+
+/// Decode one v3 cell string: the base 16-hex f64 bit pattern plus hex
+/// bit-pattern deltas, back into `n` ranked-ascending times.
+fn decode_times(s: &str, n: usize) -> Result<Vec<f64>, String> {
+    let mut parts = s.split('.');
+    let base = parts.next().expect("split yields at least one part");
+    if base.len() != 16 {
+        return Err(format!("base bit pattern {base:?} must be 16 hex digits"));
+    }
+    let mut bits = u64::from_str_radix(base, 16).map_err(|e| format!("bad base bit pattern {base:?}: {e}"))?;
+    let mut times = Vec::with_capacity(n);
+    times.push(f64::from_bits(bits));
+    for d in parts {
+        let delta = u64::from_str_radix(d, 16).map_err(|e| format!("bad bit delta {d:?}: {e}"))?;
+        bits = bits.checked_add(delta).ok_or_else(|| format!("bit delta {d:?} overflows"))?;
+        times.push(f64::from_bits(bits));
+    }
+    if times.len() != n {
+        return Err(format!("cell holds {} times, artifact has {n} strategies", times.len()));
+    }
+    Ok(times)
+}
+
+/// The v3 read path: decode ranks and delta-packed times back into cells,
+/// then self-check — the rank nibbles must be the stable argsort of the
+/// decoded times, and the boundary table must match the crossovers
+/// recomputed from the decoded cells (the same trust-but-verify pattern
+/// `hetcomm.trace.v1` uses for its metadata).
+fn parse_v3(value: &Json) -> Result<DecisionSurface, String> {
+    let axes = parse_axes(value)?;
+    let strategies = parse_strategies(value)?;
+    if strategies.len() > 16 {
+        return Err(format!("v3 packs strategy ids as hex nibbles; {} strategies exceed 16", strategies.len()));
+    }
+    let n = strategies.len();
+    let ranks_raw = value.field("ranks")?.as_arr()?;
+    let cells_raw = value.field("cells")?.as_arr()?;
+    if ranks_raw.len() != cells_raw.len() {
+        return Err(format!("v3 artifact has {} rank rows but {} cell rows", ranks_raw.len(), cells_raw.len()));
+    }
+    let mut cells = Vec::with_capacity(cells_raw.len());
+    let mut rankings = Vec::with_capacity(cells_raw.len());
+    for (i, (r, c)) in ranks_raw.iter().zip(cells_raw).enumerate() {
+        let order = decode_ranks(r.as_str()?, n).map_err(|e| format!("v3 cell {i}: {e}"))?;
+        let ranked_times = decode_times(c.as_str()?, n).map_err(|e| format!("v3 cell {i}: {e}"))?;
+        let mut times = vec![0f64; n];
+        for (pos, &k) in order.iter().enumerate() {
+            times[k as usize] = ranked_times[pos];
+        }
+        rankings.push(order);
+        cells.push(times);
+    }
+    let stale = vec![false; cells.len()];
+    let surface = DecisionSurface {
+        machine: value.field("machine")?.as_str()?.to_string(),
+        nics: value.field("nics")?.as_usize()?,
+        dup_frac: value.field("dup_frac")?.as_f64()?,
+        axes,
+        strategies,
+        cells,
+        stale,
+    };
+    surface.validate()?;
+    for (i, (cell, order)) in surface.cells.iter().zip(&rankings).enumerate() {
+        if &cell_ranking(cell) != order {
+            return Err(format!("v3 cell {i}: rank nibbles disagree with the decoded times"));
+        }
+    }
+    check_boundaries(&surface, value.field("boundaries")?.as_arr()?)?;
+    Ok(surface)
+}
+
+/// Verify a v3 boundary table against the crossovers of the decoded cells.
+fn check_boundaries(surface: &DecisionSurface, rows: &[Json]) -> Result<(), String> {
+    let expect = surface.crossovers();
+    if rows.len() != expect.len() {
+        return Err(format!("v3 boundary table has {} rows, decoded cells imply {}", rows.len(), expect.len()));
+    }
+    for (i, (row, x)) in rows.iter().zip(&expect).enumerate() {
+        let row = row.as_arr()?;
+        if row.len() != 8 {
+            return Err(format!("v3 boundary row {i} has {} fields, expected 8", row.len()));
+        }
+        let mut ints = [0usize; 7];
+        for (slot, field) in ints.iter_mut().zip(row) {
+            *slot = field.as_usize()?;
+        }
+        let from = *surface
+            .strategies
+            .get(ints[5])
+            .ok_or_else(|| format!("v3 boundary row {i}: strategy id {} out of range", ints[5]))?;
+        let to = *surface
+            .strategies
+            .get(ints[6])
+            .ok_or_else(|| format!("v3 boundary row {i}: strategy id {} out of range", ints[6]))?;
+        let matches = ints[0] == x.n_msgs
+            && ints[1] == x.dest_nodes
+            && ints[2] == x.gpus_per_node
+            && ints[3] == x.size_before
+            && ints[4] == x.size_after
+            && from == x.from
+            && to == x.to
+            && row[7].as_f64()?.to_bits() == x.size_exact.to_bits();
+        if !matches {
+            return Err(format!("v3 boundary row {i} disagrees with the crossovers of the decoded cells"));
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -199,6 +441,95 @@ mod tests {
         let surface = DecisionSurface::compile_shaped("lassen", 2, tiny_axes(), 0.0).unwrap();
         let json = to_json(&surface).replace("  \"nics\": 2,\n", "");
         assert!(parse_json(&json).is_err());
+    }
+
+    #[test]
+    fn v3_roundtrips_bit_for_bit() {
+        let surface = tiny_surface();
+        let quant = to_json_quant(&surface).unwrap();
+        assert!(quant.contains("\"schema\": \"hetcomm.surface.v3\""));
+        let parsed = parse_json(&quant).unwrap();
+        assert_eq!(surface, parsed);
+        // quantized serialization is stable too
+        assert_eq!(quant, to_json_quant(&parsed).unwrap());
+    }
+
+    #[test]
+    fn v3_is_losslessly_interchangeable_with_v2() {
+        for (machine, nics) in [("lassen", 4usize), ("frontier-4nic", 0)] {
+            let surface = DecisionSurface::compile_shaped(machine, nics, tiny_axes(), 0.0).unwrap();
+            let v2 = to_json(&surface);
+            let quant = to_json_quant(&surface).unwrap();
+            // v2 -> v3 -> v2 reproduces the exact v2 bytes
+            let from_quant = parse_json(&quant).unwrap();
+            assert_eq!(from_quant, parse_json(&v2).unwrap(), "{machine}");
+            assert_eq!(to_json(&from_quant), v2, "{machine}: v3 must round-trip to identical v2 bytes");
+        }
+    }
+
+    #[test]
+    fn v3_always_carries_the_shape_key() {
+        // unlike the v1 writer, v3 is explicit even for single-rail shapes
+        let quant = to_json_quant(&tiny_surface()).unwrap();
+        assert!(quant.contains("\"nics\": 1"));
+        let pinned = DecisionSurface::compile("frontier-4nic", tiny_axes(), 0.0).unwrap();
+        let quant = to_json_quant(&pinned).unwrap();
+        assert!(quant.contains("\"nics\": 4"));
+        assert_eq!(parse_json(&quant).unwrap().nics, 4);
+    }
+
+    #[test]
+    fn v3_is_more_compact_than_v2() {
+        let surface = DecisionSurface::compile("lassen", SurfaceAxes::default_axes(), 0.0).unwrap();
+        let v2 = to_json(&surface);
+        let quant = to_json_quant(&surface).unwrap();
+        assert!(
+            quant.len() < v2.len(),
+            "quantized artifact ({} B) must undercut the decimal one ({} B)",
+            quant.len(),
+            v2.len()
+        );
+    }
+
+    #[test]
+    fn v3_save_load_roundtrip() {
+        let surface = tiny_surface();
+        let path = std::env::temp_dir().join("hetcomm-surface-v3-test.json");
+        let path = path.to_str().unwrap();
+        save_quant(&surface, path).unwrap();
+        let loaded = load(path).unwrap();
+        assert_eq!(surface, loaded);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn v3_self_checks_reject_tampering() {
+        let surface = DecisionSurface::compile("lassen", tiny_axes(), 0.0).unwrap();
+        assert!(!surface.crossovers().is_empty(), "precondition: the 16-node line flips winners");
+        let quant = to_json_quant(&surface).unwrap();
+
+        // a duplicate rank nibble is structurally invalid
+        let marker = "\"ranks\": [\n    \"";
+        let at = quant.find(marker).unwrap() + marker.len();
+        let n = surface.strategies.len();
+        let bad_ranks = format!("{}{}{}", &quant[..at], "0".repeat(n), &quant[at + n..]);
+        assert!(parse_json(&bad_ranks).unwrap_err().contains("duplicate rank id"), "duplicate nibbles");
+
+        // zeroing a base bit pattern decodes to a non-positive time
+        let marker = "\"cells\": [\n    \"";
+        let at = quant.find(marker).unwrap() + marker.len();
+        let bad_cell = format!("{}{}{}", &quant[..at], "0".repeat(16), &quant[at + 16..]);
+        assert!(parse_json(&bad_cell).is_err(), "zeroed base bit pattern");
+
+        // an emptied boundary table no longer matches the decoded cells
+        let at = quant.find("  \"boundaries\":").unwrap();
+        let emptied = format!("{}  \"boundaries\": []\n}}\n", &quant[..at]);
+        assert!(parse_json(&emptied).unwrap_err().contains("boundary"), "emptied boundaries");
+
+        // the nibble guard refuses fleets of more than 16 strategies
+        let mut wide = surface.clone();
+        wide.strategies = [Strategy::all(), Strategy::all(), Strategy::all()].concat();
+        assert!(to_json_quant(&wide).unwrap_err().contains("exceed 16"));
     }
 
     #[test]

@@ -1,26 +1,42 @@
-//! The serving layer: cached, thread-pooled `advise` queries over compiled
-//! decision surfaces, plus the deterministic synthetic burst benchmark the
-//! CI uses to hold the cache to a hit-rate floor.
+//! The serving layer: lock-free snapshot reads over compiled decision
+//! surfaces, batched interpolation, and per-tenant recalibration that
+//! republishes one machine's snapshot without stalling the others.
 //!
-//! Answers are deterministic: a query resolves against an immutable surface
-//! and the cache only memoizes, so a seeded burst produces the same winner
-//! histogram at any thread count (only measured latencies vary).
+//! Each tenant — a `(machine, shape)` pair — owns one
+//! [`Published<SurfaceSnapshot>`] cell: the read path loads the current
+//! immutable snapshot (an atomic pin/validate, no locks, no inline
+//! recompiles) and answers from its memo or an interpolated lattice read.
+//! [`AdvisorService::recalibrate`] compiles a *fresh* snapshot off-path
+//! under a per-tenant rebuild lock and publishes it atomically; the old
+//! snapshot is retired once its last in-flight reader leaves, so a query
+//! always sees one coherent epoch end to end.
+//!
+//! Answers are deterministic: a query resolves against an immutable
+//! snapshot and the memo only memoizes, so a seeded burst produces the
+//! same winner histogram at any thread count (only measured latencies
+//! vary).
 
-use super::cache::{CacheKey, CacheStats, ShardedLru};
+use super::cache::CacheStats;
+use super::snapshot::SurfaceSnapshot;
 use super::surface::{DecisionSurface, Pattern, RankedStrategies};
 use crate::params::MachineParams;
 use crate::util::pool::{self, effective_threads};
+use crate::util::publish::Published;
 use crate::util::rng::Rng;
 use crate::util::stats::percentile_sorted;
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+/// Default memo capacity per snapshot (slots, rounded up to a power of 2).
+const DEFAULT_MEMO_CAPACITY: usize = 8192;
 
 /// One advise query: a pattern plus the surface (machine) it targets.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Query {
     pub pattern: Pattern,
-    /// Index into the service's surface list ([`AdvisorService::surface_index`]).
+    /// Index into the service's tenant list ([`AdvisorService::surface_index`]).
     pub surface: usize,
 }
 
@@ -31,7 +47,7 @@ pub struct BurstReport {
     /// Distinct patterns in the seeded pool.
     pub distinct: usize,
     pub threads: usize,
-    /// Cache counter deltas over the burst.
+    /// Memo counter deltas over the burst.
     pub cache: CacheStats,
     /// Winner label → count over the whole burst (seed-deterministic).
     pub winners: BTreeMap<&'static str, usize>,
@@ -41,60 +57,79 @@ pub struct BurstReport {
     pub elapsed_s: f64,
 }
 
-/// The advisor service: one surface per machine behind a shared cache.
+/// One served `(machine, shape)` surface and its publication machinery.
+struct Tenant {
+    name: String,
+    slot: Published<SurfaceSnapshot>,
+    /// Last published epoch; bumped under `rebuild` before each publish.
+    epoch: AtomicU64,
+    /// Serializes rebuilds of this tenant only — readers never take it,
+    /// and other tenants' rebuilds proceed concurrently.
+    rebuild: Mutex<()>,
+}
+
+/// The advisor service: a multi-tenant front end over published snapshots.
 pub struct AdvisorService {
-    surfaces: Vec<RwLock<DecisionSurface>>,
+    tenants: Vec<Tenant>,
     names: Vec<String>,
-    cache: ShardedLru,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    memo_capacity: usize,
 }
 
 impl AdvisorService {
-    /// Default cache geometry: 16 shards, 4096 answers total.
+    /// Serve `surfaces` with the default per-snapshot memo capacity.
     pub fn new(surfaces: Vec<DecisionSurface>) -> AdvisorService {
-        AdvisorService::with_cache(surfaces, ShardedLru::new(16, 4096))
+        AdvisorService::with_memo_capacity(surfaces, DEFAULT_MEMO_CAPACITY)
     }
 
-    pub fn with_cache(surfaces: Vec<DecisionSurface>, cache: ShardedLru) -> AdvisorService {
-        let names = surfaces.iter().map(|s| s.machine.clone()).collect();
-        AdvisorService { surfaces: surfaces.into_iter().map(RwLock::new).collect(), names, cache }
+    pub fn with_memo_capacity(surfaces: Vec<DecisionSurface>, memo_capacity: usize) -> AdvisorService {
+        let names: Vec<String> = surfaces.iter().map(|s| s.machine.clone()).collect();
+        let tenants = surfaces
+            .into_iter()
+            .map(|surface| Tenant {
+                name: surface.machine.clone(),
+                slot: Published::new(SurfaceSnapshot::compile(surface, 0, memo_capacity)),
+                epoch: AtomicU64::new(0),
+                rebuild: Mutex::new(()),
+            })
+            .collect();
+        AdvisorService { tenants, names, hits: AtomicU64::new(0), misses: AtomicU64::new(0), memo_capacity }
     }
 
-    /// Machines served, in surface order.
+    /// Machines served, in tenant order.
     pub fn machines(&self) -> &[String] {
         &self.names
     }
 
-    /// Index of a machine's surface.
+    /// Index of a machine's tenant.
     pub fn surface_index(&self, machine: &str) -> Option<usize> {
         self.names.iter().position(|n| n == machine)
     }
 
+    /// Service-lifetime memo hit/miss counters (across all tenants).
     pub fn cache_stats(&self) -> CacheStats {
-        self.cache.stats()
+        CacheStats { hits: self.hits.load(Ordering::Relaxed), misses: self.misses.load(Ordering::Relaxed) }
     }
 
-    /// Answer one query: a cache probe, falling back to an interpolated
-    /// surface lookup that is then memoized.
+    /// The tenant's current snapshot — a lock-free load; the returned
+    /// `Arc` stays coherent (one epoch) however long the caller holds it.
+    pub fn snapshot(&self, surface: usize) -> Result<Arc<SurfaceSnapshot>, String> {
+        self.tenants.get(surface).map(|t| t.slot.load()).ok_or_else(|| format!("no surface with index {surface}"))
+    }
+
+    /// Answer one query against the tenant's current snapshot: a memo
+    /// probe, falling back to an interpolated lattice read that is then
+    /// memoized. Never takes a lock, never recompiles inline.
     pub fn advise(&self, q: &Query) -> Result<Arc<RankedStrategies>, String> {
-        let key = CacheKey {
-            surface: q.surface,
-            n_msgs: q.pattern.n_msgs,
-            msg_size: q.pattern.msg_size,
-            dest_nodes: q.pattern.dest_nodes,
-            gpus_per_node: q.pattern.gpus_per_node,
-        };
-        if let Some(hit) = self.cache.get(&key) {
-            return Ok(hit);
+        let snapshot = self.snapshot(q.surface)?;
+        let (answer, hit) = snapshot.advise(&q.pattern);
+        if hit {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
         }
-        let generation = self.cache.generation_of(&key);
-        let surface = self.surfaces.get(q.surface).ok_or_else(|| format!("no surface with index {}", q.surface))?;
-        let value = Arc::new(surface.read().expect("surface lock poisoned").lookup(&q.pattern));
-        // Memoize generation-guarded: a recalibration that cleared the cache
-        // while this ranking was being computed bumps the shard generation
-        // (under the same lock), so the stale answer is dropped instead of
-        // being re-inserted — at worst one extra future miss.
-        self.cache.put_if_generation(key, Arc::clone(&value), generation);
-        Ok(value)
+        Ok(answer)
     }
 
     /// Convenience: advise against a machine by registry name.
@@ -104,34 +139,83 @@ impl AdvisorService {
         self.advise(&Query { pattern: *pattern, surface })
     }
 
-    /// Batched advise over the shared worker pool
-    /// ([`crate::util::pool::map`]); results come back in query order
-    /// regardless of thread scheduling.
+    /// Batched advise: queries are split into contiguous per-worker chunks
+    /// ([`crate::util::pool::map`]); each worker loads one snapshot per
+    /// tenant per chunk (so a chunk's answers are never torn across a
+    /// mid-batch publish), resolves memo hits, and sends the misses
+    /// through the grouped [`DecisionSurface::lookup_batch`] interpolator.
+    /// Results come back in query order and bit-identical to per-query
+    /// [`AdvisorService::advise`] calls.
     pub fn advise_batch(&self, queries: &[Query], threads: usize) -> Vec<Result<Arc<RankedStrategies>, String>> {
         let threads = effective_threads(threads, queries.len());
-        pool::map(queries.len(), threads, |i| self.advise(&queries[i]))
+        let chunk_size = queries.len().div_ceil(threads).max(1);
+        let chunks: Vec<&[Query]> = queries.chunks(chunk_size).collect();
+        pool::map(chunks.len(), threads, |ci| self.advise_chunk(chunks[ci])).into_iter().flatten().collect()
     }
 
-    /// Apply a recalibration to one machine's surface: mark the refit size
-    /// band stale, recompile those cells against the refit parameters, and
-    /// drop every cached answer. Returns the recompiled cell count.
+    fn advise_chunk(&self, chunk: &[Query]) -> Vec<Result<Arc<RankedStrategies>, String>> {
+        let mut out: Vec<Option<Result<Arc<RankedStrategies>, String>>> = Vec::with_capacity(chunk.len());
+        out.resize_with(chunk.len(), || None);
+        let mut by_tenant: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (i, q) in chunk.iter().enumerate() {
+            if q.surface < self.tenants.len() {
+                by_tenant.entry(q.surface).or_default().push(i);
+            } else {
+                out[i] = Some(Err(format!("no surface with index {}", q.surface)));
+            }
+        }
+        for (tenant, idxs) in by_tenant {
+            let snapshot = self.tenants[tenant].slot.load();
+            let mut miss_at: Vec<usize> = Vec::new();
+            let mut miss_patterns: Vec<Pattern> = Vec::new();
+            for &i in &idxs {
+                match snapshot.probe(&chunk[i].pattern) {
+                    Some(hit) => {
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        out[i] = Some(Ok(hit));
+                    }
+                    None => {
+                        miss_at.push(i);
+                        miss_patterns.push(chunk[i].pattern);
+                    }
+                }
+            }
+            if !miss_patterns.is_empty() {
+                self.misses.fetch_add(miss_patterns.len() as u64, Ordering::Relaxed);
+                for (&i, answer) in miss_at.iter().zip(snapshot.surface.lookup_batch(&miss_patterns)) {
+                    let answer = Arc::new(answer);
+                    snapshot.memoize(&chunk[i].pattern, Arc::clone(&answer));
+                    out[i] = Some(Ok(answer));
+                }
+            }
+        }
+        out.into_iter().map(|r| r.expect("every query answered")).collect()
+    }
+
+    /// Apply a recalibration to one tenant: compile a fresh surface with
+    /// the refit size band re-derived from `params` (off-path — readers
+    /// keep answering from the current snapshot) and publish it as the
+    /// next epoch. Other tenants are untouched and never stall. Returns
+    /// the recompiled cell count.
     pub fn recalibrate(&self, machine: &str, params: &MachineParams, lo: usize, hi: usize) -> Result<usize, String> {
         let idx =
             self.surface_index(machine).ok_or_else(|| format!("no surface compiled for machine {machine:?}"))?;
-        let mut surface = self.surfaces[idx].write().expect("surface lock poisoned");
-        surface.mark_stale_sizes(lo, hi);
-        let recompiled = surface.recompile_stale(params)?;
-        // clear() also advances the cache generations, which invalidates any
-        // advise still computing from the pre-recalibration surface.
-        self.cache.clear();
+        let tenant = &self.tenants[idx];
+        let _rebuild = tenant.rebuild.lock().expect("rebuild lock poisoned");
+        let base = tenant.slot.load();
+        let (next, recompiled) = base.surface.recalibrated(params, lo, hi)?;
+        let epoch = tenant.epoch.load(Ordering::Relaxed) + 1;
+        tenant.epoch.store(epoch, Ordering::Relaxed);
+        tenant.slot.publish(SurfaceSnapshot::compile(next, epoch, self.memo_capacity));
         Ok(recompiled)
     }
 
-    /// One seeded query over the service's surfaces: axis-interior values
+    /// One seeded query over the service's tenants: axis-interior values
     /// (log-uniform) so interpolation paths are exercised too.
     fn random_query(&self, rng: &mut Rng) -> Query {
-        let surface_idx = rng.usize_in(0, self.surfaces.len());
-        let s = self.surfaces[surface_idx].read().expect("surface lock poisoned");
+        let surface = rng.usize_in(0, self.tenants.len());
+        let snapshot = self.tenants[surface].slot.load();
+        let axes = &snapshot.surface.axes;
         let span = |rng: &mut Rng, axis: &[usize]| -> usize {
             let lo = *axis.first().expect("validated axis");
             let hi = *axis.last().expect("validated axis");
@@ -142,29 +226,45 @@ impl AdvisorService {
             (x.exp2().round() as usize).clamp(lo, hi)
         };
         let pattern = Pattern {
-            n_msgs: span(rng, &s.axes.msgs),
-            msg_size: span(rng, &s.axes.sizes),
-            dest_nodes: s.axes.dest_nodes[rng.usize_in(0, s.axes.dest_nodes.len())],
-            gpus_per_node: s.axes.gpus_per_node[rng.usize_in(0, s.axes.gpus_per_node.len())],
+            n_msgs: span(rng, &axes.msgs),
+            msg_size: span(rng, &axes.sizes),
+            dest_nodes: axes.dest_nodes[rng.usize_in(0, axes.dest_nodes.len())],
+            gpus_per_node: axes.gpus_per_node[rng.usize_in(0, axes.gpus_per_node.len())],
         };
-        Query { pattern, surface: surface_idx }
+        Query { pattern, surface }
     }
 
-    /// Deterministic synthetic burst: `n` seeded queries drawn from a small
-    /// pool of distinct patterns (so steady-state traffic repeats, as real
-    /// callers do), answered through the cache over `threads` workers.
-    pub fn bench_burst(&self, n: usize, seed: u64, threads: usize) -> Result<BurstReport, String> {
-        if self.surfaces.is_empty() {
-            return Err("no surfaces loaded".into());
-        }
+    /// The seeded steady-state burst workload: `n` queries drawn from a
+    /// small pool of distinct patterns (so traffic repeats, as real
+    /// callers do). Returns the queries and the pool size.
+    pub fn seeded_pool_queries(&self, n: usize, seed: u64) -> (Vec<Query>, usize) {
         let n = n.max(1);
         let distinct = (n / 16).clamp(1, 1024);
         let mut rng = Rng::new(seed);
         let pool: Vec<Query> = (0..distinct).map(|_| self.random_query(&mut rng)).collect();
-        let queries: Vec<Query> = (0..n).map(|_| pool[rng.usize_in(0, pool.len())]).collect();
+        ((0..n).map(|_| pool[rng.usize_in(0, pool.len())]).collect(), distinct)
+    }
+
+    /// A seeded distinct-heavy workload: every query drawn fresh, no
+    /// repeat pool — the all-miss reference the perf harness uses to
+    /// price uncached interpolation.
+    pub fn seeded_queries(&self, n: usize, seed: u64) -> Vec<Query> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| self.random_query(&mut rng)).collect()
+    }
+
+    /// Deterministic synthetic burst: the [`AdvisorService::seeded_pool_queries`]
+    /// workload answered through the snapshot read path over `threads`
+    /// workers, with per-query latencies and the winner histogram.
+    pub fn bench_burst(&self, n: usize, seed: u64, threads: usize) -> Result<BurstReport, String> {
+        if self.tenants.is_empty() {
+            return Err("no surfaces loaded".into());
+        }
+        let (queries, distinct) = self.seeded_pool_queries(n, seed);
+        let n = queries.len();
 
         let threads = effective_threads(threads, n);
-        let stats_before = self.cache.stats();
+        let stats_before = self.cache_stats();
         let histogram = Mutex::new(BTreeMap::<&'static str, usize>::new());
         let latencies = Mutex::new(Vec::with_capacity(n));
         let histogram_ref = &histogram;
@@ -197,7 +297,7 @@ impl AdvisorService {
             queries: n,
             distinct,
             threads,
-            cache: self.cache.stats().since(&stats_before),
+            cache: self.cache_stats().since(&stats_before),
             winners: histogram.into_inner().expect("burst histogram poisoned"),
             p50_s: percentile_sorted(&latencies, 50.0),
             p99_s: percentile_sorted(&latencies, 99.0),
@@ -210,15 +310,19 @@ impl AdvisorService {
 mod tests {
     use super::*;
     use crate::advisor::surface::SurfaceAxes;
+    use crate::topology::machines;
 
-    fn tiny_service() -> AdvisorService {
-        let axes = SurfaceAxes {
+    fn tiny_axes() -> SurfaceAxes {
+        SurfaceAxes {
             msgs: vec![64, 256],
             sizes: vec![256, 4096, 1 << 18],
             dest_nodes: vec![4, 16],
             gpus_per_node: vec![4],
-        };
-        AdvisorService::new(vec![DecisionSurface::compile("lassen", axes, 0.0).unwrap()])
+        }
+    }
+
+    fn tiny_service() -> AdvisorService {
+        AdvisorService::new(vec![DecisionSurface::compile("lassen", tiny_axes(), 0.0).unwrap()])
     }
 
     fn q(n_msgs: usize, msg_size: usize) -> Query {
@@ -226,14 +330,25 @@ mod tests {
     }
 
     #[test]
-    fn advise_caches_repeat_queries() {
+    fn advise_memoizes_repeat_queries() {
         let svc = tiny_service();
+        // off-lattice: size 1024 sits between lattice sizes 256 and 4096,
+        // so the first touch misses even on the pre-warmed memo
         let a = svc.advise(&q(256, 1024)).unwrap();
         let b = svc.advise(&q(256, 1024)).unwrap();
         assert_eq!(*a, *b);
         let stats = svc.cache_stats();
         assert_eq!((stats.hits, stats.misses), (1, 1));
         assert!(svc.advise(&Query { surface: 9, ..q(256, 1024) }).is_err());
+    }
+
+    #[test]
+    fn prewarmed_lattice_points_hit_on_first_touch() {
+        let svc = tiny_service();
+        let before = svc.cache_stats();
+        svc.advise(&q(256, 4096)).unwrap(); // exact lattice point
+        let after = svc.cache_stats();
+        assert_eq!((after.hits - before.hits, after.misses - before.misses), (1, 0));
     }
 
     #[test]
@@ -246,19 +361,31 @@ mod tests {
     }
 
     #[test]
-    fn batch_preserves_query_order() {
+    fn batch_preserves_query_order_and_matches_single() {
         let svc = tiny_service();
         let queries: Vec<Query> = (0..64).map(|i| q(64 + (i % 8) * 16, 256 << (i % 4))).collect();
         let serial = svc.advise_batch(&queries, 1);
         let parallel = svc.advise_batch(&queries, 4);
         assert_eq!(serial.len(), queries.len());
-        for (a, b) in serial.iter().zip(&parallel) {
-            assert_eq!(a.as_ref().unwrap().ranked, b.as_ref().unwrap().ranked);
+        for ((query, a), b) in queries.iter().zip(&serial).zip(&parallel) {
+            let single = svc.advise(query).unwrap();
+            for pair in [a, b] {
+                let got = &pair.as_ref().unwrap().ranked;
+                assert_eq!(got.len(), single.ranked.len());
+                for ((gs, gt), (ss, st)) in got.iter().zip(&single.ranked) {
+                    assert_eq!(gs, ss);
+                    assert_eq!(gt.to_bits(), st.to_bits(), "batched bits must match single lookups");
+                }
+            }
         }
+        // out-of-range tenant indices error per query, not per batch
+        let mixed = vec![q(64, 256), Query { surface: 9, ..q(64, 256) }];
+        let answers = svc.advise_batch(&mixed, 2);
+        assert!(answers[0].is_ok() && answers[1].is_err());
     }
 
     #[test]
-    fn burst_deterministic_and_cached() {
+    fn burst_deterministic_and_memoized() {
         let r1 = tiny_service().bench_burst(4000, 11, 4).unwrap();
         let r2 = tiny_service().bench_burst(4000, 11, 1).unwrap();
         assert_eq!(r1.winners, r2.winners, "burst answers must not depend on thread count");
@@ -272,16 +399,56 @@ mod tests {
     }
 
     #[test]
-    fn recalibrate_invalidates_cache() {
+    fn recalibrate_publishes_a_fresh_epoch() {
         let svc = tiny_service();
-        svc.advise(&q(256, 4096)).unwrap();
-        let (_, params) = crate::topology::machines::parse("lassen", 1).unwrap();
+        let off = q(256, 1000); // brackets lattice sizes 256 and 4096
+        let before = svc.advise(&off).unwrap();
+        assert_eq!(svc.snapshot(0).unwrap().epoch, 0);
+
+        let (_, params) = machines::parse("lassen", 1).unwrap();
         let n = svc.recalibrate("lassen", &params.scaled(2.0, 0.5), 512, 8192).unwrap();
-        assert!(n > 0);
-        // the next probe misses (cache was cleared) and sees the refit times
-        let before = svc.cache_stats();
-        svc.advise(&q(256, 4096)).unwrap();
-        let after = svc.cache_stats();
-        assert_eq!(after.misses, before.misses + 1);
+        assert!(n > 0, "size 4096 falls in the refit band");
+        assert_eq!(svc.snapshot(0).unwrap().epoch, 1);
+
+        // the published snapshot serves refit answers; the Arc held from
+        // before the publish keeps its old bits (snapshots are immutable)
+        let after = svc.advise(&off).unwrap();
+        assert_ne!(before.ranked, after.ranked, "refit must reach served answers");
+        assert_eq!(after.ranked, svc.snapshot(0).unwrap().surface.lookup(&off.pattern).ranked);
+        assert!(svc.recalibrate("bogus", &params, 512, 8192).is_err());
+    }
+
+    #[test]
+    fn recalibrating_one_tenant_leaves_others_untouched() {
+        let surfaces = vec![
+            DecisionSurface::compile("lassen", tiny_axes(), 0.0).unwrap(),
+            DecisionSurface::compile("frontier-like", tiny_axes(), 0.0).unwrap(),
+        ];
+        let svc = AdvisorService::new(surfaces);
+        let pattern = Pattern { n_msgs: 100, msg_size: 1000, dest_nodes: 4, gpus_per_node: 4 };
+        let control = Query { pattern, surface: 1 };
+        let before = svc.advise(&control).unwrap();
+
+        let (_, params) = machines::parse("lassen", 1).unwrap();
+        svc.recalibrate("lassen", &params.scaled(3.0, 0.25), 16, 1 << 20).unwrap();
+
+        assert_eq!(svc.snapshot(0).unwrap().epoch, 1);
+        assert_eq!(svc.snapshot(1).unwrap().epoch, 0, "tenant B keeps its epoch");
+        let after = svc.advise(&control).unwrap();
+        for ((bs, bt), (as_, at)) in before.ranked.iter().zip(&after.ranked) {
+            assert_eq!(bs, as_);
+            assert_eq!(bt.to_bits(), at.to_bits(), "tenant B's answers must keep their bits");
+        }
+    }
+
+    #[test]
+    fn seeded_workloads_are_reproducible() {
+        let svc = tiny_service();
+        let (a, da) = svc.seeded_pool_queries(1000, 42);
+        let (b, db) = svc.seeded_pool_queries(1000, 42);
+        assert_eq!(a, b);
+        assert_eq!(da, db);
+        assert_eq!(svc.seeded_queries(100, 9), svc.seeded_queries(100, 9));
+        assert_ne!(svc.seeded_queries(100, 9), svc.seeded_queries(100, 10));
     }
 }

@@ -1,0 +1,183 @@
+//! Immutable compiled-surface snapshots: everything the read path needs,
+//! frozen at publish time.
+//!
+//! A [`SurfaceSnapshot`] bundles one compiled [`DecisionSurface`] with its
+//! epoch, the precomputed fastest-first answer for every lattice cell, and
+//! a write-once [`FixedMemo`]. All of it is built off the serving path by
+//! whoever compiles the snapshot; after publication through
+//! [`crate::util::publish::Published`] the snapshot is never mutated —
+//! queries probe the memo and interpolate, and a recalibration builds a
+//! *new* snapshot rather than touching this one. Small lattices are
+//! pre-warmed into the memo at compile time, so lattice-point queries are
+//! hits on first touch and a fresh snapshot starts with its steady-state
+//! answers already memoized.
+
+use super::cache::{CacheKey, FixedMemo};
+use super::surface::{cell_ranking, DecisionSurface, Pattern, RankedStrategies};
+use std::sync::Arc;
+
+/// One published generation of a tenant's serving state (see module docs).
+pub struct SurfaceSnapshot {
+    /// The compiled surface this snapshot serves.
+    pub surface: DecisionSurface,
+    /// Publication epoch: bumped once per publish on the owning tenant.
+    pub epoch: u64,
+    /// Precomputed fastest-first answer per lattice cell, in cell order —
+    /// bit-identical to `surface.lookup` at that lattice point.
+    lattice: Vec<Arc<RankedStrategies>>,
+    memo: FixedMemo,
+}
+
+impl SurfaceSnapshot {
+    /// Freeze `surface` into a servable snapshot: rank every lattice cell
+    /// and pre-warm the memo with the lattice answers when they fit
+    /// comfortably (≤ a quarter of the table, leaving probe room for
+    /// off-lattice traffic).
+    pub fn compile(surface: DecisionSurface, epoch: u64, memo_capacity: usize) -> SurfaceSnapshot {
+        let mut lattice = Vec::with_capacity(surface.cells.len());
+        for times in &surface.cells {
+            let order = cell_ranking(times);
+            let ranked = order.iter().map(|&k| (surface.strategies[k as usize], times[k as usize])).collect();
+            lattice.push(Arc::new(RankedStrategies { ranked }));
+        }
+        let memo = FixedMemo::new(memo_capacity);
+        if surface.cells.len() <= memo.capacity() / 4 {
+            let axes = &surface.axes;
+            let mut cell = 0;
+            for &m in &axes.msgs {
+                for &d in &axes.dest_nodes {
+                    for &g in &axes.gpus_per_node {
+                        for &s in &axes.sizes {
+                            let key = CacheKey { n_msgs: m, msg_size: s, dest_nodes: d, gpus_per_node: g };
+                            memo.insert(key, Arc::clone(&lattice[cell]));
+                            cell += 1;
+                        }
+                    }
+                }
+            }
+        }
+        SurfaceSnapshot { surface, epoch, lattice, memo }
+    }
+
+    /// Answer one query: memo probe, then an interpolated lattice read on a
+    /// miss (memoized for the snapshot's remaining lifetime). No locks, no
+    /// recompiles — the second element reports whether this was a hit.
+    pub fn advise(&self, q: &Pattern) -> (Arc<RankedStrategies>, bool) {
+        let key = CacheKey::from_pattern(q);
+        if let Some(hit) = self.memo.get(&key) {
+            return (hit, true);
+        }
+        let answer = Arc::new(self.surface.lookup(q));
+        self.memo.insert(key, Arc::clone(&answer));
+        (answer, false)
+    }
+
+    /// Memo probe only (the batched path resolves misses through
+    /// [`DecisionSurface::lookup_batch`] instead of per-query lookups).
+    pub fn probe(&self, q: &Pattern) -> Option<Arc<RankedStrategies>> {
+        self.memo.get(&CacheKey::from_pattern(q))
+    }
+
+    /// Memoize an answer the batched path computed for `q`.
+    pub fn memoize(&self, q: &Pattern, answer: Arc<RankedStrategies>) -> bool {
+        self.memo.insert(CacheKey::from_pattern(q), answer)
+    }
+
+    /// The precomputed fastest-first answers, one per lattice cell.
+    pub fn lattice_answers(&self) -> &[Arc<RankedStrategies>] {
+        &self.lattice
+    }
+
+    /// Entries currently memoized (diagnostics).
+    pub fn memoized(&self) -> usize {
+        self.memo.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::advisor::SurfaceAxes;
+
+    fn tiny_axes() -> SurfaceAxes {
+        SurfaceAxes {
+            msgs: vec![64, 256],
+            sizes: vec![256, 1024, 4096, 1 << 18],
+            dest_nodes: vec![4, 16],
+            gpus_per_node: vec![4],
+        }
+    }
+
+    fn tiny_snapshot() -> SurfaceSnapshot {
+        let surface = DecisionSurface::compile("lassen", tiny_axes(), 0.0).unwrap();
+        SurfaceSnapshot::compile(surface, 0, 8192)
+    }
+
+    #[test]
+    fn lattice_answers_match_lookup_bit_for_bit() {
+        let snap = tiny_snapshot();
+        let axes = &snap.surface.axes;
+        let mut cell = 0;
+        for &m in &axes.msgs {
+            for &d in &axes.dest_nodes {
+                for &g in &axes.gpus_per_node {
+                    for &s in &axes.sizes {
+                        let q = Pattern { n_msgs: m, msg_size: s, dest_nodes: d, gpus_per_node: g };
+                        let direct = snap.surface.lookup(&q);
+                        let pre = &snap.lattice_answers()[cell];
+                        assert_eq!(direct.ranked.len(), pre.ranked.len());
+                        for ((ds, dt), (ps, pt)) in direct.ranked.iter().zip(&pre.ranked) {
+                            assert_eq!(ds, ps, "cell {cell}: rank order");
+                            assert_eq!(dt.to_bits(), pt.to_bits(), "cell {cell}: time bits");
+                        }
+                        cell += 1;
+                    }
+                }
+            }
+        }
+        assert_eq!(cell, snap.lattice_answers().len());
+    }
+
+    #[test]
+    fn small_lattices_prewarm_into_first_touch_hits() {
+        let snap = tiny_snapshot();
+        assert_eq!(snap.memoized(), snap.surface.cells.len());
+        // a lattice point is a hit on first touch…
+        let on = Pattern { n_msgs: 256, msg_size: 4096, dest_nodes: 16, gpus_per_node: 4 };
+        let (_, hit) = snap.advise(&on);
+        assert!(hit, "pre-warmed lattice point must hit on first touch");
+        // …an off-lattice query misses once, then hits
+        let off = Pattern { n_msgs: 256, msg_size: 3000, dest_nodes: 16, gpus_per_node: 4 };
+        let (a1, hit1) = snap.advise(&off);
+        let (a2, hit2) = snap.advise(&off);
+        assert!(!hit1 && hit2);
+        assert_eq!(a1.ranked, a2.ranked);
+        assert_eq!(a1.ranked, snap.surface.lookup(&off).ranked);
+    }
+
+    #[test]
+    fn oversized_lattices_skip_prewarming() {
+        // 2 msgs x 5 sizes x 2 dest = 20 cells > 64/4: the memo starts cold
+        let axes = SurfaceAxes { sizes: vec![256, 1024, 4096, 1 << 14, 1 << 18], ..tiny_axes() };
+        let surface = DecisionSurface::compile("lassen", axes, 0.0).unwrap();
+        let snap = SurfaceSnapshot::compile(surface, 3, 64);
+        assert_eq!(snap.epoch, 3);
+        assert_eq!(snap.memoized(), 0);
+        let on = Pattern { n_msgs: 256, msg_size: 4096, dest_nodes: 16, gpus_per_node: 4 };
+        let (_, hit) = snap.advise(&on);
+        assert!(!hit, "cold memo: even lattice points miss on first touch");
+        let (_, hit) = snap.advise(&on);
+        assert!(hit);
+    }
+
+    #[test]
+    fn probe_and_memoize_drive_the_batched_path() {
+        let snap = tiny_snapshot();
+        let off = Pattern { n_msgs: 100, msg_size: 3000, dest_nodes: 10, gpus_per_node: 4 };
+        assert!(snap.probe(&off).is_none());
+        let answer = Arc::new(snap.surface.lookup(&off));
+        assert!(snap.memoize(&off, Arc::clone(&answer)));
+        let got = snap.probe(&off).expect("memoized");
+        assert!(Arc::ptr_eq(&got, &answer));
+    }
+}

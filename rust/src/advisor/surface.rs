@@ -223,23 +223,57 @@ fn lerp_log(a: f64, b: f64, w: f64) -> f64 {
     }
 }
 
-/// Bracketing indices and log₂-space weight for `v` on a sorted axis;
-/// clamps outside the range and degenerates to a single index on exact hits.
-fn bracket(axis: &[usize], v: usize) -> (usize, usize, f64) {
+/// Bracketing indices for `v` on a sorted axis; clamps outside the range
+/// and degenerates to a single index (`lo == hi`) on exact hits.
+fn bracket_idx(axis: &[usize], v: usize) -> (usize, usize) {
     if v <= axis[0] {
-        return (0, 0, 0.0);
+        return (0, 0);
     }
     if v >= *axis.last().expect("validated axis") {
         let i = axis.len() - 1;
-        return (i, i, 0.0);
+        return (i, i);
     }
     let hi = axis.partition_point(|&a| a < v);
     if axis[hi] == v {
-        return (hi, hi, 0.0);
+        (hi, hi)
+    } else {
+        (hi - 1, hi)
     }
-    let lo = hi - 1;
-    let (x0, x1, x) = ((axis[lo] as f64).log2(), (axis[hi] as f64).log2(), (v as f64).log2());
-    (lo, hi, (x - x0) / (x1 - x0))
+}
+
+/// Log₂-space interpolation weight of `v` between axis endpoints whose
+/// log₂ values are `x0 < x1`. Both the single-query and batched paths fund
+/// their weights through this one expression — that is what makes batched
+/// answers bit-identical to single lookups.
+fn axis_weight(x0: f64, x1: f64, v: usize) -> f64 {
+    ((v as f64).log2() - x0) / (x1 - x0)
+}
+
+/// Bracketing indices and log₂-space weight for `v` on a sorted axis.
+fn bracket(axis: &[usize], v: usize) -> (usize, usize, f64) {
+    let (lo, hi) = bracket_idx(axis, v);
+    if lo == hi {
+        return (lo, hi, 0.0);
+    }
+    (lo, hi, axis_weight((axis[lo] as f64).log2(), (axis[hi] as f64).log2(), v))
+}
+
+/// [`nearest`] against a precomputed `log₂(axis)` table — the batched path
+/// amortizes the per-element logs across a whole query group. Must keep the
+/// exact comparison sequence of [`nearest`] so both paths pick identical
+/// indices.
+fn nearest_in(logs: &[f64], v: usize) -> usize {
+    let lv = (v.max(1) as f64).log2();
+    let mut best = 0;
+    let mut best_d = f64::INFINITY;
+    for (i, &la) in logs.iter().enumerate() {
+        let d = (la - lv).abs();
+        if d < best_d {
+            best_d = d;
+            best = i;
+        }
+    }
+    best
 }
 
 /// Index of the axis value nearest `v` in log₂ space (ties toward smaller).
@@ -255,6 +289,25 @@ fn nearest(axis: &[usize], v: usize) -> usize {
         }
     }
     best
+}
+
+/// The shared bilinear interpolation core: one strategy's time from its
+/// four corner values and the (size, msgs) weights. Every lookup path —
+/// single, batched, lattice-precomputed — reduces to this chain, so their
+/// answers agree bit for bit.
+fn interp_corner(t00: f64, t01: f64, t10: f64, t11: f64, ws: f64, wm: f64) -> f64 {
+    lerp_log(lerp_log(t00, t01, ws), lerp_log(t10, t11, ws), wm)
+}
+
+/// Stable argsort of one cell's strategy times, fastest first — exactly the
+/// permutation [`DecisionSurface::lookup`]'s stable sort produces at a
+/// lattice point. Shared by the snapshot layer (precomputed lattice
+/// answers) and the v3 quantized encoding (per-cell rank nibbles).
+pub(crate) fn cell_ranking(times: &[f64]) -> Vec<u8> {
+    debug_assert!(times.len() <= u8::MAX as usize + 1);
+    let mut idx: Vec<u8> = (0..times.len() as u8).collect();
+    idx.sort_by(|&a, &b| times[a as usize].partial_cmp(&times[b as usize]).expect("finite surface times"));
+    idx
 }
 
 /// Size [bytes] where the log-space interpolants of the outgoing and
@@ -378,12 +431,66 @@ impl DecisionSurface {
             let t01 = self.cells[self.axes.index(m0, di, gi, s1)][k];
             let t10 = self.cells[self.axes.index(m1, di, gi, s0)][k];
             let t11 = self.cells[self.axes.index(m1, di, gi, s1)][k];
-            let t = lerp_log(lerp_log(t00, t01, ws), lerp_log(t10, t11, ws), wm);
-            ranked.push((strategy, t));
+            ranked.push((strategy, interp_corner(t00, t01, t10, t11, ws, wm)));
         }
         // stable sort: equal times keep Table 5 order
         ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("finite surface times"));
         RankedStrategies { ranked }
+    }
+
+    /// Batched [`DecisionSurface::lookup`]: queries are sorted into lattice
+    /// cell groups so the per-group work — the four corner rows, the axis
+    /// endpoint logs, the log₂ tables behind the nearest-axis snaps — is
+    /// paid once per group instead of once per query. Answers come back in
+    /// query order and are **bit-identical** to calling `lookup` per query
+    /// (property-tested): the per-query weight and interpolation chain runs
+    /// through exactly the same [`axis_weight`]/[`interp_corner`]
+    /// expressions the single path uses.
+    pub fn lookup_batch(&self, queries: &[Pattern]) -> Vec<RankedStrategies> {
+        let dest_logs: Vec<f64> = self.axes.dest_nodes.iter().map(|&a| (a as f64).log2()).collect();
+        let gpn_logs: Vec<f64> = self.axes.gpus_per_node.iter().map(|&a| (a as f64).log2()).collect();
+        let coords: Vec<(usize, usize, usize, usize, usize, usize)> = queries
+            .iter()
+            .map(|q| {
+                let (m0, m1) = bracket_idx(&self.axes.msgs, q.n_msgs);
+                let (s0, s1) = bracket_idx(&self.axes.sizes, q.msg_size);
+                let di = nearest_in(&dest_logs, q.dest_nodes);
+                let gi = nearest_in(&gpn_logs, q.gpus_per_node);
+                (m0, m1, s0, s1, di, gi)
+            })
+            .collect();
+        let mut order: Vec<usize> = (0..queries.len()).collect();
+        order.sort_by_key(|&i| coords[i]);
+        let mut out: Vec<Option<RankedStrategies>> = Vec::with_capacity(queries.len());
+        out.resize_with(queries.len(), || None);
+        let mut at = 0;
+        while at < order.len() {
+            let (m0, m1, s0, s1, di, gi) = coords[order[at]];
+            let mut end = at + 1;
+            while end < order.len() && coords[order[end]] == (m0, m1, s0, s1, di, gi) {
+                end += 1;
+            }
+            // group-shared state: corner rows and axis endpoint logs
+            let r00 = &self.cells[self.axes.index(m0, di, gi, s0)];
+            let r01 = &self.cells[self.axes.index(m0, di, gi, s1)];
+            let r10 = &self.cells[self.axes.index(m1, di, gi, s0)];
+            let r11 = &self.cells[self.axes.index(m1, di, gi, s1)];
+            let (xm0, xm1) = ((self.axes.msgs[m0] as f64).log2(), (self.axes.msgs[m1] as f64).log2());
+            let (xs0, xs1) = ((self.axes.sizes[s0] as f64).log2(), (self.axes.sizes[s1] as f64).log2());
+            for &qi in &order[at..end] {
+                let q = &queries[qi];
+                let wm = if m0 == m1 { 0.0 } else { axis_weight(xm0, xm1, q.n_msgs) };
+                let ws = if s0 == s1 { 0.0 } else { axis_weight(xs0, xs1, q.msg_size) };
+                let mut ranked = Vec::with_capacity(self.strategies.len());
+                for (k, &strategy) in self.strategies.iter().enumerate() {
+                    ranked.push((strategy, interp_corner(r00[k], r01[k], r10[k], r11[k], ws, wm)));
+                }
+                ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("finite surface times"));
+                out[qi] = Some(RankedStrategies { ranked });
+            }
+            at = end;
+        }
+        out.into_iter().map(|r| r.expect("every query answered")).collect()
     }
 
     /// Exact crossover boundaries: for every regime line, the sizes where
@@ -472,6 +579,24 @@ impl DecisionSurface {
             }
         }
         Ok(recompiled)
+    }
+
+    /// Out-of-place recalibration for the snapshot serving path: clone the
+    /// surface, mark every cell whose lattice size falls in `[lo, hi]`
+    /// stale, and recompile those cells against `params`. `self` is never
+    /// mutated — in-flight readers of the current snapshot keep their bits
+    /// while the fresh surface compiles. Returns the new surface and the
+    /// recompiled cell count.
+    pub fn recalibrated(
+        &self,
+        params: &MachineParams,
+        lo: usize,
+        hi: usize,
+    ) -> Result<(DecisionSurface, usize), String> {
+        let mut next = self.clone();
+        next.mark_stale_sizes(lo, hi);
+        let recompiled = next.recompile_stale(params)?;
+        Ok((next, recompiled))
     }
 }
 
@@ -658,6 +783,69 @@ mod tests {
                 assert_eq!(a, b, "fresh cell {idx} (size {size}) must keep its bits");
             }
         }
+    }
+
+    #[test]
+    fn batched_lookup_matches_single_bit_for_bit() {
+        let s = DecisionSurface::compile("lassen", tiny_axes(), 0.0).unwrap();
+        // a mix of lattice points, off-lattice interiors, clamped extremes,
+        // and repeats that land in the same cell group
+        let queries = vec![
+            Pattern { n_msgs: 256, msg_size: 1024, dest_nodes: 16, gpus_per_node: 4 },
+            Pattern { n_msgs: 100, msg_size: 3000, dest_nodes: 10, gpus_per_node: 4 },
+            Pattern { n_msgs: 1, msg_size: 1, dest_nodes: 1, gpus_per_node: 1 },
+            Pattern { n_msgs: 1 << 20, msg_size: 1 << 30, dest_nodes: 999, gpus_per_node: 64 },
+            Pattern { n_msgs: 90, msg_size: 2900, dest_nodes: 10, gpus_per_node: 4 },
+            Pattern { n_msgs: 64, msg_size: 256, dest_nodes: 4, gpus_per_node: 4 },
+            Pattern { n_msgs: 100, msg_size: 3000, dest_nodes: 10, gpus_per_node: 4 },
+        ];
+        let batched = s.lookup_batch(&queries);
+        assert_eq!(batched.len(), queries.len());
+        for (q, b) in queries.iter().zip(&batched) {
+            let single = s.lookup(q);
+            assert_eq!(single.ranked.len(), b.ranked.len());
+            for ((ss, st), (bs, bt)) in single.ranked.iter().zip(&b.ranked) {
+                assert_eq!(ss, bs, "strategy order must match for {q:?}");
+                assert_eq!(st.to_bits(), bt.to_bits(), "time bits must match for {q:?}");
+            }
+        }
+        // empty batch is fine
+        assert!(s.lookup_batch(&[]).is_empty());
+    }
+
+    #[test]
+    fn cell_ranking_matches_lookup_order_at_lattice_points() {
+        let s = DecisionSurface::compile("lassen", tiny_axes(), 0.0).unwrap();
+        for (idx, times) in s.cells.iter().enumerate() {
+            let ranking = cell_ranking(times);
+            assert_eq!(ranking.len(), s.strategies.len());
+            // the ranking is the stable argsort the lookup sort produces
+            let mut expect: Vec<(Strategy, f64)> =
+                s.strategies.iter().zip(times).map(|(&st, &t)| (st, t)).collect();
+            expect.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            for (pos, &k) in ranking.iter().enumerate() {
+                assert_eq!(s.strategies[k as usize], expect[pos].0, "cell {idx} rank {pos}");
+                assert_eq!(times[k as usize].to_bits(), expect[pos].1.to_bits());
+            }
+        }
+        // stability: ties keep index order
+        assert_eq!(cell_ranking(&[2.0, 1.0, 1.0, 3.0]), vec![1, 2, 0, 3]);
+    }
+
+    #[test]
+    fn recalibrated_builds_fresh_surface_without_mutating_base() {
+        let (_, params) = machines::parse("lassen", 1).unwrap();
+        let base = DecisionSurface::compile("lassen", tiny_axes(), 0.0).unwrap();
+        let before = base.clone();
+        let (next, recompiled) = base.recalibrated(&params.scaled(2.0, 0.5), 512, 8192).unwrap();
+        assert_eq!(base, before, "recalibrated must not touch the base surface");
+        assert_eq!(recompiled, 2 * 2 * 2, "sizes 1024 and 4096 across 2 msgs x 2 dest lines");
+        assert_eq!(next.stale_count(), 0, "the fresh surface ships fully compiled");
+        assert_ne!(next, base);
+        // identical params round-trip to identical bits
+        let (same, n) = base.recalibrated(&params, 512, 8192).unwrap();
+        assert_eq!(n, recompiled);
+        assert_eq!(same, base);
     }
 
     #[test]

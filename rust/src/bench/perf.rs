@@ -1,7 +1,8 @@
-//! The `hetcomm perf` self-benchmark harness.
+//! The `hetcomm perf` self-benchmark harness: two suites, both on
+//! deterministic seeded workloads.
 //!
-//! Measures the simulator/serving hot paths the ROADMAP treats as product
-//! metrics, on deterministic seeded workloads:
+//! The **sweep** suite (default) measures the simulator hot paths the
+//! ROADMAP treats as product metrics:
 //!
 //! - **sweep-compiled** — the production sweep cell loop (pattern lowered
 //!   once per cell, compiled schedules, zero-allocation executor) in
@@ -13,18 +14,33 @@
 //! - **advise-burst** — cached advisor queries per second
 //!   ([`AdvisorService::bench_burst`]).
 //!
+//! The **advise** suite (`--suite advise`) measures the serving engine on
+//! a four-tenant fleet (lassen, frontier-like, frontier-4nic, delta-like):
+//!
+//! - **advise-burst** — steady-state snapshot reads: the seeded pool
+//!   burst with per-query p50/p99 and the memo hit rate;
+//! - **advise-miss** — a distinct-heavy stream through per-query
+//!   [`AdvisorService::advise`], the mostly-uncached interpolation
+//!   reference the batched path is priced against;
+//! - **advise-batch** — the same stream through
+//!   [`AdvisorService::advise_batch`]; the harness errors out unless the
+//!   batched answers' digest matches the per-query leg bit for bit;
+//! - **advise-publish** — full recalibrate → compile → publish
+//!   round-trips on a separate service (timing only, answers unpinned).
+//!
+//! `speedup_vs_reference` is compiled-over-reference throughput in the
+//! sweep suite and batched-over-per-query throughput in the advise suite.
+//!
 //! The emitted report is a versioned `hetcomm.bench.v1` JSON artifact. Its
 //! *deterministic projection* (everything except wall-clock fields, which
 //! `timing: false` emits as `null`) is byte-identical across runs and
 //! machines for a fixed seed: work counts and FNV-1a checksums over the
-//! simulated result bits pin the *answers*, while throughput fields track
-//! the *time to answer*. `BENCH_sweep.json` at the repo root seeds the
-//! committed performance trajectory (see docs/PERFORMANCE.md).
-//!
-//! The harness self-verifies: the compiled and reference sweeps must agree
-//! on every result bit or [`run_perf`] errors out.
+//! result bits pin the *answers*, while throughput fields track the *time
+//! to answer*. A suite only pins the checksums it computes; the others are
+//! `null`. `BENCH_sweep.json` and `BENCH_advise.json` at the repo root
+//! seed the committed performance trajectories (see docs/PERFORMANCE.md).
 
-use crate::advisor::{AdvisorService, DecisionSurface, SurfaceAxes};
+use crate::advisor::{AdvisorService, DecisionSurface, RankedStrategies, SurfaceAxes};
 use crate::comm::{build_schedule_from, Strategy};
 use crate::pattern::generators::Scenario;
 use crate::sim::{self, CompiledPattern};
@@ -35,12 +51,50 @@ use crate::util::json::{fmt_f64, Json};
 use crate::util::pool;
 use crate::util::stats::percentile_sorted;
 use std::fmt::Write as _;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Versioned schema id of the emitted artifact.
 pub const SCHEMA: &str = "hetcomm.bench.v1";
 /// Schema version (bump on breaking report-shape changes).
 pub const VERSION: u64 = 1;
+
+/// Which benchmark family a run measures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Suite {
+    /// Simulator hot paths (sweep/schedule/burst) — the default.
+    Sweep,
+    /// The advisor serving engine (burst/miss/batch/publish).
+    Advise,
+}
+
+impl Suite {
+    pub fn parse(s: &str) -> Option<Suite> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "sweep" => Some(Suite::Sweep),
+            "advise" => Some(Suite::Advise),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Suite::Sweep => "sweep",
+            Suite::Advise => "advise",
+        }
+    }
+}
+
+/// The artifact's `mode` string: suite plus workload size. The sweep suite
+/// keeps its original shorthand ("quick"/"full") for baseline continuity.
+fn mode_str(suite: Suite, quick: bool) -> &'static str {
+    match (suite, quick) {
+        (Suite::Sweep, true) => "quick",
+        (Suite::Sweep, false) => "full",
+        (Suite::Advise, true) => "advise-quick",
+        (Suite::Advise, false) => "advise-full",
+    }
+}
 
 /// Harness configuration.
 #[derive(Clone, Debug)]
@@ -51,11 +105,13 @@ pub struct PerfConfig {
     pub seed: u64,
     /// Worker threads (0 = all cores).
     pub threads: usize,
+    /// Benchmark family to run.
+    pub suite: Suite,
 }
 
 impl Default for PerfConfig {
     fn default() -> PerfConfig {
-        PerfConfig { quick: true, seed: 42, threads: 0 }
+        PerfConfig { quick: true, seed: 42, threads: 0, suite: Suite::Sweep }
     }
 }
 
@@ -79,6 +135,7 @@ pub struct BenchRow {
 pub struct PerfReport {
     pub quick: bool,
     pub seed: u64,
+    pub suite: Suite,
     /// Worker threads actually used (a measured property, not part of the
     /// deterministic projection).
     pub threads: usize,
@@ -89,12 +146,14 @@ pub struct PerfReport {
     pub passes: usize,
     pub schedule_iters: usize,
     pub advise_queries: usize,
-    /// FNV-1a checksums over the deterministic result bits.
-    pub checksum_sweep: u64,
-    pub checksum_schedules: u64,
-    pub checksum_advise: u64,
+    /// FNV-1a checksums over the deterministic result bits; a suite pins
+    /// only the ones it computes (`None` renders as `null`).
+    pub checksum_sweep: Option<u64>,
+    pub checksum_schedules: Option<u64>,
+    pub checksum_advise: Option<u64>,
     pub results: Vec<BenchRow>,
-    /// sweep-compiled throughput over sweep-reference throughput.
+    /// Fast-path throughput over its reference: compiled/reference for the
+    /// sweep suite, batched/per-query for the advise suite.
     pub speedup_vs_reference: f64,
 }
 
@@ -185,10 +244,18 @@ fn row_from(name: &'static str, items: usize, elapsed_s: f64, latencies: &mut [f
     }
 }
 
-/// Run the full harness. Fails if the compiled and reference sweeps ever
-/// disagree on a result bit — `hetcomm perf` doubles as an equivalence
-/// check of the hot-path refactor.
+/// Run the configured suite. Both suites double as equivalence checks:
+/// the sweep suite fails if the compiled and reference sweeps ever
+/// disagree on a result bit, the advise suite fails if the batched
+/// interpolator's answers ever drift from the per-query path's.
 pub fn run_perf(config: &PerfConfig) -> Result<PerfReport, String> {
+    match config.suite {
+        Suite::Sweep => run_sweep_suite(config),
+        Suite::Advise => run_advise_suite(config),
+    }
+}
+
+fn run_sweep_suite(config: &PerfConfig) -> Result<PerfReport, String> {
     let grid = perf_grid(config.quick);
     let cells = grid.cells().len();
     let strategies = Strategy::all().len();
@@ -283,6 +350,7 @@ pub fn run_perf(config: &PerfConfig) -> Result<PerfReport, String> {
     Ok(PerfReport {
         quick: config.quick,
         seed: config.seed,
+        suite: Suite::Sweep,
         threads,
         machine: "lassen".into(),
         cells,
@@ -290,16 +358,171 @@ pub fn run_perf(config: &PerfConfig) -> Result<PerfReport, String> {
         passes,
         schedule_iters,
         advise_queries,
-        checksum_sweep: sum_fast,
-        checksum_schedules,
-        checksum_advise,
+        checksum_sweep: Some(sum_fast),
+        checksum_schedules: Some(checksum_schedules),
+        checksum_advise: Some(checksum_advise),
         results: vec![fast_row, ref_row, sched_row, advise_row],
         speedup_vs_reference: speedup,
     })
 }
 
-fn hex(x: u64) -> String {
-    format!("\"{x:#018x}\"")
+/// Machines the advise suite serves, spanning the registry's shapes:
+/// 2-socket single-rail, 1-socket single-rail (two bandwidth classes), and
+/// the shape-pinned 4-rail preset.
+const FLEET: [&str; 4] = ["lassen", "frontier-like", "frontier-4nic", "delta-like"];
+
+fn advise_axes(quick: bool) -> SurfaceAxes {
+    if quick {
+        SurfaceAxes {
+            msgs: vec![64, 256],
+            sizes: vec![1 << 8, 1 << 12, 1 << 16],
+            dest_nodes: vec![4, 16],
+            gpus_per_node: vec![4],
+        }
+    } else {
+        SurfaceAxes::default_axes()
+    }
+}
+
+/// A fresh four-tenant service; each leg gets its own so memo state never
+/// leaks between benchmarks.
+fn fleet_service(quick: bool) -> Result<AdvisorService, String> {
+    let surfaces = FLEET
+        .iter()
+        .map(|m| DecisionSurface::compile(m, advise_axes(quick), 0.0))
+        .collect::<Result<Vec<_>, String>>()?;
+    Ok(AdvisorService::new(surfaces))
+}
+
+/// FNV-1a over the full ranked answers — every (strategy, time-bits) pair
+/// in query order, so any reordering or drifted bit moves the digest.
+fn ranked_digest(answers: &[Arc<RankedStrategies>]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for a in answers {
+        for (s, t) in &a.ranked {
+            h = fnv_str(h, s.label());
+            h = fnv_word(h, t.to_bits());
+        }
+    }
+    h
+}
+
+fn run_advise_suite(config: &PerfConfig) -> Result<PerfReport, String> {
+    let advise_queries = if config.quick { 4000 } else { 40_000 };
+    let threads = effective_threads(config.threads, advise_queries);
+
+    // --- steady-state burst: seeded pool traffic, mostly memo hits ---
+    let burst_service = fleet_service(config.quick)?;
+    let burst = burst_service.bench_burst(advise_queries, config.seed, config.threads)?;
+    let burst_row = BenchRow {
+        name: "advise-burst",
+        items: burst.queries,
+        elapsed_s: burst.elapsed_s,
+        items_per_sec: if burst.elapsed_s > 0.0 { burst.queries as f64 / burst.elapsed_s } else { f64::INFINITY },
+        p50_s: burst.p50_s,
+        p99_s: burst.p99_s,
+        cache_hit_rate: Some(burst.cache.hit_rate()),
+    };
+
+    // --- per-query reference: a distinct-heavy stream, advised one at a
+    // time on a fresh service (mostly interpolation, few repeats) ---
+    let miss_service = fleet_service(config.quick)?;
+    let queries = miss_service.seeded_queries(advise_queries, config.seed);
+    let mut answers = Vec::with_capacity(queries.len());
+    let mut miss_lat = Vec::with_capacity(queries.len());
+    let t0 = Instant::now();
+    for q in &queries {
+        let t = Instant::now();
+        answers.push(miss_service.advise(q)?);
+        miss_lat.push(t.elapsed().as_secs_f64());
+    }
+    let t_miss = t0.elapsed().as_secs_f64();
+    let sum_single = ranked_digest(&answers);
+    let mut miss_row = row_from("advise-miss", queries.len(), t_miss, &mut miss_lat);
+    miss_row.cache_hit_rate = Some(miss_service.cache_stats().hit_rate());
+
+    // --- batched path: the same stream through advise_batch, sliced into
+    // serving-sized batches; answers must match the per-query leg bit for
+    // bit (the perf harness doubles as the equivalence check) ---
+    let batch_service = fleet_service(config.quick)?;
+    let batch_size = 256;
+    let mut batch_answers = Vec::with_capacity(queries.len());
+    let mut batch_lat = Vec::with_capacity(queries.len().div_ceil(batch_size));
+    let t0 = Instant::now();
+    for slice in queries.chunks(batch_size) {
+        let t = Instant::now();
+        let got = batch_service.advise_batch(slice, config.threads);
+        batch_lat.push(t.elapsed().as_secs_f64() / slice.len() as f64);
+        for a in got {
+            batch_answers.push(a?);
+        }
+    }
+    let t_batch = t0.elapsed().as_secs_f64();
+    let sum_batch = ranked_digest(&batch_answers);
+    if sum_single != sum_batch {
+        return Err(format!(
+            "batched interpolation changed an answer: per-query digest {sum_single:#018x} != batched {sum_batch:#018x}"
+        ));
+    }
+    let mut batch_row = row_from("advise-batch", queries.len(), t_batch, &mut batch_lat);
+    batch_row.cache_hit_rate = Some(batch_service.cache_stats().hit_rate());
+
+    // --- publish cost: full recalibrate -> compile -> publish round-trips
+    // on a separate service; timing only, so the drifted parameters never
+    // touch the checksummed legs ---
+    let publish_service = fleet_service(config.quick)?;
+    let publishes = if config.quick { 8 } else { 32 };
+    let mut pub_lat = Vec::with_capacity(publishes);
+    let t0 = Instant::now();
+    for i in 0..publishes {
+        let name = FLEET[i % FLEET.len()];
+        let (_, params) = machines::parse(name, 1)?;
+        let drift = 1.0 + 0.01 * (i + 1) as f64;
+        let t = Instant::now();
+        publish_service.recalibrate(name, &params.scaled(drift, 1.0), 1, 1 << 30)?;
+        pub_lat.push(t.elapsed().as_secs_f64());
+    }
+    let t_pub = t0.elapsed().as_secs_f64();
+    let pub_row = row_from("advise-publish", publishes, t_pub, &mut pub_lat);
+
+    let speedup = if batch_row.items_per_sec.is_finite() && miss_row.items_per_sec > 0.0 {
+        batch_row.items_per_sec / miss_row.items_per_sec
+    } else {
+        f64::INFINITY
+    };
+    // the burst's winner histogram plus the per-query answer digest — the
+    // full deterministic surface of the suite
+    let mut checksum_advise = FNV_OFFSET;
+    for (label, count) in &burst.winners {
+        checksum_advise = fnv_str(checksum_advise, label);
+        checksum_advise = fnv_word(checksum_advise, *count as u64);
+    }
+    checksum_advise = fnv_word(checksum_advise, sum_single);
+
+    Ok(PerfReport {
+        quick: config.quick,
+        seed: config.seed,
+        suite: Suite::Advise,
+        threads,
+        machine: format!("fleet-{}", FLEET.len()),
+        cells: advise_axes(config.quick).len() * FLEET.len(),
+        strategies: Strategy::all().len(),
+        passes: 1,
+        schedule_iters: 0,
+        advise_queries,
+        checksum_sweep: None,
+        checksum_schedules: None,
+        checksum_advise: Some(checksum_advise),
+        results: vec![burst_row, miss_row, batch_row, pub_row],
+        speedup_vs_reference: speedup,
+    })
+}
+
+fn hex(x: Option<u64>) -> String {
+    match x {
+        Some(v) => format!("\"{v:#018x}\""),
+        None => "null".to_string(),
+    }
 }
 
 fn opt_num(x: f64, timing: bool) -> String {
@@ -318,7 +541,7 @@ pub fn report_to_json(r: &PerfReport, timing: bool) -> String {
     out.push_str("{\n");
     let _ = writeln!(out, "  \"schema\": \"{SCHEMA}\",");
     let _ = writeln!(out, "  \"version\": {VERSION},");
-    let _ = writeln!(out, "  \"mode\": \"{}\",", if r.quick { "quick" } else { "full" });
+    let _ = writeln!(out, "  \"mode\": \"{}\",", mode_str(r.suite, r.quick));
     let _ = writeln!(out, "  \"machine\": \"{}\",", r.machine);
     // string seed: u64 values above 2^53 do not survive a JSON f64
     // round-trip (same convention as hetcomm.trace.v1)
@@ -442,7 +665,7 @@ pub fn compare_baseline(
     let doc = Json::parse(baseline_text).map_err(|e| format!("baseline is not valid JSON: {e}"))?;
     let (mode, seed) = validate_artifact(&doc)?;
     let mut notes = Vec::new();
-    let comparable = mode == (if current.quick { "quick" } else { "full" }) && seed == current.seed;
+    let comparable = mode == mode_str(current.suite, current.quick) && seed == current.seed;
 
     if comparable {
         for (key, ours) in [
@@ -450,14 +673,19 @@ pub fn compare_baseline(
             ("schedules", current.checksum_schedules),
             ("advise", current.checksum_advise),
         ] {
-            match checksum_of(&doc, key)? {
-                Some(pinned) if pinned != ours => {
+            match (checksum_of(&doc, key)?, ours) {
+                (Some(pinned), Some(ours)) if pinned != ours => {
                     return Err(format!(
                         "checksum {key:?} drifted: baseline {pinned:#018x}, current {ours:#018x} — the answers changed"
                     ));
                 }
-                Some(_) => notes.push(format!("checksum {key}: matches baseline")),
-                None => notes
+                (Some(_), Some(_)) => notes.push(format!("checksum {key}: matches baseline")),
+                (Some(pinned), None) => {
+                    return Err(format!(
+                        "checksum {key:?} is pinned in the baseline ({pinned:#018x}) but this suite does not compute it"
+                    ));
+                }
+                (None, _) => notes
                     .push(format!("checksum {key}: unpinned in baseline (refresh with `hetcomm perf --quick --out`)")),
             }
         }
@@ -504,7 +732,11 @@ mod tests {
     use super::*;
 
     fn tiny() -> PerfConfig {
-        PerfConfig { quick: true, seed: 7, threads: 2 }
+        PerfConfig { quick: true, seed: 7, threads: 2, suite: Suite::Sweep }
+    }
+
+    fn tiny_advise() -> PerfConfig {
+        PerfConfig { suite: Suite::Advise, ..tiny() }
     }
 
     #[test]
@@ -573,12 +805,66 @@ mod tests {
         let notes = compare_baseline(&r, &report_to_json(&r, true), 0.5).unwrap();
         assert!(notes.iter().any(|n| n.contains("matches baseline")));
         // a tampered checksum must fail
-        let tampered = report_to_json(&r, true).replace(&format!("{:#018x}", r.checksum_sweep), "0xdeadbeefdeadbeef");
+        let pinned = format!("{:#018x}", r.checksum_sweep.unwrap());
+        let tampered = report_to_json(&r, true).replace(&pinned, "0xdeadbeefdeadbeef");
         assert!(compare_baseline(&r, &tampered, 0.5).unwrap_err().contains("drifted"));
         // timing-free baselines validate shape and skip regressions
         let notes = compare_baseline(&r, &report_to_json(&r, false), 0.5).unwrap();
         assert!(notes.iter().any(|n| n.contains("skipped")));
         // garbage is rejected
         assert!(compare_baseline(&r, "{}", 0.5).is_err());
+    }
+
+    #[test]
+    fn advise_suite_runs_and_self_verifies() {
+        let r = run_perf(&tiny_advise()).unwrap();
+        let names: Vec<&str> = r.results.iter().map(|row| row.name).collect();
+        assert_eq!(names, ["advise-burst", "advise-miss", "advise-batch", "advise-publish"]);
+        assert!(r.results.iter().all(|row| row.items > 0));
+        assert_eq!(r.machine, "fleet-4");
+        assert_eq!(r.cells, 4 * 12, "four tenants x the quick 12-cell lattice");
+        // the suite pins only its own checksum
+        assert!(r.checksum_sweep.is_none() && r.checksum_schedules.is_none());
+        assert!(r.checksum_advise.is_some());
+        assert!(r.speedup_vs_reference.is_finite() && r.speedup_vs_reference > 0.0);
+        // the pool burst is memo-dominated; the distinct-heavy leg is not
+        let burst_hits = r.results[0].cache_hit_rate.unwrap();
+        let miss_hits = r.results[1].cache_hit_rate.unwrap();
+        // threads=2: concurrent first touches of a pool key can each miss,
+        // so the floor is looser than the single-threaded CI gate's 0.9
+        assert!(burst_hits > 0.8, "burst hit rate {burst_hits}");
+        assert!(miss_hits < burst_hits, "distinct-heavy leg must hit less than the pool burst");
+    }
+
+    #[test]
+    fn advise_projection_is_byte_stable_and_thread_invariant() {
+        let a = run_perf(&tiny_advise()).unwrap();
+        let b = run_perf(&tiny_advise()).unwrap();
+        assert_eq!(report_to_json(&a, false), report_to_json(&b, false));
+        let c = run_perf(&PerfConfig { threads: 1, ..tiny_advise() }).unwrap();
+        assert_eq!(a.checksum_advise, c.checksum_advise, "advise answers must not depend on thread count");
+        assert_ne!(
+            a.checksum_advise,
+            run_perf(&PerfConfig { seed: 8, ..tiny_advise() }).unwrap().checksum_advise,
+            "seeded queries must follow the seed"
+        );
+    }
+
+    #[test]
+    fn advise_artifacts_validate_and_stay_suite_scoped() {
+        let r = run_perf(&tiny_advise()).unwrap();
+        let doc = Json::parse(&report_to_json(&r, false)).unwrap();
+        let (mode, seed) = validate_artifact(&doc).unwrap();
+        assert_eq!((mode.as_str(), seed), ("advise-quick", 7));
+        // self-comparison: the advise checksum matches, the sweep ones are
+        // unpinned nulls rather than errors
+        let notes = compare_baseline(&r, &report_to_json(&r, true), 0.5).unwrap();
+        assert!(notes.iter().any(|n| n.contains("checksum advise: matches baseline")), "{notes:?}");
+        assert!(notes.iter().any(|n| n.contains("checksum sweep: unpinned")), "{notes:?}");
+        // a sweep baseline is a different workload: shape-validated only
+        let sweep = run_perf(&tiny()).unwrap();
+        let notes = compare_baseline(&r, &report_to_json(&sweep, true), 0.5).unwrap();
+        assert_eq!(notes.len(), 1, "{notes:?}");
+        assert!(notes[0].contains("does not match"));
     }
 }

@@ -1,7 +1,8 @@
 //! In-tree substrates for the offline build environment: deterministic PRNG,
 //! CLI flag parsing, INI-style config files, a minimal JSON parser for the
 //! versioned artifact layers, descriptive statistics, a property-testing
-//! mini-framework, a deterministic fan-out worker pool, and a tiny logger.
+//! mini-framework, a deterministic fan-out worker pool, a lock-free
+//! snapshot-publication cell, and a tiny logger.
 
 pub mod cli;
 pub mod config;
@@ -9,6 +10,7 @@ pub mod json;
 pub mod logging;
 pub mod pool;
 pub mod prop;
+pub mod publish;
 pub mod rng;
 pub mod stats;
 

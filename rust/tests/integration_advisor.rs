@@ -148,3 +148,61 @@ fn recalibration_loop_updates_surface_and_cache() {
     let got = svc.advise_for("lassen", &untouched).unwrap();
     assert_eq!(got.ranked, baseline.lookup(&untouched).ranked);
 }
+
+#[test]
+fn mid_burst_recalibration_is_tenant_isolated_and_never_torn() {
+    // Two tenants; tenant A ("lassen") is republished repeatedly while
+    // reader threads hammer both. Tenant B's answers must never move, and
+    // every tenant-A answer must match some single published epoch in full —
+    // a mixed-epoch (torn) ranking matches none of them.
+    fn bits(r: &hetcomm::advisor::RankedStrategies) -> Vec<(&'static str, u64)> {
+        r.ranked.iter().map(|(s, t)| (s.label(), t.to_bits())).collect()
+    }
+    let base = DecisionSurface::compile("lassen", table6_axes(), 0.0).unwrap();
+    let svc = AdvisorService::new(vec![
+        base.clone(),
+        DecisionSurface::compile("frontier-like", table6_axes(), 0.0).unwrap(),
+    ]);
+    // off-lattice queries so both the interpolator and the memo are in play
+    let qa = Pattern { n_msgs: 200, msg_size: 700, dest_nodes: 16, gpus_per_node: 4 };
+    let qb = Pattern { n_msgs: 200, msg_size: 2000, dest_nodes: 4, gpus_per_node: 4 };
+    let control_b = bits(&DecisionSurface::compile("frontier-like", table6_axes(), 0.0).unwrap().lookup(&qb));
+
+    // every ranking tenant A may legally serve: one per epoch. A full-band
+    // republish recompiles every cell from that round's parameters alone, so
+    // epoch r's surface is reproducible straight from the base surface.
+    let (_, base_params) = machines::parse("lassen", 2).unwrap();
+    let rounds = 6u64;
+    let mut legal: Vec<Vec<(&'static str, u64)>> = vec![bits(&base.lookup(&qa))];
+    for r in 1..=rounds {
+        let params = base_params.scaled(1.0 + r as f64 * 0.5, 1.0);
+        let (next, _) = base.recalibrated(&params, 1, 1 << 30).unwrap();
+        legal.push(bits(&next.lookup(&qa)));
+    }
+    for w in legal.windows(2) {
+        assert_ne!(w[0], w[1], "consecutive epochs must serve distinguishable answers");
+    }
+
+    std::thread::scope(|scope| {
+        for _ in 0..2 {
+            scope.spawn(|| {
+                for _ in 0..400 {
+                    let a = svc.advise_for("lassen", &qa).unwrap();
+                    assert!(legal.contains(&bits(&a)), "tenant A served a torn or unknown ranking");
+                    let b = svc.advise_for("frontier-like", &qb).unwrap();
+                    assert_eq!(bits(&b), control_b, "tenant B's answers moved during A's recalibration");
+                }
+            });
+        }
+        for r in 1..=rounds {
+            let params = base_params.scaled(1.0 + r as f64 * 0.5, 1.0);
+            let recompiled = svc.recalibrate("lassen", &params, 1, 1 << 30).unwrap();
+            assert_eq!(recompiled, table6_axes().len(), "a full-band refit recompiles every cell");
+        }
+    });
+
+    assert_eq!(svc.snapshot(0).unwrap().epoch, rounds, "tenant A's epoch advances once per publish");
+    assert_eq!(svc.snapshot(1).unwrap().epoch, 0, "tenant B was never republished");
+    assert_eq!(bits(&svc.advise_for("lassen", &qa).unwrap()), legal[rounds as usize]);
+    assert_eq!(bits(&svc.advise_for("frontier-like", &qb).unwrap()), control_b);
+}

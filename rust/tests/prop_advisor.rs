@@ -1,8 +1,10 @@
 //! Advisor properties: interpolated surface lookups reproduce the direct
-//! Table 6 model evaluation bit for bit on lattice points, and off-lattice
-//! queries stay inside their regime line's time envelope.
+//! Table 6 model evaluation bit for bit on lattice points, off-lattice
+//! queries stay inside their regime line's time envelope, the batched
+//! interpolator agrees with single-query lookups bit for bit, and the
+//! quantized v3 encoding round-trips surfaces losslessly.
 
-use hetcomm::advisor::{DecisionSurface, Pattern, SurfaceAxes};
+use hetcomm::advisor::{persist, DecisionSurface, Pattern, SurfaceAxes};
 use hetcomm::model::StrategyModel;
 use hetcomm::pattern::generators::Scenario;
 use hetcomm::topology::machines;
@@ -116,6 +118,72 @@ fn off_lattice_lookups_stay_in_line_envelope() {
             if *t < lo * (1.0 - 1e-9) || *t > hi * (1.0 + 1e-9) {
                 return Err(format!("{}: {t} outside line envelope [{lo}, {hi}]", strategy.label()));
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batched_lookups_match_single_queries_bit_for_bit() {
+    check("lookup_batch == lookup, bit for bit", 25, |g| {
+        let machine_name = *g.choose(&MACHINES);
+        let surface = DecisionSurface::compile(machine_name, random_axes(g), 0.0)?;
+        let axes = &surface.axes;
+        // below-lattice, interior (on- and off-lattice), and above-lattice
+        // coordinates on every axis, so clamping, interpolation, and the
+        // nearest-axis snaps all pass through the grouped path
+        let n = g.usize(1, 48);
+        let mut queries = Vec::with_capacity(n);
+        for _ in 0..n {
+            queries.push(Pattern {
+                n_msgs: g.usize(axes.msgs[0] / 2 + 1, axes.msgs[axes.msgs.len() - 1] * 2),
+                msg_size: g.usize(axes.sizes[0] / 2 + 1, axes.sizes[axes.sizes.len() - 1] * 2),
+                dest_nodes: g.usize(1, 24),
+                gpus_per_node: g.usize(1, 12),
+            });
+        }
+        let batched = surface.lookup_batch(&queries);
+        if batched.len() != queries.len() {
+            return Err(format!("{} answers for {} queries", batched.len(), queries.len()));
+        }
+        for (q, got) in queries.iter().zip(&batched) {
+            let want = surface.lookup(q);
+            if got.ranked.len() != want.ranked.len() {
+                return Err(format!("{machine_name} {q:?}: ranking lengths differ"));
+            }
+            for ((gs, gt), (ws, wt)) in got.ranked.iter().zip(&want.ranked) {
+                if gs != ws || gt.to_bits() != wt.to_bits() {
+                    return Err(format!(
+                        "{machine_name} {q:?}: batched ({}, {gt}) != single ({}, {wt})",
+                        gs.label(),
+                        ws.label()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn quantized_artifacts_roundtrip_and_interchange_with_v2() {
+    check("surface.v3 round-trips losslessly", 20, |g| {
+        let machine_name = *g.choose(&MACHINES);
+        let dup = *g.choose(&[0.0, 0.25]);
+        let surface = DecisionSurface::compile(machine_name, random_axes(g), dup)?;
+        let quant = persist::to_json_quant(&surface)?;
+        let decoded = persist::parse_json(&quant)?;
+        if decoded != surface {
+            return Err(format!("{machine_name}: v3 round-trip changed the surface"));
+        }
+        // cross-format interchange: a surface that went through v3 writes
+        // the same v2 bytes as one that never left memory
+        if persist::to_json(&decoded) != persist::to_json(&surface) {
+            return Err(format!("{machine_name}: v2 bytes drifted after a v3 round-trip"));
+        }
+        // and the v3 writer itself is byte-deterministic
+        if persist::to_json_quant(&decoded)? != quant {
+            return Err(format!("{machine_name}: v3 bytes drifted after a round-trip"));
         }
         Ok(())
     });
