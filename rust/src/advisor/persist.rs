@@ -533,6 +533,44 @@ mod tests {
     }
 
     #[test]
+    fn v3_nibble_guard_boundary() {
+        // exactly 16 strategies is the hex-nibble encoding's capacity and
+        // must still encode; 17 must fail with the explicit guard message
+        let surface = DecisionSurface::compile("lassen", tiny_axes(), 0.0).unwrap();
+        let mut s16 = surface.clone();
+        s16.strategies = [Strategy::all(), Strategy::all()].concat();
+        s16.cells = surface
+            .cells
+            .iter()
+            .map(|c| {
+                let mut widened = c.clone();
+                widened.extend(c.iter().map(|&t| t * 2.0));
+                widened
+            })
+            .collect();
+        let quant = to_json_quant(&s16).expect("16 strategies fit the nibble encoding");
+        let marker = "\"ranks\": [\n    \"";
+        let at = quant.find(marker).unwrap() + marker.len();
+        let width = quant[at..].find('"').unwrap();
+        assert_eq!(width, 16, "each rank string carries one nibble per strategy");
+
+        // one past capacity: a clear error instead of a corrupt artifact
+        let mut s17 = s16.clone();
+        s17.strategies.push(Strategy::all()[0]);
+        s17.cells = s16
+            .cells
+            .iter()
+            .map(|c| {
+                let mut widened = c.clone();
+                widened.push(c[0] * 4.0);
+                widened
+            })
+            .collect();
+        let err = to_json_quant(&s17).unwrap_err();
+        assert!(err.contains("17 strategies exceed 16"), "{err}");
+    }
+
+    #[test]
     fn corrupt_artifacts_rejected() {
         assert!(parse_json("").is_err());
         assert!(parse_json("{").is_err());

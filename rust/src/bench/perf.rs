@@ -652,6 +652,10 @@ fn checksum_of(doc: &Json, key: &str) -> Result<Option<u64>, String> {
 ///   workloads, so cross-mode rates are meaningless.
 /// - When comparable and the baseline pins checksums, they must match bit
 ///   for bit (behavioral regressions fail fast, on any machine).
+/// - When comparable and the baseline pins NO checksum at all (the
+///   committed growth-seed projection), one explicit notice is returned —
+///   `seed projection (null checksums) — throughput not compared` — with
+///   the refresh workflow, and nothing is gated.
 /// - When comparable and the baseline carries throughput numbers, the
 ///   current run must stay above `(1 - max_regression) ×` the baseline per
 ///   benchmark (machine-dependent; disable with `max_regression >= 1`).
@@ -668,6 +672,8 @@ pub fn compare_baseline(
     let comparable = mode == mode_str(current.suite, current.quick) && seed == current.seed;
 
     if comparable {
+        let mut pinned_count = 0usize;
+        let mut key_notes = Vec::new();
         for (key, ours) in [
             ("sweep", current.checksum_sweep),
             ("schedules", current.checksum_schedules),
@@ -679,16 +685,31 @@ pub fn compare_baseline(
                         "checksum {key:?} drifted: baseline {pinned:#018x}, current {ours:#018x} — the answers changed"
                     ));
                 }
-                (Some(_), Some(_)) => notes.push(format!("checksum {key}: matches baseline")),
+                (Some(_), Some(_)) => {
+                    pinned_count += 1;
+                    key_notes.push(format!("checksum {key}: matches baseline"));
+                }
                 (Some(pinned), None) => {
                     return Err(format!(
                         "checksum {key:?} is pinned in the baseline ({pinned:#018x}) but this suite does not compute it"
                     ));
                 }
-                (None, _) => notes
+                (None, _) => key_notes
                     .push(format!("checksum {key}: unpinned in baseline (refresh with `hetcomm perf --quick --out`)")),
             }
         }
+        // A baseline pinning NOTHING is the committed growth-seed
+        // projection: no measured bits to gate on at all. Say so once,
+        // explicitly, instead of three per-key shrugs and a skip per row.
+        if pinned_count == 0 {
+            notes.push(
+                "baseline is a seed projection (null checksums) — throughput not compared; refresh it with \
+                 `hetcomm perf --quick --out BENCH_<suite>.json` (see docs/PERFORMANCE.md)"
+                    .to_string(),
+            );
+            return Ok(notes);
+        }
+        notes.extend(key_notes);
     } else {
         // Different (mode, seed) means a different workload: neither the
         // checksums nor per-item throughput are meaningfully comparable
@@ -813,6 +834,23 @@ mod tests {
         assert!(notes.iter().any(|n| n.contains("skipped")));
         // garbage is rejected
         assert!(compare_baseline(&r, "{}", 0.5).is_err());
+    }
+
+    #[test]
+    fn null_checksum_baseline_gets_the_seed_projection_notice() {
+        // the committed growth-seed baselines pin nothing: the comparison
+        // must say so once, explicitly, with the refresh workflow
+        let r = run_perf(&tiny()).unwrap();
+        let mut projection = r.clone();
+        projection.checksum_sweep = None;
+        projection.checksum_schedules = None;
+        projection.checksum_advise = None;
+        let notes = compare_baseline(&r, &report_to_json(&projection, false), 0.5).unwrap();
+        assert_eq!(notes.len(), 1, "{notes:?}");
+        assert!(notes[0].contains("seed projection (null checksums)"), "{notes:?}");
+        assert!(notes[0].contains("throughput not compared"), "{notes:?}");
+        assert!(notes[0].contains("hetcomm perf --quick --out"), "{notes:?}");
+        assert!(notes[0].contains("docs/PERFORMANCE.md"), "{notes:?}");
     }
 
     #[test]

@@ -1,0 +1,300 @@
+//! Deterministic emitters for collective sweep results: JSON
+//! (`hetcomm.collective.v1`, byte-identical across seeded runs), CSV (one
+//! row per cell × algorithm) and aligned text tables. Hand-rolled like
+//! [`crate::sweep::emit`] — no `serde` in the offline image, fixed float
+//! formatting.
+
+use super::sweep::CollectiveResult;
+use crate::bench::{fmt_secs, Table};
+use crate::sweep::emit::esc;
+use std::fmt::Write as _;
+
+/// Fixed-width scientific float formatting: deterministic and valid JSON.
+fn num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.9e}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn opt_num(x: Option<f64>) -> String {
+    match x {
+        Some(v) => num(v),
+        None => "null".to_string(),
+    }
+}
+
+fn usize_list(xs: &[usize]) -> String {
+    let items: Vec<String> = xs.iter().map(|x| x.to_string()).collect();
+    format!("[{}]", items.join(", "))
+}
+
+fn label_list<T: std::fmt::Display>(xs: &[T]) -> String {
+    let items: Vec<String> = xs.iter().map(|x| format!("\"{x}\"")).collect();
+    format!("[{}]", items.join(", "))
+}
+
+/// Serialize the full collective sweep result (config echo, cells, report)
+/// as JSON. Wall-clock fields are deliberately excluded: two runs with the
+/// same seed must produce byte-identical output.
+pub fn to_json(result: &CollectiveResult) -> String {
+    let cfg = &result.config;
+    let mut out = String::new();
+    out.push_str("{\n");
+    let _ = writeln!(out, "  \"schema\": \"hetcomm.collective.v1\",");
+    let _ = writeln!(out, "  \"machine\": \"{}\",", esc(&cfg.machine));
+    let _ = writeln!(out, "  \"seed\": {},", cfg.seed);
+    let _ = writeln!(out, "  \"sim\": {},", cfg.sim);
+    let _ = writeln!(out, "  \"collectives\": {},", label_list(&cfg.grid.collectives));
+    let _ = writeln!(out, "  \"algorithms\": {},", label_list(&cfg.grid.algorithms));
+    let _ = writeln!(out, "  \"nodes\": {},", usize_list(&cfg.grid.nodes));
+    let _ = writeln!(out, "  \"gpus_per_node\": {},", usize_list(&cfg.grid.gpus_per_node));
+    let _ = writeln!(out, "  \"sizes\": {},", usize_list(&cfg.grid.sizes));
+
+    out.push_str("  \"cells\": [\n");
+    for (i, c) in result.cells.iter().enumerate() {
+        let comma = if i + 1 < result.cells.len() { "," } else { "" };
+        let _ = writeln!(
+            out,
+            "    {{\"collective\": \"{}\", \"algorithm\": \"{}\", \"nodes\": {}, \"gpus_per_node\": {}, \
+             \"size\": {}, \"model_s\": {}, \"sim_s\": {}, \"stages\": {}, \"internode_msgs\": {}, \
+             \"internode_bytes\": {}}}{comma}",
+            c.collective,
+            c.algorithm,
+            c.nodes,
+            c.gpus_per_node,
+            c.size,
+            num(c.model_s),
+            opt_num(c.sim_s),
+            c.stages,
+            c.internode_msgs,
+            c.internode_bytes,
+        );
+    }
+    out.push_str("  ],\n");
+
+    out.push_str("  \"winners\": [\n");
+    for (i, w) in result.report.winners.iter().enumerate() {
+        let comma = if i + 1 < result.report.winners.len() { "," } else { "" };
+        let sim_winner = match &w.sim_winner {
+            Some(s) => format!("\"{}\"", esc(s)),
+            None => "null".to_string(),
+        };
+        let _ = writeln!(
+            out,
+            "    {{\"collective\": \"{}\", \"nodes\": {}, \"gpus_per_node\": {}, \"size\": {}, \
+             \"winner\": \"{}\", \"model_s\": {}, \"margin_vs_standard\": {}, \"sim_winner\": {}}}{comma}",
+            w.collective,
+            w.nodes,
+            w.gpus_per_node,
+            w.size,
+            esc(w.winner),
+            num(w.model_s),
+            num(w.margin_vs_standard),
+            sim_winner,
+        );
+    }
+    out.push_str("  ],\n");
+
+    out.push_str("  \"crossovers\": [\n");
+    for (i, x) in result.report.crossovers.iter().enumerate() {
+        let comma = if i + 1 < result.report.crossovers.len() { "," } else { "" };
+        let _ = writeln!(
+            out,
+            "    {{\"collective\": \"{}\", \"nodes\": {}, \"gpus_per_node\": {}, \"size_before\": {}, \
+             \"size_after\": {}, \"from\": \"{}\", \"to\": \"{}\"}}{comma}",
+            x.collective,
+            x.nodes,
+            x.gpus_per_node,
+            x.size_before,
+            x.size_after,
+            esc(x.from),
+            esc(x.to),
+        );
+    }
+    out.push_str("  ],\n");
+
+    out.push_str("  \"regimes\": [\n");
+    for (i, g) in result.report.regimes.iter().enumerate() {
+        let comma = if i + 1 < result.report.regimes.len() { "," } else { "" };
+        let _ = writeln!(
+            out,
+            "    {{\"collective\": \"{}\", \"nodes\": {}, \"gpus_per_node\": {}, \"band\": \"{}\", \
+             \"winner\": \"{}\", \"total_model_s\": {}}}{comma}",
+            g.collective,
+            g.nodes,
+            g.gpus_per_node,
+            g.band,
+            esc(g.winner),
+            num(g.total_model_s),
+        );
+    }
+    out.push_str("  ]\n");
+    out.push_str("}\n");
+    out
+}
+
+/// One CSV row per (cell × algorithm).
+pub fn to_csv(result: &CollectiveResult) -> String {
+    let mut out =
+        String::from("collective,algorithm,nodes,gpus_per_node,size,model_s,sim_s,stages,internode_msgs,internode_bytes\n");
+    for c in &result.cells {
+        let _ = writeln!(
+            out,
+            "{},{},{},{},{},{},{},{},{},{}",
+            c.collective,
+            c.algorithm,
+            c.nodes,
+            c.gpus_per_node,
+            c.size,
+            num(c.model_s),
+            c.sim_s.map(num).unwrap_or_default(),
+            c.stages,
+            c.internode_msgs,
+            c.internode_bytes,
+        );
+    }
+    out
+}
+
+/// Human-readable view: one table per (collective, nodes, gpn) line
+/// (sizes × algorithms, modeled seconds, winner and margin columns), then
+/// the crossover and regime-winner report.
+pub fn render_tables(result: &CollectiveResult) -> String {
+    let mut out = String::new();
+    let algorithms = &result.config.grid.algorithms;
+    let cells = &result.cells;
+
+    let mut i = 0;
+    while i < cells.len() {
+        let mut j = i + 1;
+        while j < cells.len()
+            && cells[j].collective == cells[i].collective
+            && cells[j].nodes == cells[i].nodes
+            && cells[j].gpus_per_node == cells[i].gpus_per_node
+        {
+            j += 1;
+        }
+        let line = &cells[i..j];
+        let mut header: Vec<String> = vec!["size[B]".into()];
+        header.extend(algorithms.iter().map(|a| a.label().to_string()));
+        header.push("winner".into());
+        header.push("vs standard".into());
+        let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(
+            format!("{} · {} nodes · {} GPUs/node", line[0].collective, line[0].nodes, line[0].gpus_per_node),
+            &hdr,
+        );
+        let mut k = i;
+        while k < j {
+            let mut m = k + 1;
+            while m < j && cells[m].index == cells[k].index {
+                m += 1;
+            }
+            let group = &cells[k..m];
+            let mut row = vec![group[0].size.to_string()];
+            for a in algorithms {
+                match group.iter().find(|c| c.algorithm == *a) {
+                    Some(c) => row.push(fmt_secs(c.model_s)),
+                    None => row.push(String::new()),
+                }
+            }
+            let win = result.report.winners.iter().find(|w| {
+                w.collective == group[0].collective
+                    && w.nodes == group[0].nodes
+                    && w.gpus_per_node == group[0].gpus_per_node
+                    && w.size == group[0].size
+            });
+            row.push(win.map(|w| w.winner.to_string()).unwrap_or_default());
+            row.push(win.map(|w| format!("{:+.1}%", w.margin_vs_standard * 100.0)).unwrap_or_default());
+            t.row(row);
+            k = m;
+        }
+        out.push_str(&t.render());
+        i = j;
+    }
+
+    out.push_str("\nCrossover report (model winner changes with block size):\n");
+    if result.report.crossovers.is_empty() {
+        out.push_str("  (none within the swept sizes)\n");
+    }
+    for x in &result.report.crossovers {
+        let _ = writeln!(
+            out,
+            "  {} · {} nodes · {} GPUs/node: {} -> {} between {} B and {} B",
+            x.collective, x.nodes, x.gpus_per_node, x.from, x.to, x.size_before, x.size_after
+        );
+    }
+
+    out.push_str("\nRegime winners (min total modeled time per band):\n");
+    for g in &result.report.regimes {
+        let _ = writeln!(
+            out,
+            "  {} · {} nodes · {} GPUs/node · {:>5}: {} ({})",
+            g.collective,
+            g.nodes,
+            g.gpus_per_node,
+            g.band,
+            g.winner,
+            fmt_secs(g.total_model_s).trim()
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::sweep::{run_collective, CollectiveConfig, CollectiveGrid};
+
+    fn tiny_result() -> CollectiveResult {
+        let cfg =
+            CollectiveConfig { grid: CollectiveGrid::tiny(), seed: 3, threads: 1, sim: true, machine: "lassen".into() };
+        run_collective(&cfg).unwrap()
+    }
+
+    #[test]
+    fn json_has_sections_and_no_wallclock() {
+        let r = tiny_result();
+        let j = to_json(&r);
+        for key in
+            ["\"schema\": \"hetcomm.collective.v1\"", "\"cells\"", "\"winners\"", "\"crossovers\"", "\"regimes\""]
+        {
+            assert!(j.contains(key), "missing {key}");
+        }
+        assert!(!j.contains("elapsed"), "wall-clock leaked into deterministic output");
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn csv_row_count_and_header() {
+        let r = tiny_result();
+        let csv = to_csv(&r);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 1 + r.cells.len());
+        assert!(lines[0].starts_with("collective,algorithm,nodes"));
+    }
+
+    #[test]
+    fn emission_is_byte_deterministic() {
+        let a = tiny_result();
+        let b = tiny_result();
+        assert_eq!(to_json(&a), to_json(&b));
+        assert_eq!(to_csv(&a), to_csv(&b));
+        assert_eq!(render_tables(&a), render_tables(&b));
+    }
+
+    #[test]
+    fn tables_mention_every_algorithm_and_sections() {
+        let r = tiny_result();
+        let text = render_tables(&r);
+        for a in &r.config.grid.algorithms {
+            assert!(text.contains(a.label()), "missing {}", a.label());
+        }
+        assert!(text.contains("Crossover report"));
+        assert!(text.contains("Regime winners"));
+        assert!(text.contains("vs standard"));
+    }
+}

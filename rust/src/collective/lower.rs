@@ -1,0 +1,348 @@
+//! Lowering a collective into per-stage point-to-point patterns.
+//!
+//! Every [`CollectiveAlgorithm`] turns the *direct* pattern (one logical
+//! message per ordered process pair, [`crate::collective::CollectiveSpec::materialize`])
+//! into an ordered list of [`Stage`]s, each a plain
+//! [`crate::pattern::CommPattern`]:
+//!
+//! - **standard** — one stage, the direct pattern verbatim;
+//! - **pairwise** — round `r` carries the messages whose destination node
+//!   is `r` hops ahead of the source node (round 0 is the on-node
+//!   exchange); rounds are barriers;
+//! - **locality** — the `MPIX_Alltoall` three-phase shape: each ordered
+//!   node pair `(sn, dn)` is assigned an [`owner`] process on `sn` and a
+//!   [`recv_owner`] on `dn`; stage 1 gathers each sender's payloads to the
+//!   owners (and delivers on-node messages directly), stage 2 ships **one
+//!   aggregated message per ordered node pair**, stage 3 redistributes to
+//!   final destinations. Duplicate payloads (`dup_group`, e.g. allgather)
+//!   cross the network once per destination node — the gather and exchange
+//!   stages carry deduplicated bytes, the redistribute stage restores the
+//!   full per-destination payloads.
+//!
+//! Stage patterns are aggregated through ordered maps, so the lowering is a
+//! pure function of the message *set* — shuffling the direct pattern's
+//! message order cannot change any stage.
+
+use super::{Collective, CollectiveAlgorithm};
+use crate::comm::{build_schedule, CopyKind, CopyOp, Loc, Phase, Schedule, Strategy, StrategyKind, Transport, Xfer};
+use crate::pattern::{CommPattern, Msg};
+use crate::topology::{GpuId, Machine, NodeId};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One barrier-separated stage of a lowered collective.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Stage {
+    pub label: &'static str,
+    pub pattern: CommPattern,
+}
+
+/// A collective lowered to stages.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Lowering {
+    pub collective: Collective,
+    pub algorithm: CollectiveAlgorithm,
+    pub stages: Vec<Stage>,
+}
+
+impl Lowering {
+    /// Total inter-node messages across all stages (the quantity the
+    /// locality algorithm minimizes).
+    pub fn internode_msgs(&self, machine: &Machine) -> usize {
+        self.stages.iter().map(|s| s.pattern.internode(machine).count()).sum()
+    }
+
+    /// Total inter-node bytes across all stages.
+    pub fn internode_bytes(&self, machine: &Machine) -> usize {
+        self.stages.iter().map(|s| s.pattern.internode(machine).map(|m| m.bytes).sum::<usize>()).sum()
+    }
+}
+
+/// The process on node `sn` that aggregates and ships the `(sn, dn)`
+/// node-pair payload: destination nodes are dealt round-robin over the
+/// sender node's processes (the mpi-advance assignment).
+pub fn owner(machine: &Machine, sn: NodeId, dn: NodeId) -> GpuId {
+    GpuId(sn.0 * machine.gpus_per_node() + dn.0 % machine.gpus_per_node())
+}
+
+/// The process on node `dn` that receives the `(sn, dn)` node-pair payload
+/// and redistributes it on-node.
+pub fn recv_owner(machine: &Machine, sn: NodeId, dn: NodeId) -> GpuId {
+    GpuId(dn.0 * machine.gpus_per_node() + sn.0 % machine.gpus_per_node())
+}
+
+/// Lower `direct` under `algorithm`. Empty stages are dropped.
+pub fn lower(
+    collective: Collective,
+    algorithm: CollectiveAlgorithm,
+    machine: &Machine,
+    direct: &CommPattern,
+) -> Lowering {
+    let stages = match algorithm {
+        CollectiveAlgorithm::Standard => {
+            vec![Stage { label: "direct", pattern: direct.clone() }]
+        }
+        CollectiveAlgorithm::Pairwise => lower_pairwise(machine, direct),
+        CollectiveAlgorithm::Locality => lower_locality(machine, direct),
+    };
+    Lowering { collective, algorithm, stages: stages.into_iter().filter(|s| !s.pattern.is_empty()).collect() }
+}
+
+fn lower_pairwise(machine: &Machine, direct: &CommPattern) -> Vec<Stage> {
+    let n = machine.num_nodes;
+    let mut rounds: BTreeMap<usize, Vec<Msg>> = BTreeMap::new();
+    for m in &direct.msgs {
+        let sn = machine.gpu_node(m.src).0;
+        let dn = machine.gpu_node(m.dst).0;
+        let r = (dn + n - sn) % n;
+        rounds.entry(r).or_default().push(*m);
+    }
+    rounds
+        .into_iter()
+        .map(|(r, msgs)| Stage { label: if r == 0 { "local" } else { "round" }, pattern: CommPattern::new(msgs) })
+        .collect()
+}
+
+fn lower_locality(machine: &Machine, direct: &CommPattern) -> Vec<Stage> {
+    // Aggregated bytes per (src, dst) process pair for the on-node stages,
+    // and per ordered node pair for the exchange stage.
+    let mut gather: BTreeMap<(GpuId, GpuId), usize> = BTreeMap::new();
+    let mut exchange: BTreeMap<(NodeId, NodeId), usize> = BTreeMap::new();
+    let mut redist: BTreeMap<(GpuId, GpuId), usize> = BTreeMap::new();
+    let mut seen: BTreeSet<(GpuId, u32, NodeId)> = BTreeSet::new();
+
+    for m in &direct.msgs {
+        let sn = machine.gpu_node(m.src);
+        let dn = machine.gpu_node(m.dst);
+        if sn == dn {
+            // On-node messages are delivered directly in the gather stage.
+            *gather.entry((m.src, m.dst)).or_default() += m.bytes;
+            continue;
+        }
+        // Duplicate payloads cross the network once per destination node:
+        // only the first (src, dup_group, dst-node) occurrence is gathered
+        // and exchanged; every occurrence is redistributed on arrival.
+        let unique = m.dup_group == Msg::NO_DUP || seen.insert((m.src, m.dup_group, dn));
+        if unique {
+            let own = owner(machine, sn, dn);
+            if m.src != own {
+                *gather.entry((m.src, own)).or_default() += m.bytes;
+            }
+            *exchange.entry((sn, dn)).or_default() += m.bytes;
+        }
+        let ro = recv_owner(machine, sn, dn);
+        if ro != m.dst {
+            *redist.entry((ro, m.dst)).or_default() += m.bytes;
+        }
+    }
+
+    let pairs = |map: BTreeMap<(GpuId, GpuId), usize>| {
+        CommPattern::new(map.into_iter().map(|((src, dst), bytes)| Msg::new(src, dst, bytes)).collect())
+    };
+    let exchange = CommPattern::new(
+        exchange
+            .into_iter()
+            .map(|((sn, dn), bytes)| Msg::new(owner(machine, sn, dn), recv_owner(machine, sn, dn), bytes))
+            .collect(),
+    );
+    vec![
+        Stage { label: "gather", pattern: pairs(gather) },
+        Stage { label: "exchange", pattern: exchange },
+        Stage { label: "redistribute", pattern: pairs(redist) },
+    ]
+}
+
+/// Build the end-to-end simulator schedule for a lowered collective, on
+/// staged transport. Standard and locality stages reuse the Standard
+/// (staged) schedule generator verbatim — D2H, host↔host, H2D per stage.
+/// Pairwise stages share one up-front D2H and one final H2D (the payload
+/// is resident on the host across rounds), with one barrier phase per
+/// round in between.
+pub fn sim_schedule(machine: &Machine, lowering: &Lowering) -> Schedule {
+    let staged = Strategy::new(StrategyKind::Standard, Transport::Staged).expect("standard staged");
+    let mut phases: Vec<Phase> = Vec::new();
+    match lowering.algorithm {
+        CollectiveAlgorithm::Standard | CollectiveAlgorithm::Locality => {
+            for stage in &lowering.stages {
+                phases.extend(build_schedule(staged, machine, &stage.pattern).phases);
+            }
+        }
+        CollectiveAlgorithm::Pairwise => {
+            let mut out: BTreeMap<GpuId, usize> = BTreeMap::new();
+            let mut inn: BTreeMap<GpuId, usize> = BTreeMap::new();
+            for stage in &lowering.stages {
+                for m in &stage.pattern.msgs {
+                    *out.entry(m.src).or_default() += m.bytes;
+                    *inn.entry(m.dst).or_default() += m.bytes;
+                }
+            }
+            let mut d2h = Phase::new("d2h");
+            for (&g, &bytes) in &out {
+                let proc = machine.gpu_host_proc(g, 1);
+                d2h.copies.push(CopyOp { gpu: g, proc, bytes, dir: CopyKind::D2H, nprocs: 1 });
+            }
+            phases.push(d2h);
+            for stage in &lowering.stages {
+                let mut p2p = Phase::new(stage.label);
+                for m in &stage.pattern.msgs {
+                    p2p.xfers.push(Xfer {
+                        src: Loc::Host(machine.gpu_host_proc(m.src, 1)),
+                        dst: Loc::Host(machine.gpu_host_proc(m.dst, 1)),
+                        bytes: m.bytes,
+                        tag: u32::MAX,
+                    });
+                }
+                phases.push(p2p);
+            }
+            let mut h2d = Phase::new("h2d");
+            for (&g, &bytes) in &inn {
+                let proc = machine.gpu_host_proc(g, 1);
+                h2d.copies.push(CopyOp { gpu: g, proc, bytes, dir: CopyKind::H2D, nprocs: 1 });
+            }
+            phases.push(h2d);
+        }
+    }
+    Schedule {
+        strategy_label: format!("{} {}", lowering.collective.label(), lowering.algorithm.label()),
+        phases: phases.into_iter().filter(|p| !p.is_empty()).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::CollectiveSpec;
+    use crate::topology::machines::lassen;
+
+    fn direct(c: Collective, nodes: usize, block: usize) -> (Machine, CommPattern) {
+        let m = lassen(nodes);
+        let p = CollectiveSpec::new(c, block, 42).materialize(&m);
+        (m, p)
+    }
+
+    #[test]
+    fn standard_is_identity() {
+        let (m, p) = direct(Collective::Alltoall, 3, 512);
+        let l = lower(Collective::Alltoall, CollectiveAlgorithm::Standard, &m, &p);
+        assert_eq!(l.stages.len(), 1);
+        assert_eq!(l.stages[0].pattern, p);
+    }
+
+    #[test]
+    fn pairwise_rounds_partition_the_pattern() {
+        let (m, p) = direct(Collective::Alltoallv, 4, 1024);
+        let l = lower(Collective::Alltoallv, CollectiveAlgorithm::Pairwise, &m, &p);
+        assert_eq!(l.stages.len(), 4, "local round + 3 exchange rounds");
+        assert_eq!(l.stages[0].label, "local");
+        let total: usize = l.stages.iter().map(|s| s.pattern.total_bytes()).sum();
+        assert_eq!(total, p.total_bytes());
+        let msgs: usize = l.stages.iter().map(|s| s.pattern.msgs.len()).sum();
+        assert_eq!(msgs, p.msgs.len());
+        // each round >= 1 has a single destination-node offset
+        for s in &l.stages[1..] {
+            let offs: BTreeSet<usize> = s
+                .pattern
+                .msgs
+                .iter()
+                .map(|x| (m.gpu_node(x.dst).0 + m.num_nodes - m.gpu_node(x.src).0) % m.num_nodes)
+                .collect();
+            assert_eq!(offs.len(), 1);
+        }
+    }
+
+    #[test]
+    fn locality_exchange_is_one_msg_per_node_pair() {
+        let (m, p) = direct(Collective::Alltoallv, 4, 1024);
+        let l = lower(Collective::Alltoallv, CollectiveAlgorithm::Locality, &m, &p);
+        assert_eq!(l.stages.len(), 3);
+        let exchange = &l.stages[1];
+        assert_eq!(exchange.label, "exchange");
+        assert_eq!(exchange.pattern.msgs.len(), m.num_nodes * (m.num_nodes - 1));
+        // every exchange message is inter-node, between the assigned owners
+        for x in &exchange.pattern.msgs {
+            let (sn, dn) = (m.gpu_node(x.src), m.gpu_node(x.dst));
+            assert_ne!(sn, dn);
+            assert_eq!(x.src, owner(&m, sn, dn));
+            assert_eq!(x.dst, recv_owner(&m, sn, dn));
+        }
+        // gather and redistribute never cross nodes
+        assert_eq!(l.stages[0].pattern.internode(&m).count(), 0);
+        assert_eq!(l.stages[2].pattern.internode(&m).count(), 0);
+    }
+
+    #[test]
+    fn locality_exchange_conserves_internode_bytes() {
+        let (m, p) = direct(Collective::Alltoallv, 4, 1024);
+        let l = lower(Collective::Alltoallv, CollectiveAlgorithm::Locality, &m, &p);
+        let direct_inter: usize = p.internode(&m).map(|x| x.bytes).sum();
+        assert_eq!(l.internode_bytes(&m), direct_inter, "no duplicates: exchange ships everything once");
+    }
+
+    #[test]
+    fn locality_dedups_allgather_exchange() {
+        let (m, p) = direct(Collective::Allgather, 4, 1024);
+        let l = lower(Collective::Allgather, CollectiveAlgorithm::Locality, &m, &p);
+        let gpn = m.gpus_per_node();
+        let direct_inter: usize = p.internode(&m).map(|x| x.bytes).sum();
+        // one block per (source proc, destination node) crosses the network
+        assert_eq!(l.internode_bytes(&m), direct_inter / gpn);
+        // but the redistribute stage restores every duplicate on-node
+        let kept: usize = p
+            .internode(&m)
+            .filter(|x| x.dst == recv_owner(&m, m.gpu_node(x.src), m.gpu_node(x.dst)))
+            .map(|x| x.bytes)
+            .sum();
+        let redist_and_kept = l.stages[2].pattern.total_bytes() + kept;
+        assert_eq!(redist_and_kept, direct_inter);
+    }
+
+    #[test]
+    fn lowering_is_order_invariant() {
+        let (m, p) = direct(Collective::Alltoallv, 3, 2048);
+        let mut shuffled = p.clone();
+        let mut rng = crate::util::rng::Rng::new(5);
+        rng.shuffle(&mut shuffled.msgs);
+        assert_ne!(p.msgs, shuffled.msgs, "shuffle changed enumeration order");
+        for alg in CollectiveAlgorithm::ALL {
+            let a = lower(Collective::Alltoallv, alg, &m, &p);
+            let b = lower(Collective::Alltoallv, alg, &m, &shuffled);
+            match alg {
+                // standard preserves enumeration order by construction;
+                // compare as multisets via sorted copies
+                CollectiveAlgorithm::Standard | CollectiveAlgorithm::Pairwise => {
+                    let sort = |l: &Lowering| {
+                        l.stages
+                            .iter()
+                            .map(|s| {
+                                let mut v: Vec<(usize, usize, usize)> =
+                                    s.pattern.msgs.iter().map(|x| (x.src.0, x.dst.0, x.bytes)).collect();
+                                v.sort_unstable();
+                                v
+                            })
+                            .collect::<Vec<_>>()
+                    };
+                    assert_eq!(sort(&a), sort(&b), "{alg}");
+                }
+                CollectiveAlgorithm::Locality => assert_eq!(a, b, "locality lowering must be canonical"),
+            }
+        }
+    }
+
+    #[test]
+    fn sim_schedules_have_expected_shape() {
+        let (m, p) = direct(Collective::Alltoall, 3, 512);
+        for alg in CollectiveAlgorithm::ALL {
+            let l = lower(Collective::Alltoall, alg, &m, &p);
+            let sched = sim_schedule(&m, &l);
+            assert!(!sched.phases.is_empty());
+            let total: usize = sched.phases.iter().flat_map(|ph| &ph.xfers).map(|x| x.bytes).sum();
+            let lowered: usize = l.stages.iter().map(|s| s.pattern.total_bytes()).sum();
+            assert_eq!(total, lowered, "{alg}: schedule must carry every lowered byte");
+        }
+        // pairwise: one d2h + 3 rounds + one h2d
+        let l = lower(Collective::Alltoall, CollectiveAlgorithm::Pairwise, &m, &p);
+        let sched = sim_schedule(&m, &l);
+        assert_eq!(sched.phases.len(), 1 + 3 + 1);
+        assert_eq!(sched.phases[0].label, "d2h");
+        assert_eq!(sched.phases.last().unwrap().label, "h2d");
+    }
+}

@@ -1,0 +1,257 @@
+//! Locality-aware collective operations built from the point-to-point
+//! staging primitives.
+//!
+//! The paper's eight strategies characterize *irregular* point-to-point
+//! exchange; the same node-aware machinery (aggregate on-node, ship once
+//! per node pair, redistribute on arrival) composes directly into
+//! collectives — exactly how mpi-advance's `MPIX_Alltoall` and SparseComm's
+//! socket-split communicator hierarchy are built. This layer:
+//!
+//! - synthesizes collective communication patterns ([`CollectiveSpec`]:
+//!   alltoall, alltoallv with seeded irregular counts, allgather) as plain
+//!   [`crate::pattern::CommPattern`]s, so everything downstream
+//!   (pattern statistics, [`crate::sim::CompiledPattern`] lowering, both
+//!   simulator executors, NodeShape rail assignment) is reused verbatim;
+//! - lowers each collective through three algorithm variants
+//!   ([`CollectiveAlgorithm`]: `standard` direct pairwise, `pairwise`
+//!   ordered exchange, `locality` three-phase gather → node-pair exchange →
+//!   redistribute) into per-stage patterns ([`lower`]);
+//! - costs each variant by composing the existing Table 6 closed-form
+//!   pieces ([`model`]) and by end-to-end discrete-event simulation of the
+//!   lowered schedules;
+//! - sweeps the (collective × algorithm × nodes × gpn × size) grid with
+//!   the standard seeded deterministic JSON/CSV + winner/crossover
+//!   reports ([`sweep`], [`emit`], [`report`]), and compiles collective
+//!   decision surfaces for the advisor ([`surface`], [`persist`]).
+
+pub mod emit;
+pub mod lower;
+pub mod model;
+pub mod persist;
+pub mod report;
+pub mod surface;
+pub mod sweep;
+
+pub use lower::{lower, owner, recv_owner, sim_schedule, Lowering, Stage};
+pub use model::algorithm_time;
+pub use report::{analyze, CollectiveReport, CollectiveWinner, ColCrossover, ColRegimeWinner};
+pub use surface::CollectiveSurface;
+pub use sweep::{run_collective, CollectiveCell, CollectiveConfig, CollectiveGrid, CollectiveResult};
+
+use crate::pattern::{CommPattern, Msg};
+use crate::topology::{GpuId, Machine};
+use crate::util::rng::{index_seed, Rng};
+
+/// The collective operations of this layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Collective {
+    /// Every process ships one equal block to every other process.
+    Alltoall,
+    /// Alltoall with seeded irregular per-pair byte counts (the FFT
+    /// transpose / graph exchange shape).
+    Alltoallv,
+    /// Every process ships the *same* block to every other process —
+    /// node-aware algorithms send it across the network once per node.
+    Allgather,
+}
+
+impl Collective {
+    pub const ALL: [Collective; 3] = [Collective::Alltoall, Collective::Alltoallv, Collective::Allgather];
+
+    /// The user-facing collective name (CLI flags, artifacts).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Collective::Alltoall => "alltoall",
+            Collective::Alltoallv => "alltoallv",
+            Collective::Allgather => "allgather",
+        }
+    }
+
+    /// Parse a user-facing collective name.
+    pub fn parse(s: &str) -> Option<Collective> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "alltoall" | "a2a" => Some(Collective::Alltoall),
+            "alltoallv" | "a2av" => Some(Collective::Alltoallv),
+            "allgather" | "ag" => Some(Collective::Allgather),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Collective {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+/// How a collective is decomposed into point-to-point stages.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum CollectiveAlgorithm {
+    /// Direct pairwise pattern: every logical message travels individually.
+    Standard,
+    /// Ordered exchange: round `r` pairs each node with the node `r` hops
+    /// ahead, serializing the rounds (barriers between them).
+    Pairwise,
+    /// Three-phase node-aware staging (the `MPIX_Alltoall` shape): on-node
+    /// gather to the node-pair owner, one aggregated exchange per node
+    /// pair, on-node redistribute on arrival.
+    Locality,
+}
+
+impl CollectiveAlgorithm {
+    pub const ALL: [CollectiveAlgorithm; 3] =
+        [CollectiveAlgorithm::Standard, CollectiveAlgorithm::Pairwise, CollectiveAlgorithm::Locality];
+
+    /// The user-facing algorithm name (CLI flags, artifacts).
+    pub fn label(&self) -> &'static str {
+        match self {
+            CollectiveAlgorithm::Standard => "standard",
+            CollectiveAlgorithm::Pairwise => "pairwise",
+            CollectiveAlgorithm::Locality => "locality",
+        }
+    }
+
+    /// Parse a user-facing algorithm name.
+    pub fn parse(s: &str) -> Option<CollectiveAlgorithm> {
+        match s.trim().to_ascii_lowercase().replace('_', "-").as_str() {
+            "standard" | "std" => Some(CollectiveAlgorithm::Standard),
+            "pairwise" | "pw" => Some(CollectiveAlgorithm::Pairwise),
+            "locality" | "locality-aware" | "loc" => Some(CollectiveAlgorithm::Locality),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for CollectiveAlgorithm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+/// One collective operation instance: which collective, the per-pair block
+/// size, and the seed that fixes alltoallv's irregular counts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CollectiveSpec {
+    pub collective: Collective,
+    /// Bytes each process ships to each peer (alltoall/allgather exactly;
+    /// alltoallv jitters around it per ordered pair).
+    pub block_bytes: usize,
+    /// Seed for the irregular alltoallv counts. A pure function of
+    /// `(seed, src, dst)` — independent of message enumeration order.
+    pub seed: u64,
+}
+
+impl CollectiveSpec {
+    pub fn new(collective: Collective, block_bytes: usize, seed: u64) -> CollectiveSpec {
+        assert!(block_bytes > 0, "collective block size must be positive");
+        CollectiveSpec { collective, block_bytes, seed }
+    }
+
+    /// Payload bytes for the ordered pair `src → dst` out of `total`
+    /// processes. Alltoallv draws uniformly from `[block/2, 2·block)`
+    /// keyed by the pair, so shuffling process enumeration cannot change
+    /// any pair's size.
+    pub fn pair_bytes(&self, src: GpuId, dst: GpuId, total: usize) -> usize {
+        match self.collective {
+            Collective::Alltoall | Collective::Allgather => self.block_bytes,
+            Collective::Alltoallv => {
+                let lo = (self.block_bytes / 2).max(1);
+                let hi = (self.block_bytes * 2).max(lo + 1);
+                let mut r = Rng::new(index_seed(self.seed, src.0 * total + dst.0));
+                r.usize_in(lo, hi)
+            }
+        }
+    }
+
+    /// Materialize the *direct* communication pattern: one logical message
+    /// per ordered process pair. Allgather messages from one source carry
+    /// identical data, marked via `dup_group` so node-aware accounting
+    /// (and the locality lowering) may ship them once per destination node.
+    pub fn materialize(&self, machine: &Machine) -> CommPattern {
+        let total = machine.total_gpus();
+        let mut msgs = Vec::with_capacity(total * (total - 1));
+        for src in 0..total {
+            for dst in 0..total {
+                if src == dst {
+                    continue;
+                }
+                let (src, dst) = (GpuId(src), GpuId(dst));
+                let bytes = self.pair_bytes(src, dst, total);
+                let mut m = Msg::new(src, dst, bytes);
+                if self.collective == Collective::Allgather {
+                    m.dup_group = src.0 as u32;
+                }
+                msgs.push(m);
+            }
+        }
+        CommPattern::new(msgs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::machines::lassen;
+
+    #[test]
+    fn labels_roundtrip() {
+        for c in Collective::ALL {
+            assert_eq!(Collective::parse(c.label()), Some(c));
+        }
+        for a in CollectiveAlgorithm::ALL {
+            assert_eq!(CollectiveAlgorithm::parse(a.label()), Some(a));
+        }
+        assert_eq!(Collective::parse("A2AV"), Some(Collective::Alltoallv));
+        assert_eq!(CollectiveAlgorithm::parse("locality-aware"), Some(CollectiveAlgorithm::Locality));
+        assert_eq!(Collective::parse("bogus"), None);
+        assert_eq!(CollectiveAlgorithm::parse("bogus"), None);
+    }
+
+    #[test]
+    fn alltoall_is_complete_and_uniform() {
+        let m = lassen(2);
+        let spec = CollectiveSpec::new(Collective::Alltoall, 1024, 7);
+        let p = spec.materialize(&m);
+        let n = m.total_gpus();
+        assert_eq!(p.msgs.len(), n * (n - 1));
+        assert!(p.msgs.iter().all(|msg| msg.bytes == 1024 && msg.src != msg.dst));
+        assert_eq!(p.total_bytes(), 1024 * n * (n - 1));
+    }
+
+    #[test]
+    fn alltoallv_sizes_jitter_deterministically() {
+        let m = lassen(2);
+        let spec = CollectiveSpec::new(Collective::Alltoallv, 1024, 7);
+        let a = spec.materialize(&m);
+        let b = spec.materialize(&m);
+        assert_eq!(a, b, "same seed must give identical patterns");
+        assert!(a.msgs.iter().all(|msg| (512..2048).contains(&msg.bytes)));
+        // genuinely irregular: not all pairs equal
+        assert!(a.msgs.iter().any(|msg| msg.bytes != a.msgs[0].bytes));
+        let other = CollectiveSpec::new(Collective::Alltoallv, 1024, 8).materialize(&m);
+        assert_ne!(a, other, "different seeds must differ");
+    }
+
+    #[test]
+    fn allgather_marks_duplicates_per_source() {
+        let m = lassen(4);
+        let spec = CollectiveSpec::new(Collective::Allgather, 2048, 1);
+        let p = spec.materialize(&m);
+        assert!(p.msgs.iter().all(|msg| msg.dup_group == msg.src.0 as u32));
+        // a source's (gpn) messages into one remote node are all duplicates
+        // of one block: fraction = (gpn - 1) / gpn
+        let f = p.duplicate_fraction(&m);
+        let gpn = m.gpus_per_node() as f64;
+        assert!((f - (gpn - 1.0) / gpn).abs() < 1e-12, "dup fraction {f}");
+    }
+
+    #[test]
+    fn pair_bytes_independent_of_enumeration() {
+        let spec = CollectiveSpec::new(Collective::Alltoallv, 4096, 99);
+        let a = spec.pair_bytes(GpuId(3), GpuId(11), 16);
+        // recomputing in any order yields the same size for the pair
+        let _ = spec.pair_bytes(GpuId(11), GpuId(3), 16);
+        let _ = spec.pair_bytes(GpuId(0), GpuId(1), 16);
+        assert_eq!(spec.pair_bytes(GpuId(3), GpuId(11), 16), a);
+    }
+}

@@ -1,0 +1,220 @@
+//! Closed-form costing of lowered collectives from the Table 6 pieces.
+//!
+//! Each [`Stage`] is costed on staged transport from the existing model
+//! primitives, nothing new is fitted:
+//!
+//! - the **inter-node leg** is the Standard (staged) network term — the
+//!   max-rate model of Eq. (2.2) ([`crate::model::maxrate::MaxRate`]) with
+//!   the (α, β) row selected by the stage's per-message size and the
+//!   injection term divided over the shape's NIC rails — evaluated on the
+//!   stage pattern's own Table 7 statistics;
+//! - the **on-node leg** serializes each endpoint's stage messages with
+//!   the Table 2 on-socket/on-node rows (the postal model, Eq. 2.1);
+//! - the **staging legs** are `T_copy` (Eq. 4.5) on the busiest GPU's
+//!   stage send/receive volumes.
+//!
+//! Within a stage the two legs proceed on disjoint resources (NIC vs
+//! on-node links), so a stage costs `max(inter, intra) + copies`; stages
+//! are barriers and sum. The pairwise algorithm keeps payloads host-resident
+//! across rounds, so it pays the copy legs once and one network term per
+//! round.
+
+use super::lower::Lowering;
+use super::CollectiveAlgorithm;
+use crate::model::{copy, maxrate::MaxRate};
+use crate::params::{Endpoint, MachineParams};
+use crate::pattern::CommPattern;
+use crate::topology::{GpuId, Locality, Machine};
+use std::collections::BTreeMap;
+
+/// The Standard (staged) network term of Table 6 on one stage pattern:
+/// max-rate (Eq. 2.2) with the per-message protocol row and the rails
+/// divisor. Zero when the stage has no inter-node messages.
+pub fn net_time(machine: &Machine, params: &MachineParams, pattern: &CommPattern) -> f64 {
+    let st = pattern.stats(machine);
+    if st.m_std == 0 {
+        return 0.0;
+    }
+    let per_msg = st.s_proc.div_ceil(st.m_std);
+    let ab = params.ab_for(Endpoint::Cpu, Locality::OffNode, per_msg);
+    let mr = MaxRate { alpha: ab.alpha, rb: 1.0 / ab.beta, rn: params.rn() };
+    mr.time_node_rails(st.m_std, st.s_proc, st.s_node, machine.nics_per_node())
+}
+
+/// Busiest-endpoint serialization of a stage's on-node messages: each
+/// endpoint sends (receives) its messages back to back at the Table 2
+/// on-socket / on-node host rows.
+pub fn intra_serial(machine: &Machine, params: &MachineParams, pattern: &CommPattern) -> f64 {
+    let mut send: BTreeMap<GpuId, f64> = BTreeMap::new();
+    let mut recv: BTreeMap<GpuId, f64> = BTreeMap::new();
+    for m in pattern.intranode(machine) {
+        let t = params.msg_time(Endpoint::Cpu, machine.gpu_locality(m.src, m.dst), m.bytes);
+        *send.entry(m.src).or_default() += t;
+        *recv.entry(m.dst).or_default() += t;
+    }
+    let worst = |m: &BTreeMap<GpuId, f64>| m.values().fold(0.0f64, |a, &b| a.max(b));
+    worst(&send).max(worst(&recv))
+}
+
+/// `T_copy` (Eq. 4.5) on the busiest GPU's stage send and receive volumes
+/// (staged transport moves every payload through the host, both
+/// localities).
+pub fn copy_legs(machine: &Machine, params: &MachineParams, pattern: &CommPattern) -> f64 {
+    let _ = machine;
+    if pattern.is_empty() {
+        return 0.0;
+    }
+    let (out_max, in_max) = peak_volumes(pattern.msgs.iter().map(|m| (m.src, m.dst, m.bytes)));
+    copy::t_copy(params, out_max, in_max, 1)
+}
+
+fn peak_volumes(msgs: impl Iterator<Item = (GpuId, GpuId, usize)>) -> (usize, usize) {
+    let mut out: BTreeMap<GpuId, usize> = BTreeMap::new();
+    let mut inn: BTreeMap<GpuId, usize> = BTreeMap::new();
+    for (src, dst, bytes) in msgs {
+        *out.entry(src).or_default() += bytes;
+        *inn.entry(dst).or_default() += bytes;
+    }
+    (out.values().copied().max().unwrap_or(0), inn.values().copied().max().unwrap_or(0))
+}
+
+/// Modeled seconds for one stage: concurrent inter-/on-node legs plus the
+/// stage's staging copies.
+pub fn stage_time(machine: &Machine, params: &MachineParams, pattern: &CommPattern) -> f64 {
+    net_time(machine, params, pattern).max(intra_serial(machine, params, pattern)) + copy_legs(machine, params, pattern)
+}
+
+/// Modeled end-to-end seconds for a lowered collective (the closed-form
+/// twin of simulating [`super::lower::sim_schedule`]).
+pub fn algorithm_time(machine: &Machine, params: &MachineParams, lowering: &Lowering) -> f64 {
+    match lowering.algorithm {
+        CollectiveAlgorithm::Standard | CollectiveAlgorithm::Locality => {
+            lowering.stages.iter().map(|s| stage_time(machine, params, &s.pattern)).sum()
+        }
+        CollectiveAlgorithm::Pairwise => {
+            // one up-front D2H + one final H2D over the union of rounds
+            let (out_max, in_max) = peak_volumes(
+                lowering.stages.iter().flat_map(|s| s.pattern.msgs.iter().map(|m| (m.src, m.dst, m.bytes))),
+            );
+            let copies = if out_max + in_max > 0 { copy::t_copy(params, out_max, in_max, 1) } else { 0.0 };
+            copies
+                + lowering
+                    .stages
+                    .iter()
+                    .map(|s| {
+                        let inter = net_time(machine, params, &s.pattern);
+                        if inter > 0.0 {
+                            inter
+                        } else {
+                            intra_serial(machine, params, &s.pattern)
+                        }
+                    })
+                    .sum::<f64>()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::{lower, Collective, CollectiveAlgorithm, CollectiveSpec};
+    use crate::params::lassen_params;
+    use crate::topology::machines::lassen;
+
+    fn time_of(c: Collective, alg: CollectiveAlgorithm, nodes: usize, block: usize) -> f64 {
+        let m = lassen(nodes);
+        let p = lassen_params();
+        let direct = CollectiveSpec::new(c, block, 42).materialize(&m);
+        algorithm_time(&m, &p, &lower(c, alg, &m, &direct))
+    }
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() / b.abs().max(1e-300) < 1e-9
+    }
+
+    #[test]
+    fn matches_independent_transcription() {
+        // Spot values from the offline transcription of this composition
+        // (same params, same synthesis, same lowering — Python, EXPERIMENTS
+        // workflow). Guards against drift in any piece of the chain.
+        let cases = [
+            (Collective::Alltoall, CollectiveAlgorithm::Standard, 4, 512, 5.7601126827e-5),
+            (Collective::Alltoall, CollectiveAlgorithm::Pairwise, 4, 512, 6.0661586827e-5),
+            (Collective::Alltoall, CollectiveAlgorithm::Locality, 4, 512, 9.1422573037e-5),
+        ];
+        for (c, a, nodes, block, expect) in cases {
+            let got = time_of(c, a, nodes, block);
+            assert!(close(got, expect), "{c} {a} n={nodes} s={block}: got {got:e}, expected {expect:e}");
+        }
+    }
+
+    #[test]
+    fn all_algorithms_positive_finite() {
+        for c in Collective::ALL {
+            for a in CollectiveAlgorithm::ALL {
+                for nodes in [2, 4, 8] {
+                    for block in [512, 8192, 131072] {
+                        let t = time_of(c, a, nodes, block);
+                        assert!(t.is_finite() && t > 0.0, "{c} {a} n={nodes} s={block} -> {t}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn locality_wins_high_node_count_small_messages() {
+        // The headline regime: many nodes, small blocks — standard
+        // collapses under the inter-node message count, locality ships one
+        // aggregated message per node pair.
+        for c in Collective::ALL {
+            let std_t = time_of(c, CollectiveAlgorithm::Standard, 32, 512);
+            let loc_t = time_of(c, CollectiveAlgorithm::Locality, 32, 512);
+            assert!(loc_t < std_t, "{c}: locality {loc_t:e} !< standard {std_t:e} at 32 nodes x 512 B");
+        }
+    }
+
+    #[test]
+    fn standard_wins_few_nodes_large_messages() {
+        // The opposite regime: bandwidth-bound, the extra staging hops and
+        // copies of locality cost more than the saved latencies.
+        for c in Collective::ALL {
+            let std_t = time_of(c, CollectiveAlgorithm::Standard, 2, 524288);
+            let loc_t = time_of(c, CollectiveAlgorithm::Locality, 2, 524288);
+            assert!(std_t < loc_t, "{c}: standard {std_t:e} !< locality {loc_t:e} at 2 nodes x 512 KiB");
+        }
+    }
+
+    #[test]
+    fn gate_cell_margin() {
+        // The CI regime gate: locality-aware alltoallv beats standard at
+        // the high-node-count / small-size cell by >= 3%.
+        let std_t = time_of(Collective::Alltoallv, CollectiveAlgorithm::Standard, 32, 512);
+        let loc_t = time_of(Collective::Alltoallv, CollectiveAlgorithm::Locality, 32, 512);
+        let margin = (std_t - loc_t) / std_t;
+        assert!(margin >= 0.03, "gate margin {margin:.3} < 0.03 (std {std_t:e}, loc {loc_t:e})");
+    }
+
+    #[test]
+    fn allgather_dedup_widens_locality_win() {
+        // Allgather's duplicate blocks cross the network once per node
+        // under locality — its advantage over standard must exceed the
+        // alltoall one at the same cell.
+        let adv = |c: Collective| {
+            let s = time_of(c, CollectiveAlgorithm::Standard, 16, 8192);
+            let l = time_of(c, CollectiveAlgorithm::Locality, 16, 8192);
+            (s - l) / s
+        };
+        assert!(adv(Collective::Allgather) > adv(Collective::Alltoall));
+    }
+
+    #[test]
+    fn empty_pattern_costs_nothing() {
+        let m = lassen(2);
+        let p = lassen_params();
+        let empty = CommPattern::default();
+        assert_eq!(net_time(&m, &p, &empty), 0.0);
+        assert_eq!(intra_serial(&m, &p, &empty), 0.0);
+        assert_eq!(copy_legs(&m, &p, &empty), 0.0);
+    }
+}

@@ -1,0 +1,180 @@
+//! Versioned artifact layer for [`CollectiveSurface`]: schema
+//! `hetcomm.colsurface.v1`.
+//!
+//! Same contract as [`crate::advisor::persist`]: floats are written with
+//! [`fmt_f64`] (shortest-round-trip `Display`), so a loaded surface
+//! reproduces the compiled one bit for bit and emit∘parse∘emit is the
+//! identity on artifact bytes. Hand-rolled on the shared
+//! [`crate::util::json`] substrate — no `serde` in the offline image.
+
+use super::surface::CollectiveSurface;
+use super::{Collective, CollectiveAlgorithm};
+use crate::sweep::emit::esc;
+use crate::util::json::{fmt_f64, fmt_usize_list, Json};
+use std::fmt::Write as _;
+
+/// Schema tag of the collective surface artifact.
+pub const SCHEMA: &str = "hetcomm.colsurface.v1";
+
+/// Serialize a compiled collective surface.
+pub fn to_json(surface: &CollectiveSurface) -> String {
+    let labels = |items: &[String]| {
+        let quoted: Vec<String> = items.iter().map(|l| format!("\"{}\"", esc(l))).collect();
+        format!("[{}]", quoted.join(", "))
+    };
+    let collectives: Vec<String> = surface.collectives.iter().map(|c| c.label().to_string()).collect();
+    let algorithms: Vec<String> = surface.algorithms.iter().map(|a| a.label().to_string()).collect();
+    let mut out = String::new();
+    out.push_str("{\n");
+    let _ = writeln!(out, "  \"schema\": \"{SCHEMA}\",");
+    let _ = writeln!(out, "  \"machine\": \"{}\",", esc(&surface.machine));
+    let _ = writeln!(out, "  \"gpus_per_node\": {},", surface.gpus_per_node);
+    // string, not number: u64 seeds above 2^53 would not survive a
+    // JSON-number round trip (the hetcomm.trace.v1 convention)
+    let _ = writeln!(out, "  \"seed\": \"{}\",", surface.seed);
+    let _ = writeln!(out, "  \"collectives\": {},", labels(&collectives));
+    let _ = writeln!(out, "  \"algorithms\": {},", labels(&algorithms));
+    let _ = writeln!(out, "  \"nodes\": {},", fmt_usize_list(&surface.nodes));
+    let _ = writeln!(out, "  \"sizes\": {},", fmt_usize_list(&surface.sizes));
+    out.push_str("  \"cells\": [\n");
+    for (i, cell) in surface.cells.iter().enumerate() {
+        let times: Vec<String> = cell.iter().map(|&t| fmt_f64(t)).collect();
+        let comma = if i + 1 < surface.cells.len() { "," } else { "" };
+        let _ = writeln!(out, "    [{}]{comma}", times.join(", "));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write a surface artifact to disk.
+pub fn save(surface: &CollectiveSurface, path: &str) -> Result<(), String> {
+    std::fs::write(path, to_json(surface)).map_err(|e| format!("cannot write {path}: {e}"))
+}
+
+/// Load and validate a surface artifact from disk.
+pub fn load(path: &str) -> Result<CollectiveSurface, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+    parse_json(&text)
+}
+
+fn as_seed(v: &Json) -> Result<u64, String> {
+    let s = v.as_str()?;
+    s.parse::<u64>().map_err(|_| format!("expected a u64 seed string, found {s:?}"))
+}
+
+/// Parse and validate a `hetcomm.colsurface.v1` artifact.
+pub fn parse_json(text: &str) -> Result<CollectiveSurface, String> {
+    let value = Json::parse(text)?;
+    let schema = value.field("schema")?.as_str()?;
+    if schema != SCHEMA {
+        return Err(format!("unsupported collective surface schema {schema:?} (want {SCHEMA:?})"));
+    }
+    let collectives = value
+        .field("collectives")?
+        .as_arr()?
+        .iter()
+        .map(|v| {
+            let label = v.as_str()?;
+            Collective::parse(label).ok_or_else(|| format!("unknown collective {label:?}"))
+        })
+        .collect::<Result<Vec<_>, String>>()?;
+    let algorithms = value
+        .field("algorithms")?
+        .as_arr()?
+        .iter()
+        .map(|v| {
+            let label = v.as_str()?;
+            CollectiveAlgorithm::parse(label).ok_or_else(|| format!("unknown collective algorithm {label:?}"))
+        })
+        .collect::<Result<Vec<_>, String>>()?;
+    let cells = value
+        .field("cells")?
+        .as_arr()?
+        .iter()
+        .map(|row| row.as_arr()?.iter().map(Json::as_f64).collect::<Result<Vec<f64>, String>>())
+        .collect::<Result<Vec<_>, String>>()?;
+    let surface = CollectiveSurface {
+        machine: value.field("machine")?.as_str()?.to_string(),
+        gpus_per_node: value.field("gpus_per_node")?.as_usize()?,
+        seed: as_seed(value.field("seed")?)?,
+        collectives,
+        nodes: value.field("nodes")?.as_usize_list()?,
+        sizes: value.field("sizes")?.as_usize_list()?,
+        algorithms,
+        cells,
+    };
+    surface.validate()?;
+    Ok(surface)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> CollectiveSurface {
+        CollectiveSurface::compile("lassen", 4, vec![2, 32], vec![512, 1 << 19], 42).unwrap()
+    }
+
+    #[test]
+    fn round_trip_is_bit_exact() {
+        let surface = tiny();
+        let json = to_json(&surface);
+        let parsed = parse_json(&json).unwrap();
+        assert_eq!(surface, parsed);
+        for (a, b) in surface.cells.iter().zip(&parsed.cells) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // emit . parse . emit is the identity on artifact bytes
+        assert_eq!(json, to_json(&parsed));
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let surface = tiny();
+        let path = std::env::temp_dir().join("hetcomm-colsurface-test.json");
+        let path = path.to_str().unwrap();
+        save(&surface, path).unwrap();
+        let loaded = load(path).unwrap();
+        assert_eq!(surface, loaded);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn corrupt_artifacts_rejected() {
+        let surface = tiny();
+        let json = to_json(&surface);
+
+        let wrong_schema = json.replacen("hetcomm.colsurface.v1", "hetcomm.colsurface.v9", 1);
+        assert!(parse_json(&wrong_schema).unwrap_err().contains("schema"));
+
+        let bad_seed = json.replacen("\"seed\": \"42\"", "\"seed\": \"forty-two\"", 1);
+        assert!(parse_json(&bad_seed).unwrap_err().contains("seed"));
+
+        let bad_label = json.replacen("\"pairwise\"", "\"bogus\"", 1);
+        assert!(parse_json(&bad_label).unwrap_err().contains("bogus"));
+
+        let truncated = &json[..json.len() / 2];
+        assert!(parse_json(truncated).is_err());
+
+        // dropping a cell breaks the lattice shape check
+        let mut short = surface.clone();
+        short.cells.pop();
+        assert!(parse_json(&to_json(&short)).unwrap_err().contains("cells"));
+
+        // a poisoned time breaks the finite-positive check
+        let mut poisoned = surface.clone();
+        poisoned.cells[0][0] = -1.0;
+        assert!(parse_json(&to_json(&poisoned)).is_err());
+    }
+
+    #[test]
+    fn lookup_after_reload_matches_compile() {
+        let surface = tiny();
+        let loaded = parse_json(&to_json(&surface)).unwrap();
+        let a = surface.lookup(super::super::Collective::Alltoallv, 32, 512).unwrap();
+        let b = loaded.lookup(super::super::Collective::Alltoallv, 32, 512).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,243 @@
+//! Collective sweep analysis: per-cell winning algorithms, winner
+//! crossovers along the size axis, and per-band regime winners — the
+//! collective twin of [`crate::sweep::report`], driving the headline
+//! "locality-aware alltoallv wins the high-node-count small-message
+//! regime" narrative.
+
+use super::sweep::CollectiveCell;
+use super::Collective;
+use crate::sweep::SMALL_BAND_MAX;
+use std::collections::BTreeMap;
+
+/// The model-fastest algorithm of one collective grid cell.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CollectiveWinner {
+    pub collective: Collective,
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub size: usize,
+    /// Label of the model-fastest algorithm.
+    pub winner: &'static str,
+    pub model_s: f64,
+    /// Modeled advantage of the winner over the `standard` baseline,
+    /// `(standard - winner) / standard` (0 when standard wins or was not
+    /// evaluated).
+    pub margin_vs_standard: f64,
+    /// Label of the simulator-fastest algorithm, when the sweep simulated.
+    pub sim_winner: Option<&'static str>,
+}
+
+/// A model winner change between two adjacent sizes of one regime line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ColCrossover {
+    pub collective: Collective,
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    /// Largest size still won by `from`.
+    pub size_before: usize,
+    /// Smallest size won by `to`.
+    pub size_after: usize,
+    pub from: &'static str,
+    pub to: &'static str,
+}
+
+/// The algorithm minimizing total modeled time over one band of one regime
+/// line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ColRegimeWinner {
+    pub collective: Collective,
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    /// `"small"` (size <= [`SMALL_BAND_MAX`]) or `"large"`.
+    pub band: &'static str,
+    pub winner: &'static str,
+    pub total_model_s: f64,
+}
+
+/// The derived collective sweep report.
+#[derive(Clone, Debug, Default)]
+pub struct CollectiveReport {
+    pub winners: Vec<CollectiveWinner>,
+    pub crossovers: Vec<ColCrossover>,
+    pub regimes: Vec<ColRegimeWinner>,
+}
+
+fn same_line(a: &CollectiveCell, b: &CollectiveCell) -> bool {
+    a.collective == b.collective && a.nodes == b.nodes && a.gpus_per_node == b.gpus_per_node
+}
+
+fn winners_same_line(a: &CollectiveWinner, b: &CollectiveWinner) -> bool {
+    a.collective == b.collective && a.nodes == b.nodes && a.gpus_per_node == b.gpus_per_node
+}
+
+/// Analyze collective cells (in engine output order: grid-cell major,
+/// algorithms within) into winners, crossovers and regime winners.
+pub fn analyze(cells: &[CollectiveCell]) -> CollectiveReport {
+    let mut report = CollectiveReport::default();
+
+    // --- Per-cell winners: min model time over each cell's algorithms. ---
+    let mut i = 0;
+    while i < cells.len() {
+        let mut j = i + 1;
+        while j < cells.len() && cells[j].index == cells[i].index {
+            j += 1;
+        }
+        let group = &cells[i..j];
+        let best = group
+            .iter()
+            .min_by(|a, b| a.model_s.partial_cmp(&b.model_s).expect("finite model times"))
+            .expect("non-empty cell group");
+        let sim_winner = group
+            .iter()
+            .filter(|c| c.sim_s.is_some())
+            .min_by(|a, b| a.sim_s.partial_cmp(&b.sim_s).expect("finite sim times"))
+            .map(|c| c.algorithm.label());
+        let margin = group
+            .iter()
+            .find(|c| c.algorithm == super::CollectiveAlgorithm::Standard)
+            .map(|std| if std.model_s > 0.0 { (std.model_s - best.model_s) / std.model_s } else { 0.0 })
+            .unwrap_or(0.0);
+        report.winners.push(CollectiveWinner {
+            collective: best.collective,
+            nodes: best.nodes,
+            gpus_per_node: best.gpus_per_node,
+            size: best.size,
+            winner: best.algorithm.label(),
+            model_s: best.model_s,
+            margin_vs_standard: margin,
+            sim_winner,
+        });
+        i = j;
+    }
+
+    // --- Crossovers: winner changes along each regime line (ascending
+    // size; the grid emits sizes sorted). ---
+    let mut k = 0;
+    while k < report.winners.len() {
+        let mut j = k + 1;
+        while j < report.winners.len() && winners_same_line(&report.winners[j], &report.winners[k]) {
+            j += 1;
+        }
+        for w in report.winners[k..j].windows(2) {
+            if w[0].winner != w[1].winner {
+                report.crossovers.push(ColCrossover {
+                    collective: w[0].collective,
+                    nodes: w[0].nodes,
+                    gpus_per_node: w[0].gpus_per_node,
+                    size_before: w[0].size,
+                    size_after: w[1].size,
+                    from: w[0].winner,
+                    to: w[1].winner,
+                });
+            }
+        }
+        k = j;
+    }
+
+    // --- Regime winners: per line and band, min total modeled time. ---
+    let mut i = 0;
+    while i < cells.len() {
+        let mut j = i + 1;
+        while j < cells.len() && same_line(&cells[j], &cells[i]) {
+            j += 1;
+        }
+        let line = &cells[i..j];
+        for (band, want_small) in [("small", true), ("large", false)] {
+            let mut totals: BTreeMap<&'static str, f64> = BTreeMap::new();
+            for c in line.iter().filter(|c| (c.size <= SMALL_BAND_MAX) == want_small) {
+                *totals.entry(c.algorithm.label()).or_default() += c.model_s;
+            }
+            if totals.is_empty() {
+                continue;
+            }
+            let (&winner, &total) =
+                totals.iter().min_by(|a, b| a.1.partial_cmp(b.1).expect("finite totals")).expect("non-empty band");
+            report.regimes.push(ColRegimeWinner {
+                collective: line[0].collective,
+                nodes: line[0].nodes,
+                gpus_per_node: line[0].gpus_per_node,
+                band,
+                winner,
+                total_model_s: total,
+            });
+        }
+        i = j;
+    }
+
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::CollectiveAlgorithm;
+
+    /// Build a synthetic cell group: standard and locality with fixed
+    /// model times.
+    fn mk_cells(specs: &[(usize, usize, f64, f64)]) -> Vec<CollectiveCell> {
+        // (index, size, t_standard, t_locality)
+        let mut out = Vec::new();
+        for &(index, size, t_std, t_loc) in specs {
+            for (alg, t) in [(CollectiveAlgorithm::Standard, t_std), (CollectiveAlgorithm::Locality, t_loc)] {
+                out.push(CollectiveCell {
+                    index,
+                    collective: Collective::Alltoallv,
+                    algorithm: alg,
+                    nodes: 32,
+                    gpus_per_node: 4,
+                    size,
+                    model_s: t,
+                    sim_s: Some(t * 1.1),
+                    stages: if alg == CollectiveAlgorithm::Standard { 1 } else { 3 },
+                    internode_msgs: 100,
+                    internode_bytes: 100 * size,
+                });
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn winners_margin_and_crossover_detected() {
+        // Locality wins the two small cells, standard takes the large one.
+        let cells = mk_cells(&[(0, 512, 2.0, 1.0), (1, 4096, 2.0, 1.5), (2, 1 << 20, 4.0, 9.0)]);
+        let r = analyze(&cells);
+        assert_eq!(r.winners.len(), 3);
+        assert_eq!(r.winners[0].winner, "locality");
+        assert!((r.winners[0].margin_vs_standard - 0.5).abs() < 1e-12);
+        assert_eq!(r.winners[2].winner, "standard");
+        assert_eq!(r.winners[2].margin_vs_standard, 0.0);
+        assert_eq!(r.crossovers.len(), 1);
+        let x = &r.crossovers[0];
+        assert_eq!((x.size_before, x.size_after), (4096, 1 << 20));
+        assert_eq!((x.from, x.to), ("locality", "standard"));
+    }
+
+    #[test]
+    fn regime_winners_locality_small_standard_large() {
+        let cells = mk_cells(&[(0, 512, 2.0, 1.0), (1, 4096, 2.0, 1.5), (2, 1 << 20, 4.0, 9.0)]);
+        let r = analyze(&cells);
+        assert_eq!(r.regimes.len(), 2);
+        let small = r.regimes.iter().find(|g| g.band == "small").unwrap();
+        assert_eq!(small.winner, "locality");
+        assert!((small.total_model_s - 2.5).abs() < 1e-12);
+        let large = r.regimes.iter().find(|g| g.band == "large").unwrap();
+        assert_eq!(large.winner, "standard");
+    }
+
+    #[test]
+    fn sim_winner_tracked_separately() {
+        let mut cells = mk_cells(&[(0, 512, 1.0, 2.0)]);
+        cells[0].sim_s = Some(5.0);
+        cells[1].sim_s = Some(0.5);
+        let r = analyze(&cells);
+        assert_eq!(r.winners[0].winner, "standard");
+        assert_eq!(r.winners[0].sim_winner, Some("locality"));
+    }
+
+    #[test]
+    fn empty_input_empty_report() {
+        let r = analyze(&[]);
+        assert!(r.winners.is_empty() && r.crossovers.is_empty() && r.regimes.is_empty());
+    }
+}

@@ -1,0 +1,308 @@
+//! Compiled collective decision surfaces: the composed Table 6 collective
+//! models ([`super::model`]) evaluated once over a (collective × nodes ×
+//! size) lattice at a fixed GPUs-per-node count, so the advisor answers
+//! "which algorithm for this alltoallv at this scale?" with a lattice read
+//! instead of synthesizing and lowering patterns.
+//!
+//! Queries interpolate in log₂-space along the size axis and snap to the
+//! nearest lattice value on the node axis, the same discipline as
+//! [`crate::advisor::DecisionSurface`]; at lattice points the stored model
+//! times come back bit-for-bit.
+
+use super::{algorithm_time, lower, Collective, CollectiveAlgorithm, CollectiveSpec};
+use crate::topology::machines;
+use crate::util::rng::index_seed;
+
+/// Ranked algorithms for one query, fastest first (ties keep
+/// [`CollectiveAlgorithm::ALL`] order).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RankedAlgorithms {
+    /// `(algorithm, predicted seconds)`, ascending by time.
+    pub ranked: Vec<(CollectiveAlgorithm, f64)>,
+}
+
+impl RankedAlgorithms {
+    /// The winning algorithm and its predicted time.
+    pub fn best(&self) -> (CollectiveAlgorithm, f64) {
+        self.ranked[0]
+    }
+}
+
+/// A compiled per-machine collective decision surface.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CollectiveSurface {
+    /// Canonical registry name of the machine ([`machines::parse`]).
+    pub machine: String,
+    /// GPUs per node the lattice was evaluated at.
+    pub gpus_per_node: usize,
+    /// Base seed of the lattice synthesis (fixes alltoallv's irregular
+    /// counts; each lattice point derives its own sub-seed by flat index).
+    pub seed: u64,
+    /// Collectives on the lattice, in [`Collective::ALL`] order.
+    pub collectives: Vec<Collective>,
+    /// Node-count axis (strictly ascending).
+    pub nodes: Vec<usize>,
+    /// Block-size axis [bytes] (strictly ascending).
+    pub sizes: Vec<usize>,
+    /// Algorithms evaluated per cell, in [`CollectiveAlgorithm::ALL`] order.
+    pub algorithms: Vec<CollectiveAlgorithm>,
+    /// Modeled seconds per lattice cell × algorithm; cells are in
+    /// row-major (collective, nodes, size) order — size fastest.
+    pub cells: Vec<Vec<f64>>,
+}
+
+/// Log-space linear interpolation that returns the endpoints bit-exactly
+/// at the boundary weights (lattice-point lookups reproduce stored values).
+fn lerp_log(a: f64, b: f64, w: f64) -> f64 {
+    if w <= 0.0 {
+        a
+    } else if w >= 1.0 {
+        b
+    } else {
+        (a.ln() * (1.0 - w) + b.ln() * w).exp()
+    }
+}
+
+/// Bracketing indices and log₂-space weight for `v` on a sorted axis;
+/// clamps outside the range, degenerates to one index on exact hits.
+fn bracket(axis: &[usize], v: usize) -> (usize, usize, f64) {
+    if v <= axis[0] {
+        return (0, 0, 0.0);
+    }
+    if v >= *axis.last().expect("validated axis") {
+        let i = axis.len() - 1;
+        return (i, i, 0.0);
+    }
+    let hi = axis.partition_point(|&a| a < v);
+    if axis[hi] == v {
+        return (hi, hi, 0.0);
+    }
+    let lo = hi - 1;
+    let (x0, x1) = ((axis[lo] as f64).log2(), (axis[hi] as f64).log2());
+    (lo, hi, ((v as f64).log2() - x0) / (x1 - x0))
+}
+
+/// Index of the axis value nearest `v` in log₂ space (ties toward smaller).
+fn nearest(axis: &[usize], v: usize) -> usize {
+    let lv = (v.max(1) as f64).log2();
+    let mut best = 0;
+    let mut best_d = f64::INFINITY;
+    for (i, &a) in axis.iter().enumerate() {
+        let d = ((a as f64).log2() - lv).abs();
+        if d < best_d {
+            best_d = d;
+            best = i;
+        }
+    }
+    best
+}
+
+impl CollectiveSurface {
+    /// The default serving lattice: the collective characterization ranges.
+    pub fn default_nodes() -> Vec<usize> {
+        vec![2, 4, 8, 16, 32]
+    }
+
+    /// Default block-size axis [bytes].
+    pub fn default_sizes() -> Vec<usize> {
+        (9..=19).step_by(2).map(|e| 1usize << e).collect()
+    }
+
+    /// Compile a surface: evaluate the composed collective models at every
+    /// lattice point (model-only — no simulation). Deterministic — two
+    /// compiles of the same spec produce bit-identical surfaces.
+    pub fn compile(
+        machine: &str,
+        gpus_per_node: usize,
+        mut nodes: Vec<usize>,
+        mut sizes: Vec<usize>,
+        seed: u64,
+    ) -> Result<CollectiveSurface, String> {
+        let (arch, params) = machines::parse(machine, 1)?;
+        if gpus_per_node < 2 || gpus_per_node % arch.sockets_per_node != 0 {
+            return Err(format!(
+                "{gpus_per_node} GPUs/node does not divide over the {} sockets of {}",
+                arch.sockets_per_node, arch.name
+            ));
+        }
+        for axis in [&mut nodes, &mut sizes] {
+            axis.sort_unstable();
+            axis.dedup();
+        }
+        if nodes.is_empty() || nodes[0] < 2 {
+            return Err("collective surface node axis must be non-empty with values >= 2".into());
+        }
+        if sizes.is_empty() || sizes[0] == 0 {
+            return Err("collective surface size axis must be non-empty and positive".into());
+        }
+        let collectives = Collective::ALL.to_vec();
+        let algorithms = CollectiveAlgorithm::ALL.to_vec();
+        let mut cells = Vec::with_capacity(collectives.len() * nodes.len() * sizes.len());
+        for &collective in &collectives {
+            for &n in &nodes {
+                for &s in &sizes {
+                    let m = machines::with_shape(&arch, n, gpus_per_node);
+                    let spec = CollectiveSpec::new(collective, s, index_seed(seed, cells.len()));
+                    let direct = spec.materialize(&m);
+                    let times = algorithms
+                        .iter()
+                        .map(|&a| algorithm_time(&m, &params, &lower(collective, a, &m, &direct)))
+                        .collect();
+                    cells.push(times);
+                }
+            }
+        }
+        let surface = CollectiveSurface {
+            machine: arch.name.clone(),
+            gpus_per_node,
+            seed,
+            collectives,
+            nodes,
+            sizes,
+            algorithms,
+            cells,
+        };
+        surface.validate()?;
+        Ok(surface)
+    }
+
+    /// Structural sanity (used after artifact loads); returns a user-facing
+    /// message on failure.
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, axis) in [("nodes", &self.nodes), ("sizes", &self.sizes)] {
+            if axis.is_empty() {
+                return Err(format!("collective surface axis {name:?} is empty"));
+            }
+            if axis.iter().any(|&v| v == 0) {
+                return Err(format!("collective surface axis {name:?} has a zero value"));
+            }
+            if axis.windows(2).any(|w| w[0] >= w[1]) {
+                return Err(format!("collective surface axis {name:?} must be strictly ascending"));
+            }
+        }
+        if self.nodes[0] < 2 {
+            return Err("collective surface node axis must start at >= 2".into());
+        }
+        if self.collectives.is_empty() || self.algorithms.is_empty() {
+            return Err("collective surface has no collectives or no algorithms".into());
+        }
+        if self.cells.len() != self.collectives.len() * self.nodes.len() * self.sizes.len() {
+            return Err(format!(
+                "collective surface has {} cells, axes imply {}",
+                self.cells.len(),
+                self.collectives.len() * self.nodes.len() * self.sizes.len()
+            ));
+        }
+        for (i, cell) in self.cells.iter().enumerate() {
+            if cell.len() != self.algorithms.len() {
+                return Err(format!("cell {i} has {} times, expected {}", cell.len(), self.algorithms.len()));
+            }
+            if cell.iter().any(|t| !t.is_finite() || *t <= 0.0) {
+                return Err(format!("cell {i} holds a non-positive or non-finite time"));
+            }
+        }
+        let (arch, _) = machines::parse(&self.machine, 1)?;
+        if self.gpus_per_node < 2 || self.gpus_per_node % arch.sockets_per_node != 0 {
+            return Err(format!(
+                "surface claims {} GPUs/node, which does not divide over the {} sockets of {}",
+                self.gpus_per_node, arch.sockets_per_node, arch.name
+            ));
+        }
+        Ok(())
+    }
+
+    /// Flat cell index; size is the fastest axis.
+    fn index(&self, ci: usize, ni: usize, si: usize) -> usize {
+        (ci * self.nodes.len() + ni) * self.sizes.len() + si
+    }
+
+    /// Interpolated lookup: log₂-space interpolation along the size axis,
+    /// nearest lattice value on the node axis; queries outside the lattice
+    /// clamp to the boundary. Returns `None` when the surface does not
+    /// cover `collective`. At lattice points the stored model times come
+    /// back bit-for-bit.
+    pub fn lookup(&self, collective: Collective, nodes: usize, size: usize) -> Option<RankedAlgorithms> {
+        let ci = self.collectives.iter().position(|&c| c == collective)?;
+        let ni = nearest(&self.nodes, nodes);
+        let (s0, s1, ws) = bracket(&self.sizes, size);
+        let r0 = &self.cells[self.index(ci, ni, s0)];
+        let r1 = &self.cells[self.index(ci, ni, s1)];
+        let mut ranked: Vec<(CollectiveAlgorithm, f64)> = self
+            .algorithms
+            .iter()
+            .enumerate()
+            .map(|(k, &a)| (a, lerp_log(r0[k], r1[k], ws)))
+            .collect();
+        ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("finite surface times"));
+        Some(RankedAlgorithms { ranked })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> CollectiveSurface {
+        CollectiveSurface::compile("lassen", 4, vec![2, 4, 32], vec![512, 8192, 1 << 19], 42).unwrap()
+    }
+
+    #[test]
+    fn compile_shape_and_determinism() {
+        let a = tiny();
+        assert_eq!(a.cells.len(), 3 * 3 * 3);
+        assert_eq!(a.machine, "lassen");
+        a.validate().unwrap();
+        let b = tiny();
+        assert_eq!(a, b, "compile must be deterministic");
+    }
+
+    #[test]
+    fn lattice_lookup_is_exact() {
+        let s = tiny();
+        let r = s.lookup(Collective::Alltoallv, 4, 8192).unwrap();
+        let idx = s.index(1, 1, 1); // alltoallv, nodes=4, size=8192
+        for (alg, t) in &r.ranked {
+            let k = s.algorithms.iter().position(|a| a == alg).unwrap();
+            assert_eq!(t.to_bits(), s.cells[idx][k].to_bits(), "{alg}");
+        }
+        assert!(r.ranked.windows(2).all(|w| w[0].1 <= w[1].1));
+        assert_eq!(r.best().1, r.ranked[0].1);
+    }
+
+    #[test]
+    fn locality_wins_the_high_node_small_size_corner() {
+        let s = tiny();
+        let r = s.lookup(Collective::Alltoallv, 32, 512).unwrap();
+        assert_eq!(r.best().0, CollectiveAlgorithm::Locality);
+        let r = s.lookup(Collective::Alltoallv, 2, 1 << 19).unwrap();
+        assert_eq!(r.best().0, CollectiveAlgorithm::Standard);
+    }
+
+    #[test]
+    fn off_lattice_queries_clamp_and_interpolate() {
+        let s = tiny();
+        // clamped extremes reproduce the corner cells
+        let lo = s.lookup(Collective::Alltoall, 1, 1).unwrap();
+        let corner = s.lookup(Collective::Alltoall, 2, 512).unwrap();
+        assert_eq!(lo, corner);
+        // interior sizes land within the bracketing envelope
+        let mid = s.lookup(Collective::Alltoall, 4, 2048).unwrap();
+        for (alg, t) in &mid.ranked {
+            let k = s.algorithms.iter().position(|a| a == alg).unwrap();
+            let (a, b) = (s.cells[s.index(0, 1, 0)][k], s.cells[s.index(0, 1, 1)][k]);
+            let (lo, hi) = (a.min(b), a.max(b));
+            assert!(*t >= lo * (1.0 - 1e-12) && *t <= hi * (1.0 + 1e-12), "{alg} {t} outside [{lo}, {hi}]");
+        }
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        assert!(CollectiveSurface::compile("bogus", 4, vec![2], vec![512], 1).is_err());
+        assert!(CollectiveSurface::compile("lassen", 3, vec![2], vec![512], 1).is_err());
+        assert!(CollectiveSurface::compile("lassen", 4, vec![1, 2], vec![512], 1).is_err());
+        assert!(CollectiveSurface::compile("lassen", 4, vec![2], vec![], 1).is_err());
+        let mut s = tiny();
+        s.cells.pop();
+        assert!(s.validate().is_err());
+    }
+}

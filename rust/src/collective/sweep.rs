@@ -1,0 +1,388 @@
+//! The collective sweep engine: fan the (collective × nodes × gpn × size)
+//! grid out over the in-tree worker pool, evaluate every algorithm variant
+//! per point through the composed Table 6 models and (optionally) the
+//! discrete-event simulator, and collect results in a deterministic order.
+//!
+//! Same determinism contract as [`crate::sweep`]: given the same
+//! [`CollectiveConfig`] (including `seed`), two runs produce byte-identical
+//! emitter output regardless of thread count — cells are seeded by index
+//! and results land in pre-sized per-cell slots in grid order.
+
+use super::report::{analyze, CollectiveReport};
+use super::{lower, model, sim_schedule, Collective, CollectiveAlgorithm, CollectiveSpec};
+use crate::params::{CompiledParams, MachineParams};
+use crate::sim;
+use crate::topology::{machines, Machine};
+use crate::util::pool;
+use crate::util::pool::effective_threads;
+use crate::util::rng::index_seed as cell_seed;
+use std::time::Instant;
+
+/// The collective grid: every combination of the axes below is one cell,
+/// and every cell is evaluated for every selected algorithm.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CollectiveGrid {
+    /// Collectives to sweep.
+    pub collectives: Vec<Collective>,
+    /// Algorithm variants evaluated at every grid point.
+    pub algorithms: Vec<CollectiveAlgorithm>,
+    /// Node counts (every process participates — no extra sender node).
+    pub nodes: Vec<usize>,
+    /// GPUs per node (even: the preset node keeps its 2 sockets).
+    pub gpus_per_node: Vec<usize>,
+    /// Per-pair block sizes in bytes (alltoallv jitters around them).
+    pub sizes: Vec<usize>,
+}
+
+impl Default for CollectiveGrid {
+    fn default() -> CollectiveGrid {
+        CollectiveGrid {
+            collectives: Collective::ALL.to_vec(),
+            algorithms: CollectiveAlgorithm::ALL.to_vec(),
+            nodes: vec![2, 8, 32],
+            gpus_per_node: vec![4],
+            sizes: (9..=19).step_by(2).map(|e| 1usize << e).collect(),
+        }
+    }
+}
+
+/// One unit of collective sweep work: a fully-specified grid point (all
+/// algorithms are evaluated inside the cell so the direct pattern is
+/// synthesized once).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ColCellSpec {
+    /// Position in [`CollectiveGrid::cells`] — drives the per-cell seed and
+    /// the deterministic output order.
+    pub index: usize,
+    pub collective: Collective,
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub size: usize,
+}
+
+impl CollectiveGrid {
+    /// A sub-second grid for CI smoke tests that still exercises every
+    /// collective and algorithm on both sides of the small/large band.
+    pub fn tiny() -> CollectiveGrid {
+        CollectiveGrid {
+            collectives: Collective::ALL.to_vec(),
+            algorithms: CollectiveAlgorithm::ALL.to_vec(),
+            nodes: vec![2, 4],
+            gpus_per_node: vec![4],
+            sizes: vec![512, 1 << 14],
+        }
+    }
+
+    /// Check axis sanity; returns a user-facing message on failure.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.collectives.is_empty() {
+            return Err("no collectives selected".into());
+        }
+        if self.algorithms.is_empty() {
+            return Err("no collective algorithms selected".into());
+        }
+        if self.nodes.is_empty() || self.nodes.iter().any(|&n| n < 2) {
+            return Err("collective node counts must be non-empty and >= 2".into());
+        }
+        if self.gpus_per_node.is_empty() || self.gpus_per_node.iter().any(|&g| g < 2 || g % 2 != 0) {
+            return Err("GPUs-per-node values must be even and >= 2 (2-socket nodes)".into());
+        }
+        if self.sizes.is_empty() || self.sizes.iter().any(|&s| s == 0) {
+            return Err("block sizes must be non-empty and positive".into());
+        }
+        Ok(())
+    }
+
+    /// Flatten the axes into cells, in deterministic collective-major order.
+    /// Sizes are sorted (and deduplicated) so per-regime winner lines read
+    /// in ascending size order, which is what crossover detection assumes.
+    pub fn cells(&self) -> Vec<ColCellSpec> {
+        let mut sizes = self.sizes.clone();
+        sizes.sort_unstable();
+        sizes.dedup();
+        let mut out =
+            Vec::with_capacity(self.collectives.len() * self.nodes.len() * self.gpus_per_node.len() * sizes.len());
+        for &collective in &self.collectives {
+            for &nodes in &self.nodes {
+                for &gpn in &self.gpus_per_node {
+                    for &size in &sizes {
+                        out.push(ColCellSpec { index: out.len(), collective, nodes, gpus_per_node: gpn, size });
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Full collective sweep configuration: the grid plus run controls.
+#[derive(Clone, Debug)]
+pub struct CollectiveConfig {
+    pub grid: CollectiveGrid,
+    /// Base seed; each cell derives its own deterministic sub-seed (fixes
+    /// alltoallv's irregular counts).
+    pub seed: u64,
+    /// Worker threads; 0 = one per available core.
+    pub threads: usize,
+    /// Run the discrete-event simulator on the lowered schedules next to
+    /// the composed models.
+    pub sim: bool,
+    /// Machine preset evaluated at every grid point (a
+    /// [`machines::parse`] registry name; nodes and GPUs come from the
+    /// grid axes).
+    pub machine: String,
+}
+
+impl Default for CollectiveConfig {
+    fn default() -> CollectiveConfig {
+        CollectiveConfig { grid: CollectiveGrid::default(), seed: 42, threads: 0, sim: true, machine: "lassen".into() }
+    }
+}
+
+/// One evaluated (cell × algorithm) pair.
+#[derive(Clone, Debug)]
+pub struct CollectiveCell {
+    /// Index of the owning grid cell (groups the algorithms of one cell).
+    pub index: usize,
+    pub collective: Collective,
+    pub algorithm: CollectiveAlgorithm,
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub size: usize,
+    /// Composed Table 6 model prediction [s].
+    pub model_s: f64,
+    /// Discrete-event simulated time of the lowered schedule [s] (None
+    /// when `sim` is off).
+    pub sim_s: Option<f64>,
+    /// Barrier-separated stages of the lowering.
+    pub stages: usize,
+    /// Inter-node messages the lowering issues across all stages.
+    pub internode_msgs: usize,
+    /// Inter-node bytes the lowering ships across all stages.
+    pub internode_bytes: usize,
+}
+
+/// The collective sweep outcome: per-cell results plus the derived report.
+#[derive(Clone, Debug)]
+pub struct CollectiveResult {
+    pub config: CollectiveConfig,
+    pub cells: Vec<CollectiveCell>,
+    pub report: CollectiveReport,
+    /// Threads the pool actually used.
+    pub threads_used: usize,
+    /// Wall-clock seconds for the evaluation (excluded from emitter output
+    /// so seeded runs stay byte-identical).
+    pub elapsed_s: f64,
+}
+
+/// Run the collective sweep: validate, fan out, aggregate, analyze.
+pub fn run_collective(config: &CollectiveConfig) -> Result<CollectiveResult, String> {
+    config.grid.validate()?;
+    let (arch, params) = machines::parse(&config.machine, 1)?;
+    let compiled_params = params.compile();
+    let cells = config.grid.cells();
+    let t0 = Instant::now();
+    let threads = effective_threads(config.threads, cells.len());
+
+    let results = pool::map_with(cells.len(), threads, sim::Scratch::new, |scratch, i| {
+        eval_cell(config, &arch, &params, &compiled_params, &cells[i], scratch)
+    });
+    let cells_out: Vec<CollectiveCell> = results.into_iter().flatten().collect();
+    let report = analyze(&cells_out);
+    Ok(CollectiveResult {
+        config: config.clone(),
+        cells: cells_out,
+        report,
+        threads_used: threads,
+        elapsed_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Evaluate one grid cell: synthesize the direct pattern once, then lower,
+/// model and (optionally) simulate every algorithm against it.
+fn eval_cell(
+    cfg: &CollectiveConfig,
+    arch: &Machine,
+    params: &MachineParams,
+    compiled_params: &CompiledParams,
+    cell: &ColCellSpec,
+    scratch: &mut sim::Scratch,
+) -> Vec<CollectiveCell> {
+    let machine = machines::with_shape(arch, cell.nodes, cell.gpus_per_node);
+    let spec = CollectiveSpec::new(cell.collective, cell.size, cell_seed(cfg.seed, cell.index));
+    let direct = spec.materialize(&machine);
+    let ppn = machine.gpus_per_node();
+
+    let mut out = Vec::with_capacity(cfg.grid.algorithms.len());
+    for &algorithm in &cfg.grid.algorithms {
+        let lowering = lower(cell.collective, algorithm, &machine, &direct);
+        let model_s = model::algorithm_time(&machine, params, &lowering);
+        let sim_s = cfg.sim.then(|| {
+            let schedule = sim_schedule(&machine, &lowering);
+            scratch.run_total(&machine, compiled_params, &schedule, ppn)
+        });
+        out.push(CollectiveCell {
+            index: cell.index,
+            collective: cell.collective,
+            algorithm,
+            nodes: cell.nodes,
+            gpus_per_node: cell.gpus_per_node,
+            size: cell.size,
+            model_s,
+            sim_s,
+            stages: lowering.stages.len(),
+            internode_msgs: lowering.internode_msgs(&machine),
+            internode_bytes: lowering.internode_bytes(&machine),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_config(threads: usize) -> CollectiveConfig {
+        CollectiveConfig {
+            grid: CollectiveGrid {
+                collectives: vec![Collective::Alltoall, Collective::Allgather],
+                algorithms: CollectiveAlgorithm::ALL.to_vec(),
+                nodes: vec![2, 3],
+                gpus_per_node: vec![4],
+                sizes: vec![512, 4096],
+            },
+            seed: 11,
+            threads,
+            sim: true,
+            machine: "lassen".into(),
+        }
+    }
+
+    fn cmp_cells(a: &[CollectiveCell], b: &[CollectiveCell]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!((x.index, x.collective, x.algorithm), (y.index, y.collective, y.algorithm));
+            assert_eq!(x.model_s.to_bits(), y.model_s.to_bits(), "{} {} model", x.collective, x.algorithm);
+            assert_eq!(x.sim_s.map(f64::to_bits), y.sim_s.map(f64::to_bits), "{} {} sim", x.collective, x.algorithm);
+        }
+    }
+
+    #[test]
+    fn results_cover_grid_times_algorithms() {
+        let cfg = small_config(2);
+        let r = run_collective(&cfg).unwrap();
+        assert_eq!(r.cells.len(), cfg.grid.cells().len() * cfg.grid.algorithms.len());
+        assert!(r.cells.iter().all(|c| c.model_s.is_finite() && c.model_s > 0.0));
+        assert!(r.cells.iter().all(|c| c.sim_s.is_some_and(|t| t.is_finite() && t > 0.0)));
+        for w in r.cells.windows(2) {
+            assert!(w[0].index <= w[1].index, "cells must come back in grid order");
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_bits() {
+        let r1 = run_collective(&small_config(1)).unwrap();
+        let r4 = run_collective(&small_config(4)).unwrap();
+        cmp_cells(&r1.cells, &r4.cells);
+    }
+
+    #[test]
+    fn same_seed_same_bits_different_seed_differs() {
+        let r1 = run_collective(&small_config(2)).unwrap();
+        let r2 = run_collective(&small_config(2)).unwrap();
+        cmp_cells(&r1.cells, &r2.cells);
+        let mut cfg = small_config(2);
+        cfg.grid.collectives = vec![Collective::Alltoallv];
+        let a = run_collective(&cfg).unwrap();
+        cfg.seed = 12;
+        let b = run_collective(&cfg).unwrap();
+        // alltoallv's irregular counts must move with the seed
+        assert!(
+            a.cells.iter().zip(&b.cells).any(|(x, y)| x.model_s.to_bits() != y.model_s.to_bits()),
+            "seed must drive the alltoallv synthesis"
+        );
+    }
+
+    #[test]
+    fn model_only_skips_sim() {
+        let mut cfg = small_config(2);
+        cfg.sim = false;
+        let r = run_collective(&cfg).unwrap();
+        assert!(r.cells.iter().all(|c| c.sim_s.is_none()));
+    }
+
+    #[test]
+    fn locality_never_issues_more_internode_msgs() {
+        let cfg = small_config(1);
+        let r = run_collective(&cfg).unwrap();
+        let mut i = 0;
+        while i < r.cells.len() {
+            let mut j = i + 1;
+            while j < r.cells.len() && r.cells[j].index == r.cells[i].index {
+                j += 1;
+            }
+            let group = &r.cells[i..j];
+            let of = |alg: CollectiveAlgorithm| group.iter().find(|c| c.algorithm == alg).unwrap();
+            assert!(
+                of(CollectiveAlgorithm::Locality).internode_msgs <= of(CollectiveAlgorithm::Standard).internode_msgs
+            );
+            i = j;
+        }
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        let mut cfg = small_config(1);
+        cfg.grid.algorithms.clear();
+        assert!(run_collective(&cfg).is_err());
+        let mut cfg = small_config(1);
+        cfg.grid.nodes = vec![1];
+        assert!(run_collective(&cfg).is_err());
+        let mut cfg = small_config(1);
+        cfg.grid.gpus_per_node = vec![3];
+        assert!(run_collective(&cfg).is_err());
+        let mut cfg = small_config(1);
+        cfg.machine = "bogus".into();
+        assert!(run_collective(&cfg).is_err());
+    }
+
+    #[test]
+    fn tiny_grid_is_small_and_valid() {
+        let g = CollectiveGrid::tiny();
+        g.validate().unwrap();
+        assert!(g.cells().len() <= 16);
+    }
+
+    #[test]
+    fn cells_sort_sizes_and_index_contiguously() {
+        let g = CollectiveGrid {
+            collectives: vec![Collective::Alltoall],
+            algorithms: vec![CollectiveAlgorithm::Standard],
+            nodes: vec![2],
+            gpus_per_node: vec![4],
+            sizes: vec![4096, 512, 4096],
+        };
+        let cells = g.cells();
+        assert_eq!(cells.len(), 2);
+        assert_eq!((cells[0].size, cells[1].size), (512, 4096));
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+        }
+    }
+
+    #[test]
+    fn machine_preset_changes_model_times() {
+        let mut base = small_config(1);
+        base.sim = false;
+        let lassen = run_collective(&base).unwrap();
+        let mut frontier = small_config(1);
+        frontier.sim = false;
+        frontier.machine = "frontier-like".into();
+        let frontier = run_collective(&frontier).unwrap();
+        assert_eq!(lassen.cells.len(), frontier.cells.len());
+        assert!(
+            lassen.cells.iter().zip(&frontier.cells).any(|(a, b)| a.model_s.to_bits() != b.model_s.to_bits()),
+            "the machine preset must reach the composed models"
+        );
+    }
+}

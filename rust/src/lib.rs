@@ -39,6 +39,12 @@
 //! - [`sweep`] — the parallel strategy-sweep engine: the full
 //!   (strategy × generator × nodes × GPUs × size) grid through models and
 //!   simulator, with winner/crossover reporting (the `sweep` subcommand).
+//! - [`collective`] — the locality-aware collective layer: alltoall /
+//!   alltoallv / allgather synthesized as [`pattern::CommPattern`]s, the
+//!   standard / pairwise / locality-aware algorithms lowered to staged
+//!   per-phase patterns, costed by composing the Table 6 primitives and
+//!   simulated end-to-end, with its own sweep grid, crossover report and
+//!   compiled decision surfaces (the `collective` subcommand).
 //! - [`advisor`] — the online strategy-advisor service: per-machine compiled
 //!   decision surfaces (versioned JSON artifacts), a sharded LRU cache and
 //!   batch serving layer, and measurement-driven recalibration (the
@@ -54,6 +60,7 @@
 
 pub mod advisor;
 pub mod bench;
+pub mod collective;
 pub mod comm;
 pub mod coordinator;
 pub mod model;
@@ -68,6 +75,7 @@ pub mod trace;
 pub mod util;
 
 pub use advisor::{AdvisorService, DecisionSurface};
+pub use collective::{Collective, CollectiveAlgorithm, CollectiveSurface};
 pub use comm::{Schedule, Strategy, StrategyKind, Transport};
 pub use params::{MachineParams, Protocol};
 pub use pattern::CommPattern;

@@ -6,6 +6,11 @@
 //! - `sweep`    — parallel strategy sweep: the full (strategy × generator ×
 //!   nodes × GPUs × size) grid through models + simulator, with winner,
 //!   crossover and regime reporting (JSON / CSV / table);
+//! - `collective` — the locality-aware collective layer: alltoall /
+//!   alltoallv / allgather lowered to staged phase patterns under the
+//!   standard / pairwise / locality algorithms, modeled from the Table 6
+//!   primitives and simulated end-to-end over a seeded grid, with winner /
+//!   crossover / regime reporting and compiled collective surfaces;
 //! - `advise`   — the online strategy advisor: compile decision surfaces
 //!   (JSON or the quantized `--quant` v3 encoding), answer snapshot-served
 //!   queries, run the seeded burst benchmark (optionally over a multi-tenant
@@ -42,6 +47,7 @@ fn main() {
         "params" => cmd_params(),
         "model" => cmd_model(rest),
         "sweep" => cmd_sweep(rest),
+        "collective" => cmd_collective(rest),
         "advise" => cmd_advise(rest),
         "replay" => cmd_replay(rest),
         "spmv" => cmd_spmv(rest),
@@ -72,6 +78,7 @@ SUBCOMMANDS:
   params     print the measured Lassen parameter tables (Tables 2-4)
   model      evaluate the Table 6 strategy models for a scenario
   sweep      parallel strategy sweep over the full characterization grid
+  collective locality-aware alltoall/alltoallv/allgather: model + simulate algorithms
   advise     online strategy advisor: compile / query / bench-burst / recalibrate
   replay     trace-driven workload replay: record / synthesize / adapt online
   spmv       distributed SpMV communication benchmark (SuiteSparse proxies)
@@ -254,6 +261,9 @@ fn cmd_sweep(argv: &[String]) -> i32 {
         .flag("machine", "lassen", "machine preset (lassen | summit | frontier-like | frontier-4nic | delta-like)")
         .flag("emit-surface", "", "also compile the grid into an advisor surface artifact at this path")
         .flag("trace", "", "sweep a recorded hetcomm.trace.v1 workload instead of the grid (epoch = cell)")
+        .flag("collectives", "", "grow a collective axis: sweep the locality-aware collective layer (comma list or 'all')")
+        .flag("algorithms", "all", "with --collectives: algorithms (standard | pairwise | locality) or 'all'")
+        .flag("nodes", "2,8,32", "with --collectives: cluster node counts (comma list, >= 2)")
         .switch("tiny", "run the <10s smoke grid instead of the flag-defined grid")
         .switch("model-only", "skip the discrete-event simulator");
     let a = match cli.parse(argv) {
@@ -263,6 +273,18 @@ fn cmd_sweep(argv: &[String]) -> i32 {
             return 2;
         }
     };
+
+    // Collective-axis sweep: --collectives reroutes the grid to the
+    // locality-aware collective layer. Grids without the axis take the
+    // legacy path below and emit byte-identical output.
+    if !a.get("collectives").is_empty() {
+        for flag in ["--msgs", "--dest", "--gens", "--dup", "--nics", "--strategies", "--trace"] {
+            if argv.iter().any(|t| t == flag || t.starts_with(&format!("{flag}="))) {
+                eprintln!("note: {flag} shapes the strategy grid; the collective axis ignores it");
+            }
+        }
+        return run_collective_grid(&a, argv);
+    }
 
     // Trace-sourced sweep: the recorded epochs replace the generated grid,
     // and the trace's own recorded machine replaces --machine.
@@ -471,6 +493,193 @@ fn cmd_sweep(argv: &[String]) -> i32 {
     0
 }
 
+/// Parse `--collectives`: "all" or a comma list of collective names.
+fn parse_collectives(spec: &str) -> Result<Vec<hetcomm::Collective>, String> {
+    if spec.trim().eq_ignore_ascii_case("all") {
+        return Ok(hetcomm::Collective::ALL.to_vec());
+    }
+    let mut out = Vec::new();
+    for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+        let c = hetcomm::Collective::parse(part)
+            .ok_or_else(|| format!("unknown collective {part:?} (alltoall | alltoallv | allgather)"))?;
+        if !out.contains(&c) {
+            out.push(c);
+        }
+    }
+    if out.is_empty() {
+        return Err("empty collective list".into());
+    }
+    Ok(out)
+}
+
+/// Parse `--algorithms`: "all" or a comma list of algorithm names.
+fn parse_col_algorithms(spec: &str) -> Result<Vec<hetcomm::CollectiveAlgorithm>, String> {
+    if spec.trim().eq_ignore_ascii_case("all") {
+        return Ok(hetcomm::CollectiveAlgorithm::ALL.to_vec());
+    }
+    let mut out = Vec::new();
+    for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+        let a = hetcomm::CollectiveAlgorithm::parse(part)
+            .ok_or_else(|| format!("unknown collective algorithm {part:?} (standard | pairwise | locality)"))?;
+        if !out.contains(&a) {
+            out.push(a);
+        }
+    }
+    if out.is_empty() {
+        return Err("empty collective algorithm list".into());
+    }
+    Ok(out)
+}
+
+/// Render a collective sweep result in `format` and deliver it to
+/// `out_path` (`'-'` = stdout). Returns the process exit code.
+fn emit_collective_result(result: &hetcomm::collective::CollectiveResult, format: &str, out_path: &str) -> i32 {
+    let body = match format {
+        "json" => hetcomm::collective::emit::to_json(result),
+        "csv" => hetcomm::collective::emit::to_csv(result),
+        "table" => hetcomm::collective::emit::render_tables(result),
+        other => {
+            eprintln!("unknown format {other:?} (table | json | csv)");
+            return 2;
+        }
+    };
+    if out_path == "-" {
+        print!("{body}");
+    } else if let Err(e) = std::fs::write(out_path, &body) {
+        eprintln!("cannot write {out_path}: {e}");
+        return 1;
+    }
+    0
+}
+
+/// The shared body of `hetcomm collective` and `hetcomm sweep
+/// --collectives ...`: build the grid from the parsed flags, run it, emit,
+/// and optionally compile a collective surface artifact.
+fn run_collective_grid(a: &hetcomm::util::cli::Args, argv: &[String]) -> i32 {
+    use hetcomm::collective as col;
+    let grid = if a.get_bool("tiny") {
+        for flag in ["--collectives", "--algorithms", "--nodes", "--gpn", "--sizes"] {
+            if argv.iter().any(|t| t == flag || t.starts_with(&format!("{flag}="))) {
+                eprintln!("note: --tiny runs the fixed smoke grid; {flag} is ignored");
+            }
+        }
+        col::CollectiveGrid::tiny()
+    } else {
+        let collectives = match parse_collectives(a.get("collectives")) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        let algorithms = match parse_col_algorithms(a.get("algorithms")) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        let axes = (a.get_usize_list("nodes"), a.get_usize_list("gpn"), a.get_usize_list("sizes"));
+        let (nodes, gpus_per_node, sizes) = match axes {
+            (Ok(n), Ok(g), Ok(s)) => (n, g, s),
+            (Err(e), ..) | (_, Err(e), _) | (.., Err(e)) => {
+                eprintln!("{}", e.0);
+                return 2;
+            }
+        };
+        col::CollectiveGrid { collectives, algorithms, nodes, gpus_per_node, sizes }
+    };
+    let (seed, threads) = match (a.get_u64("seed"), a.get_usize("threads")) {
+        (Ok(s), Ok(t)) => (s, t),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("{}", e.0);
+            return 2;
+        }
+    };
+    let config = col::CollectiveConfig {
+        grid,
+        seed,
+        threads,
+        sim: !a.get_bool("model-only"),
+        machine: a.get("machine").to_string(),
+    };
+    let result = match col::run_collective(&config) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("collective sweep failed: {e}");
+            return 2;
+        }
+    };
+    let code = emit_collective_result(&result, a.get("format"), a.get("out"));
+    if code != 0 {
+        return code;
+    }
+    eprintln!(
+        "swept {} collective cells -> {} algorithm rows on {} threads in {:.3}s",
+        result.cells.last().map(|c| c.index + 1).unwrap_or(0),
+        result.cells.len(),
+        result.threads_used,
+        result.elapsed_s
+    );
+
+    // Emit the surface LAST: a bad artifact path must not discard the
+    // sweep results above (same policy as `sweep --emit-surface`).
+    let surface_path = a.get("emit-surface");
+    if !surface_path.is_empty() {
+        if config.grid.gpus_per_node.len() != 1 {
+            eprintln!("note: collective surfaces pin one GPUs/node value; --emit-surface needs one --gpn (skipped)");
+            return 0;
+        }
+        if config.grid.collectives.len() != hetcomm::Collective::ALL.len()
+            || config.grid.algorithms.len() != hetcomm::CollectiveAlgorithm::ALL.len()
+        {
+            eprintln!("note: surface artifacts always cover all collectives and algorithms (filters not baked in)");
+        }
+        let compiled = col::CollectiveSurface::compile(
+            &config.machine,
+            config.grid.gpus_per_node[0],
+            config.grid.nodes.clone(),
+            config.grid.sizes.clone(),
+            config.seed,
+        )
+        .and_then(|s| col::persist::save(&s, surface_path));
+        if let Err(e) = compiled {
+            eprintln!("cannot emit collective surface: {e}");
+            return 1;
+        }
+        eprintln!("wrote collective surface artifact to {surface_path}");
+    }
+    0
+}
+
+fn cmd_collective(argv: &[String]) -> i32 {
+    let cli = Cli::new(
+        "hetcomm collective",
+        "locality-aware collectives: synthesize, lower, and model + simulate algorithms over a grid",
+    )
+    .flag("collectives", "all", "collectives to sweep (alltoall | alltoallv | allgather, comma list) or 'all'")
+    .flag("algorithms", "all", "algorithms to compare (standard | pairwise | locality, comma list) or 'all'")
+    .flag("nodes", "2,8,32", "cluster node counts (comma list, >= 2)")
+    .flag("gpn", "4", "GPUs per node (comma list, even values)")
+    .flag("sizes", "2^9,2^11,2^13,2^15,2^17,2^19", "block sizes in bytes (supports 2^k)")
+    .flag("seed", "42", "base seed (fixes alltoallv's irregular per-pair block sizes)")
+    .flag("threads", "0", "worker threads (0 = all cores)")
+    .flag("format", "table", "output format: table | json | csv")
+    .flag("out", "-", "output path ('-' = stdout)")
+    .flag("machine", "lassen", "machine preset (lassen | summit | frontier-like | frontier-4nic | delta-like)")
+    .flag("emit-surface", "", "also compile the node/size axes into a collective surface artifact at this path")
+    .switch("tiny", "run the fixed sub-second smoke grid instead of the flag-defined grid")
+    .switch("model-only", "skip the discrete-event simulator");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{}", e.0);
+            return 2;
+        }
+    };
+    run_collective_grid(&a, argv)
+}
+
 /// Parse the advise lattice axis flags into surface axes.
 fn advise_axes_from(a: &hetcomm::util::cli::Args) -> Result<hetcomm::advisor::SurfaceAxes, String> {
     Ok(hetcomm::advisor::SurfaceAxes {
@@ -542,6 +751,8 @@ fn cmd_advise(argv: &[String]) -> i32 {
         .flag("q-size", "2048", "query: bytes per message")
         .flag("q-dest", "16", "query: destination nodes")
         .flag("q-gpn", "4", "query: GPUs per node")
+        .flag("collective", "", "collective mode: rank alltoall/alltoallv/allgather algorithms instead of strategies")
+        .flag("q-nodes", "32", "collective query: cluster node count")
         .flag("seed", "42", "burst: base seed (fixed seed => deterministic answers)")
         .flag("threads", "0", "burst: worker threads (0 = all cores)")
         .flag("min-hit-rate", "0.0", "burst: exit nonzero if the cache hit rate falls below this fraction");
@@ -556,6 +767,13 @@ fn cmd_advise(argv: &[String]) -> i32 {
     if a.get_bool("quant") && !a.get_bool("compile") {
         eprintln!("--quant shapes the --compile output; pass --compile too");
         return 2;
+    }
+
+    // Collective mode: --collective reroutes --compile / --query to the
+    // locality-aware collective layer (algorithm ranking over a compiled
+    // hetcomm.colsurface.v1 lattice).
+    if !a.get("collective").is_empty() {
+        return advise_collective(&a, argv);
     }
 
     // A comma list of machines serves a multi-tenant fleet: one surface
@@ -783,6 +1001,136 @@ fn cmd_advise(argv: &[String]) -> i32 {
 
     if !did_something {
         eprintln!("nothing to do: pass --compile, --query, --bench-burst N, or --recalibrate (see --help)");
+        return 2;
+    }
+    0
+}
+
+/// The `advise --collective` mode: compile / load a collective decision
+/// surface and rank the alltoall/alltoallv/allgather algorithms for a
+/// (nodes, size) query.
+fn advise_collective(a: &hetcomm::util::cli::Args, argv: &[String]) -> i32 {
+    use hetcomm::collective::{persist as col_persist, Collective, CollectiveSurface};
+    if a.get_bool("quant") || a.get_bool("recalibrate") {
+        eprintln!("--collective mode supports --compile and --query; --quant/--recalibrate serve strategy surfaces");
+        return 2;
+    }
+    match a.get_usize("bench-burst") {
+        Ok(0) => {}
+        Ok(_) => {
+            eprintln!("--collective mode supports --compile and --query; --bench-burst serves strategy surfaces");
+            return 2;
+        }
+        Err(e) => {
+            eprintln!("{}", e.0);
+            return 2;
+        }
+    }
+    let Some(collective) = Collective::parse(a.get("collective")) else {
+        eprintln!("unknown collective {:?} (alltoall | alltoallv | allgather)", a.get("collective"));
+        return 2;
+    };
+
+    let surface = if a.get("surface").is_empty() {
+        let gpn = match a.get_usize_list("gpn") {
+            Ok(v) if v.len() == 1 => v[0],
+            Ok(_) => {
+                eprintln!("collective surfaces pin one --gpn value");
+                return 2;
+            }
+            Err(e) => {
+                eprintln!("{}", e.0);
+                return 2;
+            }
+        };
+        let seed = match a.get_u64("seed") {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("{}", e.0);
+                return 2;
+            }
+        };
+        // the strategy-lattice --sizes default spans 2^4..2^20; the
+        // collective lattice has its own default, so only an explicit
+        // --sizes overrides it
+        let sizes = if argv.iter().any(|t| t == "--sizes" || t.starts_with("--sizes=")) {
+            match a.get_usize_list("sizes") {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!("{}", e.0);
+                    return 2;
+                }
+            }
+        } else {
+            CollectiveSurface::default_sizes()
+        };
+        match CollectiveSurface::compile(a.get("machine"), gpn, CollectiveSurface::default_nodes(), sizes, seed) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("cannot compile collective surface: {e}");
+                return 2;
+            }
+        }
+    } else {
+        match col_persist::load(a.get("surface")) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("cannot load collective surface: {e}");
+                return 2;
+            }
+        }
+    };
+
+    let mut did_something = false;
+    if a.get_bool("compile") {
+        did_something = true;
+        let body = col_persist::to_json(&surface);
+        let out = a.get("out");
+        if out == "-" {
+            print!("{body}");
+        } else if let Err(e) = std::fs::write(out, &body) {
+            eprintln!("cannot write {out}: {e}");
+            return 1;
+        } else {
+            eprintln!(
+                "compiled collective surface for {}: {} lattice cells x {} algorithms -> {out}",
+                surface.machine,
+                surface.cells.len(),
+                surface.algorithms.len()
+            );
+        }
+    }
+
+    if a.get_bool("query") {
+        did_something = true;
+        let (nodes, size) = match (a.get_usize("q-nodes"), a.get_usize("q-size")) {
+            (Ok(n), Ok(s)) => (n, s),
+            (Err(e), _) | (_, Err(e)) => {
+                eprintln!("{}", e.0);
+                return 2;
+            }
+        };
+        let Some(ranked) = surface.lookup(collective, nodes, size) else {
+            eprintln!("the loaded surface does not cover collective {collective}");
+            return 2;
+        };
+        let mut t = Table::new(
+            format!(
+                "Collective advisor on {}: {collective}, {nodes} nodes x {size} B blocks ({} GPUs/node)",
+                surface.machine, surface.gpus_per_node
+            ),
+            &["rank", "algorithm", "predicted[s]"],
+        );
+        for (rank, (alg, secs)) in ranked.ranked.iter().enumerate() {
+            t.row(vec![(rank + 1).to_string(), alg.label().to_string(), fmt_secs(*secs)]);
+        }
+        t.print();
+        let (best, secs) = ranked.best();
+        println!("\nfastest: {} ({})", best.label(), fmt_secs(secs));
+    }
+
+    if !did_something {
+        eprintln!("nothing to do in --collective mode: pass --compile and/or --query");
         return 2;
     }
     0
