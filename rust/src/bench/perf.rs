@@ -10,6 +10,11 @@
 //! - **sweep-reference** — the same cells through the retained naive path
 //!   (per-strategy schedule rebuild + hash-map executor), the baseline the
 //!   compiled path must beat by `--min-speedup`;
+//! - **sweep-exhaustive** / **sweep-pruned** — the full production sweep
+//!   on a pruning-friendly grid (many small messages) without and with
+//!   `--prune --reuse-patterns`; the harness hard-errors if the pruned
+//!   leg's winner/crossover/regime reports or model bits drift from the
+//!   exhaustive run, and the pruned row carries the measured prune rate;
 //! - **schedule-compile** — schedule build + SoA lowering throughput;
 //! - **advise-burst** — cached advisor queries per second
 //!   ([`AdvisorService::bench_burst`]).
@@ -128,6 +133,9 @@ pub struct BenchRow {
     pub p99_s: f64,
     /// Advisor cache hit rate (advise-burst only).
     pub cache_hit_rate: Option<f64>,
+    /// Fraction of strategy simulations skipped by bounds (sweep-pruned
+    /// only). Deterministic, so it survives the `timing: false` projection.
+    pub prune_rate: Option<f64>,
 }
 
 /// The full harness outcome.
@@ -174,6 +182,26 @@ fn fnv_str(mut h: u64, s: &str) -> u64 {
         h = h.wrapping_mul(FNV_PRIME);
     }
     h
+}
+
+/// The pruning-friendly grid for the pruned-vs-exhaustive legs: uniform
+/// patterns, many small messages. Here the Standard strategies' per-message
+/// floors sit far above the node-aware winners, so their (n_msgs-transfer)
+/// simulations — the most expensive in every cell — are provably skippable.
+fn prune_grid(quick: bool) -> GridSpec {
+    GridSpec {
+        gens: vec![PatternGen::Uniform],
+        dest_nodes: if quick { vec![4] } else { vec![4, 8] },
+        gpus_per_node: vec![4],
+        nics: vec![1],
+        sizes: if quick {
+            vec![1 << 6, 1 << 7, 1 << 8, 1 << 9, 1 << 10]
+        } else {
+            vec![1 << 6, 1 << 7, 1 << 8, 1 << 9, 1 << 10, 1 << 11, 1 << 12, 1 << 13]
+        },
+        n_msgs: 256,
+        dup_frac: 0.0,
+    }
 }
 
 fn perf_grid(quick: bool) -> GridSpec {
@@ -241,6 +269,7 @@ fn row_from(name: &'static str, items: usize, elapsed_s: f64, latencies: &mut [f
         p50_s: percentile_sorted(latencies, 50.0),
         p99_s: percentile_sorted(latencies, 99.0),
         cache_hit_rate: None,
+        prune_rate: None,
     }
 }
 
@@ -272,6 +301,7 @@ fn run_sweep_suite(config: &PerfConfig) -> Result<PerfReport, String> {
         threads,
         sim: true,
         machine: "lassen".into(),
+        ..Default::default()
     };
 
     // --- sweep: compiled vs naive per-strategy-rebuild reference ---
@@ -290,6 +320,58 @@ fn run_sweep_suite(config: &PerfConfig) -> Result<PerfReport, String> {
     } else {
         f64::INFINITY
     };
+
+    // --- bound-guided pruning vs exhaustive on the pruning-friendly grid ---
+    let exhaustive_config = SweepConfig {
+        grid: prune_grid(config.quick),
+        strategies: Strategy::all(),
+        seed: config.seed,
+        threads,
+        sim: true,
+        machine: "lassen".into(),
+        ..Default::default()
+    };
+    let pruned_config =
+        SweepConfig { prune: true, reuse_patterns: true, ..exhaustive_config.clone() };
+    let prune_cells = exhaustive_config.grid.cells().len();
+    let mut t_ex = 0.0f64;
+    let mut t_pr = 0.0f64;
+    let mut lat_ex = Vec::with_capacity(passes);
+    let mut lat_pr = Vec::with_capacity(passes);
+    let mut prune_rate = 0.0f64;
+    for pass in 0..passes {
+        let ex = crate::sweep::run_sweep(&exhaustive_config)?;
+        let pr = crate::sweep::run_sweep(&pruned_config)?;
+        t_ex += ex.elapsed_s;
+        t_pr += pr.elapsed_s;
+        lat_ex.push(ex.elapsed_s / prune_cells as f64);
+        lat_pr.push(pr.elapsed_s / prune_cells as f64);
+        if pass == 0 {
+            // winner preservation is a correctness gate, not a best effort:
+            // any drift in the derived reports or the model bits is an error
+            let winner_key = |w: &crate::sweep::CellWinner| (w.size, w.winner, w.sim_winner, w.model_s.to_bits());
+            if ex.report.winners.iter().map(winner_key).ne(pr.report.winners.iter().map(winner_key))
+                || ex.report.crossovers != pr.report.crossovers
+                || ex.report.regimes != pr.report.regimes
+            {
+                return Err("pruned sweep changed a winner/crossover/regime report — bounds are unsound".into());
+            }
+            if ex
+                .cells
+                .iter()
+                .zip(&pr.cells)
+                .any(|(a, b)| a.model_s.to_bits() != b.model_s.to_bits())
+            {
+                return Err("pruned sweep changed a model bit".into());
+            }
+            let sims = pr.report.prune.pruned + pr.report.prune.sim_evals;
+            prune_rate = if sims > 0 { pr.report.prune.pruned as f64 / sims as f64 } else { 0.0 };
+        }
+    }
+    let prune_items = prune_cells * strategies * passes;
+    let ex_row = row_from("sweep-exhaustive", prune_items, t_ex, &mut lat_ex);
+    let mut pr_row = row_from("sweep-pruned", prune_items, t_pr, &mut lat_pr);
+    pr_row.prune_rate = Some(prune_rate);
 
     // --- schedule build + lowering throughput ---
     let (arch, params) = machines::parse("lassen", 1).expect("lassen is registered");
@@ -345,6 +427,7 @@ fn run_sweep_suite(config: &PerfConfig) -> Result<PerfReport, String> {
         p50_s: burst.p50_s,
         p99_s: burst.p99_s,
         cache_hit_rate: Some(burst.cache.hit_rate()),
+        prune_rate: None,
     };
 
     Ok(PerfReport {
@@ -361,7 +444,7 @@ fn run_sweep_suite(config: &PerfConfig) -> Result<PerfReport, String> {
         checksum_sweep: Some(sum_fast),
         checksum_schedules: Some(checksum_schedules),
         checksum_advise: Some(checksum_advise),
-        results: vec![fast_row, ref_row, sched_row, advise_row],
+        results: vec![fast_row, ref_row, ex_row, pr_row, sched_row, advise_row],
         speedup_vs_reference: speedup,
     })
 }
@@ -422,6 +505,7 @@ fn run_advise_suite(config: &PerfConfig) -> Result<PerfReport, String> {
         p50_s: burst.p50_s,
         p99_s: burst.p99_s,
         cache_hit_rate: Some(burst.cache.hit_rate()),
+        prune_rate: None,
     };
 
     // --- per-query reference: a distinct-heavy stream, advised one at a
@@ -567,10 +651,16 @@ pub fn report_to_json(r: &PerfReport, timing: bool) -> String {
             Some(_) => "null".to_string(),
             None => "null".to_string(),
         };
+        // the prune rate is a deterministic answer, not a wall-clock
+        // measurement: it survives the timing-free projection
+        let prune = match row.prune_rate {
+            Some(p) => fmt_f64(p),
+            None => "null".to_string(),
+        };
         let _ = writeln!(
             out,
             "    {{\"name\": \"{}\", \"items\": {}, \"elapsed_s\": {}, \"items_per_sec\": {}, \
-             \"p50_s\": {}, \"p99_s\": {}, \"cache_hit_rate\": {}}}{comma}",
+             \"p50_s\": {}, \"p99_s\": {}, \"cache_hit_rate\": {}, \"prune_rate\": {}}}{comma}",
             row.name,
             row.items,
             opt_num(row.elapsed_s, timing),
@@ -578,6 +668,7 @@ pub fn report_to_json(r: &PerfReport, timing: bool) -> String {
             opt_num(row.p50_s, timing),
             opt_num(row.p99_s, timing),
             hit,
+            prune,
         );
     }
     out.push_str("  ],\n");
@@ -763,10 +854,19 @@ mod tests {
     #[test]
     fn perf_runs_and_self_verifies() {
         let r = run_perf(&tiny()).unwrap();
-        assert_eq!(r.results.len(), 4);
+        let names: Vec<&str> = r.results.iter().map(|row| row.name).collect();
+        let expected = [
+            "sweep-compiled", "sweep-reference", "sweep-exhaustive", "sweep-pruned", "schedule-compile", "advise-burst",
+        ];
+        assert_eq!(names, expected);
         assert!(r.results.iter().all(|row| row.items > 0));
         assert!(r.speedup_vs_reference.is_finite() && r.speedup_vs_reference > 0.0);
-        assert!(r.results[3].cache_hit_rate.unwrap() > 0.5);
+        assert!(r.results[5].cache_hit_rate.unwrap() > 0.5);
+        // the pruned leg must actually skip simulations on its grid, and
+        // only that row carries a prune rate
+        let pruned = r.results.iter().find(|row| row.name == "sweep-pruned").unwrap();
+        assert!(pruned.prune_rate.unwrap() > 0.0, "prune rate {:?}", pruned.prune_rate);
+        assert!(r.results.iter().filter(|row| row.prune_rate.is_some()).count() == 1);
     }
 
     #[test]

@@ -264,8 +264,11 @@ fn cmd_sweep(argv: &[String]) -> i32 {
         .flag("collectives", "", "grow a collective axis: sweep the locality-aware collective layer (comma list or 'all')")
         .flag("algorithms", "all", "with --collectives: algorithms (standard | pairwise | locality) or 'all'")
         .flag("nodes", "2,8,32", "with --collectives: cluster node counts (comma list, >= 2)")
+        .flag("refine", "0", "adaptive size-axis refinement depth (0 = exhaustive; winners preserved)")
         .switch("tiny", "run the <10s smoke grid instead of the flag-defined grid")
-        .switch("model-only", "skip the discrete-event simulator");
+        .switch("model-only", "skip the discrete-event simulator")
+        .switch("prune", "skip simulating strategies whose model lower bound exceeds the cell incumbent")
+        .switch("reuse-patterns", "share one pattern lowering across each uniform grid line's size axis");
     let a = match cli.parse(argv) {
         Ok(a) => a,
         Err(e) => {
@@ -278,7 +281,11 @@ fn cmd_sweep(argv: &[String]) -> i32 {
     // locality-aware collective layer. Grids without the axis take the
     // legacy path below and emit byte-identical output.
     if !a.get("collectives").is_empty() {
-        for flag in ["--msgs", "--dest", "--gens", "--dup", "--nics", "--strategies", "--trace"] {
+        let grid_flags = [
+            "--msgs", "--dest", "--gens", "--dup", "--nics", "--strategies", "--trace", "--prune", "--reuse-patterns",
+            "--refine",
+        ];
+        for flag in grid_flags {
             if argv.iter().any(|t| t == flag || t.starts_with(&format!("{flag}="))) {
                 eprintln!("note: {flag} shapes the strategy grid; the collective axis ignores it");
             }
@@ -299,7 +306,11 @@ fn cmd_sweep(argv: &[String]) -> i32 {
         if argv.iter().any(|t| t == "--machine" || t.starts_with("--machine=")) {
             eprintln!("note: sweeping the trace on its recorded machine {:?} (--machine ignored)", trace.machine.name);
         }
-        for flag in ["--msgs", "--dest", "--gpn", "--nics", "--sizes", "--dup", "--gens", "--seed", "--tiny"] {
+        let grid_flags = [
+            "--msgs", "--dest", "--gpn", "--nics", "--sizes", "--dup", "--gens", "--seed", "--tiny", "--prune",
+            "--reuse-patterns", "--refine",
+        ];
+        for flag in grid_flags {
             if argv.iter().any(|t| t == flag || t.starts_with(&format!("{flag}="))) {
                 eprintln!("note: {flag} shapes the generated grid; trace epochs are replayed verbatim (ignored)");
             }
@@ -432,6 +443,13 @@ fn cmd_sweep(argv: &[String]) -> i32 {
             return 2;
         }
     };
+    let refine = match a.get_usize("refine") {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{}", e.0);
+            return 2;
+        }
+    };
     let config = hetcomm::sweep::SweepConfig {
         grid,
         strategies,
@@ -439,6 +457,9 @@ fn cmd_sweep(argv: &[String]) -> i32 {
         threads,
         sim: !a.get_bool("model-only"),
         machine: a.get("machine").to_string(),
+        prune: a.get_bool("prune"),
+        reuse_patterns: a.get_bool("reuse-patterns"),
+        refine,
     };
 
     let result = match hetcomm::sweep::run_sweep(&config) {

@@ -10,7 +10,11 @@
 //! - [`strategy`] — the composite models of Table 6 plus duplicate-data
 //!   adjustment, evaluated either from explicit Table 7 parameters or from a
 //!   [`crate::pattern::CommPattern`].
+//! - [`bounds`] — per-strategy `[lower, upper]` cost intervals derived from
+//!   the Table 6 closed forms; the branch-and-bound oracle behind
+//!   `sweep --prune`.
 
+pub mod bounds;
 pub mod copy;
 pub mod maxrate;
 pub mod offnode;
@@ -18,4 +22,5 @@ pub mod onnode;
 pub mod postal;
 pub mod strategy;
 
+pub use bounds::{BoundModel, CostBounds};
 pub use strategy::{ModelInputs, StrategyModel};

@@ -129,6 +129,56 @@ impl<'p> CompiledPattern<'p> {
             deliver_in_full: deliver_in.into_iter().collect(),
         }
     }
+
+    /// Re-target this lowering at `pattern`, which must share its topology
+    /// (same messages, sources, destinations and dup groups, in order) with
+    /// every byte count multiplied by `scale` — the sweep's
+    /// `--reuse-patterns` fast path, where neighboring grid cells differ
+    /// only in message size.
+    ///
+    /// Grouping, locality, dedup classification and dominant-sender choice
+    /// are all invariant under a uniform positive byte scale: group
+    /// membership depends only on node pairs, every byte aggregate is a sum
+    /// (so it scales exactly in integer arithmetic), and the dominant-sender
+    /// `max_by_key((bytes, Reverse(src)))` order is preserved because
+    /// `b -> b·scale` is strictly monotone (ties stay ties). The result is
+    /// therefore identical — field for field — to
+    /// `CompiledPattern::lower(machine, pattern)`.
+    pub fn rescaled<'q>(&self, pattern: &'q CommPattern, scale: usize) -> CompiledPattern<'q> {
+        debug_assert!(scale > 0, "rescaled needs a positive scale");
+        debug_assert_eq!(pattern.msgs.len(), self.pattern.msgs.len(), "rescaled patterns must share topology");
+        debug_assert!(
+            pattern
+                .msgs
+                .iter()
+                .zip(&self.pattern.msgs)
+                .all(|(a, b)| a.src == b.src && a.dst == b.dst && a.dup_group == b.dup_group && a.bytes == b.bytes * scale),
+            "rescaled pattern must be the unit pattern with bytes x scale"
+        );
+        let mul_pairs = |v: &[(GpuId, usize)]| v.iter().map(|&(g, b)| (g, b * scale)).collect();
+        let groups = self
+            .groups
+            .iter()
+            .map(|g| PairGroup {
+                src_node: g.src_node,
+                dst_node: g.dst_node,
+                msgs: g.msgs.iter().map(|m| Msg { bytes: m.bytes * scale, ..*m }).collect(),
+                unique_by_src: mul_pairs(&g.unique_by_src),
+                unique_total: g.unique_total * scale,
+                by_dst: mul_pairs(&g.by_dst),
+                dominant_src: g.dominant_src.clone(),
+            })
+            .collect();
+        CompiledPattern {
+            pattern,
+            groups,
+            intra: self.intra.iter().map(|&(i, m)| (i, Msg { bytes: m.bytes * scale, ..m })).collect(),
+            out_bytes_all: mul_pairs(&self.out_bytes_all),
+            in_bytes_all: mul_pairs(&self.in_bytes_all),
+            stage_out_unique: mul_pairs(&self.stage_out_unique),
+            deliver_in_full: mul_pairs(&self.deliver_in_full),
+        }
+    }
 }
 
 /// The sender contributing the largest share of a destination's bytes
@@ -374,6 +424,24 @@ mod tests {
             for &nic in &cs.x_nic {
                 assert!(nic == NO_NIC || nic < cs.n_resources);
             }
+        }
+    }
+
+    #[test]
+    fn rescaled_matches_direct_lowering() {
+        use crate::pattern::generators::Scenario;
+        let m = lassen(6);
+        for scale in [1usize, 2, 300, 1 << 14] {
+            let unit = Scenario { n_msgs: 48, msg_size: 1, n_dest: 5, dup_frac: 0.0 }.materialize(&m);
+            let scaled = Scenario { n_msgs: 48, msg_size: scale, n_dest: 5, dup_frac: 0.0 }.materialize(&m);
+            let from_unit = CompiledPattern::lower(&m, &unit).rescaled(&scaled, scale);
+            let direct = CompiledPattern::lower(&m, &scaled);
+            assert_eq!(from_unit.groups, direct.groups, "scale {scale}");
+            assert_eq!(from_unit.intra, direct.intra);
+            assert_eq!(from_unit.out_bytes_all, direct.out_bytes_all);
+            assert_eq!(from_unit.in_bytes_all, direct.in_bytes_all);
+            assert_eq!(from_unit.stage_out_unique, direct.stage_out_unique);
+            assert_eq!(from_unit.deliver_in_full, direct.deliver_in_full);
         }
     }
 

@@ -51,12 +51,20 @@ fn shaped(result: &SweepResult) -> bool {
     result.config.grid.nics != [1]
 }
 
+/// True when the sweep ran with branch-and-bound pruning: the emitters
+/// then carry `sim_pruned` / `pruned` fields and the prune summary.
+/// Flag-less sweeps emit no prune fields at all (CI grep-gates this).
+fn pruned(result: &SweepResult) -> bool {
+    result.config.prune
+}
+
 /// Serialize the full sweep result (config echo, cells, report) as JSON.
 /// Wall-clock fields are deliberately excluded: two runs with the same
 /// seed must produce byte-identical output.
 pub fn to_json(result: &SweepResult) -> String {
     let cfg = &result.config;
     let shaped = shaped(result);
+    let pruned = pruned(result);
     let mut out = String::new();
     out.push_str("{\n");
     let _ = writeln!(out, "  \"schema\": \"hetcomm.sweep.v1\",");
@@ -69,15 +77,19 @@ pub fn to_json(result: &SweepResult) -> String {
     }
     let _ = writeln!(out, "  \"dup_frac\": {},", num(cfg.grid.dup_frac));
     let _ = writeln!(out, "  \"sim\": {},", cfg.sim);
+    if cfg.refine > 0 {
+        let _ = writeln!(out, "  \"refine\": {},", cfg.refine);
+    }
 
     out.push_str("  \"cells\": [\n");
     for (i, c) in result.cells.iter().enumerate() {
         let comma = if i + 1 < result.cells.len() { "," } else { "" };
         let rails = if shaped { format!("\"nics\": {}, ", c.nics) } else { String::new() };
+        let skip = if pruned { format!(", \"sim_pruned\": {}", c.sim_pruned) } else { String::new() };
         let _ = writeln!(
             out,
             "    {{\"gen\": \"{}\", \"dest_nodes\": {}, \"gpus_per_node\": {}, {rails}\"size\": {}, \
-             \"strategy\": \"{}\", \"model_s\": {}, \"sim_s\": {}, \"model_err\": {}}}{comma}",
+             \"strategy\": \"{}\", \"model_s\": {}, \"sim_s\": {}, \"model_err\": {}{skip}}}{comma}",
             c.gen.label(),
             c.dest_nodes,
             c.gpus_per_node,
@@ -98,10 +110,11 @@ pub fn to_json(result: &SweepResult) -> String {
             None => "null".to_string(),
         };
         let rails = if shaped { format!("\"nics\": {}, ", w.nics) } else { String::new() };
+        let skip = if pruned { format!(", \"pruned\": {}", w.pruned) } else { String::new() };
         let _ = writeln!(
             out,
             "    {{\"gen\": \"{}\", \"dest_nodes\": {}, \"gpus_per_node\": {}, {rails}\"size\": {}, \
-             \"winner\": \"{}\", \"staged\": {}, \"model_s\": {}, \"sim_winner\": {}}}{comma}",
+             \"winner\": \"{}\", \"staged\": {}, \"model_s\": {}, \"sim_winner\": {}{skip}}}{comma}",
             w.gen.label(),
             w.dest_nodes,
             w.gpus_per_node,
@@ -153,13 +166,22 @@ pub fn to_json(result: &SweepResult) -> String {
     out.push_str("  ],\n");
 
     let e = &result.report.model_error;
+    let comma = if pruned { "," } else { "" };
     let _ = writeln!(
         out,
-        "  \"model_error\": {{\"cells_with_sim\": {}, \"mean\": {}, \"max\": {}}}",
+        "  \"model_error\": {{\"cells_with_sim\": {}, \"mean\": {}, \"max\": {}}}{comma}",
         e.cells_with_sim,
         num(e.mean),
         num(e.max)
     );
+    if pruned {
+        let p = &result.report.prune;
+        let _ = writeln!(
+            out,
+            "  \"prune\": {{\"cells\": {}, \"sim_evals\": {}, \"pruned\": {}}}",
+            p.cells, p.sim_evals, p.pruned
+        );
+    }
     out.push_str("}\n");
     out
 }
@@ -168,16 +190,22 @@ pub fn to_json(result: &SweepResult) -> String {
 /// axis) gain a `nics` column; default grids keep the historical header.
 pub fn to_csv(result: &SweepResult) -> String {
     let shaped = shaped(result);
+    let pruned = pruned(result);
     let mut out = if shaped {
-        String::from("gen,dest_nodes,gpus_per_node,nics,size,strategy,model_s,sim_s,model_err\n")
+        String::from("gen,dest_nodes,gpus_per_node,nics,size,strategy,model_s,sim_s,model_err")
     } else {
-        String::from("gen,dest_nodes,gpus_per_node,size,strategy,model_s,sim_s,model_err\n")
+        String::from("gen,dest_nodes,gpus_per_node,size,strategy,model_s,sim_s,model_err")
     };
+    if pruned {
+        out.push_str(",sim_pruned");
+    }
+    out.push('\n');
     for c in &result.cells {
         let rails = if shaped { format!("{},", c.nics) } else { String::new() };
+        let skip = if pruned { format!(",{}", c.sim_pruned) } else { String::new() };
         let _ = writeln!(
             out,
-            "{},{},{},{rails}{},\"{}\",{},{},{}",
+            "{},{},{},{rails}{},\"{}\",{},{},{}{skip}",
             c.gen.label(),
             c.dest_nodes,
             c.gpus_per_node,
@@ -300,6 +328,26 @@ pub fn render_tables(result: &SweepResult) -> String {
             e.cells_with_sim, e.mean, e.max
         );
     }
+    if pruned(result) {
+        let p = &result.report.prune;
+        let _ = writeln!(
+            out,
+            "\nBound-guided pruning: skipped {} of {} strategy simulations over {} cells",
+            p.pruned,
+            p.pruned + p.sim_evals,
+            p.cells
+        );
+    }
+    if result.config.refine > 0 {
+        let total = result.config.grid.cells().len();
+        let _ = writeln!(
+            out,
+            "\nAdaptive refinement (depth {}): {} of {} grid cells evaluated",
+            result.config.refine,
+            result.report.prune.cells,
+            total
+        );
+    }
     out
 }
 
@@ -384,6 +432,55 @@ mod tests {
         assert!(!to_json(&r).contains("nics"), "default grids must not leak the NIC axis");
         assert!(to_csv(&r).starts_with("gen,dest_nodes,gpus_per_node,size,"));
         assert!(!render_tables(&r).contains("NICs"));
+    }
+
+    #[test]
+    fn default_runs_emit_no_prune_or_refine_fields() {
+        // the byte contract the CI grep-gate enforces: flag-less sweeps
+        // serialize exactly as before the pruning layer existed
+        let r = tiny_result();
+        let j = to_json(&r);
+        for tok in ["sim_pruned", "\"pruned\"", "\"prune\"", "\"refine\"", "refinement"] {
+            assert!(!j.contains(tok), "default JSON leaked {tok}");
+        }
+        assert!(!to_csv(&r).contains("sim_pruned"));
+        let text = render_tables(&r);
+        assert!(!text.contains("pruning") && !text.contains("refinement"));
+    }
+
+    #[test]
+    fn pruned_runs_carry_prune_fields_everywhere() {
+        let mut cfg = SweepConfig {
+            grid: GridSpec {
+                gens: vec![PatternGen::Uniform],
+                dest_nodes: vec![4],
+                gpus_per_node: vec![4],
+                nics: vec![1],
+                sizes: vec![64, 256, 1024],
+                n_msgs: 256,
+                dup_frac: 0.0,
+            },
+            seed: 3,
+            threads: 1,
+            sim: true,
+            ..Default::default()
+        };
+        cfg.prune = true;
+        let r = run_sweep(&cfg).unwrap();
+        let j = to_json(&r);
+        assert!(j.contains("\"sim_pruned\": "), "{j}");
+        assert!(j.contains("\"pruned\": "), "{j}");
+        assert!(j.contains("\"prune\": {\"cells\": "), "{j}");
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+        let csv = to_csv(&r);
+        assert!(csv.lines().next().unwrap().ends_with(",sim_pruned"));
+        assert!(render_tables(&r).contains("Bound-guided pruning"));
+        // refinement adds its own summary line and config echo
+        cfg.refine = 1;
+        let r = run_sweep(&cfg).unwrap();
+        assert!(to_json(&r).contains("\"refine\": 1,"));
+        assert!(render_tables(&r).contains("Adaptive refinement (depth 1)"));
     }
 
     #[test]

@@ -16,11 +16,29 @@
 //! allocation-free. [`ExecMode::Reference`] retains the pre-compilation
 //! per-strategy path (rebuild + hash-map executor) as the equivalence
 //! oracle and the perf harness's naive baseline.
+//!
+//! Three composable, winner-preserving scale levers sit on top (all
+//! default-off; defaults reproduce the legacy output byte for byte):
+//!
+//! - **Branch-and-bound pruning** (`prune`): per cell, the
+//!   [`crate::model::BoundModel`] intervals rank strategies; the one with
+//!   the least upper bound is simulated first and any strategy whose sound
+//!   lower bound exceeds the best simulated time so far skips the
+//!   simulator (`sim_pruned`). Model times are still computed for every
+//!   strategy — winners, crossovers and regimes are model-derived and the
+//!   simulated winner is never prunable, so reports are preserved.
+//! - **Pattern reuse** (`reuse_patterns`): grid lines that differ only in
+//!   message size share one unit-size lowering, rescaled exactly per cell
+//!   ([`CompiledPattern::rescaled`]) instead of re-lowered.
+//! - **Adaptive refinement** (`refine`): evaluate a coarse size lattice
+//!   first and recursively subdivide only between neighbors whose model
+//!   winners disagree — emitted cells keep their full-grid indices (and
+//!   hence their seeds), so they are bit-identical to the exhaustive run.
 
 use super::grid::{CellSpec, GridSpec, PatternGen};
 use super::report::{analyze, SweepReport};
 use crate::comm::{build_schedule, build_schedule_from, dedup, Strategy};
-use crate::model::{ModelInputs, StrategyModel};
+use crate::model::{BoundModel, ModelInputs, StrategyModel};
 use crate::params::{CompiledParams, MachineParams};
 use crate::pattern::generators::{random_pattern, Scenario};
 use crate::pattern::CommPattern;
@@ -63,6 +81,19 @@ pub struct SweepConfig {
     /// [`machines::parse`] registry name; the node's GPU count still comes
     /// from the grid axis).
     pub machine: String,
+    /// Branch-and-bound pruning: skip simulating strategies whose
+    /// [`BoundModel`] lower bound exceeds the cell's best simulated time.
+    /// Winner-preserving (model times are always computed; the simulated
+    /// winner's bound can never exceed its own time). Default off.
+    pub prune: bool,
+    /// Reuse one unit-size pattern lowering across the size axis of each
+    /// uniform, duplicate-free grid line (exact integer rescale instead of
+    /// re-lowering). Bit-identical results; default off.
+    pub reuse_patterns: bool,
+    /// Adaptive grid refinement depth: 0 = exhaustive (default);
+    /// `d > 0` starts on every `2^d`-th size per line and subdivides only
+    /// between neighbors whose model winners disagree.
+    pub refine: usize,
 }
 
 impl Default for SweepConfig {
@@ -74,6 +105,9 @@ impl Default for SweepConfig {
             threads: 0,
             sim: true,
             machine: "lassen".into(),
+            prune: false,
+            reuse_patterns: false,
+            refine: 0,
         }
     }
 }
@@ -98,6 +132,9 @@ pub struct CellResult {
     pub sim_s: Option<f64>,
     /// Relative model error `|model - sim| / sim` when both are present.
     pub model_err: Option<f64>,
+    /// True when branch-and-bound pruning skipped this strategy's
+    /// simulation (`sim_s` is then None even though `sim` was on).
+    pub sim_pruned: bool,
 }
 
 /// The sweep outcome: per-cell results plus the derived report.
@@ -146,10 +183,19 @@ pub fn run_sweep_mode(config: &SweepConfig, mode: ExecMode) -> Result<SweepResul
     let t0 = Instant::now();
     let threads = effective_threads(config.threads, cells.len());
 
-    let results = pool::map_with(cells.len(), threads, sim::Scratch::new, |scratch, i| {
-        eval_cell(config, &arch, &params, &compiled_params, &cells[i], mode, scratch)
-    });
-    let cells_out: Vec<CellResult> = results.into_iter().flatten().collect();
+    let cells_out = if config.refine > 0 {
+        run_refined(config, &arch, &params, &compiled_params, &cells, mode, threads)
+    } else {
+        // Work units are grid *lines* (consecutive cells differing only in
+        // size) when pattern reuse can share a lowering, single cells
+        // otherwise — identical bits either way, cells() order preserved.
+        let chunk = if config.reuse_patterns { line_len(&config.grid) } else { 1 };
+        let lines: Vec<&[CellSpec]> = cells.chunks(chunk).collect();
+        let results = pool::map_with(lines.len(), threads, sim::Scratch::new, |scratch, i| {
+            eval_line(config, &arch, &params, &compiled_params, lines[i], mode, scratch)
+        });
+        results.into_iter().flatten().collect()
+    };
     let report = analyze(&cells_out);
     Ok(SweepResult {
         config: config.clone(),
@@ -158,6 +204,154 @@ pub fn run_sweep_mode(config: &SweepConfig, mode: ExecMode) -> Result<SweepResul
         threads_used: threads,
         elapsed_s: t0.elapsed().as_secs_f64(),
     })
+}
+
+/// Length of one grid line: the run of consecutive cells sharing
+/// (gen, dest, gpn, nics) and differing only in message size.
+/// [`GridSpec::cells`] iterates sizes innermost, so lines tile the cell
+/// vector exactly.
+fn line_len(grid: &GridSpec) -> usize {
+    let mut sizes = grid.sizes.clone();
+    sizes.sort_unstable();
+    sizes.dedup();
+    sizes.len().max(1)
+}
+
+/// Adaptive refinement: evaluate a coarse lattice of each grid line's size
+/// axis, then repeatedly subdivide between adjacent evaluated cells whose
+/// model winners disagree. Every evaluated cell keeps its exhaustive-grid
+/// index (hence its seed), so coinciding cells are bit-identical to the
+/// full sweep; skipped cells are simply absent from the output.
+#[allow(clippy::too_many_arguments)]
+fn run_refined(
+    config: &SweepConfig,
+    arch: &Machine,
+    params: &MachineParams,
+    compiled_params: &CompiledParams,
+    cells: &[CellSpec],
+    mode: ExecMode,
+    threads: usize,
+) -> Vec<CellResult> {
+    let n_sizes = line_len(&config.grid);
+    let stride = 1usize << config.refine.min(16);
+    let mut slots: Vec<Option<Vec<CellResult>>> = vec![None; cells.len()];
+
+    // initial wave: every stride-th size per line, plus each line's endpoint
+    let mut wave: Vec<usize> = Vec::new();
+    for base in (0..cells.len()).step_by(n_sizes) {
+        wave.extend((0..n_sizes).step_by(stride).map(|k| base + k));
+        wave.push(base + n_sizes - 1);
+    }
+
+    loop {
+        wave.sort_unstable();
+        wave.dedup();
+        wave.retain(|&i| slots[i].is_none());
+        if wave.is_empty() {
+            break;
+        }
+        // group the wave into per-line runs so pattern reuse still applies
+        let mut runs: Vec<&[usize]> = Vec::new();
+        let mut start = 0;
+        for i in 1..=wave.len() {
+            if i == wave.len() || wave[i] / n_sizes != wave[start] / n_sizes {
+                runs.push(&wave[start..i]);
+                start = i;
+            }
+        }
+        let eff = effective_threads(threads, runs.len());
+        let results = pool::map_with(runs.len(), eff, sim::Scratch::new, |scratch, r| {
+            let specs: Vec<CellSpec> = runs[r].iter().map(|&i| cells[i].clone()).collect();
+            eval_line(config, arch, params, compiled_params, &specs, mode, scratch)
+        });
+        let per_cell = config.strategies.len();
+        for (run, flat) in runs.iter().zip(results) {
+            for (&i, group) in run.iter().zip(flat.chunks(per_cell)) {
+                slots[i] = Some(group.to_vec());
+            }
+        }
+
+        // next wave: midpoints of adjacent evaluated neighbors (same line,
+        // gap > 1) whose model winners differ
+        let winner = |i: usize| -> &'static str {
+            let group = slots[i].as_ref().expect("evaluated");
+            // first-minimal-wins, matching report::analyze exactly
+            group.iter().min_by(|a, b| a.model_s.partial_cmp(&b.model_s).unwrap()).expect("non-empty").label
+        };
+        wave.clear();
+        for base in (0..cells.len()).step_by(n_sizes) {
+            let done: Vec<usize> = (base..base + n_sizes).filter(|&i| slots[i].is_some()).collect();
+            for w in done.windows(2) {
+                if w[1] - w[0] > 1 && winner(w[0]) != winner(w[1]) {
+                    wave.push((w[0] + w[1]) / 2);
+                }
+            }
+        }
+    }
+    slots.into_iter().flatten().flatten().collect()
+}
+
+/// Evaluate one grid line (cells sharing everything but size). When the
+/// line is uniform, duplicate-free and simulated in compiled mode with
+/// `reuse_patterns` on, the pattern is lowered once at unit size and
+/// rescaled exactly per cell; otherwise each cell takes the standard
+/// [`eval_cell`] path. Bit-identical either way.
+fn eval_line(
+    cfg: &SweepConfig,
+    arch: &Machine,
+    params: &MachineParams,
+    compiled_params: &CompiledParams,
+    cells: &[CellSpec],
+    mode: ExecMode,
+    scratch: &mut sim::Scratch,
+) -> Vec<CellResult> {
+    let reusable = cfg.reuse_patterns
+        && cfg.sim
+        && mode == ExecMode::Compiled
+        && cells.len() > 1
+        && cells[0].gen == PatternGen::Uniform
+        && cfg.grid.dup_frac == 0.0;
+    if !reusable {
+        return cells
+            .iter()
+            .flat_map(|cell| eval_cell(cfg, arch, params, compiled_params, cell, mode, scratch))
+            .collect();
+    }
+
+    let first = &cells[0];
+    let machine = cfg.grid.machine_for_arch(arch, first.dest_nodes, first.gpus_per_node, first.nics);
+    let ppn = machine.cores_per_node();
+    let unit = Scenario { n_msgs: cfg.grid.n_msgs, msg_size: 1, n_dest: first.dest_nodes, dup_frac: 0.0 };
+    let unit_pattern = unit.materialize(&machine);
+    let unit_lowered = CompiledPattern::lower(&machine, &unit_pattern);
+
+    let mut out = Vec::with_capacity(cells.len() * cfg.strategies.len());
+    for cell in cells {
+        debug_assert!(
+            cell.gen == first.gen
+                && cell.dest_nodes == first.dest_nodes
+                && cell.gpus_per_node == first.gpus_per_node
+                && cell.nics == first.nics,
+            "a line varies only in size"
+        );
+        let sc = Scenario { msg_size: cell.size, ..unit };
+        let pattern = sc.materialize(&machine);
+        let lowered = unit_lowered.rescaled(&pattern, cell.size);
+        let inputs = sc.inputs(&machine, ppn);
+        out.extend(eval_strategies(
+            cfg,
+            &machine,
+            params,
+            compiled_params,
+            cell,
+            mode,
+            scratch,
+            &inputs,
+            Some(&pattern),
+            Some(&lowered),
+        ));
+    }
+    out
 }
 
 /// Sweep a recorded workload trace instead of a generated grid: every
@@ -233,6 +427,9 @@ pub fn run_sweep_trace_mode(
         threads,
         sim: with_sim,
         machine: trace.machine.name.clone(),
+        prune: false,
+        reuse_patterns: false,
+        refine: 0,
     };
     Ok(SweepResult { config, cells: cells_out, report, threads_used: threads, elapsed_s: t0.elapsed().as_secs_f64() })
 }
@@ -320,6 +517,7 @@ fn eval_epoch(
             model_s,
             sim_s,
             model_err,
+            sim_pruned: false,
         });
     }
     out
@@ -339,7 +537,6 @@ pub(crate) fn eval_cell(
     scratch: &mut sim::Scratch,
 ) -> Vec<CellResult> {
     let machine = cfg.grid.machine_for_arch(arch, cell.dest_nodes, cell.gpus_per_node, cell.nics);
-    let sm = StrategyModel::new(&machine, params);
     // Model inputs use the full core count: only the Split models read
     // `ppn`, and Split enlists every core (matching `hetcomm model`).
     let ppn = machine.cores_per_node();
@@ -378,14 +575,82 @@ pub(crate) fn eval_cell(
         ExecMode::Compiled => pattern.as_ref().map(|p| CompiledPattern::lower(&machine, p)),
         ExecMode::Reference => None,
     };
+    eval_strategies(
+        cfg,
+        &machine,
+        params,
+        compiled_params,
+        cell,
+        mode,
+        scratch,
+        &inputs,
+        pattern.as_ref(),
+        lowered.as_ref(),
+    )
+}
 
-    let mut out = Vec::with_capacity(cfg.strategies.len());
-    for &strategy in &cfg.strategies {
-        let model_s = sm.time(strategy, &inputs);
-        let sim_s = pattern
-            .as_ref()
-            .map(|p| sim_strategy(mode, &machine, params, compiled_params, strategy, p, lowered.as_ref(), scratch));
-        let model_err = sim_s.and_then(|t| if t > 0.0 { Some((model_s - t).abs() / t) } else { None });
+/// Model every configured strategy for one cell and simulate the survivors.
+/// Without `prune`, every strategy simulates (legacy behavior). With it,
+/// the [`BoundModel`] seeds the search at the least upper bound, then
+/// visits the rest in ascending-lower-bound order, skipping any strategy
+/// whose sound lower bound exceeds the best simulated time so far. Model
+/// times are computed for all strategies regardless, and results come back
+/// in configuration order.
+#[allow(clippy::too_many_arguments)]
+fn eval_strategies(
+    cfg: &SweepConfig,
+    machine: &Machine,
+    params: &MachineParams,
+    compiled_params: &CompiledParams,
+    cell: &CellSpec,
+    mode: ExecMode,
+    scratch: &mut sim::Scratch,
+    inputs: &ModelInputs,
+    pattern: Option<&CommPattern>,
+    lowered: Option<&CompiledPattern>,
+) -> Vec<CellResult> {
+    let sm = StrategyModel::new(machine, params);
+    let n = cfg.strategies.len();
+    let model_s: Vec<f64> = cfg.strategies.iter().map(|&s| sm.time(s, inputs)).collect();
+    let mut sim_s: Vec<Option<f64>> = vec![None; n];
+    let mut pruned = vec![false; n];
+
+    if let Some(pattern) = pattern {
+        let run = |idx: usize, scratch: &mut sim::Scratch| {
+            sim_strategy(mode, machine, params, compiled_params, cfg.strategies[idx], pattern, lowered, scratch)
+        };
+        if cfg.prune {
+            let bm = BoundModel::new(machine, params);
+            let bounds: Vec<_> = cfg.strategies.iter().map(|&s| bm.bounds(s, inputs)).collect();
+            // seed: least upper bound (ties break to Table 5 order)
+            let seed = (0..n)
+                .min_by(|&a, &b| bounds[a].upper.total_cmp(&bounds[b].upper).then(a.cmp(&b)))
+                .expect("non-empty strategy list");
+            let mut best = run(seed, scratch);
+            sim_s[seed] = Some(best);
+            let mut order: Vec<usize> = (0..n).filter(|&i| i != seed).collect();
+            order.sort_by(|&a, &b| bounds[a].lower.total_cmp(&bounds[b].lower).then(a.cmp(&b)));
+            for idx in order {
+                if bounds[idx].lower > best {
+                    pruned[idx] = true;
+                    continue;
+                }
+                let t = run(idx, scratch);
+                if t < best {
+                    best = t;
+                }
+                sim_s[idx] = Some(t);
+            }
+        } else {
+            for (idx, slot) in sim_s.iter_mut().enumerate() {
+                *slot = Some(run(idx, scratch));
+            }
+        }
+    }
+
+    let mut out = Vec::with_capacity(n);
+    for (idx, &strategy) in cfg.strategies.iter().enumerate() {
+        let model_err = sim_s[idx].and_then(|t| if t > 0.0 { Some((model_s[idx] - t).abs() / t) } else { None });
         out.push(CellResult {
             index: cell.index,
             gen: cell.gen,
@@ -395,9 +660,10 @@ pub(crate) fn eval_cell(
             size: cell.size,
             strategy,
             label: strategy.label(),
-            model_s,
-            sim_s,
+            model_s: model_s[idx],
+            sim_s: sim_s[idx],
             model_err,
+            sim_pruned: pruned[idx],
         });
     }
     out
@@ -624,5 +890,138 @@ mod tests {
     fn cell_seed_spreads() {
         let s: std::collections::BTreeSet<u64> = (0..100).map(|i| cell_seed(42, i)).collect();
         assert_eq!(s.len(), 100);
+    }
+
+    /// Pruning-friendly grid: many small messages make the Standard
+    /// strategies' per-message floors dwarf the node-aware winners.
+    fn prunable_config(threads: usize) -> SweepConfig {
+        SweepConfig {
+            grid: GridSpec {
+                gens: vec![PatternGen::Uniform],
+                dest_nodes: vec![4],
+                gpus_per_node: vec![4],
+                nics: vec![1],
+                sizes: vec![64, 128, 256, 512, 1024],
+                n_msgs: 256,
+                dup_frac: 0.0,
+            },
+            seed: 7,
+            threads,
+            sim: true,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn prune_preserves_everything_but_skipped_sims() {
+        let full = run_sweep(&prunable_config(2)).unwrap();
+        let mut cfg = prunable_config(2);
+        cfg.prune = true;
+        let pruned = run_sweep(&cfg).unwrap();
+        assert_eq!(full.cells.len(), pruned.cells.len());
+        let mut skipped = 0;
+        for (a, b) in full.cells.iter().zip(&pruned.cells) {
+            assert_eq!(a.index, b.index);
+            assert_eq!(a.label, b.label);
+            // model times (and hence winners/crossovers/regimes) are untouched
+            assert_eq!(a.model_s.to_bits(), b.model_s.to_bits(), "{} model", a.label);
+            if b.sim_pruned {
+                skipped += 1;
+                assert!(b.sim_s.is_none(), "{} pruned but simulated", b.label);
+            } else {
+                // surviving sims are bit-identical to the full run
+                assert_eq!(a.sim_s.map(f64::to_bits), b.sim_s.map(f64::to_bits), "{} sim", a.label);
+            }
+        }
+        assert!(skipped > 0, "this grid must actually prune something");
+        // soundness end-to-end: no pruned strategy could have won a cell's sim
+        for group in pruned.cells.chunks(cfg.strategies.len()) {
+            let best = group.iter().filter_map(|c| c.sim_s).fold(f64::INFINITY, f64::min);
+            let full_group = &full.cells[group[0].index * cfg.strategies.len()..];
+            for (c, f) in group.iter().zip(full_group) {
+                if c.sim_pruned {
+                    assert!(f.sim_s.unwrap() >= best, "{} pruned yet beat the incumbent", c.label);
+                }
+            }
+        }
+        // winner/crossover/regime reports are identical (the `pruned`
+        // count is the only winner field allowed to move)
+        let key = |w: &crate::sweep::CellWinner| (w.size, w.winner, w.sim_winner, w.model_s.to_bits());
+        assert_eq!(
+            full.report.winners.iter().map(key).collect::<Vec<_>>(),
+            pruned.report.winners.iter().map(key).collect::<Vec<_>>()
+        );
+        assert_eq!(full.report.crossovers, pruned.report.crossovers);
+        assert_eq!(full.report.regimes, pruned.report.regimes);
+        // accounting matches the per-cell flags
+        assert_eq!(pruned.report.prune.pruned, skipped);
+        assert_eq!(pruned.report.prune.cells, full.report.winners.len());
+        assert_eq!(pruned.report.prune.sim_evals + skipped, full.report.prune.sim_evals);
+        assert_eq!(full.report.prune.pruned, 0);
+    }
+
+    #[test]
+    fn prune_never_marks_without_flag() {
+        let r = run_sweep(&small_config(2)).unwrap();
+        assert!(r.cells.iter().all(|c| !c.sim_pruned));
+    }
+
+    #[test]
+    fn pattern_reuse_is_bit_identical() {
+        for base in [small_config(2), prunable_config(2)] {
+            let off = run_sweep(&base).unwrap();
+            let mut cfg = base;
+            cfg.reuse_patterns = true;
+            let on = run_sweep(&cfg).unwrap();
+            cmp_cells(&off.cells, &on.cells);
+            // thread invariance holds with line-granular work units too
+            cfg.threads = 1;
+            let on1 = run_sweep(&cfg).unwrap();
+            cmp_cells(&on.cells, &on1.cells);
+        }
+    }
+
+    #[test]
+    fn refined_cells_match_exhaustive_where_they_coincide() {
+        // 9-point size axis so depth 2 exercises two subdivision levels
+        let mut base = prunable_config(2);
+        base.grid.sizes = (6..15).map(|e| 1usize << e).collect();
+        let exhaustive = run_sweep(&base).unwrap();
+        let mut cfg = base;
+        cfg.refine = 2;
+        cfg.prune = true;
+        cfg.reuse_patterns = true;
+        let refined = run_sweep(&cfg).unwrap();
+        assert!(refined.cells.len() <= exhaustive.cells.len());
+        assert!(!refined.cells.is_empty());
+        let per = cfg.strategies.len();
+        // endpoints of every line are always present
+        assert_eq!(refined.cells[0].index, 0);
+        assert_eq!(refined.cells.last().unwrap().index, exhaustive.cells.last().unwrap().index);
+        for group in refined.cells.chunks(per) {
+            let full_group = &exhaustive.cells[group[0].index * per..group[0].index * per + per];
+            for (r, f) in group.iter().zip(full_group) {
+                assert_eq!(r.label, f.label);
+                assert_eq!(r.model_s.to_bits(), f.model_s.to_bits(), "{} model", r.label);
+                if !r.sim_pruned {
+                    assert_eq!(r.sim_s.map(f64::to_bits), f.sim_s.map(f64::to_bits), "{} sim", r.label);
+                }
+            }
+        }
+        // the coarse pass plus subdivisions still finds every model winner
+        // transition the exhaustive report sees (crossover sizes coincide)
+        let xs = |r: &SweepResult| -> Vec<String> { r.report.crossovers.iter().map(|c| format!("{c:?}")).collect() };
+        assert_eq!(xs(&exhaustive), xs(&refined), "refinement must resolve the crossover boundary");
+    }
+
+    #[test]
+    fn refine_depth_larger_than_axis_still_covers_endpoints() {
+        let mut cfg = small_config(1);
+        cfg.refine = 30; // stride clamps; lattice degenerates to endpoints
+        let r = run_sweep(&cfg).unwrap();
+        assert!(!r.cells.is_empty());
+        let idx: std::collections::BTreeSet<usize> = r.cells.iter().map(|c| c.index).collect();
+        // both sizes of each 2-cell line are endpoints, so all cells evaluate
+        assert_eq!(idx.len(), cfg.grid.cells().len());
     }
 }

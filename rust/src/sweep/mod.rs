@@ -9,9 +9,11 @@
 //! worker pool:
 //!
 //! - [`grid`] — the axes and their flattening into deterministic cells;
-//! - [`engine`] — the worker pool, per-cell seeding, model + sim evaluation;
+//! - [`engine`] — the worker pool, per-cell seeding, model + sim evaluation,
+//!   plus the opt-in scale levers (branch-and-bound pruning, pattern-lowering
+//!   reuse, adaptive size-axis refinement — all winner-preserving);
 //! - [`report`] — per-cell winners, per-regime winning strategies,
-//!   crossover points, model-vs-simulation error aggregation;
+//!   crossover points, model-vs-simulation error aggregation, prune totals;
 //! - [`emit`] — byte-deterministic JSON, CSV and table output.
 //!
 //! The derived report reproduces the paper's claim that staged node-aware
@@ -32,4 +34,4 @@ pub use engine::{
     SweepConfig, SweepResult,
 };
 pub use grid::{CellSpec, GridSpec, PatternGen};
-pub use report::{analyze, CellWinner, Crossover, ErrorSummary, RegimeWinner, SweepReport, SMALL_BAND_MAX};
+pub use report::{analyze, CellWinner, Crossover, ErrorSummary, PruneSummary, RegimeWinner, SweepReport, SMALL_BAND_MAX};

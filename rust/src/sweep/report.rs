@@ -29,7 +29,12 @@ pub struct CellWinner {
     pub winner_staged: bool,
     pub model_s: f64,
     /// Label of the simulator-fastest strategy, when the sweep simulated.
+    /// Pruning-invariant: a strategy tying or beating the incumbent is
+    /// never pruned, so the first-minimal survivor is the full run's.
     pub sim_winner: Option<&'static str>,
+    /// Strategies whose simulation branch-and-bound pruning skipped in
+    /// this cell (0 unless the sweep ran with `prune`).
+    pub pruned: usize,
 }
 
 /// A model winner change between two adjacent sizes of one regime line.
@@ -73,6 +78,18 @@ pub struct ErrorSummary {
     pub max: f64,
 }
 
+/// Branch-and-bound pruning totals over the whole sweep (all zero unless
+/// the sweep ran with `prune`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PruneSummary {
+    /// Grid cells analyzed.
+    pub cells: usize,
+    /// (cell × strategy) pairs that ran the simulator.
+    pub sim_evals: usize,
+    /// (cell × strategy) pairs whose simulation was skipped by bounds.
+    pub pruned: usize,
+}
+
 /// The derived sweep report.
 #[derive(Clone, Debug, Default)]
 pub struct SweepReport {
@@ -80,6 +97,7 @@ pub struct SweepReport {
     pub crossovers: Vec<Crossover>,
     pub regimes: Vec<RegimeWinner>,
     pub model_error: ErrorSummary,
+    pub prune: PruneSummary,
 }
 
 fn same_line(a: &CellResult, b: &CellResult) -> bool {
@@ -119,6 +137,7 @@ pub fn analyze(cells: &[CellResult]) -> SweepReport {
             winner_staged: best.strategy.transport == Transport::Staged,
             model_s: best.model_s,
             sim_winner,
+            pruned: group.iter().filter(|c| c.sim_pruned).count(),
         });
         i = j;
     }
@@ -197,6 +216,13 @@ pub fn analyze(cells: &[CellResult]) -> SweepReport {
         };
     }
 
+    // --- Prune accounting. ---
+    report.prune = PruneSummary {
+        cells: report.winners.len(),
+        sim_evals: cells.iter().filter(|c| c.sim_s.is_some()).count(),
+        pruned: cells.iter().filter(|c| c.sim_pruned).count(),
+    };
+
     report
 }
 
@@ -229,6 +255,7 @@ mod tests {
                     model_s: t,
                     sim_s: Some(t * 1.1),
                     model_err: Some(0.1),
+                    sim_pruned: false,
                 });
             }
         }

@@ -1,0 +1,135 @@
+//! Golden winner-preservation tests for the sweep scale levers: pruning,
+//! pattern reuse and adaptive refinement must never change a winner,
+//! crossover or regime report — only which simulations get paid for.
+//!
+//! - **reuse** is exact (one unit-size lowering rescaled per cell), so the
+//!   *entire* emitted JSON must be byte-identical to the legacy run;
+//! - **prune** adds `sim_pruned`/`pruned` fields and drops pruned `sim_s`
+//!   values, so the comparison is on the derived report sections:
+//!   crossovers and regimes byte-for-byte, winners byte-for-byte after
+//!   stripping the per-cell prune counter;
+//! - **refine** emits a subset of cells at their full-grid seeds, so every
+//!   emitted winner row must appear verbatim in the exhaustive run's JSON,
+//!   with crossovers and regimes byte-identical (the boundary is resolved
+//!   to full resolution).
+//!
+//! All of it across 1/2/4-rail node shapes and `--threads 1` vs `4`.
+
+use hetcomm::sweep::emit::to_json;
+use hetcomm::sweep::{run_sweep, GridSpec, PatternGen, SweepConfig};
+
+fn pinned_config(machine: &str, nics: Vec<usize>, threads: usize) -> SweepConfig {
+    SweepConfig {
+        grid: GridSpec {
+            gens: vec![PatternGen::Uniform, PatternGen::Random],
+            dest_nodes: vec![4, 8],
+            gpus_per_node: vec![4],
+            nics,
+            sizes: vec![1 << 6, 1 << 10, 1 << 14, 1 << 18],
+            n_msgs: 192,
+            dup_frac: 0.0,
+        },
+        seed: 2025,
+        threads,
+        sim: true,
+        machine: machine.into(),
+        ..Default::default()
+    }
+}
+
+/// Extract one top-level JSON array section (`"winners": [...]`) verbatim.
+fn section<'a>(json: &'a str, key: &str) -> &'a str {
+    let open = format!("  \"{key}\": [\n");
+    let start = json.find(&open).unwrap_or_else(|| panic!("section {key} missing")) + open.len();
+    let end = start + json[start..].find("  ],").unwrap_or_else(|| panic!("section {key} unterminated"));
+    &json[start..end]
+}
+
+/// Drop `, "pruned": N` from each winner row so pruned and exhaustive runs
+/// compare on the winner content alone.
+fn strip_prune_counts(rows: &str) -> String {
+    rows.lines()
+        .map(|line| match line.find(", \"pruned\":") {
+            Some(pos) => {
+                let close = pos + line[pos..].find('}').expect("well-formed row");
+                format!("{}{}", &line[..pos], &line[close..])
+            }
+            None => line.to_string(),
+        })
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[test]
+fn pattern_reuse_emits_byte_identical_json() {
+    for (machine, nics) in [("lassen", vec![1]), ("lassen", vec![1, 2, 4]), ("frontier-4nic", vec![1])] {
+        let base = pinned_config(machine, nics, 4);
+        let legacy = run_sweep(&base).unwrap();
+        let mut cfg = base.clone();
+        cfg.reuse_patterns = true;
+        let reused = run_sweep(&cfg).unwrap();
+        assert_eq!(to_json(&legacy), to_json(&reused), "{machine}: reuse changed a byte");
+        cfg.threads = 1;
+        let serial = run_sweep(&cfg).unwrap();
+        assert_eq!(to_json(&reused), to_json(&serial), "{machine}: thread count changed reused bytes");
+    }
+}
+
+#[test]
+fn pruned_sweeps_preserve_winner_crossover_regime_reports() {
+    for (machine, nics) in [("lassen", vec![1]), ("lassen", vec![2]), ("lassen", vec![4]), ("frontier-4nic", vec![1])] {
+        let full = run_sweep(&pinned_config(machine, nics.clone(), 4)).unwrap();
+        let mut cfg = pinned_config(machine, nics, 4);
+        cfg.prune = true;
+        cfg.reuse_patterns = true;
+        let pruned = run_sweep(&cfg).unwrap();
+        let (fj, pj) = (to_json(&full), to_json(&pruned));
+        assert_eq!(
+            section(&fj, "winners"),
+            strip_prune_counts(section(&pj, "winners")).as_str(),
+            "{machine}: pruning changed a winner row"
+        );
+        assert_eq!(section(&fj, "crossovers"), section(&pj, "crossovers"), "{machine}: crossovers moved");
+        assert_eq!(section(&fj, "regimes"), section(&pj, "regimes"), "{machine}: regimes moved");
+        // determinism of the pruned emission itself across thread counts
+        cfg.threads = 1;
+        let serial = run_sweep(&cfg).unwrap();
+        assert_eq!(pj, to_json(&serial), "{machine}: thread count changed pruned bytes");
+        // and this grid prunes for real on the small sizes
+        assert!(pruned.report.prune.pruned > 0, "{machine}: nothing pruned on the golden grid");
+    }
+}
+
+#[test]
+fn refined_sweeps_resolve_the_same_boundary() {
+    // a size-rich line so depth-2 refinement recurses rather than degenerates
+    let mut base = pinned_config("lassen", vec![1], 4);
+    base.grid.gens = vec![PatternGen::Uniform];
+    base.grid.sizes = (6..15).map(|e| 1usize << e).collect();
+    let full = run_sweep(&base).unwrap();
+    let mut cfg = base.clone();
+    cfg.refine = 2;
+    let refined = run_sweep(&cfg).unwrap();
+    let (fj, rj) = (to_json(&full), to_json(&refined));
+    assert_eq!(section(&fj, "crossovers"), section(&rj, "crossovers"), "refinement lost a crossover");
+    // Regime winners must agree; the band totals legitimately sum over
+    // fewer lattice points in a refined run, so compare winner fields only.
+    let regime_key =
+        |g: &hetcomm::sweep::RegimeWinner| (g.gen, g.dest_nodes, g.gpus_per_node, g.nics, g.band, g.winner);
+    assert_eq!(
+        full.report.regimes.iter().map(regime_key).collect::<Vec<_>>(),
+        refined.report.regimes.iter().map(regime_key).collect::<Vec<_>>(),
+        "refinement changed a regime winner"
+    );
+    // every refined winner row coincides bit-for-bit with the exhaustive run
+    let full_rows: std::collections::BTreeSet<&str> =
+        section(&fj, "winners").lines().map(|l| l.trim_end_matches(',')).collect();
+    for row in section(&rj, "winners").lines() {
+        assert!(full_rows.contains(row.trim_end_matches(',')), "refined row not in exhaustive run: {row}");
+    }
+    assert!(refined.cells.len() < full.cells.len(), "depth-2 refinement must skip interior cells");
+    // thread invariance of the refinement wavefront
+    cfg.threads = 1;
+    let serial = run_sweep(&cfg).unwrap();
+    assert_eq!(rj, to_json(&serial), "thread count changed refined bytes");
+}

@@ -127,6 +127,58 @@ fn crossover_from_staged_split_to_device_aware() {
 }
 
 #[test]
+fn coarse_model_only_sweep_reaches_exascale_node_counts() {
+    // The scale target behind the pruning/refinement levers: a model-only
+    // sweep over an O(1k)-node machine stays cheap (no patterns, no
+    // schedules), and the paper's regime structure extrapolates — staged
+    // node-aware Split keeps the small band as the node count grows, while
+    // device-aware still takes the largest sizes.
+    let config = SweepConfig {
+        grid: GridSpec {
+            gens: vec![PatternGen::Uniform],
+            dest_nodes: vec![64, 256, 1024],
+            gpus_per_node: vec![4],
+            nics: vec![1],
+            sizes: (4..=20).step_by(4).map(|e| 1usize << e).collect(),
+            n_msgs: 1024,
+            dup_frac: 0.0,
+        },
+        sim: false,
+        ..Default::default()
+    };
+    let exhaustive = run_sweep(&config).unwrap();
+    assert_eq!(exhaustive.cells.len(), 3 * 5 * Strategy::all().len());
+
+    let small_1k = exhaustive
+        .report
+        .regimes
+        .iter()
+        .find(|g| g.dest_nodes == 1024 && g.band == "small")
+        .expect("1024-node small-band regime present");
+    assert!(
+        matches!(small_1k.winner_kind, StrategyKind::SplitMd | StrategyKind::SplitDd),
+        "expected a Split strategy at 1024 nodes, got {}",
+        small_1k.winner
+    );
+    let top_1k = exhaustive.report.winners.iter().filter(|w| w.dest_nodes == 1024).last().unwrap();
+    assert!(top_1k.winner.contains("device-aware"), "largest size should stay device-aware: {}", top_1k.winner);
+
+    // Refinement is purely model-driven, so it composes with model-only
+    // sweeps: the coarse-to-fine pass must find the same boundaries.
+    let refined = run_sweep(&SweepConfig { refine: 2, ..config.clone() }).unwrap();
+    assert_eq!(exhaustive.report.crossovers, refined.report.crossovers, "refined crossovers diverged at scale");
+    // Regime *winners* must agree; the band totals legitimately sum over
+    // fewer lattice points in a refined run, so they are not compared.
+    let regime_key =
+        |g: &hetcomm::sweep::RegimeWinner| (g.gen, g.dest_nodes, g.gpus_per_node, g.nics, g.band, g.winner);
+    assert_eq!(
+        exhaustive.report.regimes.iter().map(regime_key).collect::<Vec<_>>(),
+        refined.report.regimes.iter().map(regime_key).collect::<Vec<_>>(),
+        "refined regime winners diverged at scale"
+    );
+}
+
+#[test]
 fn simulator_agrees_split_beats_standard_staged_moderate_sizes() {
     // The schedule-level cross-check: at moderate sizes with many messages,
     // the simulated Split+MD exchange beats simulated standard staged

@@ -1,0 +1,167 @@
+//! Pruning-soundness property suite for [`hetcomm::model::bounds`]: the
+//! branch-and-bound sweep (`sweep --prune`) skips a strategy's simulation
+//! whenever its lower bound exceeds the cell incumbent's simulated time, so
+//! winner preservation rests on exactly two inequalities, checked here over
+//! randomized patterns, node shapes and sizes:
+//!
+//! 1. `lower <= model_time <= upper` — the envelope brackets the Table 6
+//!    closed forms (the upper bound seeds the search, the model winner is
+//!    always in-interval);
+//! 2. `lower <= sim_time` — the discrete-event executor can never finish a
+//!    schedule below the bound (the pruning oracle: a skipped strategy
+//!    could not have won the cell).
+//!
+//! Plus bound-tightness monotonicity: the `[lower, upper]` gap never
+//! shrinks as message size grows, so coarse-grid refinement seeds stay
+//! conservative.
+
+use hetcomm::comm::{build_schedule, dedup, Strategy};
+use hetcomm::model::{BoundModel, StrategyModel};
+use hetcomm::pattern::generators::{random_pattern, Scenario};
+use hetcomm::sweep::GridSpec;
+use hetcomm::topology::machines;
+use hetcomm::util::rng::Rng;
+
+/// (machine preset, NIC rails) shapes spanning the registry: 2-socket
+/// single-rail, multi-rail overrides of it, and the shape-pinned 4-rail
+/// preset on its own pinned count.
+const SHAPES: [(&str, usize); 4] = [("lassen", 1), ("lassen", 2), ("frontier-like", 1), ("frontier-4nic", 4)];
+
+#[test]
+fn bounds_bracket_model_on_uniform_and_random_patterns() {
+    for &(name, nics) in &SHAPES {
+        let (arch, params) = machines::parse(name, 1).unwrap();
+        let bm = BoundModel::new(&arch, &params);
+        for dest in [3, 16] {
+            let machine = GridSpec::default().machine_for_arch(&arch, dest, 4, nics);
+            let sm = StrategyModel::new(&machine, &params);
+            let bm_m = BoundModel::new(&machine, &params);
+            let ppn = machine.cores_per_node();
+            for n_msgs in [16, 177] {
+                for exp in 0..21 {
+                    for dup in [0.0, 0.3] {
+                        let sc = Scenario { n_msgs, msg_size: 1usize << exp, n_dest: dest, dup_frac: dup };
+                        let inputs = sc.inputs(&machine, ppn);
+                        for s in Strategy::all() {
+                            let b = bm_m.bounds(s, &inputs);
+                            let t = sm.time(s, &inputs);
+                            assert!(
+                                b.lower <= t && t <= b.upper,
+                                "{name}/{nics}r {}: model {t:e} outside [{:e}, {:e}] \
+                                 (msgs {n_msgs}, size 2^{exp}, dup {dup})",
+                                s.label(),
+                                b.lower,
+                                b.upper
+                            );
+                            assert!(b.lower.is_finite() && b.upper.is_finite());
+                            assert!(b.lower > 0.0, "{}: zero lower bound prunes nothing", s.label());
+                        }
+                    }
+                }
+            }
+        }
+        // the arch-level model (no grid resizing) brackets too
+        let inputs = Scenario { n_msgs: 32, msg_size: 4096, n_dest: 4, dup_frac: 0.0 }
+            .inputs(&arch, arch.cores_per_node());
+        let sm = StrategyModel::new(&arch, &params);
+        for s in Strategy::all() {
+            let b = bm.bounds(s, &inputs);
+            let t = sm.time(s, &inputs);
+            assert!(b.lower <= t && t <= b.upper, "{name}: arch-level bracket failed for {}", s.label());
+        }
+    }
+}
+
+#[test]
+fn lower_bound_never_exceeds_simulated_time() {
+    // The oracle behind pruning: over random patterns (irregular fan-out,
+    // random sizes, duplicates) on every shape, the executor's total can
+    // never undercut the bound. `>=` must hold bit-for-bit — one epsilon
+    // here is a wrongly pruned winner in a million-cell study.
+    for &(name, nics) in &SHAPES {
+        let (arch, params) = machines::parse(name, 1).unwrap();
+        for dest in [4, 9] {
+            let machine = GridSpec::default().machine_for_arch(&arch, dest, 4, nics);
+            let bm = BoundModel::new(&machine, &params);
+            let ppn = machine.cores_per_node();
+            let mut rng = Rng::new(0x5eed ^ ((dest as u64) << 8) ^ nics as u64);
+            for case in 0..6 {
+                let n_msgs = 8 + 31 * case;
+                let max_bytes = 1usize << (4 + 2 * case);
+                let dup = if case % 2 == 0 { 0.0 } else { 0.4 };
+                let pattern = random_pattern(&machine, &mut rng, n_msgs, max_bytes, dup);
+                let inputs = pattern.model_inputs(&machine, ppn, pattern.duplicate_fraction(&machine));
+                for s in Strategy::all() {
+                    let b = bm.bounds(s, &inputs);
+                    let schedule = build_schedule(s, &machine, &pattern);
+                    let sim = hetcomm::sim::run_reference(&machine, &params, &schedule, s.sim_ppn(&machine)).total;
+                    assert!(
+                        b.lower <= sim,
+                        "{name}/{nics}r {}: lower bound {:e} exceeds simulated {sim:e} \
+                         (case {case}: msgs {n_msgs}, max {max_bytes} B, dup {dup}) — pruning is unsound",
+                        s.label(),
+                        b.lower
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn lower_bound_never_exceeds_simulated_time_on_uniform_grids() {
+    // The exact workload shape `--prune` runs on: uniform scenarios across
+    // the size axis, with and without marked duplicates.
+    let (arch, params) = machines::parse("lassen", 1).unwrap();
+    for nics in [1, 4] {
+        let machine = GridSpec::default().machine_for_arch(&arch, 4, 4, nics);
+        let bm = BoundModel::new(&machine, &params);
+        for dup in [0.0, 0.25] {
+            for exp in [4, 10, 16, 20] {
+                let sc = Scenario { n_msgs: 96, msg_size: 1usize << exp, n_dest: 4, dup_frac: dup };
+                let base = sc.materialize(&machine);
+                let pattern =
+                    if dup > 0.0 { dedup::with_duplicate_fraction(&machine, &base, dup) } else { base };
+                let inputs = sc.inputs(&machine, machine.cores_per_node());
+                for s in Strategy::all() {
+                    let b = bm.bounds(s, &inputs);
+                    let schedule = build_schedule(s, &machine, &pattern);
+                    let sim = hetcomm::sim::run_reference(&machine, &params, &schedule, s.sim_ppn(&machine)).total;
+                    assert!(
+                        b.lower <= sim,
+                        "{}/{nics}r: lower {:e} > sim {sim:e} (size 2^{exp}, dup {dup})",
+                        s.label(),
+                        b.lower
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn bound_gap_is_monotone_in_message_size() {
+    // Tightness monotonicity: growing the per-message size never shrinks
+    // the [lower, upper] interval, so a bound computed at a coarse lattice
+    // point stays conservative for the finer sizes refinement visits.
+    for &(name, nics) in &SHAPES {
+        let (arch, params) = machines::parse(name, 1).unwrap();
+        let machine = GridSpec::default().machine_for_arch(&arch, 8, 4, nics);
+        let bm = BoundModel::new(&machine, &params);
+        let ppn = machine.cores_per_node();
+        for s in Strategy::all() {
+            let mut prev_gap = 0.0f64;
+            for exp in 0..21 {
+                let sc = Scenario { n_msgs: 64, msg_size: 1usize << exp, n_dest: 8, dup_frac: 0.0 };
+                let b = bm.bounds(s, &sc.inputs(&machine, ppn));
+                let gap = b.upper - b.lower;
+                assert!(
+                    gap >= prev_gap - 1e-15,
+                    "{name}/{nics}r {}: gap shrank from {prev_gap:e} to {gap:e} at size 2^{exp}",
+                    s.label()
+                );
+                prev_gap = gap;
+            }
+        }
+    }
+}
