@@ -379,6 +379,46 @@ impl DecisionSurface {
         Ok(DecisionSurface { machine: arch.name.clone(), nics, dup_frac, axes, strategies, cells, stale })
     }
 
+    /// Recompile this surface's lattice at a different NIC rail count — the
+    /// degraded-shape sibling the fault layer re-advises against after a
+    /// rail failure ([`crate::trace::replay`]). Same machine, axes, dup
+    /// fraction and strategy set; only the shape key changes. Deliberately
+    /// bypasses the pinned-preset guard of [`DecisionSurface::compile_shaped`]:
+    /// a rail failure is exactly the case where a pinned shape's count
+    /// changes underneath the advisor. The sibling is an in-memory serving
+    /// object — persisting one compiled against a pinned preset would fail
+    /// [`DecisionSurface::validate`]'s shape check, by design.
+    pub fn resized_nics(&self, nics: usize) -> Result<DecisionSurface, String> {
+        if nics == 0 {
+            return Err("a degraded surface needs at least one surviving rail".into());
+        }
+        if nics == self.nics {
+            return Ok(self.clone());
+        }
+        let (arch, params) = machines::parse(&self.machine, 1)?;
+        let mut cells = Vec::with_capacity(self.axes.len());
+        for &m in &self.axes.msgs {
+            for &d in &self.axes.dest_nodes {
+                for &g in &self.axes.gpus_per_node {
+                    for &s in &self.axes.sizes {
+                        let q = Pattern { n_msgs: m, msg_size: s, dest_nodes: d, gpus_per_node: g };
+                        cells.push(cell_times(&arch, &params, nics, &self.strategies, &q, self.dup_frac));
+                    }
+                }
+            }
+        }
+        let stale = vec![false; cells.len()];
+        Ok(DecisionSurface {
+            machine: self.machine.clone(),
+            nics,
+            dup_frac: self.dup_frac,
+            axes: self.axes.clone(),
+            strategies: self.strategies.clone(),
+            cells,
+            stale,
+        })
+    }
+
     /// Structural sanity (used after artifact loads); returns a user-facing
     /// message on failure.
     pub fn validate(&self) -> Result<(), String> {
@@ -659,6 +699,32 @@ mod tests {
         let mut bad = pinned.clone();
         bad.nics = 2;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn resized_nics_builds_the_degraded_sibling() {
+        // unpinned machine: the sibling equals a direct shaped compile
+        let base = DecisionSurface::compile("lassen", tiny_axes(), 0.0).unwrap();
+        let sibling = base.resized_nics(4).unwrap();
+        let direct = DecisionSurface::compile_shaped("lassen", 4, tiny_axes(), 0.0).unwrap();
+        assert_eq!(sibling, direct);
+        // same count returns an identical surface
+        assert_eq!(base.resized_nics(base.nics).unwrap(), base);
+        // pinned preset: the degraded sibling compiles (the whole point),
+        // serves lookups, but is not a persistable artifact
+        let pinned = DecisionSurface::compile("frontier-4nic", tiny_axes(), 0.0).unwrap();
+        let degraded = pinned.resized_nics(3).unwrap();
+        assert_eq!(degraded.nics, 3);
+        assert!(degraded.validate().is_err(), "pinned siblings are in-memory only");
+        let q = Pattern { n_msgs: 64, msg_size: 4096, dest_nodes: 4, gpus_per_node: 4 };
+        // fewer rails can only slow lattice cells down, never speed them up
+        for (a, b) in pinned.cells.iter().zip(&degraded.cells) {
+            for (x, y) in a.iter().zip(b) {
+                assert!(y >= x, "losing a rail must not speed a cell up");
+            }
+        }
+        let _ = degraded.lookup(&q);
+        assert!(base.resized_nics(0).is_err());
     }
 
     #[test]

@@ -1,0 +1,468 @@
+//! Seeded, deterministic fault and degradation injection.
+//!
+//! The paper's models — and the whole Table 6 / [`crate::topology::NodeShape`]
+//! stack — assume healthy, uncontended hardware. This module makes the
+//! unhealthy cases first-class so the adaptive replay policy can be tested
+//! against *external* drift (ROADMAP item 5(b)): a [`FaultSpec`] schedules
+//! per-epoch [`FaultEvent`]s of three classes,
+//!
+//! - **rail failure** ([`FaultKind::RailDown`]): a NIC rail goes down for
+//!   the rest of the run. The node shape degrades
+//!   ([`NodeShape::degraded`](crate::topology::NodeShape::degraded)):
+//!   surviving rails are renumbered densely, GPU↔NIC affinity and the host
+//!   round-robin remap onto the survivors through the *same* policy homes
+//!   every executor already uses (`sim::exec::rail` reads the shape, so no
+//!   second mapping exists to drift out of sync).
+//! - **bandwidth degradation** ([`FaultKind::Slowdown`]): a rail becomes
+//!   `factor`× slower. The per-rail injection bands
+//!   ([`MachineParams::nic_bands`]) carry the slowdown into both executors,
+//!   and the model-side aggregate `1/R_N` becomes the surviving rails' mean
+//!   inverse rate, so the staged models' rails divisor keeps reproducing the
+//!   summed injection capacity.
+//! - **background congestion** ([`FaultKind::Congestion`]): seeded occupancy
+//!   pre-charges every (node, rail) NIC timeline before the schedule runs
+//!   ([`FaultState::precharge`]), consumed identically by `run_compiled`
+//!   and `run_reference`.
+//!
+//! Events *persist* from their start epoch (no self-repair), so the state at
+//! epoch `e` is the accumulation of every event with `epoch <= e`
+//! ([`FaultSpec::state_at`]). Everything is deterministic: the same spec,
+//! seed and trace produce byte-identical replay output, and an identity spec
+//! ([`FaultSpec::is_identity`]) leaves every output byte-identical to a run
+//! without faults (the zero-fault safety rail gated in CI).
+//!
+//! Specs are persisted as versioned `hetcomm.faults.v1` artifacts
+//! ([`persist`]) and enter the CLI through `replay --faults` and
+//! `sweep --faults` (docs/FORMATS.md).
+
+pub mod persist;
+
+use crate::params::{AlphaBeta, MachineParams};
+use crate::topology::Machine;
+use crate::util::rng::{index_seed, Rng};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Salt mixed into the spec seed for congestion pre-charge draws, so the
+/// occupancy stream never collides with pattern-generator streams that share
+/// the base seed.
+const CONGESTION_SALT: u64 = 0xFA17_1E57_C0C0_57E5;
+
+/// One fault class instance (the event minus its start epoch — the form
+/// embedded into trace epochs).
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultKind {
+    /// NIC rail `rail` (healthy node-local id) fails permanently.
+    RailDown { rail: usize },
+    /// Rail `rail` becomes `factor`× slower (`factor >= 1`, multiplying the
+    /// rail's injection band α and β). Repeated slowdowns compound.
+    Slowdown { rail: usize, factor: f64 },
+    /// Background traffic pre-charges every (node, rail) NIC timeline with
+    /// seeded occupancy uniform in `[0, 2·level)` seconds (mean `level`).
+    /// Repeated events add their levels.
+    Congestion { level: f64 },
+}
+
+impl FaultKind {
+    /// The fault class name (the `kind` tag of the JSON encodings).
+    pub fn class(&self) -> &'static str {
+        match self {
+            FaultKind::RailDown { .. } => "rail-down",
+            FaultKind::Slowdown { .. } => "slowdown",
+            FaultKind::Congestion { .. } => "congestion",
+        }
+    }
+
+    /// Whether the event changes nothing (slowdown by 1×, zero congestion).
+    pub fn is_identity(&self) -> bool {
+        match *self {
+            FaultKind::RailDown { .. } => false,
+            FaultKind::Slowdown { factor, .. } => factor == 1.0,
+            FaultKind::Congestion { level } => level == 0.0,
+        }
+    }
+
+    /// Structural sanity against a healthy rail count (`rails == 0` skips
+    /// the range check for contexts that do not know the machine yet).
+    pub fn validate(&self, rails: usize) -> Result<(), String> {
+        match *self {
+            FaultKind::RailDown { rail } | FaultKind::Slowdown { rail, .. } if rails > 0 && rail >= rails => {
+                Err(format!("fault names rail {rail}, node has {rails}"))
+            }
+            FaultKind::Slowdown { factor, .. } if !factor.is_finite() || factor < 1.0 => {
+                Err(format!("slowdown factor must be finite and >= 1, got {factor}"))
+            }
+            FaultKind::Congestion { level } if !level.is_finite() || level < 0.0 => {
+                Err(format!("congestion level must be finite and >= 0, got {level}"))
+            }
+            _ => Ok(()),
+        }
+    }
+}
+
+impl std::fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FaultKind::RailDown { rail } => write!(f, "rail-down({rail})"),
+            FaultKind::Slowdown { rail, factor } => write!(f, "slowdown({rail}x{factor})"),
+            FaultKind::Congestion { level } => write!(f, "congestion({level})"),
+        }
+    }
+}
+
+/// A scheduled fault: active from `epoch` (inclusive) to the end of the run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub epoch: usize,
+    pub kind: FaultKind,
+}
+
+/// A deterministic fault schedule: the `hetcomm.faults.v1` artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// Seed for the congestion occupancy injectors (rail failures and
+    /// slowdowns are deterministic without it).
+    pub seed: u64,
+    /// Scheduled events, in any order; accumulation sorts by epoch.
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultSpec {
+    /// A spec with no events — the identity under every operation.
+    pub fn empty(seed: u64) -> FaultSpec {
+        FaultSpec { seed, events: Vec::new() }
+    }
+
+    /// Validate every event against a healthy rail count (`rails == 0`
+    /// skips range checks) and require at least one surviving rail.
+    pub fn validate(&self, rails: usize) -> Result<(), String> {
+        for e in &self.events {
+            e.kind.validate(rails)?;
+        }
+        if rails > 0 && self.terminal_state().down.len() >= rails {
+            return Err(format!("fault spec downs all {rails} rails; at least one must survive"));
+        }
+        Ok(())
+    }
+
+    /// The accumulated fault state at `epoch`: every event with
+    /// `event.epoch <= epoch` applied (events persist once active).
+    pub fn state_at(&self, epoch: usize) -> FaultState {
+        let mut state = FaultState::default();
+        for e in &self.events {
+            if e.epoch <= epoch {
+                state.apply(&e.kind);
+            }
+        }
+        state
+    }
+
+    /// The state after every event has fired.
+    pub fn terminal_state(&self) -> FaultState {
+        self.events.iter().map(|e| e.epoch).max().map(|last| self.state_at(last)).unwrap_or_default()
+    }
+
+    /// Whether the spec changes nothing at any epoch. Events only
+    /// accumulate (there is no repair), so an identity terminal state means
+    /// every intermediate state is the identity too.
+    pub fn is_identity(&self) -> bool {
+        self.events.iter().all(|e| e.kind.is_identity())
+    }
+
+    /// Epoch of the first non-identity event, if any.
+    pub fn first_epoch(&self) -> Option<usize> {
+        self.events.iter().filter(|e| !e.kind.is_identity()).map(|e| e.epoch).min()
+    }
+
+    /// Distinct fault classes present, in first-appearance order.
+    pub fn classes(&self) -> Vec<&'static str> {
+        let mut out: Vec<&'static str> = Vec::new();
+        for e in &self.events {
+            if !e.kind.is_identity() && !out.contains(&e.kind.class()) {
+                out.push(e.kind.class());
+            }
+        }
+        out
+    }
+
+    /// The sub-spec keeping only one fault class (for per-class resilience
+    /// counterfactuals). The seed is shared so congestion draws match.
+    pub fn restricted_to_class(&self, class: &str) -> FaultSpec {
+        FaultSpec { seed: self.seed, events: self.events.iter().filter(|e| e.kind.class() == class).cloned().collect() }
+    }
+
+    /// Embed the schedule into a trace's epochs (each event rides on its
+    /// start epoch), so the trace itself carries the fault timeline.
+    pub fn attach(&self, trace: &crate::trace::Trace) -> Result<crate::trace::Trace, String> {
+        self.validate(trace.machine.nics_per_node())?;
+        let mut out = trace.clone();
+        for e in &self.events {
+            let epoch = out
+                .epochs
+                .get_mut(e.epoch)
+                .ok_or_else(|| format!("fault event at epoch {}, trace has {}", e.epoch, out.epochs.len()))?;
+            epoch.faults.push(e.kind.clone());
+        }
+        Ok(out)
+    }
+}
+
+/// The accumulated degradation in force at one epoch.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultState {
+    /// Failed rails (healthy node-local ids).
+    pub down: BTreeSet<usize>,
+    /// Compounded slowdown factor per rail (healthy ids; absent = 1×).
+    pub slow: BTreeMap<usize, f64>,
+    /// Summed background-congestion level [s].
+    pub congestion: f64,
+}
+
+impl FaultState {
+    /// Fold one more event into the state.
+    pub fn apply(&mut self, kind: &FaultKind) {
+        match *kind {
+            FaultKind::RailDown { rail } => {
+                self.down.insert(rail);
+            }
+            FaultKind::Slowdown { rail, factor } => {
+                *self.slow.entry(rail).or_insert(1.0) *= factor;
+            }
+            FaultKind::Congestion { level } => self.congestion += level,
+        }
+    }
+
+    /// Whether the state changes nothing.
+    pub fn is_identity(&self) -> bool {
+        self.down.is_empty() && self.slow.iter().all(|(_, &f)| f == 1.0) && self.congestion == 0.0
+    }
+
+    /// The degraded system: the machine with failed rails removed from its
+    /// shape (survivors renumbered densely, affinity remapped) and the
+    /// parameters with per-rail slowdowns folded into the injection bands.
+    ///
+    /// When bands become heterogeneous (explicit `nic_bands`), the
+    /// model-side aggregate `inv_rn` is recomputed as the surviving rails'
+    /// mean inverse rate — `nics / Σ_r (1/β_r)` — so the staged models'
+    /// division by the rail count keeps equaling the summed injection
+    /// capacity. Pure rail-down states on homogeneous bands leave `inv_rn`
+    /// bit-identical (the survivors are unchanged rails). Congestion does
+    /// not appear here at all: it is a simulator-timeline effect
+    /// ([`FaultState::precharge`]), invisible to the closed-form models.
+    pub fn degrade(&self, machine: &Machine, params: &MachineParams) -> Result<(Machine, MachineParams), String> {
+        if self.down.is_empty() && self.slow.iter().all(|(_, &f)| f == 1.0) {
+            return Ok((machine.clone(), params.clone()));
+        }
+        let rails = machine.nics_per_node();
+        for &r in self.down.iter().chain(self.slow.keys()) {
+            if r >= rails {
+                return Err(format!("fault names rail {r}, machine {:?} has {rails}", machine.name));
+            }
+        }
+        let down: Vec<usize> = self.down.iter().copied().collect();
+        let shape = machine.shape.degraded(&down)?;
+        let mut degraded = machine.clone();
+        degraded.shape = shape;
+
+        // Surviving rails' bands in their new (dense) order, slowdowns
+        // applied. Keeping the table empty when it would only restate the
+        // homogeneous default preserves the bit-exact legacy injection path.
+        let bands: Vec<AlphaBeta> = (0..rails)
+            .filter(|r| !self.down.contains(r))
+            .map(|r| {
+                let f = self.slow.get(&r).copied().unwrap_or(1.0);
+                let b = params.nic_band(r);
+                AlphaBeta::new(b.alpha * f, b.beta * f)
+            })
+            .collect();
+        let mut out = params.clone();
+        let heterogeneous = !params.nic_bands.is_empty() || self.slow.iter().any(|(_, &f)| f != 1.0);
+        if heterogeneous {
+            let capacity: f64 = bands.iter().map(|b| 1.0 / b.beta).sum();
+            if !(capacity.is_finite() && capacity > 0.0) {
+                return Err("degraded rails have no finite injection capacity".into());
+            }
+            out.inv_rn = bands.len() as f64 / capacity;
+            out.nic_bands = bands;
+        } else {
+            out.nic_bands = Vec::new();
+        }
+        Ok((degraded, out))
+    }
+
+    /// Seeded background-occupancy pre-charge for every (node, rail) NIC
+    /// timeline — `None` when the state carries no congestion. Entry
+    /// `node * rails + rail` is uniform in `[0, 2·level)` seconds. `stream`
+    /// separates draws per epoch (or per sweep cell) so occupancy evolves
+    /// over a run while staying deterministic.
+    pub fn precharge(&self, seed: u64, stream: usize, nodes: usize, rails: usize) -> Option<Vec<f64>> {
+        if self.congestion <= 0.0 {
+            return None;
+        }
+        let mut rng = Rng::new(index_seed(seed ^ CONGESTION_SALT, stream));
+        Some((0..nodes * rails).map(|_| rng.f64() * 2.0 * self.congestion).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::machines;
+
+    fn spec() -> FaultSpec {
+        FaultSpec {
+            seed: 9,
+            events: vec![
+                FaultEvent { epoch: 2, kind: FaultKind::Congestion { level: 1.5e-4 } },
+                FaultEvent { epoch: 3, kind: FaultKind::RailDown { rail: 1 } },
+                FaultEvent { epoch: 5, kind: FaultKind::Slowdown { rail: 0, factor: 4.0 } },
+                FaultEvent { epoch: 6, kind: FaultKind::Slowdown { rail: 0, factor: 2.0 } },
+            ],
+        }
+    }
+
+    #[test]
+    fn states_accumulate_and_persist() {
+        let s = spec();
+        assert!(s.state_at(1).is_identity());
+        assert_eq!(s.state_at(2).congestion, 1.5e-4);
+        assert!(s.state_at(2).down.is_empty());
+        let at4 = s.state_at(4);
+        assert!(at4.down.contains(&1));
+        assert_eq!(at4.congestion, 1.5e-4);
+        // slowdowns compound: 4x then 2x = 8x
+        assert_eq!(s.state_at(6).slow.get(&0), Some(&8.0));
+        assert_eq!(s.terminal_state(), s.state_at(6));
+        assert_eq!(s.first_epoch(), Some(2));
+        assert_eq!(s.classes(), vec!["congestion", "rail-down", "slowdown"]);
+    }
+
+    #[test]
+    fn identity_specs_detected() {
+        assert!(FaultSpec::empty(1).is_identity());
+        let s = FaultSpec {
+            seed: 1,
+            events: vec![
+                FaultEvent { epoch: 0, kind: FaultKind::Slowdown { rail: 0, factor: 1.0 } },
+                FaultEvent { epoch: 1, kind: FaultKind::Congestion { level: 0.0 } },
+            ],
+        };
+        assert!(s.is_identity());
+        assert!(s.first_epoch().is_none());
+        assert!(s.classes().is_empty());
+        assert!(!spec().is_identity());
+    }
+
+    #[test]
+    fn validate_rejects_bad_events() {
+        let mut s = spec();
+        s.validate(4).unwrap();
+        s.validate(0).unwrap(); // unknown rail count: range checks skipped
+        assert!(s.validate(1).unwrap_err().contains("rail 1"));
+        s.events.push(FaultEvent { epoch: 0, kind: FaultKind::Slowdown { rail: 0, factor: 0.5 } });
+        assert!(s.validate(4).unwrap_err().contains("factor"));
+        s.events.pop();
+        s.events.push(FaultEvent { epoch: 0, kind: FaultKind::Congestion { level: f64::NAN } });
+        assert!(s.validate(4).unwrap_err().contains("congestion"));
+        // downing every rail is rejected
+        let all = FaultSpec {
+            seed: 1,
+            events: (0..2).map(|r| FaultEvent { epoch: 0, kind: FaultKind::RailDown { rail: r } }).collect(),
+        };
+        assert!(all.validate(2).unwrap_err().contains("survive"));
+    }
+
+    #[test]
+    fn class_restriction_partitions() {
+        let s = spec();
+        let down = s.restricted_to_class("rail-down");
+        assert_eq!(down.events.len(), 1);
+        assert_eq!(down.seed, s.seed);
+        let slow = s.restricted_to_class("slowdown");
+        assert_eq!(slow.events.len(), 2);
+        let total: usize = s.classes().iter().map(|c| s.restricted_to_class(c).events.len()).sum();
+        assert_eq!(total, s.events.len());
+    }
+
+    #[test]
+    fn degrade_rail_down_shrinks_shape_only() {
+        let (machine, params) = machines::parse("frontier-4nic", 2).unwrap();
+        let mut state = FaultState::default();
+        state.apply(&FaultKind::RailDown { rail: 2 });
+        let (dm, dp) = state.degrade(&machine, &params).unwrap();
+        assert_eq!(dm.nics_per_node(), 3);
+        dm.shape.validate(dm.sockets_per_node, dm.gpus_per_node()).unwrap();
+        // homogeneous bands stay implicit and the model rate is untouched
+        assert!(dp.nic_bands.is_empty());
+        assert_eq!(dp.inv_rn.to_bits(), params.inv_rn.to_bits());
+        // everything else is untouched
+        assert_eq!(dm.num_nodes, machine.num_nodes);
+        assert_eq!(dp.cpu, params.cpu);
+    }
+
+    #[test]
+    fn degrade_slowdown_reaches_bands_and_aggregate_rate() {
+        let (machine, params) = machines::parse("frontier-4nic", 2).unwrap();
+        let mut state = FaultState::default();
+        state.apply(&FaultKind::Slowdown { rail: 1, factor: 4.0 });
+        let (dm, dp) = state.degrade(&machine, &params).unwrap();
+        assert_eq!(dm.nics_per_node(), 4);
+        assert_eq!(dp.nic_bands.len(), 4);
+        assert_eq!(dp.nic_bands[1].beta, params.inv_rn * 4.0);
+        assert_eq!(dp.nic_bands[0].beta, params.inv_rn);
+        // aggregate: 4 rails at rates (1, 1/4, 1, 1)/inv_rn -> mean inverse
+        let capacity = (3.0 + 0.25) / params.inv_rn;
+        assert!((dp.inv_rn - 4.0 / capacity).abs() < 1e-25);
+        assert!(dp.inv_rn > params.inv_rn, "slowdown must lower the aggregate rate");
+    }
+
+    #[test]
+    fn degrade_combined_drops_failed_rail_bands() {
+        let (machine, params) = machines::parse("frontier-4nic", 2).unwrap();
+        let mut state = FaultState::default();
+        state.apply(&FaultKind::RailDown { rail: 0 });
+        state.apply(&FaultKind::Slowdown { rail: 2, factor: 2.0 });
+        let (dm, dp) = state.degrade(&machine, &params).unwrap();
+        assert_eq!(dm.nics_per_node(), 3);
+        assert_eq!(dp.nic_bands.len(), 3);
+        // surviving order: healthy rails 1, 2, 3 -> new 0, 1, 2
+        assert_eq!(dp.nic_bands[1].beta, params.inv_rn * 2.0);
+        assert_eq!(dp.nic_bands[0].beta, params.inv_rn);
+        assert_eq!(dp.nic_bands[2].beta, params.inv_rn);
+        // slowdown on a failed rail is a no-op for the survivors
+        let mut moot = FaultState::default();
+        moot.apply(&FaultKind::RailDown { rail: 0 });
+        moot.apply(&FaultKind::Slowdown { rail: 0, factor: 8.0 });
+        let (_, mp) = moot.degrade(&machine, &params).unwrap();
+        assert!(mp.nic_bands.iter().all(|b| b.beta == params.inv_rn));
+    }
+
+    #[test]
+    fn degrade_identity_and_errors() {
+        let (machine, params) = machines::parse("lassen", 2).unwrap();
+        let state = FaultState { congestion: 1e-3, ..Default::default() };
+        let (dm, dp) = state.degrade(&machine, &params).unwrap();
+        assert_eq!(dm, machine);
+        assert_eq!(dp, params);
+        let mut bad = FaultState::default();
+        bad.apply(&FaultKind::RailDown { rail: 7 });
+        assert!(bad.degrade(&machine, &params).unwrap_err().contains("rail 7"));
+        let mut all = FaultState::default();
+        all.apply(&FaultKind::RailDown { rail: 0 });
+        assert!(all.degrade(&machine, &params).is_err(), "last rail cannot fail");
+    }
+
+    #[test]
+    fn precharge_is_seeded_bounded_and_gated() {
+        let state = FaultState { congestion: 2.0e-4, ..Default::default() };
+        let a = state.precharge(7, 3, 4, 2).unwrap();
+        let b = state.precharge(7, 3, 4, 2).unwrap();
+        assert_eq!(a.len(), 8);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert!(a.iter().all(|&x| (0.0..2.0 * 2.0e-4).contains(&x)));
+        assert!(a.iter().any(|&x| x > 0.0));
+        // different stream, different draws
+        let c = state.precharge(7, 4, 4, 2).unwrap();
+        assert!(a.iter().zip(&c).any(|(x, y)| x.to_bits() != y.to_bits()));
+        assert!(FaultState::default().precharge(7, 3, 4, 2).is_none());
+    }
+}

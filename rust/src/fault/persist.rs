@@ -1,0 +1,151 @@
+//! Versioned artifact layer for [`FaultSpec`]: schema `hetcomm.faults.v1`.
+//!
+//! Same contract as the other artifact layers ([`crate::advisor::persist`],
+//! [`crate::trace::persist`]): floats are written with [`fmt_f64`]
+//! (shortest-round-trip `Display`) so emit∘parse∘emit is the identity on
+//! artifact bytes, seeds are strings (u64s above 2^53 would not survive a
+//! JSON-number round trip), and every parse path returns a descriptive
+//! `Err` — never a panic — on truncated, corrupted or type-confused input.
+//! Hand-rolled on [`crate::util::json`]; no `serde` in the offline image.
+
+use super::{FaultEvent, FaultKind, FaultSpec};
+use crate::util::json::{fmt_f64, Json};
+use std::fmt::Write as _;
+
+/// Schema tag of the fault-spec artifact.
+pub const SCHEMA: &str = "hetcomm.faults.v1";
+
+/// The `"kind": ...` tail of one event object — shared with the trace
+/// emitter so epoch-embedded faults and standalone specs spell identically.
+pub(crate) fn kind_fields(kind: &FaultKind) -> String {
+    match kind {
+        FaultKind::RailDown { rail } => format!("\"kind\": \"rail-down\", \"rail\": {rail}"),
+        FaultKind::Slowdown { rail, factor } => {
+            format!("\"kind\": \"slowdown\", \"rail\": {rail}, \"factor\": {}", fmt_f64(*factor))
+        }
+        FaultKind::Congestion { level } => format!("\"kind\": \"congestion\", \"level\": {}", fmt_f64(*level)),
+    }
+}
+
+/// Parse one event object's kind fields (shared with the trace parser).
+pub(crate) fn parse_kind(v: &Json) -> Result<FaultKind, String> {
+    let kind = v.field("kind")?.as_str()?;
+    match kind {
+        "rail-down" => Ok(FaultKind::RailDown { rail: v.field("rail")?.as_usize()? }),
+        "slowdown" => {
+            Ok(FaultKind::Slowdown { rail: v.field("rail")?.as_usize()?, factor: v.field("factor")?.as_f64()? })
+        }
+        "congestion" => Ok(FaultKind::Congestion { level: v.field("level")?.as_f64()? }),
+        other => Err(format!("unknown fault kind {other:?} (want rail-down, slowdown or congestion)")),
+    }
+}
+
+/// Serialize a fault spec.
+pub fn to_json(spec: &FaultSpec) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    let _ = writeln!(out, "  \"schema\": \"{SCHEMA}\",");
+    let _ = writeln!(out, "  \"seed\": \"{}\",", spec.seed);
+    out.push_str("  \"events\": [\n");
+    for (i, e) in spec.events.iter().enumerate() {
+        let comma = if i + 1 < spec.events.len() { "," } else { "" };
+        let _ = writeln!(out, "    {{\"epoch\": {}, {}}}{comma}", e.epoch, kind_fields(&e.kind));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write a fault-spec artifact to disk.
+pub fn save(spec: &FaultSpec, path: &str) -> Result<(), String> {
+    std::fs::write(path, to_json(spec)).map_err(|e| format!("cannot write {path}: {e}"))
+}
+
+/// Load and validate a fault-spec artifact from disk (`rails == 0` skips
+/// rail-range checks; callers re-validate against the actual machine).
+pub fn load(path: &str) -> Result<FaultSpec, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+    parse_json(&text)
+}
+
+/// Parse and validate a `hetcomm.faults.v1` artifact.
+pub fn parse_json(text: &str) -> Result<FaultSpec, String> {
+    let value = Json::parse(text)?;
+    let schema = value.field("schema")?.as_str()?;
+    if schema != SCHEMA {
+        return Err(format!("unsupported fault spec schema {schema:?} (want {SCHEMA:?})"));
+    }
+    let seed_str = value.field("seed")?.as_str()?;
+    let seed = seed_str.parse::<u64>().map_err(|_| format!("expected a u64 seed string, found {seed_str:?}"))?;
+    let events = value
+        .field("events")?
+        .as_arr()?
+        .iter()
+        .map(|v| Ok(FaultEvent { epoch: v.field("epoch")?.as_usize()?, kind: parse_kind(v)? }))
+        .collect::<Result<Vec<_>, String>>()?;
+    let spec = FaultSpec { seed, events };
+    spec.validate(0)?;
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> FaultSpec {
+        FaultSpec {
+            seed: 42,
+            events: vec![
+                FaultEvent { epoch: 2, kind: FaultKind::Congestion { level: 1.5e-4 } },
+                FaultEvent { epoch: 3, kind: FaultKind::RailDown { rail: 1 } },
+                FaultEvent { epoch: 5, kind: FaultKind::Slowdown { rail: 0, factor: 4.0 } },
+            ],
+        }
+    }
+
+    #[test]
+    fn round_trip_is_bit_exact() {
+        let spec = sample();
+        let json = to_json(&spec);
+        let parsed = parse_json(&json).unwrap();
+        assert_eq!(spec, parsed);
+        // emit . parse . emit is the identity on artifact bytes
+        assert_eq!(json, to_json(&parsed));
+        // empty specs round-trip too
+        let empty = FaultSpec::empty(7);
+        assert_eq!(parse_json(&to_json(&empty)).unwrap(), empty);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let spec = sample();
+        let path = std::env::temp_dir().join("hetcomm-faults-test.json");
+        let path = path.to_str().unwrap();
+        save(&spec, path).unwrap();
+        let loaded = load(path).unwrap();
+        assert_eq!(spec, loaded);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn corrupt_artifacts_rejected() {
+        let json = to_json(&sample());
+
+        let wrong_schema = json.replacen("hetcomm.faults.v1", "hetcomm.faults.v9", 1);
+        assert!(parse_json(&wrong_schema).unwrap_err().contains("schema"));
+
+        let bad_seed = json.replacen("\"seed\": \"42\"", "\"seed\": \"many\"", 1);
+        assert!(parse_json(&bad_seed).unwrap_err().contains("seed"));
+
+        let bad_kind = json.replacen("rail-down", "rail-sideways", 1);
+        assert!(parse_json(&bad_kind).unwrap_err().contains("rail-sideways"));
+
+        let bad_factor = json.replacen("\"factor\": 4", "\"factor\": 0.25", 1);
+        assert!(parse_json(&bad_factor).unwrap_err().contains("factor"));
+
+        let truncated = &json[..json.len() / 2];
+        assert!(parse_json(truncated).is_err());
+
+        let type_confused = json.replacen("\"rail\": 1", "\"rail\": \"one\"", 1);
+        assert!(parse_json(&type_confused).is_err());
+    }
+}

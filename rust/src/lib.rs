@@ -54,6 +54,11 @@
 //!   synthetic evolving scenarios (AMR drift, sparsification, rebalance,
 //!   halo bursts), and a replay engine whose adaptive mode re-advises on
 //!   pattern drift (the `replay` subcommand and `sweep --trace`).
+//! - [`fault`] — seeded, deterministic fault/degradation injection:
+//!   versioned `hetcomm.faults.v1` schedules of rail failures, bandwidth
+//!   slowdowns and background congestion, degrading shapes and parameters
+//!   and pre-charging simulator NIC timelines so adaptive replay is tested
+//!   against *external* drift (`replay --faults`, `sweep --faults`).
 //! - [`bench`] — the in-tree benchmark harness used by `rust/benches/*`,
 //!   plus [`bench::perf`], the `hetcomm perf` self-benchmark harness behind
 //!   the committed `BENCH_sweep.json` performance trajectory.
@@ -63,6 +68,7 @@ pub mod bench;
 pub mod collective;
 pub mod comm;
 pub mod coordinator;
+pub mod fault;
 pub mod model;
 pub mod params;
 pub mod pattern;
@@ -76,6 +82,7 @@ pub mod util;
 
 pub use advisor::{AdvisorService, DecisionSurface};
 pub use collective::{Collective, CollectiveAlgorithm, CollectiveSurface};
+pub use fault::{FaultEvent, FaultKind, FaultSpec, FaultState};
 pub use comm::{Schedule, Strategy, StrategyKind, Transport};
 pub use params::{MachineParams, Protocol};
 pub use pattern::CommPattern;

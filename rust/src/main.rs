@@ -265,6 +265,7 @@ fn cmd_sweep(argv: &[String]) -> i32 {
         .flag("algorithms", "all", "with --collectives: algorithms (standard | pairwise | locality) or 'all'")
         .flag("nodes", "2,8,32", "with --collectives: cluster node counts (comma list, >= 2)")
         .flag("refine", "0", "adaptive size-axis refinement depth (0 = exhaustive; winners preserved)")
+        .flag("faults", "", "sweep the degraded fleet: apply a hetcomm.faults.v1 schedule's terminal state to every cell")
         .switch("tiny", "run the <10s smoke grid instead of the flag-defined grid")
         .switch("model-only", "skip the discrete-event simulator")
         .switch("prune", "skip simulating strategies whose model lower bound exceeds the cell incumbent")
@@ -276,6 +277,14 @@ fn cmd_sweep(argv: &[String]) -> i32 {
             return 2;
         }
     };
+
+    // Fault schedules degrade the *strategy grid*; the collective axis and
+    // trace sweeps have their own machines (use `replay --faults` for the
+    // epoch-resolved story on a trace).
+    if !a.get("faults").is_empty() && (!a.get("collectives").is_empty() || !a.get("trace").is_empty()) {
+        eprintln!("--faults degrades the strategy grid; for traces use `hetcomm replay --faults` (epoch-resolved)");
+        return 2;
+    }
 
     // Collective-axis sweep: --collectives reroutes the grid to the
     // locality-aware collective layer. Grids without the axis take the
@@ -450,6 +459,17 @@ fn cmd_sweep(argv: &[String]) -> i32 {
             return 2;
         }
     };
+    let faults = if a.get("faults").is_empty() {
+        None
+    } else {
+        match hetcomm::fault::persist::load(a.get("faults")) {
+            Ok(s) => Some(s),
+            Err(e) => {
+                eprintln!("cannot load fault spec: {e}");
+                return 2;
+            }
+        }
+    };
     let config = hetcomm::sweep::SweepConfig {
         grid,
         strategies,
@@ -460,6 +480,7 @@ fn cmd_sweep(argv: &[String]) -> i32 {
         prune: a.get_bool("prune"),
         reuse_patterns: a.get_bool("reuse-patterns"),
         refine,
+        faults,
     };
 
     let result = match hetcomm::sweep::run_sweep(&config) {
@@ -486,6 +507,10 @@ fn cmd_sweep(argv: &[String]) -> i32 {
     // sweep results above.
     let surface_path = a.get("emit-surface");
     if !surface_path.is_empty() {
+        if result.config.faults.is_some() {
+            eprintln!("note: surfaces describe the healthy machine; --emit-surface under --faults is skipped");
+            return 0;
+        }
         if config.strategies.len() != Strategy::all().len() {
             eprintln!("note: surface artifacts always cover all Table 5 strategies (--strategies filter not baked in)");
         }
@@ -1200,6 +1225,7 @@ fn cmd_replay(argv: &[String]) -> i32 {
         .flag("strategy", "", "static policy: kind[:transport], e.g. split-md or 3-step:device-aware")
         .flag("surface", "", "adaptive: advise from this compiled surface artifact (default: exact Table 6 ranking)")
         .flag("threshold", "0.25", "adaptive: drift threshold in |log2| units")
+        .flag("faults", "", "inject a hetcomm.faults.v1 schedule: degrade rails mid-replay and report resilience")
         .switch("sim", "also run each epoch's chosen schedule through the discrete-event simulator")
         .flag("format", "table", "report format: table | json")
         .flag("report", "-", "report output path ('-' = stdout)")
@@ -1283,9 +1309,33 @@ fn cmd_replay(argv: &[String]) -> i32 {
         }
     };
 
-    // 2. Persist the trace when asked.
+    let faults = if a.get("faults").is_empty() {
+        None
+    } else {
+        match hetcomm::fault::persist::load(a.get("faults")) {
+            Ok(s) => Some(s),
+            Err(e) => {
+                eprintln!("cannot load fault spec: {e}");
+                return 2;
+            }
+        }
+    };
+
+    // 2. Persist the trace when asked — with the fault schedule embedded in
+    //    its epochs, so the artifact is self-describing (replaying it later
+    //    re-fires the events with no --faults flag).
     if !a.get("out").is_empty() {
-        if let Err(e) = hetcomm::trace::persist::save(&trace, a.get("out")) {
+        let to_save = match &faults {
+            Some(spec) => match spec.attach(&trace) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("cannot embed fault schedule in the trace: {e}");
+                    return 2;
+                }
+            },
+            None => trace.clone(),
+        };
+        if let Err(e) = hetcomm::trace::persist::save(&to_save, a.get("out")) {
             eprintln!("{e}");
             return 1;
         }
@@ -1353,7 +1403,7 @@ fn cmd_replay(argv: &[String]) -> i32 {
         }
     };
     let config = hetcomm::trace::replay::ReplayConfig { drift_threshold: threshold, sim: a.get_bool("sim") };
-    let report = match hetcomm::trace::replay(&trace, &mode, &config) {
+    let report = match hetcomm::trace::replay_with_faults(&trace, &mode, &config, faults.as_ref()) {
         Ok(r) => r,
         Err(e) => {
             eprintln!("replay failed: {e}");
@@ -1384,6 +1434,13 @@ fn cmd_replay(argv: &[String]) -> i32 {
         report.switches.len(),
         report.win_vs_best_static * 100.0
     );
+    if let Some(res) = &report.resilience {
+        let recovery = match res.recovery_epochs {
+            Some(e) => format!("first post-fault switch after {e} epoch(s)"),
+            None => "no post-fault switch".to_string(),
+        };
+        eprintln!("resilience: most robust static {}, {recovery}", res.most_robust.label());
+    }
 
     if !a.get("min-win").is_empty() {
         let min_win = match a.get_f64("min-win") {

@@ -233,6 +233,12 @@ pub struct CompiledSchedule {
     pub n_resources: u32,
     /// Dense node slots for injected-bytes accounting.
     pub n_nodes: u32,
+    /// First NIC slot of the dense layout — the fault layer's congestion
+    /// pre-charge ([`crate::sim::exec::run_compiled_with`]) seeds the
+    /// `nic_count` timelines starting here, laid out `node * rails + rail`.
+    pub nic_base: u32,
+    /// Number of NIC slots in the dense layout.
+    pub nic_count: u32,
 }
 
 impl CompiledSchedule {
@@ -294,6 +300,8 @@ impl CompiledSchedule {
         let copy_base = nic_base + max_node * rails;
         self.n_resources = (copy_base + max_copy_gpu) as u32;
         self.n_nodes = max_node as u32;
+        self.nic_base = nic_base as u32;
+        self.nic_count = (max_node * rails) as u32;
 
         let res = |loc: Loc| -> u32 {
             match loc {

@@ -66,8 +66,24 @@ impl ExecScratch {
 /// Execute a compiled schedule. Zero-allocation: only resizes the scratch
 /// when this machine is larger than any seen before.
 pub fn run_compiled(cs: &CompiledSchedule, scratch: &mut ExecScratch) -> SimTotals {
+    run_compiled_with(cs, scratch, None)
+}
+
+/// Execute a compiled schedule with NIC rail timelines pre-charged:
+/// `precharge[node * rails + rail]` seconds of seeded background occupancy
+/// (the fault layer's congestion injector, [`crate::fault`]) are written
+/// into the NIC availability slots before the first phase, so crossing
+/// traffic queues behind the background load exactly as it would behind
+/// earlier same-rail transfers. `None` — and any all-zero slice — executes
+/// bit-identically to [`run_compiled`].
+pub fn run_compiled_with(cs: &CompiledSchedule, scratch: &mut ExecScratch, precharge: Option<&[f64]>) -> SimTotals {
     scratch.avail.clear();
     scratch.avail.resize(cs.n_resources as usize, 0.0);
+    if let Some(pre) = precharge {
+        let base = cs.nic_base as usize;
+        let n = pre.len().min(cs.nic_count as usize);
+        scratch.avail[base..base + n].copy_from_slice(&pre[..n]);
+    }
     scratch.injected.clear();
     scratch.injected.resize(cs.n_nodes as usize, 0);
     scratch.phase_times.clear();
@@ -230,7 +246,26 @@ fn loc_key(loc: Loc) -> u64 {
 /// keys and occupancies reduce to the historical one-NIC-per-node values
 /// exactly.
 pub fn run_reference(machine: &Machine, params: &MachineParams, schedule: &Schedule, ppn: usize) -> SimReport {
+    run_reference_with(machine, params, schedule, ppn, None)
+}
+
+/// [`run_reference`] with the same NIC congestion pre-charge as
+/// [`run_compiled_with`]: `precharge[node * rails + rail]` seconds seed the
+/// rail's availability before the first phase. Bit-for-bit equal to the
+/// compiled executor under the same pre-charge (`prop_sim.rs`).
+pub fn run_reference_with(
+    machine: &Machine,
+    params: &MachineParams,
+    schedule: &Schedule,
+    ppn: usize,
+    precharge: Option<&[f64]>,
+) -> SimReport {
     let mut avail = Avail::default();
+    if let Some(pre) = precharge {
+        for (i, &t) in pre.iter().enumerate() {
+            avail.set(KIND_NIC | i as u64, t);
+        }
+    }
     let mut phase_times = Vec::with_capacity(schedule.phases.len());
     let mut clock = 0.0f64;
     let mut injected: HashMap<usize, usize> = HashMap::new();
@@ -545,6 +580,75 @@ mod tests {
         let slow = run_reference(&m, &p, &sched, 4);
         assert_eq!(fast.total.to_bits(), slow.total.to_bits());
         assert_eq!(fast.max_node_injected, slow.max_node_injected);
+    }
+
+    #[test]
+    fn precharge_delays_crossing_traffic_only() {
+        let m = lassen(2);
+        let p = lassen_params();
+        let cp = p.compile();
+        let s = 1 << 12;
+        let crossing = single_xfer_schedule(Loc::Host(ProcId(0)), Loc::Host(ProcId(4)), s);
+        let local = single_xfer_schedule(Loc::Host(ProcId(0)), Loc::Host(ProcId(1)), s);
+        // one slot per (node, rail); charge node 0's rails heavily
+        let rails = m.nics_per_node();
+        let mut pre = vec![0.0; m.num_nodes * rails];
+        for r in 0..rails {
+            pre[r] = 1.0e-3;
+        }
+        let mut scratch = crate::sim::Scratch::new();
+        let base = scratch.run_total(&m, &cp, &crossing, 4);
+        let charged = scratch.run_total_with(&m, &cp, &crossing, 4, Some(&pre));
+        assert!((charged - (base + 1.0e-3)).abs() < 1e-12, "crossing traffic queues behind the background load");
+        // on-node traffic never touches a NIC timeline: bit-identical
+        let l0 = scratch.run_total(&m, &cp, &local, 4);
+        let l1 = scratch.run_total_with(&m, &cp, &local, 4, Some(&pre));
+        assert_eq!(l0.to_bits(), l1.to_bits());
+    }
+
+    #[test]
+    fn precharge_zero_and_none_are_bit_identical() {
+        use crate::pattern::generators::random_pattern;
+        use crate::util::rng::Rng;
+        let m = lassen(3);
+        let p = lassen_params();
+        let cp = p.compile();
+        let mut rng = Rng::new(2024);
+        let pattern = random_pattern(&m, &mut rng, 64, 1 << 15, 0.25);
+        let zeros = vec![0.0; m.num_nodes * m.nics_per_node()];
+        let mut scratch = crate::sim::Scratch::new();
+        for s in Strategy::all() {
+            let sched = build_schedule(s, &m, &pattern);
+            let ppn = s.sim_ppn(&m);
+            let a = scratch.run_total(&m, &cp, &sched, ppn);
+            let b = scratch.run_total_with(&m, &cp, &sched, ppn, Some(&zeros));
+            let c = scratch.run_total_with(&m, &cp, &sched, ppn, None);
+            assert_eq!(a.to_bits(), b.to_bits(), "{}", sched.strategy_label);
+            assert_eq!(a.to_bits(), c.to_bits(), "{}", sched.strategy_label);
+        }
+    }
+
+    #[test]
+    fn precharged_compiled_matches_precharged_reference() {
+        use crate::pattern::generators::random_pattern;
+        use crate::util::rng::Rng;
+        let m = lassen(3);
+        let p = lassen_params();
+        let cp = p.compile();
+        let mut rng = Rng::new(99);
+        let pattern = random_pattern(&m, &mut rng, 96, 1 << 16, 0.25);
+        let n = m.num_nodes * m.nics_per_node();
+        let pre: Vec<f64> = (0..n).map(|i| rng.f64() * 2.0e-4 + (i % 2) as f64 * 1.0e-5).collect();
+        let mut scratch = crate::sim::Scratch::new();
+        for s in Strategy::all() {
+            let sched = build_schedule(s, &m, &pattern);
+            let ppn = s.sim_ppn(&m);
+            let fast = scratch.run_totals_with(&m, &cp, &sched, ppn, Some(&pre));
+            let slow = run_reference_with(&m, &p, &sched, ppn, Some(&pre));
+            assert_eq!(fast.total.to_bits(), slow.total.to_bits(), "{}", sched.strategy_label);
+            assert_eq!(fast.max_node_injected, slow.max_node_injected);
+            assert_eq!(fast.internode_msgs, slow.internode_msgs);
+        }
     }
 
     #[test]

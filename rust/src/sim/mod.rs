@@ -32,7 +32,7 @@ pub mod exec;
 pub mod network;
 
 pub use compiled::{CompiledPattern, CompiledSchedule};
-pub use exec::{run, run_reference, ExecScratch, SimReport, SimTotals};
+pub use exec::{run, run_reference, run_reference_with, ExecScratch, SimReport, SimTotals};
 
 use crate::comm::Schedule;
 use crate::params::CompiledParams;
@@ -67,8 +67,34 @@ impl Scratch {
         schedule: &Schedule,
         ppn: usize,
     ) -> SimTotals {
+        self.run_totals_with(machine, params, schedule, ppn, None)
+    }
+
+    /// [`Scratch::run_total`] with the fault layer's NIC congestion
+    /// pre-charge (`precharge[node * rails + rail]` seconds of seeded
+    /// background occupancy; see [`exec::run_compiled_with`]).
+    pub fn run_total_with(
+        &mut self,
+        machine: &Machine,
+        params: &CompiledParams,
+        schedule: &Schedule,
+        ppn: usize,
+        precharge: Option<&[f64]>,
+    ) -> f64 {
+        self.run_totals_with(machine, params, schedule, ppn, precharge).total
+    }
+
+    /// [`Scratch::run_totals`] with the NIC congestion pre-charge.
+    pub fn run_totals_with(
+        &mut self,
+        machine: &Machine,
+        params: &CompiledParams,
+        schedule: &Schedule,
+        ppn: usize,
+        precharge: Option<&[f64]>,
+    ) -> SimTotals {
         self.schedule.lower_into(machine, params, schedule, ppn);
-        exec::run_compiled(&self.schedule, &mut self.exec)
+        exec::run_compiled_with(&self.schedule, &mut self.exec, precharge)
     }
 
     /// Full report (allocates the report itself; the execution is still the

@@ -80,6 +80,15 @@ pub fn to_json(result: &SweepResult) -> String {
     if cfg.refine > 0 {
         let _ = writeln!(out, "  \"refine\": {},", cfg.refine);
     }
+    // fault-sweep runs echo the schedule; healthy runs never mention it
+    if let Some(spec) = &cfg.faults {
+        let events: Vec<String> = spec
+            .events
+            .iter()
+            .map(|e| format!("{{\"epoch\": {}, {}}}", e.epoch, crate::fault::persist::kind_fields(&e.kind)))
+            .collect();
+        let _ = writeln!(out, "  \"faults\": {{\"seed\": {}, \"events\": [{}]}},", spec.seed, events.join(", "));
+    }
 
     out.push_str("  \"cells\": [\n");
     for (i, c) in result.cells.iter().enumerate() {
@@ -348,6 +357,10 @@ pub fn render_tables(result: &SweepResult) -> String {
             total
         );
     }
+    if let Some(spec) = &result.config.faults {
+        let labels: Vec<String> = spec.events.iter().map(|e| e.kind.to_string()).collect();
+        let _ = writeln!(out, "\nFault schedule (terminal state, fleet-wide): {}", labels.join(", "));
+    }
     out
 }
 
@@ -446,6 +459,46 @@ mod tests {
         assert!(!to_csv(&r).contains("sim_pruned"));
         let text = render_tables(&r);
         assert!(!text.contains("pruning") && !text.contains("refinement"));
+    }
+
+    #[test]
+    fn fault_echo_only_appears_on_degraded_runs() {
+        use crate::fault::{FaultEvent, FaultKind, FaultSpec};
+        // healthy runs never mention the fault layer (CI grep-gate contract)
+        let r = tiny_result();
+        assert!(!to_json(&r).contains("fault"), "healthy JSON leaked the fault layer");
+        assert!(!render_tables(&r).contains("Fault"));
+        // degraded runs echo the schedule verbatim and label the tables
+        let mut cfg = SweepConfig {
+            grid: GridSpec {
+                gens: vec![PatternGen::Uniform],
+                dest_nodes: vec![4],
+                gpus_per_node: vec![4],
+                nics: vec![2],
+                sizes: vec![1 << 10],
+                n_msgs: 32,
+                dup_frac: 0.0,
+            },
+            seed: 3,
+            threads: 1,
+            sim: false,
+            ..Default::default()
+        };
+        cfg.faults = Some(FaultSpec {
+            seed: 9,
+            events: vec![
+                FaultEvent { epoch: 0, kind: FaultKind::RailDown { rail: 1 } },
+                FaultEvent { epoch: 1, kind: FaultKind::Congestion { level: 2e-4 } },
+            ],
+        });
+        let r = run_sweep(&cfg).unwrap();
+        let j = to_json(&r);
+        assert!(j.contains("\"faults\": {\"seed\": 9, \"events\": "), "{j}");
+        assert!(j.contains("\"kind\": \"rail-down\", \"rail\": 1"), "{j}");
+        assert!(j.contains("\"kind\": \"congestion\", \"level\": 0.0002"), "{j}");
+        let text = render_tables(&r);
+        assert!(text.contains("Fault schedule"), "{text}");
+        assert!(text.contains("rail-down(1)"), "{text}");
     }
 
     #[test]

@@ -38,6 +38,7 @@
 use super::grid::{CellSpec, GridSpec, PatternGen};
 use super::report::{analyze, SweepReport};
 use crate::comm::{build_schedule, build_schedule_from, dedup, Strategy};
+use crate::fault::FaultSpec;
 use crate::model::{BoundModel, ModelInputs, StrategyModel};
 use crate::params::{CompiledParams, MachineParams};
 use crate::pattern::generators::{random_pattern, Scenario};
@@ -94,6 +95,13 @@ pub struct SweepConfig {
     /// `d > 0` starts on every `2^d`-th size per line and subdivides only
     /// between neighbors whose model winners disagree.
     pub refine: usize,
+    /// Fault schedule applied fleet-wide ([`crate::fault`]): a sweep has no
+    /// epochs, so the spec's *terminal* state degrades every grid machine
+    /// (failed rails removed, slowdowns folded into the bands) and seeds a
+    /// per-cell congestion pre-charge — the grid answers "what does the
+    /// strategy space look like on the degraded fleet". `None` (default) or
+    /// an all-identity spec reproduces the healthy output byte for byte.
+    pub faults: Option<FaultSpec>,
 }
 
 impl Default for SweepConfig {
@@ -108,6 +116,7 @@ impl Default for SweepConfig {
             prune: false,
             reuse_patterns: false,
             refine: 0,
+            faults: None,
         }
     }
 }
@@ -176,6 +185,17 @@ pub fn run_sweep_mode(config: &SweepConfig, mode: ExecMode) -> Result<SweepResul
                 config.machine
             ));
         }
+    }
+    // Fault schedule: an identity spec is dropped outright (the config echo
+    // and every cell stay byte-identical to a no-fault run); a real one is
+    // validated against the *smallest* rail count on the grid so the
+    // per-cell degradation below can never fail mid-pool.
+    if config.faults.as_ref().is_some_and(|s| s.is_identity()) {
+        config.faults = None;
+    }
+    if let Some(spec) = &config.faults {
+        let min_rails = config.grid.nics.iter().copied().min().unwrap_or(1);
+        spec.validate(min_rails).map_err(|e| format!("fault spec: {e}"))?;
     }
     let config = &config;
     let compiled_params = params.compile();
@@ -319,7 +339,13 @@ fn eval_line(
     }
 
     let first = &cells[0];
-    let machine = cfg.grid.machine_for_arch(arch, first.dest_nodes, first.gpus_per_node, first.nics);
+    let mut machine = cfg.grid.machine_for_arch(arch, first.dest_nodes, first.gpus_per_node, first.nics);
+    // fault schedule: the line's machine and bands degrade before lowering
+    let fp = faulted_system(cfg, &mut machine, params);
+    let (params, compiled_params) = match &fp {
+        Some((dp, dcp)) => (dp, dcp),
+        None => (params, compiled_params),
+    };
     let ppn = machine.cores_per_node();
     let unit = Scenario { n_msgs: cfg.grid.n_msgs, msg_size: 1, n_dest: first.dest_nodes, dup_frac: 0.0 };
     let unit_pattern = unit.materialize(&machine);
@@ -430,8 +456,28 @@ pub fn run_sweep_trace_mode(
         prune: false,
         reuse_patterns: false,
         refine: 0,
+        faults: None,
     };
     Ok(SweepResult { config, cells: cells_out, report, threads_used: threads, elapsed_s: t0.elapsed().as_secs_f64() })
+}
+
+/// Degrade one grid machine in place under the sweep's fault schedule and
+/// return the degraded parameters (raw + compiled); `None` when the config
+/// carries no schedule. Infallible by construction: [`run_sweep_mode`]
+/// validated the spec against the smallest rail count on the grid.
+fn faulted_system(
+    cfg: &SweepConfig,
+    machine: &mut Machine,
+    params: &MachineParams,
+) -> Option<(MachineParams, CompiledParams)> {
+    let spec = cfg.faults.as_ref()?;
+    let (dm, dp) = spec
+        .terminal_state()
+        .degrade(machine, params)
+        .expect("fault spec validated by run_sweep_mode");
+    *machine = dm;
+    let dcp = dp.compile();
+    Some((dp, dcp))
 }
 
 /// Simulate one (schedule-source, strategy) pair under the selected
@@ -440,7 +486,8 @@ pub fn run_sweep_trace_mode(
 /// rebuilds from the raw pattern (a full per-strategy re-lowering — a
 /// strict naive-rebuild baseline, not a cycle-exact replica of the
 /// historical builders' cost) and runs the retained hash-map executor.
-/// Outputs are bit-identical either way.
+/// Outputs are bit-identical either way — including under a congestion
+/// `pre`-charge, which both executors consume identically.
 #[allow(clippy::too_many_arguments)]
 fn sim_strategy(
     mode: ExecMode,
@@ -450,6 +497,7 @@ fn sim_strategy(
     strategy: Strategy,
     pattern: &CommPattern,
     lowered: Option<&CompiledPattern>,
+    pre: Option<&[f64]>,
     scratch: &mut sim::Scratch,
 ) -> f64 {
     let ppn = strategy.sim_ppn(machine);
@@ -457,11 +505,11 @@ fn sim_strategy(
         ExecMode::Compiled => {
             let lowered = lowered.expect("compiled mode lowers once per cell");
             let schedule = build_schedule_from(strategy, machine, lowered);
-            scratch.run_total(machine, compiled_params, &schedule, ppn)
+            scratch.run_total_with(machine, compiled_params, &schedule, ppn, pre)
         }
         ExecMode::Reference => {
             let schedule = build_schedule(strategy, machine, pattern);
-            sim::run_reference(machine, params, &schedule, ppn).total
+            sim::run_reference_with(machine, params, &schedule, ppn, pre).total
         }
     }
 }
@@ -502,7 +550,17 @@ fn eval_epoch(
     for &strategy in strategies {
         let model_s = sm.time(strategy, &inputs);
         let sim_s = with_sim.then(|| {
-            sim_strategy(mode, machine, params, compiled_params, strategy, &epoch.pattern, lowered.as_ref(), scratch)
+            sim_strategy(
+                mode,
+                machine,
+                params,
+                compiled_params,
+                strategy,
+                &epoch.pattern,
+                lowered.as_ref(),
+                None,
+                scratch,
+            )
         });
         let model_err = sim_s.and_then(|t| if t > 0.0 { Some((model_s - t).abs() / t) } else { None });
         out.push(CellResult {
@@ -536,7 +594,14 @@ pub(crate) fn eval_cell(
     mode: ExecMode,
     scratch: &mut sim::Scratch,
 ) -> Vec<CellResult> {
-    let machine = cfg.grid.machine_for_arch(arch, cell.dest_nodes, cell.gpus_per_node, cell.nics);
+    let mut machine = cfg.grid.machine_for_arch(arch, cell.dest_nodes, cell.gpus_per_node, cell.nics);
+    // fault schedule: swap in the degraded system before anything reads it
+    // (models, pattern lowering and simulator all see the survivors)
+    let fp = faulted_system(cfg, &mut machine, params);
+    let (params, compiled_params) = match &fp {
+        Some((dp, dcp)) => (dp, dcp),
+        None => (params, compiled_params),
+    };
     // Model inputs use the full core count: only the Split models read
     // `ppn`, and Split enlists every core (matching `hetcomm model`).
     let ppn = machine.cores_per_node();
@@ -616,8 +681,23 @@ fn eval_strategies(
     let mut pruned = vec![false; n];
 
     if let Some(pattern) = pattern {
+        // background congestion: seeded per-cell occupancy pre-charges the
+        // NIC timelines of every simulated strategy in this cell alike
+        let pre = cfg.faults.as_ref().and_then(|spec| {
+            spec.terminal_state().precharge(spec.seed, cell.index, machine.num_nodes, machine.nics_per_node())
+        });
         let run = |idx: usize, scratch: &mut sim::Scratch| {
-            sim_strategy(mode, machine, params, compiled_params, cfg.strategies[idx], pattern, lowered, scratch)
+            sim_strategy(
+                mode,
+                machine,
+                params,
+                compiled_params,
+                cfg.strategies[idx],
+                pattern,
+                lowered,
+                pre.as_deref(),
+                scratch,
+            )
         };
         if cfg.prune {
             let bm = BoundModel::new(machine, params);
@@ -876,6 +956,60 @@ mod tests {
         let slow = run_sweep_trace_mode(&trace, &Strategy::all(), 2, true, ExecMode::Reference).unwrap();
         cmp_cells(&fast.cells, &slow.cells);
         assert!(fast.cells.iter().all(|c| c.sim_s.is_some()));
+    }
+
+    #[test]
+    fn fault_schedule_degrades_the_fleet_and_identity_is_free() {
+        use crate::fault::{FaultEvent, FaultKind, FaultSpec};
+        // identity schedules are dropped before evaluation: bytes match the
+        // healthy run and the config echo carries no spec
+        let healthy = run_sweep(&small_config(2)).unwrap();
+        let mut cfg = small_config(2);
+        cfg.faults = Some(FaultSpec::empty(3));
+        let id = run_sweep(&cfg).unwrap();
+        cmp_cells(&healthy.cells, &id.cells);
+        assert!(id.config.faults.is_none(), "identity spec must vanish from the echo");
+
+        // a real schedule (slowed rail + background congestion) only ever
+        // hurts, and must hurt somewhere
+        let mut cfg = small_config(2);
+        cfg.grid.nics = vec![2];
+        let healthy = run_sweep(&cfg).unwrap();
+        let spec = FaultSpec {
+            seed: 5,
+            events: vec![
+                FaultEvent { epoch: 0, kind: FaultKind::Slowdown { rail: 1, factor: 8.0 } },
+                FaultEvent { epoch: 0, kind: FaultKind::Congestion { level: 1e-4 } },
+            ],
+        };
+        cfg.faults = Some(spec.clone());
+        let faulted = run_sweep(&cfg).unwrap();
+        assert_eq!(healthy.cells.len(), faulted.cells.len());
+        assert_eq!(faulted.config.faults.as_ref(), Some(&spec));
+        let mut moved = false;
+        for (h, f) in healthy.cells.iter().zip(&faulted.cells) {
+            assert_eq!(h.label, f.label);
+            assert_eq!(h.nics, f.nics, "axis labels stay healthy");
+            assert!(f.model_s >= h.model_s * (1.0 - 1e-12), "{} model sped up under faults", h.label);
+            if let (Some(hs), Some(fs)) = (h.sim_s, f.sim_s) {
+                assert!(fs >= hs * (1.0 - 1e-12), "{} sim sped up under faults", h.label);
+                moved |= fs > hs;
+            }
+        }
+        assert!(moved, "the fault schedule must reach the simulator");
+        // degraded runs stay deterministic and thread-invariant
+        cfg.threads = 1;
+        let faulted1 = run_sweep(&cfg).unwrap();
+        cmp_cells(&faulted.cells, &faulted1.cells);
+
+        // a schedule no machine on the grid survives is rejected up front
+        let mut cfg = small_config(1);
+        cfg.faults = Some(FaultSpec {
+            seed: 1,
+            events: vec![FaultEvent { epoch: 0, kind: FaultKind::RailDown { rail: 0 } }],
+        });
+        let err = run_sweep(&cfg).unwrap_err();
+        assert!(err.contains("survive"), "{err}");
     }
 
     #[test]

@@ -102,6 +102,68 @@ impl NodeShape {
         self.gpu_nic[gpu_local]
     }
 
+    /// The shape after the rails in `down` (node-local ids of *this* shape)
+    /// fail: survivors keep their socket-major order and are renumbered
+    /// densely, and the GPU↔NIC affinity remaps onto the survivors — a GPU
+    /// whose rail failed falls back to its rail's socket survivors
+    /// (round-robin by local GPU index), or the node's survivors when the
+    /// socket lost every rail. Host round-robin needs no remap of its own:
+    /// [`NodeShape::host_rail`] reads `nics_per_socket`, so the shared
+    /// policy home follows the degraded shape automatically.
+    ///
+    /// Errors when `down` names a rail this shape does not have or leaves
+    /// no survivor. The result always passes [`NodeShape::validate`] for
+    /// the same node.
+    pub fn degraded(&self, down: &[usize]) -> Result<NodeShape, String> {
+        let total = self.nics_per_node();
+        let down: std::collections::BTreeSet<usize> = down.iter().copied().collect();
+        if let Some(&r) = down.iter().find(|&&r| r >= total) {
+            return Err(format!("cannot fail rail {r}: node has {total}"));
+        }
+        if down.len() >= total {
+            return Err(format!("cannot fail all {total} rails: at least one must survive"));
+        }
+        // dense renumbering of survivors, socket-major order preserved
+        let mut remap = vec![usize::MAX; total];
+        let mut next = 0usize;
+        for (r, slot) in remap.iter_mut().enumerate() {
+            if !down.contains(&r) {
+                *slot = next;
+                next += 1;
+            }
+        }
+        let mut socket_of = vec![0usize; total];
+        let mut nics_per_socket = Vec::with_capacity(self.nics_per_socket.len());
+        let mut base = 0usize;
+        for (s, &k) in self.nics_per_socket.iter().enumerate() {
+            for r in base..base + k {
+                socket_of[r] = s;
+            }
+            nics_per_socket.push((base..base + k).filter(|r| !down.contains(r)).count());
+            base += k;
+        }
+        let socket_survivors = |s: usize| -> Vec<usize> {
+            (0..total).filter(|r| socket_of[*r] == s && !down.contains(r)).map(|r| remap[r]).collect()
+        };
+        let gpu_nic = self
+            .gpu_nic
+            .iter()
+            .enumerate()
+            .map(|(g, &r)| {
+                if remap[r] != usize::MAX {
+                    return remap[r];
+                }
+                let local = socket_survivors(socket_of[r]);
+                if local.is_empty() {
+                    g % next // new ids are dense 0..next
+                } else {
+                    local[g % local.len()]
+                }
+            })
+            .collect();
+        Ok(NodeShape { nics_per_socket, gpu_nic })
+    }
+
     /// Structural sanity against the owning node's socket and GPU counts;
     /// returns a user-facing message on failure.
     pub fn validate(&self, sockets_per_node: usize, gpus_per_node: usize) -> Result<(), String> {
@@ -187,6 +249,57 @@ mod tests {
         assert_eq!(s.nics_per_socket, vec![2, 1]);
         assert_eq!(s.nics_per_node(), 3);
         s.validate(2, 4).unwrap();
+    }
+
+    #[test]
+    fn degraded_renumbers_densely_and_remaps_affinity() {
+        // 2 sockets x 2 rails, gpu_nic [0,1,2,3]; rail 1 fails
+        let s = NodeShape::spread(2, 4, 4);
+        let d = s.degraded(&[1]).unwrap();
+        assert_eq!(d.nics_per_socket, vec![1, 2]);
+        assert_eq!(d.nics_per_node(), 3);
+        // survivors 0,2,3 -> new ids 0,1,2; GPU 1 (failed rail, socket 0
+        // survivor {0}) falls back to rail 0
+        assert_eq!(d.gpu_nic, vec![0, 0, 1, 2]);
+        d.validate(2, 4).unwrap();
+        // host round-robin follows the shrunken socket tables
+        for rel in 0..5 {
+            assert_eq!(d.host_rail(0, rel), 0);
+            assert!((1..3).contains(&d.host_rail(1, rel)));
+        }
+    }
+
+    #[test]
+    fn degraded_socket_losing_all_rails_falls_back_to_node() {
+        // socket 0 loses both rails: its GPUs round-robin the node survivors
+        let s = NodeShape::spread(2, 4, 4);
+        let d = s.degraded(&[0, 1]).unwrap();
+        assert_eq!(d.nics_per_socket, vec![0, 2]);
+        assert_eq!(d.gpu_nic, vec![0, 1, 0, 1]);
+        d.validate(2, 4).unwrap();
+        // the rail-less socket's hosts spread over the node's rails
+        let rails: std::collections::BTreeSet<usize> = (0..4).map(|rel| d.host_rail(0, rel)).collect();
+        assert_eq!(rails, [0, 1].into_iter().collect());
+    }
+
+    #[test]
+    fn degraded_single_survivor_is_single_rail() {
+        let s = NodeShape::spread(1, 4, 4);
+        let d = s.degraded(&[0, 2, 3]).unwrap();
+        assert!(d.is_single_rail());
+        assert_eq!(d.gpu_nic, vec![0, 0, 0, 0]);
+        d.validate(1, 4).unwrap();
+        // duplicate ids in `down` collapse; empty `down` is the identity
+        assert_eq!(s.degraded(&[2, 2]).unwrap(), s.degraded(&[2]).unwrap());
+        assert_eq!(s.degraded(&[]).unwrap(), s);
+    }
+
+    #[test]
+    fn degraded_rejects_bad_rails() {
+        let s = NodeShape::spread(1, 2, 4);
+        assert!(s.degraded(&[5]).unwrap_err().contains("rail 5"));
+        assert!(s.degraded(&[0, 1]).unwrap_err().contains("survive"));
+        assert!(NodeShape::single_rail(2, 4).degraded(&[0]).is_err());
     }
 
     #[test]

@@ -41,7 +41,7 @@ use crate::pattern::{CommPattern, PatternStats};
 use crate::topology::{machines, Machine};
 
 pub use record::TraceRecorder;
-pub use replay::{replay, ReplayMode, ReplayReport};
+pub use replay::{replay, replay_with_faults, ReplayMode, ReplayReport, Resilience};
 pub use scenarios::{synthesize, TraceScenario};
 
 /// Default drift threshold for adaptive replay: re-advise when any tracked
@@ -61,6 +61,10 @@ pub struct Epoch {
     pub repeat: usize,
     /// The GPU→GPU payload multiset of one iteration.
     pub pattern: CommPattern,
+    /// Fault events firing at the start of this epoch
+    /// ([`crate::fault::FaultSpec::attach`]); empty on healthy traces, and
+    /// absent from the artifact when empty (`trace.v1` byte compatibility).
+    pub faults: Vec<crate::fault::FaultKind>,
 }
 
 /// A recorded or synthesized workload: the machine it ran on plus the
@@ -113,8 +117,30 @@ impl Trace {
                     return Err(format!("epoch {k} msg {i}: zero-byte message"));
                 }
             }
+            let rails = self.machine.nics_per_node();
+            for f in &e.faults {
+                f.validate(rails).map_err(|err| format!("epoch {k}: {err}"))?;
+            }
         }
         Ok(())
+    }
+
+    /// The fault schedule embedded in the epochs, reassembled as a
+    /// [`crate::fault::FaultSpec`] (seeded by the trace seed); `None` when
+    /// the trace is healthy.
+    pub fn fault_spec(&self) -> Option<crate::fault::FaultSpec> {
+        let events: Vec<crate::fault::FaultEvent> = self
+            .epochs
+            .iter()
+            .flat_map(|e| {
+                e.faults.iter().map(move |kind| crate::fault::FaultEvent { epoch: e.index, kind: kind.clone() })
+            })
+            .collect();
+        if events.is_empty() {
+            None
+        } else {
+            Some(crate::fault::FaultSpec { seed: self.seed, events })
+        }
     }
 
     /// Total iterations across all epochs.
@@ -205,6 +231,7 @@ mod tests {
                 tag: format!("e{k}"),
                 repeat: 2,
                 pattern: Scenario { n_msgs, msg_size, n_dest, dup_frac: 0.0 }.materialize(&machine),
+                faults: vec![],
             })
             .collect();
         Trace { scenario: "test".into(), seed: 7, machine, epochs }

@@ -8,6 +8,11 @@
 //! whose stored values disagree bit for bit, so hand-edited or truncated
 //! traces fail loudly instead of replaying under a mislabeled regime.
 //! Emit∘parse∘emit is the identity on bytes ([`crate::util::json`]).
+//!
+//! Epochs carrying fault events ([`crate::fault`]) add an optional
+//! `"faults"` key spelled exactly like `hetcomm.faults.v1` events; the key
+//! is omitted when empty, so healthy traces are byte-identical to
+//! pre-fault-layer artifacts.
 
 use super::{Epoch, Trace};
 use crate::pattern::{CommPattern, Msg};
@@ -64,6 +69,16 @@ pub fn to_json(trace: &Trace) -> String {
         let st = &stats[k];
         out.push_str("    {");
         let _ = write!(out, "\"index\": {}, \"tag\": \"{}\", \"repeat\": {},", e.index, esc(&e.tag), e.repeat);
+        // fault events are emitted only when present, so healthy traces
+        // stay byte-identical to pre-fault-layer artifacts
+        if !e.faults.is_empty() {
+            out.push_str(" \"faults\": [");
+            for (i, f) in e.faults.iter().enumerate() {
+                let comma = if i + 1 < e.faults.len() { ", " } else { "" };
+                let _ = write!(out, "{{{}}}{comma}", crate::fault::persist::kind_fields(f));
+            }
+            out.push_str("],");
+        }
         let _ = write!(
             out,
             " \"drift\": {}, \"stats\": {{\"msgs\": {}, \"bytes\": {}, \"s_node\": {}, \"s_n2n\": {}, \
@@ -161,11 +176,20 @@ pub fn parse_json(text: &str) -> Result<Trace, String> {
                 st.field("m_p2n")?.as_usize()?,
             ],
         ));
+        let faults = match e.field("faults") {
+            Ok(v) => v
+                .as_arr()?
+                .iter()
+                .map(crate::fault::persist::parse_kind)
+                .collect::<Result<Vec<_>, String>>()?,
+            Err(_) => vec![],
+        };
         epochs.push(Epoch {
             index: e.field("index")?.as_usize()?,
             tag: e.field("tag")?.as_str()?.to_string(),
             repeat: e.field("repeat")?.as_usize()?,
             pattern: CommPattern::new(msgs),
+            faults,
         });
     }
     let seed_text = value.field("seed")?.as_str()?;
@@ -210,6 +234,7 @@ mod tests {
                 tag: format!("e\"{k}\""),
                 repeat: k + 1,
                 pattern: Scenario { n_msgs, msg_size, n_dest, dup_frac: 0.0 }.materialize(&machine),
+                faults: vec![],
             })
             .collect();
         Trace { scenario: "tiny \\ test".into(), seed: 11, machine, epochs }
@@ -234,6 +259,31 @@ mod tests {
         let loaded = load(path).unwrap();
         assert_eq!(trace, loaded);
         let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn fault_epochs_roundtrip_and_healthy_traces_stay_clean() {
+        use crate::fault::FaultKind;
+        let healthy = to_json(&tiny_trace());
+        assert!(!healthy.contains("faults"), "healthy artifacts must not mention faults");
+
+        let mut trace = tiny_trace();
+        trace.epochs[1].faults =
+            vec![FaultKind::RailDown { rail: 0 }, FaultKind::Congestion { level: 2.5e-4 }];
+        let json = to_json(&trace);
+        assert!(json.contains("\"faults\": [{\"kind\": \"rail-down\", \"rail\": 0}"));
+        let parsed = parse_json(&json).unwrap();
+        assert_eq!(trace, parsed);
+        assert_eq!(json, to_json(&parsed));
+        // the embedded schedule reassembles as a spec seeded by the trace
+        let spec = parsed.fault_spec().unwrap();
+        assert_eq!(spec.seed, trace.seed);
+        assert_eq!(spec.events.len(), 2);
+        assert!(spec.events.iter().all(|e| e.epoch == 1));
+        assert_eq!(parse_json(&healthy).unwrap().fault_spec(), None);
+        // out-of-range fault rails are rejected by trace validation
+        let bad = json.replacen("\"rail\": 0", "\"rail\": 9", 1);
+        assert!(parse_json(&bad).unwrap_err().contains("rail"));
     }
 
     #[test]

@@ -51,7 +51,7 @@ impl TraceRecorder {
             }
         }
         let index = self.epochs.len();
-        self.epochs.push(Epoch { index, tag: tag.to_string(), repeat: 1, pattern: pattern.clone() });
+        self.epochs.push(Epoch { index, tag: tag.to_string(), repeat: 1, pattern: pattern.clone(), faults: vec![] });
     }
 
     /// Epochs recorded so far.

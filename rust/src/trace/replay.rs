@@ -22,14 +22,27 @@
 //! report records drift, advice points, switches and cumulative time; the
 //! summary compares against the best and worst static totals. Reports are
 //! deterministic: byte-identical JSON for byte-identical traces.
+//!
+//! [`replay_with_faults`] layers the fault subsystem ([`crate::fault`]) on
+//! top: as scheduled events fire, the machine and parameters degrade, the
+//! simulator observes each epoch under the degraded shape plus seeded
+//! congestion, and the adaptive policy gains an *external-drift* trigger —
+//! an observed-vs-predicted cost residual that fires even when the pattern
+//! statistics are stationary — plus a [`Resilience`] section quantifying
+//! per-strategy loss under each fault class and the policy's recovery
+//! latency. With no (or an all-identity) schedule the output is
+//! byte-identical to [`replay`].
 
 use super::{drift_between, DEFAULT_DRIFT_THRESHOLD, Trace};
 use crate::advisor::{DecisionSurface, Pattern};
 use crate::bench::{fmt_secs, Table};
 use crate::comm::{build_schedule_from, Strategy};
+use crate::fault::{FaultSpec, FaultState};
 use crate::model::StrategyModel;
+use crate::params::{CompiledParams, MachineParams};
 use crate::sim::{self, CompiledPattern};
 use crate::sweep::emit::esc;
+use crate::topology::Machine;
 use crate::util::json::fmt_f64;
 use std::fmt::Write as _;
 
@@ -93,8 +106,17 @@ pub struct EpochRow {
     pub epoch_s: f64,
     /// Running total after this epoch.
     pub cum_s: f64,
-    /// Simulated seconds per iteration (when [`ReplayConfig::sim`]).
+    /// Simulated seconds per iteration (when [`ReplayConfig::sim`], or
+    /// always under a fault schedule — the observation stream).
     pub sim_s: Option<f64>,
+    /// Labels of the fault events firing at this epoch (fault-aware replay
+    /// only; the key stays out of the JSON when `None`, keeping healthy
+    /// reports byte-identical).
+    pub fault: Option<String>,
+    /// External-drift residual: |log₂(observed/predicted)| of the incumbent
+    /// strategy's cost, relative to the same ratio at the last advice point
+    /// (fault-aware replay, epochs after the first advice).
+    pub residual: Option<f64>,
 }
 
 /// A strategy change at an advice point.
@@ -110,6 +132,46 @@ pub struct SwitchEvent {
 pub struct StaticTotal {
     pub strategy: Strategy,
     pub total_s: f64,
+}
+
+/// One strategy's whole-trace *simulated* cost, healthy versus under a
+/// fault schedule.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StrategyLoss {
+    pub strategy: Strategy,
+    /// Simulated total with no faults (the counterfactual baseline).
+    pub healthy_s: f64,
+    /// Simulated total under the schedule.
+    pub faulted_s: f64,
+    /// Relative loss `(faulted − healthy) / healthy`.
+    pub loss: f64,
+}
+
+/// Counterfactual losses with only one fault class of the schedule active.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassLoss {
+    /// Fault class name ([`FaultKind::class`](crate::fault::FaultKind::class)).
+    pub class: &'static str,
+    /// Per-strategy losses, Table 5 order.
+    pub losses: Vec<StrategyLoss>,
+}
+
+/// The resilience section of a fault-aware replay report: how much each
+/// strategy loses to the injected degradation, which strategy is sturdiest,
+/// and how fast the adaptive policy reacted.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Resilience {
+    /// Loss under the full schedule, Table 5 order.
+    pub overall: Vec<StrategyLoss>,
+    /// Counterfactual losses per fault class present in the schedule, in
+    /// first-appearance order.
+    pub classes: Vec<ClassLoss>,
+    /// First-wins argmin of overall loss (ties keep Table 5 order).
+    pub most_robust: Strategy,
+    /// Epochs from the first fault to the policy's first switch at or after
+    /// it; `None` when the policy never switched after the fault (static
+    /// modes, or a degradation that leaves the incumbent optimal).
+    pub recovery_epochs: Option<usize>,
 }
 
 /// The replay outcome.
@@ -134,14 +196,58 @@ pub struct ReplayReport {
     /// loses to the best static strategy, 0 for an empty denominator.
     pub win_vs_best_static: f64,
     pub win_vs_worst_static: f64,
+    /// Robustness accounting — present only under a non-identity fault
+    /// schedule, so healthy reports keep their exact historical bytes.
+    pub resilience: Option<Resilience>,
 }
 
 /// Replay `trace` under `mode`. Costs are the Table 6 models evaluated on
 /// each epoch's measured pattern statistics (`ppn` = all cores, matching
 /// `hetcomm model` / `sweep`); the trace machine's registry parameters are
-/// required ([`Trace::params`]).
+/// required ([`Trace::params`]). Equivalent to [`replay_with_faults`] with
+/// no schedule; a trace that *embeds* fault events replays them either way.
 pub fn replay(trace: &Trace, mode: &ReplayMode, config: &ReplayConfig) -> Result<ReplayReport, String> {
-    trace.validate()?;
+    replay_with_faults(trace, mode, config, None)
+}
+
+/// Fault-aware replay: run `trace` under `mode` while `faults` (or a
+/// schedule already embedded in the trace epochs) degrades the system.
+///
+/// As events fire the machine shape and parameters in force degrade
+/// ([`FaultState::degrade`]) and the models re-rank on the degraded system;
+/// every epoch is also simulated on it (with seeded congestion pre-charge),
+/// and the adaptive policy gains an external-drift trigger: the incumbent's
+/// observed/predicted cost ratio, anchored at the last advice point, firing
+/// the advisor when it moves more than the drift threshold even though the
+/// pattern statistics are stationary. Surface-driven advice re-keys onto a
+/// degraded-shape sibling surface ([`DecisionSurface::resized_nics`]).
+/// `None` or an all-identity schedule reproduces [`replay`] byte for byte.
+pub fn replay_with_faults(
+    trace_in: &Trace,
+    mode: &ReplayMode,
+    config: &ReplayConfig,
+    faults: Option<&FaultSpec>,
+) -> Result<ReplayReport, String> {
+    trace_in.validate()?;
+    // merge an external schedule into the epochs (so the replayed trace is
+    // self-describing), or pick up one the trace already embeds
+    let attached = match faults {
+        Some(spec) => {
+            if trace_in.epochs.iter().any(|e| !e.faults.is_empty()) {
+                return Err(
+                    "trace already embeds a fault schedule; drop --faults or replay the healthy trace".into()
+                );
+            }
+            Some(spec.attach(trace_in)?)
+        }
+        None => None,
+    };
+    let trace = attached.as_ref().unwrap_or(trace_in);
+    let spec = match faults {
+        Some(s) => Some(s.clone()),
+        None => trace.fault_spec(),
+    }
+    .filter(|s| !s.is_identity());
     let params = trace
         .params()
         .ok_or_else(|| format!("trace machine {:?} resolves to no registry parameters", trace.machine.name))?;
@@ -168,13 +274,25 @@ pub fn replay(trace: &Trace, mode: &ReplayMode, config: &ReplayConfig) -> Result
     }
 
     let machine = &trace.machine;
-    let sm = StrategyModel::new(machine, &params);
     let ppn = machine.cores_per_node();
     let all = Strategy::all();
     // simulator leg: compile the band tables once and reuse one scratch
     // across every epoch (allocation-free inner loop)
     let compiled_params = config.sim.then(|| params.compile());
     let mut scratch = sim::Scratch::new();
+
+    // fault machinery: the system actually in force (degraded machine,
+    // params and their compiled bands) plus the adaptive policy's *belief* —
+    // the system it last advised under — and the observed/predicted ratio
+    // anchored at that advice, against which the external-drift residual of
+    // later epochs is measured
+    let mut state = FaultState::default();
+    let mut cur_machine = machine.clone();
+    let mut cur_params = params.clone();
+    let mut cur_cp: Option<CompiledParams> = spec.as_ref().map(|_| cur_params.compile());
+    let mut belief: Option<(Machine, MachineParams)> = None;
+    let mut anchor_ratio: Option<f64> = None;
+    let mut sibling: Option<DecisionSurface> = None;
 
     let mut statics: Vec<StaticTotal> = all.iter().map(|&s| StaticTotal { strategy: s, total_s: 0.0 }).collect();
     let mut rows: Vec<EpochRow> = Vec::with_capacity(trace.epochs.len());
@@ -186,10 +304,31 @@ pub fn replay(trace: &Trace, mode: &ReplayMode, config: &ReplayConfig) -> Result
     let mut current: Option<Strategy> = None;
 
     for epoch in &trace.epochs {
+        // fire this epoch's fault events: the system in force degrades for
+        // the rest of the run (events persist, there is no repair)
+        let mut fault = None;
+        if spec.is_some() && !epoch.faults.is_empty() {
+            for k in &epoch.faults {
+                state.apply(k);
+            }
+            let (dm, dp) = state.degrade(machine, &params)?;
+            cur_machine = dm;
+            cur_params = dp;
+            cur_cp = Some(cur_params.compile());
+            fault = Some(epoch.faults.iter().map(|k| k.to_string()).collect::<Vec<_>>().join(", "));
+        }
+        let pre = spec
+            .as_ref()
+            .and_then(|s| state.precharge(s.seed, epoch.index, cur_machine.num_nodes, cur_machine.nics_per_node()));
+
+        // pattern statistics stay keyed to the healthy machine: rail loss
+        // moves no GPUs between nodes, so the message taxonomy is invariant
         let stats = epoch.pattern.stats(machine);
         let dup = epoch.pattern.duplicate_fraction(machine);
         // assemble the inputs from the stats already in hand (the
-        // `model_inputs` convenience would recompute them)
+        // `model_inputs` convenience would recompute them); the models rank
+        // under the system in force, degraded rails and all
+        let sm = StrategyModel::new(&cur_machine, &cur_params);
         let inputs = crate::model::ModelInputs {
             s_proc: stats.s_proc,
             s_node: stats.s_node,
@@ -198,7 +337,7 @@ pub fn replay(trace: &Trace, mode: &ReplayMode, config: &ReplayConfig) -> Result
             m_n2n: stats.m_n2n,
             m_std: stats.m_std,
             ppn,
-            nics: machine.nics_per_node(),
+            nics: cur_machine.nics_per_node(),
             dup_frac: dup,
         };
         let times = sm.all_times(&inputs);
@@ -218,14 +357,55 @@ pub fn replay(trace: &Trace, mode: &ReplayMode, config: &ReplayConfig) -> Result
         }
 
         let drift = anchor_stats.as_ref().map(|p| drift_between(p, &stats)).unwrap_or(0.0);
+
+        // external drift: simulate the incumbent on the system in force and
+        // compare against the belief-model prediction. Subtracting the
+        // anchor ratio cancels the constant model-vs-simulator bias, so on a
+        // stationary pattern the residual only moves when the *hardware*
+        // does — the signal pattern drift cannot see.
+        let mut residual = None;
+        let mut incumbent_obs = None;
+        if let (Some(cp), Some(cur_s), Some((bm, bp)), Some(anchor)) =
+            (cur_cp.as_ref(), current, belief.as_ref(), anchor_ratio)
+        {
+            let obs = sim_epoch(&mut scratch, &cur_machine, cp, cur_s, &epoch.pattern, pre.as_deref());
+            incumbent_obs = Some(obs);
+            let bsm = StrategyModel::new(bm, bp);
+            let binputs = crate::model::ModelInputs { nics: bm.nics_per_node(), ..inputs };
+            let pred = bsm.time(cur_s, &binputs);
+            if obs > 0.0 && pred > 0.0 {
+                residual = Some(((obs / pred).log2() - anchor).abs());
+            }
+        }
+
         let (advised, strategy) = match mode {
             ReplayMode::Static(s) => (false, *s),
             ReplayMode::Adaptive { surface } => {
-                let trigger = current.is_none() || drift > config.drift_threshold;
+                let trigger = current.is_none()
+                    || drift > config.drift_threshold
+                    || residual.is_some_and(|r| r > config.drift_threshold);
                 if trigger {
                     let pick = match surface {
                         None => best,
-                        Some(surface) => surface.lookup(&Pattern::from_stats(&stats, machine)).best().0,
+                        Some(surface) => {
+                            let q = Pattern::from_stats(&stats, machine);
+                            let nics_now = cur_machine.nics_per_node();
+                            if nics_now == surface.nics {
+                                surface.lookup(&q).best().0
+                            } else {
+                                // shape-keyed advice: serve the degraded
+                                // shape from a sibling surface, compiled on
+                                // first use and cached until the next rail
+                                // failure changes the count again
+                                if sibling.as_ref().map(|s| s.nics) != Some(nics_now) {
+                                    sibling = surface.resized_nics(nics_now).ok();
+                                }
+                                match sibling.as_ref() {
+                                    Some(s) => s.lookup(&q).best().0,
+                                    None => best,
+                                }
+                            }
+                        }
                     };
                     (true, pick)
                 } else {
@@ -247,11 +427,23 @@ pub fn replay(trace: &Trace, mode: &ReplayMode, config: &ReplayConfig) -> Result
             .ok_or_else(|| format!("strategy {} is not in the Table 5 set", strategy.label()))?;
         let epoch_s = per_iter_s * rep;
         total_s += epoch_s;
-        let sim_s = compiled_params.as_ref().map(|cp| {
-            let lowered = CompiledPattern::lower(machine, &epoch.pattern);
-            let schedule = build_schedule_from(strategy, machine, &lowered);
-            scratch.run_total(machine, cp, &schedule, strategy.sim_ppn(machine))
-        });
+        // simulator observation: under a fault schedule the simulator always
+        // runs on the system in force (it is the sensor feeding the
+        // residual, and the advice point refreshes the belief + anchor);
+        // otherwise only on `--sim`, exactly as before
+        let sim_s = if let Some(cp) = cur_cp.as_ref() {
+            let obs = match incumbent_obs {
+                Some(o) if current == Some(strategy) => o,
+                _ => sim_epoch(&mut scratch, &cur_machine, cp, strategy, &epoch.pattern, pre.as_deref()),
+            };
+            if advised || anchor_ratio.is_none() {
+                belief = Some((cur_machine.clone(), cur_params.clone()));
+                anchor_ratio = (obs > 0.0 && per_iter_s > 0.0).then(|| (obs / per_iter_s).log2());
+            }
+            Some(obs)
+        } else {
+            compiled_params.as_ref().map(|cp| sim_epoch(&mut scratch, machine, cp, strategy, &epoch.pattern, None))
+        };
         rows.push(EpochRow {
             index: epoch.index,
             tag: epoch.tag.clone(),
@@ -264,6 +456,8 @@ pub fn replay(trace: &Trace, mode: &ReplayMode, config: &ReplayConfig) -> Result
             epoch_s,
             cum_s: total_s,
             sim_s,
+            fault,
+            residual,
         });
         // the reference only moves when the advisor was (re-)consulted; the
         // trace start anchors epoch 0 for every policy
@@ -272,6 +466,11 @@ pub fn replay(trace: &Trace, mode: &ReplayMode, config: &ReplayConfig) -> Result
         }
         current = Some(strategy);
     }
+
+    let resilience = match spec.as_ref() {
+        Some(s) => Some(compute_resilience(trace, machine, &params, s, &all, &switches, &mut scratch)?),
+        None => None,
+    };
 
     // first-wins extrema: ties keep Table 5 order
     let mut best_static = statics[0].clone();
@@ -299,7 +498,106 @@ pub fn replay(trace: &Trace, mode: &ReplayMode, config: &ReplayConfig) -> Result
         best_static,
         worst_static,
         switches,
+        resilience,
     })
+}
+
+/// Simulate one epoch's schedule on a (possibly degraded) system with an
+/// optional congestion pre-charge; returns seconds per iteration.
+fn sim_epoch(
+    scratch: &mut sim::Scratch,
+    machine: &Machine,
+    cp: &CompiledParams,
+    strategy: Strategy,
+    pattern: &crate::pattern::CommPattern,
+    pre: Option<&[f64]>,
+) -> f64 {
+    let lowered = CompiledPattern::lower(machine, pattern);
+    let schedule = build_schedule_from(strategy, machine, &lowered);
+    scratch.run_total_with(machine, cp, &schedule, strategy.sim_ppn(machine), pre)
+}
+
+/// Whole-trace simulated seconds of one static strategy under a fault
+/// schedule (`None` = the healthy counterfactual). Events are taken from
+/// the *spec*, not the trace epochs, so class-restricted sub-specs replay a
+/// trace whose epochs embed the full schedule.
+fn sim_trace_total(
+    trace: &Trace,
+    machine: &Machine,
+    params: &MachineParams,
+    spec: Option<&FaultSpec>,
+    strategy: Strategy,
+    scratch: &mut sim::Scratch,
+) -> Result<f64, String> {
+    let mut state = FaultState::default();
+    let mut cur_machine = machine.clone();
+    let mut cur_cp = params.compile();
+    let mut total = 0f64;
+    for epoch in &trace.epochs {
+        if let Some(s) = spec {
+            let mut changed = false;
+            for e in s.events.iter().filter(|e| e.epoch == epoch.index) {
+                state.apply(&e.kind);
+                changed = true;
+            }
+            if changed {
+                let (dm, dp) = state.degrade(machine, params)?;
+                cur_machine = dm;
+                cur_cp = dp.compile();
+            }
+        }
+        let pre = spec.and_then(|s| {
+            state.precharge(s.seed, epoch.index, cur_machine.num_nodes, cur_machine.nics_per_node())
+        });
+        let t = sim_epoch(scratch, &cur_machine, &cur_cp, strategy, &epoch.pattern, pre.as_deref());
+        total += t * epoch.repeat as f64;
+    }
+    Ok(total)
+}
+
+/// Robustness accounting for a fault-aware replay: per-strategy simulated
+/// loss under the full schedule and under each fault class alone, the
+/// sturdiest strategy, and the adaptive policy's reaction latency.
+fn compute_resilience(
+    trace: &Trace,
+    machine: &Machine,
+    params: &MachineParams,
+    spec: &FaultSpec,
+    all: &[Strategy],
+    switches: &[SwitchEvent],
+    scratch: &mut sim::Scratch,
+) -> Result<Resilience, String> {
+    let healthy: Vec<f64> = all
+        .iter()
+        .map(|&s| sim_trace_total(trace, machine, params, None, s, scratch))
+        .collect::<Result<_, _>>()?;
+    let loss_vec = |sub: &FaultSpec, scratch: &mut sim::Scratch| -> Result<Vec<StrategyLoss>, String> {
+        all.iter()
+            .zip(&healthy)
+            .map(|(&s, &h)| {
+                let f = sim_trace_total(trace, machine, params, Some(sub), s, scratch)?;
+                let loss = if h > 0.0 { (f - h) / h } else { 0.0 };
+                Ok(StrategyLoss { strategy: s, healthy_s: h, faulted_s: f, loss })
+            })
+            .collect()
+    };
+    let overall = loss_vec(spec, scratch)?;
+    let classes = spec
+        .classes()
+        .into_iter()
+        .map(|c| Ok(ClassLoss { class: c, losses: loss_vec(&spec.restricted_to_class(c), scratch)? }))
+        .collect::<Result<Vec<_>, String>>()?;
+    let mut most_robust = overall[0].strategy;
+    let mut best_loss = overall[0].loss;
+    for l in &overall[1..] {
+        if l.loss < best_loss {
+            most_robust = l.strategy;
+            best_loss = l.loss;
+        }
+    }
+    let recovery_epochs =
+        spec.first_epoch().and_then(|f0| switches.iter().find(|sw| sw.epoch >= f0).map(|sw| sw.epoch - f0));
+    Ok(Resilience { overall, classes, most_robust, recovery_epochs })
 }
 
 /// Serialize a replay report as deterministic JSON (shortest-round-trip
@@ -320,9 +618,18 @@ pub fn report_to_json(r: &ReplayReport) -> String {
             Some(t) => fmt_f64(t),
             None => "null".to_string(),
         };
+        // fault-only keys: absent on healthy rows, so a no-fault report
+        // keeps its exact historical bytes
+        let mut extra = String::new();
+        if let Some(f) = &row.fault {
+            let _ = write!(extra, " \"fault\": \"{}\",", esc(f));
+        }
+        if let Some(res) = row.residual {
+            let _ = write!(extra, " \"residual\": {},", fmt_f64(res));
+        }
         let _ = writeln!(
             out,
-            "    {{\"index\": {}, \"tag\": \"{}\", \"repeat\": {}, \"drift\": {}, \"advised\": {}, \
+            "    {{\"index\": {}, \"tag\": \"{}\", \"repeat\": {}, \"drift\": {}, \"advised\": {},{extra} \
              \"strategy\": \"{}\", \"best\": \"{}\", \"per_iter_s\": {}, \"epoch_s\": {}, \"cum_s\": {}, \
              \"sim_s\": {}}}{comma}",
             row.index,
@@ -362,6 +669,39 @@ pub fn report_to_json(r: &ReplayReport) -> String {
         );
     }
     out.push_str("  ],\n");
+    if let Some(res) = &r.resilience {
+        out.push_str("  \"resilience\": {\n");
+        let _ = writeln!(out, "    \"most_robust\": \"{}\",", esc(&res.most_robust.label()));
+        match res.recovery_epochs {
+            Some(e) => {
+                let _ = writeln!(out, "    \"recovery_epochs\": {e},");
+            }
+            None => out.push_str("    \"recovery_epochs\": null,\n"),
+        }
+        let loss_row = |l: &StrategyLoss| {
+            format!(
+                "{{\"strategy\": \"{}\", \"healthy_s\": {}, \"faulted_s\": {}, \"loss\": {}}}",
+                esc(&l.strategy.label()),
+                fmt_f64(l.healthy_s),
+                fmt_f64(l.faulted_s),
+                fmt_f64(l.loss)
+            )
+        };
+        out.push_str("    \"overall\": [\n");
+        for (i, l) in res.overall.iter().enumerate() {
+            let comma = if i + 1 < res.overall.len() { "," } else { "" };
+            let _ = writeln!(out, "      {}{comma}", loss_row(l));
+        }
+        out.push_str("    ],\n");
+        out.push_str("    \"classes\": [\n");
+        for (i, c) in res.classes.iter().enumerate() {
+            let comma = if i + 1 < res.classes.len() { "," } else { "" };
+            let losses: Vec<String> = c.losses.iter().map(|l| loss_row(l)).collect();
+            let _ = writeln!(out, "      {{\"class\": \"{}\", \"losses\": [{}]}}{comma}", esc(c.class), losses.join(", "));
+        }
+        out.push_str("    ]\n");
+        out.push_str("  },\n");
+    }
     let _ = writeln!(out, "  \"total_s\": {},", fmt_f64(r.total_s));
     let _ = writeln!(
         out,
@@ -434,6 +774,49 @@ pub fn render_report(r: &ReplayReport) -> String {
     }
     if r.switches.is_empty() {
         let _ = writeln!(out, "no strategy switches");
+    }
+    if let Some(res) = &r.resilience {
+        for row in r.rows.iter().filter(|row| row.fault.is_some()) {
+            let _ = writeln!(out, "fault at epoch {}: {}", row.index, row.fault.as_deref().unwrap_or(""));
+        }
+        let mut rt = Table::new(
+            "Resilience (simulated whole-trace cost)".to_string(),
+            &["strategy", "healthy", "faulted", "loss"],
+        );
+        for l in &res.overall {
+            rt.row(vec![
+                l.strategy.label().to_string(),
+                fmt_secs(l.healthy_s),
+                fmt_secs(l.faulted_s),
+                format!("{:+.2}%", l.loss * 100.0),
+            ]);
+        }
+        out.push('\n');
+        out.push_str(&rt.render());
+        for c in &res.classes {
+            let mut worst = &c.losses[0];
+            for l in &c.losses[1..] {
+                if l.loss > worst.loss {
+                    worst = l;
+                }
+            }
+            let _ = writeln!(
+                out,
+                "class {}: worst hit {} ({:+.2}%)",
+                c.class,
+                worst.strategy.label(),
+                worst.loss * 100.0
+            );
+        }
+        let _ = writeln!(out, "most robust strategy: {}", res.most_robust.label());
+        match res.recovery_epochs {
+            Some(e) => {
+                let _ = writeln!(out, "adaptive recovery: first post-fault switch after {e} epoch(s)");
+            }
+            None => {
+                let _ = writeln!(out, "adaptive recovery: no post-fault switch");
+            }
+        }
     }
     out
 }
@@ -521,6 +904,89 @@ mod tests {
         let txt = render_report(&r1);
         assert!(txt.contains("best static"));
         assert!(txt.contains("switch at epoch"));
+    }
+
+    #[test]
+    fn zero_fault_replay_is_byte_identical() {
+        use crate::fault::FaultEvent;
+        let trace = synthesize(TraceScenario::AmrDrift, "lassen", 5, 0, 42).unwrap();
+        let base = replay(&trace, &adaptive(), &ReplayConfig::default()).unwrap();
+        let with_none = replay_with_faults(&trace, &adaptive(), &ReplayConfig::default(), None).unwrap();
+        // an all-identity schedule must change nothing either
+        let identity = FaultSpec {
+            seed: 7,
+            events: vec![
+                FaultEvent { epoch: 0, kind: crate::fault::FaultKind::Slowdown { rail: 0, factor: 1.0 } },
+                FaultEvent { epoch: 1, kind: crate::fault::FaultKind::Congestion { level: 0.0 } },
+            ],
+        };
+        let with_id = replay_with_faults(&trace, &adaptive(), &ReplayConfig::default(), Some(&identity)).unwrap();
+        let j = report_to_json(&base);
+        assert_eq!(j, report_to_json(&with_none));
+        assert_eq!(j, report_to_json(&with_id));
+        assert!(!j.contains("resilience") && !j.contains("fault"), "healthy report must not mention faults");
+        assert_eq!(render_report(&base), render_report(&with_id));
+    }
+
+    #[test]
+    fn rail_failure_triggers_external_drift_recovery() {
+        use crate::fault::{FaultEvent, FaultKind};
+        let trace = synthesize(TraceScenario::Stationary, "frontier-4nic", 8, 1, 11).unwrap();
+        let spec = FaultSpec {
+            seed: 3,
+            events: vec![
+                FaultEvent { epoch: 3, kind: FaultKind::RailDown { rail: 1 } },
+                FaultEvent { epoch: 3, kind: FaultKind::Congestion { level: 2e-3 } },
+            ],
+        };
+        let r = replay_with_faults(&trace, &adaptive(), &ReplayConfig::default(), Some(&spec)).unwrap();
+        // the fault annotates its epoch and the sim sensor runs everywhere
+        assert!(r.rows[3].fault.as_deref().unwrap().contains("rail-down(1)"));
+        assert!(r.rows.iter().all(|row| row.sim_s.is_some_and(|t| t.is_finite() && t > 0.0)));
+        // the stationary pattern never drifts...
+        assert!(r.rows.iter().all(|row| row.drift == 0.0));
+        // ...but the hardware does: the residual jumps past the threshold
+        // at the fault epoch and the advisor is re-consulted
+        let res = r.rows[3].residual.expect("incumbent residual at the fault epoch");
+        assert!(res > DEFAULT_DRIFT_THRESHOLD, "external drift must fire: residual {res}");
+        assert!(r.rows[3].advised, "residual past the threshold must re-advise");
+        let resil = r.resilience.as_ref().expect("fault replay reports resilience");
+        assert_eq!(resil.overall.len(), Strategy::all().len());
+        assert!(
+            resil.overall.iter().all(|l| l.faulted_s + 1e-12 >= l.healthy_s),
+            "degradation never speeds a strategy up: {:?}",
+            resil.overall
+        );
+        assert!(resil.overall.iter().any(|l| l.loss > 0.0), "the schedule must cost something");
+        let classes: Vec<&str> = resil.classes.iter().map(|c| c.class).collect();
+        assert_eq!(classes, ["rail-down", "congestion"]);
+        // recovery bookkeeping agrees with the switch log
+        let expected = r.switches.iter().find(|sw| sw.epoch >= 3).map(|sw| sw.epoch - 3);
+        assert_eq!(resil.recovery_epochs, expected);
+        // deterministic end to end
+        let again = replay_with_faults(&trace, &adaptive(), &ReplayConfig::default(), Some(&spec)).unwrap();
+        assert_eq!(report_to_json(&r), report_to_json(&again));
+        let txt = render_report(&r);
+        assert!(txt.contains("most robust strategy") && txt.contains("fault at epoch 3"));
+    }
+
+    #[test]
+    fn embedded_and_external_schedules_agree_and_never_stack() {
+        use crate::fault::{FaultEvent, FaultKind};
+        let trace = synthesize(TraceScenario::Stationary, "frontier-4nic", 5, 1, 11).unwrap();
+        // slowdown-only: congestion draws would differ (external specs seed
+        // the pre-charge from the spec, embedded ones from the trace seed)
+        let spec = FaultSpec {
+            seed: 3,
+            events: vec![FaultEvent { epoch: 2, kind: FaultKind::Slowdown { rail: 0, factor: 8.0 } }],
+        };
+        let external = replay_with_faults(&trace, &adaptive(), &ReplayConfig::default(), Some(&spec)).unwrap();
+        let embedded_trace = spec.attach(&trace).unwrap();
+        let embedded = replay(&embedded_trace, &adaptive(), &ReplayConfig::default()).unwrap();
+        assert_eq!(report_to_json(&external), report_to_json(&embedded));
+        // a trace that already carries a schedule refuses a second one
+        let err = replay_with_faults(&embedded_trace, &adaptive(), &ReplayConfig::default(), Some(&spec));
+        assert!(err.unwrap_err().contains("already embeds"));
     }
 
     #[test]

@@ -160,7 +160,7 @@ pub fn synthesize(
         let mut rng = Rng::new(epoch_seed(seed, k));
         rng.shuffle(&mut pattern.msgs);
         let rep = if repeat > 0 { repeat } else { scenario.default_repeat(&tag) };
-        trace_epochs.push(Epoch { index: k, tag, repeat: rep, pattern });
+        trace_epochs.push(Epoch { index: k, tag, repeat: rep, pattern, faults: vec![] });
     }
     let trace = Trace { scenario: scenario.label().to_string(), seed, machine, epochs: trace_epochs };
     trace.validate()?;

@@ -1,0 +1,156 @@
+//! Parser-robustness properties: seeded byte corruption over every
+//! versioned artifact format. The contract under attack bytes is uniform
+//! across the persistence layers (docs/FORMATS.md): parsing returns a
+//! descriptive `Err` or a *valid* value — never a panic, never a value
+//! that fails its own invariants. Validity is checked the cheap way: any
+//! `Ok` survivor must re-emit and re-parse cleanly.
+
+use hetcomm::advisor::{DecisionSurface, SurfaceAxes};
+use hetcomm::collective::CollectiveSurface;
+use hetcomm::fault::{FaultEvent, FaultKind, FaultSpec};
+use hetcomm::trace::{synthesize, TraceScenario};
+use hetcomm::util::prop::{check, Gen};
+use hetcomm::{advisor, collective, fault, trace};
+
+/// One small exemplar per artifact family (all six schemas: surface
+/// v1/v2/v3, trace.v1 with embedded faults, colsurface.v1, faults.v1).
+fn artifacts() -> Vec<(&'static str, String)> {
+    let axes = || SurfaceAxes {
+        msgs: vec![32, 128],
+        sizes: vec![1 << 8, 1 << 12, 1 << 16],
+        dest_nodes: vec![4],
+        gpus_per_node: vec![4],
+    };
+    let v1 = DecisionSurface::compile("lassen", axes(), 0.0).expect("lassen surface");
+    let v2 = DecisionSurface::compile("frontier-4nic", axes(), 0.0).expect("frontier-4nic surface");
+    let spec = FaultSpec {
+        seed: 13,
+        events: vec![
+            FaultEvent { epoch: 1, kind: FaultKind::Slowdown { rail: 0, factor: 2.5 } },
+            FaultEvent { epoch: 2, kind: FaultKind::Congestion { level: 3e-4 } },
+        ],
+    };
+    let healthy = synthesize(TraceScenario::AmrDrift, "lassen", 3, 1, 5).expect("trace");
+    let faulted = spec.attach(&healthy).expect("attachable schedule");
+    let colsurface =
+        CollectiveSurface::compile("lassen", 4, vec![2, 4], vec![512, 8192], 42).expect("collective surface");
+    vec![
+        ("surface.v1", advisor::persist::to_json(&v1)),
+        ("surface.v2", advisor::persist::to_json(&v2)),
+        ("surface.v3", advisor::persist::to_json_quant(&v2).expect("quantized surface")),
+        ("trace.v1", trace::persist::to_json(&faulted)),
+        ("colsurface.v1", collective::persist::to_json(&colsurface)),
+        ("faults.v1", fault::persist::to_json(&spec)),
+    ]
+}
+
+/// Seeded corruption: truncation, printable-byte splats, or digit
+/// clobbering. All mutations stay ASCII (the artifacts are ASCII), so the
+/// result is always a valid `&str` for the parsers.
+fn corrupt(g: &mut Gen, text: &str) -> String {
+    let mut bytes = text.as_bytes().to_vec();
+    match g.usize(0, 3) {
+        0 => {
+            let cut = g.usize(0, bytes.len() + 1);
+            bytes.truncate(cut);
+        }
+        1 => {
+            for _ in 0..g.usize(1, 9) {
+                let i = g.usize(0, bytes.len());
+                bytes[i] = b' ' + g.usize(0, 95) as u8;
+            }
+        }
+        _ => {
+            let digits: Vec<usize> =
+                bytes.iter().enumerate().filter(|(_, b)| b.is_ascii_digit()).map(|(i, _)| i).collect();
+            for _ in 0..g.usize(1, 5) {
+                bytes[digits[g.usize(0, digits.len())]] = b'x';
+            }
+        }
+    }
+    String::from_utf8(bytes).expect("ASCII mutations keep UTF-8 validity")
+}
+
+/// Parse `text` as artifact family `name`; an `Ok` must re-emit and
+/// re-parse (i.e. the parser only accepts values its own writer can
+/// reproduce). Returns an error only on the re-parse failure — a plain
+/// parse `Err` on corrupted bytes is the expected outcome.
+fn parse_and_verify(name: &str, text: &str) -> Result<(), String> {
+    match name {
+        "surface.v1" | "surface.v2" | "surface.v3" => {
+            if let Ok(s) = advisor::persist::parse_json(text) {
+                advisor::persist::parse_json(&advisor::persist::to_json(&s))
+                    .map_err(|e| format!("accepted surface does not round-trip: {e}"))?;
+            }
+        }
+        "trace.v1" => {
+            if let Ok(t) = trace::persist::parse_json(text) {
+                trace::persist::parse_json(&trace::persist::to_json(&t))
+                    .map_err(|e| format!("accepted trace does not round-trip: {e}"))?;
+            }
+        }
+        "colsurface.v1" => {
+            if let Ok(s) = collective::persist::parse_json(text) {
+                collective::persist::parse_json(&collective::persist::to_json(&s))
+                    .map_err(|e| format!("accepted collective surface does not round-trip: {e}"))?;
+            }
+        }
+        "faults.v1" => {
+            if let Ok(s) = fault::persist::parse_json(text) {
+                fault::persist::parse_json(&fault::persist::to_json(&s))
+                    .map_err(|e| format!("accepted fault spec does not round-trip: {e}"))?;
+            }
+        }
+        other => return Err(format!("unknown artifact family {other:?}")),
+    }
+    Ok(())
+}
+
+#[test]
+fn corrupted_artifacts_never_panic_and_survivors_stay_valid() {
+    let arts = artifacts();
+    check("corruption -> Err or valid Ok", 240, |g| {
+        let (name, original) = &arts[g.usize(0, arts.len())];
+        let mutated = corrupt(g, original);
+        parse_and_verify(name, &mutated)
+    });
+}
+
+#[test]
+fn pristine_artifacts_all_parse() {
+    // the corruption property is vacuous if the baselines don't parse
+    for (name, text) in artifacts() {
+        parse_and_verify(name, &text).unwrap();
+        let ok = match name {
+            "surface.v1" | "surface.v2" | "surface.v3" => advisor::persist::parse_json(&text).is_ok(),
+            "trace.v1" => trace::persist::parse_json(&text).is_ok(),
+            "colsurface.v1" => collective::persist::parse_json(&text).is_ok(),
+            "faults.v1" => fault::persist::parse_json(&text).is_ok(),
+            _ => false,
+        };
+        assert!(ok, "{name} exemplar must parse");
+    }
+}
+
+#[test]
+fn adversarial_fragments_are_rejected_not_panicked() {
+    // hand-picked nasties shared across all families
+    let nasties = [
+        "",
+        "{",
+        "null",
+        "[]",
+        "{}",
+        "{\"schema\": \"hetcomm.surface.v1\"}",
+        "{\"schema\": 42}",
+        "{\"schema\": \"hetcomm.faults.v1\", \"seed\": \"1\", \"events\": 7}",
+        "{\"schema\": \"hetcomm.faults.v1\", \"seed\": 1, \"events\": []}",
+        "{\"schema\": \"hetcomm.trace.v1\", \"epochs\": [{}]}",
+    ];
+    for text in nasties {
+        assert!(advisor::persist::parse_json(text).is_err());
+        assert!(trace::persist::parse_json(text).is_err());
+        assert!(collective::persist::parse_json(text).is_err());
+        assert!(fault::persist::parse_json(text).is_err());
+    }
+}

@@ -6,15 +6,18 @@ use hetcomm::pattern::generators::random_pattern;
 use hetcomm::topology::machines;
 use hetcomm::trace::{persist, Epoch, Trace};
 use hetcomm::util::prop::{check, Gen};
+use hetcomm::FaultKind;
 
 /// A random trace: a random registry machine shape holding 1–6 epochs of
-/// random irregular patterns with adversarial tags.
+/// random irregular patterns with adversarial tags; some epochs carry
+/// fault events so the optional `"faults"` key is exercised too.
 fn random_trace(g: &mut Gen) -> Trace {
     let name = *g.choose(&machines::NAMES);
     let (arch, _) = machines::parse(name, 1).expect("registry name");
     let nodes = g.usize(2, 6);
     let gpn = arch.sockets_per_node * g.usize(1, 4);
     let machine = machines::with_shape(&arch, nodes, gpn);
+    let rails = machine.nics_per_node();
     let n_epochs = g.usize(1, 7);
     let epochs = (0..n_epochs)
         .map(|k| {
@@ -24,7 +27,13 @@ fn random_trace(g: &mut Gen) -> Trace {
             let pattern = random_pattern(&machine, g.rng(), n_msgs, max_bytes, dup_p);
             // tags exercise the JSON string escaper
             let tag = format!("e{k}\t\"quoted\\{}\"", g.usize(0, 100));
-            Epoch { index: k, tag, repeat: g.usize(1, 5), pattern }
+            let faults = match g.usize(0, 5) {
+                0 => vec![FaultKind::RailDown { rail: g.usize(0, rails - 1) }],
+                1 => vec![FaultKind::Slowdown { rail: g.usize(0, rails - 1), factor: 1.0 + g.usize(1, 6) as f64 * 0.5 }],
+                2 => vec![FaultKind::Congestion { level: g.usize(1, 100) as f64 * 1e-6 }],
+                _ => vec![],
+            };
+            Epoch { index: k, tag, repeat: g.usize(1, 5), pattern, faults }
         })
         .collect();
     Trace { scenario: format!("prop \"{}\"", g.usize(0, 1000)), seed: g.u64(u64::MAX), machine, epochs }
@@ -87,6 +96,44 @@ fn custom_shapes_roundtrip_faithfully() {
         }
         if persist::to_json(&parsed) != json {
             return Err("re-emitted custom-shape artifact bytes differ".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn degraded_shapes_roundtrip_faithfully() {
+    // a post-rail-failure shape (dense renumbering of the survivors plus a
+    // remapped affinity table) is non-canonical, so it must persist via the
+    // full nics_per_socket/gpu_nic arrays and reload bit-for-bit
+    check("degraded NodeShape survives the artifact", 20, |g| {
+        let (arch, _) = machines::parse("frontier-4nic", 1).expect("registry name");
+        let nodes = g.usize(2, 5);
+        let mut machine = machines::with_shape(&arch, nodes, arch.gpus_per_node());
+        let rails = machine.nics_per_node();
+        // downing the last rail of the spread layout happens to re-spread
+        // canonically; any other rail leaves a non-canonical affinity map
+        let down = g.usize(0, rails - 2);
+        machine.shape = machine.shape.degraded(&[down]).map_err(|e| e.to_string())?;
+        let n_epochs = g.usize(1, 4);
+        let epochs: Vec<Epoch> = (0..n_epochs)
+            .map(|k| {
+                let pattern = random_pattern(&machine, g.rng(), g.usize(1, 30), g.msg_size().max(2), 0.0);
+                Epoch { index: k, tag: format!("deg{k}"), repeat: g.usize(1, 3), pattern, faults: vec![] }
+            })
+            .collect();
+        let trace = Trace { scenario: "degraded".into(), seed: g.u64(u64::MAX), machine, epochs };
+        trace.validate()?;
+        let json = persist::to_json(&trace);
+        if !json.contains("nics_per_socket") {
+            return Err("degraded shape must serialize its full resource graph".into());
+        }
+        let parsed = persist::parse_json(&json).map_err(|e| format!("parse failed: {e}"))?;
+        if parsed.machine.shape != trace.machine.shape {
+            return Err("degraded shape changed across the round trip".into());
+        }
+        if persist::to_json(&parsed) != json {
+            return Err("re-emitted degraded-shape artifact bytes differ".into());
         }
         Ok(())
     });
