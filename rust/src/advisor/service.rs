@@ -147,13 +147,27 @@ impl AdvisorService {
     /// Results come back in query order and bit-identical to per-query
     /// [`AdvisorService::advise`] calls.
     pub fn advise_batch(&self, queries: &[Query], threads: usize) -> Vec<Result<Arc<RankedStrategies>, String>> {
+        self.advise_batch_with(queries, threads, cfg!(feature = "simd"))
+    }
+
+    /// [`AdvisorService::advise_batch`] with the miss-path interpolator's
+    /// lane selection pinned: `lanes` forces
+    /// [`DecisionSurface::lookup_batch_lanes`] (four-wide, bit-identical)
+    /// instead of following the `simd` feature — the `advise-simd` perf leg
+    /// and the lane-identity property test drive it from default builds.
+    pub fn advise_batch_with(
+        &self,
+        queries: &[Query],
+        threads: usize,
+        lanes: bool,
+    ) -> Vec<Result<Arc<RankedStrategies>, String>> {
         let threads = effective_threads(threads, queries.len());
         let chunk_size = queries.len().div_ceil(threads).max(1);
         let chunks: Vec<&[Query]> = queries.chunks(chunk_size).collect();
-        pool::map(chunks.len(), threads, |ci| self.advise_chunk(chunks[ci])).into_iter().flatten().collect()
+        pool::map(chunks.len(), threads, |ci| self.advise_chunk(chunks[ci], lanes)).into_iter().flatten().collect()
     }
 
-    fn advise_chunk(&self, chunk: &[Query]) -> Vec<Result<Arc<RankedStrategies>, String>> {
+    fn advise_chunk(&self, chunk: &[Query], lanes: bool) -> Vec<Result<Arc<RankedStrategies>, String>> {
         let mut out: Vec<Option<Result<Arc<RankedStrategies>, String>>> = Vec::with_capacity(chunk.len());
         out.resize_with(chunk.len(), || None);
         let mut by_tenant: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
@@ -182,7 +196,8 @@ impl AdvisorService {
             }
             if !miss_patterns.is_empty() {
                 self.misses.fetch_add(miss_patterns.len() as u64, Ordering::Relaxed);
-                for (&i, answer) in miss_at.iter().zip(snapshot.surface.lookup_batch(&miss_patterns)) {
+                let answers = snapshot.surface.lookup_batch_impl(&miss_patterns, lanes);
+                for (&i, answer) in miss_at.iter().zip(answers) {
                     let answer = Arc::new(answer);
                     snapshot.memoize(&chunk[i].pattern, Arc::clone(&answer));
                     out[i] = Some(Ok(answer));

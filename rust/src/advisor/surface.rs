@@ -299,6 +299,37 @@ fn interp_corner(t00: f64, t01: f64, t10: f64, t11: f64, ws: f64, wm: f64) -> f6
     lerp_log(lerp_log(t00, t01, ws), lerp_log(t10, t11, ws), wm)
 }
 
+/// Four-lane [`lerp_log`]. The weight branch is uniform across lanes (the
+/// batched path interpolates four *strategies* of one query, which share
+/// `ws`/`wm`), so it hoists out of the lane arithmetic; each lane then runs
+/// the scalar op chain `(a.ln()*(1-w) + b.ln()*w).exp()` verbatim, which is
+/// what keeps lane answers bit-identical to scalar ones. Stable Rust has no
+/// portable f64x4, so the lanes are hand-unrolled — the fixed-width arrays
+/// are what lets LLVM emit packed SIMD for the bodies.
+#[inline]
+fn lerp_log4(a: [f64; 4], b: [f64; 4], w: f64) -> [f64; 4] {
+    if w <= 0.0 {
+        a
+    } else if w >= 1.0 {
+        b
+    } else {
+        let iw = 1.0 - w;
+        [
+            (a[0].ln() * iw + b[0].ln() * w).exp(),
+            (a[1].ln() * iw + b[1].ln() * w).exp(),
+            (a[2].ln() * iw + b[2].ln() * w).exp(),
+            (a[3].ln() * iw + b[3].ln() * w).exp(),
+        ]
+    }
+}
+
+/// Four-lane [`interp_corner`]: the same two-level [`lerp_log4`] chain,
+/// bit-identical per lane to the scalar core.
+#[inline]
+fn interp_corner4(t00: [f64; 4], t01: [f64; 4], t10: [f64; 4], t11: [f64; 4], ws: f64, wm: f64) -> [f64; 4] {
+    lerp_log4(lerp_log4(t00, t01, ws), lerp_log4(t10, t11, ws), wm)
+}
+
 /// Stable argsort of one cell's strategy times, fastest first — exactly the
 /// permutation [`DecisionSurface::lookup`]'s stable sort produces at a
 /// lattice point. Shared by the snapshot layer (precomputed lattice
@@ -486,7 +517,24 @@ impl DecisionSurface {
     /// (property-tested): the per-query weight and interpolation chain runs
     /// through exactly the same [`axis_weight`]/[`interp_corner`]
     /// expressions the single path uses.
+    ///
+    /// The inner strategy loop runs over explicit four-wide lanes
+    /// ([`interp_corner4`]) when the `simd` cargo feature is on, and in
+    /// scalar order otherwise; both paths are always compiled and produce
+    /// identical bits ([`DecisionSurface::lookup_batch_lanes`] pins the
+    /// lanes path in default builds for tests and the perf harness).
     pub fn lookup_batch(&self, queries: &[Pattern]) -> Vec<RankedStrategies> {
+        self.lookup_batch_impl(queries, cfg!(feature = "simd"))
+    }
+
+    /// [`DecisionSurface::lookup_batch`] forced through the four-wide lane
+    /// path regardless of the `simd` feature — the bit-identity oracle and
+    /// the `advise-simd` perf leg exercise it from default builds.
+    pub fn lookup_batch_lanes(&self, queries: &[Pattern]) -> Vec<RankedStrategies> {
+        self.lookup_batch_impl(queries, true)
+    }
+
+    pub(crate) fn lookup_batch_impl(&self, queries: &[Pattern], lanes: bool) -> Vec<RankedStrategies> {
         let dest_logs: Vec<f64> = self.axes.dest_nodes.iter().map(|&a| (a as f64).log2()).collect();
         let gpn_logs: Vec<f64> = self.axes.gpus_per_node.iter().map(|&a| (a as f64).log2()).collect();
         let coords: Vec<(usize, usize, usize, usize, usize, usize)> = queries
@@ -521,9 +569,29 @@ impl DecisionSurface {
                 let q = &queries[qi];
                 let wm = if m0 == m1 { 0.0 } else { axis_weight(xm0, xm1, q.n_msgs) };
                 let ws = if s0 == s1 { 0.0 } else { axis_weight(xs0, xs1, q.msg_size) };
-                let mut ranked = Vec::with_capacity(self.strategies.len());
-                for (k, &strategy) in self.strategies.iter().enumerate() {
-                    ranked.push((strategy, interp_corner(r00[k], r01[k], r10[k], r11[k], ws, wm)));
+                let n = self.strategies.len();
+                let mut ranked = Vec::with_capacity(n);
+                let mut k = 0;
+                if lanes {
+                    while k + 4 <= n {
+                        let t = interp_corner4(
+                            [r00[k], r00[k + 1], r00[k + 2], r00[k + 3]],
+                            [r01[k], r01[k + 1], r01[k + 2], r01[k + 3]],
+                            [r10[k], r10[k + 1], r10[k + 2], r10[k + 3]],
+                            [r11[k], r11[k + 1], r11[k + 2], r11[k + 3]],
+                            ws,
+                            wm,
+                        );
+                        for (l, &time) in t.iter().enumerate() {
+                            ranked.push((self.strategies[k + l], time));
+                        }
+                        k += 4;
+                    }
+                }
+                // scalar path, and the lanes path's < 4 remainder
+                while k < n {
+                    ranked.push((self.strategies[k], interp_corner(r00[k], r01[k], r10[k], r11[k], ws, wm)));
+                    k += 1;
                 }
                 ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("finite surface times"));
                 out[qi] = Some(RankedStrategies { ranked });
@@ -877,6 +945,44 @@ mod tests {
         }
         // empty batch is fine
         assert!(s.lookup_batch(&[]).is_empty());
+    }
+
+    #[test]
+    fn lanes_path_matches_scalar_bit_for_bit() {
+        // the `simd` feature contract: forcing the four-wide lanes must not
+        // move a single bit relative to the scalar inner loop (Table 5 has
+        // 8 strategies: two full lane groups, empty remainder; a filtered
+        // strategy set exercises the scalar remainder too)
+        let s = DecisionSurface::compile("lassen", tiny_axes(), 0.0).unwrap();
+        let queries = vec![
+            Pattern { n_msgs: 256, msg_size: 1024, dest_nodes: 16, gpus_per_node: 4 },
+            Pattern { n_msgs: 100, msg_size: 3000, dest_nodes: 10, gpus_per_node: 4 },
+            Pattern { n_msgs: 1, msg_size: 1, dest_nodes: 1, gpus_per_node: 1 },
+            Pattern { n_msgs: 1 << 20, msg_size: 1 << 30, dest_nodes: 999, gpus_per_node: 64 },
+            Pattern { n_msgs: 77, msg_size: 100_000, dest_nodes: 7, gpus_per_node: 4 },
+        ];
+        let scalar = s.lookup_batch_impl(&queries, false);
+        let lanes = s.lookup_batch_lanes(&queries);
+        for (a, b) in scalar.iter().zip(&lanes) {
+            for ((sa, ta), (sb, tb)) in a.ranked.iter().zip(&b.ranked) {
+                assert_eq!(sa, sb);
+                assert_eq!(ta.to_bits(), tb.to_bits(), "lane arithmetic drifted from scalar");
+            }
+        }
+        // remainder coverage: a 6-strategy surface leaves 2 scalar stragglers
+        let mut small = s.clone();
+        small.strategies.truncate(6);
+        for cell in &mut small.cells {
+            cell.truncate(6);
+        }
+        let a = small.lookup_batch_impl(&queries, false);
+        let b = small.lookup_batch_lanes(&queries);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.ranked.len(), 6);
+            for ((sx, tx), (sy, ty)) in x.ranked.iter().zip(&y.ranked) {
+                assert_eq!((sx, tx.to_bits()), (sy, ty.to_bits()));
+            }
+        }
     }
 
     #[test]

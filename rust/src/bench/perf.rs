@@ -30,6 +30,11 @@
 //! - **advise-batch** — the same stream through
 //!   [`AdvisorService::advise_batch`]; the harness errors out unless the
 //!   batched answers' digest matches the per-query leg bit for bit;
+//! - **advise-simd** — the same stream with the four-wide lane
+//!   interpolator forced on ([`AdvisorService::advise_batch_with`], the
+//!   `simd` feature's default path); bit-identity with the per-query leg
+//!   is a hard error, so its throughput delta over `advise-batch` is the
+//!   measured lane speedup;
 //! - **advise-publish** — full recalibrate → compile → publish
 //!   round-trips on a separate service (timing only, answers unpinned).
 //!
@@ -551,6 +556,32 @@ fn run_advise_suite(config: &PerfConfig) -> Result<PerfReport, String> {
     let mut batch_row = row_from("advise-batch", queries.len(), t_batch, &mut batch_lat);
     batch_row.cache_hit_rate = Some(batch_service.cache_stats().hit_rate());
 
+    // --- lane-vectorized batched path: the same stream with the four-wide
+    // interpolator forced on (the `simd` feature's path, runnable from any
+    // build); bit-identity with the per-query leg is a hard error, so the
+    // measured speedup is guaranteed to be a pure throughput delta ---
+    let simd_service = fleet_service(config.quick)?;
+    let mut simd_answers = Vec::with_capacity(queries.len());
+    let mut simd_lat = Vec::with_capacity(queries.len().div_ceil(batch_size));
+    let t0 = Instant::now();
+    for slice in queries.chunks(batch_size) {
+        let t = Instant::now();
+        let got = simd_service.advise_batch_with(slice, config.threads, true);
+        simd_lat.push(t.elapsed().as_secs_f64() / slice.len() as f64);
+        for a in got {
+            simd_answers.push(a?);
+        }
+    }
+    let t_simd = t0.elapsed().as_secs_f64();
+    let sum_simd = ranked_digest(&simd_answers);
+    if sum_single != sum_simd {
+        return Err(format!(
+            "lane interpolation changed an answer: per-query digest {sum_single:#018x} != lanes {sum_simd:#018x}"
+        ));
+    }
+    let mut simd_row = row_from("advise-simd", queries.len(), t_simd, &mut simd_lat);
+    simd_row.cache_hit_rate = Some(simd_service.cache_stats().hit_rate());
+
     // --- publish cost: full recalibrate -> compile -> publish round-trips
     // on a separate service; timing only, so the drifted parameters never
     // touch the checksummed legs ---
@@ -597,7 +628,7 @@ fn run_advise_suite(config: &PerfConfig) -> Result<PerfReport, String> {
         checksum_sweep: None,
         checksum_schedules: None,
         checksum_advise: Some(checksum_advise),
-        results: vec![burst_row, miss_row, batch_row, pub_row],
+        results: vec![burst_row, miss_row, batch_row, simd_row, pub_row],
         speedup_vs_reference: speedup,
     })
 }
@@ -957,7 +988,7 @@ mod tests {
     fn advise_suite_runs_and_self_verifies() {
         let r = run_perf(&tiny_advise()).unwrap();
         let names: Vec<&str> = r.results.iter().map(|row| row.name).collect();
-        assert_eq!(names, ["advise-burst", "advise-miss", "advise-batch", "advise-publish"]);
+        assert_eq!(names, ["advise-burst", "advise-miss", "advise-batch", "advise-simd", "advise-publish"]);
         assert!(r.results.iter().all(|row| row.items > 0));
         assert_eq!(r.machine, "fleet-4");
         assert_eq!(r.cells, 4 * 12, "four tenants x the quick 12-cell lattice");

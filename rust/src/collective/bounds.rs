@@ -1,0 +1,267 @@
+//! Closed-form cost bounds for branch-and-bound collective pruning.
+//!
+//! The point-to-point sweep prunes simulations with `model::bounds`
+//! (protocol envelopes + a conservative simulator floor); this module is
+//! the collective-layer analogue. For a materialized [`Lowering`] it
+//! derives a `[lower, upper]` interval such that
+//!
+//! - `lower <= algorithm_time(lowering) <= upper`
+//!   ([`super::model::algorithm_time`]), and
+//! - `lower <= simulated time` of [`super::lower::sim_schedule`],
+//!
+//! which makes `collective --prune` winner-preserving: an algorithm whose
+//! `lower` exceeds the best simulated time in a cell cannot be the cell's
+//! simulated winner and may skip the simulator.
+//!
+//! # Construction
+//!
+//! **Envelopes.** The collective model composes exactly three
+//! size-dependent protocol lookups — the off-node row inside
+//! [`super::model::net_time`], the on-node rows inside
+//! [`super::model::intra_serial`], and the (size-independent, exact)
+//! memcpy rows of the copy legs. Re-evaluating the same composition with
+//! the component-wise min/max envelopes of [`crate::model::bounds`]
+//! brackets every stage term, and the per-stage combinators
+//! (`max(net, intra) + copies`, stage sums, pairwise round sums) are all
+//! monotone, so the composition brackets the whole algorithm time.
+//!
+//! **Simulator floor.** Stages are barrier-separated phases in
+//! [`super::lower::sim_schedule`], so per-stage occupancy floors *sum*:
+//!
+//! - every inter-node byte of a stage crosses some NIC rail of its source
+//!   node during that stage, and some rail carries at least `1/nics` of
+//!   the busiest node's injection (pigeonhole);
+//! - a sender's transfers serialize, so the busiest inter-node sender
+//!   pays at least `max(m · α_min, bytes · β_min)`;
+//! - standard/locality stages run staged D2H/H2D copy phases around any
+//!   inter-node exchange; pairwise pays the pair once for the whole
+//!   schedule.
+//!
+//! Because the floor is computed from the *materialized* lowering, the
+//! duplicate/dedup accounting is structurally identical to
+//! [`Lowering::internode_msgs`]/[`Lowering::internode_bytes`] — the
+//! deduplicated exchange stage contributes exactly its deduplicated
+//! bytes. The caller-facing `lower` folds the floor in through the same
+//! [`SAFETY`] margin the point-to-point bounds use.
+
+use super::lower::Lowering;
+use super::model::{copy_legs, peak_volumes};
+use super::CollectiveAlgorithm;
+use crate::model::bounds::{CostBounds, Envelope, SAFETY};
+use crate::model::{copy, maxrate::MaxRate};
+use crate::params::{AlphaBeta, CopyDir, Endpoint, MachineParams};
+use crate::pattern::CommPattern;
+use crate::topology::{GpuId, Locality, Machine, NodeId};
+use std::collections::BTreeMap;
+
+/// Bound evaluator for one `(machine, params)` pair — the collective
+/// analogue of [`crate::model::BoundModel`], returning intervals around
+/// [`super::model::algorithm_time`] instead of point estimates.
+#[derive(Clone, Debug)]
+pub struct ColBoundModel<'a> {
+    machine: &'a Machine,
+    params: &'a MachineParams,
+    lo: Envelope,
+    hi: Envelope,
+}
+
+impl<'a> ColBoundModel<'a> {
+    pub fn new(machine: &'a Machine, params: &'a MachineParams) -> Self {
+        ColBoundModel { machine, params, lo: Envelope::build(params, false), hi: Envelope::build(params, true) }
+    }
+
+    /// The `[lower, upper]` interval for one lowered collective.
+    pub fn bounds(&self, lowering: &Lowering) -> CostBounds {
+        let upper = self.env_algorithm_time(&self.hi, lowering);
+        let env_lower = self.env_algorithm_time(&self.lo, lowering);
+        let lower = env_lower.min(SAFETY * self.sim_floor(lowering));
+        CostBounds { lower, upper }
+    }
+
+    /// [`super::model::net_time`] with the size-selected off-node row
+    /// replaced by the envelope coefficients.
+    fn env_net_time(&self, env: &Envelope, pattern: &CommPattern) -> f64 {
+        let st = pattern.stats(self.machine);
+        if st.m_std == 0 {
+            return 0.0;
+        }
+        let ab = env.ab(Endpoint::Cpu, Locality::OffNode);
+        let mr = MaxRate { alpha: ab.alpha, rb: 1.0 / ab.beta, rn: self.params.rn() };
+        mr.time_node_rails(st.m_std, st.s_proc, st.s_node, self.machine.nics_per_node())
+    }
+
+    /// [`super::model::intra_serial`] with the per-size on-node rows
+    /// replaced by the envelope coefficients.
+    fn env_intra_serial(&self, env: &Envelope, pattern: &CommPattern) -> f64 {
+        let mut send: BTreeMap<GpuId, f64> = BTreeMap::new();
+        let mut recv: BTreeMap<GpuId, f64> = BTreeMap::new();
+        for m in pattern.intranode(self.machine) {
+            let t = env.ab(Endpoint::Cpu, self.machine.gpu_locality(m.src, m.dst)).time(m.bytes);
+            *send.entry(m.src).or_default() += t;
+            *recv.entry(m.dst).or_default() += t;
+        }
+        let worst = |m: &BTreeMap<GpuId, f64>| m.values().fold(0.0f64, |a, &b| a.max(b));
+        worst(&send).max(worst(&recv))
+    }
+
+    /// [`super::model::stage_time`] under an envelope. The copy legs are
+    /// size-independent memcpy rows — exact at both ends of the interval.
+    fn env_stage_time(&self, env: &Envelope, pattern: &CommPattern) -> f64 {
+        self.env_net_time(env, pattern).max(self.env_intra_serial(env, pattern))
+            + copy_legs(self.machine, self.params, pattern)
+    }
+
+    /// [`super::model::algorithm_time`] under an envelope: same stage
+    /// combinators, envelope legs.
+    fn env_algorithm_time(&self, env: &Envelope, lowering: &Lowering) -> f64 {
+        match lowering.algorithm {
+            CollectiveAlgorithm::Standard | CollectiveAlgorithm::Locality => {
+                lowering.stages.iter().map(|s| self.env_stage_time(env, &s.pattern)).sum()
+            }
+            CollectiveAlgorithm::Pairwise => {
+                let (out_max, in_max) = peak_volumes(
+                    lowering.stages.iter().flat_map(|s| s.pattern.msgs.iter().map(|m| (m.src, m.dst, m.bytes))),
+                );
+                let copies =
+                    if out_max + in_max > 0 { copy::t_copy(self.params, out_max, in_max, 1) } else { 0.0 };
+                copies
+                    + lowering
+                        .stages
+                        .iter()
+                        .map(|s| {
+                            let inter = self.env_net_time(env, &s.pattern);
+                            if inter > 0.0 {
+                                inter
+                            } else {
+                                self.env_intra_serial(env, &s.pattern)
+                            }
+                        })
+                        .sum::<f64>()
+            }
+        }
+    }
+
+    /// Occupancy floor on the simulated schedule: per-stage floors summed
+    /// (stages are barriers), copy-phase latencies per the algorithm's
+    /// staging shape. Deliberately conservative — intra-node traffic
+    /// contributes nothing, sender floors use `max` instead of the serial
+    /// sum — and the caller scales by [`SAFETY`].
+    fn sim_floor(&self, lowering: &Lowering) -> f64 {
+        let p = self.params;
+        let nics = self.machine.nics_per_node().max(1);
+        let band_beta = (0..nics).map(|r| p.nic_band(r).beta).fold(f64::INFINITY, f64::min);
+        let ab = self.lo.ab(Endpoint::Cpu, Locality::OffNode);
+        let byte_beta = band_beta.min(ab.beta);
+        let a_min = |dir| {
+            let a1: AlphaBeta = p.memcpy_ab(dir, 1);
+            let a4: AlphaBeta = p.memcpy_ab(dir, 4);
+            a1.alpha.min(a4.alpha)
+        };
+        let copy_alphas = a_min(CopyDir::D2H) + a_min(CopyDir::H2D);
+        let per_stage_copies =
+            matches!(lowering.algorithm, CollectiveAlgorithm::Standard | CollectiveAlgorithm::Locality);
+
+        let mut floor = 0.0f64;
+        let mut any_internode = false;
+        for stage in &lowering.stages {
+            let mut node_bytes: BTreeMap<NodeId, usize> = BTreeMap::new();
+            let mut senders: BTreeMap<GpuId, (usize, usize)> = BTreeMap::new();
+            for m in stage.pattern.internode(self.machine) {
+                *node_bytes.entry(self.machine.gpu_node(m.src)).or_default() += m.bytes;
+                let e = senders.entry(m.src).or_default();
+                e.0 += 1;
+                e.1 += m.bytes;
+            }
+            if node_bytes.is_empty() {
+                continue;
+            }
+            any_internode = true;
+            let s_node = node_bytes.values().copied().max().unwrap_or(0);
+            let rail = s_node as f64 * byte_beta / nics as f64;
+            let sender = senders
+                .values()
+                .map(|&(m, s)| (m as f64 * ab.alpha).max(s as f64 * ab.beta))
+                .fold(0.0f64, f64::max);
+            floor += rail.max(sender);
+            if per_stage_copies {
+                floor += copy_alphas;
+            }
+        }
+        if !per_stage_copies && any_internode {
+            // pairwise: payloads stay host-resident across rounds — one
+            // D2H before the first round, one H2D after the last
+            floor += copy_alphas;
+        }
+        floor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::{lower, Collective, CollectiveSpec};
+    use crate::collective::model::algorithm_time;
+    use crate::params::lassen_params;
+    use crate::topology::machines::lassen;
+
+    #[test]
+    fn envelope_brackets_the_model_everywhere() {
+        let params = lassen_params();
+        for nodes in [2, 4, 8, 32] {
+            let machine = lassen(nodes);
+            let bm = ColBoundModel::new(&machine, &params);
+            for c in Collective::ALL {
+                for exp in [9, 13, 17, 19] {
+                    let direct = CollectiveSpec::new(c, 1usize << exp, 42).materialize(&machine);
+                    for alg in CollectiveAlgorithm::ALL {
+                        let lowering = lower(c, alg, &machine, &direct);
+                        let t = algorithm_time(&machine, &params, &lowering);
+                        let b = bm.bounds(&lowering);
+                        assert!(
+                            b.lower <= t && t <= b.upper,
+                            "{c} {alg} n={nodes} s=2^{exp}: {t:e} not in [{:e}, {:e}]",
+                            b.lower,
+                            b.upper
+                        );
+                        assert!(b.lower.is_finite() && b.upper.is_finite());
+                        assert!(b.lower > 0.0, "{c} {alg}: zero lower bound prunes nothing");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn floor_respects_dedup_accounting() {
+        // Allgather's locality lowering ships each duplicate group once per
+        // destination node; the floor must see the deduplicated volume, so
+        // it cannot exceed the one computed for the duplicate-free alltoall
+        // of the same block size (same exchange volume, same shape).
+        let params = lassen_params();
+        let machine = lassen(8);
+        let bm = ColBoundModel::new(&machine, &params);
+        let block = 4096;
+        let ag = CollectiveSpec::new(Collective::Allgather, block, 42).materialize(&machine);
+        let a2a = CollectiveSpec::new(Collective::Alltoall, block, 42).materialize(&machine);
+        let l_ag = lower(Collective::Allgather, CollectiveAlgorithm::Locality, &machine, &ag);
+        let l_a2a = lower(Collective::Alltoall, CollectiveAlgorithm::Locality, &machine, &a2a);
+        assert_eq!(l_ag.internode_bytes(&machine), l_a2a.internode_bytes(&machine));
+        let (b_ag, b_a2a) = (bm.bounds(&l_ag), bm.bounds(&l_a2a));
+        assert!(b_ag.lower <= b_a2a.upper, "dedup accounting must not inflate the allgather floor");
+    }
+
+    #[test]
+    fn pairwise_floor_scales_with_rounds() {
+        // Each inter-node round is a barrier phase; the summed floor must
+        // grow with the node count at a fixed block size.
+        let params = lassen_params();
+        let lowered = |nodes: usize| {
+            let machine = lassen(nodes);
+            let d = CollectiveSpec::new(Collective::Alltoall, 512, 42).materialize(&machine);
+            let l = lower(Collective::Alltoall, CollectiveAlgorithm::Pairwise, &machine, &d);
+            let bm = ColBoundModel::new(&machine, &params);
+            bm.bounds(&l).lower
+        };
+        assert!(lowered(16) > 2.0 * lowered(4), "pairwise floor must scale with round count");
+    }
+}

@@ -35,11 +35,31 @@ fn label_list<T: std::fmt::Display>(xs: &[T]) -> String {
     format!("[{}]", items.join(", "))
 }
 
+/// True when the sweep ran with branch-and-bound pruning: the emitters
+/// then carry `sim_pruned` / `pruned` fields and the prune summary.
+/// Flag-less sweeps emit no prune fields at all (CI grep-gates this).
+fn pruned(result: &CollectiveResult) -> bool {
+    result.config.prune
+}
+
+/// True when refinement could actually skip cells. With at most two
+/// points on both refinable axes the initial lattice already covers the
+/// grid, the run is byte-identical to an exhaustive one, and it must
+/// serialize identically too — so the `refine` echo is suppressed.
+fn refined(result: &CollectiveResult) -> bool {
+    let g = &result.config.grid;
+    let mut sizes = g.sizes.clone();
+    sizes.sort_unstable();
+    sizes.dedup();
+    result.config.refine > 0 && (sizes.len() > 2 || g.nodes.len() > 2)
+}
+
 /// Serialize the full collective sweep result (config echo, cells, report)
 /// as JSON. Wall-clock fields are deliberately excluded: two runs with the
 /// same seed must produce byte-identical output.
 pub fn to_json(result: &CollectiveResult) -> String {
     let cfg = &result.config;
+    let pruned = pruned(result);
     let mut out = String::new();
     out.push_str("{\n");
     let _ = writeln!(out, "  \"schema\": \"hetcomm.collective.v1\",");
@@ -51,15 +71,19 @@ pub fn to_json(result: &CollectiveResult) -> String {
     let _ = writeln!(out, "  \"nodes\": {},", usize_list(&cfg.grid.nodes));
     let _ = writeln!(out, "  \"gpus_per_node\": {},", usize_list(&cfg.grid.gpus_per_node));
     let _ = writeln!(out, "  \"sizes\": {},", usize_list(&cfg.grid.sizes));
+    if refined(result) {
+        let _ = writeln!(out, "  \"refine\": {},", cfg.refine);
+    }
 
     out.push_str("  \"cells\": [\n");
     for (i, c) in result.cells.iter().enumerate() {
         let comma = if i + 1 < result.cells.len() { "," } else { "" };
+        let skip = if pruned { format!(", \"sim_pruned\": {}", c.sim_pruned) } else { String::new() };
         let _ = writeln!(
             out,
             "    {{\"collective\": \"{}\", \"algorithm\": \"{}\", \"nodes\": {}, \"gpus_per_node\": {}, \
              \"size\": {}, \"model_s\": {}, \"sim_s\": {}, \"stages\": {}, \"internode_msgs\": {}, \
-             \"internode_bytes\": {}}}{comma}",
+             \"internode_bytes\": {}{skip}}}{comma}",
             c.collective,
             c.algorithm,
             c.nodes,
@@ -81,10 +105,11 @@ pub fn to_json(result: &CollectiveResult) -> String {
             Some(s) => format!("\"{}\"", esc(s)),
             None => "null".to_string(),
         };
+        let skip = if pruned { format!(", \"pruned\": {}", w.pruned) } else { String::new() };
         let _ = writeln!(
             out,
             "    {{\"collective\": \"{}\", \"nodes\": {}, \"gpus_per_node\": {}, \"size\": {}, \
-             \"winner\": \"{}\", \"model_s\": {}, \"margin_vs_standard\": {}, \"sim_winner\": {}}}{comma}",
+             \"winner\": \"{}\", \"model_s\": {}, \"margin_vs_standard\": {}, \"sim_winner\": {}{skip}}}{comma}",
             w.collective,
             w.nodes,
             w.gpus_per_node,
@@ -130,19 +155,36 @@ pub fn to_json(result: &CollectiveResult) -> String {
             num(g.total_model_s),
         );
     }
-    out.push_str("  ]\n");
+    if pruned {
+        out.push_str("  ],\n");
+        let p = &result.report.prune;
+        let _ = writeln!(
+            out,
+            "  \"prune\": {{\"cells\": {}, \"sim_evals\": {}, \"pruned\": {}}}",
+            p.cells, p.sim_evals, p.pruned
+        );
+    } else {
+        out.push_str("  ]\n");
+    }
     out.push_str("}\n");
     out
 }
 
 /// One CSV row per (cell × algorithm).
 pub fn to_csv(result: &CollectiveResult) -> String {
-    let mut out =
-        String::from("collective,algorithm,nodes,gpus_per_node,size,model_s,sim_s,stages,internode_msgs,internode_bytes\n");
+    let pruned = pruned(result);
+    let mut out = String::from(
+        "collective,algorithm,nodes,gpus_per_node,size,model_s,sim_s,stages,internode_msgs,internode_bytes",
+    );
+    if pruned {
+        out.push_str(",sim_pruned");
+    }
+    out.push('\n');
     for c in &result.cells {
+        let skip = if pruned { format!(",{}", c.sim_pruned) } else { String::new() };
         let _ = writeln!(
             out,
-            "{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{}{skip}",
             c.collective,
             c.algorithm,
             c.nodes,
@@ -240,6 +282,26 @@ pub fn render_tables(result: &CollectiveResult) -> String {
             fmt_secs(g.total_model_s).trim()
         );
     }
+    if pruned(result) {
+        let p = &result.report.prune;
+        let _ = writeln!(
+            out,
+            "\nBound-guided pruning: skipped {} of {} algorithm simulations over {} cells",
+            p.pruned,
+            p.pruned + p.sim_evals,
+            p.cells
+        );
+    }
+    if refined(result) {
+        let total = result.config.grid.cells().len();
+        let _ = writeln!(
+            out,
+            "\nAdaptive refinement (depth {}): {} of {} grid cells evaluated",
+            result.config.refine,
+            result.report.prune.cells,
+            total
+        );
+    }
     out
 }
 
@@ -248,10 +310,12 @@ mod tests {
     use super::*;
     use crate::collective::sweep::{run_collective, CollectiveConfig, CollectiveGrid};
 
+    fn tiny_config() -> CollectiveConfig {
+        CollectiveConfig { grid: CollectiveGrid::tiny(), seed: 3, threads: 1, ..Default::default() }
+    }
+
     fn tiny_result() -> CollectiveResult {
-        let cfg =
-            CollectiveConfig { grid: CollectiveGrid::tiny(), seed: 3, threads: 1, sim: true, machine: "lassen".into() };
-        run_collective(&cfg).unwrap()
+        run_collective(&tiny_config()).unwrap()
     }
 
     #[test]
@@ -296,5 +360,50 @@ mod tests {
         assert!(text.contains("Crossover report"));
         assert!(text.contains("Regime winners"));
         assert!(text.contains("vs standard"));
+    }
+
+    #[test]
+    fn default_runs_emit_no_prune_or_refine_fields() {
+        let r = tiny_result();
+        for tok in ["sim_pruned", "\"pruned\"", "\"prune\"", "\"refine\""] {
+            assert!(!to_json(&r).contains(tok), "flag-less JSON leaked {tok}");
+        }
+        assert!(!to_csv(&r).contains("sim_pruned"));
+        let text = render_tables(&r);
+        assert!(!text.contains("pruning") && !text.contains("refinement"));
+    }
+
+    #[test]
+    fn pruned_runs_carry_prune_fields_everywhere() {
+        let mut cfg = tiny_config();
+        cfg.prune = true;
+        let r = run_collective(&cfg).unwrap();
+        let j = to_json(&r);
+        for tok in ["\"sim_pruned\": ", "\"pruned\": ", "\"prune\": {\"cells\": "] {
+            assert!(j.contains(tok), "pruned JSON missing {tok}");
+        }
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+        let csv = to_csv(&r);
+        assert!(csv.lines().next().unwrap().ends_with(",sim_pruned"));
+        assert!(render_tables(&r).contains("Bound-guided pruning"));
+    }
+
+    #[test]
+    fn refine_echo_suppressed_when_it_cannot_skip_cells() {
+        // tiny grid: 2 nodes x 2 sizes — the lattice covers everything, so
+        // the refined output must serialize byte-identically to exhaustive.
+        let mut cfg = tiny_config();
+        cfg.refine = 2;
+        let noop = run_collective(&cfg).unwrap();
+        assert_eq!(to_json(&tiny_result()), to_json(&noop));
+        assert!(!render_tables(&noop).contains("Adaptive refinement"));
+        // a grid with interior points does echo the depth
+        let mut cfg = tiny_config();
+        cfg.grid.sizes = vec![512, 1 << 12, 1 << 14];
+        cfg.refine = 1;
+        let r = run_collective(&cfg).unwrap();
+        assert!(to_json(&r).contains("\"refine\": 1,"));
+        assert!(render_tables(&r).contains("Adaptive refinement (depth 1):"));
     }
 }

@@ -24,6 +24,7 @@
 //!   reports ([`sweep`], [`emit`], [`report`]), and compiles collective
 //!   decision surfaces for the advisor ([`surface`], [`persist`]).
 
+pub mod bounds;
 pub mod emit;
 pub mod lower;
 pub mod model;
@@ -32,6 +33,7 @@ pub mod report;
 pub mod surface;
 pub mod sweep;
 
+pub use bounds::ColBoundModel;
 pub use lower::{lower, owner, recv_owner, sim_schedule, Lowering, Stage};
 pub use model::algorithm_time;
 pub use report::{analyze, CollectiveReport, CollectiveWinner, ColCrossover, ColRegimeWinner};

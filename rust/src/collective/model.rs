@@ -68,7 +68,7 @@ pub fn copy_legs(machine: &Machine, params: &MachineParams, pattern: &CommPatter
     copy::t_copy(params, out_max, in_max, 1)
 }
 
-fn peak_volumes(msgs: impl Iterator<Item = (GpuId, GpuId, usize)>) -> (usize, usize) {
+pub(crate) fn peak_volumes(msgs: impl Iterator<Item = (GpuId, GpuId, usize)>) -> (usize, usize) {
     let mut out: BTreeMap<GpuId, usize> = BTreeMap::new();
     let mut inn: BTreeMap<GpuId, usize> = BTreeMap::new();
     for (src, dst, bytes) in msgs {

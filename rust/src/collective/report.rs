@@ -6,7 +6,7 @@
 
 use super::sweep::CollectiveCell;
 use super::Collective;
-use crate::sweep::SMALL_BAND_MAX;
+use crate::sweep::{PruneSummary, SMALL_BAND_MAX};
 use std::collections::BTreeMap;
 
 /// The model-fastest algorithm of one collective grid cell.
@@ -24,7 +24,12 @@ pub struct CollectiveWinner {
     /// evaluated).
     pub margin_vs_standard: f64,
     /// Label of the simulator-fastest algorithm, when the sweep simulated.
+    /// Pruning-invariant: an algorithm tying or beating the incumbent is
+    /// never pruned, so the first-minimal survivor is the full run's.
     pub sim_winner: Option<&'static str>,
+    /// Algorithms whose simulation branch-and-bound pruning skipped in
+    /// this cell (0 unless the sweep ran with `prune`).
+    pub pruned: usize,
 }
 
 /// A model winner change between two adjacent sizes of one regime line.
@@ -60,6 +65,9 @@ pub struct CollectiveReport {
     pub winners: Vec<CollectiveWinner>,
     pub crossovers: Vec<ColCrossover>,
     pub regimes: Vec<ColRegimeWinner>,
+    /// Branch-and-bound pruning totals (all zero unless the sweep ran with
+    /// `prune`); shares the point-to-point sweep's summary shape.
+    pub prune: PruneSummary,
 }
 
 fn same_line(a: &CollectiveCell, b: &CollectiveCell) -> bool {
@@ -106,6 +114,7 @@ pub fn analyze(cells: &[CollectiveCell]) -> CollectiveReport {
             model_s: best.model_s,
             margin_vs_standard: margin,
             sim_winner,
+            pruned: group.iter().filter(|c| c.sim_pruned).count(),
         });
         i = j;
     }
@@ -164,6 +173,13 @@ pub fn analyze(cells: &[CollectiveCell]) -> CollectiveReport {
         i = j;
     }
 
+    // --- Prune accounting. ---
+    report.prune = PruneSummary {
+        cells: report.winners.len(),
+        sim_evals: cells.iter().filter(|c| c.sim_s.is_some()).count(),
+        pruned: cells.iter().filter(|c| c.sim_pruned).count(),
+    };
+
     report
 }
 
@@ -191,6 +207,7 @@ mod tests {
                     stages: if alg == CollectiveAlgorithm::Standard { 1 } else { 3 },
                     internode_msgs: 100,
                     internode_bytes: 100 * size,
+                    sim_pruned: false,
                 });
             }
         }

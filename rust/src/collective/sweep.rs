@@ -8,10 +8,12 @@
 //! emitter output regardless of thread count — cells are seeded by index
 //! and results land in pre-sized per-cell slots in grid order.
 
+use super::bounds::ColBoundModel;
 use super::report::{analyze, CollectiveReport};
 use super::{lower, model, sim_schedule, Collective, CollectiveAlgorithm, CollectiveSpec};
 use crate::params::{CompiledParams, MachineParams};
 use crate::sim;
+use crate::sweep::engine::{refine_2d, PlaneGeom};
 use crate::topology::{machines, Machine};
 use crate::util::pool;
 use crate::util::pool::effective_threads;
@@ -131,11 +133,29 @@ pub struct CollectiveConfig {
     /// [`machines::parse`] registry name; nodes and GPUs come from the
     /// grid axes).
     pub machine: String,
+    /// Branch-and-bound pruning: skip simulating algorithms whose
+    /// [`ColBoundModel`] lower bound exceeds the cell's best simulated
+    /// time. Winner-preserving (model times are always computed; the
+    /// simulated winner's bound can never exceed its own time). Default
+    /// off.
+    pub prune: bool,
+    /// Adaptive refinement depth over the joint (nodes × size) lattice:
+    /// 0 = exhaustive (default); `d > 0` starts on every `2^d`-th point of
+    /// both axes and subdivides only where model winners disagree.
+    pub refine: usize,
 }
 
 impl Default for CollectiveConfig {
     fn default() -> CollectiveConfig {
-        CollectiveConfig { grid: CollectiveGrid::default(), seed: 42, threads: 0, sim: true, machine: "lassen".into() }
+        CollectiveConfig {
+            grid: CollectiveGrid::default(),
+            seed: 42,
+            threads: 0,
+            sim: true,
+            machine: "lassen".into(),
+            prune: false,
+            refine: 0,
+        }
     }
 }
 
@@ -160,6 +180,9 @@ pub struct CollectiveCell {
     pub internode_msgs: usize,
     /// Inter-node bytes the lowering ships across all stages.
     pub internode_bytes: usize,
+    /// True when branch-and-bound pruning skipped this algorithm's
+    /// simulation (`sim_s` is then None even though `sim` was on).
+    pub sim_pruned: bool,
 }
 
 /// The collective sweep outcome: per-cell results plus the derived report.
@@ -184,10 +207,14 @@ pub fn run_collective(config: &CollectiveConfig) -> Result<CollectiveResult, Str
     let t0 = Instant::now();
     let threads = effective_threads(config.threads, cells.len());
 
-    let results = pool::map_with(cells.len(), threads, sim::Scratch::new, |scratch, i| {
-        eval_cell(config, &arch, &params, &compiled_params, &cells[i], scratch)
-    });
-    let cells_out: Vec<CollectiveCell> = results.into_iter().flatten().collect();
+    let cells_out: Vec<CollectiveCell> = if config.refine > 0 {
+        run_col_refined(config, &arch, &params, &compiled_params, &cells, threads)
+    } else {
+        let results = pool::map_with(cells.len(), threads, sim::Scratch::new, |scratch, i| {
+            eval_cell(config, &arch, &params, &compiled_params, &cells[i], scratch)
+        });
+        results.into_iter().flatten().collect()
+    };
     let report = analyze(&cells_out);
     Ok(CollectiveResult {
         config: config.clone(),
@@ -198,8 +225,71 @@ pub fn run_collective(config: &CollectiveConfig) -> Result<CollectiveResult, Str
     })
 }
 
-/// Evaluate one grid cell: synthesize the direct pattern once, then lower,
-/// model and (optionally) simulate every algorithm against it.
+/// Adaptive 2-D refinement over the collective grid: each (collective, gpn)
+/// pair is one (nodes × size) plane of the shared rectangle-subdivision
+/// driver ([`refine_2d`]). Evaluated cells keep their exhaustive-grid
+/// indices (hence their alltoallv seeds), so coinciding cells are
+/// bit-identical to the full sweep; skipped cells are simply absent.
+fn run_col_refined(
+    config: &CollectiveConfig,
+    arch: &Machine,
+    params: &MachineParams,
+    compiled_params: &CompiledParams,
+    cells: &[ColCellSpec],
+    threads: usize,
+) -> Vec<CollectiveCell> {
+    let grid = &config.grid;
+    let mut sizes = grid.sizes.clone();
+    sizes.sort_unstable();
+    sizes.dedup();
+    let n_sizes = sizes.len();
+    let (n_nodes, n_gpn) = (grid.nodes.len(), grid.gpus_per_node.len());
+    // cells() iterates collectives -> nodes -> gpn -> sizes
+    let row_stride = n_gpn * n_sizes;
+    let mut planes = Vec::with_capacity(grid.collectives.len() * n_gpn);
+    for ci in 0..grid.collectives.len() {
+        for g in 0..n_gpn {
+            let origin = ci * n_nodes * row_stride + g * n_sizes;
+            planes.push(PlaneGeom { origin, rows: n_nodes, row_stride, cols: n_sizes });
+        }
+    }
+
+    let mut slots: Vec<Option<Vec<CollectiveCell>>> = vec![None; cells.len()];
+    refine_2d(
+        &planes,
+        config.refine,
+        &mut slots,
+        |slots, wave| {
+            let eff = effective_threads(threads, wave.len());
+            let results = pool::map_with(wave.len(), eff, sim::Scratch::new, |scratch, i| {
+                eval_cell(config, arch, params, compiled_params, &cells[wave[i]], scratch)
+            });
+            for (&i, group) in wave.iter().zip(results) {
+                slots[i] = Some(group);
+            }
+        },
+        |slots, i| {
+            let group = slots[i].as_ref().expect("evaluated");
+            // first-minimal-wins, matching report::analyze exactly
+            group
+                .iter()
+                .min_by(|a, b| a.model_s.partial_cmp(&b.model_s).unwrap())
+                .expect("non-empty")
+                .algorithm
+                .label()
+        },
+    );
+    slots.into_iter().flatten().flatten().collect()
+}
+
+/// Evaluate one grid cell: synthesize the direct pattern once, then lower
+/// and model every algorithm against it, and simulate the survivors.
+/// Without `prune`, every algorithm simulates (legacy behavior). With it,
+/// the [`ColBoundModel`] seeds the search at the least upper bound, then
+/// visits the rest in ascending-lower-bound order, skipping any algorithm
+/// whose sound lower bound exceeds the best simulated time so far. Model
+/// times are computed for all algorithms regardless, and results come back
+/// in configuration order.
 fn eval_cell(
     cfg: &CollectiveConfig,
     arch: &Machine,
@@ -213,14 +303,49 @@ fn eval_cell(
     let direct = spec.materialize(&machine);
     let ppn = machine.gpus_per_node();
 
-    let mut out = Vec::with_capacity(cfg.grid.algorithms.len());
-    for &algorithm in &cfg.grid.algorithms {
-        let lowering = lower(cell.collective, algorithm, &machine, &direct);
-        let model_s = model::algorithm_time(&machine, params, &lowering);
-        let sim_s = cfg.sim.then(|| {
-            let schedule = sim_schedule(&machine, &lowering);
+    let algorithms = &cfg.grid.algorithms;
+    let n = algorithms.len();
+    let lowerings: Vec<_> = algorithms.iter().map(|&a| lower(cell.collective, a, &machine, &direct)).collect();
+    let model_s: Vec<f64> = lowerings.iter().map(|l| model::algorithm_time(&machine, params, l)).collect();
+    let mut sim_s: Vec<Option<f64>> = vec![None; n];
+    let mut pruned = vec![false; n];
+
+    if cfg.sim {
+        let run = |idx: usize, scratch: &mut sim::Scratch| {
+            let schedule = sim_schedule(&machine, &lowerings[idx]);
             scratch.run_total(&machine, compiled_params, &schedule, ppn)
-        });
+        };
+        if cfg.prune {
+            let bm = ColBoundModel::new(&machine, params);
+            let bounds: Vec<_> = lowerings.iter().map(|l| bm.bounds(l)).collect();
+            // seed: least upper bound (ties break to configuration order)
+            let seed = (0..n)
+                .min_by(|&a, &b| bounds[a].upper.total_cmp(&bounds[b].upper).then(a.cmp(&b)))
+                .expect("non-empty algorithm list");
+            let mut best = run(seed, scratch);
+            sim_s[seed] = Some(best);
+            let mut order: Vec<usize> = (0..n).filter(|&i| i != seed).collect();
+            order.sort_by(|&a, &b| bounds[a].lower.total_cmp(&bounds[b].lower).then(a.cmp(&b)));
+            for idx in order {
+                if bounds[idx].lower > best {
+                    pruned[idx] = true;
+                    continue;
+                }
+                let t = run(idx, scratch);
+                if t < best {
+                    best = t;
+                }
+                sim_s[idx] = Some(t);
+            }
+        } else {
+            for idx in 0..n {
+                sim_s[idx] = Some(run(idx, scratch));
+            }
+        }
+    }
+
+    let mut out = Vec::with_capacity(n);
+    for (idx, &algorithm) in algorithms.iter().enumerate() {
         out.push(CollectiveCell {
             index: cell.index,
             collective: cell.collective,
@@ -228,11 +353,12 @@ fn eval_cell(
             nodes: cell.nodes,
             gpus_per_node: cell.gpus_per_node,
             size: cell.size,
-            model_s,
-            sim_s,
-            stages: lowering.stages.len(),
-            internode_msgs: lowering.internode_msgs(&machine),
-            internode_bytes: lowering.internode_bytes(&machine),
+            model_s: model_s[idx],
+            sim_s: sim_s[idx],
+            stages: lowerings[idx].stages.len(),
+            internode_msgs: lowerings[idx].internode_msgs(&machine),
+            internode_bytes: lowerings[idx].internode_bytes(&machine),
+            sim_pruned: pruned[idx],
         });
     }
     out
@@ -255,6 +381,8 @@ mod tests {
             threads,
             sim: true,
             machine: "lassen".into(),
+            prune: false,
+            refine: 0,
         }
     }
 
@@ -368,6 +496,145 @@ mod tests {
         for (i, c) in cells.iter().enumerate() {
             assert_eq!(c.index, i);
         }
+    }
+
+    /// Pruning-friendly grid: high node counts at extreme sizes keep the
+    /// losing algorithms' bounds far from the winner's.
+    fn prunable_config(threads: usize) -> CollectiveConfig {
+        CollectiveConfig {
+            grid: CollectiveGrid {
+                collectives: Collective::ALL.to_vec(),
+                algorithms: CollectiveAlgorithm::ALL.to_vec(),
+                nodes: vec![8, 16],
+                gpus_per_node: vec![4],
+                sizes: vec![512, 1 << 11, 1 << 17],
+            },
+            seed: 7,
+            threads,
+            sim: true,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn prune_preserves_everything_but_skipped_sims() {
+        let full = run_collective(&prunable_config(2)).unwrap();
+        let mut cfg = prunable_config(2);
+        cfg.prune = true;
+        let pruned = run_collective(&cfg).unwrap();
+        assert_eq!(full.cells.len(), pruned.cells.len());
+        let mut skipped = 0;
+        for (a, b) in full.cells.iter().zip(&pruned.cells) {
+            assert_eq!((a.index, a.collective, a.algorithm), (b.index, b.collective, b.algorithm));
+            // model times (and hence winners/crossovers/regimes) are untouched
+            assert_eq!(a.model_s.to_bits(), b.model_s.to_bits(), "{} {} model", a.collective, a.algorithm);
+            if b.sim_pruned {
+                skipped += 1;
+                assert!(b.sim_s.is_none(), "{} {} pruned but simulated", b.collective, b.algorithm);
+            } else {
+                // surviving sims are bit-identical to the full run
+                assert_eq!(
+                    a.sim_s.map(f64::to_bits),
+                    b.sim_s.map(f64::to_bits),
+                    "{} {} sim",
+                    a.collective,
+                    a.algorithm
+                );
+            }
+        }
+        assert!(skipped > 0, "this grid must actually prune something");
+        // soundness end-to-end: no pruned algorithm could have won a cell's sim
+        let per = cfg.grid.algorithms.len();
+        for group in pruned.cells.chunks(per) {
+            let best = group.iter().filter_map(|c| c.sim_s).fold(f64::INFINITY, f64::min);
+            let full_group = &full.cells[group[0].index * per..group[0].index * per + per];
+            for (c, f) in group.iter().zip(full_group) {
+                if c.sim_pruned {
+                    assert!(f.sim_s.unwrap() >= best, "{} {} pruned yet beat the incumbent", c.collective, c.algorithm);
+                }
+            }
+        }
+        // winner/crossover/regime reports are identical (the `pruned`
+        // count is the only winner field allowed to move)
+        let key = |w: &crate::collective::CollectiveWinner| (w.size, w.winner, w.sim_winner, w.model_s.to_bits());
+        assert_eq!(
+            full.report.winners.iter().map(key).collect::<Vec<_>>(),
+            pruned.report.winners.iter().map(key).collect::<Vec<_>>()
+        );
+        assert_eq!(full.report.crossovers, pruned.report.crossovers);
+        assert_eq!(full.report.regimes, pruned.report.regimes);
+        // accounting matches the per-cell flags
+        assert_eq!(pruned.report.prune.pruned, skipped);
+        assert_eq!(pruned.report.prune.cells, full.report.winners.len());
+        assert_eq!(pruned.report.prune.sim_evals + skipped, full.report.prune.sim_evals);
+        assert_eq!(full.report.prune.pruned, 0);
+        // pruned runs stay deterministic and thread-invariant
+        cfg.threads = 1;
+        let pruned1 = run_collective(&cfg).unwrap();
+        cmp_cells(&pruned.cells, &pruned1.cells);
+    }
+
+    #[test]
+    fn prune_never_marks_without_flag() {
+        let r = run_collective(&small_config(2)).unwrap();
+        assert!(r.cells.iter().all(|c| !c.sim_pruned));
+    }
+
+    #[test]
+    fn refined_cells_match_exhaustive_where_they_coincide() {
+        // 3 node values x 5 sizes: depth 1 leaves interior points on both
+        // axes for the subdivision to find. Standard vs locality has a
+        // monotone winner boundary in (nodes, size), so rectangle tracing
+        // resolves the full crossover set.
+        let mut base = prunable_config(2);
+        base.grid.algorithms = vec![CollectiveAlgorithm::Standard, CollectiveAlgorithm::Locality];
+        base.grid.nodes = vec![2, 8, 32];
+        base.grid.sizes = (9..=17).step_by(2).map(|e| 1usize << e).collect();
+        let exhaustive = run_collective(&base).unwrap();
+        let mut cfg = base;
+        cfg.refine = 1;
+        cfg.prune = true;
+        let refined = run_collective(&cfg).unwrap();
+        assert!(refined.cells.len() <= exhaustive.cells.len());
+        assert!(!refined.cells.is_empty());
+        let per = cfg.grid.algorithms.len();
+        // plane corners are always present
+        assert_eq!(refined.cells[0].index, 0);
+        assert_eq!(refined.cells.last().unwrap().index, exhaustive.cells.last().unwrap().index);
+        for group in refined.cells.chunks(per) {
+            let full_group = &exhaustive.cells[group[0].index * per..group[0].index * per + per];
+            for (r, f) in group.iter().zip(full_group) {
+                assert_eq!(r.algorithm, f.algorithm);
+                assert_eq!(r.model_s.to_bits(), f.model_s.to_bits(), "{} {} model", r.collective, r.algorithm);
+                if !r.sim_pruned {
+                    assert_eq!(
+                        r.sim_s.map(f64::to_bits),
+                        f.sim_s.map(f64::to_bits),
+                        "{} {} sim",
+                        r.collective,
+                        r.algorithm
+                    );
+                }
+            }
+        }
+        // the coarse pass plus subdivisions still finds every model winner
+        // transition the exhaustive report sees (crossover sizes coincide)
+        assert_eq!(exhaustive.report.crossovers, refined.report.crossovers, "refinement must resolve the boundary");
+        // thread invariance holds with wave-granular work units too
+        cfg.threads = 1;
+        let refined1 = run_collective(&cfg).unwrap();
+        cmp_cells(&refined.cells, &refined1.cells);
+    }
+
+    #[test]
+    fn refine_depth_larger_than_axes_still_covers_corners() {
+        let mut cfg = small_config(1);
+        cfg.refine = 30; // stride clamps; lattice degenerates to endpoints
+        let r = run_collective(&cfg).unwrap();
+        assert!(!r.cells.is_empty());
+        let idx: std::collections::BTreeSet<usize> = r.cells.iter().map(|c| c.index).collect();
+        // both axes have 2 points, so every cell is a plane corner
+        assert_eq!(idx.len(), cfg.grid.cells().len());
     }
 
     #[test]

@@ -68,6 +68,18 @@ fn main() {
     std::process::exit(code);
 }
 
+/// Surface explicitly-given flags a branch ignores instead of silently
+/// dropping them: one `note:` line per present flag, phrased by `msg`.
+/// Shared by the `--tiny` smoke grids, the trace reroute and the
+/// collective-axis reroute, so every branch reports the same way.
+fn note_ignored_flags(argv: &[String], flags: &[&str], msg: impl Fn(&str) -> String) {
+    for &flag in flags {
+        if argv.iter().any(|t| t == flag || t.starts_with(&format!("{flag}="))) {
+            eprintln!("note: {}", msg(flag));
+        }
+    }
+}
+
 fn print_help() {
     println!(
         "hetcomm — node-aware irregular P2P communication on heterogeneous architectures
@@ -264,7 +276,7 @@ fn cmd_sweep(argv: &[String]) -> i32 {
         .flag("collectives", "", "grow a collective axis: sweep the locality-aware collective layer (comma list or 'all')")
         .flag("algorithms", "all", "with --collectives: algorithms (standard | pairwise | locality) or 'all'")
         .flag("nodes", "2,8,32", "with --collectives: cluster node counts (comma list, >= 2)")
-        .flag("refine", "0", "adaptive size-axis refinement depth (0 = exhaustive; winners preserved)")
+        .flag("refine", "0", "adaptive (nodes x size) boundary refinement depth (0 = exhaustive; winners preserved)")
         .flag("faults", "", "sweep the degraded fleet: apply a hetcomm.faults.v1 schedule's terminal state to every cell")
         .switch("tiny", "run the <10s smoke grid instead of the flag-defined grid")
         .switch("model-only", "skip the discrete-event simulator")
@@ -290,15 +302,13 @@ fn cmd_sweep(argv: &[String]) -> i32 {
     // locality-aware collective layer. Grids without the axis take the
     // legacy path below and emit byte-identical output.
     if !a.get("collectives").is_empty() {
-        let grid_flags = [
-            "--msgs", "--dest", "--gens", "--dup", "--nics", "--strategies", "--trace", "--prune", "--reuse-patterns",
-            "--refine",
-        ];
-        for flag in grid_flags {
-            if argv.iter().any(|t| t == flag || t.starts_with(&format!("{flag}="))) {
-                eprintln!("note: {flag} shapes the strategy grid; the collective axis ignores it");
-            }
-        }
+        // --prune and --refine are NOT in this list: both levers apply to
+        // the collective grid too and thread straight through.
+        let grid_flags =
+            ["--msgs", "--dest", "--gens", "--dup", "--nics", "--strategies", "--trace", "--reuse-patterns"];
+        note_ignored_flags(argv, &grid_flags, |flag| {
+            format!("{flag} shapes the strategy grid; the collective axis ignores it")
+        });
         return run_collective_grid(&a, argv);
     }
 
@@ -319,11 +329,9 @@ fn cmd_sweep(argv: &[String]) -> i32 {
             "--msgs", "--dest", "--gpn", "--nics", "--sizes", "--dup", "--gens", "--seed", "--tiny", "--prune",
             "--reuse-patterns", "--refine",
         ];
-        for flag in grid_flags {
-            if argv.iter().any(|t| t == flag || t.starts_with(&format!("{flag}="))) {
-                eprintln!("note: {flag} shapes the generated grid; trace epochs are replayed verbatim (ignored)");
-            }
-        }
+        note_ignored_flags(argv, &grid_flags, |flag| {
+            format!("{flag} shapes the generated grid; trace epochs are replayed verbatim (ignored)")
+        });
         let strategies = match parse_strategies(a.get("strategies")) {
             Ok(s) => s,
             Err(e) => {
@@ -365,11 +373,9 @@ fn cmd_sweep(argv: &[String]) -> i32 {
     let grid = if a.get_bool("tiny") {
         // the smoke grid is fixed; surface explicitly-given grid flags
         // instead of silently dropping them (mirrors the --trace branch)
-        for flag in ["--msgs", "--dest", "--gpn", "--nics", "--sizes", "--dup", "--gens"] {
-            if argv.iter().any(|t| t == flag || t.starts_with(&format!("{flag}="))) {
-                eprintln!("note: --tiny runs the fixed smoke grid; {flag} is ignored");
-            }
-        }
+        note_ignored_flags(argv, &["--msgs", "--dest", "--gpn", "--nics", "--sizes", "--dup", "--gens"], |flag| {
+            format!("--tiny runs the fixed smoke grid; {flag} is ignored")
+        });
         hetcomm::sweep::GridSpec::tiny()
     } else {
         let mut gens = Vec::new();
@@ -604,11 +610,9 @@ fn emit_collective_result(result: &hetcomm::collective::CollectiveResult, format
 fn run_collective_grid(a: &hetcomm::util::cli::Args, argv: &[String]) -> i32 {
     use hetcomm::collective as col;
     let grid = if a.get_bool("tiny") {
-        for flag in ["--collectives", "--algorithms", "--nodes", "--gpn", "--sizes"] {
-            if argv.iter().any(|t| t == flag || t.starts_with(&format!("{flag}="))) {
-                eprintln!("note: --tiny runs the fixed smoke grid; {flag} is ignored");
-            }
-        }
+        note_ignored_flags(argv, &["--collectives", "--algorithms", "--nodes", "--gpn", "--sizes"], |flag| {
+            format!("--tiny runs the fixed smoke grid; {flag} is ignored")
+        });
         col::CollectiveGrid::tiny()
     } else {
         let collectives = match parse_collectives(a.get("collectives")) {
@@ -642,12 +646,21 @@ fn run_collective_grid(a: &hetcomm::util::cli::Args, argv: &[String]) -> i32 {
             return 2;
         }
     };
+    let refine = match a.get_usize("refine") {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{}", e.0);
+            return 2;
+        }
+    };
     let config = col::CollectiveConfig {
         grid,
         seed,
         threads,
         sim: !a.get_bool("model-only"),
         machine: a.get("machine").to_string(),
+        prune: a.get_bool("prune"),
+        refine,
     };
     let result = match col::run_collective(&config) {
         Ok(r) => r,
@@ -714,8 +727,10 @@ fn cmd_collective(argv: &[String]) -> i32 {
     .flag("out", "-", "output path ('-' = stdout)")
     .flag("machine", "lassen", "machine preset (lassen | summit | frontier-like | frontier-4nic | delta-like)")
     .flag("emit-surface", "", "also compile the node/size axes into a collective surface artifact at this path")
+    .flag("refine", "0", "adaptive (nodes x size) boundary refinement depth (0 = exhaustive; winners preserved)")
     .switch("tiny", "run the fixed sub-second smoke grid instead of the flag-defined grid")
-    .switch("model-only", "skip the discrete-event simulator");
+    .switch("model-only", "skip the discrete-event simulator")
+    .switch("prune", "skip simulating algorithms whose bound-model lower bound exceeds the cell incumbent");
     let a = match cli.parse(argv) {
         Ok(a) => a,
         Err(e) => {

@@ -66,9 +66,11 @@ pub struct CostBounds {
     pub upper: f64,
 }
 
-/// Component-wise protocol envelope per `(endpoint, locality)`.
+/// Component-wise protocol envelope per `(endpoint, locality)`. Shared
+/// with `collective::bounds`, which composes the same envelopes across
+/// lowered collective stages.
 #[derive(Clone, Copy, Debug)]
-struct Envelope {
+pub(crate) struct Envelope {
     cpu: [AlphaBeta; 3],
     gpu: [AlphaBeta; 3],
 }
@@ -97,7 +99,7 @@ fn fold(abs: &[AlphaBeta], hi: bool) -> AlphaBeta {
 }
 
 impl Envelope {
-    fn build(p: &MachineParams, hi: bool) -> Envelope {
+    pub(crate) fn build(p: &MachineParams, hi: bool) -> Envelope {
         let locs = [Locality::OnSocket, Locality::OnNode, Locality::OffNode];
         let mut cpu = [AlphaBeta::new(0.0, 0.0); 3];
         let mut gpu = [AlphaBeta::new(0.0, 0.0); 3];
@@ -117,7 +119,7 @@ impl Envelope {
         Envelope { cpu, gpu }
     }
 
-    fn ab(&self, ep: Endpoint, l: Locality) -> AlphaBeta {
+    pub(crate) fn ab(&self, ep: Endpoint, l: Locality) -> AlphaBeta {
         match ep {
             Endpoint::Cpu => self.cpu[li(l)],
             Endpoint::Gpu => self.gpu[li(l)],

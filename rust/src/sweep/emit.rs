@@ -58,6 +58,19 @@ fn pruned(result: &SweepResult) -> bool {
     result.config.prune
 }
 
+/// True when refinement could actually skip cells. With at most two points
+/// on both refinable axes (sizes, destination nodes) the initial lattice
+/// already covers the grid, the run is byte-identical to an exhaustive
+/// one, and it must serialize identically too — so the `refine` echo and
+/// summary line are suppressed.
+fn refined(result: &SweepResult) -> bool {
+    let g = &result.config.grid;
+    let mut sizes = g.sizes.clone();
+    sizes.sort_unstable();
+    sizes.dedup();
+    result.config.refine > 0 && (sizes.len() > 2 || g.dest_nodes.len() > 2)
+}
+
 /// Serialize the full sweep result (config echo, cells, report) as JSON.
 /// Wall-clock fields are deliberately excluded: two runs with the same
 /// seed must produce byte-identical output.
@@ -77,7 +90,7 @@ pub fn to_json(result: &SweepResult) -> String {
     }
     let _ = writeln!(out, "  \"dup_frac\": {},", num(cfg.grid.dup_frac));
     let _ = writeln!(out, "  \"sim\": {},", cfg.sim);
-    if cfg.refine > 0 {
+    if refined(result) {
         let _ = writeln!(out, "  \"refine\": {},", cfg.refine);
     }
     // fault-sweep runs echo the schedule; healthy runs never mention it
@@ -347,7 +360,7 @@ pub fn render_tables(result: &SweepResult) -> String {
             p.cells
         );
     }
-    if result.config.refine > 0 {
+    if refined(result) {
         let total = result.config.grid.cells().len();
         let _ = writeln!(
             out,
@@ -534,6 +547,33 @@ mod tests {
         let r = run_sweep(&cfg).unwrap();
         assert!(to_json(&r).contains("\"refine\": 1,"));
         assert!(render_tables(&r).contains("Adaptive refinement (depth 1)"));
+    }
+
+    #[test]
+    fn refine_echo_suppressed_when_it_cannot_skip_cells() {
+        // 1 dest value x 2 sizes: the lattice covers the whole grid, so a
+        // refined run is exhaustive and must serialize byte-identically to
+        // a flag-less one.
+        let mut cfg = SweepConfig {
+            grid: GridSpec {
+                gens: vec![PatternGen::Uniform],
+                dest_nodes: vec![4],
+                gpus_per_node: vec![4],
+                nics: vec![1],
+                sizes: vec![1 << 10, 1 << 18],
+                n_msgs: 32,
+                dup_frac: 0.0,
+            },
+            seed: 3,
+            threads: 1,
+            sim: true,
+            ..Default::default()
+        };
+        let exhaustive = run_sweep(&cfg).unwrap();
+        cfg.refine = 3;
+        let noop = run_sweep(&cfg).unwrap();
+        assert_eq!(to_json(&exhaustive), to_json(&noop));
+        assert!(!render_tables(&noop).contains("Adaptive refinement"));
     }
 
     #[test]

@@ -237,11 +237,124 @@ fn line_len(grid: &GridSpec) -> usize {
     sizes.len().max(1)
 }
 
-/// Adaptive refinement: evaluate a coarse lattice of each grid line's size
-/// axis, then repeatedly subdivide between adjacent evaluated cells whose
-/// model winners disagree. Every evaluated cell keeps its exhaustive-grid
-/// index (hence its seed), so coinciding cells are bit-identical to the
-/// full sweep; skipped cells are simply absent from the output.
+/// One rectangular plane of a flattened grid for [`refine_2d`]: `rows`
+/// lattice rows of `cols` consecutive cells each, rows `row_stride` cells
+/// apart, starting at `origin`. Degenerate planes (`rows == 1`) reduce the
+/// driver to the size-axis-only refinement of PR 8.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct PlaneGeom {
+    pub origin: usize,
+    pub rows: usize,
+    pub row_stride: usize,
+    pub cols: usize,
+}
+
+impl PlaneGeom {
+    fn idx(&self, r: usize, c: usize) -> usize {
+        self.origin + r * self.row_stride + c
+    }
+}
+
+/// Joint 2-D boundary tracing shared by the point-to-point and collective
+/// sweeps: start on a coarse `2^depth`-strided lattice of every plane
+/// (both axes, endpoints always included), then recursively subdivide any
+/// rectangle whose 4 corner model winners disagree, splitting each axis
+/// with a gap > 1 at its midpoint. `eval` receives each wave of
+/// not-yet-evaluated cell indices (sorted ascending); `winner` reads one
+/// evaluated cell's model winner back out of `state`. Degenerate axes
+/// (a single lattice pair) keep their collapsed coordinate, so single-row
+/// planes behave exactly like 1-D size-axis refinement.
+pub(crate) fn refine_2d<S, W: PartialEq>(
+    planes: &[PlaneGeom],
+    depth: usize,
+    state: &mut S,
+    mut eval: impl FnMut(&mut S, &[usize]),
+    winner: impl Fn(&S, usize) -> W,
+) {
+    let stride = 1usize << depth.min(16);
+    // lattice coordinates along one axis: every stride-th point plus the end
+    let lattice = |n: usize| -> Vec<(usize, usize)> {
+        let mut v: Vec<usize> = (0..n).step_by(stride).collect();
+        if *v.last().expect("non-empty axis") != n - 1 {
+            v.push(n - 1);
+        }
+        if v.len() == 1 {
+            vec![(v[0], v[0])]
+        } else {
+            v.windows(2).map(|w| (w[0], w[1])).collect()
+        }
+    };
+
+    // rectangles pending a corner check: (plane, r0, r1, c0, c1)
+    let mut rects: Vec<(usize, usize, usize, usize, usize)> = Vec::new();
+    let mut wave: Vec<usize> = Vec::new();
+    let mut evaluated: Vec<bool> = Vec::new();
+    for (pi, p) in planes.iter().enumerate() {
+        for &(r0, r1) in &lattice(p.rows) {
+            for &(c0, c1) in &lattice(p.cols) {
+                rects.push((pi, r0, r1, c0, c1));
+            }
+        }
+    }
+    loop {
+        wave.extend(rects.iter().flat_map(|&(pi, r0, r1, c0, c1)| {
+            let p = &planes[pi];
+            [p.idx(r0, c0), p.idx(r0, c1), p.idx(r1, c0), p.idx(r1, c1)]
+        }));
+        wave.sort_unstable();
+        wave.dedup();
+        wave.retain(|&i| {
+            if evaluated.len() <= i {
+                evaluated.resize(i + 1, false);
+            }
+            !evaluated[i]
+        });
+        if !wave.is_empty() {
+            eval(state, &wave);
+            for &i in &wave {
+                evaluated[i] = true;
+            }
+            wave.clear();
+        }
+
+        // subdivide every rectangle whose corner winners disagree and which
+        // still has an axis gap to split; agreeing or unsplittable
+        // rectangles are dropped
+        let mut next = Vec::new();
+        for &(pi, r0, r1, c0, c1) in &rects {
+            let p = &planes[pi];
+            let w0 = winner(state, p.idx(r0, c0));
+            if winner(state, p.idx(r0, c1)) == w0
+                && winner(state, p.idx(r1, c0)) == w0
+                && winner(state, p.idx(r1, c1)) == w0
+            {
+                continue;
+            }
+            let (rsplit, csplit) = (r1 - r0 > 1, c1 - c0 > 1);
+            if !rsplit && !csplit {
+                continue;
+            }
+            let rs = if rsplit { vec![r0, (r0 + r1) / 2, r1] } else { vec![r0, r1] };
+            let cs = if csplit { vec![c0, (c0 + c1) / 2, c1] } else { vec![c0, c1] };
+            for rw in rs.windows(2) {
+                for cw in cs.windows(2) {
+                    next.push((pi, rw[0], rw[1], cw[0], cw[1]));
+                }
+            }
+        }
+        rects = next;
+        if rects.is_empty() {
+            break;
+        }
+    }
+}
+
+/// Adaptive refinement: evaluate a coarse lattice over each plane's joint
+/// (destination-nodes × size) axes, then repeatedly subdivide rectangles
+/// whose corner model winners disagree ([`refine_2d`]). Every evaluated
+/// cell keeps its exhaustive-grid index (hence its seed), so coinciding
+/// cells are bit-identical to the full sweep; skipped cells are simply
+/// absent from the output.
 #[allow(clippy::too_many_arguments)]
 fn run_refined(
     config: &SweepConfig,
@@ -252,62 +365,58 @@ fn run_refined(
     mode: ExecMode,
     threads: usize,
 ) -> Vec<CellResult> {
-    let n_sizes = line_len(&config.grid);
-    let stride = 1usize << config.refine.min(16);
-    let mut slots: Vec<Option<Vec<CellResult>>> = vec![None; cells.len()];
-
-    // initial wave: every stride-th size per line, plus each line's endpoint
-    let mut wave: Vec<usize> = Vec::new();
-    for base in (0..cells.len()).step_by(n_sizes) {
-        wave.extend((0..n_sizes).step_by(stride).map(|k| base + k));
-        wave.push(base + n_sizes - 1);
+    let grid = &config.grid;
+    let n_sizes = line_len(grid);
+    let (n_dest, n_gpn, n_nics) = (grid.dest_nodes.len(), grid.gpus_per_node.len(), grid.nics.len());
+    // cells() iterates gens -> dest -> gpn -> nics -> sizes
+    let row_stride = n_gpn * n_nics * n_sizes;
+    let mut planes = Vec::with_capacity(grid.gens.len() * n_gpn * n_nics);
+    for gi in 0..grid.gens.len() {
+        for g in 0..n_gpn {
+            for k in 0..n_nics {
+                planes.push(PlaneGeom {
+                    origin: gi * n_dest * row_stride + (g * n_nics + k) * n_sizes,
+                    rows: n_dest,
+                    row_stride,
+                    cols: n_sizes,
+                });
+            }
+        }
     }
 
-    loop {
-        wave.sort_unstable();
-        wave.dedup();
-        wave.retain(|&i| slots[i].is_none());
-        if wave.is_empty() {
-            break;
-        }
-        // group the wave into per-line runs so pattern reuse still applies
-        let mut runs: Vec<&[usize]> = Vec::new();
-        let mut start = 0;
-        for i in 1..=wave.len() {
-            if i == wave.len() || wave[i] / n_sizes != wave[start] / n_sizes {
-                runs.push(&wave[start..i]);
-                start = i;
+    let mut slots: Vec<Option<Vec<CellResult>>> = vec![None; cells.len()];
+    refine_2d(
+        &planes,
+        config.refine,
+        &mut slots,
+        |slots, wave| {
+            // group the wave into per-line runs so pattern reuse still applies
+            let mut runs: Vec<&[usize]> = Vec::new();
+            let mut start = 0;
+            for i in 1..=wave.len() {
+                if i == wave.len() || wave[i] / n_sizes != wave[start] / n_sizes {
+                    runs.push(&wave[start..i]);
+                    start = i;
+                }
             }
-        }
-        let eff = effective_threads(threads, runs.len());
-        let results = pool::map_with(runs.len(), eff, sim::Scratch::new, |scratch, r| {
-            let specs: Vec<CellSpec> = runs[r].iter().map(|&i| cells[i].clone()).collect();
-            eval_line(config, arch, params, compiled_params, &specs, mode, scratch)
-        });
-        let per_cell = config.strategies.len();
-        for (run, flat) in runs.iter().zip(results) {
-            for (&i, group) in run.iter().zip(flat.chunks(per_cell)) {
-                slots[i] = Some(group.to_vec());
+            let eff = effective_threads(threads, runs.len());
+            let results = pool::map_with(runs.len(), eff, sim::Scratch::new, |scratch, r| {
+                let specs: Vec<CellSpec> = runs[r].iter().map(|&i| cells[i]).collect();
+                eval_line(config, arch, params, compiled_params, &specs, mode, scratch)
+            });
+            let per_cell = config.strategies.len();
+            for (run, flat) in runs.iter().zip(results) {
+                for (&i, group) in run.iter().zip(flat.chunks(per_cell)) {
+                    slots[i] = Some(group.to_vec());
+                }
             }
-        }
-
-        // next wave: midpoints of adjacent evaluated neighbors (same line,
-        // gap > 1) whose model winners differ
-        let winner = |i: usize| -> &'static str {
+        },
+        |slots, i| {
             let group = slots[i].as_ref().expect("evaluated");
             // first-minimal-wins, matching report::analyze exactly
             group.iter().min_by(|a, b| a.model_s.partial_cmp(&b.model_s).unwrap()).expect("non-empty").label
-        };
-        wave.clear();
-        for base in (0..cells.len()).step_by(n_sizes) {
-            let done: Vec<usize> = (base..base + n_sizes).filter(|&i| slots[i].is_some()).collect();
-            for w in done.windows(2) {
-                if w[1] - w[0] > 1 && winner(w[0]) != winner(w[1]) {
-                    wave.push((w[0] + w[1]) / 2);
-                }
-            }
-        }
-    }
+        },
+    );
     slots.into_iter().flatten().flatten().collect()
 }
 

@@ -27,7 +27,7 @@ fn gate_config(nodes: usize, size: usize, sim: bool) -> CollectiveConfig {
         seed: 42,
         threads: 1,
         sim,
-        machine: "lassen".into(),
+        ..Default::default()
     }
 }
 
@@ -96,7 +96,7 @@ fn seeded_artifacts_are_byte_identical() {
         seed: 7,
         threads,
         sim: true,
-        machine: "lassen".into(),
+        ..Default::default()
     };
     let a = run_collective(&mk(1)).unwrap();
     let b = run_collective(&mk(2)).unwrap();

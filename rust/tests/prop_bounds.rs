@@ -14,7 +14,18 @@
 //! Plus bound-tightness monotonicity: the `[lower, upper]` gap never
 //! shrinks as message size grows, so coarse-grid refinement seeds stay
 //! conservative.
+//!
+//! The same two inequalities back the collective layer's pruning
+//! ([`hetcomm::collective::ColBoundModel`], `collective --prune`), checked
+//! here over the (collective × algorithm × nodes × size) product and over
+//! seeded alltoallv lowerings against the reference executor. The suite
+//! also pins the advisor's lane-vectorized batch interpolator (`simd`
+//! feature) to its scalar twin bit for bit.
 
+use hetcomm::advisor::{DecisionSurface, Pattern, SurfaceAxes};
+use hetcomm::collective::{
+    algorithm_time, lower, sim_schedule, Collective, CollectiveAlgorithm, CollectiveSpec, ColBoundModel,
+};
 use hetcomm::comm::{build_schedule, dedup, Strategy};
 use hetcomm::model::{BoundModel, StrategyModel};
 use hetcomm::pattern::generators::{random_pattern, Scenario};
@@ -134,6 +145,127 @@ fn lower_bound_never_exceeds_simulated_time_on_uniform_grids() {
                         b.lower
                     );
                 }
+            }
+        }
+    }
+}
+
+#[test]
+fn collective_bounds_bracket_algorithm_model() {
+    // The collective analogue of the bracket above: for every collective ×
+    // lowering algorithm × node count × block size, the composed stage
+    // envelope of `ColBoundModel` contains the Table 6 model time the
+    // sweep ranks by. The upper bound seeds `collective --prune`'s search,
+    // so a model time above it would desynchronize the incumbent.
+    for name in ["lassen", "frontier-like"] {
+        let (arch, params) = machines::parse(name, 1).unwrap();
+        for nodes in [2, 4, 16] {
+            let machine = machines::with_shape(&arch, nodes, 4);
+            let bm = ColBoundModel::new(&machine, &params);
+            for collective in Collective::ALL {
+                for exp in [6, 10, 14, 18] {
+                    let direct = CollectiveSpec::new(collective, 1usize << exp, 11).materialize(&machine);
+                    for alg in CollectiveAlgorithm::ALL {
+                        let lowering = lower(collective, alg, &machine, &direct);
+                        let b = bm.bounds(&lowering);
+                        let t = algorithm_time(&machine, &params, &lowering);
+                        assert!(
+                            b.lower <= t && t <= b.upper,
+                            "{name} {}/{} on {nodes}n: model {t:e} outside [{:e}, {:e}] (block 2^{exp})",
+                            collective.label(),
+                            alg.label(),
+                            b.lower,
+                            b.upper
+                        );
+                        assert!(b.lower.is_finite() && b.upper.is_finite());
+                        assert!(b.lower > 0.0, "{}: zero lower bound prunes nothing", alg.label());
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn collective_lower_bound_never_exceeds_simulated_time() {
+    // The pruning oracle for `collective --prune`: over seeded alltoallv
+    // patterns (the irregular member of the family — random per-pair block
+    // scaling), the reference executor's total for a lowering's staged
+    // schedule never undercuts the lowering's lower bound. A violation
+    // here is a wrongly skipped algorithm in a pruned collective sweep.
+    let (arch, params) = machines::parse("lassen", 1).unwrap();
+    for nodes in [2, 8] {
+        let machine = machines::with_shape(&arch, nodes, 4);
+        let bm = ColBoundModel::new(&machine, &params);
+        for seed in [1u64, 7, 42] {
+            for exp in [9, 13, 17] {
+                let direct =
+                    CollectiveSpec::new(Collective::Alltoallv, 1usize << exp, seed).materialize(&machine);
+                for alg in CollectiveAlgorithm::ALL {
+                    let lowering = lower(Collective::Alltoallv, alg, &machine, &direct);
+                    let b = bm.bounds(&lowering);
+                    let schedule = sim_schedule(&machine, &lowering);
+                    let sim =
+                        hetcomm::sim::run_reference(&machine, &params, &schedule, machine.gpus_per_node())
+                            .total;
+                    assert!(
+                        b.lower <= sim,
+                        "alltoallv/{} on {nodes}n: lower {:e} > sim {sim:e} \
+                         (seed {seed}, block 2^{exp}) — collective pruning is unsound",
+                        alg.label(),
+                        b.lower
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn lane_batch_lookup_matches_scalar_lookup_bit_for_bit() {
+    // The `simd` feature's contract: `lookup_batch` answers are
+    // bit-identical to per-query `lookup` regardless of which inner loop
+    // ran. `lookup_batch_lanes` pins the four-wide lane path from a
+    // default build; `lookup_batch` covers whichever path the feature
+    // selected. Random batches over shaped surfaces, clamped and
+    // in-lattice queries alike.
+    for &(name, nics) in &SHAPES {
+        // Pinned presets reject explicit NIC overrides; 0 means "own count".
+        let nic_arg = if name == "frontier-4nic" { 0 } else { nics };
+        let axes = SurfaceAxes {
+            msgs: vec![8, 64, 512],
+            sizes: vec![1 << 6, 1 << 10, 1 << 14, 1 << 18],
+            dest_nodes: vec![2, 8],
+            gpus_per_node: vec![4],
+        };
+        let surface = DecisionSurface::compile_shaped(name, nic_arg, axes, 0.0).unwrap();
+        let mut rng = Rng::new(0xba7c4 ^ ((nics as u64) << 16));
+        let queries: Vec<Pattern> = (0..257)
+            .map(|_| Pattern {
+                n_msgs: 1 + (rng.next_u64() % 2048) as usize,
+                msg_size: 1usize << (rng.next_u64() % 22),
+                dest_nodes: 1 + (rng.next_u64() % 40) as usize,
+                gpus_per_node: 4,
+            })
+            .collect();
+        let lanes = surface.lookup_batch_lanes(&queries);
+        let batch = surface.lookup_batch(&queries);
+        assert_eq!(lanes.len(), queries.len());
+        for (i, q) in queries.iter().enumerate() {
+            let single = surface.lookup(q);
+            assert_eq!(single.ranked.len(), lanes[i].ranked.len());
+            for ((s0, t0), (s1, t1)) in single.ranked.iter().zip(&lanes[i].ranked) {
+                assert_eq!(s0, s1, "{name}/{nics}r query {i}: lane path reordered strategies");
+                assert_eq!(
+                    t0.to_bits(),
+                    t1.to_bits(),
+                    "{name}/{nics}r query {i} {}: lane time {t1:e} != scalar {t0:e}",
+                    s0.label()
+                );
+            }
+            for ((s0, t0), (s1, t1)) in single.ranked.iter().zip(&batch[i].ranked) {
+                assert_eq!(s0, s1);
+                assert_eq!(t0.to_bits(), t1.to_bits(), "{name}/{nics}r query {i}: lookup_batch diverged");
             }
         }
     }
